@@ -1,0 +1,141 @@
+//! Attention pipeline: one BitNet-1.58B-shaped attention layer, co-simulated
+//! end-to-end (functional numerics + timing/energy/memory) on WS, DiP and
+//! ADiP — a single-layer, real-data version of the paper's Figs. 9–11.
+//!
+//! The layer is scaled to `s = d = 256, heads = 2` so the functional
+//! co-simulation (exact integer GEMMs through the array models) finishes in
+//! seconds; the stage structure, precisions and fusion decisions are
+//! exactly those of the full workload evaluation (`adip run --model=bitnet`).
+//!
+//! Run: `cargo run --release --example attention_pipeline`
+
+use adip::arch::{build_array, ArchConfig, Architecture};
+use adip::dataflow::Mat;
+use adip::quant::{ternary_absmean, PrecisionMode};
+use adip::sim::CoSim;
+use adip::testutil::Rng;
+
+const S: usize = 256; // sequence length
+const D: usize = 256; // d_model
+const HEADS: usize = 2;
+const N: usize = 32; // array size
+
+struct StageCost {
+    name: &'static str,
+    cycles: u64,
+    energy_j: f64,
+    mem_bytes: u64,
+}
+
+fn run_layer(arch: Architecture, x: &Mat, wq: &Mat, wk: &Mat, wv: &Mat, wo: &Mat) -> anyhow::Result<(Vec<StageCost>, Mat)> {
+    let mut sim = CoSim::new(build_array(arch, ArchConfig::with_n(N)));
+    let mode = PrecisionMode::W2; // BitNet ternary weights
+    let dk = D / HEADS;
+    let mut stages = Vec::new();
+
+    // Stage 1 — Q/K/V projections: one shared-input multi-matrix set
+    // (Fig. 5(d)). WS/DiP run three separate 8-bit GEMMs.
+    let qkv = sim.run_gemm_set(x, &[wq, wk, wv], mode, false)?;
+    stages.push(StageCost {
+        name: "QKV proj",
+        cycles: qkv.cycles,
+        energy_j: qkv.energy_j,
+        mem_bytes: qkv.memory.paper_total_bytes(),
+    });
+    // requantize projections to int8 (off-array, as in the L2 model)
+    let req = |m: &Mat| Mat::from_fn(m.rows(), m.cols(), |r, c| (m.get(r, c) / 64).clamp(-128, 127));
+    let (q8, k8, v8) = (req(&qkv.outputs[0]), req(&qkv.outputs[1]), req(&qkv.outputs[2]));
+
+    // Stage 2 — attention scores per head (activation-to-activation, 8b×8b,
+    // runtime interleaving via the multi-bank model).
+    let mut scores8 = Vec::new();
+    let (mut cyc, mut en, mut mem) = (0u64, 0.0f64, 0u64);
+    for h in 0..HEADS {
+        let qh = Mat::from_fn(S, dk, |r, c| q8.get(r, h * dk + c));
+        let kh_t = Mat::from_fn(dk, S, |r, c| k8.get(c, h * dk + r));
+        let r = sim.run_gemm(&qh, &kh_t, PrecisionMode::W8, true)?;
+        // softmax + requant happens off-array; keep integer proxy: row-max
+        // normalized clamp (numerics for the timing path)
+        let smax = &r.outputs[0];
+        scores8.push(Mat::from_fn(S, S, |i, j| (smax.get(i, j) / (dk as i32 * 16)).clamp(-128, 127)));
+        cyc += r.cycles;
+        en += r.energy_j;
+        mem += r.memory.paper_total_bytes();
+    }
+    stages.push(StageCost { name: "Attn scores", cycles: cyc, energy_j: en, mem_bytes: mem });
+
+    // Stage 3 — attention output per head (activation-to-activation).
+    let (mut cyc, mut en, mut mem) = (0u64, 0.0f64, 0u64);
+    let mut attn = Mat::zeros(S, D);
+    for (h, sc) in scores8.iter().enumerate() {
+        let vh = Mat::from_fn(S, dk, |r, c| v8.get(r, h * dk + c));
+        let r = sim.run_gemm(sc, &vh, PrecisionMode::W8, true)?;
+        for i in 0..S {
+            for c in 0..dk {
+                attn.set(i, h * dk + c, (r.outputs[0].get(i, c) / 64).clamp(-128, 127));
+            }
+        }
+        cyc += r.cycles;
+        en += r.energy_j;
+        mem += r.memory.paper_total_bytes();
+    }
+    stages.push(StageCost { name: "Attn output", cycles: cyc, energy_j: en, mem_bytes: mem });
+
+    // Stage 4 — output projection (activation-to-weight, 2-bit).
+    let out = sim.run_gemm(&attn, wo, mode, false)?;
+    stages.push(StageCost {
+        name: "Out proj",
+        cycles: out.cycles,
+        energy_j: out.energy_j,
+        mem_bytes: out.memory.paper_total_bytes(),
+    });
+    Ok((stages, out.outputs[0].clone()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seeded(7);
+    let x = Mat::random(&mut rng, S, D, 8);
+    // BitNet-style ternary weights from float masters
+    let tern = |rng: &mut Rng| {
+        let f = rng.f32_vec(D * D, -1.0, 1.0);
+        Mat::from_vec(D, D, ternary_absmean(&f, D, D).values)
+    };
+    let (wq, wk, wv, wo) = (tern(&mut rng), tern(&mut rng), tern(&mut rng), tern(&mut rng));
+
+    println!("BitNet-shaped attention layer: s={S}, d={D}, heads={HEADS}, ternary weights, {N}x{N} arrays\n");
+    let mut totals = Vec::new();
+    let mut outputs = Vec::new();
+    for arch in Architecture::ALL {
+        let (stages, out) = run_layer(arch, &x, &wq, &wk, &wv, &wo)?;
+        println!("{arch}:");
+        println!("  {:<12} {:>10} {:>12} {:>10}", "stage", "cycles", "energy(µJ)", "mem(KiB)");
+        let (mut c, mut e, mut m) = (0, 0.0, 0);
+        for s in &stages {
+            println!(
+                "  {:<12} {:>10} {:>12.2} {:>10.1}",
+                s.name,
+                s.cycles,
+                s.energy_j * 1e6,
+                s.mem_bytes as f64 / 1024.0
+            );
+            c += s.cycles;
+            e += s.energy_j;
+            m += s.mem_bytes;
+        }
+        println!("  {:<12} {:>10} {:>12.2} {:>10.1}\n", "TOTAL", c, e * 1e6, m as f64 / 1024.0);
+        totals.push((arch, c, e, m));
+        outputs.push(out);
+    }
+
+    // identical numerics on every architecture
+    assert!(outputs.windows(2).all(|w| w[0] == w[1]), "architectures disagree numerically");
+
+    let dip = totals.iter().find(|t| t.0 == Architecture::Dip).unwrap();
+    let adip = totals.iter().find(|t| t.0 == Architecture::Adip).unwrap();
+    println!("ADiP vs DiP (this layer):");
+    println!("  latency improvement: {:.1}%", (1.0 - adip.1 as f64 / dip.1 as f64) * 100.0);
+    println!("  energy change:       {:+.1}%", (1.0 - adip.2 / dip.2) * 100.0);
+    println!("  memory saving:       {:.1}%", (1.0 - adip.3 as f64 / dip.3 as f64) * 100.0);
+    println!("(full-model totals: `adip run --model=bitnet` → 53.6% / +24.4% / 53.6%)");
+    Ok(())
+}

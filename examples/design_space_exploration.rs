@@ -1,0 +1,76 @@
+//! Hardware design space exploration (paper §V-A, Table I + Fig. 7 + the
+//! Fig. 4 analytical sweep) — scans array sizes 4×4 … 64×64 for all three
+//! architectures, reporting throughput, area, power and the derived
+//! efficiency metrics, then prints the Pareto view the paper's DSE is
+//! built around.
+//!
+//! Run: `cargo run --release --example design_space_exploration`
+
+use adip::arch::{AdipArray, ArchConfig, DipArray, SystolicArray, WsArray};
+use adip::power::{adip_point, dip_point, overheads, ws_point, EVAL_SIZES};
+use adip::quant::PrecisionMode;
+
+fn main() {
+    println!("ADiP hardware design space exploration — 22 nm @ 1 GHz\n");
+    println!(
+        "{:<7} {:<6} {:<7} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "size", "arch", "mode", "TOPS", "area mm²", "power W", "TOPS/mm²", "TOPS/W"
+    );
+
+    for &n in &EVAL_SIZES {
+        let cfg = ArchConfig::with_n(n);
+        let rows: [(&str, Box<dyn SystolicArray>, adip::power::HwPoint); 3] = [
+            ("WS", Box::new(WsArray::new(cfg)), ws_point(n)),
+            ("DiP", Box::new(DipArray::new(cfg)), dip_point(n)),
+            ("ADiP", Box::new(AdipArray::new(cfg)), adip_point(n)),
+        ];
+        for (name, arr, hw) in rows {
+            for mode in PrecisionMode::ALL {
+                // WS/DiP gain nothing from narrow weights: report 8b only
+                if name != "ADiP" && mode != PrecisionMode::W8 {
+                    continue;
+                }
+                let tops = arr.peak_ops_per_cycle(mode) as f64 * 1e9 / 1e12;
+                println!(
+                    "{:<7} {:<6} {:<7} {:>10.3} {:>10.4} {:>10.4} {:>12.2} {:>12.2}",
+                    format!("{n}x{n}"),
+                    name,
+                    mode.to_string(),
+                    tops,
+                    hw.area_mm2,
+                    hw.power_w,
+                    tops / hw.area_mm2,
+                    tops / hw.power_w
+                );
+            }
+        }
+        println!();
+    }
+
+    println!("ADiP-vs-DiP overheads (Table I):");
+    for &n in &EVAL_SIZES {
+        let o = overheads(n);
+        println!(
+            "  {:<7} area x{:.2}  power x{:.2}  total x{:.2}  → breaks even at ≥{:.1}-bit-equivalent compute density",
+            format!("{n}x{n}"),
+            o.area_x,
+            o.power_x,
+            o.total_x,
+            8.0 / o.total_x.max(1.0)
+        );
+    }
+
+    // Design-point selection: the paper's 64×64 flagship.
+    let flagship = AdipArray::new(ArchConfig::with_n(64));
+    let hw = adip_point(64);
+    println!("\nSelected design point (paper Table II): 64x64, 4096 reconfigurable PEs");
+    for mode in PrecisionMode::ALL {
+        let tops = flagship.peak_ops_per_cycle(mode) as f64 * 1e9 / 1e12;
+        println!(
+            "  {mode}: {:.3} TOPS | {:.2} TOPS/mm² | {:.2} TOPS/W",
+            tops,
+            tops / hw.area_mm2,
+            tops / hw.power_w
+        );
+    }
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the ADiP library in ~60 lines.
+//!
+//! Quantizes a float weight matrix three ways (8/4/2-bit), runs the same
+//! activation matrix against it on the co-simulated ADiP array, and shows
+//! the paper's headline effect: the quantized modes finish in ½ and ¼ of
+//! the cycles (and memory traffic) at identical numerics-per-matrix.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use adip::arch::{AdipArray, ArchConfig};
+use adip::dataflow::Mat;
+use adip::quant::{quantize_symmetric, PrecisionMode};
+use adip::sim::CoSim;
+use adip::testutil::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seeded(2025);
+
+    // A 256×256 GEMM: int8 activations × quantized weights.
+    let activations = Mat::random(&mut rng, 256, 256, 8);
+    let weights_f32 = rng.f32_vec(256 * 256, -1.0, 1.0);
+
+    println!(
+        "{:<8} {:>8} {:>10} {:>12} {:>12}  {}",
+        "mode", "passes", "cycles", "energy(µJ)", "mem(KiB)", "check"
+    );
+    let mut baseline_cycles = None;
+    for mode in PrecisionMode::ALL {
+        // 1. Quantize the weights to the mode's precision.
+        let q = quantize_symmetric(&weights_f32, 256, 256, mode.weight_bits());
+        let w = Mat::from_vec(256, 256, q.values.clone());
+
+        // 2. Run on a co-simulated 32×32 ADiP array (the paper's eval point).
+        let mut sim = CoSim::new(AdipArray::new(ArchConfig::with_n(32)));
+        let result = sim.run_gemm(&activations, &w, mode, false)?;
+
+        // 3. The outputs are exact integer GEMM results.
+        assert_eq!(result.outputs[0], activations.matmul(&w));
+
+        let gain = baseline_cycles.get_or_insert(result.cycles);
+        println!(
+            "{:<8} {:>8} {:>10} {:>12.2} {:>12.1}  exact ({:.1}x vs 8b×8b)",
+            mode.to_string(),
+            result.passes,
+            result.cycles,
+            result.energy_j * 1e6,
+            result.memory.paper_total_bytes() as f64 / 1024.0,
+            *gain as f64 / result.cycles as f64,
+        );
+    }
+
+    println!("\nAdaptive precision: same array, same input fetches — 2x/4x the");
+    println!("throughput and memory efficiency for 4-bit/2-bit weights (paper Table I).");
+    Ok(())
+}

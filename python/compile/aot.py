@@ -1,0 +1,115 @@
+"""AOT pipeline: lower the L2 graphs (with the L1 Pallas kernels inlined)
+to HLO **text** artifacts the rust runtime loads via PJRT.
+
+Run once at build time (``make artifacts``); never on the request path.
+
+Interchange is HLO text, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact takes/returns **f32** buffers carrying exact small-integer
+values (the xla crate's literal marshalling is simplest for f32); casts to
+the integer compute types happen inside the lowered graph.
+
+Artifacts (shapes chosen so the rust integration tests are fast):
+
+=================  =============================================  ========
+name               computation                                    inputs
+=================  =============================================  ========
+matmul_8x8         y = x·w                       (8-bit weights)  x,w 32×32
+matmul_8x4         y_s = x·w_s, s<2   (shared-input, 4-bit)       x,w0,w1
+matmul_8x2         y_s = x·w_s, s<4   (shared-input, 2-bit)       x,w0..w3
+mha_block          full attention block, 2-bit weights            x,wq,wk,wv,wo 64×64
+=================  =============================================  ========
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import packing
+from .kernels.adip_matmul import adip_matmul
+from .model import MhaConfig, mha_forward
+
+MATMUL_DIM = 32
+MHA_SEQ = 64
+MHA_D = 64
+MHA_HEADS = 4
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _matmul_entry(bits: int, k: int):
+    """f32-boundary wrapper around the multi-matrix kernel: takes x plus k
+    unpacked weight matrices, interleaves in-graph, returns k results."""
+
+    def fn(x_f32, *ws_f32):
+        x = x_f32.astype(jnp.int8)
+        ws = [w.astype(jnp.int8) for w in ws_f32]
+        packed = packing.interleave_jnp(ws, bits)
+        y = adip_matmul(x, packed, bits=bits, k=k)
+        return tuple(y[s].astype(jnp.float32) for s in range(k))
+
+    return fn
+
+
+def _mha_entry(cfg: MhaConfig):
+    def fn(x_f32, wq, wk, wv, wo):
+        x = x_f32.astype(jnp.int8)
+        w = [t.astype(jnp.int8) for t in (wq, wk, wv, wo)]
+        return (mha_forward(cfg, x, *w).astype(jnp.float32),)
+
+    return fn
+
+
+def build_artifacts() -> dict[str, str]:
+    """Lower every artifact; returns name → HLO text."""
+    f32 = jnp.float32
+    out: dict[str, str] = {}
+
+    mat = jax.ShapeDtypeStruct((MATMUL_DIM, MATMUL_DIM), f32)
+    for bits, k in ((8, 1), (4, 2), (2, 4)):
+        fn = _matmul_entry(bits, k)
+        lowered = jax.jit(fn).lower(mat, *([mat] * k))
+        out[f"matmul_8x{bits}"] = to_hlo_text(lowered)
+
+    cfg = MhaConfig(seq_len=MHA_SEQ, d_model=MHA_D, heads=MHA_HEADS, weight_bits=2)
+    xs = jax.ShapeDtypeStruct((MHA_SEQ, MHA_D), f32)
+    wd = jax.ShapeDtypeStruct((MHA_D, MHA_D), f32)
+    lowered = jax.jit(_mha_entry(cfg)).lower(xs, wd, wd, wd, wd)
+    out["mha_block"] = to_hlo_text(lowered)
+    return out
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = []
+    for name, text in build_artifacts().items():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {len(text)} chars")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out_dir, "MANIFEST.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1 performance estimator: VMEM footprint + MXU roofline for the Pallas
+kernel on real TPU geometry (DESIGN.md §Perf / EXPERIMENTS.md
+§Perf-estimates).
+
+``interpret=True`` timings are CPU-numpy and say nothing about TPU
+performance, so the L1 optimization loop is structural: this tool computes,
+per block configuration and precision mode,
+
+* live VMEM bytes (double-buffered inputs + output accumulators),
+* arithmetic intensity (int8 MACs per HBM byte),
+* the roofline-limited utilization estimate against an MXU-like unit,
+* the effective data-reuse factor vs the 8b×8b baseline (the paper's k×).
+
+Run: ``python -m compile.estimate [--bm 128 --bn 128 --bk 128]``
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass
+
+from .kernels.adip_matmul import vmem_bytes
+
+# TPU-like machine model (v4-class orders of magnitude; only ratios matter
+# for the efficiency-ratio argument).
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_MACS_PER_S = 137.5e12  # ~275 TOPS bf16 → int8 MAC rate proxy
+HBM_BYTES_PER_S = 1.2e12
+RIDGE = MXU_MACS_PER_S / HBM_BYTES_PER_S  # MACs per byte at the roofline knee
+
+
+@dataclass(frozen=True)
+class BlockEstimate:
+    """Static performance estimate of one kernel configuration."""
+
+    bits: int
+    k: int
+    bm: int
+    bn: int
+    bk: int
+
+    @property
+    def vmem(self) -> int:
+        return vmem_bytes(self.bm, self.bn, self.bk, self.k)
+
+    @property
+    def fits_vmem(self) -> bool:
+        return self.vmem <= VMEM_BYTES
+
+    @property
+    def macs_per_step(self) -> int:
+        # k dot passes of (bm × bk) · (bk × bn)
+        return self.k * self.bm * self.bk * self.bn
+
+    @property
+    def hbm_bytes_per_step(self) -> int:
+        # one int8 activation block + one uint8 carrier block; outputs
+        # amortized over kdim/bk steps — excluded like the paper's model
+        return self.bm * self.bk + self.bk * self.bn
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.macs_per_step / self.hbm_bytes_per_step
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.arithmetic_intensity >= RIDGE
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Roofline utilization: min(1, intensity / ridge)."""
+        return min(1.0, self.arithmetic_intensity / RIDGE)
+
+    @property
+    def reuse_factor(self) -> float:
+        """Activation-fetch reuse vs one 8b×8b pass (the paper's k×)."""
+        return float(self.k)
+
+
+def sweep(bm: int, bn: int, bk: int) -> list[BlockEstimate]:
+    return [BlockEstimate(bits, k, bm, bn, bk) for bits, k in ((8, 1), (4, 2), (2, 4))]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--bm", type=int, default=128)
+    p.add_argument("--bn", type=int, default=128)
+    p.add_argument("--bk", type=int, default=128)
+    args = p.parse_args()
+    print(f"TPU model: VMEM {VMEM_BYTES >> 20} MiB, ridge {RIDGE:.0f} MAC/B")
+    print(f"{'mode':<8} {'VMEM':>10} {'fits':>5} {'MAC/B':>8} {'MXU util':>9} {'reuse':>6}")
+    for e in sweep(args.bm, args.bn, args.bk):
+        print(
+            f"8b×{e.bits}b{'':<3} {e.vmem:>10} {str(e.fits_vmem):>5} "
+            f"{e.arithmetic_intensity:>8.1f} {e.mxu_utilization:>8.0%} {e.reuse_factor:>5.0f}x"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels + packing + pure-jnp oracles."""
+
+from . import adip_matmul, packing, ref  # noqa: F401

@@ -1,0 +1,194 @@
+"""L1 Pallas kernel: ADiP adaptive-precision multi-matrix GEMM.
+
+The hardware insight mapped to TPU terms (DESIGN.md §Hardware-Adaptation):
+one activation block is brought from HBM into VMEM **once** and multiplied
+against ``k`` weight matrices interleaved into a single 8-bit carrier block
+(k = 1/2/4 for 8b×8b / 8b×4b / 8b×2b) — ADiP's shared-input multi-matrix
+mode, with the stationary carrier tile playing the role of the packed
+weight registers and the in-kernel subword unpack playing the shared
+shifter datapath.
+
+Grid: ``(m_tiles, n_tiles, k_tiles)`` with psum accumulation over the
+reduction axis in the output block (Algorithm 1's loop nest expressed as
+BlockSpecs). ``interpret=True`` everywhere — the CPU PJRT client cannot run
+Mosaic custom-calls; real-TPU performance is estimated from the VMEM
+footprint model below (see DESIGN.md §Perf-estimates).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import packing
+
+# Default block shapes: multiples of the 128×128 MXU tile while keeping
+# double-buffered blocks well under VMEM (see `vmem_bytes`).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(x_ref, w_ref, o_ref, *, bits: int, k: int):
+    """One (bm, bn) output block step: unpack each interleaved source from
+    the carrier block and accumulate its partial GEMM."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)  # one shared activation fetch
+    w_packed = w_ref[...]
+    for s in range(k):  # k MXU passes per activation fetch
+        w_s = packing.unpack_fields_jnp(w_packed, bits, s)
+        o_ref[s, ...] += jnp.dot(x, w_s, preferred_element_type=jnp.int32)
+
+
+def _block(dim: int, want: int) -> int:
+    """Largest block ≤ want that divides dim (shapes here are powers of 2
+    or small multiples; falls back to dim for ragged sizes)."""
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "bm", "bn", "bk"))
+def adip_matmul(
+    x,
+    w_packed,
+    *,
+    bits: int,
+    k: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+):
+    """Multi-matrix GEMM ``y_s = x · unpack(w_packed, s)`` for s < k.
+
+    ``x``: (m, kdim) int8 activations; ``w_packed``: (kdim, n) uint8 carrier
+    holding ``k`` interleaved ``bits``-bit weight matrices. Returns
+    (k, m, n) int32.
+    """
+    if bits not in packing.MODES:
+        raise ValueError(f"bits must be one of {sorted(packing.MODES)}")
+    if not 1 <= k <= packing.MODES[bits]:
+        raise ValueError(f"k={k} exceeds capacity of {bits}-bit mode")
+    m, kdim = x.shape
+    kdim2, n = w_packed.shape
+    if kdim != kdim2:
+        raise ValueError(f"inner dims {kdim} != {kdim2}")
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(kdim, bk)
+
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((k, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, m, n), jnp.int32),
+        interpret=True,
+    )(x, w_packed)
+
+
+def _kernel_pe_exact(x_ref, w_ref, o_ref, *, bits: int, k: int):
+    """PE-exact variant: the same block step computed the way the hardware
+    does — radix-4 subword decomposition of the activation, 2-bit × 2-bit
+    partial products per multiplier group, shift-add recombination (the
+    shared column unit). Bit-identical to `_kernel` by linearity; kept as
+    an executable specification of `rust/src/arch/pe.rs`."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.int32)
+    w_packed = w_ref[...]
+    # activation subwords (radix-4, top signed)
+    ux = x & 0xFF
+    x_subs = []
+    for j in range(4):
+        limb = (ux >> (2 * j)) & 0b11
+        if j == 3:
+            limb = limb - ((limb >= 2).astype(jnp.int32) << 2)
+        x_subs.append(limb)
+
+    n_wsub = bits // 2
+    for s in range(k):  # logical weight matrix s
+        acc = jnp.zeros(o_ref.shape[1:], dtype=jnp.int32)
+        for g in range(n_wsub):  # weight subword group
+            field = (w_packed.astype(jnp.int32) >> (bits * s + 2 * g)) & 0b11
+            if g == n_wsub - 1:  # top subword of the logical weight: signed
+                w_sub = field - ((field >= 2).astype(jnp.int32) << 2)
+            else:
+                w_sub = field
+            for j in range(4):  # activation subword
+                partial = jnp.dot(x_subs[j], w_sub, preferred_element_type=jnp.int32)
+                acc = acc + (partial << (2 * (j + g)))
+        o_ref[s, ...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "k", "bm", "bn", "bk"))
+def adip_matmul_pe_exact(
+    x,
+    w_packed,
+    *,
+    bits: int,
+    k: int,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+):
+    """PE-exact kernel entry point — same contract as :func:`adip_matmul`,
+    arithmetic spelled out as the reconfigurable PE performs it."""
+    if bits not in packing.MODES:
+        raise ValueError(f"bits must be one of {sorted(packing.MODES)}")
+    if not 1 <= k <= packing.MODES[bits]:
+        raise ValueError(f"k={k} exceeds capacity of {bits}-bit mode")
+    m, kdim = x.shape
+    _, n = w_packed.shape
+    bm, bn, bk = _block(m, bm), _block(n, bn), _block(kdim, bk)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel_pe_exact, bits=bits, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((k, bm, bn), lambda i, j, kk: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((k, m, n), jnp.int32),
+        interpret=True,
+    )(x, w_packed)
+
+
+def adip_matmul_unpacked(x, ws, *, bits: int):
+    """Convenience wrapper: interleave ``len(ws)`` unpacked weight matrices
+    (host-side preprocessing, Fig. 6) then run the kernel."""
+    import numpy as np
+
+    packed = jnp.asarray(packing.interleave([np.asarray(w) for w in ws], bits))
+    return adip_matmul(x, packed, bits=bits, k=len(ws))
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK, k: int = 4) -> int:
+    """Estimated live VMEM per grid step: x block (int8) + carrier block
+    (uint8) + k int32 output blocks, ×2 for double buffering of the inputs.
+    Used by the §Perf-estimates table in DESIGN.md."""
+    x_b = bm * bk
+    w_b = bk * bn
+    o_b = 4 * k * bm * bn
+    return 2 * (x_b + w_b) + o_b
+
+
+def mxu_passes_per_fetch(bits: int, k: int) -> int:
+    """MXU dot passes amortized per activation-block fetch — the TPU analog
+    of the paper's data-reuse factor (1/2/4)."""
+    del bits
+    return k

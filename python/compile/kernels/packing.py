@@ -1,0 +1,90 @@
+"""Weight packing/interleaving — the Fig. 5 preprocessing, numpy/jnp side.
+
+Bit-layout contract (shared with the rust side, `rust/src/quant/packing.rs`,
+and cross-checked by golden-vector tests): element/source 0 occupies the
+least-significant field of each 8-bit carrier byte; fields are 4-bit
+(two's complement, −8..7) in the 8b×4b mode and 2-bit (−2..1) in 8b×2b.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+MODES = {8: 1, 4: 2, 2: 4}  # weight bits -> interleave capacity k
+
+
+def value_range(bits: int) -> tuple[int, int]:
+    """Inclusive signed range of a two's-complement ``bits``-bit integer."""
+    if not 1 <= bits <= 8:
+        raise ValueError(f"unsupported bit-width {bits}")
+    hi = (1 << (bits - 1)) - 1
+    return -hi - 1, hi
+
+
+def check_range(w, bits: int) -> None:
+    """Raise if any element of ``w`` exceeds the signed ``bits``-bit range."""
+    lo, hi = value_range(bits)
+    w = np.asarray(w)
+    if w.size and (w.min() < lo or w.max() > hi):
+        raise ValueError(f"values outside {bits}-bit range [{lo}, {hi}]")
+
+
+def interleave(ws: list[np.ndarray], bits: int) -> np.ndarray:
+    """Interleave ``len(ws)`` equal-shape weight matrices into one uint8
+    carrier (Fig. 5): source ``s`` lands in bit field ``s``.
+
+    ``len(ws)`` may be below capacity (e.g. 3 Q/K/V tiles in the 2-bit
+    mode); the unused high fields stay zero.
+    """
+    k_cap = MODES[bits]
+    if not 1 <= len(ws) <= k_cap:
+        raise ValueError(f"{len(ws)} matrices exceed capacity {k_cap} of {bits}-bit mode")
+    shape = np.asarray(ws[0]).shape
+    mask = (1 << bits) - 1
+    out = np.zeros(shape, dtype=np.uint8)
+    for s, w in enumerate(ws):
+        w = np.asarray(w).astype(np.int64)
+        if w.shape != shape:
+            raise ValueError("shape mismatch between interleaved matrices")
+        check_range(w, bits)
+        out |= ((w & mask) << (bits * s)).astype(np.uint8)
+    return out
+
+
+def deinterleave(packed: np.ndarray, bits: int, k: int) -> list[np.ndarray]:
+    """Inverse of :func:`interleave`: recover ``k`` int8 matrices."""
+    if not 1 <= k <= MODES[bits]:
+        raise ValueError(f"k={k} invalid for {bits}-bit mode")
+    out = []
+    p = np.asarray(packed).astype(np.int64)
+    mask = (1 << bits) - 1
+    for s in range(k):
+        field = (p >> (bits * s)) & mask
+        signed = field - ((field >= (1 << (bits - 1))) << bits)
+        out.append(signed.astype(np.int8))
+    return out
+
+
+def interleave_jnp(ws, bits: int):
+    """Traceable (jnp) version of :func:`interleave` for use inside jitted
+    graphs (values are assumed in range; validate with `check_range` on
+    concrete data)."""
+    k_cap = MODES[bits]
+    if not 1 <= len(ws) <= k_cap:
+        raise ValueError(f"{len(ws)} matrices exceed capacity {k_cap} of {bits}-bit mode")
+    mask = (1 << bits) - 1
+    out = jnp.zeros(jnp.shape(ws[0]), dtype=jnp.uint8)
+    for s, w in enumerate(ws):
+        field = (w.astype(jnp.int32) & mask) << (bits * s)
+        out = out | field.astype(jnp.uint8)
+    return out
+
+
+def unpack_fields_jnp(packed, bits: int, s: int):
+    """jnp (traceable) version of field extraction: source ``s`` of a packed
+    carrier, sign-extended to int32. Used inside the Pallas kernel."""
+    p = packed.astype(jnp.int32)
+    mask = (1 << bits) - 1
+    field = (p >> (bits * s)) & mask
+    return field - ((field >= (1 << (bits - 1))).astype(jnp.int32) << bits)

@@ -1,0 +1,67 @@
+"""Pure-jnp correctness oracles for the L1 kernels.
+
+No Pallas here: these are the specification the kernels are tested against
+(pytest + hypothesis in ``python/tests``), and double as the PE-exact
+arithmetic model (2-bit subword decomposition) mirrored from
+``rust/src/quant/subword.rs``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import packing
+
+
+def matmul_ref(x, w):
+    """Plain int32 GEMM oracle. ``x``: (m, k) int8; ``w``: (k, n) int8."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32), preferred_element_type=jnp.int32)
+
+
+def adip_matmul_ref(x, w_packed, bits: int, k: int):
+    """Oracle for the interleaved multi-matrix kernel: unpack each source
+    and GEMM it against the shared input. Returns (k, m, n) int32."""
+    outs = []
+    for s in range(k):
+        w_s = packing.unpack_fields_jnp(w_packed, bits, s).astype(jnp.int32)
+        outs.append(matmul_ref(x, w_s))
+    return jnp.stack(outs)
+
+
+def decompose_radix4(v, bits: int):
+    """Radix-4 signed subword decomposition of ``v`` (int32 tensor of
+    ``bits``-bit values), least-significant first; top subword signed.
+    Identical to the rust PE model."""
+    n = bits // 2
+    mask = (1 << bits) - 1
+    u = v.astype(jnp.int32) & mask
+    subs = []
+    for i in range(n):
+        limb = (u >> (2 * i)) & 0b11
+        if i == n - 1:
+            limb = limb - ((limb >= 2).astype(jnp.int32) << 2)
+        subs.append(limb)
+    return subs
+
+
+def pe_exact_matmul_ref(x, w, w_bits: int):
+    """The PE arithmetic spec: GEMM built exclusively from 2-bit × 2-bit
+    subword products with shift-add recombination — what the 16-multiplier
+    reconfigurable PE computes. Must equal :func:`matmul_ref` exactly."""
+    x_subs = decompose_radix4(x.astype(jnp.int32), 8)
+    w_subs = decompose_radix4(w.astype(jnp.int32), w_bits)
+    acc = jnp.zeros((x.shape[0], w.shape[1]), dtype=jnp.int32)
+    for j, xs in enumerate(x_subs):
+        for g, wg in enumerate(w_subs):
+            partial = jnp.dot(xs, wg, preferred_element_type=jnp.int32)
+            acc = acc + (partial << (2 * (j + g)))
+    return acc
+
+
+def softmax_requant(scores, scale: float):
+    """The inter-stage softmax + requantization of the attention pipeline:
+    f32 softmax over the last axis, symmetric requantization to int8 with a
+    fixed output scale of 1/127 (probabilities are in [0, 1])."""
+    p = jnp.asarray(jnp.exp(scores * scale - jnp.max(scores * scale, axis=-1, keepdims=True)))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.clip(jnp.round(p * 127.0), -128, 127).astype(jnp.int8)

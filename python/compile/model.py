@@ -1,0 +1,169 @@
+"""L2: the quantized multi-head-attention compute graph (paper Fig. 1).
+
+Build-time-only JAX: composes the L1 Pallas kernel into the four MHA
+matmul stages exactly as the evaluation maps them onto ADiP —
+
+* **QKV projections** (activation-to-weight): one shared-input
+  multi-matrix kernel call with Q/K/V weights interleaved (Fig. 5(d)),
+* **attention scores / attention output** (activation-to-activation):
+  8b×8b kernel calls per head, with f32 softmax + int8 requantization
+  between them (softmax is not a matmul and runs off-array),
+* **output projection** (activation-to-weight): single-matrix kernel call
+  at the model's weight precision.
+
+Everything is integer-in/integer-out (int values carried in int8/int32);
+`aot.py` wraps the graph with f32↔int casts so the rust runtime can
+marshal plain f32 buffers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import packing, ref
+from .kernels.adip_matmul import adip_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class MhaConfig:
+    """Shape/precision configuration of one attention block."""
+
+    seq_len: int
+    d_model: int
+    heads: int
+    weight_bits: int  # 8, 4 or 2 (projection stages)
+
+    @property
+    def d_k(self) -> int:
+        return self.d_model // self.heads
+
+    def validate(self) -> None:
+        if self.d_model % self.heads:
+            raise ValueError("d_model must divide by heads")
+        if self.weight_bits not in packing.MODES:
+            raise ValueError("weight_bits must be 8, 4 or 2")
+
+
+def pack_qkv(cfg: MhaConfig, wq, wk, wv):
+    """Offline preprocessing of the Q/K/V projection weights: interleave
+    into carrier matrices according to the weight precision. Returns
+    ``(packed, k)`` where ``packed`` holds 3 (2-bit), 2+1 (4-bit) or
+    3 separate (8-bit) carriers."""
+    cfg.validate()
+    ws = [jnp.asarray(wq), jnp.asarray(wk), jnp.asarray(wv)]
+    bits = cfg.weight_bits
+    if bits == 2:
+        # Fig. 5(d): all three share one carrier
+        return [packing.interleave_jnp(ws, bits)], [3]
+    if bits == 4:
+        return [
+            packing.interleave_jnp(ws[:2], bits),
+            packing.interleave_jnp(ws[2:], bits),
+        ], [2, 1]
+    return [packing.interleave_jnp([w], bits) for w in ws], [1, 1, 1]
+
+
+def qkv_projection(cfg: MhaConfig, x, packed, ks):
+    """Activation-to-weight stage 1: Q/K/V = X · W_{Q,K,V} via the
+    shared-input multi-matrix kernel."""
+    outs = []
+    for carrier, k in zip(packed, ks):
+        y = adip_matmul(x, carrier, bits=cfg.weight_bits, k=k)
+        outs.extend(y[s] for s in range(k))
+    q, k_, v = outs
+    return q, k_, v
+
+
+def _split_heads(cfg: MhaConfig, t):
+    s = cfg.seq_len
+    return t.reshape(s, cfg.heads, cfg.d_k).transpose(1, 0, 2)  # (h, s, d_k)
+
+
+def _requant_int8(t_int32, scale: float):
+    """Symmetric requantization of an int32 stage output back to int8
+    activations for the next stage (per-tensor static scale)."""
+    return jnp.clip(jnp.round(t_int32.astype(jnp.float32) * scale), -128, 127).astype(jnp.int8)
+
+
+def attention_scores(cfg: MhaConfig, q8, k8):
+    """Activation-to-activation stage 2 per head: S = softmax(Q·Kᵀ/√d_k),
+    requantized to int8. Q·Kᵀ runs on the 8b×8b kernel path."""
+    outs = []
+    for h in range(cfg.heads):
+        # runtime preprocessing: K head is transposed and (on hardware)
+        # interleaved via the multi-bank rescheduling; numerically a plain
+        # 8b×8b GEMM
+        s_raw = adip_matmul(q8[h], k8[h].transpose(1, 0).astype(jnp.uint8), bits=8, k=1)[0]
+        outs.append(ref.softmax_requant(s_raw.astype(jnp.float32), 1.0 / np.sqrt(cfg.d_k) / 127.0))
+    return jnp.stack(outs)  # (h, s, s) int8
+
+
+def attention_output(cfg: MhaConfig, scores8, v8):
+    """Activation-to-activation stage 3 per head: Attn = S · V (8b×8b)."""
+    outs = []
+    for h in range(cfg.heads):
+        y = adip_matmul(scores8[h], v8[h].astype(jnp.uint8), bits=8, k=1)[0]
+        outs.append(y)
+    return jnp.stack(outs)  # (h, s, d_k) int32
+
+
+def output_projection(cfg: MhaConfig, concat8, wo_packed):
+    """Activation-to-weight stage 4: O = concat(Attn) · W_O."""
+    return adip_matmul(concat8, wo_packed, bits=cfg.weight_bits, k=1)[0]
+
+
+def mha_forward(cfg: MhaConfig, x, wq, wk, wv, wo, *, act_scale: float = 1.0 / 64.0):
+    """Full attention block, integer-in/integer-out.
+
+    ``x``: (s, d) int8; ``w*``: (d, d) int8 values in the weight range.
+    Returns the int32 output-projection result (s, d).
+    """
+    cfg.validate()
+    packed, ks = pack_qkv(cfg, wq, wk, wv)
+    q, k_, v = qkv_projection(cfg, x, packed, ks)
+
+    # requantize projections to int8 activations
+    q8 = _split_heads(cfg, _requant_int8(q, act_scale))
+    k8 = _split_heads(cfg, _requant_int8(k_, act_scale))
+    v8 = _split_heads(cfg, _requant_int8(v, act_scale))
+
+    scores8 = attention_scores(cfg, q8, k8)
+    attn = attention_output(cfg, scores8, v8)
+    attn8 = _requant_int8(attn, act_scale)
+    concat = attn8.transpose(1, 0, 2).reshape(cfg.seq_len, cfg.d_model)
+
+    wo_packed = packing.interleave_jnp([jnp.asarray(wo)], cfg.weight_bits)
+    return output_projection(cfg, concat, wo_packed)
+
+
+def mha_reference(cfg: MhaConfig, x, wq, wk, wv, wo, *, act_scale: float = 1.0 / 64.0):
+    """Pure-jnp oracle for :func:`mha_forward` (no Pallas): identical math
+    with `ref.matmul_ref` in place of every kernel call."""
+    q = ref.matmul_ref(x, jnp.asarray(wq))
+    k_ = ref.matmul_ref(x, jnp.asarray(wk))
+    v = ref.matmul_ref(x, jnp.asarray(wv))
+    q8 = _split_heads(cfg, _requant_int8(q, act_scale))
+    k8 = _split_heads(cfg, _requant_int8(k_, act_scale))
+    v8 = _split_heads(cfg, _requant_int8(v, act_scale))
+    scores = []
+    for h in range(cfg.heads):
+        s_raw = ref.matmul_ref(q8[h], k8[h].transpose(1, 0))
+        scores.append(
+            ref.softmax_requant(s_raw.astype(jnp.float32), 1.0 / np.sqrt(cfg.d_k) / 127.0)
+        )
+    scores8 = jnp.stack(scores)
+    attn = jnp.stack([ref.matmul_ref(scores8[h], v8[h]) for h in range(cfg.heads)])
+    attn8 = _requant_int8(attn, act_scale)
+    concat = attn8.transpose(1, 0, 2).reshape(cfg.seq_len, cfg.d_model)
+    return ref.matmul_ref(concat, jnp.asarray(wo))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mha_forward_jit(cfg: MhaConfig, x, wq, wk, wv, wo):
+    """jit entry point used by aot.py."""
+    return mha_forward(cfg, x, wq, wk, wv, wo)

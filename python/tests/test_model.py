@@ -1,0 +1,95 @@
+"""L2 model tests: MHA stages and the full block vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import packing
+from compile.model import (
+    MhaConfig,
+    mha_forward,
+    mha_reference,
+    pack_qkv,
+    qkv_projection,
+)
+
+
+def rand_block(seed, cfg: MhaConfig):
+    rng = np.random.default_rng(seed)
+    lo, hi = packing.value_range(cfg.weight_bits)
+    x = jnp.asarray(rng.integers(-64, 64, (cfg.seq_len, cfg.d_model), dtype=np.int8))
+    ws = [
+        jnp.asarray(rng.integers(lo, hi + 1, (cfg.d_model, cfg.d_model)).astype(np.int8))
+        for _ in range(4)
+    ]
+    return x, ws
+
+
+class TestConfig:
+    def test_dk(self):
+        cfg = MhaConfig(seq_len=64, d_model=64, heads=4, weight_bits=2)
+        assert cfg.d_k == 16
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            MhaConfig(seq_len=8, d_model=10, heads=4, weight_bits=2).validate()
+        with pytest.raises(ValueError):
+            MhaConfig(seq_len=8, d_model=8, heads=4, weight_bits=3).validate()
+
+
+class TestQkvPacking:
+    def test_2bit_single_carrier(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=2)
+        _, ws = rand_block(1, cfg)
+        packed, ks = pack_qkv(cfg, *ws[:3])
+        assert len(packed) == 1 and ks == [3]  # Fig. 5(d)
+
+    def test_4bit_two_carriers(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=4)
+        _, ws = rand_block(2, cfg)
+        packed, ks = pack_qkv(cfg, *ws[:3])
+        assert len(packed) == 2 and ks == [2, 1]
+
+    def test_8bit_three_carriers(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=8)
+        _, ws = rand_block(3, cfg)
+        packed, ks = pack_qkv(cfg, *ws[:3])
+        assert len(packed) == 3 and ks == [1, 1, 1]
+
+    def test_projection_values(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=2)
+        x, ws = rand_block(4, cfg)
+        packed, ks = pack_qkv(cfg, *ws[:3])
+        q, k_, v = qkv_projection(cfg, x, packed, ks)
+        from compile.kernels import ref
+
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(ref.matmul_ref(x, ws[0])))
+        np.testing.assert_array_equal(np.asarray(k_), np.asarray(ref.matmul_ref(x, ws[1])))
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(ref.matmul_ref(x, ws[2])))
+
+
+class TestFullBlock:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_forward_matches_reference(self, bits):
+        cfg = MhaConfig(seq_len=32, d_model=32, heads=2, weight_bits=bits)
+        x, ws = rand_block(bits, cfg)
+        got = mha_forward(cfg, x, *ws)
+        want = mha_reference(cfg, x, *ws)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        assert got.shape == (32, 32)
+        assert got.dtype == jnp.int32
+
+    def test_deterministic(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=2)
+        x, ws = rand_block(5, cfg)
+        a = np.asarray(mha_forward(cfg, x, *ws))
+        b = np.asarray(mha_forward(cfg, x, *ws))
+        np.testing.assert_array_equal(a, b)
+
+    def test_zero_input_gives_zero_scores_path(self):
+        cfg = MhaConfig(seq_len=16, d_model=16, heads=2, weight_bits=2)
+        _, ws = rand_block(6, cfg)
+        x = jnp.zeros((16, 16), dtype=jnp.int8)
+        out = np.asarray(mha_forward(cfg, x, *ws))
+        # zero activations ⇒ zero Q/K/V ⇒ uniform softmax ⇒ attn of zero V = 0
+        np.testing.assert_array_equal(out, np.zeros_like(out))

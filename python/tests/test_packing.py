@@ -1,0 +1,97 @@
+"""Packing/interleaving tests incl. the cross-language bit-layout contract."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import packing
+
+
+class TestValueRange:
+    def test_ranges(self):
+        assert packing.value_range(2) == (-2, 1)
+        assert packing.value_range(4) == (-8, 7)
+        assert packing.value_range(8) == (-128, 127)
+
+    def test_rejects_bad_width(self):
+        with pytest.raises(ValueError):
+            packing.value_range(9)
+
+    def test_check_range(self):
+        packing.check_range(np.array([-2, 1]), 2)
+        with pytest.raises(ValueError):
+            packing.check_range(np.array([2]), 2)
+
+
+class TestGoldenVectors:
+    """The exact byte layout rust produces (rust/src/quant/packing.rs:
+    element 0 in the least-significant field)."""
+
+    def test_int4_pair(self):
+        # rust: pack_int4([-8, 7]) = (7 << 4) | 0x8 = 0x78
+        packed = packing.interleave([np.array([[-8]]), np.array([[7]])], 4)
+        assert packed[0, 0] == 0x78
+
+    def test_int2_quad(self):
+        # rust: pack_int2([-2, -1, 0, 1]) = 0b01_00_11_10 = 0x4E
+        ws = [np.array([[v]]) for v in (-2, -1, 0, 1)]
+        packed = packing.interleave(ws, 2)
+        assert packed[0, 0] == 0b01_00_11_10
+
+    def test_int8_identity(self):
+        packed = packing.interleave([np.array([[-1]])], 8)
+        assert packed[0, 0] == 0xFF
+
+
+class TestRoundtrip:
+    @settings(max_examples=50, deadline=None)
+    @given(
+        bits=st.sampled_from([2, 4, 8]),
+        rows=st.integers(1, 16),
+        cols=st.integers(1, 16),
+        seed=st.integers(0, 2**31),
+        data=st.data(),
+    )
+    def test_interleave_deinterleave(self, bits, rows, cols, seed, data):
+        k = data.draw(st.integers(1, packing.MODES[bits]))
+        rng = np.random.default_rng(seed)
+        lo, hi = packing.value_range(bits)
+        ws = [rng.integers(lo, hi + 1, (rows, cols)).astype(np.int8) for _ in range(k)]
+        packed = packing.interleave(ws, bits)
+        back = packing.deinterleave(packed, bits, k)
+        for w, b in zip(ws, back):
+            np.testing.assert_array_equal(w, b)
+
+    def test_jnp_matches_numpy(self):
+        rng = np.random.default_rng(3)
+        ws = [rng.integers(-2, 2, (8, 8)).astype(np.int8) for _ in range(4)]
+        a = packing.interleave(ws, 2)
+        b = np.asarray(packing.interleave_jnp([jnp.asarray(w) for w in ws], 2))
+        np.testing.assert_array_equal(a, b)
+
+    def test_unpack_fields_jnp(self):
+        rng = np.random.default_rng(4)
+        ws = [rng.integers(-8, 8, (4, 4)).astype(np.int8) for _ in range(2)]
+        packed = jnp.asarray(packing.interleave(ws, 4))
+        for s, w in enumerate(ws):
+            got = np.asarray(packing.unpack_fields_jnp(packed, 4, s))
+            np.testing.assert_array_equal(got, w)
+
+
+class TestErrors:
+    def test_capacity(self):
+        w = np.zeros((2, 2), dtype=np.int8)
+        with pytest.raises(ValueError):
+            packing.interleave([w] * 5, 2)
+        with pytest.raises(ValueError):
+            packing.interleave([w] * 2, 8)
+
+    def test_range_violation(self):
+        with pytest.raises(ValueError):
+            packing.interleave([np.array([[3]])], 2)
+
+    def test_shape_mismatch(self):
+        with pytest.raises(ValueError):
+            packing.interleave([np.zeros((2, 2)), np.zeros((2, 3))], 4)

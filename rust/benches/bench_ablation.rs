@@ -1,0 +1,85 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! 1. **Multiplier count `M`** — why the paper selects 16 (Fig. 2's
+//!    "optimal design" claim): throughput per PE vs area proxy.
+//! 2. **Shared column unit `E` stages** — sensitivity of Eq. (2) latency
+//!    to the per-mode pipeline depth.
+//! 3. **Multi-bank runtime interleaving** — stall overhead vs bank count
+//!    for activation-to-activation workloads (the "almost zero overhead"
+//!    claim holds iff banks ≥ interleave factor).
+//! 4. **Fusion policy** — slot utilization across head sizes (Fig. 5(d)).
+
+#[path = "common.rs"]
+mod common;
+
+use adip::analytical::{adip_latency, pe_latency, qkv_sweep, slot_utilization, FusionPolicy};
+use adip::arch::SharedColumnUnit;
+use adip::quant::PrecisionMode;
+use adip::sim::MemorySystem;
+
+fn main() {
+    println!("== ablation 1: multiplier count M (selected design point: 16) ==");
+    println!("{:<6} {:>14} {:>14} {:>14} {:>18}", "M", "lat 8b×8b", "lat 8b×4b", "lat 8b×2b", "thr/area proxy");
+    for m in [2u32, 4, 8, 16, 32] {
+        let l8 = pe_latency(m, 2, 8, 8);
+        let l4 = pe_latency(m, 2, 8, 4);
+        let l2 = pe_latency(m, 2, 8, 2);
+        // throughput per multiplier-area: ops/cycle at 8b×8b per M
+        let proxy = 2.0 / (l8 as f64 * m as f64);
+        println!("{:<6} {:>14} {:>14} {:>14} {:>18.4}", m, l8, l4, l2, proxy);
+    }
+    println!(
+        "-> M=16 is the smallest M with 1-cycle 8b×8b (Fig. 2); beyond 16 adds\n\
+         area with zero latency gain (M=32 proxy halves).\n"
+    );
+
+    println!("== ablation 2: column-unit pipeline depth E (Eq. 2, N = 32) ==");
+    let unit = SharedColumnUnit;
+    for mode in PrecisionMode::ALL {
+        let e_sel = unit.pipeline_stages(mode);
+        print!("{:<7}", mode.to_string());
+        for e in 0..=4u64 {
+            let lat = adip_latency(32, 16, 2, 8, mode.weight_bits(), 1, e);
+            let marker = if e == e_sel { "*" } else { " " };
+            print!("  E={e}:{lat}{marker}");
+        }
+        println!();
+    }
+    println!("-> latency impact of E is ≤4 cycles on a 63-cycle tile (≤6%), amortized\n\
+              to <0.1% over streamed tiles — sharing the unit per column is free.\n");
+
+    println!("== ablation 3: runtime-interleave stalls vs bank count (8b×2b, tile=32c) ==");
+    for banks in [1usize, 2, 4, 8] {
+        let mut mem = MemorySystem::new(banks);
+        let stall = mem.runtime_interleave(4, 32);
+        println!("  banks={banks}: stall={stall} cycles per stationary group ({}%)",
+            100 * stall / 32 / 4);
+    }
+    println!("-> ≥4 banks ⇒ zero overhead: the paper's multi-bank claim.\n");
+
+    println!("== ablation 4: fusion policy slot utilization (8b×2b, N = 32) ==");
+    println!("{:<8} {:>8} {:>10} {:>10}", "d_k", "solo", "col-fuse", "qkv-fuse");
+    for row in qkv_sweep(32, &[16, 32, 64, 128, 256]) {
+        println!(
+            "{:<8} {:>7.0}% {:>9.0}% {:>9.0}%",
+            row.d_k,
+            row.solo * 100.0,
+            row.column * 100.0,
+            row.qkv * 100.0
+        );
+    }
+    let wide = slot_utilization(PrecisionMode::W2, 32, 2560, FusionPolicy::ColumnTiles);
+    println!("-> head-limited (d_k ≤ N) projections need the Fig. 5(d) multi-matrix\n\
+              mode; wide projections (d_model = 2560: {:.0}%) saturate by column\n\
+              fusion alone.", wide * 100.0);
+
+    // timing: the whole ablation suite is analytical — confirm it's instant
+    let stat = common::bench(5, || {
+        let mut acc = 0u64;
+        for m in [2u32, 4, 8, 16, 32] {
+            acc += pe_latency(m, 2, 8, 8);
+        }
+        acc
+    });
+    common::report("\nanalytical ablation sweep", stat, 5.0, "sweep");
+}

@@ -1,0 +1,58 @@
+//! Bench: array tile paths — fast functional vs register-level simulation
+//! — plus the Fig. 4 analytical series.
+//!
+//! The fast tile path is the coordinator's hot loop; the register-level
+//! simulator is the validation path. Reported in simulated MACs per host
+//! second.
+
+#[path = "common.rs"]
+mod common;
+
+use adip::analytical::fig4_series;
+use adip::arch::{AdipArray, ArchConfig, SystolicArray};
+use adip::dataflow::{interleave_tiles, Mat};
+use adip::quant::PrecisionMode;
+use adip::testutil::Rng;
+
+fn main() {
+    println!("== Fig. 4 (Eqs. 2–3): ADiP latency/throughput across sizes ==");
+    for row in fig4_series() {
+        println!(
+            "  N={:<3} {:<6} latency={:<5} throughput={:>9.1} ops/cycle ({:.3} TOPS @1GHz)",
+            row.n,
+            row.mode.to_string(),
+            row.latency,
+            row.throughput_ops_per_cycle,
+            row.throughput_tops_at_1ghz
+        );
+    }
+
+    let mut rng = Rng::seeded(3);
+    println!("\n== functional tile pass (coordinator hot path) ==");
+    for n in [16usize, 32, 64] {
+        for mode in PrecisionMode::ALL {
+            let arr = AdipArray::new(ArchConfig::with_n(n));
+            let k = mode.interleave_factor();
+            let a = Mat::random(&mut rng, n, n, 8);
+            let tiles: Vec<Mat> =
+                (0..k).map(|_| Mat::random(&mut rng, n, n, mode.weight_bits())).collect();
+            let refs: Vec<&Mat> = tiles.iter().collect();
+            let it = interleave_tiles(&refs, mode).unwrap();
+            let macs = (n * n * n * k) as f64;
+            let stat = common::bench(32, || arr.tile_pass(&a, &it).unwrap());
+            common::report(&format!("tile_pass fast n={n} {mode}"), stat, macs, "MAC");
+        }
+    }
+
+    println!("\n== register-level cycle simulation (validation path) ==");
+    for n in [8usize, 16, 32] {
+        let arr = AdipArray::new(ArchConfig::with_n(n));
+        let a = Mat::random(&mut rng, n, n, 8);
+        let tiles: Vec<Mat> = (0..4).map(|_| Mat::random(&mut rng, n, n, 2)).collect();
+        let refs: Vec<&Mat> = tiles.iter().collect();
+        let it = interleave_tiles(&refs, PrecisionMode::W2).unwrap();
+        let macs = (n * n * n * 4) as f64;
+        let stat = common::bench(8, || arr.tile_pass_cycle_accurate(&a, &it).unwrap());
+        common::report(&format!("tile_pass cycle-accurate n={n} 8b×2b"), stat, macs, "MAC");
+    }
+}

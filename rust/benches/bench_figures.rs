@@ -1,0 +1,23 @@
+//! Bench: regenerate EVERY paper table and figure (the deliverable-(d)
+//! harness) and time each regeneration.
+//!
+//! `cargo bench --bench bench_figures` prints the full set of artifacts —
+//! the same output as `adip all` — with per-artifact wall-clock, proving
+//! the entire evaluation section regenerates in seconds.
+
+#[path = "common.rs"]
+mod common;
+
+use adip::report;
+
+fn main() {
+    for name in report::ALL_ARTIFACTS {
+        let stat = common::bench(3, || report::render(name).unwrap());
+        let r = report::render(name).unwrap();
+        println!("{}", r.text);
+        println!(
+            "[regenerated {name} in {:.1} ms median]\n",
+            stat.median_s * 1e3
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: reconfigurable PE hot path + Fig. 2 regeneration.
+//!
+//! Regenerates the Fig. 2 latency series from Eq. (1) and measures the
+//! host-side throughput of the bit-exact PE model (the arithmetic the
+//! cycle-accurate simulator runs per PE per beat).
+
+#[path = "common.rs"]
+mod common;
+
+use adip::analytical::fig2_series;
+use adip::arch::{PeConfig, ReconfigurablePe, SharedColumnUnit};
+use adip::quant::PrecisionMode;
+use adip::testutil::Rng;
+
+fn main() {
+    println!("== Fig. 2 (Eq. 1): PE latency in cycles ==");
+    for row in fig2_series() {
+        println!("  M={:<3} {:<6} -> {} cycle(s)", row.multipliers, row.mode.to_string(), row.latency);
+    }
+
+    println!("\n== bit-exact PE model throughput (host) ==");
+    let mut rng = Rng::seeded(1);
+    let unit = SharedColumnUnit;
+    for mode in PrecisionMode::ALL {
+        let mut pe = ReconfigurablePe::new(PeConfig::default(), mode);
+        let weights: Vec<u8> = (0..1024).map(|_| rng.next_u32() as u8).collect();
+        let acts: Vec<i32> = (0..1024).map(|_| rng.int_of_bits(8)).collect();
+        const MACS: usize = 1 << 16;
+        let stat = common::bench(16, || {
+            let mut acc = 0i64;
+            for i in 0..MACS {
+                pe.load_weight(weights[i & 1023], mode);
+                let groups = pe.compute(acts[i & 1023]);
+                let outs = unit.combine(mode, groups);
+                acc += outs[0];
+            }
+            acc
+        });
+        common::report(&format!("pe_compute+column_combine {mode}"), stat, MACS as f64, "MAC");
+    }
+}

@@ -1,0 +1,66 @@
+//! Bench: full workload evaluation (the engine behind Figs. 9/10/11) and
+//! end-to-end functional co-simulation of real GEMMs.
+//!
+//! The first section regenerates the paper's per-model totals and prints
+//! the improvement annotations; the second measures the co-simulator's
+//! sustained functional throughput (simulated MACs per host second) — the
+//! §Perf L3 metric.
+
+#[path = "common.rs"]
+mod common;
+
+use adip::arch::{build_array, ArchConfig, Architecture};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::sim::{evaluate_model, CoSim, SimConfig};
+use adip::testutil::Rng;
+use adip::workload::TransformerModel;
+
+fn main() {
+    println!("== Figs. 9/10/11: per-model totals (WS / DiP / ADiP, 32x32) ==");
+    let cfg = SimConfig::default();
+    for model in TransformerModel::evaluated() {
+        let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+        let adip_r = evaluate_model(Architecture::Adip, &model, &cfg);
+        let ws = evaluate_model(Architecture::Ws, &model, &cfg);
+        println!(
+            "  {:<14} latency(ms) WS={:>9.1} DiP={:>9.1} ADiP={:>9.1}  | imp {:+.1}% | energy {:+.1}% | mem {:+.1}%",
+            model.name,
+            ws.total_seconds() * 1e3,
+            dip.total_seconds() * 1e3,
+            adip_r.total_seconds() * 1e3,
+            (1.0 - adip_r.total_cycles() as f64 / dip.total_cycles() as f64) * 100.0,
+            (1.0 - adip_r.total_energy_j() / dip.total_energy_j()) * 100.0,
+            (1.0 - adip_r.total_memory_bytes() as f64 / dip.total_memory_bytes() as f64) * 100.0,
+        );
+    }
+
+    println!("\n== evaluation-engine speed (all 3 models × 3 archs per iter) ==");
+    let stat = common::bench(16, || {
+        let mut acc = 0u64;
+        for model in TransformerModel::evaluated() {
+            for arch in Architecture::ALL {
+                acc ^= evaluate_model(arch, &model, &cfg).total_cycles();
+            }
+        }
+        acc
+    });
+    common::report("evaluate_model x9", stat, 9.0, "eval");
+
+    println!("\n== functional co-simulation throughput (simulated MACs/s) ==");
+    let mut rng = Rng::seeded(9);
+    for (m, k, n, mode) in [
+        (256usize, 256usize, 256usize, PrecisionMode::W8),
+        (256, 256, 256, PrecisionMode::W2),
+        (512, 512, 512, PrecisionMode::W2),
+    ] {
+        let a = Mat::random(&mut rng, m, k, 8);
+        let b = Mat::random(&mut rng, k, n, mode.weight_bits());
+        let macs = (m * k * n) as f64;
+        let stat = common::bench(8, || {
+            let mut sim = CoSim::new(build_array(Architecture::Adip, ArchConfig::with_n(32)));
+            sim.run_gemm(&a, &b, mode, false).unwrap()
+        });
+        common::report(&format!("cosim gemm {m}x{k}x{n} {mode}"), stat, macs, "MAC");
+    }
+}

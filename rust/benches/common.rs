@@ -1,0 +1,42 @@
+//! Shared timing harness for the benches (criterion is not in the offline
+//! crate snapshot; this is a deliberately small warmup+repeat timer with
+//! median/min reporting).
+
+use std::time::Instant;
+
+/// Benchmark result for one case.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStat {
+    /// Median wall-clock seconds per iteration.
+    pub median_s: f64,
+    /// Fastest observed iteration.
+    pub min_s: f64,
+    /// Iterations measured.
+    pub iters: usize,
+}
+
+/// Time `f` (excluding one warmup call): `reps` measured iterations,
+/// median + min reported.
+pub fn bench<T>(reps: usize, mut f: impl FnMut() -> T) -> BenchStat {
+    std::hint::black_box(f()); // warmup
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStat { median_s: times[times.len() / 2], min_s: times[0], iters: reps }
+}
+
+/// Print a standard row: name, median, throughput (unit/s given per-iter
+/// work `units`).
+pub fn report(name: &str, stat: BenchStat, units: f64, unit_name: &str) {
+    println!(
+        "{name:<44} {:>10.3} ms/iter  {:>14.3e} {unit_name}/s  (min {:.3} ms, n={})",
+        stat.median_s * 1e3,
+        units / stat.median_s,
+        stat.min_s * 1e3,
+        stat.iters
+    );
+}

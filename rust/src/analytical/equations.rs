@@ -1,0 +1,193 @@
+//! Paper Eqs. (1)–(3) and the Fig. 2 / Fig. 4 series generators.
+
+use crate::quant::PrecisionMode;
+
+/// Eq. (1): reconfigurable-PE latency in cycles.
+///
+/// `Latency_PE = ceil( (1/M) · (OW₁·OW₂ / MW²) )`
+///
+/// * `m` — number of 2-bit multipliers,
+/// * `mw` — multiplier operand width (bits),
+/// * `ow1`, `ow2` — operand bit-widths (multiples of `mw`).
+pub fn pe_latency(m: u32, mw: u32, ow1: u32, ow2: u32) -> u64 {
+    assert!(m > 0 && mw > 0, "M and MW must be positive");
+    ((ow1 * ow2) as u64).div_ceil((m * mw * mw) as u64)
+}
+
+/// Eq. (2): ADiP single-tile latency in cycles.
+///
+/// `Latency_ADiP = N·ceil((1/M)(OW₁·OW₂/MW²)) + N + S + E − 2`
+pub fn adip_latency(n: u64, m: u32, mw: u32, ow1: u32, ow2: u32, s: u64, e: u64) -> u64 {
+    n * pe_latency(m, mw, ow1, ow2) + n + s + e - 2
+}
+
+/// Eq. (3): ADiP throughput in operations per cycle (multiply-and-add
+/// counted as 2 ops), for one `N×N` tile pass.
+///
+/// `T = 2 · ceil(M·MW²/(OW₁·OW₂)) · N³ / Latency_ADiP`
+///
+/// The ceil term is the per-PE parallelism (number of weight matrices
+/// resolved per MAC cycle): 1, 2 and 4 for 8b×8b, 8b×4b, 8b×2b at M = 16.
+pub fn adip_throughput_ops_per_cycle(
+    n: u64,
+    m: u32,
+    mw: u32,
+    ow1: u32,
+    ow2: u32,
+    s: u64,
+    e: u64,
+) -> f64 {
+    let parallelism = ((m * mw * mw) as u64).div_ceil((ow1 * ow2) as u64);
+    let ops = 2 * parallelism * n * n * n;
+    ops as f64 / adip_latency(n, m, mw, ow1, ow2, s, e) as f64
+}
+
+/// One bar of Fig. 2: PE latency for a multiplier count and mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fig2Row {
+    /// Number of 2-bit multipliers (`M`).
+    pub multipliers: u32,
+    /// Operand configuration.
+    pub mode: PrecisionMode,
+    /// Eq. (1) latency in cycles.
+    pub latency: u64,
+}
+
+/// The full Fig. 2 series: `M ∈ {2, 4, 8, 16}` × all modes.
+pub fn fig2_series() -> Vec<Fig2Row> {
+    let mut out = Vec::new();
+    for &m in &[2u32, 4, 8, 16] {
+        for mode in PrecisionMode::ALL {
+            out.push(Fig2Row {
+                multipliers: m,
+                mode,
+                latency: pe_latency(m, 2, mode.act_bits(), mode.weight_bits()),
+            });
+        }
+    }
+    out
+}
+
+/// One point of Fig. 4: ADiP latency + throughput at an array size/mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fig4Row {
+    /// Array size `N`.
+    pub n: u64,
+    /// Operand configuration.
+    pub mode: PrecisionMode,
+    /// Eq. (2) latency (cycles).
+    pub latency: u64,
+    /// Eq. (3) throughput (ops/cycle).
+    pub throughput_ops_per_cycle: f64,
+    /// Eq. (3) throughput at 1 GHz, in TOPS.
+    pub throughput_tops_at_1ghz: f64,
+}
+
+/// The full Fig. 4 series: `N ∈ {4, 8, 16, 32, 64}` × all modes, with the
+/// selected design point `M = 16` and the default pipeline depths
+/// (`S = 1`; `E` per mode from the shared column unit).
+pub fn fig4_series() -> Vec<Fig4Row> {
+    let unit = crate::arch::SharedColumnUnit;
+    let mut out = Vec::new();
+    for &n in &[4u64, 8, 16, 32, 64] {
+        for mode in PrecisionMode::ALL {
+            let (s, e) = (1, unit.pipeline_stages(mode));
+            let ops = adip_throughput_ops_per_cycle(n, 16, 2, 8, mode.weight_bits(), s, e);
+            out.push(Fig4Row {
+                n,
+                mode,
+                latency: adip_latency(n, 16, 2, 8, mode.weight_bits(), s, e),
+                throughput_ops_per_cycle: ops,
+                throughput_tops_at_1ghz: ops * 1e9 / 1e12,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{AdipArray, ArchConfig, SystolicArray};
+
+    #[test]
+    fn eq1_fig2_values() {
+        // The Fig. 2 bars: latency halves with M, floors at 1 cycle.
+        let series = fig2_series();
+        let get = |m: u32, mode: PrecisionMode| {
+            series.iter().find(|r| r.multipliers == m && r.mode == mode).unwrap().latency
+        };
+        assert_eq!(get(2, PrecisionMode::W8), 8);
+        assert_eq!(get(4, PrecisionMode::W8), 4);
+        assert_eq!(get(8, PrecisionMode::W8), 2);
+        assert_eq!(get(16, PrecisionMode::W8), 1);
+        assert_eq!(get(8, PrecisionMode::W4), 1); // stabilizes at 8 mults
+        assert_eq!(get(4, PrecisionMode::W2), 1); // stabilizes at 4 mults
+        // gap narrows to one cycle at M = 16 (paper §III)
+        assert_eq!(get(16, PrecisionMode::W8), get(16, PrecisionMode::W2));
+    }
+
+    #[test]
+    fn eq2_matches_array_model() {
+        // The closed form and the AdipArray implementation agree.
+        for n in [4usize, 8, 16, 32, 64] {
+            let arr = AdipArray::new(ArchConfig::with_n(n));
+            for mode in PrecisionMode::ALL {
+                let e = crate::arch::SharedColumnUnit.pipeline_stages(mode);
+                assert_eq!(
+                    adip_latency(n as u64, 16, 2, 8, mode.weight_bits(), 1, e),
+                    arr.tile_latency(mode),
+                    "n={n} mode={mode}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eq3_throughput_gains_approach_2x_4x() {
+        // Fig. 4(b): at large N the quantized modes deliver 2× / 4×.
+        let t8 = adip_throughput_ops_per_cycle(64, 16, 2, 8, 8, 1, 3);
+        let t4 = adip_throughput_ops_per_cycle(64, 16, 2, 8, 4, 1, 2);
+        let t2 = adip_throughput_ops_per_cycle(64, 16, 2, 8, 2, 1, 0);
+        assert!((t4 / t8 - 2.0).abs() < 0.04, "t4/t8 = {}", t4 / t8);
+        // slightly above 4×: the 8b×2b column unit bypass also saves the
+        // E-stage fill of the 8b×8b path
+        assert!((t2 / t8 - 4.0).abs() < 0.11, "t2/t8 = {}", t2 / t8);
+    }
+
+    #[test]
+    fn eq3_peak_tops_at_64() {
+        // Steady-state peaks (paper abstract: 8.192/16.384/32.768 TOPS at
+        // 64×64, 1 GHz). Eq. (3) includes fill/drain of a single tile, so
+        // the single-tile numbers sit slightly below peak; the steady-state
+        // ops/cycle equal the abstract's figures exactly.
+        let arr = AdipArray::new(ArchConfig::with_n(64));
+        assert_eq!(arr.peak_ops_per_cycle(PrecisionMode::W8), 8192);
+        assert_eq!(arr.peak_ops_per_cycle(PrecisionMode::W4), 16384);
+        assert_eq!(arr.peak_ops_per_cycle(PrecisionMode::W2), 32768);
+        // Eq. (3) at N=64 approaches the peak within the fill overhead.
+        let t8 = adip_throughput_ops_per_cycle(64, 16, 2, 8, 8, 1, 3);
+        assert!(t8 / 8192.0 > 0.49 && t8 <= 8192.0, "single-tile t8 = {t8}");
+    }
+
+    #[test]
+    fn fig4_series_is_complete_and_monotone() {
+        let series = fig4_series();
+        assert_eq!(series.len(), 15);
+        // throughput grows with N for every mode
+        for mode in PrecisionMode::ALL {
+            let tp: Vec<f64> = series
+                .iter()
+                .filter(|r| r.mode == mode)
+                .map(|r| r.throughput_ops_per_cycle)
+                .collect();
+            assert!(tp.windows(2).all(|w| w[1] > w[0]), "mode {mode}: {tp:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn eq1_rejects_zero_multipliers() {
+        pe_latency(0, 2, 8, 8);
+    }
+}

@@ -1,0 +1,18 @@
+//! Closed-form analytical models — paper Eqs. (1)–(3) plus the WS/DiP
+//! baseline equivalents and GEMM-level estimates.
+//!
+//! These are the models the paper's own cycle-accurate simulator "employs
+//! … for WS and DiP architectures, derived from the DiP work" (§V-B). The
+//! register-level simulators in [`crate::arch::cycle_sim`] validate them
+//! cycle-for-cycle; [`crate::sim`] applies them per-workload.
+
+pub mod equations;
+pub mod gemm;
+pub mod utilization;
+
+pub use equations::{
+    adip_latency, adip_throughput_ops_per_cycle, fig2_series, fig4_series, pe_latency, Fig2Row,
+    Fig4Row,
+};
+pub use gemm::{estimate_gemm, GemmEstimate, GemmShape};
+pub use utilization::{effective_gain, qkv_sweep, slot_utilization, FusionPolicy};

@@ -1,0 +1,172 @@
+//! Array-utilization analysis — the quantitative case for the Fig. 5(d)
+//! Q/K/V variant.
+//!
+//! The paper motivates the 3-way interleave with core under-utilization
+//! “when the core utilization is limited by the ratio between the head
+//! size and the ADiP core size”. This module computes stationary-slot
+//! utilization for a projection workload as a function of head size `d_k`,
+//! array size `N` and fusion policy, quantifying exactly when multi-matrix
+//! fusion recovers the idle capacity.
+
+use crate::quant::PrecisionMode;
+
+/// How weight tiles are packed into stationary passes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusionPolicy {
+    /// One weight matrix per pass (DiP-style; narrow modes waste slots).
+    None,
+    /// Adjacent output-column tiles of one matrix share a pass (Fig. 5(b)/(c)).
+    ColumnTiles,
+    /// Column tiles of *multiple* matrices sharing an input may mix in one
+    /// pass (Fig. 5(d) generalized — what `sim::cosim::run_gemm_set` does).
+    MultiMatrix {
+        /// Number of weight matrices sharing the input (e.g. 3 for Q/K/V).
+        set: usize,
+    },
+}
+
+/// Utilization of the stationary interleave capacity for a projection of
+/// output width `out_cols` (per matrix) on an `n×n` array in `mode`.
+///
+/// Returns a value in `(0, 1]`: fraction of stationary slots carrying real
+/// weight tiles, averaged over the passes of one reduction step.
+pub fn slot_utilization(
+    mode: PrecisionMode,
+    n: usize,
+    out_cols: usize,
+    policy: FusionPolicy,
+) -> f64 {
+    assert!(n > 0 && out_cols > 0);
+    let cap = mode.interleave_factor();
+    let tiles_n = out_cols.div_ceil(n);
+    let (slots_used, passes) = match policy {
+        FusionPolicy::None => (tiles_n, tiles_n * cap), // 1 slot of `cap` per pass
+        FusionPolicy::ColumnTiles => {
+            let passes = tiles_n.div_ceil(cap);
+            (tiles_n, passes * cap)
+        }
+        FusionPolicy::MultiMatrix { set } => {
+            assert!(set >= 1);
+            let total = tiles_n * set;
+            let passes = total.div_ceil(cap);
+            (total, passes * cap)
+        }
+    };
+    slots_used as f64 / passes as f64
+}
+
+/// Effective throughput gain over 8b×8b for a projection workload under a
+/// policy: the mode's ideal gain × the slot utilization.
+pub fn effective_gain(mode: PrecisionMode, n: usize, out_cols: usize, policy: FusionPolicy) -> f64 {
+    mode.throughput_gain() as f64 * slot_utilization(mode, n, out_cols, policy)
+}
+
+/// One row of the utilization report: the Q/K/V head-projection case.
+#[derive(Debug, Clone, Copy)]
+pub struct UtilizationRow {
+    /// Head size (output width per matrix).
+    pub d_k: usize,
+    /// Array size.
+    pub n: usize,
+    /// Utilization without fusion.
+    pub solo: f64,
+    /// Utilization with column-tile fusion only.
+    pub column: f64,
+    /// Utilization with 3-way Q/K/V multi-matrix fusion.
+    pub qkv: f64,
+}
+
+/// Sweep head sizes for the 8b×2b mode at an array size — the Fig. 5(d)
+/// under-utilization regime appears when `d_k ≤ n` (a single column tile).
+pub fn qkv_sweep(n: usize, head_sizes: &[usize]) -> Vec<UtilizationRow> {
+    head_sizes
+        .iter()
+        .map(|&d_k| UtilizationRow {
+            d_k,
+            n,
+            solo: slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::None),
+            column: slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::ColumnTiles),
+            qkv: slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::MultiMatrix { set: 3 }),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArchConfig, Architecture};
+    use crate::dataflow::Mat;
+    use crate::quant::PrecisionMode;
+    use crate::sim::CoSim;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn no_fusion_wastes_capacity_in_narrow_modes() {
+        // 8b×2b with one matrix per pass: 1 of 4 slots used.
+        assert_eq!(slot_utilization(PrecisionMode::W2, 32, 128, FusionPolicy::None), 0.25);
+        assert_eq!(slot_utilization(PrecisionMode::W4, 32, 128, FusionPolicy::None), 0.5);
+        assert_eq!(slot_utilization(PrecisionMode::W8, 32, 128, FusionPolicy::None), 1.0);
+    }
+
+    #[test]
+    fn column_fusion_saturates_wide_outputs() {
+        // 4 column tiles fill the 4 slots exactly
+        assert_eq!(slot_utilization(PrecisionMode::W2, 32, 128, FusionPolicy::ColumnTiles), 1.0);
+        // a single column tile (d_k = n) cannot: 1/4
+        assert_eq!(slot_utilization(PrecisionMode::W2, 32, 32, FusionPolicy::ColumnTiles), 0.25);
+    }
+
+    #[test]
+    fn qkv_fusion_recovers_head_limited_utilization() {
+        // d_k = n: solo/column = 25%, 3-way Q/K/V = 75% (paper Fig. 5(d))
+        let rows = qkv_sweep(32, &[32]);
+        let r = rows[0];
+        assert_eq!(r.solo, 0.25);
+        assert_eq!(r.column, 0.25);
+        assert_eq!(r.qkv, 0.75);
+        // effective gains: 1× vs 3× over 8b×8b
+        assert_eq!(
+            effective_gain(PrecisionMode::W2, 32, 32, FusionPolicy::ColumnTiles),
+            1.0
+        );
+        assert_eq!(
+            effective_gain(PrecisionMode::W2, 32, 32, FusionPolicy::MultiMatrix { set: 3 }),
+            3.0
+        );
+    }
+
+    #[test]
+    fn utilization_matches_cosim_pass_counts() {
+        // analytical slot utilization must predict the co-simulator's pass
+        // counts: passes = slots_used / (cap × utilization)
+        let mut rng = Rng::seeded(71);
+        let n = 8;
+        let d_k = 8; // one column tile per matrix
+        let x = Mat::random(&mut rng, 16, 16, 8);
+        let ws: Vec<Mat> = (0..3).map(|_| Mat::random(&mut rng, 16, d_k, 2)).collect();
+        let refs: Vec<&Mat> = ws.iter().collect();
+        let mut sim = CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
+        let fused = sim.run_gemm_set(&x, &refs, PrecisionMode::W2, false).unwrap();
+        // 3 slots in 1 group × tiles_k(2) × tiles_m(2) = 4 passes
+        assert_eq!(fused.passes, 4);
+        let mut solo_passes = 0;
+        for w in &ws {
+            let mut s = CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
+            solo_passes += s.run_gemm(&x, w, PrecisionMode::W2, false).unwrap().passes;
+        }
+        assert_eq!(solo_passes, 12);
+        let predicted = slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::MultiMatrix { set: 3 })
+            / slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::ColumnTiles);
+        assert_eq!(solo_passes as f64 / fused.passes as f64, predicted);
+    }
+
+    #[test]
+    fn sweep_monotone_in_head_size() {
+        let rows = qkv_sweep(32, &[32, 64, 128, 256]);
+        for w in rows.windows(2) {
+            assert!(w[1].column >= w[0].column);
+        }
+        // wide heads saturate even without set fusion
+        assert_eq!(rows.last().unwrap().column, 1.0);
+    }
+}

@@ -1,0 +1,199 @@
+//! The ADiP array model (paper §IV).
+
+use anyhow::{ensure, Result};
+
+use super::array::{ArchConfig, Architecture, SystolicArray, TilePass};
+use super::column_unit::SharedColumnUnit;
+use super::cycle_sim::simulate_adip_tile;
+use super::pe::PeConfig;
+use crate::dataflow::{deinterleave_tile, InterleavedTile, Mat};
+use crate::quant::PrecisionMode;
+
+/// `N×N` reconfigurable PEs + shared column units, diagonal dataflow.
+#[derive(Debug, Clone)]
+pub struct AdipArray {
+    cfg: ArchConfig,
+    pe_cfg: PeConfig,
+    unit: SharedColumnUnit,
+}
+
+impl AdipArray {
+    /// Build an ADiP array from a configuration.
+    pub fn new(cfg: ArchConfig) -> AdipArray {
+        AdipArray {
+            cfg,
+            pe_cfg: PeConfig { multipliers: cfg.multipliers, mult_width: 2 },
+            unit: SharedColumnUnit,
+        }
+    }
+
+    /// The paper's evaluation instance (32×32, M = 16, S = 1).
+    pub fn paper_eval() -> AdipArray {
+        AdipArray::new(ArchConfig::default())
+    }
+
+    /// PE configuration in use.
+    pub fn pe_config(&self) -> PeConfig {
+        self.pe_cfg
+    }
+
+    /// Run one tile pass through the register-level cycle simulator
+    /// instead of the fast functional path (slow; used for validation and
+    /// the `--cycle-accurate` CLI flag).
+    pub fn tile_pass_cycle_accurate(
+        &self,
+        activations: &Mat,
+        weights: &InterleavedTile,
+    ) -> Result<TilePass> {
+        let res = simulate_adip_tile(activations, weights, self.pe_cfg, self.cfg.mac_stages)?;
+        Ok(TilePass {
+            outputs: res.outputs,
+            latency_cycles: res.cycles,
+            steady_cycles: self.steady_tile_cycles(weights.mode),
+        })
+    }
+}
+
+impl SystolicArray for AdipArray {
+    fn architecture(&self) -> Architecture {
+        Architecture::Adip
+    }
+
+    fn config(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    fn supports(&self, _mode: PrecisionMode) -> bool {
+        true
+    }
+
+    /// Paper Eq. (2): `N·ceil((1/M)(OW₁·OW₂/MW²)) + N + S + E − 2`.
+    fn tile_latency(&self, mode: PrecisionMode) -> u64 {
+        let n = self.cfg.n as u64;
+        n * self.pe_cfg.mode_latency(mode) + n + self.cfg.mac_stages
+            + self.unit.pipeline_stages(mode)
+            - 2
+    }
+
+    /// Steady-state initiation interval: the array accepts a new
+    /// stationary-tile pass every `N × Latency_PE` cycles (fill/drain and
+    /// the column-unit stages overlap with the next pass).
+    fn steady_tile_cycles(&self, mode: PrecisionMode) -> u64 {
+        self.cfg.n as u64 * self.pe_cfg.mode_latency(mode)
+    }
+
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass> {
+        let n = self.cfg.n;
+        ensure!(
+            activations.rows() == n && activations.cols() == n,
+            "activation tile {}x{} != array {n}x{n}",
+            activations.rows(),
+            activations.cols()
+        );
+        ensure!(
+            weights.packed.rows() == n && weights.packed.cols() == n,
+            "weight tile shape mismatch"
+        );
+        // Fast functional path: mathematically identical to the PE +
+        // column-unit + diagonal-dataflow pipeline (cross-checked against
+        // the cycle simulator in tests and by `tile_pass_cycle_accurate`).
+        // §Perf iteration 5: reuse the source tiles retained at pack time
+        // (the stationary tile is reused across all activation passes of a
+        // group; re-extracting subword fields per pass cost ~20%).
+        let computed;
+        let sources: &[Mat] = if weights.sources.len() == weights.k {
+            &weights.sources
+        } else {
+            computed = deinterleave_tile(weights);
+            &computed
+        };
+        let outputs = sources.iter().map(|w| activations.matmul(w)).collect();
+        Ok(TilePass {
+            outputs,
+            latency_cycles: self.tile_latency(weights.mode),
+            steady_cycles: self.steady_tile_cycles(weights.mode),
+        })
+    }
+
+    /// `2 · k · N²` ops per cycle at the selected design point (the Eq. (3)
+    /// numerator per steady-state cycle).
+    fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64 {
+        let n = self.cfg.n as u64;
+        2 * mode.interleave_factor() as u64 * n * n / self.pe_cfg.mode_latency(mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::testutil::{check, Rng};
+
+    fn arr(n: usize) -> AdipArray {
+        AdipArray::new(ArchConfig::with_n(n))
+    }
+
+    #[test]
+    fn eq2_latencies_at_design_point() {
+        // N=32, M=16, S=1: E = 3/2/0 for 8b/4b/2b.
+        let a = arr(32);
+        assert_eq!(a.tile_latency(PrecisionMode::W8), 32 + 32 + 1 + 3 - 2);
+        assert_eq!(a.tile_latency(PrecisionMode::W4), 32 + 32 + 1 + 2 - 2);
+        assert_eq!(a.tile_latency(PrecisionMode::W2), 32 + 32 + 1 - 2);
+        assert_eq!(a.steady_tile_cycles(PrecisionMode::W8), 32);
+    }
+
+    #[test]
+    fn peak_ops_scale_with_mode() {
+        let a = arr(64);
+        assert_eq!(a.peak_ops_per_cycle(PrecisionMode::W8), 2 * 64 * 64);
+        assert_eq!(a.peak_ops_per_cycle(PrecisionMode::W4), 4 * 64 * 64);
+        assert_eq!(a.peak_ops_per_cycle(PrecisionMode::W2), 8 * 64 * 64);
+        // 64×64 @ 1 GHz ⇒ 8.192 / 16.384 / 32.768 TOPS (paper abstract).
+        assert_eq!(a.peak_ops_per_cycle(PrecisionMode::W8) * 1_000_000_000, 8_192_000_000_000);
+    }
+
+    #[test]
+    fn fast_path_equals_cycle_simulator() {
+        check(
+            "adip-fast-vs-cycle",
+            301,
+            8,
+            |rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let k = 1 + rng.below(mode.interleave_factor());
+                let n = 2 + rng.below(7);
+                let a = Mat::random(rng, n, n, 8);
+                let tiles: Vec<Mat> =
+                    (0..k).map(|_| Mat::random(rng, n, n, mode.weight_bits())).collect();
+                let refs: Vec<&Mat> = tiles.iter().collect();
+                let it = interleave_tiles(&refs, mode).unwrap();
+                (n, a, it)
+            },
+            |(n, a, it)| {
+                let array = arr(*n);
+                let fast = array.tile_pass(a, it).map_err(|e| e.to_string())?;
+                let slow = array.tile_pass_cycle_accurate(a, it).map_err(|e| e.to_string())?;
+                if fast.outputs != slow.outputs {
+                    return Err("functional path != cycle simulator".into());
+                }
+                if fast.latency_cycles != slow.latency_cycles {
+                    return Err(format!(
+                        "latency mismatch: eq2 {} vs simulated {}",
+                        fast.latency_cycles, slow.latency_cycles
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_tile_shapes() {
+        let array = arr(8);
+        let a = Mat::zeros(4, 4);
+        let w = Mat::zeros(4, 4);
+        let it = interleave_tiles(&[&w], PrecisionMode::W8).unwrap();
+        assert!(array.tile_pass(&a, &it).is_err());
+    }
+}

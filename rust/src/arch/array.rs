@@ -1,0 +1,176 @@
+//! The common systolic-array abstraction shared by ADiP / DiP / WS.
+
+use anyhow::Result;
+
+use crate::dataflow::{InterleavedTile, Mat};
+use crate::quant::PrecisionMode;
+
+/// Which architecture a model instance represents (used by reports,
+/// the power model and the simulator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Architecture {
+    /// Conventional weight-stationary array with input/output sync FIFOs.
+    Ws,
+    /// DiP: diagonal-input-movement array, INT8 PEs [34].
+    Dip,
+    /// ADiP: DiP dataflow + reconfigurable adaptive-precision PEs.
+    Adip,
+}
+
+impl Architecture {
+    /// All architectures, in the paper's comparison order.
+    pub const ALL: [Architecture; 3] = [Architecture::Ws, Architecture::Dip, Architecture::Adip];
+
+    /// Display name used in tables.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Architecture::Ws => "WS",
+            Architecture::Dip => "DiP",
+            Architecture::Adip => "ADiP",
+        }
+    }
+}
+
+impl std::fmt::Display for Architecture {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Array-level static configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArchConfig {
+    /// PEs per row/column (`N`).
+    pub n: usize,
+    /// 2-bit multipliers per reconfigurable PE (`M`, ADiP only).
+    pub multipliers: u32,
+    /// MAC pipeline stages (`S` of Eq. (2)).
+    pub mac_stages: u64,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        // The paper's workload evaluation point is 32×32 with the selected
+        // 16-multiplier PE and single-stage MACs.
+        ArchConfig { n: 32, multipliers: 16, mac_stages: 1 }
+    }
+}
+
+impl ArchConfig {
+    /// Convenience constructor for an `n × n` array.
+    pub fn with_n(n: usize) -> ArchConfig {
+        ArchConfig { n, ..ArchConfig::default() }
+    }
+}
+
+/// Result of one stationary-tile pass: `k` output psum tiles (one per
+/// interleaved weight matrix) plus the cycle cost of the pass.
+#[derive(Debug, Clone)]
+pub struct TilePass {
+    /// One `N×N` psum tile per source weight matrix.
+    pub outputs: Vec<Mat>,
+    /// Total latency of the pass in cycles (fill + stream + drain).
+    pub latency_cycles: u64,
+    /// Cycles between back-to-back passes in steady state (initiation
+    /// interval; fill/drain amortized).
+    pub steady_cycles: u64,
+}
+
+/// Common interface of the three array models.
+pub trait SystolicArray {
+    /// Which architecture this is.
+    fn architecture(&self) -> Architecture;
+
+    /// Static configuration.
+    fn config(&self) -> &ArchConfig;
+
+    /// `N` (PEs per row/column).
+    fn n(&self) -> usize {
+        self.config().n
+    }
+
+    /// Whether the array can execute a mode natively. DiP/WS only run
+    /// 8b×8b (narrower weights are zero-extended to 8-bit with no gain).
+    fn supports(&self, mode: PrecisionMode) -> bool;
+
+    /// Single-tile latency in cycles for a mode — the paper's Eq. (2) for
+    /// ADiP and the DiP-paper equivalents for DiP/WS.
+    fn tile_latency(&self, mode: PrecisionMode) -> u64;
+
+    /// Steady-state initiation interval between tile passes (cycles).
+    fn steady_tile_cycles(&self, mode: PrecisionMode) -> u64;
+
+    /// Functional + timed execution of one stationary-tile pass:
+    /// `activations (N×N, int8)` × `stationary interleaved tile` → `k`
+    /// psum tiles. Must be bit-exact with the reference GEMM per source.
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass>;
+
+    /// Peak throughput in ops/cycle (2 ops per MAC) at a mode.
+    fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64;
+}
+
+impl<T: SystolicArray + ?Sized> SystolicArray for Box<T> {
+    fn architecture(&self) -> Architecture {
+        (**self).architecture()
+    }
+    fn config(&self) -> &ArchConfig {
+        (**self).config()
+    }
+    fn supports(&self, mode: PrecisionMode) -> bool {
+        (**self).supports(mode)
+    }
+    fn tile_latency(&self, mode: PrecisionMode) -> u64 {
+        (**self).tile_latency(mode)
+    }
+    fn steady_tile_cycles(&self, mode: PrecisionMode) -> u64 {
+        (**self).steady_tile_cycles(mode)
+    }
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass> {
+        (**self).tile_pass(activations, weights)
+    }
+    fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64 {
+        (**self).peak_ops_per_cycle(mode)
+    }
+}
+
+/// Build an array model by architecture tag.
+pub fn build_array(arch: Architecture, cfg: ArchConfig) -> Box<dyn SystolicArray + Send> {
+    match arch {
+        Architecture::Ws => Box::new(super::WsArray::new(cfg)),
+        Architecture::Dip => Box::new(super::DipArray::new(cfg)),
+        Architecture::Adip => Box::new(super::AdipArray::new(cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boxed_arrays_dispatch() {
+        for arch in Architecture::ALL {
+            let arr = build_array(arch, ArchConfig::with_n(8));
+            assert_eq!(arr.architecture(), arch);
+            assert_eq!(arr.n(), 8);
+            assert!(arr.peak_ops_per_cycle(PrecisionMode::W8) > 0);
+        }
+    }
+
+    #[test]
+    fn architecture_names() {
+        assert_eq!(Architecture::Ws.name(), "WS");
+        assert_eq!(Architecture::Dip.to_string(), "DiP");
+        assert_eq!(Architecture::Adip.to_string(), "ADiP");
+        assert_eq!(Architecture::ALL.len(), 3);
+    }
+
+    #[test]
+    fn default_config_is_paper_eval_point() {
+        let c = ArchConfig::default();
+        assert_eq!(c.n, 32);
+        assert_eq!(c.multipliers, 16);
+        assert_eq!(c.mac_stages, 1);
+        assert_eq!(ArchConfig::with_n(64).n, 64);
+        assert_eq!(ArchConfig::with_n(64).multipliers, 16);
+    }
+}

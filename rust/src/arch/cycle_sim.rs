@@ -1,0 +1,412 @@
+//! Register-level cycle simulation of the three dataflows.
+//!
+//! These simulators move values through explicit per-cycle registers —
+//! input registers, psum buses, stationary weight registers — exactly as
+//! the RTL would, and are the ground truth the fast functional tile path
+//! and the analytical latency models are validated against:
+//!
+//! * **DiP/ADiP** ([`simulate_adip_tile`], [`simulate_dip_tile`]):
+//!   activations enter the top row *unskewed* (no input FIFOs), move
+//!   diagonally (down one row, **left one column**, wrapping at the
+//!   boundary: the leftmost column feeds the rightmost column of the next
+//!   row — Fig. 3(c)); weights are stationary and column-rotation
+//!   *permuted* ([`crate::dataflow::permute_dip`]); psums travel down the
+//!   columns. Output row `w` of every result tile leaves the bottom of the
+//!   array — already de-skewed, eliminating output FIFOs.
+//! * **WS** ([`simulate_ws_tile`]): the conventional weight-stationary
+//!   baseline — activations enter from the left edge *skewed by their row
+//!   index* (the input sync FIFOs), move right; psums move down; outputs
+//!   drain skewed (the output sync FIFOs).
+//!
+//! Measured latencies reproduce Eq. (2) (and the WS/DiP equivalents in
+//! [`crate::analytical`]) cycle-for-cycle — asserted in the tests.
+
+use anyhow::{ensure, Result};
+
+use super::column_unit::SharedColumnUnit;
+use super::pe::{DipPe, PeConfig, ReconfigurablePe};
+use crate::dataflow::{permute_dip, InterleavedTile, Mat};
+
+/// Outputs + measured cycle count of one simulated tile pass.
+#[derive(Debug, Clone)]
+pub struct CycleSimResult {
+    /// One `N×N` output tile per interleaved weight matrix.
+    pub outputs: Vec<Mat>,
+    /// Cycles from the first activation row entering to the last result
+    /// leaving (including MAC pipeline and column-unit stages).
+    pub cycles: u64,
+}
+
+/// Simulate one ADiP stationary-tile pass at register level.
+///
+/// `activations` is the `N×N` int8 tile (row `w` enters at cycle `w`);
+/// `weights` is the *unpermuted* interleaved tile — the simulator applies
+/// the DiP permutation while loading, as the preprocessing step would.
+/// `mac_stages` is `S` of Eq. (2) (modeled as a constant pipeline delay).
+pub fn simulate_adip_tile(
+    activations: &Mat,
+    weights: &InterleavedTile,
+    pe_cfg: PeConfig,
+    mac_stages: u64,
+) -> Result<CycleSimResult> {
+    let n = activations.rows();
+    ensure!(n == activations.cols(), "activation tile must be square");
+    ensure!(
+        weights.packed.rows() == n && weights.packed.cols() == n,
+        "weight tile {}x{} != activation {n}x{n}",
+        weights.packed.rows(),
+        weights.packed.cols()
+    );
+    let mode = weights.mode;
+    ensure!(
+        pe_cfg.mode_latency(mode) == 1,
+        "cycle simulator models the selected design point (PE latency 1); \
+         M={} gives latency {}",
+        pe_cfg.multipliers,
+        pe_cfg.mode_latency(mode)
+    );
+
+    // Load stationary weights (permuted, as the dataflow preprocessing does).
+    let permuted = permute_dip(&weights.packed);
+    let mut pes: Vec<ReconfigurablePe> = Vec::with_capacity(n * n);
+    for r in 0..n {
+        for c in 0..n {
+            let mut pe = ReconfigurablePe::new(pe_cfg, mode);
+            pe.load_weight(permuted.get(r, c) as u8, mode);
+            pes.push(pe);
+        }
+    }
+    let unit = SharedColumnUnit;
+
+    // Registers. `in_reg[r][c]`: activation being used by PE (r,c) this
+    // cycle. `psum_reg[r][c]`: 4-lane psum leaving row r at column c.
+    let mut in_reg = vec![0i32; n * n];
+    let mut in_valid = vec![false; n * n];
+    let mut psum_reg = vec![[0i64; 4]; n * n];
+
+    let k = weights.k;
+    let mut outputs = vec![Mat::zeros(n, n); k];
+    let total_beats = 2 * n - 1;
+
+    // §Perf iteration 3: double-buffered register files allocated once
+    // (no per-beat Vec allocation) and swapped each beat.
+    let mut next_in = vec![0i32; n * n];
+    let mut next_valid = vec![false; n * n];
+    let mut next_psum = vec![[0i64; 4]; n * n];
+
+    for t in 0..total_beats {
+        // Next-state input registers: diagonal movement (down-left, wrap).
+        for c in 0..n {
+            if t < n {
+                next_in[c] = activations.get(t, c);
+                next_valid[c] = true;
+            } else {
+                next_valid[c] = false;
+            }
+        }
+        for r in 1..n {
+            for c in 0..n {
+                let src = (r - 1) * n + (c + 1) % n;
+                next_in[r * n + c] = in_reg[src];
+                next_valid[r * n + c] = in_valid[src];
+            }
+        }
+
+        // Next-state psum registers: each PE adds its contribution to the
+        // psum arriving from the row above (wavefront-consistent: both were
+        // registered last cycle).
+        for r in 0..n {
+            for c in 0..n {
+                let idx = r * n + c;
+                let above = if r > 0 { psum_reg[(r - 1) * n + c] } else { [0i64; 4] };
+                let contrib = if next_valid[idx] {
+                    pes[idx].compute(next_in[idx])
+                } else {
+                    [0i64; 4]
+                };
+                for lane in 0..4 {
+                    next_psum[idx][lane] = above[lane] + contrib[lane];
+                }
+            }
+        }
+
+        std::mem::swap(&mut in_reg, &mut next_in);
+        std::mem::swap(&mut in_valid, &mut next_valid);
+        std::mem::swap(&mut psum_reg, &mut next_psum);
+
+        // Bottom-row psums completed wavefront `w = t - (n-1)` this cycle:
+        // feed the shared column units.
+        if t + 1 >= n {
+            let w = t + 1 - n;
+            if w < n {
+                for c in 0..n {
+                    let outs = unit.combine(mode, psum_reg[(n - 1) * n + c]);
+                    for (s, &v) in outs.iter().enumerate().take(k) {
+                        outputs[s].set(
+                            w,
+                            c,
+                            i32::try_from(v).expect("psum overflow beyond i32"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    // Constant pipeline delays: extra MAC stages + the shared column unit.
+    let cycles = total_beats as u64 + (mac_stages - 1) + unit.pipeline_stages(mode);
+    Ok(CycleSimResult { outputs, cycles })
+}
+
+/// Simulate one DiP stationary-tile pass (INT8 PEs, single psum lane).
+pub fn simulate_dip_tile(activations: &Mat, weights: &Mat, mac_stages: u64) -> Result<CycleSimResult> {
+    let n = activations.rows();
+    ensure!(n == activations.cols(), "activation tile must be square");
+    ensure!(weights.rows() == n && weights.cols() == n, "weight tile shape mismatch");
+
+    let permuted = permute_dip(weights);
+    let mut pes: Vec<DipPe> = vec![DipPe::default(); n * n];
+    for r in 0..n {
+        for c in 0..n {
+            pes[r * n + c].load_weight(permuted.get(r, c));
+        }
+    }
+
+    let mut in_reg = vec![0i32; n * n];
+    let mut in_valid = vec![false; n * n];
+    let mut psum_reg = vec![0i64; n * n];
+    let mut output = Mat::zeros(n, n);
+    let total_beats = 2 * n - 1;
+
+    for t in 0..total_beats {
+        let mut next_in = vec![0i32; n * n];
+        let mut next_valid = vec![false; n * n];
+        for c in 0..n {
+            if t < n {
+                next_in[c] = activations.get(t, c);
+                next_valid[c] = true;
+            }
+        }
+        for r in 1..n {
+            for c in 0..n {
+                let src = (r - 1) * n + (c + 1) % n;
+                next_in[r * n + c] = in_reg[src];
+                next_valid[r * n + c] = in_valid[src];
+            }
+        }
+        let mut next_psum = vec![0i64; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                let idx = r * n + c;
+                let above = if r > 0 { psum_reg[(r - 1) * n + c] } else { 0 };
+                let contrib =
+                    if next_valid[idx] { pes[idx].compute(next_in[idx]) } else { 0 };
+                next_psum[idx] = above + contrib;
+            }
+        }
+        in_reg = next_in;
+        in_valid = next_valid;
+        psum_reg = next_psum;
+
+        if t + 1 >= n {
+            let w = t + 1 - n;
+            if w < n {
+                for c in 0..n {
+                    output.set(
+                        w,
+                        c,
+                        i32::try_from(psum_reg[(n - 1) * n + c]).expect("psum overflow"),
+                    );
+                }
+            }
+        }
+    }
+
+    let cycles = total_beats as u64 + (mac_stages - 1);
+    Ok(CycleSimResult { outputs: vec![output], cycles })
+}
+
+/// Simulate one conventional weight-stationary tile pass, including the
+/// input-skew and output-deskew behaviour the sync FIFOs provide.
+pub fn simulate_ws_tile(activations: &Mat, weights: &Mat, mac_stages: u64) -> Result<CycleSimResult> {
+    let n = activations.rows();
+    ensure!(n == activations.cols(), "activation tile must be square");
+    ensure!(weights.rows() == n && weights.cols() == n, "weight tile shape mismatch");
+
+    // Weights stationary, unpermuted: PE (r, c) holds W[r][c].
+    let mut in_reg = vec![0i32; n * n];
+    let mut in_valid = vec![false; n * n];
+    let mut psum_reg = vec![0i64; n * n];
+    let mut output = Mat::zeros(n, n);
+    // A[i][r] enters row r (left edge) at cycle i + r (input FIFO skew);
+    // C[i][c] leaves the bottom of column c at cycle i + c + n - 1.
+    let total_beats = 3 * n - 2;
+
+    for t in 0..total_beats {
+        let mut next_in = vec![0i32; n * n];
+        let mut next_valid = vec![false; n * n];
+        for r in 0..n {
+            // left-edge injection, skewed by row index
+            if t >= r && t - r < n {
+                next_in[r * n] = activations.get(t - r, r);
+                next_valid[r * n] = true;
+            }
+            for c in 1..n {
+                next_in[r * n + c] = in_reg[r * n + c - 1];
+                next_valid[r * n + c] = in_valid[r * n + c - 1];
+            }
+        }
+        let mut next_psum = vec![0i64; n * n];
+        for r in 0..n {
+            for c in 0..n {
+                let idx = r * n + c;
+                let above = if r > 0 { psum_reg[(r - 1) * n + c] } else { 0 };
+                let contrib = if next_valid[idx] {
+                    next_in[idx] as i64 * weights.get(r, c) as i64
+                } else {
+                    0
+                };
+                next_psum[idx] = above + contrib;
+            }
+        }
+        in_reg = next_in;
+        in_valid = next_valid;
+        psum_reg = next_psum;
+
+        // C[i][c] completes at the bottom of column c at cycle i + c + n - 1
+        // (0-based beat t = i + c + n - 1).
+        if t + 1 >= n {
+            for c in 0..n {
+                let stamp = t + 1 - n; // i + c
+                if stamp >= c && stamp - c < n {
+                    let i = stamp - c;
+                    output.set(
+                        i,
+                        c,
+                        i32::try_from(psum_reg[(n - 1) * n + c]).expect("psum overflow"),
+                    );
+                }
+            }
+        }
+    }
+
+    let cycles = total_beats as u64 + (mac_stages - 1);
+    Ok(CycleSimResult { outputs: vec![output], cycles })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::testutil::{check, Rng};
+    use crate::quant::PrecisionMode;
+
+    fn random_interleaved(rng: &mut Rng, n: usize, mode: PrecisionMode, k: usize) -> (Vec<Mat>, InterleavedTile) {
+        let tiles: Vec<Mat> = (0..k).map(|_| Mat::random(rng, n, n, mode.weight_bits())).collect();
+        let refs: Vec<&Mat> = tiles.iter().collect();
+        let it = interleave_tiles(&refs, mode).unwrap();
+        (tiles, it)
+    }
+
+    #[test]
+    fn adip_8x8_matches_reference_gemm() {
+        let mut rng = Rng::seeded(201);
+        let n = 8;
+        let a = Mat::random(&mut rng, n, n, 8);
+        let (tiles, it) = random_interleaved(&mut rng, n, PrecisionMode::W8, 1);
+        let res = simulate_adip_tile(&a, &it, PeConfig::default(), 1).unwrap();
+        assert_eq!(res.outputs.len(), 1);
+        assert_eq!(res.outputs[0], a.matmul(&tiles[0]));
+    }
+
+    #[test]
+    fn adip_multi_matrix_modes_match_reference() {
+        check(
+            "cycle-sim-adip",
+            203,
+            12,
+            |rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let k = 1 + rng.below(mode.interleave_factor());
+                let n = 2 + rng.below(7);
+                let a = Mat::random(rng, n, n, 8);
+                let (tiles, it) = random_interleaved(rng, n, mode, k);
+                (a, tiles, it)
+            },
+            |(a, tiles, it)| {
+                let res = simulate_adip_tile(a, it, PeConfig::default(), 1)
+                    .map_err(|e| e.to_string())?;
+                for (s, t) in tiles.iter().enumerate() {
+                    if res.outputs[s] != a.matmul(t) {
+                        return Err(format!("source {s} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn adip_measured_cycles_match_eq2() {
+        // Eq. (2) with PE latency 1: N + N + S + E − 2.
+        let mut rng = Rng::seeded(205);
+        for n in [2usize, 4, 8, 16] {
+            for mode in PrecisionMode::ALL {
+                let a = Mat::random(&mut rng, n, n, 8);
+                let (_, it) = random_interleaved(&mut rng, n, mode, mode.interleave_factor());
+                let s = 1u64;
+                let res = simulate_adip_tile(&a, &it, PeConfig::default(), s).unwrap();
+                let e = SharedColumnUnit.pipeline_stages(mode);
+                let eq2 = n as u64 + n as u64 + s + e - 2;
+                assert_eq!(res.cycles, eq2, "n={n} mode={mode}");
+            }
+        }
+    }
+
+    #[test]
+    fn dip_matches_reference_and_latency() {
+        let mut rng = Rng::seeded(207);
+        for n in [3usize, 8, 16] {
+            let a = Mat::random(&mut rng, n, n, 8);
+            let w = Mat::random(&mut rng, n, n, 8);
+            let res = simulate_dip_tile(&a, &w, 1).unwrap();
+            assert_eq!(res.outputs[0], a.matmul(&w), "n={n}");
+            assert_eq!(res.cycles, 2 * n as u64 - 1, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ws_matches_reference_and_latency() {
+        let mut rng = Rng::seeded(209);
+        for n in [2usize, 5, 8, 16] {
+            let a = Mat::random(&mut rng, n, n, 8);
+            let w = Mat::random(&mut rng, n, n, 8);
+            let res = simulate_ws_tile(&a, &w, 1).unwrap();
+            assert_eq!(res.outputs[0], a.matmul(&w), "n={n}");
+            assert_eq!(res.cycles, 3 * n as u64 - 2, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ws_needs_more_cycles_than_dip() {
+        // The FIFO-less diagonal dataflow saves N−1 cycles per tile.
+        let mut rng = Rng::seeded(211);
+        let n = 16;
+        let a = Mat::random(&mut rng, n, n, 8);
+        let w = Mat::random(&mut rng, n, n, 8);
+        let dip = simulate_dip_tile(&a, &w, 1).unwrap();
+        let ws = simulate_ws_tile(&a, &w, 1).unwrap();
+        assert_eq!(ws.cycles - dip.cycles, n as u64 - 1);
+        assert_eq!(dip.outputs[0], ws.outputs[0]);
+    }
+
+    #[test]
+    fn rejects_bad_shapes_and_slow_pe() {
+        let a = Mat::zeros(4, 4);
+        let (_, it) = random_interleaved(&mut Rng::seeded(1), 4, PrecisionMode::W8, 1);
+        let bad = Mat::zeros(4, 5);
+        assert!(simulate_dip_tile(&bad, &a, 1).is_err());
+        let slow = PeConfig { multipliers: 2, mult_width: 2 };
+        assert!(simulate_adip_tile(&a, &it, slow, 1).is_err());
+    }
+}

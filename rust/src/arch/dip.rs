@@ -1,0 +1,140 @@
+//! The DiP baseline array model [34]: diagonal dataflow, INT8 PEs.
+//!
+//! DiP is ADiP's starting point — same FIFO-less diagonal input movement
+//! and stationary weights, but with conventional INT8 MAC PEs: every mode
+//! runs at 8b×8b cost and only one weight matrix can be stationary at a
+//! time (no interleaving, no shared shifters needed).
+
+use anyhow::{ensure, Result};
+
+use super::array::{ArchConfig, Architecture, SystolicArray, TilePass};
+use super::cycle_sim::simulate_dip_tile;
+use crate::dataflow::{InterleavedTile, Mat};
+use crate::quant::PrecisionMode;
+
+/// `N×N` INT8 PEs with the DiP dataflow.
+#[derive(Debug, Clone)]
+pub struct DipArray {
+    cfg: ArchConfig,
+}
+
+impl DipArray {
+    /// Build a DiP array.
+    pub fn new(cfg: ArchConfig) -> DipArray {
+        DipArray { cfg }
+    }
+
+    /// Register-level simulation of a tile pass (validation path).
+    pub fn tile_pass_cycle_accurate(&self, activations: &Mat, weights: &Mat) -> Result<TilePass> {
+        let res = simulate_dip_tile(activations, weights, self.cfg.mac_stages)?;
+        Ok(TilePass {
+            outputs: res.outputs,
+            latency_cycles: res.cycles,
+            steady_cycles: self.steady_tile_cycles(PrecisionMode::W8),
+        })
+    }
+}
+
+impl SystolicArray for DipArray {
+    fn architecture(&self) -> Architecture {
+        Architecture::Dip
+    }
+
+    fn config(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// DiP executes everything as 8b×8b; narrower weights gain nothing.
+    fn supports(&self, mode: PrecisionMode) -> bool {
+        mode == PrecisionMode::W8
+    }
+
+    /// DiP-paper single-tile latency: `2N + S − 2` (N compute rows + N
+    /// streaming rows, no external shift/add unit).
+    fn tile_latency(&self, _mode: PrecisionMode) -> u64 {
+        2 * self.cfg.n as u64 + self.cfg.mac_stages - 2
+    }
+
+    /// One new tile pass every `N` cycles in steady state.
+    fn steady_tile_cycles(&self, _mode: PrecisionMode) -> u64 {
+        self.cfg.n as u64
+    }
+
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass> {
+        let n = self.cfg.n;
+        ensure!(
+            weights.mode == PrecisionMode::W8 && weights.k == 1,
+            "DiP holds a single 8-bit weight matrix (got {} × {})",
+            weights.k,
+            weights.mode
+        );
+        ensure!(
+            activations.rows() == n && activations.cols() == n,
+            "activation tile {}x{} != array {n}x{n}",
+            activations.rows(),
+            activations.cols()
+        );
+        ensure!(
+            weights.packed.rows() == n && weights.packed.cols() == n,
+            "weight tile shape mismatch"
+        );
+        // In W8/k=1 the packed tile stores the raw bytes of the weight
+        // matrix; reinterpret as signed.
+        let w = Mat::from_fn(n, n, |r, c| (weights.packed.get(r, c) as u8) as i8 as i32);
+        Ok(TilePass {
+            outputs: vec![activations.matmul(&w)],
+            latency_cycles: self.tile_latency(PrecisionMode::W8),
+            steady_cycles: self.steady_tile_cycles(PrecisionMode::W8),
+        })
+    }
+
+    fn peak_ops_per_cycle(&self, _mode: PrecisionMode) -> u64 {
+        let n = self.cfg.n as u64;
+        2 * n * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn latencies() {
+        let d = DipArray::new(ArchConfig::with_n(32));
+        assert_eq!(d.tile_latency(PrecisionMode::W8), 63);
+        assert_eq!(d.steady_tile_cycles(PrecisionMode::W8), 32);
+        // 64×64 DiP @ 1 GHz = 8.192 TOPS (Table II).
+        let big = DipArray::new(ArchConfig::with_n(64));
+        assert_eq!(big.peak_ops_per_cycle(PrecisionMode::W8), 8192);
+    }
+
+    #[test]
+    fn functional_matches_cycle_sim() {
+        let mut rng = Rng::seeded(401);
+        let n = 8;
+        let d = DipArray::new(ArchConfig::with_n(n));
+        let a = Mat::random(&mut rng, n, n, 8);
+        let w = Mat::random(&mut rng, n, n, 8);
+        let it = interleave_tiles(&[&w], PrecisionMode::W8).unwrap();
+        let fast = d.tile_pass(&a, &it).unwrap();
+        let slow = d.tile_pass_cycle_accurate(&a, &w).unwrap();
+        assert_eq!(fast.outputs, slow.outputs);
+        assert_eq!(fast.latency_cycles, slow.latency_cycles);
+        assert_eq!(fast.outputs[0], a.matmul(&w));
+    }
+
+    #[test]
+    fn rejects_multi_matrix_tiles() {
+        let n = 4;
+        let d = DipArray::new(ArchConfig::with_n(n));
+        let a = Mat::zeros(n, n);
+        let w0 = Mat::zeros(n, n);
+        let w1 = Mat::zeros(n, n);
+        let it = interleave_tiles(&[&w0, &w1], PrecisionMode::W4).unwrap();
+        assert!(d.tile_pass(&a, &it).is_err());
+        assert!(!d.supports(PrecisionMode::W4));
+        assert!(d.supports(PrecisionMode::W8));
+    }
+}

@@ -1,0 +1,30 @@
+//! Hardware models of the reconfigurable PE, the shared shifter/accumulator
+//! column unit, and the three systolic arrays the paper evaluates
+//! (ADiP, DiP, conventional weight-stationary).
+//!
+//! Two modeling depths are provided and cross-checked against each other:
+//!
+//! * **Functional tile path** — [`SystolicArray::tile_matmul`]: the exact
+//!   integer arithmetic of one stationary-tile pass (bit-exact with the
+//!   2-bit subword decomposition the PE hardware performs). This is the
+//!   hot path used by the coordinator and simulator.
+//! * **Register-level cycle simulation** — [`cycle_sim`]: a per-cycle
+//!   register-transfer model of the diagonal dataflow (input movement,
+//!   stationary weights, psum buses, shared column units). It demonstrates
+//!   that the FIFO-less dataflow really produces the GEMM, and that the
+//!   measured cycle counts equal the paper's Eq. (2).
+
+pub mod adip;
+pub mod array;
+pub mod column_unit;
+pub mod cycle_sim;
+pub mod dip;
+pub mod pe;
+pub mod ws;
+
+pub use adip::AdipArray;
+pub use array::{build_array, ArchConfig, Architecture, SystolicArray, TilePass};
+pub use column_unit::SharedColumnUnit;
+pub use dip::DipArray;
+pub use pe::{DipPe, PeConfig, ReconfigurablePe};
+pub use ws::WsArray;

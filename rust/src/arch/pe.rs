@@ -1,0 +1,314 @@
+//! Processing-element models.
+//!
+//! [`ReconfigurablePe`] is the ADiP PE of paper §III / Fig. 3(a): sixteen
+//! 2-bit multipliers arranged in four groups, four group (psum)
+//! accumulators, and enabled registers for the stationary weight, the
+//! input activation and the psums. The shifters and final accumulators are
+//! **not** in the PE — they are shared per column ([`super::column_unit`]).
+//!
+//! Group `g` multiplies the full 8-bit activation (as four radix-4
+//! subwords) by 2-bit weight subword `g` of the packed stationary byte.
+//! Which subwords belong to which logical weight matrix depends on the
+//! precision mode:
+//!
+//! * 8b×8b — all four groups hold one 8-bit weight; column unit combines
+//!   `g0 + (g1≪2) + (g2≪4) + (g3≪6)`.
+//! * 8b×4b — groups {0,1} = matrix 0, groups {2,3} = matrix 1; the column
+//!   unit combines each pair with one shift.
+//! * 8b×2b — group `g` = matrix `g`; psums pass through unshifted.
+//!
+//! [`DipPe`] is the DiP baseline PE [34]: a plain INT8 MAC.
+
+use crate::quant::{types::value_range, PrecisionMode};
+
+/// Static PE configuration: number of 2-bit multipliers `M` and multiplier
+/// operand width `MW` (paper Eq. (1)). The selected ADiP design point is
+/// `M = 16, MW = 2`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeConfig {
+    /// Number of 2-bit multipliers instantiated (`M`).
+    pub multipliers: u32,
+    /// Operand width of each multiplier in bits (`MW`).
+    pub mult_width: u32,
+}
+
+impl Default for PeConfig {
+    fn default() -> Self {
+        PeConfig { multipliers: 16, mult_width: 2 }
+    }
+}
+
+impl PeConfig {
+    /// Paper Eq. (1): cycles for one MAC at the given operand widths.
+    ///
+    /// `Latency_PE = ceil( (1/M) · (OW₁·OW₂ / MW²) )`
+    pub fn latency_cycles(&self, ow1: u32, ow2: u32) -> u64 {
+        let subword_products = (ow1 * ow2) as u64;
+        let per_cycle = (self.multipliers * self.mult_width * self.mult_width) as u64;
+        subword_products.div_ceil(per_cycle)
+    }
+
+    /// Eq. (1) specialized to a precision mode (activations 8-bit).
+    pub fn mode_latency(&self, mode: PrecisionMode) -> u64 {
+        self.latency_cycles(mode.act_bits(), mode.weight_bits())
+    }
+}
+
+/// One cycle's worth of PE output: the four group psum contributions
+/// (before column shifting/accumulation).
+pub type GroupPsums = [i64; 4];
+
+/// The ADiP reconfigurable PE (bit-exact functional model).
+#[derive(Debug, Clone)]
+pub struct ReconfigurablePe {
+    cfg: PeConfig,
+    /// Stationary packed weight byte (the “weight register”).
+    weight: u8,
+    mode: PrecisionMode,
+    /// Effective multiplier-group operands, resolved at weight load
+    /// (§Perf iteration 4): signed for the top subword of each logical
+    /// weight, unsigned otherwise — exactly the wiring of Fig. 3(a).
+    w_subs: [i8; 4],
+}
+
+impl ReconfigurablePe {
+    /// New PE with an all-zero stationary weight.
+    pub fn new(cfg: PeConfig, mode: PrecisionMode) -> ReconfigurablePe {
+        ReconfigurablePe { cfg, weight: 0, mode, w_subs: [0; 4] }
+    }
+
+    /// Static configuration.
+    pub fn config(&self) -> PeConfig {
+        self.cfg
+    }
+
+    /// Current precision mode.
+    pub fn mode(&self) -> PrecisionMode {
+        self.mode
+    }
+
+    /// Load the stationary weight register with a packed byte (1 × 8-bit,
+    /// 2 × 4-bit or 4 × 2-bit fields, element 0 in the low bits) and set
+    /// the mode.
+    pub fn load_weight(&mut self, packed: u8, mode: PrecisionMode) {
+        self.weight = packed;
+        self.mode = mode;
+        for g in 0..4 {
+            let raw = self.weight_subword(g);
+            self.w_subs[g] = if self.group_is_top(g) { raw as i8 } else { (raw & 0b11) as i8 };
+        }
+    }
+
+    /// Weight subword (signed 2-bit) feeding multiplier group `g`.
+    fn weight_subword(&self, g: usize) -> i32 {
+        let field = ((self.weight >> (2 * g)) & 0b11) as i32;
+        crate::quant::packing::sign_extend(field, 2)
+    }
+
+    /// Whether group `g`'s subword is the *top* (signed) subword of its
+    /// logical weight value in the current mode.
+    fn group_is_top(&self, g: usize) -> bool {
+        match self.mode {
+            PrecisionMode::W8 => g == 3,
+            PrecisionMode::W4 => g % 2 == 1,
+            PrecisionMode::W2 => true,
+        }
+    }
+
+    /// Compute one MAC term: multiply the 8-bit activation against the
+    /// packed stationary weight, producing the four group psums. Bit-exact
+    /// with the hardware: each group result is built from four 2-bit × 2-bit
+    /// subword products, shift-added over the activation subwords only
+    /// (weight-subword shifts happen in the shared column unit).
+    ///
+    /// Signedness note: the raw 2-bit field of a *non-top* subword is
+    /// unsigned (0..3); the top subword of each logical weight is signed
+    /// (−2..1). `weight_subword` always sign-extends, so non-top groups
+    /// correct by `+4` when the raw field was ≥ 2 — equivalent to reading
+    /// the field unsigned, which is what the hardware does.
+    pub fn compute(&self, activation: i32) -> GroupPsums {
+        let (lo, hi) = value_range(8);
+        assert!((lo..=hi).contains(&activation), "activation {activation} out of int8 range");
+        // §Perf iteration 2: table-driven radix-4 decomposition (no Vec
+        // allocation on the per-MAC hot path; exhaustively checked against
+        // `decompose_radix4` in quant::subword tests).
+        let a_subs = crate::quant::subword::RADIX4_I8[(activation as u8) as usize];
+        let mut out = [0i64; 4];
+        for g in 0..4 {
+            // group operand resolved at load time (signed top subword,
+            // unsigned lower subwords — see `load_weight`)
+            let w_sub = self.w_subs[g] as i32;
+            let mut acc = 0i64;
+            for (j, &aj) in a_subs.iter().enumerate() {
+                acc += (crate::quant::subword_product(aj as i32, w_sub) as i64) << (2 * j);
+            }
+            out[g] = acc;
+        }
+        out
+    }
+
+    /// Cycles this PE needs per MAC in the current mode (Eq. (1)).
+    pub fn latency(&self) -> u64 {
+        self.cfg.mode_latency(self.mode)
+    }
+}
+
+/// DiP baseline PE: one INT8 × INT8 MAC per cycle, dedicated accumulator.
+#[derive(Debug, Clone, Default)]
+pub struct DipPe {
+    weight: i32,
+}
+
+impl DipPe {
+    /// Load the stationary 8-bit weight.
+    pub fn load_weight(&mut self, w: i32) {
+        let (lo, hi) = value_range(8);
+        assert!((lo..=hi).contains(&w), "weight {w} out of int8 range");
+        self.weight = w;
+    }
+
+    /// One MAC term.
+    pub fn compute(&self, activation: i32) -> i64 {
+        let (lo, hi) = value_range(8);
+        assert!((lo..=hi).contains(&activation), "activation {activation} out of int8 range");
+        activation as i64 * self.weight as i64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::dataflow::Mat;
+    use crate::quant::{pack_int2, pack_int4};
+    use crate::testutil::{check, Rng};
+
+    /// Reference: combine group psums exactly as the shared column unit
+    /// would, returning one value per logical weight matrix.
+    fn combine(mode: PrecisionMode, g: GroupPsums) -> Vec<i64> {
+        match mode {
+            PrecisionMode::W8 => vec![g[0] + (g[1] << 2) + (g[2] << 4) + (g[3] << 6)],
+            PrecisionMode::W4 => vec![g[0] + (g[1] << 2), g[2] + (g[3] << 2)],
+            PrecisionMode::W2 => vec![g[0], g[1], g[2], g[3]],
+        }
+    }
+
+    #[test]
+    fn eq1_latency_reproduces_fig2() {
+        // Fig. 2: latency vs number of multipliers for the three modes.
+        let cases: &[(u32, PrecisionMode, u64)] = &[
+            (2, PrecisionMode::W8, 8),
+            (4, PrecisionMode::W8, 4),
+            (8, PrecisionMode::W8, 2),
+            (16, PrecisionMode::W8, 1),
+            (2, PrecisionMode::W4, 4),
+            (4, PrecisionMode::W4, 2),
+            (8, PrecisionMode::W4, 1),
+            (16, PrecisionMode::W4, 1),
+            (2, PrecisionMode::W2, 2),
+            (4, PrecisionMode::W2, 1),
+            (8, PrecisionMode::W2, 1),
+            (16, PrecisionMode::W2, 1),
+        ];
+        for &(m, mode, want) in cases {
+            let cfg = PeConfig { multipliers: m, mult_width: 2 };
+            assert_eq!(cfg.mode_latency(mode), want, "M={m} mode={mode}");
+        }
+    }
+
+    #[test]
+    fn pe_8x8_exhaustive_weights_random_acts() {
+        let mut rng = Rng::seeded(77);
+        let mut pe = ReconfigurablePe::new(PeConfig::default(), PrecisionMode::W8);
+        for w in -128i32..=127 {
+            pe.load_weight(w as u8, PrecisionMode::W8);
+            let a = rng.int_of_bits(8);
+            let got = combine(PrecisionMode::W8, pe.compute(a));
+            assert_eq!(got, vec![(a * w) as i64], "a={a} w={w}");
+        }
+    }
+
+    #[test]
+    fn pe_8x4_exhaustive_weight_pairs() {
+        let mut rng = Rng::seeded(78);
+        let mut pe = ReconfigurablePe::new(PeConfig::default(), PrecisionMode::W4);
+        for w0 in -8i32..=7 {
+            for w1 in -8i32..=7 {
+                pe.load_weight(pack_int4([w0, w1]), PrecisionMode::W4);
+                let a = rng.int_of_bits(8);
+                let got = combine(PrecisionMode::W4, pe.compute(a));
+                assert_eq!(got, vec![(a * w0) as i64, (a * w1) as i64], "a={a} w0={w0} w1={w1}");
+            }
+        }
+    }
+
+    #[test]
+    fn pe_8x2_exhaustive_weight_quads() {
+        let mut pe = ReconfigurablePe::new(PeConfig::default(), PrecisionMode::W2);
+        for a in [-128, -77, -1, 0, 1, 63, 127] {
+            for w0 in -2i32..=1 {
+                for w1 in -2i32..=1 {
+                    for w2 in -2i32..=1 {
+                        for w3 in -2i32..=1 {
+                            pe.load_weight(pack_int2([w0, w1, w2, w3]), PrecisionMode::W2);
+                            let got = combine(PrecisionMode::W2, pe.compute(a));
+                            let want: Vec<i64> =
+                                [w0, w1, w2, w3].iter().map(|&w| (a * w) as i64).collect();
+                            assert_eq!(got, want, "a={a} w={:?}", [w0, w1, w2, w3]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pe_matches_interleaved_tile_fields() {
+        // The PE reads exactly the packing convention produced by
+        // dataflow::interleave_tiles.
+        check(
+            "pe-vs-interleave",
+            79,
+            60,
+            |rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let k = mode.interleave_factor();
+                let tiles: Vec<Mat> =
+                    (0..k).map(|_| Mat::random(rng, 1, 1, mode.weight_bits())).collect();
+                let a = rng.int_of_bits(8);
+                (mode, tiles, a)
+            },
+            |(mode, tiles, a)| {
+                let refs: Vec<&Mat> = tiles.iter().collect();
+                let it = interleave_tiles(&refs, *mode).map_err(|e| e.to_string())?;
+                let mut pe = ReconfigurablePe::new(PeConfig::default(), *mode);
+                pe.load_weight(it.packed.get(0, 0) as u8, *mode);
+                let got = combine(*mode, pe.compute(*a));
+                for (s, t) in tiles.iter().enumerate() {
+                    let want = (*a as i64) * t.get(0, 0) as i64;
+                    if got[s] != want {
+                        return Err(format!("source {s}: got {} want {want}", got[s]));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn dip_pe_is_plain_mac() {
+        let mut pe = DipPe::default();
+        pe.load_weight(-100);
+        assert_eq!(pe.compute(100), -10_000);
+        assert_eq!(pe.compute(0), 0);
+    }
+
+    #[test]
+    fn latencies_via_pe_accessor() {
+        let pe = ReconfigurablePe::new(PeConfig::default(), PrecisionMode::W8);
+        assert_eq!(pe.latency(), 1);
+        assert_eq!(pe.config().multipliers, 16);
+        let slow = ReconfigurablePe::new(PeConfig { multipliers: 2, mult_width: 2 }, PrecisionMode::W8);
+        assert_eq!(slow.latency(), 8);
+    }
+}

@@ -1,0 +1,147 @@
+//! Conventional weight-stationary (WS) baseline array.
+//!
+//! The TPU-style WS array the paper (and the DiP work [34]) compares
+//! against: stationary INT8 weights, activations entering from the left
+//! edge through **input skew FIFOs**, psums accumulated down the columns,
+//! outputs drained through **output de-skew FIFOs**. The FIFOs cost area,
+//! power and latency — the `N−1` skew and `N−1` de-skew cycles around each
+//! stationary tile, plus a drain between back-to-back stationary tiles
+//! (the skewed output wavefront occupies the array while the next tile's
+//! weights load).
+
+use anyhow::{ensure, Result};
+
+use super::array::{ArchConfig, Architecture, SystolicArray, TilePass};
+use super::cycle_sim::simulate_ws_tile;
+use crate::dataflow::{InterleavedTile, Mat};
+use crate::quant::PrecisionMode;
+
+/// `N×N` INT8 weight-stationary array with sync FIFOs.
+#[derive(Debug, Clone)]
+pub struct WsArray {
+    cfg: ArchConfig,
+}
+
+impl WsArray {
+    /// Build a WS array.
+    pub fn new(cfg: ArchConfig) -> WsArray {
+        WsArray { cfg }
+    }
+
+    /// Register-level simulation of a tile pass, including the skewed
+    /// input/output movement (validation path).
+    pub fn tile_pass_cycle_accurate(&self, activations: &Mat, weights: &Mat) -> Result<TilePass> {
+        let res = simulate_ws_tile(activations, weights, self.cfg.mac_stages)?;
+        Ok(TilePass {
+            outputs: res.outputs,
+            latency_cycles: res.cycles,
+            steady_cycles: self.steady_tile_cycles(PrecisionMode::W8),
+        })
+    }
+
+    /// Depth of input + output synchronization FIFO registers the array
+    /// needs (`Σ r + Σ (N−1−c)` = `N(N−1)` total stages) — the hardware
+    /// ADiP/DiP eliminate. Consumed by the power/area model.
+    pub fn sync_fifo_registers(&self) -> usize {
+        self.cfg.n * (self.cfg.n - 1)
+    }
+}
+
+impl SystolicArray for WsArray {
+    fn architecture(&self) -> Architecture {
+        Architecture::Ws
+    }
+
+    fn config(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    /// WS executes everything as 8b×8b.
+    fn supports(&self, mode: PrecisionMode) -> bool {
+        mode == PrecisionMode::W8
+    }
+
+    /// Single-tile latency `3N + S − 3`: input skew fill (N−1) + N
+    /// streaming rows + output de-skew drain (N−1), plus extra MAC stages.
+    /// Matches the register-level simulator cycle-for-cycle.
+    fn tile_latency(&self, _mode: PrecisionMode) -> u64 {
+        3 * self.cfg.n as u64 + self.cfg.mac_stages - 3
+    }
+
+    /// Between stationary tiles the skewed drain cannot overlap the next
+    /// tile's skewed fill: `2N − 1` cycles per pass in steady state.
+    fn steady_tile_cycles(&self, _mode: PrecisionMode) -> u64 {
+        2 * self.cfg.n as u64 - 1
+    }
+
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass> {
+        let n = self.cfg.n;
+        ensure!(
+            weights.mode == PrecisionMode::W8 && weights.k == 1,
+            "WS holds a single 8-bit weight matrix"
+        );
+        ensure!(
+            activations.rows() == n && activations.cols() == n,
+            "activation tile {}x{} != array {n}x{n}",
+            activations.rows(),
+            activations.cols()
+        );
+        let w = Mat::from_fn(n, n, |r, c| (weights.packed.get(r, c) as u8) as i8 as i32);
+        Ok(TilePass {
+            outputs: vec![activations.matmul(&w)],
+            latency_cycles: self.tile_latency(PrecisionMode::W8),
+            steady_cycles: self.steady_tile_cycles(PrecisionMode::W8),
+        })
+    }
+
+    fn peak_ops_per_cycle(&self, _mode: PrecisionMode) -> u64 {
+        let n = self.cfg.n as u64;
+        2 * n * n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn latency_and_fifo_counts() {
+        let w = WsArray::new(ArchConfig::with_n(32));
+        assert_eq!(w.tile_latency(PrecisionMode::W8), 3 * 32 + 1 - 3);
+        assert_eq!(w.steady_tile_cycles(PrecisionMode::W8), 63);
+        assert_eq!(w.sync_fifo_registers(), 32 * 31);
+    }
+
+    #[test]
+    fn dip_single_tile_advantage_is_1p49x_at_32() {
+        // The DiP paper's headline: WS(3N−2) / DiP(2N−1) ≈ 1.49 at N = 32.
+        let ws = WsArray::new(ArchConfig::with_n(32));
+        let dip = super::super::DipArray::new(ArchConfig::with_n(32));
+        let ratio =
+            ws.tile_latency(PrecisionMode::W8) as f64 / dip.tile_latency(PrecisionMode::W8) as f64;
+        assert!((ratio - 1.49).abs() < 0.01, "ratio {ratio}");
+    }
+
+    #[test]
+    fn functional_matches_cycle_sim() {
+        let mut rng = Rng::seeded(501);
+        let n = 8;
+        let ws = WsArray::new(ArchConfig::with_n(n));
+        let a = Mat::random(&mut rng, n, n, 8);
+        let w = Mat::random(&mut rng, n, n, 8);
+        let it = interleave_tiles(&[&w], PrecisionMode::W8).unwrap();
+        let fast = ws.tile_pass(&a, &it).unwrap();
+        let slow = ws.tile_pass_cycle_accurate(&a, &w).unwrap();
+        assert_eq!(fast.outputs, slow.outputs);
+        assert_eq!(fast.latency_cycles, slow.latency_cycles);
+    }
+
+    #[test]
+    fn only_w8_supported() {
+        let ws = WsArray::new(ArchConfig::with_n(4));
+        assert!(ws.supports(PrecisionMode::W8));
+        assert!(!ws.supports(PrecisionMode::W2));
+    }
+}

@@ -1,0 +1,250 @@
+//! Plain-text configuration system.
+//!
+//! A minimal, dependency-free `key = value` format (serde is not in the
+//! offline crate snapshot). Sections are written as `[section]` headers and
+//! flatten into dotted keys (`section.key`). `#` starts a comment. Values
+//! are typed on read (`get_usize`, `get_f64`, `get_mode`, …) with
+//! descriptive errors carrying the key name.
+//!
+//! Every runnable (CLI, examples, benches) builds its settings from
+//! [`Config`], layered as: built-in defaults ← optional config file ←
+//! `--key=value` command-line overrides.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::quant::PrecisionMode;
+
+/// A flat, ordered key/value configuration map.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Empty configuration.
+    pub fn new() -> Config {
+        Config::default()
+    }
+
+    /// Parse from the text format described in the module docs.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("config line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            if key.is_empty() {
+                bail!("config line {}: empty key", lineno + 1);
+            }
+            cfg.entries.insert(key, v.trim().to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a config file.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Config> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config file {}", path.display()))?;
+        Config::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    /// Set a key (used for CLI overrides). Returns `self` for chaining.
+    pub fn set(&mut self, key: &str, value: impl Into<String>) -> &mut Config {
+        self.entries.insert(key.to_string(), value.into());
+        self
+    }
+
+    /// Merge `other` over `self` (other wins).
+    pub fn merge(&mut self, other: &Config) {
+        for (k, v) in &other.entries {
+            self.entries.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Raw string lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(String::as_str)
+    }
+
+    /// Required string value.
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing config key {key:?}"))
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw
+                .parse::<T>()
+                .map_err(|e| anyhow!("config key {key:?}: cannot parse {raw:?}: {e}")),
+        }
+    }
+
+    /// `usize` with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.get_or(key, default)
+    }
+
+    /// `f64` with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.get_or(key, default)
+    }
+
+    /// `bool` with default (`true/false/1/0/yes/no`).
+    pub fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => match raw.to_ascii_lowercase().as_str() {
+                "true" | "1" | "yes" | "on" => Ok(true),
+                "false" | "0" | "no" | "off" => Ok(false),
+                other => bail!("config key {key:?}: not a bool: {other:?}"),
+            },
+        }
+    }
+
+    /// Precision mode with default.
+    pub fn get_mode(&self, key: &str, default: PrecisionMode) -> Result<PrecisionMode> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(raw) => raw.parse().map_err(|e| anyhow!("config key {key:?}: {e}")),
+        }
+    }
+
+    /// Iterate entries (sorted by key).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    /// Number of entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no entries are present.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Render back to the text format (stable order; useful for dumps).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in &self.entries {
+            out.push_str(k);
+            out.push_str(" = ");
+            out.push_str(v);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Parse `--key=value` style CLI overrides into a [`Config`]; returns the
+/// remaining positional arguments.
+pub fn parse_cli_overrides<I: IntoIterator<Item = String>>(args: I) -> Result<(Config, Vec<String>)> {
+    let mut cfg = Config::new();
+    let mut positional = Vec::new();
+    for arg in args {
+        if let Some(rest) = arg.strip_prefix("--") {
+            let (k, v) = rest
+                .split_once('=')
+                .ok_or_else(|| anyhow!("flag {arg:?}: expected --key=value"))?;
+            cfg.set(k, v);
+        } else {
+            positional.push(arg);
+        }
+    }
+    Ok((cfg, positional))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+# architecture under test
+arch = adip
+[array]
+n = 32            # PEs per row/column
+multipliers = 16
+[clock]
+freq_ghz = 1.0
+";
+
+    #[test]
+    fn parse_sections_and_comments() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.get("arch"), Some("adip"));
+        assert_eq!(cfg.get_usize("array.n", 0).unwrap(), 32);
+        assert_eq!(cfg.get_usize("array.multipliers", 0).unwrap(), 16);
+        assert_eq!(cfg.get_f64("clock.freq_ghz", 0.0).unwrap(), 1.0);
+        assert_eq!(cfg.len(), 4);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let cfg = Config::parse("n = 8").unwrap();
+        assert_eq!(cfg.get_usize("n", 1).unwrap(), 8);
+        assert_eq!(cfg.get_usize("missing", 7).unwrap(), 7);
+        assert!(cfg.get_str("missing").is_err());
+        let bad = Config::parse("n = eight").unwrap();
+        let err = bad.get_usize("n", 1).unwrap_err().to_string();
+        assert!(err.contains("n"), "error should name the key: {err}");
+    }
+
+    #[test]
+    fn bools_and_modes() {
+        let cfg = Config::parse("a = yes\nb = off\nmode = 8x2").unwrap();
+        assert!(cfg.get_bool("a", false).unwrap());
+        assert!(!cfg.get_bool("b", true).unwrap());
+        assert_eq!(cfg.get_mode("mode", PrecisionMode::W8).unwrap(), PrecisionMode::W2);
+        assert_eq!(cfg.get_mode("nope", PrecisionMode::W4).unwrap(), PrecisionMode::W4);
+        assert!(Config::parse("x = maybe").unwrap().get_bool("x", true).is_err());
+    }
+
+    #[test]
+    fn merge_and_overrides() {
+        let mut base = Config::parse("n = 8\nm = 16").unwrap();
+        let (over, pos) =
+            parse_cli_overrides(vec!["--n=32".to_string(), "run".to_string()]).unwrap();
+        base.merge(&over);
+        assert_eq!(base.get_usize("n", 0).unwrap(), 32);
+        assert_eq!(base.get_usize("m", 0).unwrap(), 16);
+        assert_eq!(pos, vec!["run".to_string()]);
+    }
+
+    #[test]
+    fn render_roundtrip() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let re = Config::parse(&cfg.render()).unwrap();
+        assert_eq!(cfg, re);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Config::parse("just a line").is_err());
+        assert!(parse_cli_overrides(vec!["--novalue".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,259 @@
+//! Shared-input batcher — the asymmetric multi-matrix fusion policy.
+//!
+//! Groups pending requests that (a) share the same input operand
+//! (`input_id`), (b) selected the same precision mode, and (c) have
+//! identical GEMM shapes, into interleave sets of at most
+//! `interleave_factor` weight matrices (Fig. 5(b)–(d)). Requests that
+//! cannot be fused are emitted as singleton batches (they still benefit
+//! from adjacent-column fusion inside the scheduler).
+//!
+//! Invariants (property-tested):
+//! * every input request appears in exactly one batch,
+//! * a batch never mixes input ids, modes, shapes or act-act classes,
+//! * no batch exceeds the mode's interleave capacity.
+
+use crate::quant::PrecisionMode;
+
+use super::precision::select_mode;
+use super::request::MatmulRequest;
+
+/// A fused execution unit: indices into the submitted slice.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    /// Execution mode of the whole batch.
+    pub mode: PrecisionMode,
+    /// Member request indices (into the slice passed to [`form_batches`]).
+    pub members: Vec<usize>,
+    /// Total weight matrices across members.
+    pub matrices: usize,
+    /// Whether this batch fused ≥ 2 requests (or a multi-B request).
+    pub fused: bool,
+    /// Runtime (multi-bank) interleaving required — activation-to-
+    /// activation operands.
+    pub runtime_interleave: bool,
+}
+
+/// Fusion key: requests must agree on all fields to share a pass. The
+/// `a_ptr` field is the address of the shared input matrix — requests only
+/// fuse when they reference the *same* activation object, so an
+/// inconsistent `input_id` can never corrupt results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct Key {
+    input_id: u64,
+    a_ptr: usize,
+    mode: PrecisionMode,
+    a_rows: usize,
+    a_cols: usize,
+    b_cols: usize,
+    act_act: bool,
+}
+
+/// Form batches over a window of pending requests (order-stable greedy
+/// bin packing per fusion key).
+pub fn form_batches(reqs: &[MatmulRequest]) -> Vec<Batch> {
+    use std::collections::HashMap;
+    let mut bins: HashMap<Key, Vec<Batch>> = HashMap::new();
+    let mut order: Vec<Key> = Vec::new();
+
+    for (idx, r) in reqs.iter().enumerate() {
+        let mode = select_mode(r.weight_bits, r.act_act);
+        let key = Key {
+            input_id: r.input_id,
+            a_ptr: std::sync::Arc::as_ptr(&r.a) as usize,
+            mode,
+            a_rows: r.a.rows(),
+            a_cols: r.a.cols(),
+            b_cols: r.bs[0].cols(),
+            act_act: r.act_act,
+        };
+        let cap = mode.interleave_factor();
+        let entry = bins.entry(key).or_insert_with(|| {
+            order.push(key);
+            Vec::new()
+        });
+        // greedy: drop into the first bin with room for all of this
+        // request's matrices (requests are never split across passes)
+        let need = r.bs.len();
+        let slot = entry.iter_mut().find(|b| b.matrices + need <= cap);
+        match slot {
+            Some(b) => {
+                b.members.push(idx);
+                b.matrices += need;
+                b.fused = true;
+            }
+            None => entry.push(Batch {
+                mode,
+                members: vec![idx],
+                matrices: need,
+                fused: need > 1,
+                runtime_interleave: r.act_act,
+            }),
+        }
+    }
+
+    // stable order: keys in first-seen order, bins in creation order
+    let mut out = Vec::new();
+    for key in order {
+        out.extend(bins.remove(&key).unwrap());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Mat;
+    use crate::testutil::{check, Rng};
+    use std::sync::Arc;
+
+    fn mk_shared(
+        id: u64,
+        input_id: u64,
+        a: &Arc<Mat>,
+        bits: u32,
+        act_act: bool,
+        n_b: usize,
+    ) -> MatmulRequest {
+        let mut rng = Rng::seeded(id + 100);
+        let shape = a.rows();
+        MatmulRequest {
+            id,
+            input_id,
+            a: a.clone(),
+            bs: (0..n_b)
+                .map(|_| Arc::new(Mat::random(&mut rng, shape, shape, bits)))
+                .collect(),
+            weight_bits: bits,
+            act_act,
+            tag: String::new(),
+        }
+    }
+
+    fn mk(id: u64, input_id: u64, bits: u32, act_act: bool, n_b: usize, shape: usize) -> MatmulRequest {
+        // deterministic shared input per (input_id, shape): same Arc is
+        // required for fusion, so tests build them from a small pool
+        use std::collections::HashMap;
+        use std::sync::{Mutex, OnceLock};
+        static POOL: OnceLock<Mutex<HashMap<(u64, usize), Arc<Mat>>>> = OnceLock::new();
+        let pool = POOL.get_or_init(|| Mutex::new(HashMap::new()));
+        let a = pool
+            .lock()
+            .unwrap()
+            .entry((input_id, shape))
+            .or_insert_with(|| {
+                let mut rng = Rng::seeded(input_id * 31 + shape as u64);
+                Arc::new(Mat::random(&mut rng, shape, shape, 8))
+            })
+            .clone();
+        mk_shared(id, input_id, &a, bits, act_act, n_b)
+    }
+
+    #[test]
+    fn qkv_fuses_into_one_batch() {
+        // three 2-bit single-B requests off the same input → one 3-matrix pass
+        let reqs = vec![mk(1, 42, 2, false, 1, 8), mk(2, 42, 2, false, 1, 8), mk(3, 42, 2, false, 1, 8)];
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].members, vec![0, 1, 2]);
+        assert_eq!(batches[0].matrices, 3);
+        assert!(batches[0].fused);
+        assert_eq!(batches[0].mode, PrecisionMode::W2);
+    }
+
+    #[test]
+    fn capacity_respected() {
+        // five 2-bit requests: 4 + 1
+        let reqs: Vec<_> = (0..5).map(|i| mk(i, 9, 2, false, 1, 8)).collect();
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[0].matrices, 4);
+        assert_eq!(batches[1].matrices, 1);
+        // 4-bit capacity is 2
+        let reqs: Vec<_> = (0..3).map(|i| mk(i, 9, 4, false, 1, 8)).collect();
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn incompatible_requests_never_mix() {
+        let reqs = vec![
+            mk(1, 1, 2, false, 1, 8),  // input 1
+            mk(2, 2, 2, false, 1, 8),  // different input
+            mk(3, 1, 4, false, 1, 8),  // different mode
+            mk(4, 1, 2, true, 1, 8),   // act-act (W8)
+            mk(5, 1, 2, false, 1, 16), // different shape
+        ];
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 5, "{batches:?}");
+    }
+
+    #[test]
+    fn multi_b_requests_count_matrices() {
+        // a 3-matrix request + a 1-matrix request fit one 2-bit pass
+        let reqs = vec![mk(1, 5, 2, false, 3, 8), mk(2, 5, 2, false, 1, 8)];
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].matrices, 4);
+        // but a 2-matrix request cannot join it
+        let reqs = vec![mk(1, 5, 2, false, 3, 8), mk(2, 5, 2, false, 2, 8)];
+        let batches = form_batches(&reqs);
+        assert_eq!(batches.len(), 2);
+    }
+
+    #[test]
+    fn act_act_batches_flag_runtime_interleave() {
+        let reqs = vec![mk(1, 3, 8, true, 1, 8)];
+        let batches = form_batches(&reqs);
+        assert!(batches[0].runtime_interleave);
+        assert_eq!(batches[0].mode, PrecisionMode::W8);
+    }
+
+    #[test]
+    fn partition_property() {
+        // every request lands in exactly one batch; constraints hold
+        check(
+            "batcher-partition",
+            701,
+            40,
+            |rng| {
+                let n = 1 + rng.below(20);
+                (0..n as u64)
+                    .map(|i| {
+                        let bits = *rng.choose(&[2u32, 4, 8]);
+                        let act_act = rng.below(4) == 0;
+                        let cap = select_mode(bits, act_act).interleave_factor();
+                        mk(i, rng.below(3) as u64, bits, act_act, 1 + rng.below(cap), 8)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |reqs| {
+                let batches = form_batches(reqs);
+                let mut seen = vec![0usize; reqs.len()];
+                for b in &batches {
+                    if b.matrices > b.mode.interleave_factor() {
+                        return Err(format!("overfull batch {b:?}"));
+                    }
+                    let total: usize = b.members.iter().map(|&i| reqs[i].bs.len()).sum();
+                    if total != b.matrices {
+                        return Err("matrix count mismatch".into());
+                    }
+                    let first = &reqs[b.members[0]];
+                    for &i in &b.members {
+                        seen[i] += 1;
+                        let r = &reqs[i];
+                        if r.input_id != first.input_id
+                            || r.act_act != first.act_act
+                            || select_mode(r.weight_bits, r.act_act) != b.mode
+                        {
+                            return Err(format!("mixed batch {b:?}"));
+                        }
+                    }
+                }
+                if seen.iter().any(|&s| s != 1) {
+                    return Err(format!("not a partition: {seen:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+}

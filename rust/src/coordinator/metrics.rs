@@ -1,0 +1,240 @@
+//! Coordinator metrics: lock-free counters + Prometheus-style text dump.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Atomic f64 stored as bits (sums only; no CAS loops needed beyond add).
+#[derive(Debug, Default)]
+struct AtomicF64(AtomicU64);
+
+impl AtomicF64 {
+    fn add(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let new = f64::from_bits(cur) + v;
+            match self.0.compare_exchange_weak(
+                cur,
+                new.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Coordinator-wide metrics, shared across threads.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted into the queue.
+    pub accepted: AtomicU64,
+    /// Requests rejected by backpressure.
+    pub rejected: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests that failed validation/execution.
+    pub failed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Batches that fused ≥ 2 requests or matrices.
+    pub fused_batches: AtomicU64,
+    /// Total simulated cycles.
+    pub sim_cycles: AtomicU64,
+    /// Total stationary-tile passes.
+    pub passes: AtomicU64,
+    /// Total simulated memory traffic (paper policy bytes).
+    pub memory_bytes: AtomicU64,
+    /// Current queue depth.
+    pub queue_depth: AtomicU64,
+    sim_energy_j: AtomicF64,
+    queue_seconds: AtomicF64,
+    service_seconds: AtomicF64,
+    /// Bounded latency sample reservoir for percentile reporting:
+    /// `(queue_s, service_s)` pairs, capped at [`Metrics::MAX_SAMPLES`].
+    samples: std::sync::Mutex<Vec<(f32, f32)>>,
+}
+
+impl Metrics {
+    /// Record request completion accounting.
+    pub fn record_completion(&self, cycles: u64, energy_j: f64, memory_bytes: u64, passes: u64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
+        self.memory_bytes.fetch_add(memory_bytes, Ordering::Relaxed);
+        self.passes.fetch_add(passes, Ordering::Relaxed);
+        self.sim_energy_j.add(energy_j);
+    }
+
+    /// Cap on retained latency samples (oldest kept; enough for stable
+    /// p99 over any bench run here).
+    pub const MAX_SAMPLES: usize = 1 << 16;
+
+    /// Record host-side latencies.
+    pub fn record_latency(&self, queue_s: f64, service_s: f64) {
+        self.queue_seconds.add(queue_s);
+        self.service_seconds.add(service_s);
+        let mut samples = self.samples.lock().expect("metrics lock");
+        if samples.len() < Self::MAX_SAMPLES {
+            samples.push((queue_s as f32, service_s as f32));
+        }
+    }
+
+    /// Queue-wait percentile in seconds (`p` in 0..=100); `None` when no
+    /// samples were recorded.
+    pub fn queue_percentile(&self, p: f64) -> Option<f64> {
+        self.percentile(p, |s| s.0)
+    }
+
+    /// Service-time percentile in seconds.
+    pub fn service_percentile(&self, p: f64) -> Option<f64> {
+        self.percentile(p, |s| s.1)
+    }
+
+    fn percentile(&self, p: f64, f: impl Fn(&(f32, f32)) -> f32) -> Option<f64> {
+        assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+        let samples = self.samples.lock().expect("metrics lock");
+        if samples.is_empty() {
+            return None;
+        }
+        let mut vals: Vec<f32> = samples.iter().map(f).collect();
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (vals.len() - 1) as f64).round() as usize;
+        Some(vals[idx] as f64)
+    }
+
+    /// Total simulated energy (J).
+    pub fn energy_j(&self) -> f64 {
+        self.sim_energy_j.get()
+    }
+
+    /// Mean host queue wait (s) per completed request.
+    pub fn mean_queue_seconds(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed).max(1);
+        self.queue_seconds.get() / n as f64
+    }
+
+    /// Mean host service time (s) per completed request.
+    pub fn mean_service_seconds(&self) -> f64 {
+        let n = self.completed.load(Ordering::Relaxed).max(1);
+        self.service_seconds.get() / n as f64
+    }
+
+    /// Prometheus-style text exposition.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let c = |name: &str, v: u64| format!("adip_{name} {v}\n");
+        s.push_str(&c("requests_accepted_total", self.accepted.load(Ordering::Relaxed)));
+        s.push_str(&c("requests_rejected_total", self.rejected.load(Ordering::Relaxed)));
+        s.push_str(&c("requests_completed_total", self.completed.load(Ordering::Relaxed)));
+        s.push_str(&c("requests_failed_total", self.failed.load(Ordering::Relaxed)));
+        s.push_str(&c("batches_total", self.batches.load(Ordering::Relaxed)));
+        s.push_str(&c("batches_fused_total", self.fused_batches.load(Ordering::Relaxed)));
+        s.push_str(&c("sim_cycles_total", self.sim_cycles.load(Ordering::Relaxed)));
+        s.push_str(&c("tile_passes_total", self.passes.load(Ordering::Relaxed)));
+        s.push_str(&c("sim_memory_bytes_total", self.memory_bytes.load(Ordering::Relaxed)));
+        s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
+        s.push_str(&format!("adip_sim_energy_joules_total {:.6e}\n", self.energy_j()));
+        s.push_str(&format!("adip_queue_seconds_mean {:.6e}\n", self.mean_queue_seconds()));
+        s.push_str(&format!("adip_service_seconds_mean {:.6e}\n", self.mean_service_seconds()));
+        for (name, v) in [
+            ("adip_queue_seconds_p50", self.queue_percentile(50.0)),
+            ("adip_queue_seconds_p99", self.queue_percentile(99.0)),
+            ("adip_service_seconds_p50", self.service_percentile(50.0)),
+            ("adip_service_seconds_p99", self.service_percentile(99.0)),
+        ] {
+            s.push_str(&format!("{name} {:.6e}\n", v.unwrap_or(0.0)));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.accepted.fetch_add(3, Ordering::Relaxed);
+        m.record_completion(100, 1.5e-6, 2048, 4);
+        m.record_completion(50, 0.5e-6, 1024, 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.sim_cycles.load(Ordering::Relaxed), 150);
+        assert_eq!(m.memory_bytes.load(Ordering::Relaxed), 3072);
+        assert!((m.energy_j() - 2.0e-6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_means() {
+        let m = Metrics::default();
+        m.record_completion(1, 0.0, 0, 1);
+        m.record_completion(1, 0.0, 0, 1);
+        m.record_latency(0.2, 0.4);
+        m.record_latency(0.4, 0.6);
+        assert!((m.mean_queue_seconds() - 0.3).abs() < 1e-12);
+        assert!((m.mean_service_seconds() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::default();
+        assert!(m.queue_percentile(50.0).is_none());
+        for i in 1..=100 {
+            m.record_latency(i as f64 / 100.0, (101 - i) as f64 / 100.0);
+        }
+        let p50 = m.queue_percentile(50.0).unwrap();
+        assert!((p50 - 0.5).abs() < 0.02, "{p50}");
+        let p99 = m.queue_percentile(99.0).unwrap();
+        assert!(p99 >= 0.98, "{p99}");
+        let s50 = m.service_percentile(50.0).unwrap();
+        assert!((s50 - 0.5).abs() < 0.02, "{s50}");
+        let text = m.render();
+        assert!(text.contains("adip_queue_seconds_p99"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_range_checked() {
+        Metrics::default().queue_percentile(101.0);
+    }
+
+    #[test]
+    fn render_contains_all_series() {
+        let m = Metrics::default();
+        let text = m.render();
+        for key in [
+            "adip_requests_accepted_total",
+            "adip_requests_rejected_total",
+            "adip_batches_fused_total",
+            "adip_sim_energy_joules_total",
+            "adip_queue_depth",
+        ] {
+            assert!(text.contains(key), "{key} missing from:\n{text}");
+        }
+    }
+
+    #[test]
+    fn atomic_f64_concurrent_adds() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        m.record_completion(1, 0.001, 0, 0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((m.energy_j() - 4.0).abs() < 1e-9);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 4000);
+    }
+}

@@ -1,0 +1,33 @@
+//! L3 coordinator — the serving layer around the simulated accelerator.
+//!
+//! A vLLM-router-style stack scaled to this paper: matmul/attention
+//! requests arrive on a bounded queue, a precision selector picks the
+//! execution mode, the **shared-input batcher** fuses compatible requests
+//! into ADiP's asymmetric multi-matrix passes, and a pool of worker threads
+//! (one simulated array core each) executes them through the co-simulator,
+//! returning exact numerics + cycle/energy/memory accounting per request.
+//!
+//! * [`request`] — request/response types.
+//! * [`precision`] — weight-precision → [`crate::quant::PrecisionMode`]
+//!   selection policy (activation-to-activation pins 8b×8b).
+//! * [`batcher`] — groups requests that share an input matrix into
+//!   interleave sets (the Fig. 5(d) Q/K/V mode), never mixing shapes or
+//!   modes.
+//! * [`scheduler`] — turns batches into tile schedules on a core.
+//! * [`server`] — the bounded-queue, multi-worker coordinator with
+//!   backpressure and graceful shutdown.
+//! * [`metrics`] — atomic counters with a Prometheus-style text dump.
+
+pub mod batcher;
+pub mod metrics;
+pub mod precision;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{form_batches, Batch};
+pub use metrics::Metrics;
+pub use precision::select_mode;
+pub use request::{MatmulRequest, RequestId, RequestOutcome, ResponseMetrics};
+pub use scheduler::CoreScheduler;
+pub use server::{Coordinator, CoordinatorConfig};

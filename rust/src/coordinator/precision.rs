@@ -1,0 +1,40 @@
+//! Precision-mode selection policy.
+//!
+//! Mirrors the paper's workload mapping (§V-B): projection
+//! (activation-to-weight) requests run at the narrowest mode that fits the
+//! quantized weight width — 2-bit/ternary → 8b×2b, ≤4-bit → 8b×4b,
+//! otherwise 8b×8b — while activation-to-activation requests always run at
+//! 8b×8b (dynamic operands cannot be pre-quantized below 8 bits without
+//! accuracy loss, and their preprocessing happens at runtime).
+
+use crate::quant::PrecisionMode;
+
+/// Select the execution mode for a request.
+pub fn select_mode(weight_bits: u32, act_act: bool) -> PrecisionMode {
+    if act_act {
+        PrecisionMode::W8
+    } else {
+        PrecisionMode::for_weight_bits(weight_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn projection_modes_follow_weight_width() {
+        assert_eq!(select_mode(1, false), PrecisionMode::W2); // BitNet ternary
+        assert_eq!(select_mode(2, false), PrecisionMode::W2);
+        assert_eq!(select_mode(3, false), PrecisionMode::W4);
+        assert_eq!(select_mode(4, false), PrecisionMode::W4); // BERT-large 4-bit
+        assert_eq!(select_mode(8, false), PrecisionMode::W8); // GPT-2 8-bit
+    }
+
+    #[test]
+    fn act_act_pins_w8() {
+        for bits in 1..=8 {
+            assert_eq!(select_mode(bits, true), PrecisionMode::W8);
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! Request / response types of the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::dataflow::Mat;
+use crate::sim::memory::MemoryCounters;
+
+/// Monotonic request identifier.
+pub type RequestId = u64;
+
+/// A matrix-multiplication request: `C_s = A · B_s` for one or more weight
+/// matrices sharing the activation matrix `A`.
+#[derive(Debug, Clone)]
+pub struct MatmulRequest {
+    /// Assigned by the coordinator on submit.
+    pub id: RequestId,
+    /// Identifier of the shared input operand. Requests with equal
+    /// `input_id` (and compatible shape/precision) may be fused by the
+    /// batcher into one multi-matrix pass. Producers that reuse an
+    /// activation (e.g. Q/K/V off one `X`) must tag it consistently.
+    pub input_id: u64,
+    /// The activation matrix (int8 values).
+    pub a: Arc<Mat>,
+    /// Weight matrices (entries must fit `weight_bits`).
+    pub bs: Vec<Arc<Mat>>,
+    /// Weight bit-width as quantized (1–8; 1 maps to the 2-bit mode).
+    pub weight_bits: u32,
+    /// Activation-to-activation workload (dynamic operand): forces 8b×8b
+    /// and runtime (multi-bank) interleaving.
+    pub act_act: bool,
+    /// Free-form tag for metrics/debugging (stage name etc.).
+    pub tag: String,
+}
+
+impl MatmulRequest {
+    /// Basic shape/content validation; returns a reason when malformed.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bs.is_empty() {
+            return Err("no weight matrices".into());
+        }
+        if !(1..=8).contains(&self.weight_bits) {
+            return Err(format!("weight_bits {} out of 1..=8", self.weight_bits));
+        }
+        let (r, c) = (self.bs[0].rows(), self.bs[0].cols());
+        for (i, b) in self.bs.iter().enumerate() {
+            if b.rows() != r || b.cols() != c {
+                return Err(format!("weight matrix {i} shape mismatch"));
+            }
+            if self.a.cols() != b.rows() {
+                return Err(format!(
+                    "inner dims: A is {}x{}, B{i} is {}x{}",
+                    self.a.rows(),
+                    self.a.cols(),
+                    b.rows(),
+                    b.cols()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-request accounting returned with the outputs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ResponseMetrics {
+    /// Simulated accelerator cycles attributed to this request.
+    pub cycles: u64,
+    /// Simulated energy (J) attributed to this request.
+    pub energy_j: f64,
+    /// Simulated memory traffic attributed to this request.
+    pub memory: MemoryCounters,
+    /// Stationary-tile passes executed for this request.
+    pub passes: u64,
+    /// Host wall-clock the request waited in the queue (seconds).
+    pub queue_seconds: f64,
+    /// Host wall-clock spent executing (seconds).
+    pub service_seconds: f64,
+    /// Whether the request was fused into a shared-input batch.
+    pub batched: bool,
+}
+
+/// Completion message for one request.
+#[derive(Debug)]
+pub struct RequestOutcome {
+    /// The request id.
+    pub id: RequestId,
+    /// Output matrices (one per weight matrix), or an error string.
+    pub result: Result<Vec<Mat>, String>,
+    /// Accounting (valid also for failed requests where meaningful).
+    pub metrics: ResponseMetrics,
+}
+
+/// Internal envelope: request + response channel + enqueue timestamp.
+pub(crate) struct Envelope {
+    pub req: MatmulRequest,
+    pub reply: Sender<RequestOutcome>,
+    pub enqueued: std::time::Instant,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    fn req(bits: u32) -> MatmulRequest {
+        let mut rng = Rng::seeded(1);
+        MatmulRequest {
+            id: 1,
+            input_id: 7,
+            a: Arc::new(Mat::random(&mut rng, 4, 4, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, 4, 4, bits.min(8)))],
+            weight_bits: bits,
+            act_act: false,
+            tag: "test".into(),
+        }
+    }
+
+    #[test]
+    fn validation_accepts_well_formed() {
+        assert!(req(8).validate().is_ok());
+        assert!(req(2).validate().is_ok());
+    }
+
+    #[test]
+    fn validation_rejects_malformed() {
+        let mut r = req(8);
+        r.bs.clear();
+        assert!(r.validate().is_err());
+        let mut r = req(8);
+        r.weight_bits = 9;
+        assert!(r.validate().is_err());
+        let mut rng = Rng::seeded(2);
+        let mut r = req(8);
+        r.bs.push(Arc::new(Mat::random(&mut rng, 3, 4, 8)));
+        assert!(r.validate().is_err());
+        let mut r = req(8);
+        r.a = Arc::new(Mat::zeros(4, 5));
+        assert!(r.validate().is_err());
+    }
+}

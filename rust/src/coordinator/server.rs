@@ -1,0 +1,393 @@
+//! The coordinator server: bounded ingress queue, batching router, worker
+//! pool, backpressure and graceful shutdown — all on std threads/channels
+//! (the offline crate snapshot has no async runtime; on a 1-vCPU host the
+//! thread pool is the right tool anyway).
+//!
+//! ```text
+//! submit() ──▶ [bounded queue] ──▶ router thread ──▶ worker 0 (CoSim core)
+//!                  │ (reject when full = backpressure)   worker 1 …
+//!                  ▼                                     │
+//!             Metrics ◀──────── outcomes via per-request channels
+//! ```
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::arch::Architecture;
+
+use super::batcher::form_batches;
+use super::metrics::Metrics;
+use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
+use super::scheduler::CoreScheduler;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct CoordinatorConfig {
+    /// Architecture each core simulates.
+    pub arch: Architecture,
+    /// Array size per core.
+    pub n: usize,
+    /// Worker threads (simulated cores).
+    pub workers: usize,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_capacity: usize,
+    /// Max requests gathered into one batching window.
+    pub batch_window: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 32,
+            workers: 2,
+            queue_capacity: 256,
+            batch_window: 16,
+        }
+    }
+}
+
+/// Work sent to a worker: the envelopes of one batch.
+struct WorkItem {
+    envelopes: Vec<Envelope>,
+    runtime_interleave: bool,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    ingress: SyncSender<Envelope>,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    router: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the router + worker threads.
+    pub fn start(cfg: CoordinatorConfig) -> Coordinator {
+        assert!(cfg.workers > 0 && cfg.queue_capacity > 0 && cfg.batch_window > 0);
+        let metrics = Arc::new(Metrics::default());
+        let (ingress_tx, ingress_rx) = sync_channel::<Envelope>(cfg.queue_capacity);
+
+        // worker channels
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers {
+            let (tx, rx) = sync_channel::<WorkItem>(4);
+            worker_txs.push(tx);
+            let m = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("adip-worker-{w}"))
+                    .spawn(move || worker_loop(rx, cfg, m))
+                    .expect("spawn worker"),
+            );
+        }
+
+        let m = metrics.clone();
+        let router = std::thread::Builder::new()
+            .name("adip-router".into())
+            .spawn(move || router_loop(ingress_rx, worker_txs, cfg, m))
+            .expect("spawn router");
+
+        Coordinator {
+            ingress: ingress_tx,
+            metrics,
+            next_id: AtomicU64::new(1),
+            router: Some(router),
+            workers,
+        }
+    }
+
+    /// Submit a request without blocking. On success the request id is
+    /// assigned and a receiver for the outcome is returned; a full queue
+    /// rejects the request (backpressure).
+    pub fn try_submit(
+        &self,
+        mut req: MatmulRequest,
+    ) -> Result<(RequestId, Receiver<RequestOutcome>)> {
+        if let Err(reason) = req.validate() {
+            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("invalid request: {reason}"));
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let env = Envelope { req, reply: tx, enqueued: Instant::now() };
+        match self.ingress.try_send(env) {
+            Ok(()) => {
+                self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok((id, rx))
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("queue full ({} pending)", self.metrics.queue_depth.load(Ordering::Relaxed)))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator stopped")),
+        }
+    }
+
+    /// Submit and block for the outcome (convenience).
+    pub fn submit_wait(&self, req: MatmulRequest) -> Result<RequestOutcome> {
+        let (_, rx) = self.try_submit(req)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// Shared metrics handle.
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.metrics.clone()
+    }
+
+    /// Stop accepting requests, drain in-flight work, join all threads.
+    pub fn shutdown(mut self) {
+        drop(self.ingress);
+        if let Some(r) = self.router.take() {
+            let _ = r.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn router_loop(
+    ingress: Receiver<Envelope>,
+    worker_txs: Vec<SyncSender<WorkItem>>,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+) {
+    let mut next_worker = 0usize;
+    loop {
+        // blocking pull of the first request, then drain a window
+        let first = match ingress.recv() {
+            Ok(e) => e,
+            Err(_) => break, // ingress closed: drain done
+        };
+        let mut window = vec![first];
+        while window.len() < cfg.batch_window {
+            match ingress.try_recv() {
+                Ok(e) => window.push(e),
+                Err(_) => break,
+            }
+        }
+        metrics.queue_depth.fetch_sub(window.len() as u64, Ordering::Relaxed);
+
+        let reqs: Vec<MatmulRequest> = window.iter().map(|e| e.req.clone()).collect();
+        let batches = form_batches(&reqs);
+
+        // move envelopes into their batches (indices are into `window`)
+        let mut slots: Vec<Option<Envelope>> = window.into_iter().map(Some).collect();
+        for b in batches {
+            let envelopes: Vec<Envelope> =
+                b.members.iter().map(|&i| slots[i].take().expect("batch partition")).collect();
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            if envelopes.len() > 1 || envelopes[0].req.bs.len() > 1 {
+                metrics.fused_batches.fetch_add(1, Ordering::Relaxed);
+            }
+            let item = WorkItem { envelopes, runtime_interleave: b.runtime_interleave };
+            // round-robin dispatch; blocking send applies backpressure to
+            // the router (ingress queue keeps absorbing bursts)
+            if worker_txs[next_worker % worker_txs.len()].send(item).is_err() {
+                return; // workers gone
+            }
+            next_worker += 1;
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<WorkItem>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
+    let mut core = CoreScheduler::new(cfg.arch, cfg.n);
+    while let Ok(item) = rx.recv() {
+        let started = Instant::now();
+        let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
+        match core.execute_batch(&members, item.runtime_interleave) {
+            Ok(results) => {
+                let service = started.elapsed().as_secs_f64() / results.len() as f64;
+                for (env, mut res) in item.envelopes.iter().zip(results) {
+                    res.metrics.queue_seconds = (started - env.enqueued).as_secs_f64();
+                    res.metrics.service_seconds = service;
+                    metrics.record_completion(
+                        res.metrics.cycles,
+                        res.metrics.energy_j,
+                        res.metrics.memory.paper_total_bytes(),
+                        res.metrics.passes,
+                    );
+                    metrics.record_latency(res.metrics.queue_seconds, service);
+                    let _ = env.reply.send(RequestOutcome {
+                        id: env.req.id,
+                        result: Ok(res.outputs),
+                        metrics: res.metrics,
+                    });
+                }
+            }
+            Err(e) => {
+                for env in &item.envelopes {
+                    metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    let _ = env.reply.send(RequestOutcome {
+                        id: env.req.id,
+                        result: Err(e.to_string()),
+                        metrics: Default::default(),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::Mat;
+    use crate::testutil::Rng;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig { n: 8, workers: 2, queue_capacity: 64, batch_window: 8, ..Default::default() }
+    }
+
+    fn request(rng: &mut Rng, input_id: u64, bits: u32) -> MatmulRequest {
+        MatmulRequest {
+            id: 0,
+            input_id,
+            a: Arc::new(Mat::random(rng, 16, 16, 8)),
+            bs: vec![Arc::new(Mat::random(rng, 16, 16, bits))],
+            weight_bits: bits,
+            act_act: false,
+            tag: "t".into(),
+        }
+    }
+
+    #[test]
+    fn end_to_end_correct_results() {
+        let coord = Coordinator::start(cfg());
+        let mut rng = Rng::seeded(901);
+        let req = request(&mut rng, 1, 8);
+        let want = req.a.matmul(&req.bs[0]);
+        let out = coord.submit_wait(req).unwrap();
+        assert_eq!(out.result.unwrap()[0], want);
+        assert!(out.metrics.cycles > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn concurrent_submissions_all_complete_exactly_once() {
+        let coord = Coordinator::start(cfg());
+        let mut rng = Rng::seeded(903);
+        let mut expected = Vec::new();
+        let mut rxs = Vec::new();
+        for i in 0..32u64 {
+            let bits = *rng.choose(&[2, 4, 8]);
+            let r = request(&mut rng, i % 4, bits);
+            expected.push((r.a.clone(), r.bs[0].clone()));
+            let (id, rx) = coord.try_submit(r).unwrap();
+            rxs.push((id, rx));
+        }
+        let mut seen = std::collections::HashSet::new();
+        for (i, (id, rx)) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap();
+            assert_eq!(out.id, id);
+            assert!(seen.insert(id), "duplicate completion");
+            let (a, b) = &expected[i];
+            assert_eq!(out.result.unwrap()[0], a.matmul(b));
+        }
+        let m = coord.metrics();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 32);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_rejected_upfront() {
+        let coord = Coordinator::start(cfg());
+        let mut rng = Rng::seeded(905);
+        let mut bad = request(&mut rng, 1, 8);
+        bad.bs.clear();
+        assert!(coord.try_submit(bad).is_err());
+        assert_eq!(coord.metrics().failed.load(Ordering::Relaxed), 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // tiny queue, no workers consuming fast: overflow must reject
+        let c = CoordinatorConfig {
+            n: 8,
+            workers: 1,
+            queue_capacity: 2,
+            batch_window: 1,
+            ..Default::default()
+        };
+        let coord = Coordinator::start(c);
+        let mut rng = Rng::seeded(907);
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            // big-ish requests keep the worker busy
+            let r = MatmulRequest {
+                id: 0,
+                input_id: 0,
+                a: Arc::new(Mat::random(&mut rng, 64, 64, 8)),
+                bs: vec![Arc::new(Mat::random(&mut rng, 64, 64, 8))],
+                weight_bits: 8,
+                act_act: false,
+                tag: String::new(),
+            };
+            match coord.try_submit(r) {
+                Ok((_, rx)) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        // accepted requests still all complete
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let m = coord.metrics();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), rejected);
+        assert_eq!(
+            m.completed.load(Ordering::Relaxed) + m.rejected.load(Ordering::Relaxed),
+            64
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn qkv_requests_get_fused() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            n: 8,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 8,
+            ..Default::default()
+        });
+        let mut rng = Rng::seeded(909);
+        let x = Arc::new(Mat::random(&mut rng, 16, 16, 8));
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let r = MatmulRequest {
+                id: 0,
+                input_id: 77,
+                a: x.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, 16, 16, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: "qkv".into(),
+            };
+            rxs.push(coord.try_submit(r).unwrap().1);
+        }
+        let mut any_batched = false;
+        for rx in rxs {
+            let out = rx.recv().unwrap();
+            assert!(out.result.is_ok());
+            any_batched |= out.metrics.batched;
+        }
+        // the router windowed them together (single worker, same instant)
+        assert!(any_batched, "Q/K/V requests should fuse");
+        assert!(coord.metrics().fused_batches.load(Ordering::Relaxed) >= 1);
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,186 @@
+//! Weight-tile interleaving for multi-matrix multiplication (Fig. 5).
+//!
+//! In the 8b×4b / 8b×2b modes, ADiP stores 2 / 3 / 4 *distinct* weight
+//! tiles in one stationary tile: element `(r, c)` of the interleaved tile
+//! packs element `(r, c)` of each source tile into adjacent subword fields
+//! of one 8-bit carrier (source 0 in the least-significant field). Each PE
+//! multiplies the shared 8-bit activation against every field in the same
+//! cycle, producing one psum stream per source matrix — the “asymmetric
+//! multi-matrix multiplication with a shared input matrix” mode.
+//!
+//! Fig. 5 variants covered:
+//! * (a) 8b×8b — single tile, no interleaving (`k = 1`).
+//! * (b) 8b×4b — 2 tiles, 4-bit fields.
+//! * (c) 8b×2b — 4 tiles, 2-bit fields.
+//! * (d) 8b×2b Q/K/V — 3 tiles, 2-bit fields (the 4th field unused);
+//!   used when `d_k / N` would otherwise leave the array under-utilized.
+
+use anyhow::{bail, ensure, Result};
+
+use super::matrix::Mat;
+use crate::quant::{types::value_range, PrecisionMode};
+
+/// An interleaved stationary weight tile: `k` source tiles packed into one
+/// 8-bit-carrier tile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InterleavedTile {
+    /// Packed carrier tile; each element is one byte (stored `0..=255`).
+    pub packed: Mat,
+    /// Precision mode the tile was packed for.
+    pub mode: PrecisionMode,
+    /// Number of source matrices actually packed (may be less than the
+    /// mode's capacity, e.g. 3 Q/K/V tiles in 8b×2b).
+    pub k: usize,
+    /// Source tiles retained at pack time (§Perf iteration 5: the
+    /// functional fast path reads these instead of re-extracting subword
+    /// fields on every activation pass; bit-equality with the packed
+    /// fields is asserted by the round-trip tests). Empty for tiles built
+    /// by hand from a raw carrier.
+    pub sources: Vec<Mat>,
+}
+
+impl InterleavedTile {
+    /// Weight value of source matrix `s` at `(r, c)` (sign-extended).
+    pub fn source_value(&self, s: usize, r: usize, c: usize) -> i32 {
+        assert!(s < self.k);
+        let byte = self.packed.get(r, c) as u32;
+        let w = self.mode.weight_bits();
+        let field = (byte >> (w * s as u32)) & ((1 << w) - 1);
+        crate::quant::packing::sign_extend(field as i32, w)
+    }
+}
+
+/// Interleave `tiles` (all the same shape, values in range for
+/// `mode.weight_bits()`) into one stationary tile. `tiles.len()` must be
+/// `1..=mode.interleave_factor()`.
+pub fn interleave_tiles(tiles: &[&Mat], mode: PrecisionMode) -> Result<InterleavedTile> {
+    let k = tiles.len();
+    ensure!(k >= 1, "need at least one tile");
+    ensure!(
+        k <= mode.interleave_factor(),
+        "{k} tiles exceed the {} capacity of {mode}",
+        mode.interleave_factor()
+    );
+    let (rows, cols) = (tiles[0].rows(), tiles[0].cols());
+    let w = mode.weight_bits();
+    let (lo, hi) = value_range(w);
+    for (s, t) in tiles.iter().enumerate() {
+        ensure!(
+            t.rows() == rows && t.cols() == cols,
+            "tile {s} shape {}x{} != {}x{}",
+            t.rows(),
+            t.cols(),
+            rows,
+            cols
+        );
+        if let Some(bad) = t.as_slice().iter().find(|v| !(lo..=hi).contains(v)) {
+            bail!("tile {s} value {bad} out of {w}-bit range {lo}..={hi}");
+        }
+    }
+    let mask = (1u32 << w) - 1;
+    let packed = Mat::from_fn(rows, cols, |r, c| {
+        let mut byte = 0u32;
+        for (s, t) in tiles.iter().enumerate() {
+            byte |= ((t.get(r, c) as u32) & mask) << (w * s as u32);
+        }
+        byte as i32
+    });
+    let sources = tiles.iter().map(|t| (*t).clone()).collect();
+    Ok(InterleavedTile { packed, mode, k, sources })
+}
+
+/// Recover the `k` source tiles from an interleaved tile; inverse of
+/// [`interleave_tiles`].
+pub fn deinterleave_tile(t: &InterleavedTile) -> Vec<Mat> {
+    (0..t.k)
+        .map(|s| Mat::from_fn(t.packed.rows(), t.packed.cols(), |r, c| t.source_value(s, r, c)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn single_tile_8x8_is_identity_bytes() {
+        let mut rng = Rng::seeded(21);
+        let t = Mat::random(&mut rng, 4, 4, 8);
+        let it = interleave_tiles(&[&t], PrecisionMode::W8).unwrap();
+        assert_eq!(it.k, 1);
+        let back = deinterleave_tile(&it);
+        assert_eq!(back[0], t);
+    }
+
+    #[test]
+    fn two_tiles_4bit_fig5b() {
+        let a = Mat::from_vec(1, 2, vec![-8, 7]);
+        let b = Mat::from_vec(1, 2, vec![3, -1]);
+        let it = interleave_tiles(&[&a, &b], PrecisionMode::W4).unwrap();
+        // low nibble = a, high nibble = b
+        assert_eq!(it.packed.get(0, 0), ((3u32 << 4) | 0x8) as i32);
+        assert_eq!(it.source_value(0, 0, 0), -8);
+        assert_eq!(it.source_value(1, 0, 1), -1);
+        let back = deinterleave_tile(&it);
+        assert_eq!(back, vec![a, b]);
+    }
+
+    #[test]
+    fn four_tiles_2bit_fig5c() {
+        let tiles: Vec<Mat> =
+            (0..4).map(|s| Mat::from_fn(3, 3, |r, c| ((r + c + s) % 4) as i32 - 2)).collect();
+        let refs: Vec<&Mat> = tiles.iter().collect();
+        let it = interleave_tiles(&refs, PrecisionMode::W2).unwrap();
+        assert_eq!(it.k, 4);
+        assert_eq!(deinterleave_tile(&it), tiles);
+    }
+
+    #[test]
+    fn three_tiles_qkv_fig5d() {
+        // Q/K/V variant: 3 tiles in the 4-slot 2-bit mode.
+        let q = Mat::from_vec(2, 2, vec![1, -1, 0, 1]);
+        let k = Mat::from_vec(2, 2, vec![-2, 0, 1, -1]);
+        let v = Mat::from_vec(2, 2, vec![0, 1, -2, 0]);
+        let it = interleave_tiles(&[&q, &k, &v], PrecisionMode::W2).unwrap();
+        assert_eq!(it.k, 3);
+        assert_eq!(deinterleave_tile(&it), vec![q, k, v]);
+    }
+
+    #[test]
+    fn rejects_capacity_and_range_violations() {
+        let t = Mat::zeros(2, 2);
+        let too_many: Vec<&Mat> = vec![&t, &t];
+        assert!(interleave_tiles(&too_many, PrecisionMode::W8).is_err());
+        let wide = Mat::from_vec(1, 1, vec![5]);
+        assert!(interleave_tiles(&[&wide], PrecisionMode::W2).is_err());
+        let a = Mat::zeros(2, 2);
+        let b = Mat::zeros(3, 2);
+        assert!(interleave_tiles(&[&a, &b], PrecisionMode::W4).is_err());
+    }
+
+    #[test]
+    fn roundtrip_property_all_modes() {
+        check(
+            "interleave-roundtrip",
+            31,
+            60,
+            |rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let k = 1 + rng.below(mode.interleave_factor());
+                let n = 1 + rng.below(8);
+                let tiles: Vec<Mat> =
+                    (0..k).map(|_| Mat::random(rng, n, n, mode.weight_bits())).collect();
+                (mode, tiles)
+            },
+            |(mode, tiles)| {
+                let refs: Vec<&Mat> = tiles.iter().collect();
+                let it = interleave_tiles(&refs, *mode).map_err(|e| e.to_string())?;
+                if deinterleave_tile(&it) == *tiles {
+                    Ok(())
+                } else {
+                    Err("roundtrip mismatch".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,264 @@
+//! Dense row-major integer matrices + the reference GEMM oracle.
+//!
+//! All functional modeling in the crate (PE, arrays, simulator, coordinator)
+//! works on `i32` matrices: activations/weights are small integers
+//! (8/4/2-bit) and psums fit comfortably in `i32` for the tile sizes ADiP
+//! supports (worst case `127·127·64·4 < 2^31`).
+
+use std::fmt;
+
+use crate::testutil::Rng;
+
+/// Dense row-major `i32` matrix.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<i32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Build from row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch: {rows}x{cols} vs {}", data.len());
+        Mat { rows, cols, data }
+    }
+
+    /// Build from a closure of `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i32) -> Mat {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Random matrix with entries fitting `bits` bits (signed).
+    pub fn random(rng: &mut Rng, rows: usize, cols: usize, bits: u32) -> Mat {
+        Mat::from_vec(rows, cols, rng.int_vec(rows * cols, bits))
+    }
+
+    /// Row count.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Column count.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element access.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Add `v` into `(r, c)`.
+    #[inline]
+    pub fn add_assign(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] += v;
+    }
+
+    /// Borrow the row-major backing slice.
+    pub fn as_slice(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.get(c, r))
+    }
+
+    /// Extract the sub-matrix starting at `(r0, c0)` with shape
+    /// `rows × cols`, zero-padding past the edges (tiles at matrix borders).
+    pub fn tile(&self, r0: usize, c0: usize, rows: usize, cols: usize) -> Mat {
+        Mat::from_fn(rows, cols, |r, c| {
+            let (rr, cc) = (r0 + r, c0 + c);
+            if rr < self.rows && cc < self.cols {
+                self.get(rr, cc)
+            } else {
+                0
+            }
+        })
+    }
+
+    /// Write `tile` into `self` at `(r0, c0)`, ignoring parts past the edge
+    /// (inverse of the zero-padding in [`Mat::tile`]).
+    pub fn place(&mut self, r0: usize, c0: usize, tile: &Mat) {
+        for r in 0..tile.rows {
+            for c in 0..tile.cols {
+                let (rr, cc) = (r0 + r, c0 + c);
+                if rr < self.rows && cc < self.cols {
+                    self.set(rr, cc, tile.get(r, c));
+                }
+            }
+        }
+    }
+
+    /// Accumulate `tile` into `self` at `(r0, c0)` (psum accumulation).
+    pub fn accumulate(&mut self, r0: usize, c0: usize, tile: &Mat) {
+        for r in 0..tile.rows {
+            for c in 0..tile.cols {
+                let (rr, cc) = (r0 + r, c0 + c);
+                if rr < self.rows && cc < self.cols {
+                    self.add_assign(rr, cc, tile.get(r, c));
+                }
+            }
+        }
+    }
+
+    /// Reference GEMM: `self (m×k) · other (k×n)` in `i32`. The correctness
+    /// oracle every hardware model is tested against.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self.get(i, kk);
+                if a == 0 {
+                    continue;
+                }
+                let brow = other.row(kk);
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// Max absolute element (for quick sanity checks).
+    pub fn abs_max(&self) -> i32 {
+        self.data.iter().map(|v| v.abs()).max().unwrap_or(0)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let show_rows = self.rows.min(8);
+        for r in 0..show_rows {
+            let row: Vec<String> =
+                self.row(r).iter().take(8).map(|v| format!("{v:4}")).collect();
+            let ell = if self.cols > 8 { " …" } else { "" };
+            writeln!(f, "  [{}{}]", row.join(", "), ell)?;
+        }
+        if self.rows > show_rows {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_fn(2, 3, |r, c| (r * 3 + c) as i32);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.get(1, 2), 5);
+        assert_eq!(m.row(1), &[3, 4, 5]);
+        assert_eq!(m.as_slice(), &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::seeded(5);
+        let m = Mat::random(&mut rng, 7, 3, 8);
+        assert_eq!(m.transpose().transpose(), m);
+        assert_eq!(m.transpose().get(2, 6), m.get(6, 2));
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        let b = Mat::from_vec(2, 2, vec![5, 6, 7, 8]);
+        assert_eq!(a.matmul(&b), Mat::from_vec(2, 2, vec![19, 22, 43, 50]));
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::seeded(6);
+        let a = Mat::random(&mut rng, 5, 5, 8);
+        let id = Mat::from_fn(5, 5, |r, c| (r == c) as i32);
+        assert_eq!(a.matmul(&id), a);
+        assert_eq!(id.matmul(&a), a);
+    }
+
+    #[test]
+    fn tile_pads_with_zeros_and_place_restores() {
+        let m = Mat::from_fn(5, 5, |r, c| (r * 5 + c) as i32 + 1);
+        let t = m.tile(3, 3, 4, 4);
+        assert_eq!(t.get(0, 0), m.get(3, 3));
+        assert_eq!(t.get(2, 0), 0); // past the bottom edge
+        assert_eq!(t.get(0, 3), 0); // past the right edge
+        let mut out = Mat::zeros(5, 5);
+        for r0 in [0, 4] {
+            for c0 in [0, 4] {
+                out.place(r0, c0, &m.tile(r0, c0, 4, 4));
+            }
+        }
+        // every element covered by at least one tile
+        assert_eq!(out, m);
+    }
+
+    #[test]
+    fn accumulate_adds() {
+        let mut acc = Mat::zeros(2, 2);
+        let t = Mat::from_vec(2, 2, vec![1, 2, 3, 4]);
+        acc.accumulate(0, 0, &t);
+        acc.accumulate(0, 0, &t);
+        assert_eq!(acc, Mat::from_vec(2, 2, vec![2, 4, 6, 8]));
+    }
+
+    #[test]
+    fn matmul_associativity_property() {
+        crate::testutil::check(
+            "matmul-assoc",
+            13,
+            25,
+            |rng| {
+                let (m, k, n, p) =
+                    (1 + rng.below(6), 1 + rng.below(6), 1 + rng.below(6), 1 + rng.below(6));
+                (
+                    Mat::random(rng, m, k, 4),
+                    Mat::random(rng, k, n, 4),
+                    Mat::random(rng, n, p, 4),
+                )
+            },
+            |(a, b, c)| {
+                if a.matmul(b).matmul(c) == a.matmul(&b.matmul(c)) {
+                    Ok(())
+                } else {
+                    Err("not associative".into())
+                }
+            },
+        );
+    }
+}

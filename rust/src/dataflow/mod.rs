@@ -1,0 +1,90 @@
+//! The ADiP dataflow preprocessing pipeline (paper §IV-B, Figs. 5–6) and
+//! block matrix multiplication (paper Algorithm 1).
+//!
+//! Order of operations for a stationary weight tile:
+//!
+//! 1. **Permutation** ([`permute`]) — the DiP dataflow rotates every column
+//!    of the tile upward by its column index so that diagonally-moving
+//!    activations meet the right weights without input/output
+//!    synchronization FIFOs.
+//! 2. **Interleaving** ([`interleave`]) — for 8b×4b / 8b×2b modes, 2 / 3 / 4
+//!    distinct weight tiles are merged element-wise into one 8-bit carrier
+//!    tile (Fig. 5(b)–(d)), enabling multi-matrix multiplication with a
+//!    shared input matrix.
+//! 3. **Tiling** ([`tiling`]) — large GEMMs are decomposed into array-sized
+//!    tiles with psum accumulation over the K dimension (Algorithm 1).
+//!
+//! [`matrix`] provides the dense integer matrix type these stages operate
+//! on, together with the reference GEMM used as the correctness oracle.
+
+pub mod interleave;
+pub mod matrix;
+pub mod permute;
+pub mod tiling;
+
+pub use interleave::{deinterleave_tile, interleave_tiles, InterleavedTile};
+pub use matrix::Mat;
+pub use permute::{permute_dip, unpermute_dip};
+pub use tiling::{blocked_matmul, tile_grid, TileCoord, TileGrid};
+
+use crate::quant::PrecisionMode;
+
+/// The complete Fig. 6 offline weight preparation: DiP column-rotation
+/// permutation of each source tile, then interleaving into the packed
+/// stationary carrier. The result is what the weight memory actually
+/// stores — an array loading it needs no further transformation.
+///
+/// (The register-level simulators take *unpermuted* tiles and permute on
+/// load, modeling the same preprocessing; `prepared` round-trips to the
+/// identical stationary bytes — asserted in tests.)
+pub fn prepare_stationary_tile(
+    tiles: &[&Mat],
+    mode: PrecisionMode,
+) -> anyhow::Result<InterleavedTile> {
+    let permuted: Vec<Mat> = tiles.iter().map(|t| permute_dip(t)).collect();
+    let refs: Vec<&Mat> = permuted.iter().collect();
+    interleave_tiles(&refs, mode)
+}
+
+#[cfg(test)]
+mod prepare_tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn prepare_equals_permute_then_interleave_and_commutes() {
+        // Permutation (element movement) commutes with interleaving
+        // (element-wise packing): preparing the tiles equals permuting the
+        // packed carrier. This is the property that lets the hardware run
+        // the two preprocessing steps in either order (Fig. 6).
+        check(
+            "fig6-prepare",
+            1401,
+            40,
+            |rng: &mut Rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let k = 1 + rng.below(mode.interleave_factor());
+                let n = 1 + rng.below(12);
+                let tiles: Vec<Mat> =
+                    (0..k).map(|_| Mat::random(rng, n, n, mode.weight_bits())).collect();
+                (mode, tiles)
+            },
+            |(mode, tiles)| {
+                let refs: Vec<&Mat> = tiles.iter().collect();
+                let prepared = prepare_stationary_tile(&refs, *mode).map_err(|e| e.to_string())?;
+                let packed_first = interleave_tiles(&refs, *mode).map_err(|e| e.to_string())?;
+                if prepared.packed != permute_dip(&packed_first.packed) {
+                    return Err("permute/interleave do not commute".into());
+                }
+                // and the sources recover as the permuted originals
+                let back = deinterleave_tile(&prepared);
+                for (orig, got) in tiles.iter().zip(&back) {
+                    if *got != permute_dip(orig) {
+                        return Err("prepared sources mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,97 @@
+//! DiP weight-tile permutation (paper §IV-B, Fig. 6 step 1).
+//!
+//! The DiP dataflow [34] loads the stationary weight tile *permuted*: every
+//! column `c` is rotated **upward** by `c` positions. Combined with the
+//! diagonal movement of activations (row-to-row with wraparound at the
+//! array boundary), each activation then meets exactly the weights of the
+//! original column-aligned GEMM without the input/output skew FIFOs that a
+//! conventional weight-stationary array needs.
+
+use super::matrix::Mat;
+
+/// Rotate every column of `tile` upward by its column index:
+/// `out[r][c] = tile[(r + c) mod R][c]`.
+pub fn permute_dip(tile: &Mat) -> Mat {
+    let rows = tile.rows();
+    Mat::from_fn(rows, tile.cols(), |r, c| tile.get((r + c) % rows, c))
+}
+
+/// Inverse of [`permute_dip`]: rotate every column downward by its index.
+pub fn unpermute_dip(tile: &Mat) -> Mat {
+    let rows = tile.rows();
+    Mat::from_fn(rows, tile.cols(), |r, c| tile.get((r + rows - (c % rows)) % rows, c))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn known_4x4_example() {
+        // Column c rotated up by c: matches the worked example of Fig. 6.
+        #[rustfmt::skip]
+        let tile = Mat::from_vec(4, 4, vec![
+            11, 12, 13, 14,
+            21, 22, 23, 24,
+            31, 32, 33, 34,
+            41, 42, 43, 44,
+        ]);
+        #[rustfmt::skip]
+        let want = Mat::from_vec(4, 4, vec![
+            11, 22, 33, 44,
+            21, 32, 43, 14,
+            31, 42, 13, 24,
+            41, 12, 23, 34,
+        ]);
+        assert_eq!(permute_dip(&tile), want);
+    }
+
+    #[test]
+    fn first_column_unchanged() {
+        let mut rng = Rng::seeded(2);
+        let tile = Mat::random(&mut rng, 8, 8, 8);
+        let p = permute_dip(&tile);
+        for r in 0..8 {
+            assert_eq!(p.get(r, 0), tile.get(r, 0));
+        }
+    }
+
+    #[test]
+    fn permute_is_row_permutation_per_column() {
+        // each column keeps exactly the same multiset of values
+        let mut rng = Rng::seeded(3);
+        let tile = Mat::random(&mut rng, 6, 6, 8);
+        let p = permute_dip(&tile);
+        for c in 0..6 {
+            let mut a: Vec<i32> = (0..6).map(|r| tile.get(r, c)).collect();
+            let mut b: Vec<i32> = (0..6).map(|r| p.get(r, c)).collect();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "column {c}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        check(
+            "dip-permute-roundtrip",
+            17,
+            50,
+            |rng| {
+                let n = 1 + rng.below(16);
+                let m = 1 + rng.below(16);
+                Mat::random(rng, n, m, 8)
+            },
+            |tile| {
+                if unpermute_dip(&permute_dip(tile)) == *tile
+                    && permute_dip(&unpermute_dip(tile)) == *tile
+                {
+                    Ok(())
+                } else {
+                    Err("permute/unpermute not inverse".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Block (tiled) matrix multiplication — paper Algorithm 1.
+//!
+//! Large GEMMs are decomposed into `T×T` tiles matching the array size; the
+//! innermost loops multiply tile pairs and accumulate psums into the output
+//! block. The loop order follows the paper (j → k → i) so a stationary
+//! weight tile `(k, j)` is reused across all `i` blocks — the weight reuse
+//! the stationary dataflow is built around.
+
+use super::matrix::Mat;
+
+/// Coordinates of one tile-level multiply: output block `(i, j)`,
+/// reduction index `k`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TileCoord {
+    /// Output block row (in tiles).
+    pub i: usize,
+    /// Output block column (in tiles).
+    pub j: usize,
+    /// Reduction step (in tiles).
+    pub k: usize,
+}
+
+/// The tile decomposition of a `m×k_dim · k_dim×n` GEMM with tile size `t`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    /// GEMM M dimension (rows of A / C).
+    pub m: usize,
+    /// GEMM K dimension (cols of A / rows of B).
+    pub k_dim: usize,
+    /// GEMM N dimension (cols of B / C).
+    pub n: usize,
+    /// Tile edge (array size).
+    pub t: usize,
+}
+
+impl TileGrid {
+    /// Tiles along M.
+    pub fn tiles_m(&self) -> usize {
+        self.m.div_ceil(self.t)
+    }
+
+    /// Tiles along K.
+    pub fn tiles_k(&self) -> usize {
+        self.k_dim.div_ceil(self.t)
+    }
+
+    /// Tiles along N.
+    pub fn tiles_n(&self) -> usize {
+        self.n.div_ceil(self.t)
+    }
+
+    /// Total tile-level multiplications.
+    pub fn total_tiles(&self) -> usize {
+        self.tiles_m() * self.tiles_k() * self.tiles_n()
+    }
+
+    /// Iterate tile coordinates in the paper's j → k → i order.
+    pub fn coords(&self) -> impl Iterator<Item = TileCoord> + '_ {
+        let (tm, tk, tn) = (self.tiles_m(), self.tiles_k(), self.tiles_n());
+        (0..tn).flat_map(move |j| {
+            (0..tk).flat_map(move |k| (0..tm).map(move |i| TileCoord { i, j, k }))
+        })
+    }
+}
+
+/// Build the tile grid for a GEMM.
+pub fn tile_grid(m: usize, k_dim: usize, n: usize, t: usize) -> TileGrid {
+    assert!(t > 0, "tile size must be positive");
+    assert!(m > 0 && k_dim > 0 && n > 0, "GEMM dims must be positive");
+    TileGrid { m, k_dim, n, t }
+}
+
+/// Algorithm 1: compute `a · b` via `t×t` tiles, calling `tile_mm` for each
+/// tile pair (defaults to the reference tile GEMM — the hardware models
+/// substitute their own functional path) and accumulating psums.
+pub fn blocked_matmul_with(
+    a: &Mat,
+    b: &Mat,
+    t: usize,
+    mut tile_mm: impl FnMut(TileCoord, &Mat, &Mat) -> Mat,
+) -> Mat {
+    let grid = tile_grid(a.rows(), a.cols(), b.cols(), t);
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    for coord in grid.coords() {
+        let a_tile = a.tile(coord.i * t, coord.k * t, t, t);
+        let b_tile = b.tile(coord.k * t, coord.j * t, t, t);
+        let p = tile_mm(coord, &a_tile, &b_tile);
+        assert_eq!(p.rows(), t, "tile_mm must return a {t}x{t} psum tile");
+        assert_eq!(p.cols(), t);
+        c.accumulate(coord.i * t, coord.j * t, &p);
+    }
+    c
+}
+
+/// Algorithm 1 with the reference tile GEMM.
+pub fn blocked_matmul(a: &Mat, b: &Mat, t: usize) -> Mat {
+    blocked_matmul_with(a, b, t, |_, at, bt| at.matmul(bt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check, Rng};
+
+    #[test]
+    fn grid_counts() {
+        let g = tile_grid(10, 7, 5, 4);
+        assert_eq!((g.tiles_m(), g.tiles_k(), g.tiles_n()), (3, 2, 2));
+        assert_eq!(g.total_tiles(), 12);
+        assert_eq!(g.coords().count(), 12);
+    }
+
+    #[test]
+    fn coords_follow_paper_loop_order() {
+        let g = tile_grid(4, 4, 4, 2); // 2x2x2 tiles
+        let got: Vec<TileCoord> = g.coords().collect();
+        // j outermost, then k, then i
+        assert_eq!(got[0], TileCoord { i: 0, j: 0, k: 0 });
+        assert_eq!(got[1], TileCoord { i: 1, j: 0, k: 0 });
+        assert_eq!(got[2], TileCoord { i: 0, j: 0, k: 1 });
+        assert_eq!(got[4], TileCoord { i: 0, j: 1, k: 0 });
+    }
+
+    #[test]
+    fn every_tile_visited_exactly_once() {
+        let g = tile_grid(9, 9, 9, 4);
+        let mut seen = std::collections::HashSet::new();
+        for c in g.coords() {
+            assert!(seen.insert(c), "tile {c:?} visited twice");
+        }
+        assert_eq!(seen.len(), g.total_tiles());
+    }
+
+    #[test]
+    fn blocked_equals_reference_exact_divisible() {
+        let mut rng = Rng::seeded(41);
+        let a = Mat::random(&mut rng, 8, 8, 8);
+        let b = Mat::random(&mut rng, 8, 8, 8);
+        assert_eq!(blocked_matmul(&a, &b, 4), a.matmul(&b));
+    }
+
+    #[test]
+    fn blocked_equals_reference_ragged_property() {
+        check(
+            "blocked-matmul-ref",
+            43,
+            40,
+            |rng| {
+                let (m, k, n) = (1 + rng.below(20), 1 + rng.below(20), 1 + rng.below(20));
+                let t = 1 + rng.below(8);
+                (Mat::random(rng, m, k, 8), Mat::random(rng, k, n, 4), t)
+            },
+            |(a, b, t)| {
+                if blocked_matmul(a, b, *t) == a.matmul(b) {
+                    Ok(())
+                } else {
+                    Err("blocked != reference".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn custom_tile_mm_sees_padded_tiles() {
+        let a = Mat::from_fn(3, 3, |r, c| (r * 3 + c) as i32);
+        let b = Mat::from_fn(3, 3, |r, c| (r == c) as i32);
+        let mut calls = 0;
+        let c = blocked_matmul_with(&a, &b, 2, |_, at, bt| {
+            calls += 1;
+            assert_eq!((at.rows(), at.cols()), (2, 2));
+            at.matmul(bt)
+        });
+        assert_eq!(calls, 2 * 2 * 2);
+        assert_eq!(c, a);
+    }
+}

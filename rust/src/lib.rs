@@ -1,0 +1,54 @@
+//! # ADiP — Adaptive-Precision Systolic Array for Matrix Multiplication Acceleration
+//!
+//! Full-system reproduction of *“ADiP: Adaptive-Precision Systolic Array for
+//! Matrix Multiplication Acceleration”* (Abdelmaksoud, Sestito, Wang,
+//! Prodromakis — CS.AR 2025) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides, bottom-up:
+//!
+//! * [`quant`] — precision modes (8b×8b / 8b×4b / 8b×2b), subword packing,
+//!   quantization helpers (incl. BitNet-style ternary).
+//! * [`dataflow`] — the ADiP/DiP preprocessing pipeline: column-rotation
+//!   permutation, 2-/3-/4-way weight-tile interleaving, and Algorithm 1
+//!   block (tiled) matrix multiplication.
+//! * [`arch`] — bit-exact functional + cycle models of the reconfigurable
+//!   PE (16 × 2-bit multipliers), the shared shifter/accumulator column
+//!   unit, and the ADiP / DiP / weight-stationary (WS) arrays.
+//! * [`analytical`] — the paper’s closed-form latency/throughput models
+//!   (Eqs. (1)–(3)) plus the DiP-paper-derived WS/DiP baselines.
+//! * [`sim`] — the cycle-accurate simulator used by the paper’s §V-B
+//!   evaluation: tile-level timing, multi-bank SRAM / DRAM access
+//!   accounting, and energy integration.
+//! * [`power`] — 22 nm post-PnR-calibrated area/power models (Table I,
+//!   Fig. 7) and DeepScaleTool-style technology normalization (Table II).
+//! * [`workload`] — Transformer attention workload generators for GPT-2
+//!   medium, BERT large and BitNet-1.58B (Fig. 1 / Fig. 8).
+//! * [`coordinator`] — the L3 serving layer: request router, shared-input
+//!   batcher (the asymmetric multi-matrix mode), tile scheduler,
+//!   backpressure and metrics.
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) from the request path.
+//! * [`report`] — regenerates every table and figure of the paper’s
+//!   evaluation as text/CSV.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analytical;
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod power;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Library version (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

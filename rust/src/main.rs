@@ -1,0 +1,303 @@
+//! `adip` — CLI for the ADiP reproduction.
+//!
+//! ```text
+//! adip figure <fig2|fig4|fig7|fig8|fig9|fig10|fig11>   regenerate a paper figure
+//! adip table  <table1|table2>                          regenerate a paper table
+//! adip all [--csv=true] [--out=DIR]                    every table + figure
+//! adip run   [--model=bitnet] [--arch=adip] [--n=32]   evaluate a workload
+//! adip gemm  [--m=..] [--k=..] [--ncols=..] [--mode=8x2] [--arch=adip] [--n=8]
+//! adip serve [--requests=64] [--workers=2] [--n=16] [--queue=256]
+//! adip artifacts [--dir=artifacts]                     PJRT runtime self-test
+//! ```
+//!
+//! Flags are `--key=value`; `--config=FILE` layers a key=value config file
+//! underneath the command-line overrides (see `rust/src/config`).
+
+use std::sync::Arc;
+
+use adip::arch::Architecture;
+use adip::config::{parse_cli_overrides, Config};
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::report;
+use adip::runtime::ArtifactRuntime;
+use adip::sim::{evaluate_model, CoSim, SimConfig};
+use adip::testutil::Rng;
+use adip::workload::TransformerModel;
+use anyhow::{anyhow, bail, Result};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let (mut cfg, pos) = parse_cli_overrides(std::env::args().skip(1))?;
+    if let Some(path) = cfg.get("config") {
+        let mut base = Config::from_file(path)?;
+        base.merge(&cfg);
+        cfg = base;
+    }
+    let cmd = pos.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "figure" | "table" => {
+            let name = pos
+                .get(1)
+                .ok_or_else(|| anyhow!("usage: adip {cmd} <name> (e.g. fig9, table1)"))?;
+            let r = report::render(name)?;
+            if cfg.get_bool("csv", false)? {
+                print!("{}", r.csv);
+            } else {
+                print!("{}", r.text);
+            }
+        }
+        "all" => cmd_all(&cfg)?,
+        "run" => cmd_run(&cfg)?,
+        "gemm" => cmd_gemm(&cfg)?,
+        "serve" => cmd_serve(&cfg)?,
+        "trace" => cmd_trace(&cfg)?,
+        "artifacts" => cmd_artifacts(&cfg)?,
+        "help" | "--help" | "-h" => print!("{}", HELP),
+        other => bail!("unknown command {other:?}\n{HELP}"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+adip — ADiP adaptive-precision systolic array (paper reproduction)
+
+commands:
+  figure <name>    regenerate fig2|fig4|fig7|fig8|fig9|fig10|fig11
+  table <name>     regenerate table1|table2
+  all              every artifact (--csv=true for CSV, --out=DIR to write files)
+  run              evaluate an attention workload (--model, --arch, --n)
+  gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n)
+  serve            coordinator demo (--requests/--workers/--n/--queue)
+  trace            trace-driven serving (--model/--layers/--rate/--workers)
+  artifacts        PJRT runtime self-test (--dir=artifacts)
+  help             this text
+";
+
+fn parse_arch(cfg: &Config) -> Result<Architecture> {
+    Ok(match cfg.get("arch").unwrap_or("adip").to_ascii_lowercase().as_str() {
+        "ws" => Architecture::Ws,
+        "dip" => Architecture::Dip,
+        "adip" => Architecture::Adip,
+        other => bail!("unknown arch {other:?} (ws|dip|adip)"),
+    })
+}
+
+fn cmd_all(cfg: &Config) -> Result<()> {
+    let out_dir = cfg.get("out").map(std::path::PathBuf::from);
+    if let Some(d) = &out_dir {
+        std::fs::create_dir_all(d)?;
+    }
+    for name in report::ALL_ARTIFACTS {
+        let r = report::render(name)?;
+        println!("{}", r.text);
+        if let Some(d) = &out_dir {
+            std::fs::write(d.join(format!("{name}.txt")), &r.text)?;
+            std::fs::write(d.join(format!("{name}.csv")), &r.csv)?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(cfg: &Config) -> Result<()> {
+    let model_name = cfg.get("model").unwrap_or("bitnet");
+    let model = TransformerModel::by_name(model_name)
+        .ok_or_else(|| anyhow!("unknown model {model_name:?} (gpt2|bert|bitnet)"))?;
+    let n = cfg.get_usize("n", 32)?;
+    let sim = SimConfig { arch: adip::arch::ArchConfig::with_n(n), ..SimConfig::default() };
+    println!("model: {} | array: {n}x{n} @ 1 GHz", model.name);
+    println!(
+        "{:<6} {:>14} {:>12} {:>12} {:>12}",
+        "arch", "cycles", "latency(ms)", "energy(mJ)", "memory(GB)"
+    );
+    for arch in Architecture::ALL {
+        let r = evaluate_model(arch, &model, &sim);
+        println!(
+            "{:<6} {:>14} {:>12.3} {:>12.3} {:>12.3}",
+            arch.name(),
+            r.total_cycles(),
+            r.total_seconds() * 1e3,
+            r.total_energy_j() * 1e3,
+            r.total_memory_bytes() as f64 / 1e9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gemm(cfg: &Config) -> Result<()> {
+    let m = cfg.get_usize("m", 256)?;
+    let k = cfg.get_usize("k", 256)?;
+    let ncols = cfg.get_usize("ncols", 256)?;
+    let n = cfg.get_usize("n", 16)?;
+    let mode = cfg.get_mode("mode", PrecisionMode::W2)?;
+    let arch = parse_arch(cfg)?;
+    let mut rng = Rng::seeded(cfg.get_usize("seed", 42)? as u64);
+    let a = Mat::random(&mut rng, m, k, 8);
+    let b = Mat::random(&mut rng, k, ncols, mode.weight_bits());
+    let mut sim = CoSim::new(adip::arch::build_array(arch, adip::arch::ArchConfig::with_n(n)));
+    let t0 = std::time::Instant::now();
+    let r = sim.run_gemm(&a, &b, mode, false)?;
+    let host = t0.elapsed();
+    anyhow::ensure!(r.outputs[0] == a.matmul(&b), "co-sim output mismatch vs reference");
+    println!("GEMM {m}x{k}x{ncols} on {arch} {n}x{n}, mode {mode}");
+    println!("  passes:        {}", r.passes);
+    println!("  cycles:        {}", r.cycles);
+    println!("  energy:        {:.3} µJ", r.energy_j * 1e6);
+    println!("  memory:        {} bytes (input traffic)", r.memory.paper_total_bytes());
+    println!("  verified:      outputs == i32 reference GEMM");
+    println!("  host time:     {:.1} ms", host.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_serve(cfg: &Config) -> Result<()> {
+    let requests = cfg.get_usize("requests", 64)?;
+    let workers = cfg.get_usize("workers", 2)?;
+    let n = cfg.get_usize("n", 16)?;
+    let queue = cfg.get_usize("queue", 256)?;
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: parse_arch(cfg)?,
+        n,
+        workers,
+        queue_capacity: queue,
+        batch_window: cfg.get_usize("window", 16)?,
+    });
+    let mut rng = Rng::seeded(7);
+    let mut rxs = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut rejected = 0usize;
+    for i in 0..requests {
+        // mix of Q/K/V-style shared-input 2-bit requests and 8-bit act-act
+        let shared = Arc::new(Mat::random(&mut rng, 64, 64, 8));
+        let bits = *rng.choose(&[2u32, 4, 8]);
+        let req = MatmulRequest {
+            id: 0,
+            input_id: (i / 3) as u64,
+            a: shared,
+            bs: vec![Arc::new(Mat::random(&mut rng, 64, 64, bits))],
+            weight_bits: bits,
+            act_act: i % 7 == 0,
+            tag: format!("req-{i}"),
+        };
+        match coord.try_submit(req) {
+            Ok((_, rx)) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.result.is_ok() {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} requests ({rejected} rejected) in {dt:.3}s = {:.0} req/s",
+        ok as f64 / dt
+    );
+    println!("--- metrics ---\n{}", coord.metrics().render());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_trace(cfg: &Config) -> Result<()> {
+    use adip::workload::{attention_trace, TraceConfig};
+    let model_name = cfg.get("model").unwrap_or("bitnet");
+    let model = TransformerModel::by_name(model_name)
+        .ok_or_else(|| anyhow!("unknown model {model_name:?} (gpt2|bert|bitnet)"))?;
+    let tcfg = TraceConfig {
+        dim: cfg.get_usize("dim", 96)?,
+        head_cols: cfg.get_usize("head", 32)?,
+        rate_per_s: cfg.get_f64("rate", 2000.0)?,
+        layers: cfg.get_usize("layers", 8)?,
+        heads: cfg.get_usize("heads", 2)?,
+    };
+    let trace = attention_trace(&model, &tcfg, cfg.get_usize("seed", 1)? as u64);
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: parse_arch(cfg)?,
+        n: cfg.get_usize("n", 32)?,
+        workers: cfg.get_usize("workers", 2)?,
+        queue_capacity: cfg.get_usize("queue", 1024)?,
+        batch_window: cfg.get_usize("window", 8)?,
+    });
+    println!(
+        "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",
+        model.name,
+        trace.len(),
+        tcfg.head_cols,
+        tcfg.rate_per_s
+    );
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for t in trace {
+        // pace submissions to the trace's arrival process
+        let until = std::time::Duration::from_secs_f64(t.arrival_s);
+        if let Some(sleep) = until.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        rxs.push(coord.try_submit(t.request)?.1);
+    }
+    let total = rxs.len();
+    for rx in rxs {
+        rx.recv()?.result.map_err(|e| anyhow!("request failed: {e}"))?;
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!("completed {total} in {dt:.3}s ({:.0} req/s)", total as f64 / dt);
+    println!(
+        "queue wait:   p50 {:.3} ms | p99 {:.3} ms",
+        m.queue_percentile(50.0).unwrap_or(0.0) * 1e3,
+        m.queue_percentile(99.0).unwrap_or(0.0) * 1e3
+    );
+    println!(
+        "service time: p50 {:.3} ms | p99 {:.3} ms",
+        m.service_percentile(50.0).unwrap_or(0.0) * 1e3,
+        m.service_percentile(99.0).unwrap_or(0.0) * 1e3
+    );
+    println!(
+        "fused batches: {} / {}",
+        m.fused_batches.load(std::sync::atomic::Ordering::Relaxed),
+        m.batches.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts(cfg: &Config) -> Result<()> {
+    let dir = cfg.get("dir").unwrap_or("artifacts");
+    let rt = ArtifactRuntime::load(dir)?;
+    println!("platform: {} | artifacts: {:?}", rt.platform(), rt.names());
+    // Smoke-run the quantized multi-matrix artifacts against the rust
+    // reference: artifact matmul_8x{8,4,2} takes x plus k weight matrices
+    // (shared-input mode) and returns k products.
+    let mut rng = Rng::seeded(11);
+    for mode in PrecisionMode::ALL {
+        let name = format!("matmul_{}", mode.name());
+        if !rt.names().contains(&name.as_str()) {
+            continue;
+        }
+        let k = mode.interleave_factor();
+        let a = Mat::random(&mut rng, 32, 32, 8);
+        let bs: Vec<Mat> =
+            (0..k).map(|_| Mat::random(&mut rng, 32, 32, mode.weight_bits())).collect();
+        let fa = adip::runtime::mat_to_f32(&a);
+        let fbs: Vec<Vec<f32>> = bs.iter().map(adip::runtime::mat_to_f32).collect();
+        let dims = [32usize, 32];
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&fa, &dims)];
+        inputs.extend(fbs.iter().map(|f| (f.as_slice(), &dims[..])));
+        let out = rt.run_f32(&name, &inputs)?;
+        anyhow::ensure!(out.len() == k, "{name}: expected {k} outputs, got {}", out.len());
+        for (s, b) in bs.iter().enumerate() {
+            let got = adip::runtime::f32_to_mat(&out[s], 32, 32);
+            anyhow::ensure!(got == a.matmul(b), "{name}[{s}]: PJRT output != rust reference");
+        }
+        println!("  {name}: OK ({k} outputs match rust reference GEMM)");
+    }
+    Ok(())
+}

@@ -1,0 +1,17 @@
+//! 22 nm-calibrated area/power/energy models and technology normalization.
+//!
+//! The paper implements DiP and ADiP from synthesis to GDSII (Cadence
+//! Genus/Innovus, commercial 22 nm, 0.8 V, 1 GHz) and reports post-PnR
+//! area/power points (Table I, Fig. 7, Table II). We do not have that flow;
+//! per the substitution policy [`model`] is a component-structured model
+//! **calibrated to reproduce every published point exactly**, and
+//! [`scaling`] re-derives the DeepScaleTool normalization factors used by
+//! Table II from the paper's own before/after pairs.
+
+pub mod model;
+pub mod scaling;
+
+pub use model::{
+    adip_point, dip_point, energy_joules, overheads, ws_point, HwPoint, Overheads, EVAL_SIZES,
+};
+pub use scaling::{area_eff_to_22nm, energy_eff_to_22nm};

@@ -1,0 +1,227 @@
+//! Post-PnR-calibrated area & power model (Table I, Fig. 7).
+//!
+//! Anchors (published):
+//! * DiP 64×64: **1.00 mm², 0.858 W** at 22 nm / 0.8 V / 1 GHz (Table II).
+//! * ADiP-vs-DiP overhead ratios per size (Table I, with the extra digit
+//!   recoverable from the Fig. 7 percentages):
+//!   area 1.406 / 1.34 / 1.266 / 1.289 / 1.307 and power 1.625 / 1.59 /
+//!   1.566 / 1.628 / 1.690 for N ∈ {4, 8, 16, 32, 64}. “Total overhead”
+//!   is their product (verified to reproduce the 2.3 / 2.13 / 1.99 / 2.1 /
+//!   2.2 column).
+//! * WS-vs-DiP: DiP improves power up to **1.25×** and area up to
+//!   **1.09×** (§V-B) — applied as constant WS ratios.
+//!
+//! Structure between anchors: DiP area/power decompose as PE array (∝ N²)
+//! plus boundary periphery (∝ N) with a 90/10 split at 64×64 — the split
+//! only affects non-published interpolated sizes and is documented as an
+//! assumption in DESIGN.md §Substitutions.
+
+/// Array sizes of the paper's design space exploration.
+pub const EVAL_SIZES: [usize; 5] = [4, 8, 16, 32, 64];
+
+/// ADiP/DiP area overhead ratios at [`EVAL_SIZES`] (Fig. 7(a)).
+const ADIP_AREA_RATIO: [f64; 5] = [1.406, 1.34, 1.266, 1.289, 1.307];
+/// ADiP/DiP power overhead ratios at [`EVAL_SIZES`] (Fig. 7(b)).
+const ADIP_POWER_RATIO: [f64; 5] = [1.6251, 1.59, 1.566, 1.628, 1.690];
+
+/// DiP 64×64 post-PnR anchors (Table II).
+const DIP_64_AREA_MM2: f64 = 1.0;
+const DIP_64_POWER_W: f64 = 0.858;
+
+/// WS/DiP constant ratios (§V-B “up to” values).
+const WS_AREA_RATIO: f64 = 1.09;
+const WS_POWER_RATIO: f64 = 1.25;
+
+/// PE-array share of DiP area/power at 64×64 (remainder ∝ N periphery).
+const PE_SHARE: f64 = 0.9;
+
+/// One architecture instance's physical point.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HwPoint {
+    /// Post-PnR area in mm².
+    pub area_mm2: f64,
+    /// Total power at 1 GHz / 0.8 V in W.
+    pub power_w: f64,
+}
+
+/// ADiP-vs-DiP overheads at a size (the Table I row).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Overheads {
+    /// Array size `N`.
+    pub n: usize,
+    /// Area overhead (×).
+    pub area_x: f64,
+    /// Power overhead (×).
+    pub power_x: f64,
+    /// Total overhead (×) — area × power.
+    pub total_x: f64,
+}
+
+/// Piecewise-linear interpolation of a ratio table in log₂(N).
+fn interp_ratio(table: &[f64; 5], n: usize) -> f64 {
+    assert!(n >= 2, "array size too small");
+    let x = (n as f64).log2();
+    let xs: Vec<f64> = EVAL_SIZES.iter().map(|&s| (s as f64).log2()).collect();
+    if x <= xs[0] {
+        return table[0];
+    }
+    if x >= xs[4] {
+        return table[4];
+    }
+    for i in 0..4 {
+        if x <= xs[i + 1] {
+            let t = (x - xs[i]) / (xs[i + 1] - xs[i]);
+            return table[i] + t * (table[i + 1] - table[i]);
+        }
+    }
+    unreachable!()
+}
+
+/// N²/N component scaling relative to the 64×64 anchor.
+fn size_scale(n: usize) -> f64 {
+    let r = n as f64 / 64.0;
+    PE_SHARE * r * r + (1.0 - PE_SHARE) * r
+}
+
+/// DiP physical point at size `n`.
+pub fn dip_point(n: usize) -> HwPoint {
+    HwPoint {
+        area_mm2: DIP_64_AREA_MM2 * size_scale(n),
+        power_w: DIP_64_POWER_W * size_scale(n),
+    }
+}
+
+/// ADiP physical point at size `n` (DiP × calibrated overhead ratios).
+pub fn adip_point(n: usize) -> HwPoint {
+    let d = dip_point(n);
+    HwPoint {
+        area_mm2: d.area_mm2 * interp_ratio(&ADIP_AREA_RATIO, n),
+        power_w: d.power_w * interp_ratio(&ADIP_POWER_RATIO, n),
+    }
+}
+
+/// Conventional WS physical point at size `n` (DiP × FIFO overheads).
+pub fn ws_point(n: usize) -> HwPoint {
+    let d = dip_point(n);
+    HwPoint { area_mm2: d.area_mm2 * WS_AREA_RATIO, power_w: d.power_w * WS_POWER_RATIO }
+}
+
+/// The Table I overhead row at size `n`. The published "total overhead"
+/// column is the product of the *two-decimal rounded* area and power
+/// ratios (verified: 1.41×1.63 = 2.30, 1.27×1.57 = 1.99, 1.30×1.69 = 2.20
+/// — exactly the published 2.3 / 1.99 / 2.2), so the model reproduces that
+/// convention.
+pub fn overheads(n: usize) -> Overheads {
+    let a = interp_ratio(&ADIP_AREA_RATIO, n);
+    let p = interp_ratio(&ADIP_POWER_RATIO, n);
+    let round2 = |v: f64| (v * 100.0).round() / 100.0;
+    Overheads { n, area_x: a, power_x: p, total_x: round2(a) * round2(p) }
+}
+
+/// Energy in joules for `cycles` at `power_w` and `freq_hz`.
+pub fn energy_joules(power_w: f64, cycles: u64, freq_hz: f64) -> f64 {
+    power_w * cycles as f64 / freq_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round2(v: f64) -> f64 {
+        (v * 100.0).round() / 100.0
+    }
+
+    #[test]
+    fn table1_overhead_columns_reproduced() {
+        // Table I: (area, power, total) per size, rounded as published.
+        let published: [(usize, f64, f64, f64); 5] = [
+            (4, 1.41, 1.63, 2.3),
+            (8, 1.34, 1.59, 2.13),
+            (16, 1.27, 1.57, 1.99),
+            (32, 1.29, 1.63, 2.1),
+            (64, 1.3, 1.69, 2.2),
+        ];
+        for (n, a, p, t) in published {
+            let o = overheads(n);
+            assert!((round2(o.area_x) - a).abs() < 0.011, "n={n} area {} vs {a}", o.area_x);
+            assert!((round2(o.power_x) - p).abs() < 0.011, "n={n} power {} vs {p}", o.power_x);
+            // totals are published at 2–3 significant digits
+            assert!((o.total_x - t).abs() < 0.03, "n={n} total {} vs {t}", o.total_x);
+        }
+    }
+
+    #[test]
+    fn fig7_percentages_reproduced() {
+        // Fig. 7: area overhead 40.6% → 26.6% → 28.9% → 30.7%;
+        // power 62.5% → 56.6% → 62.8% → 69%.
+        let pts = [(4, 40.6, 62.5), (16, 26.6, 56.6), (32, 28.9, 62.8), (64, 30.7, 69.0)];
+        for (n, area_pct, power_pct) in pts {
+            let o = overheads(n);
+            assert!(((o.area_x - 1.0) * 100.0 - area_pct).abs() < 0.11, "n={n} area");
+            assert!(((o.power_x - 1.0) * 100.0 - power_pct).abs() < 0.11, "n={n} power");
+        }
+    }
+
+    #[test]
+    fn dip_and_adip_64x64_anchors() {
+        let d = dip_point(64);
+        assert!((d.area_mm2 - 1.0).abs() < 1e-12);
+        assert!((d.power_w - 0.858).abs() < 1e-12);
+        let a = adip_point(64);
+        // Table II publishes 1.32 mm² / 1.452 W (ratio rounding: 1.307 /
+        // 1.690 of Table I give 1.307 mm² / 1.450 W — within 1.1%).
+        assert!((a.area_mm2 - 1.32).abs() < 0.015, "area {}", a.area_mm2);
+        assert!((a.power_w - 1.452).abs() < 0.003, "power {}", a.power_w);
+    }
+
+    #[test]
+    fn adip_64x64_efficiency_metrics() {
+        // Table II: 8.192 TOPS @8b×8b → 5.64 TOPS/W / 6.2 TOPS/mm²;
+        // ×4 at 8b×2b → 22.57 TOPS/W / 24.82 TOPS/mm².
+        let a = adip_point(64);
+        let tops8 = 8.192;
+        assert!((tops8 / a.power_w - 5.64).abs() < 0.03);
+        assert!((tops8 / a.area_mm2 - 6.2).abs() < 0.08);
+        assert!((4.0 * tops8 / a.power_w - 22.57).abs() < 0.12);
+        assert!((4.0 * tops8 / a.area_mm2 - 24.82).abs() < 0.32);
+        // DiP energy efficiency: 9.548 TOPS/W.
+        let d = dip_point(64);
+        assert!((tops8 / d.power_w - 9.548).abs() < 0.01);
+    }
+
+    #[test]
+    fn ws_ratios_and_energy_eff_per_area() {
+        let (w, d) = (ws_point(32), dip_point(32));
+        assert!((w.area_mm2 / d.area_mm2 - 1.09).abs() < 1e-12);
+        assert!((w.power_w / d.power_w - 1.25).abs() < 1e-12);
+        // §V-B: DiP beats WS in energy efficiency per area by up to 2.02×.
+        // Single-tile throughput ratio (3N−2)/(2N−1) × power 1.25 × area 1.09.
+        let n = 32.0f64;
+        let thr = (3.0 * n - 2.0) / (2.0 * n - 1.0);
+        let gain = thr * 1.25 * 1.09;
+        assert!((gain - 2.02).abs() < 0.02, "gain {gain}");
+    }
+
+    #[test]
+    fn interpolation_monotone_between_anchors() {
+        // area/power grow monotonically with N
+        let mut last = 0.0;
+        for n in [4, 6, 8, 12, 16, 24, 32, 48, 64, 96] {
+            let a = adip_point(n).area_mm2;
+            assert!(a > last, "n={n}");
+            last = a;
+        }
+        // ratio interpolation stays within table bounds
+        for n in 4..=64 {
+            let o = overheads(n);
+            assert!(o.area_x >= 1.26 && o.area_x <= 1.41, "n={n} {o:?}");
+        }
+    }
+
+    #[test]
+    fn energy_accounting() {
+        // 1 W for 1e9 cycles at 1 GHz = 1 J
+        assert!((energy_joules(1.0, 1_000_000_000, 1e9) - 1.0).abs() < 1e-12);
+        assert!((energy_joules(0.5, 2_000_000_000, 1e9) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,95 @@
+//! DeepScaleTool-style technology normalization to 22 nm (Table II).
+//!
+//! The paper normalizes competitor metrics to 22 nm with DeepScaleTool
+//! [39, 40]. The tool itself is not available offline; per the
+//! substitution policy the per-node factors below are **re-derived from
+//! the paper's own before/after pairs** in Table II:
+//!
+//! | node  | derived from            | area-eff ×        | energy-eff ×      |
+//! |-------|-------------------------|-------------------|-------------------|
+//! | 7 nm  | TPU v4i 0.345→0.017,    | 0.0493            | 0.439             |
+//! |       | 0.786→0.345             |                   |                   |
+//! | 40 nm | DTQAtten 0.676→2.302,   | 3.23 (geo-mean of | 1.52              |
+//! |       | DTATrans 0.979→2.984    | 3.405 / 3.048)    |                   |
+//! | 65 nm | BitSystolic 0.1→0.935,  | 9.35              | 7.10              |
+//! |       | 26.7/4→47.412           |                   |                   |
+//!
+//! The published pairs embed rounding, so reproductions are asserted to
+//! within ~12% (exact for 65 nm and 7 nm, the 40 nm pair is internally
+//! inconsistent at the percent level — see DESIGN.md §Substitutions).
+
+use anyhow::{bail, Result};
+
+/// Area-efficiency (TOPS/mm²) multiplication factor when normalizing a
+/// design at `from_nm` to 22 nm.
+pub fn area_eff_to_22nm(from_nm: u32) -> Result<f64> {
+    Ok(match from_nm {
+        22 => 1.0,
+        7 => 0.0493,
+        40 => 3.23,
+        65 => 9.35,
+        other => bail!("no DeepScaleTool factor derived for {other} nm"),
+    })
+}
+
+/// Energy-efficiency (TOPS/W) multiplication factor when normalizing a
+/// design at `from_nm` to 22 nm.
+pub fn energy_eff_to_22nm(from_nm: u32) -> Result<f64> {
+    Ok(match from_nm {
+        22 => 1.0,
+        7 => 0.439,
+        40 => 1.52,
+        65 => 7.10,
+        other => bail!("no DeepScaleTool factor derived for {other} nm"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_at_22nm() {
+        assert_eq!(area_eff_to_22nm(22).unwrap(), 1.0);
+        assert_eq!(energy_eff_to_22nm(22).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn tpu_v4i_row_reproduced() {
+        // 7 nm: 0.345 TOPS/mm² → 0.017; 0.786 TOPS/W → 0.345.
+        let area = 0.345 * area_eff_to_22nm(7).unwrap();
+        assert!((area - 0.017).abs() < 0.0005, "{area}");
+        let energy = 0.786 * energy_eff_to_22nm(7).unwrap();
+        assert!((energy - 0.345).abs() < 0.005, "{energy}");
+    }
+
+    #[test]
+    fn bitsystolic_row_reproduced() {
+        // 65 nm: area eff 0.1 → 0.935 (published applies the node factor to
+        // the 2b×2b point); energy eff 26.7/4 (8b×2b equivalence) → 47.412.
+        let area = 0.1 * area_eff_to_22nm(65).unwrap();
+        assert!((area - 0.935).abs() < 0.01, "{area}");
+        let energy = (26.7 / 4.0) * energy_eff_to_22nm(65).unwrap();
+        assert!((energy - 47.412).abs() < 0.5, "{energy}");
+    }
+
+    #[test]
+    fn dtq_and_dta_rows_within_tolerance() {
+        // 40 nm rows: published pairs are mutually inconsistent by ~11%,
+        // the geo-mean factor lands within that band for both.
+        for (before, after) in [(0.676, 2.302), (0.979, 2.984)] {
+            let got: f64 = before * area_eff_to_22nm(40).unwrap();
+            assert!((got / after - 1.0).abs() < 0.12, "{before}→{got} vs {after}");
+        }
+        for (before, after) in [(1.298, 1.973), (1.623, 2.470)] {
+            let got: f64 = before * energy_eff_to_22nm(40).unwrap();
+            assert!((got / after - 1.0).abs() < 0.02, "{before}→{got} vs {after}");
+        }
+    }
+
+    #[test]
+    fn unknown_nodes_error() {
+        assert!(area_eff_to_22nm(130).is_err());
+        assert!(energy_eff_to_22nm(3).is_err());
+    }
+}

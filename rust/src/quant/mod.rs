@@ -1,0 +1,27 @@
+//! Precision modes, subword arithmetic, packing and quantization.
+//!
+//! ADiP keeps activations at 8 bits and adapts the *weight* precision
+//! (8b×8b, 8b×4b, 8b×2b — paper §III/§IV). Reduced weight precision is
+//! traded for **multi-matrix multiplication with a shared input matrix**:
+//! a 4-bit mode interleaves 2 weight matrices, a 2-bit mode interleaves up
+//! to 4 (or 3 for the Q/K/V variant of Fig. 5(d)) into one stationary tile.
+//!
+//! This module is the numeric substrate for everything above it:
+//!
+//! * [`types`] — [`PrecisionMode`] and value-range helpers.
+//! * [`subword`] — radix-4 (2-bit) signed subword decomposition, the exact
+//!   arithmetic performed by the reconfigurable PE’s 16 2-bit multipliers.
+//! * [`packing`] — bit-packing of 4-/2-bit weights into 8-bit carriers, as
+//!   stored in the stationary weight registers and in memory.
+//! * [`quantize`] — float → int8/int4/int2 symmetric quantization and the
+//!   BitNet-1.58B ternary (absmean) scheme.
+
+pub mod packing;
+pub mod quantize;
+pub mod subword;
+pub mod types;
+
+pub use packing::{pack_int2, pack_int4, unpack_int2, unpack_int4};
+pub use quantize::{dequantize, quantize_symmetric, ternary_absmean, QuantTensor};
+pub use subword::{decompose_radix4, recompose_radix4, subword_product};
+pub use types::{clamp_to, value_range, PrecisionMode};

@@ -1,0 +1,130 @@
+//! Bit-packing of 4-/2-bit weights into 8-bit memory carriers.
+//!
+//! ADiP stores interleaved low-precision weights in the same 8-bit
+//! stationary registers used for full-precision weights (paper §III:
+//! “the weight register stores a single weight value … or 2 and 4
+//! interleaved values encoded in 4-bit or 2-bit”). Packing order is
+//! little-endian in the byte: element 0 occupies the least-significant
+//! field. This is also the layout the L1 Pallas kernel consumes
+//! (`python/compile/kernels/adip_matmul.py` uses the identical convention —
+//! checked by the golden-vector cross test).
+
+use super::types::value_range;
+
+/// Pack two signed 4-bit values (`-8..=7`) into one byte; `vals[0]` in the
+/// low nibble.
+pub fn pack_int4(vals: [i32; 2]) -> u8 {
+    let (lo, hi) = value_range(4);
+    for v in vals {
+        assert!((lo..=hi).contains(&v), "{v} out of int4 range");
+    }
+    ((vals[0] as u8) & 0x0F) | (((vals[1] as u8) & 0x0F) << 4)
+}
+
+/// Unpack one byte into two signed 4-bit values; inverse of [`pack_int4`].
+pub fn unpack_int4(b: u8) -> [i32; 2] {
+    [sign_extend((b & 0x0F) as i32, 4), sign_extend(((b >> 4) & 0x0F) as i32, 4)]
+}
+
+/// Pack four signed 2-bit values (`-2..=1`) into one byte; `vals[0]` in the
+/// lowest 2-bit field.
+pub fn pack_int2(vals: [i32; 4]) -> u8 {
+    let (lo, hi) = value_range(2);
+    let mut b = 0u8;
+    for (i, v) in vals.into_iter().enumerate() {
+        assert!((lo..=hi).contains(&v), "{v} out of int2 range");
+        b |= ((v as u8) & 0b11) << (2 * i);
+    }
+    b
+}
+
+/// Unpack one byte into four signed 2-bit values; inverse of [`pack_int2`].
+pub fn unpack_int2(b: u8) -> [i32; 4] {
+    [
+        sign_extend((b & 0b11) as i32, 2),
+        sign_extend(((b >> 2) & 0b11) as i32, 2),
+        sign_extend(((b >> 4) & 0b11) as i32, 2),
+        sign_extend(((b >> 6) & 0b11) as i32, 2),
+    ]
+}
+
+/// Sign-extend the low `bits` bits of `v`.
+pub fn sign_extend(v: i32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    (v << shift) >> shift
+}
+
+/// Pack a slice of int4 values (length must be even) into bytes.
+pub fn pack_int4_slice(vals: &[i32]) -> Vec<u8> {
+    assert!(vals.len() % 2 == 0, "int4 slice length must be even");
+    vals.chunks_exact(2).map(|c| pack_int4([c[0], c[1]])).collect()
+}
+
+/// Pack a slice of int2 values (length must be a multiple of 4) into bytes.
+pub fn pack_int2_slice(vals: &[i32]) -> Vec<u8> {
+    assert!(vals.len() % 4 == 0, "int2 slice length must be multiple of 4");
+    vals.chunks_exact(4)
+        .map(|c| pack_int2([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Unpack a byte slice into int4 values.
+pub fn unpack_int4_slice(bytes: &[u8]) -> Vec<i32> {
+    bytes.iter().flat_map(|&b| unpack_int4(b)).collect()
+}
+
+/// Unpack a byte slice into int2 values.
+pub fn unpack_int2_slice(bytes: &[u8]) -> Vec<i32> {
+    bytes.iter().flat_map(|&b| unpack_int2(b)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_roundtrip_exhaustive() {
+        for a in -8..=7 {
+            for b in -8..=7 {
+                assert_eq!(unpack_int4(pack_int4([a, b])), [a, b]);
+            }
+        }
+    }
+
+    #[test]
+    fn int2_roundtrip_exhaustive() {
+        for a in -2..=1 {
+            for b in -2..=1 {
+                for c in -2..=1 {
+                    for d in -2..=1 {
+                        assert_eq!(unpack_int2(pack_int2([a, b, c, d])), [a, b, c, d]);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slice_roundtrips() {
+        let v4: Vec<i32> = (-8..8).collect();
+        assert_eq!(unpack_int4_slice(&pack_int4_slice(&v4)), v4);
+        let v2: Vec<i32> = (0..64).map(|i| (i % 4) - 2).collect();
+        assert_eq!(unpack_int2_slice(&pack_int2_slice(&v2)), v2);
+    }
+
+    #[test]
+    fn sign_extension() {
+        assert_eq!(sign_extend(0b11, 2), -1);
+        assert_eq!(sign_extend(0b10, 2), -2);
+        assert_eq!(sign_extend(0b01, 2), 1);
+        assert_eq!(sign_extend(0xF, 4), -1);
+        assert_eq!(sign_extend(0x8, 4), -8);
+        assert_eq!(sign_extend(0x7, 4), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_int2_rejects_out_of_range() {
+        pack_int2([2, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Float → low-precision quantization schemes used by the workloads.
+//!
+//! The evaluation models (paper §V-B) use:
+//! * **int8** symmetric per-tensor for all activations (and GPT-2 weights),
+//! * **int4** symmetric per-tensor for BERT-large weights,
+//! * **ternary absmean** (the BitNet-1.58B scheme [11, 37]) for BitNet
+//!   weights, stored in the 2-bit fields of the 8b×2b mode.
+
+use super::types::{clamp_to, value_range};
+
+/// A quantized tensor: integer values + a single symmetric scale such that
+/// `float ≈ value × scale`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantTensor {
+    /// Integer values, row-major.
+    pub values: Vec<i32>,
+    /// Symmetric dequantization scale.
+    pub scale: f32,
+    /// Bit-width of `values` (2, 4 or 8).
+    pub bits: u32,
+    /// Rows of the (2-D) tensor.
+    pub rows: usize,
+    /// Columns of the (2-D) tensor.
+    pub cols: usize,
+}
+
+impl QuantTensor {
+    /// Element at `(r, c)` (row-major).
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.values[r * self.cols + c]
+    }
+
+    /// Dequantized float value at `(r, c)`.
+    pub fn get_f32(&self, r: usize, c: usize) -> f32 {
+        self.get(r, c) as f32 * self.scale
+    }
+}
+
+/// Symmetric per-tensor quantization to `bits` bits: scale = max(|x|) /
+/// qmax, values = round(x / scale) clamped to range. A zero tensor gets
+/// scale 1.0.
+pub fn quantize_symmetric(data: &[f32], rows: usize, cols: usize, bits: u32) -> QuantTensor {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    let (_, qmax) = value_range(bits);
+    let absmax = data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = if absmax == 0.0 { 1.0 } else { absmax / qmax as f32 };
+    let values = data
+        .iter()
+        .map(|&v| clamp_to((v / scale).round() as i32, bits))
+        .collect();
+    QuantTensor { values, scale, bits, rows, cols }
+}
+
+/// BitNet-1.58B ternary quantization (absmean): scale = mean(|x|), values =
+/// round(x / scale) clamped to {−1, 0, 1}. The ternary values fit the 2-bit
+/// fields of the 8b×2b mode with headroom (the 2-bit range is −2..1).
+pub fn ternary_absmean(data: &[f32], rows: usize, cols: usize) -> QuantTensor {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    let absmean = if data.is_empty() {
+        1.0
+    } else {
+        let s: f32 = data.iter().map(|v| v.abs()).sum();
+        let m = s / data.len() as f32;
+        if m == 0.0 {
+            1.0
+        } else {
+            m
+        }
+    };
+    let values = data
+        .iter()
+        .map(|&v| ((v / absmean).round() as i32).clamp(-1, 1))
+        .collect();
+    QuantTensor { values, scale: absmean, bits: 2, rows, cols }
+}
+
+/// Dequantize back to floats (row-major).
+pub fn dequantize(t: &QuantTensor) -> Vec<f32> {
+    t.values.iter().map(|&v| v as f32 * t.scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn symmetric_int8_roundtrip_error_bounded() {
+        let mut rng = Rng::seeded(7);
+        let data: Vec<f32> = (0..256).map(|_| rng.f32_range(-3.0, 3.0)).collect();
+        let q = quantize_symmetric(&data, 16, 16, 8);
+        let deq = dequantize(&q);
+        let max_abs = data.iter().fold(0f32, |m, &v| m.max(v.abs()));
+        for (orig, back) in data.iter().zip(&deq) {
+            assert!((orig - back).abs() <= q.scale * 0.5 + 1e-6, "orig={orig} back={back}");
+        }
+        // scale reconstructs the max value
+        assert!((q.scale * 127.0 - max_abs).abs() < 1e-4);
+    }
+
+    #[test]
+    fn symmetric_values_in_range() {
+        let mut rng = Rng::seeded(11);
+        for bits in [2u32, 4, 8] {
+            let data: Vec<f32> = (0..64).map(|_| rng.f32_range(-10.0, 10.0)).collect();
+            let q = quantize_symmetric(&data, 8, 8, bits);
+            let (lo, hi) = value_range(bits);
+            assert!(q.values.iter().all(|&v| (lo..=hi).contains(&v)));
+            assert_eq!(q.bits, bits);
+        }
+    }
+
+    #[test]
+    fn zero_tensor_gets_unit_scale() {
+        let q = quantize_symmetric(&[0.0; 16], 4, 4, 8);
+        assert_eq!(q.scale, 1.0);
+        assert!(q.values.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn ternary_values_are_ternary() {
+        let mut rng = Rng::seeded(3);
+        let data: Vec<f32> = (0..128).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+        let q = ternary_absmean(&data, 8, 16);
+        assert!(q.values.iter().all(|&v| (-1..=1).contains(&v)));
+        assert_eq!(q.bits, 2);
+        // absmean scale is the mean absolute value
+        let expect: f32 = data.iter().map(|v| v.abs()).sum::<f32>() / 128.0;
+        assert!((q.scale - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn accessors() {
+        let q = QuantTensor { values: (0..6).collect(), scale: 0.5, bits: 8, rows: 2, cols: 3 };
+        assert_eq!(q.get(1, 2), 5);
+        assert_eq!(q.get_f32(1, 0), 1.5);
+    }
+}

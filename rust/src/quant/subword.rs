@@ -1,0 +1,156 @@
+//! Radix-4 (2-bit) signed subword decomposition.
+//!
+//! The reconfigurable PE (paper §III, Fig. 3(a)) builds a full-precision
+//! product out of 2-bit × 2-bit partial products — the divide-and-conquer
+//! decomposition of [27]. An 8-bit two's-complement value decomposes as
+//!
+//! ```text
+//! a = a₃·4³ + a₂·4² + a₁·4 + a₀
+//! ```
+//!
+//! where the *top* subword `a₃ ∈ {−2..1}` is signed and the lower subwords
+//! `a₀..a₂ ∈ {0..3}` are unsigned. With this convention the shift-add
+//! recombination of partial products is exact for any signed operand pair,
+//! which is what lets the PE share plain shifters/accumulators per column
+//! without per-PE sign fix-ups.
+
+/// Decompose a signed value of `bits` bits (2, 4 or 8) into `bits / 2`
+/// radix-4 subwords, least-significant first. The final subword is signed
+/// (−2..1), the rest unsigned (0..3).
+pub fn decompose_radix4(v: i32, bits: u32) -> Vec<i32> {
+    assert!(bits == 2 || bits == 4 || bits == 8, "unsupported width {bits}");
+    let (lo, hi) = super::types::value_range(bits);
+    assert!(
+        (lo..=hi).contains(&v),
+        "{v} out of range for {bits}-bit ({lo}..={hi})"
+    );
+    let n = (bits / 2) as usize;
+    let mut out = Vec::with_capacity(n);
+    // Work on the unsigned two's-complement image, then sign-correct the
+    // top subword.
+    let mask = (1u32 << bits) - 1;
+    let u = (v as u32) & mask;
+    for i in 0..n {
+        let limb = ((u >> (2 * i)) & 0b11) as i32;
+        if i == n - 1 {
+            // top subword: interpret as signed 2-bit
+            out.push(if limb >= 2 { limb - 4 } else { limb });
+        } else {
+            out.push(limb);
+        }
+    }
+    out
+}
+
+/// Precomputed radix-4 decomposition of every 8-bit value, indexed by the
+/// unsigned byte image (`(v as u8) as usize`). Hot-path replacement for
+/// [`decompose_radix4`] in the PE model (§Perf iteration 2): avoids the
+/// per-MAC `Vec` allocation.
+pub static RADIX4_I8: [[i8; 4]; 256] = {
+    let mut table = [[0i8; 4]; 256];
+    let mut u = 0usize;
+    while u < 256 {
+        let mut i = 0;
+        while i < 4 {
+            let limb = ((u >> (2 * i)) & 0b11) as i8;
+            table[u][i] = if i == 3 && limb >= 2 { limb - 4 } else { limb };
+            i += 1;
+        }
+        u += 1;
+    }
+    table
+};
+
+/// Recompose radix-4 subwords (least-significant first) into a value.
+/// Inverse of [`decompose_radix4`].
+pub fn recompose_radix4(subwords: &[i32]) -> i32 {
+    subwords
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| s << (2 * i))
+        .sum()
+}
+
+/// One 2-bit × 2-bit multiplier of the PE: multiplies a (possibly signed)
+/// activation subword by a (possibly signed) weight subword. Plain integer
+/// product — the hardware unit is a 3-bit signed multiplier; the model only
+/// asserts the operands are in subword range.
+pub fn subword_product(a_sub: i32, w_sub: i32) -> i32 {
+    debug_assert!((-2..=3).contains(&a_sub), "activation subword {a_sub} out of range");
+    debug_assert!((-2..=3).contains(&w_sub), "weight subword {w_sub} out of range");
+    a_sub * w_sub
+}
+
+/// Full product of `a` (8-bit) × `w` (`w_bits`-bit) computed exclusively via
+/// 2-bit subword products and shift-adds — the arithmetic identity the PE
+/// implements. Used as the specification in tests: must equal `a * w`.
+pub fn product_via_subwords(a: i32, w: i32, w_bits: u32) -> i32 {
+    let a_subs = decompose_radix4(a, 8);
+    let w_subs = decompose_radix4(w, w_bits);
+    let mut acc = 0i32;
+    for (j, &aj) in a_subs.iter().enumerate() {
+        for (k, &wk) in w_subs.iter().enumerate() {
+            acc += subword_product(aj, wk) << (2 * (j + k));
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompose_recompose_roundtrip_exhaustive() {
+        for bits in [2u32, 4, 8] {
+            let (lo, hi) = crate::quant::value_range(bits);
+            for v in lo..=hi {
+                let subs = decompose_radix4(v, bits);
+                assert_eq!(subs.len(), (bits / 2) as usize);
+                for (i, &s) in subs.iter().enumerate() {
+                    if i + 1 == subs.len() {
+                        assert!((-2..=1).contains(&s), "top subword {s}");
+                    } else {
+                        assert!((0..=3).contains(&s), "low subword {s}");
+                    }
+                }
+                assert_eq!(recompose_radix4(&subs), v, "roundtrip of {v} ({bits}b)");
+            }
+        }
+    }
+
+    #[test]
+    fn subword_product_matches_direct_product_exhaustive() {
+        // Exhaustive over all 8-bit × {2,4,8}-bit operand pairs: the PE's
+        // shift-add decomposition is exactly the integer product.
+        for w_bits in [2u32, 4, 8] {
+            let (wlo, whi) = crate::quant::value_range(w_bits);
+            for a in -128..=127 {
+                for w in wlo..=whi {
+                    assert_eq!(
+                        product_via_subwords(a, w, w_bits),
+                        a * w,
+                        "a={a} w={w} bits={w_bits}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn decompose_rejects_out_of_range() {
+        decompose_radix4(9, 4);
+    }
+
+    #[test]
+    fn lut_matches_decompose_exhaustive() {
+        for v in -128i32..=127 {
+            let want = decompose_radix4(v, 8);
+            let got = RADIX4_I8[(v as u8) as usize];
+            for i in 0..4 {
+                assert_eq!(got[i] as i32, want[i], "v={v} sub={i}");
+            }
+        }
+    }
+}

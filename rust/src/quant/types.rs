@@ -1,0 +1,189 @@
+//! Precision-mode types shared across the whole stack.
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Operand precision mode of the reconfigurable PE / ADiP array.
+///
+/// The first operand (input activation) is always 8-bit; the second operand
+/// (stationary weight) is 8, 4 or 2 bits (paper §III). The mode determines
+/// how many *distinct weight matrices* are interleaved into one stationary
+/// tile and therefore the per-PE parallelism:
+///
+/// | mode  | weight bits | interleaved matrices `k` | PE latency (M=16) | ops/cycle/PE |
+/// |-------|-------------|--------------------------|-------------------|--------------|
+/// | 8b×8b | 8           | 1                        | 1                 | 2            |
+/// | 8b×4b | 4           | 2                        | 1                 | 4            |
+/// | 8b×2b | 2           | 4 (3 for Q/K/V)          | 1                 | 8            |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PrecisionMode {
+    /// Symmetric single-matrix multiplication, 8-bit × 8-bit.
+    W8,
+    /// Asymmetric multi-matrix multiplication, 8-bit × 4-bit (2 matrices).
+    W4,
+    /// Asymmetric multi-matrix multiplication, 8-bit × 2-bit (≤4 matrices).
+    W2,
+}
+
+impl PrecisionMode {
+    /// All modes, in descending weight width.
+    pub const ALL: [PrecisionMode; 3] = [PrecisionMode::W8, PrecisionMode::W4, PrecisionMode::W2];
+
+    /// Activation (first operand) bit-width — fixed at 8 in ADiP.
+    pub const fn act_bits(self) -> u32 {
+        8
+    }
+
+    /// Weight (second operand) bit-width.
+    pub const fn weight_bits(self) -> u32 {
+        match self {
+            PrecisionMode::W8 => 8,
+            PrecisionMode::W4 => 4,
+            PrecisionMode::W2 => 2,
+        }
+    }
+
+    /// Maximum number of distinct weight matrices interleaved into one
+    /// stationary tile (the *interleave factor* of Fig. 5).
+    pub const fn interleave_factor(self) -> usize {
+        match self {
+            PrecisionMode::W8 => 1,
+            PrecisionMode::W4 => 2,
+            PrecisionMode::W2 => 4,
+        }
+    }
+
+    /// Throughput gain over the 8b×8b baseline (Table I: 1×/2×/4×).
+    pub const fn throughput_gain(self) -> u32 {
+        self.interleave_factor() as u32
+    }
+
+    /// Number of 2-bit weight subwords per weight value.
+    pub const fn weight_subwords(self) -> u32 {
+        self.weight_bits() / 2
+    }
+
+    /// MAC operations (1 multiply + 1 add = 2 ops) per PE per cycle once the
+    /// pipeline is full, for the selected 16-multiplier PE (paper §IV).
+    pub const fn ops_per_pe_cycle(self) -> u64 {
+        2 * self.interleave_factor() as u64
+    }
+
+    /// Pick the mode that fits a given weight bit-width (≤2 → W2, ≤4 → W4,
+    /// otherwise W8).
+    pub fn for_weight_bits(bits: u32) -> PrecisionMode {
+        if bits <= 2 {
+            PrecisionMode::W2
+        } else if bits <= 4 {
+            PrecisionMode::W4
+        } else {
+            PrecisionMode::W8
+        }
+    }
+
+    /// Canonical lower-case name used by the CLI / config files.
+    pub const fn name(self) -> &'static str {
+        match self {
+            PrecisionMode::W8 => "8x8",
+            PrecisionMode::W4 => "8x4",
+            PrecisionMode::W2 => "8x2",
+        }
+    }
+}
+
+impl fmt::Display for PrecisionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            PrecisionMode::W8 => "8b×8b",
+            PrecisionMode::W4 => "8b×4b",
+            PrecisionMode::W2 => "8b×2b",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for PrecisionMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "8x8" | "8b8b" | "8bx8b" | "w8" | "int8" | "8" => Ok(PrecisionMode::W8),
+            "8x4" | "8b4b" | "8bx4b" | "w4" | "int4" | "4" => Ok(PrecisionMode::W4),
+            "8x2" | "8b2b" | "8bx2b" | "w2" | "int2" | "2" | "ternary" => Ok(PrecisionMode::W2),
+            other => Err(format!(
+                "unknown precision mode {other:?} (expected one of 8x8, 8x4, 8x2)"
+            )),
+        }
+    }
+}
+
+/// Inclusive signed value range of a two's-complement integer of `bits` bits.
+///
+/// `bits` must be in `1..=8`. 2-bit → (−2, 1); 4-bit → (−8, 7); 8-bit →
+/// (−128, 127).
+pub fn value_range(bits: u32) -> (i32, i32) {
+    assert!((1..=8).contains(&bits), "unsupported bit-width {bits}");
+    let hi = (1i32 << (bits - 1)) - 1;
+    (-(hi + 1), hi)
+}
+
+/// Clamp `v` into the signed range of `bits` bits.
+pub fn clamp_to(v: i32, bits: u32) -> i32 {
+    let (lo, hi) = value_range(bits);
+    v.clamp(lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_widths_and_factors() {
+        assert_eq!(PrecisionMode::W8.weight_bits(), 8);
+        assert_eq!(PrecisionMode::W4.weight_bits(), 4);
+        assert_eq!(PrecisionMode::W2.weight_bits(), 2);
+        assert_eq!(PrecisionMode::W8.interleave_factor(), 1);
+        assert_eq!(PrecisionMode::W4.interleave_factor(), 2);
+        assert_eq!(PrecisionMode::W2.interleave_factor(), 4);
+        for m in PrecisionMode::ALL {
+            assert_eq!(m.act_bits(), 8);
+            assert_eq!(m.weight_subwords() * 2, m.weight_bits());
+            assert_eq!(m.ops_per_pe_cycle(), 2 * m.throughput_gain() as u64);
+        }
+    }
+
+    #[test]
+    fn mode_parsing_roundtrip() {
+        for m in PrecisionMode::ALL {
+            assert_eq!(m.name().parse::<PrecisionMode>().unwrap(), m);
+        }
+        assert_eq!("ternary".parse::<PrecisionMode>().unwrap(), PrecisionMode::W2);
+        assert!("16x16".parse::<PrecisionMode>().is_err());
+    }
+
+    #[test]
+    fn for_weight_bits_picks_narrowest_fit() {
+        assert_eq!(PrecisionMode::for_weight_bits(1), PrecisionMode::W2);
+        assert_eq!(PrecisionMode::for_weight_bits(2), PrecisionMode::W2);
+        assert_eq!(PrecisionMode::for_weight_bits(3), PrecisionMode::W4);
+        assert_eq!(PrecisionMode::for_weight_bits(4), PrecisionMode::W4);
+        assert_eq!(PrecisionMode::for_weight_bits(5), PrecisionMode::W8);
+        assert_eq!(PrecisionMode::for_weight_bits(8), PrecisionMode::W8);
+    }
+
+    #[test]
+    fn ranges() {
+        assert_eq!(value_range(2), (-2, 1));
+        assert_eq!(value_range(4), (-8, 7));
+        assert_eq!(value_range(8), (-128, 127));
+        assert_eq!(clamp_to(5, 2), 1);
+        assert_eq!(clamp_to(-5, 2), -2);
+        assert_eq!(clamp_to(5, 4), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn range_rejects_wide() {
+        value_range(9);
+    }
+}

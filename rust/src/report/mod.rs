@@ -1,0 +1,56 @@
+//! Regenerates every table and figure of the paper's evaluation (§V) as
+//! aligned text + CSV.
+//!
+//! | artifact | function | paper content |
+//! |----------|----------|---------------|
+//! | Fig. 2   | [`figures::fig2`]  | PE latency vs multiplier count |
+//! | Fig. 4   | [`figures::fig4`]  | ADiP latency/throughput vs N |
+//! | Fig. 7   | [`figures::fig7`]  | DiP vs ADiP area/power across sizes |
+//! | Fig. 8   | [`figures::fig8`]  | attention workload breakdown |
+//! | Fig. 9   | [`figures::fig9`]  | latency per stage + totals |
+//! | Fig. 10  | [`figures::fig10`] | energy per stage + totals |
+//! | Fig. 11  | [`figures::fig11`] | memory access per stage + totals |
+//! | Table I  | [`tables::table1`] | overheads + throughput gains |
+//! | Table II | [`tables::table2`] | SOTA comparison, 22 nm-normalized |
+
+pub mod figures;
+pub mod table;
+pub mod tables;
+
+pub use table::{Rendered, TextTable};
+
+/// Render a named figure/table (CLI entry point).
+pub fn render(name: &str) -> anyhow::Result<Rendered> {
+    match name.to_ascii_lowercase().as_str() {
+        "fig2" => Ok(figures::fig2()),
+        "fig4" => Ok(figures::fig4()),
+        "fig7" => Ok(figures::fig7()),
+        "fig8" => Ok(figures::fig8()),
+        "fig9" => Ok(figures::fig9()),
+        "fig10" => Ok(figures::fig10()),
+        "fig11" => Ok(figures::fig11()),
+        "table1" => Ok(tables::table1()),
+        "table2" => Ok(tables::table2()),
+        "utilization" => Ok(figures::utilization()),
+        other => anyhow::bail!(
+            "unknown artifact {other:?} (expected fig2|fig4|fig7|fig8|fig9|fig10|fig11|table1|table2|utilization)"
+        ),
+    }
+}
+
+/// All artifact names, in paper order (plus the utilization extension).
+pub const ALL_ARTIFACTS: [&str; 10] =
+    ["fig2", "fig4", "table1", "fig7", "fig8", "fig9", "fig10", "fig11", "table2", "utilization"];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_dispatch_covers_all() {
+        for name in super::ALL_ARTIFACTS {
+            let r = super::render(name).unwrap();
+            assert!(!r.text.is_empty(), "{name}");
+            assert!(!r.csv.is_empty(), "{name}");
+        }
+        assert!(super::render("fig99").is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! PJRT runtime — loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python/compile/aot.py` **once** at build time,
+//! lowering the L2 JAX model (which calls the L1 Pallas kernels) to **HLO
+//! text** under `artifacts/`. This module loads those files through the
+//! `xla` crate (PJRT C API, CPU client), compiles them once, and executes
+//! them from the request path — Python never runs at serving time.
+//!
+//! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see `/opt/xla-example/README.md`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dataflow::Mat;
+
+/// A loaded, compiled artifact registry backed by one PJRT CPU client.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Create a runtime over `dir`, compiling every `*.hlo.txt` found.
+    /// Returns an error if the directory is missing or empty — callers that
+    /// want graceful degradation use [`ArtifactRuntime::try_load`].
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = HashMap::new();
+        let entries = std::fs::read_dir(&dir)
+            .with_context(|| format!("artifacts directory {}", dir.display()))?;
+        for entry in entries {
+            let path = entry?.path();
+            let name = match path.file_name().and_then(|n| n.to_str()) {
+                Some(n) if n.ends_with(".hlo.txt") => n.trim_end_matches(".hlo.txt").to_string(),
+                _ => continue,
+            };
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+            executables.insert(name, exe);
+        }
+        if executables.is_empty() {
+            bail!("no *.hlo.txt artifacts in {}", dir.display());
+        }
+        Ok(ArtifactRuntime { client, executables, dir })
+    }
+
+    /// Like [`ArtifactRuntime::load`] but returns `None` when artifacts are
+    /// absent (CI / before `make artifacts`), logging the reason to stderr.
+    pub fn try_load(dir: impl AsRef<Path>) -> Option<ArtifactRuntime> {
+        match ArtifactRuntime::load(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("[runtime] artifacts unavailable ({e}); functional fallback in use");
+                None
+            }
+        }
+    }
+
+    /// Names of loaded executables.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute artifact `name` with f32 tensor inputs, returning the
+    /// f32 outputs. Inputs are `(data, shape)` pairs; the artifact must
+    /// have been lowered with `return_tuple=True` (aot.py does).
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?} (have: {:?})", self.names()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape to {dims:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name:?}: {e:?}"))?;
+        let mut out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name:?}: {e:?}"))?;
+        let tuple = out.decompose_tuple().map_err(|e| anyhow!("decomposing tuple: {e:?}"))?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for t in tuple {
+            vecs.push(t.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
+        }
+        Ok(vecs)
+    }
+}
+
+/// Convert an integer matrix to the f32 buffer layout the artifacts take.
+pub fn mat_to_f32(m: &Mat) -> Vec<f32> {
+    m.as_slice().iter().map(|&v| v as f32).collect()
+}
+
+/// Convert an f32 output buffer back to an integer matrix (values are
+/// exact integers for the quantized kernels; rounded defensively).
+pub fn f32_to_mat(data: &[f32], rows: usize, cols: usize) -> Mat {
+    assert_eq!(data.len(), rows * cols, "shape mismatch");
+    Mat::from_vec(rows, cols, data.iter().map(|&v| v.round() as i32).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn mat_roundtrip_through_f32() {
+        let mut rng = Rng::seeded(1001);
+        let m = Mat::random(&mut rng, 5, 7, 8);
+        let f = mat_to_f32(&m);
+        assert_eq!(f32_to_mat(&f, 5, 7), m);
+    }
+
+    #[test]
+    fn missing_artifacts_fail_gracefully() {
+        assert!(ArtifactRuntime::try_load("/nonexistent/path").is_none());
+        let empty = std::env::temp_dir().join("adip-empty-artifacts");
+        let _ = std::fs::create_dir_all(&empty);
+        assert!(ArtifactRuntime::try_load(&empty).is_none());
+    }
+
+    // Full load-and-execute coverage lives in rust/tests/runtime_artifacts.rs
+    // (integration test, skipped when `make artifacts` has not run).
+}

@@ -1,0 +1,226 @@
+//! Workload-level evaluation engine — produces the Figs. 9/10/11 numbers.
+//!
+//! For each attention stage of a model, the engine composes the GEMM-level
+//! analytical estimate ([`crate::analytical::estimate_gemm`], validated
+//! cycle-for-cycle against the register-level simulators) with the
+//! calibrated power model, yielding latency, energy and memory access per
+//! stage and in total for WS / DiP / ADiP.
+
+use crate::analytical::gemm::{estimate_gemm, MemoryPolicy};
+use crate::arch::{ArchConfig, Architecture};
+use crate::quant::PrecisionMode;
+use crate::sim::energy::EnergyModel;
+use crate::workload::{stages::attention_workloads, AttentionStage, StageWorkload, TransformerModel};
+
+/// Simulation configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SimConfig {
+    /// Array configuration (the paper evaluates 32×32).
+    pub arch: ArchConfig,
+    /// Clock (Hz).
+    pub freq_hz: f64,
+    /// Memory counting policy.
+    pub memory: MemoryPolicy,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig { arch: ArchConfig::default(), freq_hz: 1e9, memory: MemoryPolicy::default() }
+    }
+}
+
+/// Evaluation result for one attention stage.
+#[derive(Debug, Clone, Copy)]
+pub struct StageResult {
+    /// Stage evaluated.
+    pub stage: AttentionStage,
+    /// Mode it executed in on this architecture.
+    pub mode: PrecisionMode,
+    /// Total cycles across all instances/layers.
+    pub cycles: u64,
+    /// Wall-clock seconds at the configured frequency.
+    pub seconds: f64,
+    /// Energy (J).
+    pub energy_j: f64,
+    /// Memory traffic (bytes, paper policy).
+    pub memory_bytes: u64,
+    /// Useful operations.
+    pub ops: u64,
+}
+
+/// Evaluation result for a whole model on one architecture.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// Architecture evaluated.
+    pub arch: Architecture,
+    /// Model name.
+    pub model: &'static str,
+    /// Per-stage results (six stages).
+    pub stages: Vec<StageResult>,
+}
+
+impl EvalResult {
+    /// Total cycles.
+    pub fn total_cycles(&self) -> u64 {
+        self.stages.iter().map(|s| s.cycles).sum()
+    }
+
+    /// Total seconds.
+    pub fn total_seconds(&self) -> f64 {
+        self.stages.iter().map(|s| s.seconds).sum()
+    }
+
+    /// Total energy (J).
+    pub fn total_energy_j(&self) -> f64 {
+        self.stages.iter().map(|s| s.energy_j).sum()
+    }
+
+    /// Total memory traffic (bytes).
+    pub fn total_memory_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.memory_bytes).sum()
+    }
+
+    /// Total ops.
+    pub fn total_ops(&self) -> u64 {
+        self.stages.iter().map(|s| s.ops).sum()
+    }
+
+    /// Achieved throughput in ops/s.
+    pub fn achieved_ops_per_sec(&self) -> f64 {
+        self.total_ops() as f64 / self.total_seconds()
+    }
+
+    /// Sum over projection (activation-to-weight) stages only.
+    pub fn projection_cycles(&self) -> u64 {
+        self.stages.iter().filter(|s| s.stage.is_projection()).map(|s| s.cycles).sum()
+    }
+}
+
+/// Evaluate one stage workload on one architecture.
+pub fn evaluate_stage(arch: Architecture, sw: &StageWorkload, cfg: &SimConfig) -> StageResult {
+    let est = estimate_gemm(arch, &cfg.arch, sw.gemm, sw.mode, cfg.memory);
+    let instances = sw.instances();
+    let cycles = est.cycles * instances;
+    let energy = EnergyModel::paper(arch, cfg.arch.n).energy_joules(cycles, 0);
+    StageResult {
+        stage: sw.stage,
+        mode: est.mode,
+        cycles,
+        seconds: cycles as f64 / cfg.freq_hz,
+        energy_j: energy,
+        memory_bytes: est.memory_bytes * instances,
+        ops: est.ops * instances,
+    }
+}
+
+/// Evaluate a model's full attention workload on one architecture.
+pub fn evaluate_model(arch: Architecture, model: &TransformerModel, cfg: &SimConfig) -> EvalResult {
+    let stages =
+        attention_workloads(model).iter().map(|sw| evaluate_stage(arch, sw, cfg)).collect();
+    EvalResult { arch, model: model.name, stages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{bert_large, bitnet_1_58b, gpt2_medium};
+
+    fn improvements(model: &TransformerModel) -> (f64, f64, f64) {
+        let cfg = SimConfig::default();
+        let dip = evaluate_model(Architecture::Dip, model, &cfg);
+        let adip = evaluate_model(Architecture::Adip, model, &cfg);
+        let latency = 1.0 - adip.total_cycles() as f64 / dip.total_cycles() as f64;
+        let energy = 1.0 - adip.total_energy_j() / dip.total_energy_j();
+        let memory = 1.0 - adip.total_memory_bytes() as f64 / dip.total_memory_bytes() as f64;
+        (latency * 100.0, energy * 100.0, memory * 100.0)
+    }
+
+    #[test]
+    fn fig9_total_latency_improvements() {
+        // Paper: GPT-2 ~0%, BERT 40%, BitNet 53.6% vs DiP at 32×32.
+        let (g, _, _) = improvements(&gpt2_medium());
+        assert!(g.abs() < 0.1, "GPT-2 latency improvement {g}%");
+        let (b, _, _) = improvements(&bert_large());
+        assert!((b - 40.0).abs() < 0.15, "BERT latency improvement {b}%");
+        let (n, _, _) = improvements(&bitnet_1_58b());
+        assert!((n - 53.6).abs() < 0.15, "BitNet latency improvement {n}%");
+    }
+
+    #[test]
+    fn fig10_total_energy_changes() {
+        // Paper: GPT-2 −62.8% (overhead), BERT +2.3%, BitNet +24.4%.
+        let (_, g, _) = improvements(&gpt2_medium());
+        assert!((g + 62.8).abs() < 0.3, "GPT-2 energy change {g}%");
+        let (_, b, _) = improvements(&bert_large());
+        assert!((b - 2.3).abs() < 0.4, "BERT energy change {b}%");
+        let (_, n, _) = improvements(&bitnet_1_58b());
+        assert!((n - 24.4).abs() < 0.4, "BitNet energy change {n}%");
+    }
+
+    #[test]
+    fn fig11_total_memory_savings() {
+        // Paper: GPT-2 0%, BERT ~40%, BitNet ~53.6%.
+        let (_, _, g) = improvements(&gpt2_medium());
+        assert!(g.abs() < 0.1, "GPT-2 memory saving {g}%");
+        let (_, _, b) = improvements(&bert_large());
+        assert!((b - 40.0).abs() < 0.15, "BERT memory saving {b}%");
+        let (_, _, n) = improvements(&bitnet_1_58b());
+        assert!((n - 53.6).abs() < 0.15, "BitNet memory saving {n}%");
+    }
+
+    #[test]
+    fn projection_stage_improvements_50_and_75_percent() {
+        // Paper Fig. 9: projection stages improve 50% (BERT, 8b×4b) and
+        // 75% (BitNet, 8b×2b).
+        let cfg = SimConfig::default();
+        for (model, want) in [(bert_large(), 50.0), (bitnet_1_58b(), 75.0)] {
+            let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+            let adip = evaluate_model(Architecture::Adip, &model, &cfg);
+            let imp =
+                (1.0 - adip.projection_cycles() as f64 / dip.projection_cycles() as f64) * 100.0;
+            assert!((imp - want).abs() < 0.1, "{}: {imp}%", model.name);
+        }
+    }
+
+    #[test]
+    fn act_act_energy_overhead_is_power_ratio() {
+        // Activation-to-activation stages: same cycles, ADiP power ratio
+        // (1.628 at 32×32) → ~62.8% energy overhead, no latency change.
+        let cfg = SimConfig::default();
+        let model = bitnet_1_58b();
+        let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+        let adip = evaluate_model(Architecture::Adip, &model, &cfg);
+        for (d, a) in dip.stages.iter().zip(&adip.stages) {
+            if !d.stage.is_projection() {
+                let cyc_ratio = a.cycles as f64 / d.cycles as f64;
+                assert!((cyc_ratio - 1.0).abs() < 1e-3, "{}: cycles ×{cyc_ratio}", d.stage);
+                let e_ratio = a.energy_j / d.energy_j;
+                assert!((e_ratio - 1.628).abs() < 0.01, "{}: energy ×{e_ratio}", d.stage);
+            }
+        }
+    }
+
+    #[test]
+    fn ws_total_latency_exceeds_dip() {
+        let cfg = SimConfig::default();
+        for model in TransformerModel::evaluated() {
+            let ws = evaluate_model(Architecture::Ws, &model, &cfg);
+            let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+            let ratio = ws.total_cycles() as f64 / dip.total_cycles() as f64;
+            assert!(ratio > 1.4 && ratio < 2.0, "{}: WS/DiP {ratio}", model.name);
+            // memory traffic identical
+            assert_eq!(ws.total_memory_bytes(), dip.total_memory_bytes());
+        }
+    }
+
+    #[test]
+    fn totals_are_stage_sums() {
+        let cfg = SimConfig::default();
+        let r = evaluate_model(Architecture::Adip, &gpt2_medium(), &cfg);
+        assert_eq!(r.stages.len(), 6);
+        let sum: u64 = r.stages.iter().map(|s| s.cycles).sum();
+        assert_eq!(r.total_cycles(), sum);
+        assert_eq!(r.total_ops(), gpt2_medium().total_attention_ops());
+        assert!(r.achieved_ops_per_sec() > 0.0);
+    }
+}

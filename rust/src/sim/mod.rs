@@ -1,0 +1,29 @@
+//! The cycle-accurate evaluation simulator (paper §V-B).
+//!
+//! “A cycle-accurate simulator is developed to evaluate the latency, energy
+//! consumption, and memory access for WS, DiP, and ADiP architectures. The
+//! simulator employs analytical models for WS and DiP architectures,
+//! derived from the DiP work.”
+//!
+//! * [`engine`] — evaluates whole Transformer attention workloads per
+//!   stage/architecture and produces the latency / energy / memory numbers
+//!   behind Figs. 9, 10 and 11.
+//! * [`cosim`] — functional + timed co-simulation: runs real quantized
+//!   GEMMs tile-by-tile through the [`crate::arch`] models, producing both
+//!   the numeric outputs and the cycle/energy/memory accounting in one
+//!   pass. The coordinator's execution backend.
+//! * [`memory`] — multi-bank SRAM / DRAM traffic counters, including the
+//!   runtime-interleaving bank model for activation-to-activation
+//!   workloads.
+//! * [`energy`] — energy integration over cycles from the calibrated power
+//!   model.
+
+pub mod cosim;
+pub mod energy;
+pub mod engine;
+pub mod memory;
+
+pub use cosim::{CoSim, CoSimResult};
+pub use energy::EnergyModel;
+pub use engine::{evaluate_model, evaluate_stage, EvalResult, SimConfig, StageResult};
+pub use memory::{MemoryCounters, MemorySystem};

@@ -1,0 +1,148 @@
+//! Deterministic randomness + a mini property-testing harness.
+//!
+//! The offline crate snapshot for this environment has neither `rand` nor
+//! `proptest`, so the library ships a small, dependency-free xorshift PRNG
+//! and a bounded property-check loop with first-failure reporting. All
+//! randomized tests in the crate run through this module with fixed seeds,
+//! so failures are exactly reproducible.
+
+/// xorshift64* pseudo-random generator — deterministic, seedable, fast.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a non-zero seed (0 is mapped to a constant).
+    pub fn seeded(seed: u64) -> Rng {
+        Rng { state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed } }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform `u32`.
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`; `n` must be > 0.
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform integer in `lo..=hi` (inclusive).
+    pub fn i32_range(&mut self, lo: i32, hi: i32) -> i32 {
+        assert!(lo <= hi);
+        let span = (hi as i64 - lo as i64 + 1) as u64;
+        lo + (self.next_u64() % span) as i32
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        let u = (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32;
+        lo + u * (hi - lo)
+    }
+
+    /// Random signed value fitting `bits` bits.
+    pub fn int_of_bits(&mut self, bits: u32) -> i32 {
+        let (lo, hi) = crate::quant::value_range(bits);
+        self.i32_range(lo, hi)
+    }
+
+    /// Vector of random signed `bits`-bit values.
+    pub fn int_vec(&mut self, len: usize, bits: u32) -> Vec<i32> {
+        (0..len).map(|_| self.int_of_bits(bits)).collect()
+    }
+
+    /// Vector of random floats in `[lo, hi)`.
+    pub fn f32_vec(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_range(lo, hi)).collect()
+    }
+
+    /// Pick a random element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// Run `cases` random property checks. `gen` produces a case from the RNG,
+/// `prop` returns `Err(reason)` on failure. Panics with the seed, case
+/// index and debug repr of the first failing case, so it can be replayed.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::seeded(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(reason) = prop(&case) {
+            panic!(
+                "property {name:?} failed at case {i}/{cases} (seed {seed}):\n  \
+                 reason: {reason}\n  case: {case:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::seeded(42);
+        let mut b = Rng::seeded(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let mut rng = Rng::seeded(1);
+        for _ in 0..1000 {
+            let v = rng.i32_range(-5, 5);
+            assert!((-5..=5).contains(&v));
+            let f = rng.f32_range(1.0, 2.0);
+            assert!((1.0..2.0).contains(&f));
+            let b = rng.int_of_bits(2);
+            assert!((-2..=1).contains(&b));
+        }
+    }
+
+    #[test]
+    fn rng_covers_range() {
+        // all values of a small range appear
+        let mut rng = Rng::seeded(9);
+        let mut seen = [false; 4];
+        for _ in 0..200 {
+            seen[(rng.i32_range(-2, 1) + 2) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn check_passes_good_property() {
+        check("additive-identity", 7, 50, |r| r.i32_range(-100, 100), |&x| {
+            if x + 0 == x { Ok(()) } else { Err("math broke".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn check_reports_failures() {
+        check("always-fails", 7, 10, |r| r.next_u32(), |_| Err("nope".into()));
+    }
+}

@@ -1,0 +1,14 @@
+//! Transformer attention workload generators (paper §V-B, Figs. 1 & 8).
+//!
+//! The evaluation consumes only GEMM shapes, counts and weight precisions
+//! per multi-head-attention stage; [`models`] encodes the three evaluated
+//! models exactly as the paper specifies them and [`stages`] expands a
+//! model into its per-layer attention GEMMs.
+
+pub mod models;
+pub mod stages;
+pub mod trace;
+
+pub use models::{bert_large, bitnet_1_58b, gpt2_medium, TransformerModel};
+pub use stages::{AttentionStage, StageWorkload};
+pub use trace::{attention_trace, TraceConfig, TracedRequest};

@@ -1,0 +1,152 @@
+//! The three Transformer models of the paper's evaluation (§V-B).
+//!
+//! | model         | layers | d_model | heads | d_k  | seq  | weights |
+//! |---------------|--------|---------|-------|------|------|---------|
+//! | GPT-2 medium  | 24     | 1024    | 16    | 64   | 1024 | 8-bit   |
+//! | BERT large    | 24     | 1024    | 16    | 64   | 512  | 4-bit   |
+//! | BitNet-1.58B  | 30     | 2560    | 20    | 128  | 2048 | 2-bit   |
+
+use crate::quant::PrecisionMode;
+
+/// Architectural description of a Transformer model's attention stack.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransformerModel {
+    /// Human-readable name.
+    pub name: &'static str,
+    /// Number of Transformer layers.
+    pub layers: usize,
+    /// Hidden size `d_model`.
+    pub d_model: usize,
+    /// Attention heads per layer.
+    pub heads: usize,
+    /// Head dimension `d_k` (= `d_model / heads`).
+    pub d_k: usize,
+    /// Evaluation sequence length `s` (the paper uses the maximum).
+    pub seq_len: usize,
+    /// Weight precision of the projection (activation-to-weight) stages.
+    pub weight_mode: PrecisionMode,
+}
+
+impl TransformerModel {
+    /// All evaluated models, in the paper's order.
+    pub fn evaluated() -> Vec<TransformerModel> {
+        vec![gpt2_medium(), bert_large(), bitnet_1_58b()]
+    }
+
+    /// Look a model up by (case-insensitive, prefix-tolerant) name.
+    pub fn by_name(name: &str) -> Option<TransformerModel> {
+        let key = name.to_ascii_lowercase().replace(['-', '_', ' ', '.'], "");
+        match key.as_str() {
+            "gpt2" | "gpt2medium" => Some(gpt2_medium()),
+            "bert" | "bertlarge" => Some(bert_large()),
+            "bitnet" | "bitnet158b" | "bitnet158" => Some(bitnet_1_58b()),
+            _ => None,
+        }
+    }
+
+    /// Total attention (MHA) operations across all layers, 2 ops per MAC:
+    /// `layers · (8·s·d² + 4·s²·d)` — the Fig. 8 totals.
+    pub fn total_attention_ops(&self) -> u64 {
+        let (s, d) = (self.seq_len as u64, self.d_model as u64);
+        self.layers as u64 * (8 * s * d * d + 4 * s * s * d)
+    }
+
+    /// Fraction of attention ops in the projection (activation-to-weight)
+    /// stages: `8·s·d² / (8·s·d² + 4·s²·d) = 2d / (2d + s)`.
+    pub fn projection_ops_fraction(&self) -> f64 {
+        let (s, d) = (self.seq_len as f64, self.d_model as f64);
+        2.0 * d / (2.0 * d + s)
+    }
+}
+
+/// GPT-2 medium: decoder-only, 8-bit weights.
+pub fn gpt2_medium() -> TransformerModel {
+    TransformerModel {
+        name: "GPT-2 medium",
+        layers: 24,
+        d_model: 1024,
+        heads: 16,
+        d_k: 64,
+        seq_len: 1024,
+        weight_mode: PrecisionMode::W8,
+    }
+}
+
+/// BERT large: encoder-only, quantized to 4-bit weights.
+pub fn bert_large() -> TransformerModel {
+    TransformerModel {
+        name: "BERT large",
+        layers: 24,
+        d_model: 1024,
+        heads: 16,
+        d_k: 64,
+        seq_len: 512,
+        weight_mode: PrecisionMode::W4,
+    }
+}
+
+/// BitNet-1.58B: decoder-only, ternary (2-bit) weights.
+pub fn bitnet_1_58b() -> TransformerModel {
+    TransformerModel {
+        name: "BitNet-1.58B",
+        layers: 30,
+        d_model: 2560,
+        heads: 20,
+        d_k: 128,
+        seq_len: 2048,
+        weight_mode: PrecisionMode::W2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heads_times_dk_is_dmodel() {
+        for m in TransformerModel::evaluated() {
+            assert_eq!(m.heads * m.d_k, m.d_model, "{}", m.name);
+        }
+    }
+
+    #[test]
+    fn total_ops_match_paper_section_vb() {
+        // “nearly 309.24 GOPS”, “128.85 GOPS”, “nearly 4.51 TOPS”.
+        let gpt2 = gpt2_medium().total_attention_ops() as f64 / 1e9;
+        assert!((gpt2 - 309.24).abs() < 0.6, "GPT-2: {gpt2} GOPs");
+        let bert = bert_large().total_attention_ops() as f64 / 1e9;
+        assert!((bert - 128.85).abs() < 0.3, "BERT: {bert} GOPs");
+        let bitnet = bitnet_1_58b().total_attention_ops() as f64 / 1e12;
+        assert!((bitnet - 4.51).abs() < 0.01, "BitNet: {bitnet} TOPs");
+    }
+
+    #[test]
+    fn projection_fractions_in_60_80_percent_band() {
+        // Paper: projections are 60%–80% of the attention workload, and the
+        // exact fractions drive the headline improvements.
+        let g = gpt2_medium().projection_ops_fraction();
+        let b = bert_large().projection_ops_fraction();
+        let n = bitnet_1_58b().projection_ops_fraction();
+        assert!((g - 2.0 / 3.0).abs() < 1e-9, "GPT-2 {g}");
+        assert!((b - 0.8).abs() < 1e-9, "BERT {b}");
+        assert!((n - 5.0 / 7.0).abs() < 1e-9, "BitNet {n}");
+        for f in [g, b, n] {
+            assert!((0.6..=0.8).contains(&f));
+        }
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(TransformerModel::by_name("GPT-2 Medium").unwrap().name, "GPT-2 medium");
+        assert_eq!(TransformerModel::by_name("bitnet-1.58b").unwrap().layers, 30);
+        assert_eq!(TransformerModel::by_name("bert_large").unwrap().seq_len, 512);
+        assert!(TransformerModel::by_name("llama").is_none());
+    }
+
+    #[test]
+    fn weight_modes() {
+        assert_eq!(gpt2_medium().weight_mode, PrecisionMode::W8);
+        assert_eq!(bert_large().weight_mode, PrecisionMode::W4);
+        assert_eq!(bitnet_1_58b().weight_mode, PrecisionMode::W2);
+    }
+}

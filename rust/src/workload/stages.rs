@@ -1,0 +1,185 @@
+//! Attention-stage GEMM expansion (paper Fig. 1).
+//!
+//! MHA decomposes into six matrix-multiplication stages per layer. The
+//! projection stages multiply activations by *static weights* (quantizable
+//! offline, preprocessed offline); the attention-score and attention-output
+//! stages are activation-to-activation (dynamic operands, executed at
+//! 8b×8b with runtime preprocessing).
+
+use crate::analytical::GemmShape;
+use crate::quant::PrecisionMode;
+
+use super::models::TransformerModel;
+
+/// One of the six MHA matrix-multiplication stages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum AttentionStage {
+    /// `Q = X · W_Q` — activation-to-weight.
+    QProj,
+    /// `K = X · W_K` — activation-to-weight.
+    KProj,
+    /// `V = X · W_V` — activation-to-weight.
+    VProj,
+    /// `S_i = Q_i · K_iᵀ` per head — activation-to-activation.
+    AttnScores,
+    /// `Attn_i = S_i · V_i` per head — activation-to-activation.
+    AttnOutput,
+    /// `O = concat(Attn) · W_O` — activation-to-weight.
+    OutProj,
+}
+
+impl AttentionStage {
+    /// All stages in dataflow order.
+    pub const ALL: [AttentionStage; 6] = [
+        AttentionStage::QProj,
+        AttentionStage::KProj,
+        AttentionStage::VProj,
+        AttentionStage::AttnScores,
+        AttentionStage::AttnOutput,
+        AttentionStage::OutProj,
+    ];
+
+    /// True for the activation-to-weight (projection) stages — the stages
+    /// that benefit from ADiP's adaptive precision.
+    pub fn is_projection(self) -> bool {
+        !matches!(self, AttentionStage::AttnScores | AttentionStage::AttnOutput)
+    }
+
+    /// Short label used by the figures.
+    pub const fn label(self) -> &'static str {
+        match self {
+            AttentionStage::QProj => "Q proj",
+            AttentionStage::KProj => "K proj",
+            AttentionStage::VProj => "V proj",
+            AttentionStage::AttnScores => "Attn scores",
+            AttentionStage::AttnOutput => "Attn output",
+            AttentionStage::OutProj => "Out proj",
+        }
+    }
+}
+
+impl std::fmt::Display for AttentionStage {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// One stage's GEMM workload for a model: shape, repeat count and mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageWorkload {
+    /// Which stage.
+    pub stage: AttentionStage,
+    /// The GEMM shape of one instance.
+    pub gemm: GemmShape,
+    /// Instances per layer (1 for projections, `heads` for act-act stages).
+    pub per_layer: u64,
+    /// Layers in the model.
+    pub layers: u64,
+    /// Execution precision: the model's weight mode for projections,
+    /// 8b×8b for activation-to-activation stages.
+    pub mode: PrecisionMode,
+}
+
+impl StageWorkload {
+    /// Total GEMM instances across the model.
+    pub fn instances(&self) -> u64 {
+        self.per_layer * self.layers
+    }
+
+    /// Total operations of this stage across the model.
+    pub fn total_ops(&self) -> u64 {
+        self.instances() * self.gemm.ops()
+    }
+}
+
+/// Expand a model into its six per-layer attention stage workloads.
+pub fn attention_workloads(model: &TransformerModel) -> Vec<StageWorkload> {
+    let (s, d, h, dk) = (model.seq_len, model.d_model, model.heads, model.d_k);
+    let layers = model.layers as u64;
+    AttentionStage::ALL
+        .iter()
+        .map(|&stage| {
+            let (gemm, per_layer, mode) = match stage {
+                AttentionStage::QProj | AttentionStage::KProj | AttentionStage::VProj => {
+                    (GemmShape::new(s, d, d), 1, model.weight_mode)
+                }
+                AttentionStage::AttnScores => {
+                    (GemmShape::new(s, dk, s), h as u64, PrecisionMode::W8)
+                }
+                AttentionStage::AttnOutput => {
+                    (GemmShape::new(s, s, dk), h as u64, PrecisionMode::W8)
+                }
+                AttentionStage::OutProj => (GemmShape::new(s, d, d), 1, model.weight_mode),
+            };
+            StageWorkload { stage, gemm, per_layer, layers, mode }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::models::{bert_large, bitnet_1_58b, gpt2_medium};
+
+    #[test]
+    fn six_stages_with_correct_classes() {
+        let ws = attention_workloads(&gpt2_medium());
+        assert_eq!(ws.len(), 6);
+        let proj: Vec<bool> = ws.iter().map(|w| w.stage.is_projection()).collect();
+        assert_eq!(proj, vec![true, true, true, false, false, true]);
+    }
+
+    #[test]
+    fn stage_ops_sum_to_model_total() {
+        for model in [gpt2_medium(), bert_large(), bitnet_1_58b()] {
+            let total: u64 = attention_workloads(&model).iter().map(|w| w.total_ops()).sum();
+            assert_eq!(total, model.total_attention_ops(), "{}", model.name);
+        }
+    }
+
+    #[test]
+    fn projection_share_matches_model_fraction() {
+        for model in [gpt2_medium(), bert_large(), bitnet_1_58b()] {
+            let ws = attention_workloads(&model);
+            let proj: u64 =
+                ws.iter().filter(|w| w.stage.is_projection()).map(|w| w.total_ops()).sum();
+            let total: u64 = ws.iter().map(|w| w.total_ops()).sum();
+            let frac = proj as f64 / total as f64;
+            assert!(
+                (frac - model.projection_ops_fraction()).abs() < 1e-12,
+                "{}: {frac}",
+                model.name
+            );
+        }
+    }
+
+    #[test]
+    fn act_act_stages_run_at_8x8() {
+        for model in [bert_large(), bitnet_1_58b()] {
+            for w in attention_workloads(&model) {
+                if w.stage.is_projection() {
+                    assert_eq!(w.mode, model.weight_mode);
+                } else {
+                    assert_eq!(w.mode, PrecisionMode::W8);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_head_shapes() {
+        let ws = attention_workloads(&bitnet_1_58b());
+        let scores = ws.iter().find(|w| w.stage == AttentionStage::AttnScores).unwrap();
+        assert_eq!(scores.gemm, GemmShape::new(2048, 128, 2048));
+        assert_eq!(scores.per_layer, 20);
+        let attn = ws.iter().find(|w| w.stage == AttentionStage::AttnOutput).unwrap();
+        assert_eq!(attn.gemm, GemmShape::new(2048, 2048, 128));
+    }
+
+    #[test]
+    fn stage_labels_unique() {
+        let labels: std::collections::HashSet<&str> =
+            AttentionStage::ALL.iter().map(|s| s.label()).collect();
+        assert_eq!(labels.len(), 6);
+    }
+}

@@ -1,0 +1,165 @@
+//! Request-trace generation for serving experiments.
+//!
+//! Converts a Transformer model description into the request stream its
+//! attention layers put on an accelerator node — Q/K/V projection triplets
+//! (shared input, quantized weights, fusable) followed by per-head
+//! activation-to-activation requests — with deterministic Poisson-like
+//! arrival jitter, so the coordinator can be driven by a workload that has
+//! the paper's stage mix rather than uniform random GEMMs.
+
+use std::sync::Arc;
+
+use crate::coordinator::MatmulRequest;
+use crate::dataflow::Mat;
+use crate::testutil::Rng;
+use crate::workload::TransformerModel;
+
+/// One traced request: payload + arrival offset from stream start.
+pub struct TracedRequest {
+    /// The request to submit.
+    pub request: MatmulRequest,
+    /// Arrival time offset in seconds.
+    pub arrival_s: f64,
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceConfig {
+    /// Edge of the (square) request matrices — the layer GEMMs are scaled
+    /// down to this size so host-side co-simulation stays fast.
+    pub dim: usize,
+    /// Output width of projection requests (head size; narrow ⇒ fusion
+    /// matters, per the Fig. 5(d) analysis).
+    pub head_cols: usize,
+    /// Mean request arrival rate (req/s) for the exponential inter-arrival
+    /// jitter.
+    pub rate_per_s: f64,
+    /// Layers to emit.
+    pub layers: usize,
+    /// Heads per layer contributing act-act requests.
+    pub heads: usize,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig { dim: 96, head_cols: 32, rate_per_s: 2000.0, layers: 8, heads: 2 }
+    }
+}
+
+/// Generate the attention request trace of `model` under `cfg`. The
+/// weight precision follows the model (GPT-2 8-bit, BERT 4-bit, BitNet
+/// 2-bit); activation-to-activation requests are always 8-bit.
+pub fn attention_trace(model: &TransformerModel, cfg: &TraceConfig, seed: u64) -> Vec<TracedRequest> {
+    let mut rng = Rng::seeded(seed);
+    let bits = model.weight_mode.weight_bits();
+    let mut out = Vec::new();
+    let mut clock = 0.0f64;
+    let next_arrival = |rng: &mut Rng, clock: &mut f64| {
+        // inverse-CDF exponential inter-arrival
+        let u = rng.f32_range(1e-6, 1.0) as f64;
+        *clock += -u.ln() / cfg.rate_per_s;
+        *clock
+    };
+
+    for layer in 0..cfg.layers {
+        let x = Arc::new(Mat::random(&mut rng, cfg.dim, cfg.dim, 8));
+        for name in ["q", "k", "v"] {
+            let w = Arc::new(Mat::random(&mut rng, cfg.dim, cfg.head_cols, bits));
+            out.push(TracedRequest {
+                request: MatmulRequest {
+                    id: 0,
+                    input_id: layer as u64,
+                    a: x.clone(),
+                    bs: vec![w],
+                    weight_bits: bits,
+                    act_act: false,
+                    tag: format!("L{layer}/{name}_proj"),
+                },
+                arrival_s: next_arrival(&mut rng, &mut clock),
+            });
+        }
+        for h in 0..cfg.heads {
+            let q = Arc::new(Mat::random(&mut rng, cfg.dim, cfg.dim, 8));
+            let kt = Arc::new(Mat::random(&mut rng, cfg.dim, cfg.dim, 8));
+            out.push(TracedRequest {
+                request: MatmulRequest {
+                    id: 0,
+                    input_id: (1000 + layer * cfg.heads + h) as u64,
+                    a: q,
+                    bs: vec![kt],
+                    weight_bits: 8,
+                    act_act: true,
+                    tag: format!("L{layer}/h{h}_scores"),
+                },
+                arrival_s: next_arrival(&mut rng, &mut clock),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PrecisionMode;
+    use crate::workload::models::{bitnet_1_58b, gpt2_medium};
+
+    #[test]
+    fn trace_shape_and_mix() {
+        let cfg = TraceConfig { layers: 4, heads: 2, ..Default::default() };
+        let trace = attention_trace(&bitnet_1_58b(), &cfg, 1);
+        assert_eq!(trace.len(), 4 * (3 + 2));
+        let proj = trace.iter().filter(|t| !t.request.act_act).count();
+        assert_eq!(proj, 12);
+        for t in &trace {
+            assert!(t.request.validate().is_ok(), "{}", t.request.tag);
+            if !t.request.act_act {
+                assert_eq!(t.request.weight_bits, 2);
+                assert_eq!(t.request.bs[0].cols(), cfg.head_cols);
+            } else {
+                assert_eq!(t.request.weight_bits, 8);
+            }
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let cfg = TraceConfig { layers: 16, heads: 2, rate_per_s: 1000.0, ..Default::default() };
+        let trace = attention_trace(&gpt2_medium(), &cfg, 2);
+        let times: Vec<f64> = trace.iter().map(|t| t.arrival_s).collect();
+        assert!(times.windows(2).all(|w| w[1] > w[0]), "arrivals must be monotone");
+        let span = times.last().unwrap() - times.first().unwrap();
+        let rate = (times.len() - 1) as f64 / span;
+        assert!(rate > 300.0 && rate < 3000.0, "empirical rate {rate}");
+    }
+
+    #[test]
+    fn qkv_triplets_share_input_object() {
+        let trace = attention_trace(&bitnet_1_58b(), &TraceConfig::default(), 3);
+        let q = &trace[0].request;
+        let k = &trace[1].request;
+        assert!(Arc::ptr_eq(&q.a, &k.a), "Q/K must reference the same input");
+        assert_eq!(q.input_id, k.input_id);
+    }
+
+    #[test]
+    fn weight_mode_follows_model() {
+        let t8 = attention_trace(&gpt2_medium(), &TraceConfig { layers: 1, ..Default::default() }, 4);
+        assert_eq!(t8[0].request.weight_bits, PrecisionMode::W8.weight_bits());
+        assert!(attention_trace(&bitnet_1_58b(), &TraceConfig { layers: 1, ..Default::default() }, 4)
+            .iter()
+            .filter(|t| !t.request.act_act)
+            .all(|t| t.request.weight_bits == 2));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = attention_trace(&bitnet_1_58b(), &TraceConfig::default(), 9);
+        let b = attention_trace(&bitnet_1_58b(), &TraceConfig::default(), 9);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.request.a.as_slice(), y.request.a.as_slice());
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Integration: the L3 coordinator under concurrent load — correctness,
+//! fusion accounting, backpressure and failure-injection behaviour.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use adip::arch::Architecture;
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::dataflow::Mat;
+use adip::testutil::Rng;
+
+fn cfg(workers: usize, queue: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers,
+        queue_capacity: queue,
+        batch_window: 8,
+    }
+}
+
+#[test]
+fn attention_layer_stream_serves_correctly() {
+    let coord = Coordinator::start(cfg(2, 256));
+    let mut rng = Rng::seeded(21);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    // 8 layers × (QKV triplet + act-act)
+    for layer in 0..8u64 {
+        let x = Arc::new(Mat::random(&mut rng, 48, 48, 8));
+        for _ in 0..3 {
+            let w = Arc::new(Mat::random(&mut rng, 48, 48, 2));
+            expected.push(x.matmul(&w));
+            let (_, rx) = coord
+                .try_submit(MatmulRequest {
+                    id: 0,
+                    input_id: layer,
+                    a: x.clone(),
+                    bs: vec![w],
+                    weight_bits: 2,
+                    act_act: false,
+                    tag: "proj".into(),
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        let qa = Arc::new(Mat::random(&mut rng, 48, 48, 8));
+        let ka = Arc::new(Mat::random(&mut rng, 48, 48, 8));
+        expected.push(qa.matmul(&ka));
+        let (_, rx) = coord
+            .try_submit(MatmulRequest {
+                id: 0,
+                input_id: 100 + layer,
+                a: qa,
+                bs: vec![ka],
+                weight_bits: 8,
+                act_act: true,
+                tag: "scores".into(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap();
+        assert_eq!(out.result.unwrap()[0], expected[i], "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 32);
+    assert!(m.fused_batches.load(Ordering::Relaxed) >= 1, "QKV fusion expected");
+    // act-act requests never fuse with projections
+    assert!(m.batches.load(Ordering::Relaxed) >= 16);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_work() {
+    let coord = Coordinator::start(cfg(1, 64));
+    let mut rng = Rng::seeded(23);
+    let mut rxs = Vec::new();
+    for _ in 0..16 {
+        let a = Arc::new(Mat::random(&mut rng, 64, 64, 8));
+        let b = Arc::new(Mat::random(&mut rng, 64, 64, 8));
+        rxs.push(
+            coord
+                .try_submit(MatmulRequest {
+                    id: 0,
+                    input_id: 0,
+                    a,
+                    bs: vec![b],
+                    weight_bits: 8,
+                    act_act: false,
+                    tag: String::new(),
+                })
+                .unwrap()
+                .1,
+        );
+    }
+    coord.shutdown(); // must drain, not drop
+    for rx in rxs {
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+}
+
+#[test]
+fn malformed_requests_fail_without_poisoning_the_stream() {
+    let coord = Coordinator::start(cfg(1, 64));
+    let mut rng = Rng::seeded(25);
+    // malformed: inner dimension mismatch passes validate? no — validate
+    // catches it at submit; craft one that validates but stresses the
+    // worker path with extreme values instead.
+    let a = Arc::new(Mat::random(&mut rng, 32, 32, 8));
+    let bad = coord.try_submit(MatmulRequest {
+        id: 0,
+        input_id: 0,
+        a: a.clone(),
+        bs: vec![],
+        weight_bits: 2,
+        act_act: false,
+        tag: String::new(),
+    });
+    assert!(bad.is_err());
+    // stream continues to work
+    let b = Arc::new(Mat::random(&mut rng, 32, 32, 2));
+    let want = a.matmul(&b);
+    let out = coord
+        .submit_wait(MatmulRequest {
+            id: 0,
+            input_id: 0,
+            a,
+            bs: vec![b],
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        })
+        .unwrap();
+    assert_eq!(out.result.unwrap()[0], want);
+    let m = coord.metrics();
+    assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_conservation_under_backpressure() {
+    let coord = Coordinator::start(cfg(1, 4));
+    let mut rng = Rng::seeded(27);
+    let total = 40;
+    let mut rxs = Vec::new();
+    for _ in 0..total {
+        let a = Arc::new(Mat::random(&mut rng, 96, 96, 8));
+        let b = Arc::new(Mat::random(&mut rng, 96, 96, 8));
+        if let Ok((_, rx)) = coord.try_submit(MatmulRequest {
+            id: 0,
+            input_id: 0,
+            a,
+            bs: vec![b],
+            weight_bits: 8,
+            act_act: false,
+            tag: String::new(),
+        }) {
+            rxs.push(rx);
+        }
+    }
+    let accepted = rxs.len() as u64;
+    for rx in rxs {
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+    let m = coord.metrics();
+    assert_eq!(m.accepted.load(Ordering::Relaxed), accepted);
+    assert_eq!(m.completed.load(Ordering::Relaxed), accepted);
+    assert_eq!(m.rejected.load(Ordering::Relaxed), total - accepted);
+    coord.shutdown();
+}

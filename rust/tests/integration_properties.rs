@@ -1,0 +1,144 @@
+//! Cross-module property tests: invariants that tie the analytical models,
+//! the power model, the co-simulator and the workload engine together.
+
+use adip::analytical::gemm::{estimate_gemm, MemoryPolicy};
+use adip::analytical::{adip_throughput_ops_per_cycle, GemmShape};
+use adip::arch::{AdipArray, ArchConfig, Architecture, SystolicArray};
+use adip::power::{adip_point, dip_point, overheads};
+use adip::quant::PrecisionMode;
+use adip::sim::{evaluate_model, SimConfig};
+use adip::testutil::{check, Rng};
+use adip::workload::TransformerModel;
+
+/// Achieved throughput never exceeds the architectural peak, and
+/// approaches it for large GEMMs (>95%).
+#[test]
+fn achieved_throughput_bounded_by_peak() {
+    check(
+        "throughput-bound",
+        1201,
+        40,
+        |rng: &mut Rng| {
+            let n = *rng.choose(&[8usize, 16, 32]);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let m = 64 + rng.below(512);
+            let k = 64 + rng.below(512);
+            let ncols = 64 + rng.below(512);
+            (n, mode, GemmShape::new(m, k, ncols))
+        },
+        |&(n, mode, shape)| {
+            let cfg = ArchConfig::with_n(n);
+            let est = estimate_gemm(Architecture::Adip, &cfg, shape, mode, MemoryPolicy::default());
+            let peak = AdipArray::new(cfg).peak_ops_per_cycle(mode) as f64;
+            if est.ops_per_cycle() > peak + 1e-9 {
+                return Err(format!("achieved {} > peak {peak}", est.ops_per_cycle()));
+            }
+            Ok(())
+        },
+    );
+    // large aligned GEMM approaches peak
+    let cfg = ArchConfig::with_n(32);
+    let est = estimate_gemm(
+        Architecture::Adip,
+        &cfg,
+        GemmShape::new(4096, 4096, 4096),
+        PrecisionMode::W2,
+        MemoryPolicy::default(),
+    );
+    let peak = AdipArray::new(cfg).peak_ops_per_cycle(PrecisionMode::W2) as f64;
+    assert!(est.ops_per_cycle() / peak > 0.95);
+}
+
+/// Eq. (3) throughput is monotone in N and bounded by the steady peak.
+#[test]
+fn eq3_monotone_and_bounded() {
+    for mode in PrecisionMode::ALL {
+        let mut last = 0.0;
+        for n in [4u64, 8, 16, 32, 64, 128] {
+            let t = adip_throughput_ops_per_cycle(n, 16, 2, 8, mode.weight_bits(), 1, 3);
+            assert!(t > last, "mode {mode} n={n}");
+            let peak = 2.0 * mode.interleave_factor() as f64 * (n * n) as f64;
+            assert!(t <= peak, "mode {mode} n={n}: {t} > {peak}");
+            last = t;
+        }
+    }
+}
+
+/// Larger arrays always reduce total workload cycles (more parallelism),
+/// and energy stays within a bounded factor of the smaller config.
+#[test]
+fn workload_latency_monotone_in_array_size() {
+    for model in TransformerModel::evaluated() {
+        let mut last_cycles = u64::MAX;
+        for n in [8usize, 16, 32, 64] {
+            let cfg = SimConfig { arch: ArchConfig::with_n(n), ..SimConfig::default() };
+            let r = evaluate_model(Architecture::Adip, &model, &cfg);
+            assert!(
+                r.total_cycles() < last_cycles,
+                "{} n={n}: {} !< {last_cycles}",
+                model.name,
+                r.total_cycles()
+            );
+            last_cycles = r.total_cycles();
+        }
+    }
+}
+
+/// Power-model invariants: overheads stay within the published envelope,
+/// areas/powers are positive and monotone in N.
+#[test]
+fn power_model_envelope() {
+    check(
+        "power-envelope",
+        1301,
+        60,
+        |rng: &mut Rng| 4 + rng.below(61),
+        |&n| {
+            let o = overheads(n);
+            if !(1.2..=1.45).contains(&o.area_x) {
+                return Err(format!("area ratio {} out of envelope at n={n}", o.area_x));
+            }
+            if !(1.5..=1.75).contains(&o.power_x) {
+                return Err(format!("power ratio {} out of envelope at n={n}", o.power_x));
+            }
+            let a = adip_point(n);
+            let d = dip_point(n);
+            if !(a.area_mm2 > d.area_mm2 && a.power_w > d.power_w) {
+                return Err("ADiP must cost more than DiP".into());
+            }
+            if d.area_mm2 <= 0.0 || d.power_w <= 0.0 {
+                return Err("non-positive physicals".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The evaluation is mode-faithful: forcing all projections to 8-bit
+/// (GPT-2) must equalize ADiP and DiP cycle counts for every model shape.
+#[test]
+fn eight_bit_projections_never_gain() {
+    let cfg = SimConfig::default();
+    for model in TransformerModel::evaluated() {
+        let mut m8 = model.clone();
+        m8.weight_mode = PrecisionMode::W8;
+        let dip = evaluate_model(Architecture::Dip, &m8, &cfg);
+        let adip = evaluate_model(Architecture::Adip, &m8, &cfg);
+        let ratio = adip.total_cycles() as f64 / dip.total_cycles() as f64;
+        assert!((ratio - 1.0).abs() < 1e-4, "{}: ratio {ratio}", m8.name);
+    }
+}
+
+/// Memory savings equal latency improvements for projection-only gains —
+/// the structural identity behind the paper's matching 53.6% numbers.
+#[test]
+fn memory_saving_equals_latency_improvement() {
+    let cfg = SimConfig::default();
+    for model in TransformerModel::evaluated() {
+        let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+        let adip = evaluate_model(Architecture::Adip, &model, &cfg);
+        let lat = 1.0 - adip.total_cycles() as f64 / dip.total_cycles() as f64;
+        let mem = 1.0 - adip.total_memory_bytes() as f64 / dip.total_memory_bytes() as f64;
+        assert!((lat - mem).abs() < 0.01, "{}: {lat} vs {mem}", model.name);
+    }
+}

@@ -1,0 +1,121 @@
+//! Integration: full-stack workload evaluation through the public API —
+//! the paper's headline numbers, analytical-vs-register-level agreement,
+//! and cross-architecture functional equivalence on real data.
+
+use adip::analytical::gemm::{estimate_gemm, MemoryPolicy};
+use adip::analytical::GemmShape;
+use adip::arch::{build_array, AdipArray, ArchConfig, Architecture, DipArray, SystolicArray, WsArray};
+use adip::dataflow::{interleave_tiles, Mat};
+use adip::quant::PrecisionMode;
+use adip::sim::{evaluate_model, CoSim, SimConfig};
+use adip::testutil::Rng;
+use adip::workload::TransformerModel;
+
+/// All paper headline improvements in one assertion table.
+#[test]
+fn paper_headline_numbers() {
+    let cfg = SimConfig::default();
+    // (model, latency %, energy %, memory %)
+    let expect = [
+        ("gpt2", 0.0, -62.8, 0.0),
+        ("bert", 40.0, 2.3, 40.0),
+        ("bitnet", 53.6, 24.4, 53.6),
+    ];
+    for (name, lat, en, mem) in expect {
+        let model = TransformerModel::by_name(name).unwrap();
+        let dip = evaluate_model(Architecture::Dip, &model, &cfg);
+        let adip = evaluate_model(Architecture::Adip, &model, &cfg);
+        let got_lat = (1.0 - adip.total_cycles() as f64 / dip.total_cycles() as f64) * 100.0;
+        let got_en = (1.0 - adip.total_energy_j() / dip.total_energy_j()) * 100.0;
+        let got_mem =
+            (1.0 - adip.total_memory_bytes() as f64 / dip.total_memory_bytes() as f64) * 100.0;
+        assert!((got_lat - lat).abs() < 0.5, "{name} latency {got_lat} vs {lat}");
+        assert!((got_en - en).abs() < 0.5, "{name} energy {got_en} vs {en}");
+        assert!((got_mem - mem).abs() < 0.5, "{name} memory {got_mem} vs {mem}");
+    }
+}
+
+/// The GEMM-level analytical estimate agrees with the co-simulator's
+/// tile-scheduled cycle count (same fusion, same fill accounting).
+#[test]
+fn analytical_matches_cosim_cycles() {
+    let mut rng = Rng::seeded(1);
+    for (arch, mode) in [
+        (Architecture::Ws, PrecisionMode::W8),
+        (Architecture::Dip, PrecisionMode::W8),
+        (Architecture::Adip, PrecisionMode::W8),
+        (Architecture::Adip, PrecisionMode::W4),
+        (Architecture::Adip, PrecisionMode::W2),
+    ] {
+        let n = 16usize;
+        let shape = GemmShape::new(96, 64, 128);
+        let a = Mat::random(&mut rng, shape.m, shape.k, 8);
+        let b = Mat::random(&mut rng, shape.k, shape.n, mode.weight_bits());
+        let mut sim = CoSim::new(build_array(arch, ArchConfig::with_n(n)));
+        let run = sim.run_gemm(&a, &b, mode, false).unwrap();
+        let est = estimate_gemm(arch, &ArchConfig::with_n(n), shape, mode, MemoryPolicy::default());
+        assert_eq!(run.passes, est.passes, "{arch} {mode} passes");
+        assert_eq!(run.cycles, est.cycles, "{arch} {mode} cycles");
+        assert_eq!(run.memory.paper_total_bytes(), est.memory_bytes, "{arch} {mode} memory");
+    }
+}
+
+/// WS, DiP and ADiP produce bit-identical results for the same quantized
+/// GEMM (the architectures differ in dataflow, not arithmetic).
+#[test]
+fn architectures_agree_functionally() {
+    let mut rng = Rng::seeded(2);
+    let a = Mat::random(&mut rng, 100, 60, 8);
+    let b = Mat::random(&mut rng, 60, 84, 2);
+    let want = a.matmul(&b);
+    for arch in Architecture::ALL {
+        let mut sim = CoSim::new(build_array(arch, ArchConfig::with_n(16)));
+        let r = sim.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(r.outputs[0], want, "{arch}");
+    }
+}
+
+/// Register-level simulators agree with the closed-form latency models on
+/// every evaluated size (the "cycle-accurate" claim).
+#[test]
+fn register_level_simulation_matches_closed_forms() {
+    let mut rng = Rng::seeded(3);
+    for n in [4usize, 8, 16] {
+        let cfg = ArchConfig::with_n(n);
+        let a = Mat::random(&mut rng, n, n, 8);
+        let w8 = Mat::random(&mut rng, n, n, 8);
+        let it8 = interleave_tiles(&[&w8], PrecisionMode::W8).unwrap();
+
+        let adip = AdipArray::new(cfg);
+        let sim = adip.tile_pass_cycle_accurate(&a, &it8).unwrap();
+        assert_eq!(sim.latency_cycles, adip.tile_latency(PrecisionMode::W8), "adip n={n}");
+
+        let dip = DipArray::new(cfg);
+        let sim = dip.tile_pass_cycle_accurate(&a, &w8).unwrap();
+        assert_eq!(sim.latency_cycles, dip.tile_latency(PrecisionMode::W8), "dip n={n}");
+
+        let ws = WsArray::new(cfg);
+        let sim = ws.tile_pass_cycle_accurate(&a, &w8).unwrap();
+        assert_eq!(sim.latency_cycles, ws.tile_latency(PrecisionMode::W8), "ws n={n}");
+    }
+}
+
+/// Peak throughput sanity at the flagship size (paper abstract).
+#[test]
+fn flagship_peaks() {
+    let arr = AdipArray::new(ArchConfig::with_n(64));
+    let at_1ghz = |mode| arr.peak_ops_per_cycle(mode) as f64 * 1e9 / 1e12;
+    assert_eq!(at_1ghz(PrecisionMode::W8), 8.192);
+    assert_eq!(at_1ghz(PrecisionMode::W4), 16.384);
+    assert_eq!(at_1ghz(PrecisionMode::W2), 32.768);
+}
+
+/// Every report artifact renders and is non-trivial.
+#[test]
+fn all_report_artifacts_render() {
+    for name in adip::report::ALL_ARTIFACTS {
+        let r = adip::report::render(name).unwrap();
+        assert!(r.text.lines().count() >= 4, "{name} too small");
+        assert!(r.csv.lines().count() >= 2, "{name} csv too small");
+    }
+}

@@ -1,0 +1,72 @@
+//! Integration: PJRT artifact loading + execution (skips with a notice
+//! when `make artifacts` has not run — keeps `cargo test` green in a bare
+//! checkout while exercising the full AOT path when artifacts exist).
+
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::runtime::{f32_to_mat, mat_to_f32, ArtifactRuntime};
+use adip::testutil::Rng;
+
+fn runtime() -> Option<ArtifactRuntime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = ArtifactRuntime::try_load(&dir);
+    if rt.is_none() {
+        eprintln!("skipping PJRT artifact tests: run `make artifacts` first");
+    }
+    rt
+}
+
+#[test]
+fn matmul_artifacts_match_rust_reference() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(31);
+    for mode in PrecisionMode::ALL {
+        let name = format!("matmul_{}", mode.name());
+        assert!(rt.names().contains(&name.as_str()), "{name} missing from artifacts");
+        let k = mode.interleave_factor();
+        let a = Mat::random(&mut rng, 32, 32, 8);
+        let bs: Vec<Mat> =
+            (0..k).map(|_| Mat::random(&mut rng, 32, 32, mode.weight_bits())).collect();
+        let fa = mat_to_f32(&a);
+        let fbs: Vec<Vec<f32>> = bs.iter().map(mat_to_f32).collect();
+        let dims = [32usize, 32];
+        let mut inputs: Vec<(&[f32], &[usize])> = vec![(&fa, &dims)];
+        inputs.extend(fbs.iter().map(|f| (f.as_slice(), &dims[..])));
+        let out = rt.run_f32(&name, &inputs).unwrap();
+        assert_eq!(out.len(), k, "{name} output arity");
+        for (s, b) in bs.iter().enumerate() {
+            assert_eq!(f32_to_mat(&out[s], 32, 32), a.matmul(b), "{name}[{s}]");
+        }
+    }
+}
+
+#[test]
+fn mha_block_artifact_runs_and_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::seeded(33);
+    let x = Mat::random(&mut rng, 64, 64, 8);
+    let ws: Vec<Mat> = (0..4).map(|_| Mat::random(&mut rng, 64, 64, 2)).collect();
+    let fx = mat_to_f32(&x);
+    let fws: Vec<Vec<f32>> = ws.iter().map(mat_to_f32).collect();
+    let xdims = [64usize, 64];
+    let mut inputs: Vec<(&[f32], &[usize])> = vec![(&fx, &xdims)];
+    inputs.extend(fws.iter().map(|f| (f.as_slice(), &xdims[..])));
+    let out1 = rt.run_f32("mha_block", &inputs).unwrap();
+    let out2 = rt.run_f32("mha_block", &inputs).unwrap();
+    assert_eq!(out1.len(), 1);
+    assert_eq!(out1[0].len(), 64 * 64);
+    assert_eq!(out1, out2, "mha_block must be deterministic");
+    // integer-valued output (the graph computes in int32)
+    assert!(out1[0].iter().all(|v| (v - v.round()).abs() < 1e-6));
+    // non-trivial output
+    assert!(out1[0].iter().any(|&v| v != 0.0));
+}
+
+#[test]
+fn runtime_rejects_unknown_artifact() {
+    let Some(rt) = runtime() else { return };
+    let a = [0f32; 4];
+    let dims = [2usize, 2];
+    let err = rt.run_f32("nonexistent", &[(&a, &dims)]).unwrap_err();
+    assert!(err.to_string().contains("unknown artifact"));
+}
