@@ -46,6 +46,9 @@ fn main() -> anyhow::Result<()> {
         workers: 2,
         queue_capacity: 512,
         batch_window: 8,
+        // the serving default: functional numerics + analytical timing
+        // (the cycle simulator stays the golden reference in tests)
+        backend: adip::arch::Backend::Functional,
     });
 
     // Request stream: per "layer", one shared input X feeding a Q/K/V

@@ -1,0 +1,9 @@
+"""Pytest bootstrap: make the `compile` package importable regardless of
+where pytest is invoked from (repo root, python/, or python/tests)."""
+
+import sys
+from pathlib import Path
+
+PYTHON_DIR = Path(__file__).resolve().parent.parent
+if str(PYTHON_DIR) not in sys.path:
+    sys.path.insert(0, str(PYTHON_DIR))

@@ -1,0 +1,89 @@
+"""Hypothesis compatibility layer for offline environments.
+
+Re-exports ``given``, ``settings`` and ``strategies`` (as ``st``) from the
+real `hypothesis` when it is installed. When it is not (this repo's offline
+container has no wheel for it), provides a tiny deterministic fallback that
+runs each property ``max_examples`` times with seeded pseudo-random draws —
+the same strategy surface the tests use: ``sampled_from``, ``integers`` and
+``data()``. Failures are exactly reproducible (fixed seed per property).
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import random
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A sampler: draws one value from a seeded RNG."""
+
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    class _Data:
+        """Mimics hypothesis's interactive data object (`data.draw(...)`)."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy):
+            return strategy.sample(self._rng)
+
+    class _DataStrategy(_Strategy):
+        def __init__(self):
+            super().__init__(lambda rng: _Data(rng))
+
+    class _St:
+        @staticmethod
+        def sampled_from(options):
+            opts = list(options)
+            return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _St()
+
+    def settings(max_examples=100, **_ignored):
+        """Record ``max_examples`` on the (possibly wrapped) test function."""
+
+        def decorate(fn):
+            fn._proptest_max_examples = max_examples
+            return fn
+
+        return decorate
+
+    def given(**strategies):
+        """Run the test once per example with freshly drawn kwargs."""
+
+        def decorate(fn):
+            def wrapper(*args, **kwargs):
+                examples = getattr(wrapper, "_proptest_max_examples", 25)
+                # fixed seed per property: reproducible, distinct per test
+                rng = random.Random(f"proptest:{fn.__qualname__}")
+                for _ in range(examples):
+                    drawn = {name: s.sample(rng) for name, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # keep pytest's display name without copying the signature
+            # (a copied signature would make pytest treat the drawn
+            # parameters as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._proptest_max_examples = getattr(fn, "_proptest_max_examples", 25)
+            return wrapper
+
+        return decorate

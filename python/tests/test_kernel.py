@@ -7,8 +7,7 @@ Includes the hypothesis sweep over shapes/modes/values and the PE-exact
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from proptest_compat import given, settings, st
 
 from compile.kernels import packing, ref
 from compile.kernels.adip_matmul import (

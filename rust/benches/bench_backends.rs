@@ -1,0 +1,104 @@
+//! Bench: execution-backend comparison — `Backend::Functional` (direct
+//! whole-GEMM + analytical timing, the serving path) vs
+//! `Backend::CycleAccurate` (register-level golden reference) — at the
+//! GEMM level and end-to-end through the coordinator at n = 32.
+//!
+//! The acceptance bar for the functional backend is ≥ 5× end-to-end
+//! coordinator throughput at n = 32; in practice it lands around two
+//! orders of magnitude because the cycle path steps every PE every beat.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use adip::arch::{build_array, ArchConfig, Architecture, Backend};
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::sim::CoSim;
+use adip::testutil::Rng;
+
+fn gemm_once(backend: Backend, a: &Mat, b: &Mat, mode: PrecisionMode) -> u64 {
+    let cfg = ArchConfig::with_n(32).with_backend(backend);
+    let mut sim = CoSim::new(build_array(Architecture::Adip, cfg));
+    sim.run_gemm(a, b, mode, false).unwrap().cycles
+}
+
+fn serve_stream(backend: Backend, requests: usize, dim: usize) -> f64 {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 32,
+        workers: 2,
+        queue_capacity: 1024,
+        batch_window: 8,
+        backend,
+    });
+    let mut rng = Rng::seeded(23);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    let mut shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
+    for i in 0..requests {
+        if i % 3 == 0 {
+            shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
+        }
+        let req = MatmulRequest {
+            id: 0,
+            input_id: (i / 3) as u64,
+            a: shared.clone(),
+            bs: vec![Arc::new(Mat::random(&mut rng, dim, 32, 2))],
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        };
+        rxs.push(coord.try_submit(req).expect("queue sized").1);
+    }
+    for rx in rxs {
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    dt
+}
+
+fn main() {
+    let mut rng = Rng::seeded(11);
+
+    println!("== GEMM-level backend comparison (ADiP 32x32, 128x128x128) ==");
+    let a = Mat::random(&mut rng, 128, 128, 8);
+    for mode in PrecisionMode::ALL {
+        let b = Mat::random(&mut rng, 128, 128, mode.weight_bits());
+        let cf = gemm_once(Backend::Functional, &a, &b, mode);
+        let cg = gemm_once(Backend::CycleAccurate, &a, &b, mode);
+        assert_eq!(cf, cg, "backends disagree on simulated cycles");
+        let macs = (128usize * 128 * 128) as f64;
+        let fast = common::bench(8, || gemm_once(Backend::Functional, &a, &b, mode));
+        common::report(&format!("functional gemm {mode}"), fast, macs, "MAC");
+        let slow = common::bench(3, || gemm_once(Backend::CycleAccurate, &a, &b, mode));
+        common::report(&format!("cycle-accurate gemm {mode}"), slow, macs, "MAC");
+        println!(
+            "  -> functional speedup {mode}: {:.1}x (identical outputs + cycles)",
+            slow.median_s / fast.median_s
+        );
+    }
+
+    println!("\n== end-to-end coordinator throughput (n=32, 2 workers, Q/K/V stream) ==");
+    const REQS: usize = 48;
+    const DIM: usize = 128;
+    let t_fast = serve_stream(Backend::Functional, REQS, DIM);
+    let t_slow = serve_stream(Backend::CycleAccurate, REQS, DIM);
+    println!(
+        "  functional:     {REQS} requests in {t_fast:.3}s = {:.0} req/s",
+        REQS as f64 / t_fast
+    );
+    println!(
+        "  cycle-accurate: {REQS} requests in {t_slow:.3}s = {:.0} req/s",
+        REQS as f64 / t_slow
+    );
+    let speedup = t_slow / t_fast;
+    println!("  end-to-end speedup: {speedup:.1}x (acceptance bar: >= 5x)");
+    assert!(
+        speedup >= 5.0,
+        "functional backend must be at least 5x faster end-to-end (got {speedup:.1}x)"
+    );
+}

@@ -22,6 +22,7 @@ fn stream(fusable: bool, requests: usize, dim: usize) -> (usize, f64, u64) {
         workers: 2,
         queue_capacity: 1024,
         batch_window: 12,
+        ..Default::default()
     });
     let mut rng = Rng::seeded(17);
     let t0 = std::time::Instant::now();

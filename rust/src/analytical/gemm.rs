@@ -12,7 +12,8 @@
 //! stationary tile (8-bit carrier, holding `k` interleaved low-precision
 //! tiles). Psums stay on-chip; output write-back is identical across the
 //! three architectures and attributed to the next stage's activation reads
-//! (set [`MemoryPolicy::count_outputs`] to include it explicitly).
+//! (set [`MemoryPolicy::count_outputs`] to include it explicitly — one
+//! tile per output block, matching the co-simulator's write-back counter).
 
 use crate::arch::{ArchConfig, Architecture, SharedColumnUnit};
 use crate::dataflow::tiling::tile_grid;
@@ -133,16 +134,69 @@ pub fn estimate_gemm(
     let tile_bytes = (cfg.n * cfg.n) as u64;
     let mut memory_bytes = passes * tile_bytes + fused_groups * tile_bytes;
     if policy.count_outputs {
-        // Each pass emits k output tiles, requantized to 8-bit on the way
-        // out (identical across architectures for the same GEMM set).
-        let k = match arch {
-            Architecture::Adip => mode.interleave_factor() as u64,
-            _ => 1,
-        };
-        memory_bytes += passes * k * tile_bytes;
+        // Output tiles, requantized to 8-bit, written once per output
+        // block after the last reduction step — identical across
+        // architectures and exactly the co-simulator's write-back counter.
+        memory_bytes += (grid.tiles_m() * grid.tiles_n()) as u64 * tile_bytes;
     }
 
     GemmEstimate { arch, mode, passes, cycles, ops: shape.ops(), memory_bytes }
+}
+
+/// Estimate a shared-input GEMM *set* `C_s = A · B_s` of `set_size`
+/// equally-shaped weight matrices (the paper's asymmetric multi-matrix
+/// mode, Fig. 5(d)).
+///
+/// Mirrors the co-simulator's generalized slot packing: on ADiP every
+/// (source matrix, output-column tile) pair is one interleave slot, slots
+/// are chunked into `interleave_factor`-sized stationary groups, and the
+/// whole set pays one pipeline fill. Architectures without interleaving
+/// (and singleton sets) execute the matrices independently, so their cost
+/// is `set_size ×` the single-GEMM estimate — including one fill each.
+pub fn estimate_gemm_set(
+    arch: Architecture,
+    cfg: &ArchConfig,
+    shape: GemmShape,
+    set_size: usize,
+    requested_mode: PrecisionMode,
+    policy: MemoryPolicy,
+) -> GemmEstimate {
+    assert!(set_size > 0, "set must contain at least one matrix");
+    let single = estimate_gemm(arch, cfg, shape, requested_mode, policy);
+    if arch != Architecture::Adip || set_size == 1 {
+        return GemmEstimate {
+            passes: single.passes * set_size as u64,
+            cycles: single.cycles * set_size as u64,
+            ops: single.ops * set_size as u64,
+            memory_bytes: single.memory_bytes * set_size as u64,
+            ..single
+        };
+    }
+
+    let mode = requested_mode;
+    let grid = tile_grid(shape.m, shape.k, shape.n, cfg.n);
+    let cap = mode.interleave_factor();
+    let slots = grid.tiles_n() * set_size;
+    let groups = (slots.div_ceil(cap) * grid.tiles_k()) as u64;
+    let passes = groups * grid.tiles_m() as u64;
+
+    let (tile_latency, steady) = pass_cycles(arch, cfg, mode);
+    let cycles = (tile_latency - steady) + passes * steady;
+
+    let tile_bytes = (cfg.n * cfg.n) as u64;
+    let mut memory_bytes = passes * tile_bytes + groups * tile_bytes;
+    if policy.count_outputs {
+        memory_bytes += (grid.tiles_m() * slots) as u64 * tile_bytes;
+    }
+
+    GemmEstimate {
+        arch,
+        mode,
+        passes,
+        cycles,
+        ops: shape.ops() * set_size as u64,
+        memory_bytes,
+    }
 }
 
 #[cfg(test)]
@@ -215,6 +269,41 @@ mod tests {
             MemoryPolicy { count_outputs: true },
         );
         assert!(with.memory_bytes > without.memory_bytes);
+    }
+
+    #[test]
+    fn set_estimate_packs_slots_and_degrades_elsewhere() {
+        let cfg = ArchConfig::with_n(8);
+        let shape = GemmShape::new(32, 32, 32); // 4×4×4 tiles at n=8
+        // ADiP 8b×2b, 3 matrices: 12 slots → 3 groups × 4 k × 4 m = 48
+        let a = estimate_gemm_set(Architecture::Adip, &cfg, shape, 3, PrecisionMode::W2, MemoryPolicy::default());
+        assert_eq!(a.passes, 48);
+        assert_eq!(a.mode, PrecisionMode::W2);
+        assert_eq!(a.ops, 3 * shape.ops());
+        // singleton set degenerates to the single-GEMM estimate
+        let one = estimate_gemm_set(Architecture::Adip, &cfg, shape, 1, PrecisionMode::W2, MemoryPolicy::default());
+        let single = estimate_gemm(Architecture::Adip, &cfg, shape, PrecisionMode::W2, MemoryPolicy::default());
+        assert_eq!(one, single);
+        // DiP: three independent 8b×8b runs (fill paid per run)
+        let d = estimate_gemm_set(Architecture::Dip, &cfg, shape, 3, PrecisionMode::W2, MemoryPolicy::default());
+        let d1 = estimate_gemm(Architecture::Dip, &cfg, shape, PrecisionMode::W2, MemoryPolicy::default());
+        assert_eq!(d.passes, 3 * d1.passes);
+        assert_eq!(d.cycles, 3 * d1.cycles);
+        assert_eq!(d.memory_bytes, 3 * d1.memory_bytes);
+        assert_eq!(d.mode, PrecisionMode::W8);
+    }
+
+    #[test]
+    #[should_panic]
+    fn set_estimate_rejects_empty_sets() {
+        estimate_gemm_set(
+            Architecture::Adip,
+            &cfg(),
+            GemmShape::new(8, 8, 8),
+            0,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
     }
 
     #[test]

@@ -14,5 +14,5 @@ pub use equations::{
     adip_latency, adip_throughput_ops_per_cycle, fig2_series, fig4_series, pe_latency, Fig2Row,
     Fig4Row,
 };
-pub use gemm::{estimate_gemm, GemmEstimate, GemmShape};
+pub use gemm::{estimate_gemm, estimate_gemm_set, GemmEstimate, GemmShape};
 pub use utilization::{effective_gain, qkv_sweep, slot_utilization, FusionPolicy};

@@ -94,6 +94,9 @@ impl SystolicArray for AdipArray {
             weights.packed.rows() == n && weights.packed.cols() == n,
             "weight tile shape mismatch"
         );
+        if self.cfg.backend == super::Backend::CycleAccurate {
+            return self.tile_pass_cycle_accurate(activations, weights);
+        }
         // Fast functional path: mathematically identical to the PE +
         // column-unit + diagonal-dataflow pipeline (cross-checked against
         // the cycle simulator in tests and by `tile_pass_cycle_accurate`).
@@ -195,5 +198,22 @@ mod tests {
         let w = Mat::zeros(4, 4);
         let it = interleave_tiles(&[&w], PrecisionMode::W8).unwrap();
         assert!(array.tile_pass(&a, &it).is_err());
+    }
+
+    #[test]
+    fn cycle_accurate_backend_routes_tile_pass_through_register_sim() {
+        let mut rng = Rng::seeded(303);
+        let n = 8;
+        let golden = AdipArray::new(ArchConfig::cycle_accurate(n));
+        let fast = arr(n);
+        let a = Mat::random(&mut rng, n, n, 8);
+        let tiles: Vec<Mat> = (0..2).map(|_| Mat::random(&mut rng, n, n, 4)).collect();
+        let refs: Vec<&Mat> = tiles.iter().collect();
+        let it = interleave_tiles(&refs, PrecisionMode::W4).unwrap();
+        let g = golden.tile_pass(&a, &it).unwrap();
+        let f = fast.tile_pass(&a, &it).unwrap();
+        assert_eq!(g.outputs, f.outputs);
+        assert_eq!(g.latency_cycles, f.latency_cycles);
+        assert_eq!(g.steady_cycles, f.steady_cycles);
     }
 }

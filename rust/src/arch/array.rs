@@ -37,6 +37,60 @@ impl std::fmt::Display for Architecture {
     }
 }
 
+/// Execution backend of an array model.
+///
+/// The two backends are **bit-exact equivalents** — the differential
+/// conformance suite (`rust/tests/integration_backends.rs`) asserts output
+/// and cycle equality across architectures, precisions and batch modes:
+///
+/// * [`Backend::CycleAccurate`] — every tile pass steps the register-level
+///   simulators in [`super::cycle_sim`]. Slow (per-PE, per-beat); the
+///   golden reference for validation and calibration runs.
+/// * [`Backend::Functional`] — GEMMs are computed directly in `O(M·K·N)`
+///   integer arithmetic while cycles/energy/memory come from the
+///   analytical models the cycle simulators validate. The serving path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Backend {
+    /// Register-level cycle simulation (golden reference).
+    CycleAccurate,
+    /// Direct functional GEMM + analytical timing (fast serving path).
+    #[default]
+    Functional,
+}
+
+impl Backend {
+    /// Both backends, functional first (the default).
+    pub const ALL: [Backend; 2] = [Backend::Functional, Backend::CycleAccurate];
+
+    /// Display name used by the CLI / config files.
+    pub const fn name(self) -> &'static str {
+        match self {
+            Backend::CycleAccurate => "cycle",
+            Backend::Functional => "functional",
+        }
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Backend {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cycle" | "cycle-accurate" | "cycle_accurate" | "golden" => Ok(Backend::CycleAccurate),
+            "functional" | "fast" | "func" => Ok(Backend::Functional),
+            other => Err(format!(
+                "unknown backend {other:?} (expected `functional` or `cycle`)"
+            )),
+        }
+    }
+}
+
 /// Array-level static configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArchConfig {
@@ -46,13 +100,15 @@ pub struct ArchConfig {
     pub multipliers: u32,
     /// MAC pipeline stages (`S` of Eq. (2)).
     pub mac_stages: u64,
+    /// Execution backend for tile passes / GEMMs.
+    pub backend: Backend,
 }
 
 impl Default for ArchConfig {
     fn default() -> Self {
         // The paper's workload evaluation point is 32×32 with the selected
-        // 16-multiplier PE and single-stage MACs.
-        ArchConfig { n: 32, multipliers: 16, mac_stages: 1 }
+        // 16-multiplier PE and single-stage MACs, served functionally.
+        ArchConfig { n: 32, multipliers: 16, mac_stages: 1, backend: Backend::Functional }
     }
 }
 
@@ -60,6 +116,16 @@ impl ArchConfig {
     /// Convenience constructor for an `n × n` array.
     pub fn with_n(n: usize) -> ArchConfig {
         ArchConfig { n, ..ArchConfig::default() }
+    }
+
+    /// The same configuration with a different backend.
+    pub fn with_backend(self, backend: Backend) -> ArchConfig {
+        ArchConfig { backend, ..self }
+    }
+
+    /// Convenience constructor for an `n × n` cycle-accurate array.
+    pub fn cycle_accurate(n: usize) -> ArchConfig {
+        ArchConfig::with_n(n).with_backend(Backend::CycleAccurate)
     }
 }
 
@@ -107,6 +173,14 @@ pub trait SystolicArray {
 
     /// Peak throughput in ops/cycle (2 ops per MAC) at a mode.
     fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64;
+
+    /// Downcast hook for the whole-GEMM fast path: the functional backend
+    /// ([`super::FunctionalArray`]) returns itself so the co-simulator can
+    /// skip tile-level scheduling entirely; cycle-level models return
+    /// `None` and execute tile by tile.
+    fn as_functional(&self) -> Option<&super::FunctionalArray> {
+        None
+    }
 }
 
 impl<T: SystolicArray + ?Sized> SystolicArray for Box<T> {
@@ -131,14 +205,25 @@ impl<T: SystolicArray + ?Sized> SystolicArray for Box<T> {
     fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64 {
         (**self).peak_ops_per_cycle(mode)
     }
+    fn as_functional(&self) -> Option<&super::FunctionalArray> {
+        (**self).as_functional()
+    }
 }
 
-/// Build an array model by architecture tag.
+/// Build an array model by architecture tag and backend selector.
+///
+/// `Backend::Functional` (the [`ArchConfig`] default) returns the
+/// whole-GEMM [`super::FunctionalArray`]; `Backend::CycleAccurate` returns
+/// the per-architecture model whose tile passes step the register-level
+/// simulators.
 pub fn build_array(arch: Architecture, cfg: ArchConfig) -> Box<dyn SystolicArray + Send> {
-    match arch {
-        Architecture::Ws => Box::new(super::WsArray::new(cfg)),
-        Architecture::Dip => Box::new(super::DipArray::new(cfg)),
-        Architecture::Adip => Box::new(super::AdipArray::new(cfg)),
+    match cfg.backend {
+        Backend::Functional => Box::new(super::FunctionalArray::new(arch, cfg)),
+        Backend::CycleAccurate => match arch {
+            Architecture::Ws => Box::new(super::WsArray::new(cfg)),
+            Architecture::Dip => Box::new(super::DipArray::new(cfg)),
+            Architecture::Adip => Box::new(super::AdipArray::new(cfg)),
+        },
     }
 }
 
@@ -148,12 +233,35 @@ mod tests {
 
     #[test]
     fn boxed_arrays_dispatch() {
-        for arch in Architecture::ALL {
-            let arr = build_array(arch, ArchConfig::with_n(8));
-            assert_eq!(arr.architecture(), arch);
-            assert_eq!(arr.n(), 8);
-            assert!(arr.peak_ops_per_cycle(PrecisionMode::W8) > 0);
+        for backend in Backend::ALL {
+            for arch in Architecture::ALL {
+                let arr = build_array(arch, ArchConfig::with_n(8).with_backend(backend));
+                assert_eq!(arr.architecture(), arch);
+                assert_eq!(arr.n(), 8);
+                assert!(arr.peak_ops_per_cycle(PrecisionMode::W8) > 0);
+                assert_eq!(
+                    arr.as_functional().is_some(),
+                    backend == Backend::Functional,
+                    "{arch} {backend}"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn backend_parsing_and_defaults() {
+        assert_eq!(Backend::default(), Backend::Functional);
+        assert_eq!("cycle".parse::<Backend>().unwrap(), Backend::CycleAccurate);
+        assert_eq!("cycle-accurate".parse::<Backend>().unwrap(), Backend::CycleAccurate);
+        assert_eq!("functional".parse::<Backend>().unwrap(), Backend::Functional);
+        assert!("quantum".parse::<Backend>().is_err());
+        for b in Backend::ALL {
+            assert_eq!(b.name().parse::<Backend>().unwrap(), b);
+            assert_eq!(b.to_string(), b.name());
+        }
+        assert_eq!(ArchConfig::cycle_accurate(16).backend, Backend::CycleAccurate);
+        assert_eq!(ArchConfig::cycle_accurate(16).n, 16);
+        assert_eq!(ArchConfig::with_n(16).backend, Backend::Functional);
     }
 
     #[test]
@@ -170,6 +278,7 @@ mod tests {
         assert_eq!(c.n, 32);
         assert_eq!(c.multipliers, 16);
         assert_eq!(c.mac_stages, 1);
+        assert_eq!(c.backend, Backend::Functional);
         assert_eq!(ArchConfig::with_n(64).n, 64);
         assert_eq!(ArchConfig::with_n(64).multipliers, 16);
     }

@@ -81,6 +81,9 @@ impl SystolicArray for DipArray {
         // In W8/k=1 the packed tile stores the raw bytes of the weight
         // matrix; reinterpret as signed.
         let w = Mat::from_fn(n, n, |r, c| (weights.packed.get(r, c) as u8) as i8 as i32);
+        if self.cfg.backend == super::Backend::CycleAccurate {
+            return self.tile_pass_cycle_accurate(activations, &w);
+        }
         Ok(TilePass {
             outputs: vec![activations.matmul(&w)],
             latency_cycles: self.tile_latency(PrecisionMode::W8),

@@ -1,0 +1,395 @@
+//! The functional execution backend — whole-GEMM direct computation with
+//! analytical timing.
+//!
+//! [`FunctionalArray`] emulates any of the three architectures
+//! (WS / DiP / ADiP) at the *GEMM* level instead of the tile level: outputs
+//! are computed in one `O(M·K·N)` integer pass (bit-exact with the PE +
+//! shared-column-unit arithmetic — integer matmul over range-validated
+//! operands *is* that arithmetic), while passes, cycles and memory traffic
+//! come from the same closed forms the register-level simulators validate
+//! cycle-for-cycle ([`crate::arch::cycle_sim`]).
+//!
+//! The struct still implements [`SystolicArray`], so anything scheduling
+//! tile-by-tile keeps working; the co-simulator additionally detects it via
+//! [`SystolicArray::as_functional`] and short-circuits to
+//! [`FunctionalArray::run_gemm_set`], skipping tile extraction and
+//! interleave packing entirely. That fast path is what the coordinator
+//! serves from; `Backend::CycleAccurate` remains the golden reference
+//! (see the differential suite in `rust/tests/integration_backends.rs`).
+
+use anyhow::{bail, ensure, Result};
+
+use super::array::{ArchConfig, Architecture, Backend, SystolicArray, TilePass};
+use super::{AdipArray, DipArray, WsArray};
+use crate::dataflow::tiling::tile_grid;
+use crate::dataflow::{InterleavedTile, Mat};
+use crate::quant::{value_range, PrecisionMode};
+
+/// Concrete per-architecture model the functional array delegates latency
+/// formulas and the tile-level path to (always with the functional tile
+/// path — the cycle simulators are never stepped from here).
+#[derive(Debug, Clone)]
+enum Inner {
+    Ws(WsArray),
+    Dip(DipArray),
+    Adip(AdipArray),
+}
+
+impl Inner {
+    fn as_dyn(&self) -> &dyn SystolicArray {
+        match self {
+            Inner::Ws(a) => a,
+            Inner::Dip(a) => a,
+            Inner::Adip(a) => a,
+        }
+    }
+}
+
+/// Result of a whole-GEMM (set) functional execution, before the
+/// co-simulator layers memory-bank stalls and energy on top.
+#[derive(Debug, Clone)]
+pub struct FunctionalRun {
+    /// One output matrix per weight matrix, exact integer psums.
+    pub outputs: Vec<Mat>,
+    /// Precision mode actually executed (WS/DiP degrade to 8b×8b).
+    pub mode: PrecisionMode,
+    /// Stationary-tile passes the tile schedule would execute.
+    pub passes: u64,
+    /// Stationary (packed weight) tile fetches.
+    pub stationary_fetches: u64,
+    /// Output tiles written back.
+    pub output_tiles: u64,
+    /// Total cycles: one pipeline fill/drain + steady streaming
+    /// (excluding runtime-interleave bank stalls, which depend on the
+    /// memory system and are added by the caller).
+    pub cycles: u64,
+    /// Steady-state initiation interval used by the schedule.
+    pub steady_cycles: u64,
+    /// Interleave groups as `(stationary fetches, group size)` pairs —
+    /// enough for the caller to replay the multi-bank runtime-interleave
+    /// accounting of the tile-level schedule exactly.
+    pub interleave_groups: Vec<(u64, usize)>,
+}
+
+impl FunctionalRun {
+    fn merge(&mut self, other: FunctionalRun) {
+        self.outputs.extend(other.outputs);
+        self.passes += other.passes;
+        self.stationary_fetches += other.stationary_fetches;
+        self.output_tiles += other.output_tiles;
+        self.cycles += other.cycles;
+        self.interleave_groups.extend(other.interleave_groups);
+    }
+}
+
+/// Functional whole-GEMM model of one architecture (see module docs).
+///
+/// The slot-packing / pass-count / fill+steady arithmetic below is
+/// intentionally a second, independent statement of the schedule that
+/// `sim::cosim` executes tile-by-tile and `analytical::estimate_gemm(_set)`
+/// states in closed form (`arch` cannot depend on `analytical` — the
+/// dependency points the other way). The redundancy is load-bearing:
+/// `rust/tests/integration_backends.rs` asserts all three agree on every
+/// randomized case, so any schedule change that misses one copy fails CI
+/// instead of drifting silently.
+#[derive(Debug, Clone)]
+pub struct FunctionalArray {
+    arch: Architecture,
+    cfg: ArchConfig,
+    inner: Inner,
+}
+
+impl FunctionalArray {
+    /// Build a functional model emulating `arch` at configuration `cfg`
+    /// (the stored configuration always reports `Backend::Functional`).
+    pub fn new(arch: Architecture, cfg: ArchConfig) -> FunctionalArray {
+        let cfg = cfg.with_backend(Backend::Functional);
+        let inner = match arch {
+            Architecture::Ws => Inner::Ws(WsArray::new(cfg)),
+            Architecture::Dip => Inner::Dip(DipArray::new(cfg)),
+            Architecture::Adip => Inner::Adip(AdipArray::new(cfg)),
+        };
+        FunctionalArray { arch, cfg, inner }
+    }
+
+    /// The mode this architecture actually executes for a request
+    /// (WS/DiP degrade everything to 8b×8b).
+    pub fn exec_mode(&self, requested: PrecisionMode) -> PrecisionMode {
+        if self.supports(requested) {
+            requested
+        } else {
+            PrecisionMode::W8
+        }
+    }
+
+    /// Validate that every weight entry fits the executed mode — the same
+    /// range check `interleave_tiles` performs when packing the stationary
+    /// carrier on the tile-level path.
+    fn check_weight_range(&self, b: &Mat, mode: PrecisionMode, which: usize) -> Result<()> {
+        let w = mode.weight_bits();
+        let (lo, hi) = value_range(w);
+        if let Some(bad) = b.as_slice().iter().find(|v| !(lo..=hi).contains(v)) {
+            bail!("weight matrix {which} value {bad} out of {w}-bit range {lo}..={hi}");
+        }
+        Ok(())
+    }
+
+    /// Execute `C = A · B` directly, with the tile schedule's analytical
+    /// pass/cycle accounting. Mirrors `CoSim::run_gemm`'s schedule: on ADiP
+    /// groups of `interleave_factor` adjacent output-column tiles share one
+    /// stationary pass.
+    pub fn run_gemm(&self, a: &Mat, b: &Mat, mode: PrecisionMode) -> Result<FunctionalRun> {
+        ensure!(a.cols() == b.rows(), "inner dimension mismatch");
+        let exec_mode = self.exec_mode(mode);
+        self.check_weight_range(b, exec_mode, 0)?;
+
+        let n = self.n();
+        let grid = tile_grid(a.rows(), a.cols(), b.cols(), n);
+        let (tiles_m, tiles_k, tiles_n) =
+            (grid.tiles_m() as u64, grid.tiles_k() as u64, grid.tiles_n() as u64);
+        let kf = if self.arch == Architecture::Adip {
+            exec_mode.interleave_factor() as u64
+        } else {
+            1
+        };
+        let full_groups = tiles_n / kf;
+        let rem = (tiles_n % kf) as usize;
+        let groups = full_groups + (rem > 0) as u64;
+
+        let passes = groups * tiles_k * tiles_m;
+        let latency = self.tile_latency(exec_mode);
+        let steady = self.steady_tile_cycles(exec_mode);
+        let mut interleave_groups = Vec::new();
+        if full_groups > 0 {
+            interleave_groups.push((full_groups * tiles_k, kf as usize));
+        }
+        if rem > 0 {
+            interleave_groups.push((tiles_k, rem));
+        }
+        Ok(FunctionalRun {
+            outputs: vec![a.matmul(b)],
+            mode: exec_mode,
+            passes,
+            stationary_fetches: groups * tiles_k,
+            output_tiles: tiles_m * tiles_n,
+            cycles: (latency - steady) + passes * steady,
+            steady_cycles: steady,
+            interleave_groups,
+        })
+    }
+
+    /// Execute a shared-input GEMM set `C_s = A · B_s` directly. Mirrors
+    /// `CoSim::run_gemm_set`'s generalized slot packing: on ADiP every
+    /// (source matrix, output-column tile) pair is one interleave slot and
+    /// slots are chunked into capacity-sized stationary groups; other
+    /// architectures (or singleton sets) fall back to per-matrix runs.
+    pub fn run_gemm_set(&self, a: &Mat, bs: &[&Mat], mode: PrecisionMode) -> Result<FunctionalRun> {
+        ensure!(!bs.is_empty(), "need at least one weight matrix");
+        for b in bs {
+            ensure!(
+                b.rows() == bs[0].rows() && b.cols() == bs[0].cols(),
+                "weight matrices must share a shape"
+            );
+            ensure!(a.cols() == b.rows(), "inner dimension mismatch");
+        }
+        let exec_mode = self.exec_mode(mode);
+        let adip = self.arch == Architecture::Adip;
+        if !adip || bs.len() == 1 {
+            // No set fusion available: independent runs, accounting summed
+            // (each run pays its own pipeline fill, as the tile schedule does).
+            let mut combined: Option<FunctionalRun> = None;
+            for b in bs {
+                let run = self.run_gemm(a, b, mode)?;
+                combined = Some(match combined.take() {
+                    None => run,
+                    Some(mut c) => {
+                        c.merge(run);
+                        c
+                    }
+                });
+            }
+            return Ok(combined.expect("non-empty set"));
+        }
+
+        for (s, b) in bs.iter().enumerate() {
+            self.check_weight_range(b, exec_mode, s)?;
+        }
+        let n = self.n();
+        let grid = tile_grid(a.rows(), a.cols(), bs[0].cols(), n);
+        let (tiles_m, tiles_k, tiles_n) =
+            (grid.tiles_m() as u64, grid.tiles_k() as u64, grid.tiles_n() as u64);
+        let cap = exec_mode.interleave_factor() as u64;
+        let slots = tiles_n * bs.len() as u64;
+        let full_groups = slots / cap;
+        let rem = (slots % cap) as usize;
+        let groups = full_groups + (rem > 0) as u64;
+
+        let passes = groups * tiles_k * tiles_m;
+        let latency = self.tile_latency(exec_mode);
+        let steady = self.steady_tile_cycles(exec_mode);
+        let mut interleave_groups = Vec::new();
+        if full_groups > 0 {
+            interleave_groups.push((full_groups * tiles_k, cap as usize));
+        }
+        if rem > 0 {
+            interleave_groups.push((tiles_k, rem));
+        }
+        Ok(FunctionalRun {
+            outputs: bs.iter().map(|b| a.matmul(b)).collect(),
+            mode: exec_mode,
+            passes,
+            stationary_fetches: groups * tiles_k,
+            output_tiles: tiles_m * slots,
+            cycles: (latency - steady) + passes * steady,
+            steady_cycles: steady,
+            interleave_groups,
+        })
+    }
+}
+
+impl SystolicArray for FunctionalArray {
+    fn architecture(&self) -> Architecture {
+        self.arch
+    }
+
+    fn config(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    fn supports(&self, mode: PrecisionMode) -> bool {
+        self.inner.as_dyn().supports(mode)
+    }
+
+    fn tile_latency(&self, mode: PrecisionMode) -> u64 {
+        self.inner.as_dyn().tile_latency(mode)
+    }
+
+    fn steady_tile_cycles(&self, mode: PrecisionMode) -> u64 {
+        self.inner.as_dyn().steady_tile_cycles(mode)
+    }
+
+    fn tile_pass(&self, activations: &Mat, weights: &InterleavedTile) -> Result<TilePass> {
+        // Tile-level compatibility path (the inner model's fast functional
+        // pass); schedulers that want whole-GEMM speed use `run_gemm_set`.
+        self.inner.as_dyn().tile_pass(activations, weights)
+    }
+
+    fn peak_ops_per_cycle(&self, mode: PrecisionMode) -> u64 {
+        self.inner.as_dyn().peak_ops_per_cycle(mode)
+    }
+
+    fn as_functional(&self) -> Option<&FunctionalArray> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataflow::interleave_tiles;
+    use crate::testutil::{check, Rng};
+
+    fn arr(arch: Architecture, n: usize) -> FunctionalArray {
+        FunctionalArray::new(arch, ArchConfig::with_n(n))
+    }
+
+    #[test]
+    fn emulates_architecture_metadata() {
+        for arch in Architecture::ALL {
+            let f = arr(arch, 16);
+            assert_eq!(f.architecture(), arch);
+            assert_eq!(f.config().backend, Backend::Functional);
+            assert_eq!(f.n(), 16);
+            for mode in PrecisionMode::ALL {
+                assert_eq!(f.supports(mode), arch == Architecture::Adip || mode == PrecisionMode::W8);
+            }
+        }
+        // latency formulas match the concrete models
+        let f = arr(Architecture::Adip, 32);
+        assert_eq!(f.tile_latency(PrecisionMode::W8), 32 + 32 + 1 + 3 - 2);
+        assert_eq!(arr(Architecture::Dip, 32).tile_latency(PrecisionMode::W8), 63);
+        assert_eq!(arr(Architecture::Ws, 32).tile_latency(PrecisionMode::W8), 3 * 32 - 2);
+    }
+
+    #[test]
+    fn run_gemm_outputs_exact_and_counts_match_tile_schedule() {
+        check(
+            "functional-run-gemm",
+            2101,
+            30,
+            |rng| {
+                let mode = *rng.choose(&PrecisionMode::ALL);
+                let (m, k, n) = (1 + rng.below(30), 1 + rng.below(30), 1 + rng.below(50));
+                (mode, Mat::random(rng, m, k, 8), Mat::random(rng, k, n, mode.weight_bits()))
+            },
+            |(mode, a, b)| {
+                let f = arr(Architecture::Adip, 8);
+                let run = f.run_gemm(a, b, *mode).map_err(|e| e.to_string())?;
+                if run.outputs[0] != a.matmul(b) {
+                    return Err("functional output != reference".into());
+                }
+                // pass count equals the fused tile schedule
+                let grid = tile_grid(a.rows(), a.cols(), b.cols(), 8);
+                let kf = mode.interleave_factor();
+                let want =
+                    (grid.tiles_n().div_ceil(kf) * grid.tiles_k() * grid.tiles_m()) as u64;
+                if run.passes != want {
+                    return Err(format!("passes {} != {want}", run.passes));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn qkv_set_packs_slots_like_the_scheduler() {
+        let mut rng = Rng::seeded(2103);
+        let x = Mat::random(&mut rng, 32, 32, 8);
+        let ws: Vec<Mat> = (0..3).map(|_| Mat::random(&mut rng, 32, 32, 2)).collect();
+        let refs: Vec<&Mat> = ws.iter().collect();
+        let f = arr(Architecture::Adip, 8);
+        let run = f.run_gemm_set(&x, &refs, PrecisionMode::W2).unwrap();
+        // 3 matrices × 4 j-tiles = 12 slots → 3 groups × 4 k × 4 m = 48
+        assert_eq!(run.passes, 48);
+        assert_eq!(run.outputs.len(), 3);
+        for (out, w) in run.outputs.iter().zip(&ws) {
+            assert_eq!(*out, x.matmul(w));
+        }
+        // DiP runs them separately at 8b×8b
+        let d = arr(Architecture::Dip, 8);
+        let run_d = d.run_gemm_set(&x, &refs, PrecisionMode::W2).unwrap();
+        assert_eq!(run_d.mode, PrecisionMode::W8);
+        assert_eq!(run_d.passes, 3 * 16 * 4);
+        assert_eq!(run_d.outputs, run.outputs);
+    }
+
+    #[test]
+    fn rejects_out_of_range_weights_like_interleave() {
+        let f = arr(Architecture::Adip, 4);
+        let a = Mat::zeros(4, 4);
+        let wide = Mat::from_fn(4, 4, |_, _| 3);
+        assert!(f.run_gemm(&a, &wide, PrecisionMode::W2).is_err());
+        assert!(f.run_gemm(&a, &wide, PrecisionMode::W4).is_ok());
+        let short = Mat::zeros(3, 4);
+        assert!(f.run_gemm(&a, &short, PrecisionMode::W8).is_err());
+        let none: Vec<&Mat> = vec![];
+        assert!(f.run_gemm_set(&a, &none, PrecisionMode::W8).is_err());
+    }
+
+    #[test]
+    fn tile_pass_compatibility_path_matches_inner_model() {
+        let mut rng = Rng::seeded(2105);
+        let n = 8;
+        let f = arr(Architecture::Adip, n);
+        let g = AdipArray::new(ArchConfig::with_n(n));
+        let a = Mat::random(&mut rng, n, n, 8);
+        let tiles: Vec<Mat> = (0..4).map(|_| Mat::random(&mut rng, n, n, 2)).collect();
+        let refs: Vec<&Mat> = tiles.iter().collect();
+        let it = interleave_tiles(&refs, PrecisionMode::W2).unwrap();
+        let fp = f.tile_pass(&a, &it).unwrap();
+        let gp = g.tile_pass(&a, &it).unwrap();
+        assert_eq!(fp.outputs, gp.outputs);
+        assert_eq!(fp.latency_cycles, gp.latency_cycles);
+        assert_eq!(fp.steady_cycles, gp.steady_cycles);
+    }
+}

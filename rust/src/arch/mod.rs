@@ -2,29 +2,58 @@
 //! column unit, and the three systolic arrays the paper evaluates
 //! (ADiP, DiP, conventional weight-stationary).
 //!
+//! # Execution backends — "cycle sim is golden, functional is served"
+//!
+//! Every array model runs behind a [`Backend`] selector threaded through
+//! [`ArchConfig`], [`build_array`], the co-simulator
+//! ([`crate::sim::cosim::CoSim`]), the core scheduler
+//! ([`crate::coordinator::CoreScheduler`]) and the coordinator
+//! ([`crate::coordinator::CoordinatorConfig`]):
+//!
+//! * [`Backend::CycleAccurate`] — the **golden reference**. Tile passes
+//!   step the register-level simulators in [`cycle_sim`]: explicit
+//!   per-cycle registers for the diagonal input movement, stationary
+//!   weights, psum buses and shared column units. It demonstrates that the
+//!   FIFO-less dataflow really produces the GEMM and that measured cycle
+//!   counts equal the paper's Eq. (2). Use it for validation, calibration
+//!   runs and whenever a timing model changes.
+//! * [`Backend::Functional`] — the **serving path** (default).
+//!   [`FunctionalArray`] computes batched shared-input multi-matrix GEMMs
+//!   directly in `O(M·K·N)` integer arithmetic (bit-exact with the 2-bit
+//!   subword decomposition the PE hardware performs) and reports latency,
+//!   energy and memory figures from the analytical models
+//!   ([`crate::analytical`]) instead of cycle stepping.
+//!
+//! **Differential-testing policy:** the functional backend is only allowed
+//! to exist because `rust/tests/integration_backends.rs` proves, for
+//! randomized shapes × precisions × batch modes × architectures, that its
+//! outputs are bit-exact with the cycle simulator and its reported cycles
+//! equal [`crate::analytical::estimate_gemm`]. Any change to either
+//! backend must keep that suite green; when the two disagree, the cycle
+//! simulator wins and the functional model is the bug.
+//!
 //! Two modeling depths are provided and cross-checked against each other:
 //!
-//! * **Functional tile path** — [`SystolicArray::tile_matmul`]: the exact
+//! * **Functional tile path** — [`SystolicArray::tile_pass`]: the exact
 //!   integer arithmetic of one stationary-tile pass (bit-exact with the
-//!   2-bit subword decomposition the PE hardware performs). This is the
-//!   hot path used by the coordinator and simulator.
+//!   2-bit subword decomposition the PE hardware performs).
 //! * **Register-level cycle simulation** — [`cycle_sim`]: a per-cycle
 //!   register-transfer model of the diagonal dataflow (input movement,
-//!   stationary weights, psum buses, shared column units). It demonstrates
-//!   that the FIFO-less dataflow really produces the GEMM, and that the
-//!   measured cycle counts equal the paper's Eq. (2).
+//!   stationary weights, psum buses, shared column units).
 
 pub mod adip;
 pub mod array;
 pub mod column_unit;
 pub mod cycle_sim;
 pub mod dip;
+pub mod functional;
 pub mod pe;
 pub mod ws;
 
 pub use adip::AdipArray;
-pub use array::{build_array, ArchConfig, Architecture, SystolicArray, TilePass};
+pub use array::{build_array, ArchConfig, Architecture, Backend, SystolicArray, TilePass};
 pub use column_unit::SharedColumnUnit;
 pub use dip::DipArray;
+pub use functional::{FunctionalArray, FunctionalRun};
 pub use pe::{DipPe, PeConfig, ReconfigurablePe};
 pub use ws::WsArray;

@@ -8,7 +8,7 @@
 //! genuinely shared — that attribution choice is what makes fused requests
 //! individually cheaper, mirroring the paper's memory-efficiency claim).
 
-use crate::arch::{build_array, ArchConfig, Architecture, SystolicArray};
+use crate::arch::{build_array, ArchConfig, Architecture, Backend, SystolicArray};
 use crate::dataflow::Mat;
 use crate::sim::cosim::CoSim;
 
@@ -19,6 +19,7 @@ use super::request::{MatmulRequest, ResponseMetrics};
 pub struct CoreScheduler {
     cosim: CoSim<Box<dyn SystolicArray + Send>>,
     arch: Architecture,
+    backend: Backend,
 }
 
 /// Execution result for one member request of a batch.
@@ -31,14 +32,28 @@ pub struct MemberResult {
 }
 
 impl CoreScheduler {
-    /// Build a core for an architecture at size `n`.
+    /// Build a core for an architecture at size `n` with the default
+    /// (functional) backend.
     pub fn new(arch: Architecture, n: usize) -> CoreScheduler {
-        CoreScheduler { cosim: CoSim::new(build_array(arch, ArchConfig::with_n(n))), arch }
+        CoreScheduler::with_backend(arch, n, Backend::default())
+    }
+
+    /// Build a core for an architecture at size `n` on a specific
+    /// execution backend (`Backend::CycleAccurate` pins the register-level
+    /// golden path; used by calibration runs and the differential tests).
+    pub fn with_backend(arch: Architecture, n: usize, backend: Backend) -> CoreScheduler {
+        let cfg = ArchConfig::with_n(n).with_backend(backend);
+        CoreScheduler { cosim: CoSim::new(build_array(arch, cfg)), arch, backend }
     }
 
     /// Which architecture this core simulates.
     pub fn architecture(&self) -> Architecture {
         self.arch
+    }
+
+    /// Which execution backend this core runs on.
+    pub fn backend(&self) -> Backend {
+        self.backend
     }
 
     /// Execute a batch of fused requests (all sharing `members[0].a`).
@@ -169,6 +184,27 @@ mod tests {
             let mut core = CoreScheduler::new(arch, 8);
             let out = core.execute_batch(&[&r], false).unwrap();
             assert_eq!(out[0].outputs[0], a.matmul(&r.bs[0]), "{arch}");
+        }
+    }
+
+    #[test]
+    fn backends_agree_on_batch_outputs_and_cycles() {
+        let mut rng = Rng::seeded(807);
+        let a = Arc::new(Mat::random(&mut rng, 24, 24, 8));
+        let r1 = req(&mut rng, 1, &a, 2, 2);
+        let r2 = req(&mut rng, 2, &a, 2, 1);
+        let mut fast = CoreScheduler::with_backend(Architecture::Adip, 8, Backend::Functional);
+        let mut golden =
+            CoreScheduler::with_backend(Architecture::Adip, 8, Backend::CycleAccurate);
+        assert_eq!(fast.backend(), Backend::Functional);
+        assert_eq!(golden.backend(), Backend::CycleAccurate);
+        let rf = fast.execute_batch(&[&r1, &r2], false).unwrap();
+        let rg = golden.execute_batch(&[&r1, &r2], false).unwrap();
+        assert_eq!(rf.len(), rg.len());
+        for (f, g) in rf.iter().zip(&rg) {
+            assert_eq!(f.outputs, g.outputs);
+            assert_eq!(f.metrics.cycles, g.metrics.cycles);
+            assert_eq!(f.metrics.passes, g.metrics.passes);
         }
     }
 }

@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::arch::Architecture;
+use crate::arch::{Architecture, Backend};
 
 use super::batcher::form_batches;
 use super::metrics::Metrics;
@@ -38,6 +38,11 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     /// Max requests gathered into one batching window.
     pub batch_window: usize,
+    /// Execution backend of every worker core. `Backend::Functional`
+    /// (default) serves from the fast whole-GEMM path; pin
+    /// `Backend::CycleAccurate` for calibration/validation runs where the
+    /// register-level golden path must execute every request.
+    pub backend: Backend,
 }
 
 impl Default for CoordinatorConfig {
@@ -48,6 +53,7 @@ impl Default for CoordinatorConfig {
             workers: 2,
             queue_capacity: 256,
             batch_window: 16,
+            backend: Backend::Functional,
         }
     }
 }
@@ -202,7 +208,7 @@ fn router_loop(
 }
 
 fn worker_loop(rx: Receiver<WorkItem>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
-    let mut core = CoreScheduler::new(cfg.arch, cfg.n);
+    let mut core = CoreScheduler::with_backend(cfg.arch, cfg.n, cfg.backend);
     while let Ok(item) = rx.recv() {
         let started = Instant::now();
         let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();

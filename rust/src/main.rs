@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use adip::arch::Architecture;
+use adip::arch::{Architecture, Backend};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
 use adip::dataflow::Mat;
@@ -74,11 +74,15 @@ commands:
   table <name>     regenerate table1|table2
   all              every artifact (--csv=true for CSV, --out=DIR to write files)
   run              evaluate an attention workload (--model, --arch, --n)
-  gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n)
-  serve            coordinator demo (--requests/--workers/--n/--queue)
-  trace            trace-driven serving (--model/--layers/--rate/--workers)
+  gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n/--backend)
+  serve            coordinator demo (--requests/--workers/--n/--queue/--backend)
+  trace            trace-driven serving (--model/--layers/--rate/--workers/--backend)
   artifacts        PJRT runtime self-test (--dir=artifacts)
   help             this text
+
+backends (--backend=functional|cycle):
+  functional       direct O(M*K*N) GEMM + analytical timing (default, fast)
+  cycle            register-level cycle simulation (golden reference, slow)
 ";
 
 fn parse_arch(cfg: &Config) -> Result<Architecture> {
@@ -88,6 +92,13 @@ fn parse_arch(cfg: &Config) -> Result<Architecture> {
         "adip" => Architecture::Adip,
         other => bail!("unknown arch {other:?} (ws|dip|adip)"),
     })
+}
+
+fn parse_backend(cfg: &Config) -> Result<Backend> {
+    match cfg.get("backend") {
+        None => Ok(Backend::Functional),
+        Some(raw) => raw.parse::<Backend>().map_err(|e| anyhow!("--backend: {e}")),
+    }
 }
 
 fn cmd_all(cfg: &Config) -> Result<()> {
@@ -138,15 +149,17 @@ fn cmd_gemm(cfg: &Config) -> Result<()> {
     let n = cfg.get_usize("n", 16)?;
     let mode = cfg.get_mode("mode", PrecisionMode::W2)?;
     let arch = parse_arch(cfg)?;
+    let backend = parse_backend(cfg)?;
     let mut rng = Rng::seeded(cfg.get_usize("seed", 42)? as u64);
     let a = Mat::random(&mut rng, m, k, 8);
     let b = Mat::random(&mut rng, k, ncols, mode.weight_bits());
-    let mut sim = CoSim::new(adip::arch::build_array(arch, adip::arch::ArchConfig::with_n(n)));
+    let acfg = adip::arch::ArchConfig::with_n(n).with_backend(backend);
+    let mut sim = CoSim::new(adip::arch::build_array(arch, acfg));
     let t0 = std::time::Instant::now();
     let r = sim.run_gemm(&a, &b, mode, false)?;
     let host = t0.elapsed();
     anyhow::ensure!(r.outputs[0] == a.matmul(&b), "co-sim output mismatch vs reference");
-    println!("GEMM {m}x{k}x{ncols} on {arch} {n}x{n}, mode {mode}");
+    println!("GEMM {m}x{k}x{ncols} on {arch} {n}x{n}, mode {mode}, backend {backend}");
     println!("  passes:        {}", r.passes);
     println!("  cycles:        {}", r.cycles);
     println!("  energy:        {:.3} µJ", r.energy_j * 1e6);
@@ -167,6 +180,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         workers,
         queue_capacity: queue,
         batch_window: cfg.get_usize("window", 16)?,
+        backend: parse_backend(cfg)?,
     });
     let mut rng = Rng::seeded(7);
     let mut rxs = Vec::new();
@@ -225,6 +239,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         workers: cfg.get_usize("workers", 2)?,
         queue_capacity: cfg.get_usize("queue", 1024)?,
         batch_window: cfg.get_usize("window", 8)?,
+        backend: parse_backend(cfg)?,
     });
     println!(
         "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",

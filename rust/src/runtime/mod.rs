@@ -9,21 +9,33 @@
 //! Interchange is HLO *text*, not serialized `HloModuleProto`: jax ≥ 0.5
 //! emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see `/opt/xla-example/README.md`).
+//!
+//! The PJRT path needs the external `xla` crate, which the offline build
+//! environment does not provide. It is therefore gated behind the `pjrt`
+//! cargo feature (add the `xla` dependency and build with
+//! `--features pjrt`); without the feature [`ArtifactRuntime`] is a stub
+//! whose `load` always fails and `try_load` always degrades gracefully —
+//! callers already handle both paths.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, bail, Context};
+use anyhow::Result;
 
 use crate::dataflow::Mat;
 
 /// A loaded, compiled artifact registry backed by one PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct ArtifactRuntime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: PathBuf,
 }
 
+#[cfg(feature = "pjrt")]
 impl ArtifactRuntime {
     /// Create a runtime over `dir`, compiling every `*.hlo.txt` found.
     /// Returns an error if the directory is missing or empty — callers that
@@ -115,6 +127,59 @@ impl ArtifactRuntime {
             vecs.push(t.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?);
         }
         Ok(vecs)
+    }
+}
+
+/// Stub used when the crate is built without the `pjrt` feature: loading
+/// always fails with an explanatory message, so `try_load` callers fall
+/// back to the rust-functional numerics exactly as they do when the
+/// artifacts have not been built.
+#[cfg(not(feature = "pjrt"))]
+pub struct ArtifactRuntime {
+    dir: PathBuf,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ArtifactRuntime {
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let dir = dir.as_ref();
+        anyhow::bail!(
+            "cannot load artifacts from {}: built without the `pjrt` feature \
+             (add the `xla` dependency and rebuild with `--features pjrt`)",
+            dir.display()
+        )
+    }
+
+    /// Like [`ArtifactRuntime::load`] but returns `None`, logging the reason.
+    pub fn try_load(dir: impl AsRef<Path>) -> Option<ArtifactRuntime> {
+        match ArtifactRuntime::load(dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("[runtime] artifacts unavailable ({e}); functional fallback in use");
+                None
+            }
+        }
+    }
+
+    /// Names of loaded executables (always empty in the stub).
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// The artifact directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        "unavailable (built without pjrt feature)".to_string()
+    }
+
+    /// Always fails: the PJRT backend is not compiled in.
+    pub fn run_f32(&self, name: &str, _inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        anyhow::bail!("unknown artifact {name:?}: built without the `pjrt` feature")
     }
 }
 

@@ -16,7 +16,7 @@
 
 use anyhow::{ensure, Result};
 
-use crate::arch::{Architecture, SystolicArray, TilePass};
+use crate::arch::{Architecture, FunctionalRun, SystolicArray, TilePass};
 use crate::dataflow::{interleave_tiles, tiling::tile_grid, Mat};
 use crate::quant::PrecisionMode;
 use crate::sim::energy::EnergyModel;
@@ -72,6 +72,10 @@ impl<A: SystolicArray> CoSim<A> {
         runtime_interleave: bool,
     ) -> Result<CoSimResult> {
         ensure!(a.cols() == b.rows(), "inner dimension mismatch");
+        if let Some(f) = self.array.as_functional() {
+            let run = f.run_gemm(a, b, mode)?;
+            return Ok(self.finish_functional(run, runtime_interleave));
+        }
         let exec_mode = self.exec_mode(mode);
         let kf = if self.array.architecture() == Architecture::Adip {
             exec_mode.interleave_factor()
@@ -161,6 +165,10 @@ impl<A: SystolicArray> CoSim<A> {
         runtime_interleave: bool,
     ) -> Result<CoSimResult> {
         ensure!(!bs.is_empty(), "need at least one weight matrix");
+        if let Some(f) = self.array.as_functional() {
+            let run = f.run_gemm_set(a, bs, mode)?;
+            return Ok(self.finish_functional(run, runtime_interleave));
+        }
         let exec_mode = self.exec_mode(mode);
         let adip = self.array.architecture() == Architecture::Adip;
         let cap = if adip { exec_mode.interleave_factor() } else { 1 };
@@ -260,6 +268,37 @@ impl<A: SystolicArray> CoSim<A> {
             requested
         } else {
             PrecisionMode::W8
+        }
+    }
+
+    /// Turn a whole-GEMM functional run into a [`CoSimResult`]: record the
+    /// bulk memory traffic, replay the runtime-interleave bank accounting
+    /// (stall cycles + conflict counters, exactly as the tile-level
+    /// schedule would incur them), and integrate energy.
+    fn finish_functional(&mut self, run: FunctionalRun, runtime_interleave: bool) -> CoSimResult {
+        let n = self.array.n();
+        self.memory.record_gemm(n, run.passes, run.stationary_fetches, run.output_tiles);
+        let mut stall_total = 0u64;
+        if runtime_interleave {
+            for &(fetches, size) in &run.interleave_groups {
+                for _ in 0..fetches {
+                    stall_total += self.memory.runtime_interleave(size, run.steady_cycles);
+                }
+            }
+        }
+        let cycles = run.cycles + stall_total;
+        CoSimResult {
+            memory: MemoryCounters {
+                act_read_bytes: run.passes * (n * n) as u64,
+                weight_read_bytes: run.stationary_fetches * (n * n) as u64,
+                output_write_bytes: run.output_tiles * (n * n) as u64,
+                tile_reads: run.passes + run.stationary_fetches,
+                conflict_cycles: stall_total,
+            },
+            outputs: run.outputs,
+            passes: run.passes,
+            cycles,
+            energy_j: self.energy.energy_joules(cycles, 0),
         }
     }
 }

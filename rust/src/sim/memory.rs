@@ -80,6 +80,26 @@ impl MemorySystem {
         self.counters.output_write_bytes += (n * n * k) as u64;
     }
 
+    /// Bulk-record the traffic of a whole functionally-executed GEMM:
+    /// `act_tile_reads` activation tiles, `stationary_tile_reads` packed
+    /// carrier tiles and `output_tiles` written output tiles, all `n×n`
+    /// bytes. Equivalent to the corresponding sequence of per-tile calls —
+    /// the functional backend uses this so its counters match the
+    /// tile-level schedule exactly without looping over tiles.
+    pub fn record_gemm(
+        &mut self,
+        n: usize,
+        act_tile_reads: u64,
+        stationary_tile_reads: u64,
+        output_tiles: u64,
+    ) {
+        let tile = (n * n) as u64;
+        self.counters.act_read_bytes += act_tile_reads * tile;
+        self.counters.weight_read_bytes += stationary_tile_reads * tile;
+        self.counters.output_write_bytes += output_tiles * tile;
+        self.counters.tile_reads += act_tile_reads + stationary_tile_reads;
+    }
+
     /// Model a runtime interleave of `k` dynamic tile streams: each stream
     /// `i` is assigned bank `(base + i) % banks`. Returns the stall cycles
     /// added (0 when all streams land in distinct banks — the paper's
@@ -147,6 +167,21 @@ mod tests {
         assert_eq!(m.runtime_interleave(4, 32), 32);
         let mut one = MemorySystem::new(1);
         assert_eq!(one.runtime_interleave(4, 32), 96);
+    }
+
+    #[test]
+    fn record_gemm_equals_per_tile_calls() {
+        let mut tile_by_tile = MemorySystem::new(4);
+        for _ in 0..6 {
+            tile_by_tile.read_act_tile(8);
+        }
+        for _ in 0..2 {
+            tile_by_tile.read_stationary_tile(8, PrecisionMode::W4);
+        }
+        tile_by_tile.write_output_tiles(8, 3);
+        let mut bulk = MemorySystem::new(4);
+        bulk.record_gemm(8, 6, 2, 3);
+        assert_eq!(bulk.counters(), tile_by_tile.counters());
     }
 
     #[test]

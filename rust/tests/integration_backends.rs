@@ -1,0 +1,252 @@
+//! Differential conformance suite: `Backend::Functional` vs the
+//! register-level cycle simulator (`Backend::CycleAccurate`).
+//!
+//! Policy (see `rust/src/arch/mod.rs`): the cycle simulator is **golden**;
+//! the functional backend is what the coordinator serves. The functional
+//! backend earns that role here, across randomized
+//! (shape × precision × batch mode × architecture) cases:
+//!
+//! * outputs are **bit-exact** equal between the two backends (and equal to
+//!   the i32 reference GEMM),
+//! * reported passes / cycles / memory counters are identical,
+//! * the functional backend's cycles equal the closed-form
+//!   [`estimate_gemm`] / [`estimate_gemm_set`] for every case.
+//!
+//! ≥ 240 randomized cases run per suite execution (120 single-matrix +
+//! 120 shared-input sets), plus targeted runtime-interleave and
+//! larger-shape checks.
+
+use adip::analytical::gemm::{estimate_gemm, estimate_gemm_set, MemoryPolicy};
+use adip::analytical::GemmShape;
+use adip::arch::{build_array, ArchConfig, Architecture, Backend, SystolicArray};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::sim::{CoSim, CoSimResult};
+use adip::testutil::{check, Rng};
+
+fn cosim(arch: Architecture, n: usize, backend: Backend) -> CoSim<Box<dyn SystolicArray + Send>> {
+    CoSim::new(build_array(arch, ArchConfig::with_n(n).with_backend(backend)))
+}
+
+/// Compare the two backends' results field by field. Energy is a linear
+/// function of cycles, so it is compared with a tight relative tolerance
+/// (the non-fused set path sums per-matrix energies; floating-point
+/// association may differ in the last ulp).
+fn assert_equivalent(fast: &CoSimResult, golden: &CoSimResult, what: &str) -> Result<(), String> {
+    if fast.outputs != golden.outputs {
+        return Err(format!("{what}: functional outputs != cycle-accurate outputs"));
+    }
+    if fast.passes != golden.passes {
+        return Err(format!("{what}: passes {} != {}", fast.passes, golden.passes));
+    }
+    if fast.cycles != golden.cycles {
+        return Err(format!("{what}: cycles {} != {}", fast.cycles, golden.cycles));
+    }
+    if fast.memory != golden.memory {
+        return Err(format!(
+            "{what}: memory {:?} != {:?}",
+            fast.memory, golden.memory
+        ));
+    }
+    let denom = golden.energy_j.abs().max(f64::MIN_POSITIVE);
+    if ((fast.energy_j - golden.energy_j) / denom).abs() > 1e-9 {
+        return Err(format!("{what}: energy {} != {}", fast.energy_j, golden.energy_j));
+    }
+    Ok(())
+}
+
+/// Single weight matrix, every architecture, every precision, ragged
+/// shapes: 120 randomized differential cases.
+#[test]
+fn single_gemm_differential_conformance() {
+    check(
+        "backend-diff-single",
+        4001,
+        120,
+        |rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let n = *rng.choose(&[4usize, 8]);
+            let (m, k, nc) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let a = Mat::random(rng, m, k, 8);
+            let b = Mat::random(rng, k, nc, mode.weight_bits());
+            (arch, mode, n, a, b)
+        },
+        |(arch, mode, n, a, b)| {
+            let fast = cosim(*arch, *n, Backend::Functional)
+                .run_gemm(a, b, *mode, false)
+                .map_err(|e| e.to_string())?;
+            let golden = cosim(*arch, *n, Backend::CycleAccurate)
+                .run_gemm(a, b, *mode, false)
+                .map_err(|e| e.to_string())?;
+            assert_equivalent(&fast, &golden, &format!("{arch} {mode} n={n}"))?;
+            if fast.outputs[0] != a.matmul(b) {
+                return Err("outputs != reference GEMM".into());
+            }
+            // functional cycles/passes/memory equal the closed form
+            let shape = GemmShape::new(a.rows(), a.cols(), b.cols());
+            let est = estimate_gemm(
+                *arch,
+                &ArchConfig::with_n(*n),
+                shape,
+                *mode,
+                MemoryPolicy::default(),
+            );
+            if fast.cycles != est.cycles {
+                return Err(format!("cycles {} != estimate {}", fast.cycles, est.cycles));
+            }
+            if fast.passes != est.passes {
+                return Err(format!("passes {} != estimate {}", fast.passes, est.passes));
+            }
+            if fast.memory.paper_total_bytes() != est.memory_bytes {
+                return Err(format!(
+                    "memory {} != estimate {}",
+                    fast.memory.paper_total_bytes(),
+                    est.memory_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Shared-input multi-matrix sets (the paper's asymmetric mode), including
+/// sets that overflow the interleave capacity: 120 randomized cases.
+#[test]
+fn gemm_set_differential_conformance() {
+    check(
+        "backend-diff-set",
+        4003,
+        120,
+        |rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let n = *rng.choose(&[4usize, 8]);
+            let (m, k, nc) = (1 + rng.below(25), 1 + rng.below(25), 1 + rng.below(25));
+            let s = 1 + rng.below(5);
+            let a = Mat::random(rng, m, k, 8);
+            let bs: Vec<Mat> =
+                (0..s).map(|_| Mat::random(rng, k, nc, mode.weight_bits())).collect();
+            (arch, mode, n, a, bs)
+        },
+        |(arch, mode, n, a, bs)| {
+            let refs: Vec<&Mat> = bs.iter().collect();
+            let fast = cosim(*arch, *n, Backend::Functional)
+                .run_gemm_set(a, &refs, *mode, false)
+                .map_err(|e| e.to_string())?;
+            let golden = cosim(*arch, *n, Backend::CycleAccurate)
+                .run_gemm_set(a, &refs, *mode, false)
+                .map_err(|e| e.to_string())?;
+            assert_equivalent(&fast, &golden, &format!("{arch} {mode} n={n} s={}", bs.len()))?;
+            for (out, b) in fast.outputs.iter().zip(bs.iter()) {
+                if *out != a.matmul(b) {
+                    return Err("set outputs != reference GEMM".into());
+                }
+            }
+            let shape = GemmShape::new(a.rows(), a.cols(), bs[0].cols());
+            let est = estimate_gemm_set(
+                *arch,
+                &ArchConfig::with_n(*n),
+                shape,
+                bs.len(),
+                *mode,
+                MemoryPolicy::default(),
+            );
+            if fast.cycles != est.cycles {
+                return Err(format!("set cycles {} != estimate {}", fast.cycles, est.cycles));
+            }
+            if fast.passes != est.passes {
+                return Err(format!("set passes {} != estimate {}", fast.passes, est.passes));
+            }
+            if fast.memory.paper_total_bytes() != est.memory_bytes {
+                return Err(format!(
+                    "set memory {} != estimate {}",
+                    fast.memory.paper_total_bytes(),
+                    est.memory_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Runtime (multi-bank) interleaving — activation-to-activation workloads:
+/// backends must agree on stall accounting too.
+#[test]
+fn runtime_interleave_differential_conformance() {
+    check(
+        "backend-diff-runtime-interleave",
+        4005,
+        20,
+        |rng| {
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let (m, k, nc) = (8 + rng.below(24), 8 + rng.below(24), 8 + rng.below(24));
+            let a = Mat::random(rng, m, k, 8);
+            let b = Mat::random(rng, k, nc, mode.weight_bits());
+            (mode, a, b)
+        },
+        |(mode, a, b)| {
+            for arch in Architecture::ALL {
+                let fast = cosim(arch, 8, Backend::Functional)
+                    .run_gemm(a, b, *mode, true)
+                    .map_err(|e| e.to_string())?;
+                let golden = cosim(arch, 8, Backend::CycleAccurate)
+                    .run_gemm(a, b, *mode, true)
+                    .map_err(|e| e.to_string())?;
+                assert_equivalent(&fast, &golden, &format!("{arch} {mode} runtime-interleave"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// A production-sized spot check on the paper's evaluation point (32×32):
+/// the functional backend must track the analytical model exactly where
+/// the cycle simulator would be far too slow to run in CI.
+#[test]
+fn functional_matches_estimate_at_scale() {
+    let mut rng = Rng::seeded(4007);
+    let a = Mat::random(&mut rng, 192, 128, 8);
+    for (mode, s) in [(PrecisionMode::W8, 1), (PrecisionMode::W4, 2), (PrecisionMode::W2, 3)] {
+        let bs: Vec<Mat> = (0..s).map(|_| Mat::random(&mut rng, 128, 160, mode.weight_bits())).collect();
+        let refs: Vec<&Mat> = bs.iter().collect();
+        for arch in Architecture::ALL {
+            let mut sim = cosim(arch, 32, Backend::Functional);
+            let r = sim.run_gemm_set(&a, &refs, mode, false).unwrap();
+            for (out, b) in r.outputs.iter().zip(&bs) {
+                assert_eq!(*out, a.matmul(b), "{arch} {mode}");
+            }
+            let est = estimate_gemm_set(
+                arch,
+                &ArchConfig::with_n(32),
+                GemmShape::new(192, 128, 160),
+                s,
+                mode,
+                MemoryPolicy::default(),
+            );
+            assert_eq!(r.cycles, est.cycles, "{arch} {mode}");
+            assert_eq!(r.passes, est.passes, "{arch} {mode}");
+            assert_eq!(r.memory.paper_total_bytes(), est.memory_bytes, "{arch} {mode}");
+        }
+    }
+}
+
+/// Both backends reject the same malformed inputs (shape mismatch,
+/// out-of-range weights, empty sets).
+#[test]
+fn backends_reject_the_same_malformed_inputs() {
+    let a = Mat::zeros(8, 8);
+    let short = Mat::zeros(4, 8);
+    let wide = Mat::from_fn(8, 8, |_, _| 5);
+    let none: Vec<&Mat> = vec![];
+    for backend in Backend::ALL {
+        let mut sim = cosim(Architecture::Adip, 8, backend);
+        assert!(sim.run_gemm(&a, &short, PrecisionMode::W8, false).is_err(), "{backend}");
+        assert!(sim.run_gemm(&a, &wide, PrecisionMode::W2, false).is_err(), "{backend}");
+        assert!(sim.run_gemm_set(&a, &none, PrecisionMode::W8, false).is_err(), "{backend}");
+        assert!(
+            sim.run_gemm_set(&a, &[&a, &short], PrecisionMode::W8, false).is_err(),
+            "{backend}"
+        );
+    }
+}

@@ -4,7 +4,7 @@
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use adip::arch::Architecture;
+use adip::arch::{Architecture, Backend};
 use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
 use adip::dataflow::Mat;
 use adip::testutil::Rng;
@@ -16,6 +16,7 @@ fn cfg(workers: usize, queue: usize) -> CoordinatorConfig {
         workers,
         queue_capacity: queue,
         batch_window: 8,
+        backend: Backend::Functional,
     }
 }
 
@@ -138,6 +139,120 @@ fn malformed_requests_fail_without_poisoning_the_stream() {
     assert_eq!(m.failed.load(Ordering::Relaxed), 1);
     assert_eq!(m.completed.load(Ordering::Relaxed), 1);
     coord.shutdown();
+}
+
+/// Lifecycle stress, run on BOTH execution backends: saturate the bounded
+/// ingress queue until backpressure rejects, assert every rejection is
+/// counted in `Metrics`, then shut down while work is still in flight and
+/// verify the drain delivers every accepted request exactly once.
+#[test]
+fn stress_queue_saturation_and_drain_on_both_backends() {
+    for backend in Backend::ALL {
+        // keep the golden backend's share small enough to stay fast
+        let (dim, total) = match backend {
+            Backend::Functional => (160, 64),
+            Backend::CycleAccurate => (48, 32),
+        };
+        let coord = Coordinator::start(CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 16,
+            workers: 1,
+            queue_capacity: 2,
+            batch_window: 1,
+            backend,
+        });
+        let mut rng = Rng::seeded(29);
+        // pre-generate so the submission loop outruns the single worker
+        let reqs: Vec<MatmulRequest> = (0..total)
+            .map(|i| MatmulRequest {
+                id: 0,
+                input_id: i as u64,
+                a: Arc::new(Mat::random(&mut rng, dim, dim, 8)),
+                bs: vec![Arc::new(Mat::random(&mut rng, dim, dim, 8))],
+                weight_bits: 8,
+                act_act: false,
+                tag: format!("stress-{i}"),
+            })
+            .collect();
+        let expected: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+
+        let mut rxs = Vec::new();
+        let mut rejected = 0u64;
+        for (i, r) in reqs.into_iter().enumerate() {
+            match coord.try_submit(r) {
+                Ok((id, rx)) => rxs.push((i, id, rx)),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "{backend}: queue of 2 never saturated over {total} submits");
+        let accepted = rxs.len() as u64;
+
+        let m = coord.metrics();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), rejected, "{backend}");
+        assert_eq!(m.accepted.load(Ordering::Relaxed), accepted, "{backend}");
+
+        // shut down with work still queued: the drain must complete it all
+        coord.shutdown();
+        let mut seen = std::collections::HashSet::new();
+        for (i, id, rx) in rxs {
+            let out = rx.recv().expect("drained request dropped");
+            assert_eq!(out.id, id);
+            assert!(seen.insert(id), "{backend}: duplicate completion");
+            assert_eq!(out.result.unwrap()[0], expected[i], "{backend}: request {i}");
+            assert!(out.metrics.cycles > 0);
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), accepted, "{backend}");
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0, "{backend}");
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0, "{backend}");
+        assert_eq!(
+            m.completed.load(Ordering::Relaxed) + m.rejected.load(Ordering::Relaxed),
+            total as u64,
+            "{backend}: conservation"
+        );
+    }
+}
+
+/// The two backends must report identical simulated accounting through the
+/// full coordinator stack (same requests → same cycles/passes/memory).
+#[test]
+fn coordinator_metrics_identical_across_backends() {
+    let mut totals = Vec::new();
+    for backend in Backend::ALL {
+        let coord = Coordinator::start(CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 16,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 1, // no cross-request fusion: deterministic batching
+            backend,
+        });
+        let mut rng = Rng::seeded(31);
+        let mut rxs = Vec::new();
+        for i in 0..6u64 {
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            let r = MatmulRequest {
+                id: 0,
+                input_id: i,
+                a: Arc::new(Mat::random(&mut rng, 40, 40, 8)),
+                bs: vec![Arc::new(Mat::random(&mut rng, 40, 40, bits))],
+                weight_bits: bits,
+                act_act: false,
+                tag: String::new(),
+            };
+            rxs.push(coord.try_submit(r).unwrap().1);
+        }
+        for rx in rxs {
+            assert!(rx.recv().unwrap().result.is_ok());
+        }
+        let m = coord.metrics();
+        totals.push((
+            m.sim_cycles.load(Ordering::Relaxed),
+            m.passes.load(Ordering::Relaxed),
+            m.memory_bytes.load(Ordering::Relaxed),
+        ));
+        coord.shutdown();
+    }
+    assert_eq!(totals[0], totals[1], "functional vs cycle-accurate accounting");
 }
 
 #[test]

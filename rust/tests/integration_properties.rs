@@ -1,9 +1,13 @@
 //! Cross-module property tests: invariants that tie the analytical models,
 //! the power model, the co-simulator and the workload engine together.
 
+use std::sync::Arc;
+
 use adip::analytical::gemm::{estimate_gemm, MemoryPolicy};
 use adip::analytical::{adip_throughput_ops_per_cycle, GemmShape};
-use adip::arch::{AdipArray, ArchConfig, Architecture, SystolicArray};
+use adip::arch::{AdipArray, ArchConfig, Architecture, Backend, SystolicArray};
+use adip::coordinator::{CoreScheduler, MatmulRequest};
+use adip::dataflow::Mat;
 use adip::power::{adip_point, dip_point, overheads};
 use adip::quant::PrecisionMode;
 use adip::sim::{evaluate_model, SimConfig};
@@ -127,6 +131,79 @@ fn eight_bit_projections_never_gain() {
         let ratio = adip.total_cycles() as f64 / dip.total_cycles() as f64;
         assert!((ratio - 1.0).abs() < 1e-4, "{}: ratio {ratio}", m8.name);
     }
+}
+
+/// Asymmetric multi-matrix batches with a shared input matrix (the paper's
+/// data-reuse mode): members contribute *different* numbers of weight
+/// matrices, and `CoreScheduler::execute_batch` must route every output
+/// back to its member in submit order, bit-exact with the naive reference
+/// matmul — on every architecture and both execution backends.
+#[test]
+fn asymmetric_shared_input_batches_route_outputs_exactly() {
+    check(
+        "asymmetric-batch-routing",
+        1501,
+        40,
+        |rng: &mut Rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let backend = *rng.choose(&Backend::ALL);
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            let dim = 4 + rng.below(21); // shared input dim×dim
+            let ncols = 1 + rng.below(17); // weight matrices dim×ncols
+            let a = Arc::new(Mat::random(rng, dim, dim, 8));
+            let members: Vec<MatmulRequest> = (0..1 + rng.below(4))
+                .map(|i| MatmulRequest {
+                    id: i as u64,
+                    input_id: 7,
+                    a: a.clone(),
+                    // asymmetric: each member brings 1–3 weight matrices
+                    bs: (0..1 + rng.below(3))
+                        .map(|_| Arc::new(Mat::random(rng, dim, ncols, bits)))
+                        .collect(),
+                    weight_bits: bits,
+                    act_act: false,
+                    tag: String::new(),
+                })
+                .collect();
+            (arch, backend, a, members)
+        },
+        |(arch, backend, a, members)| {
+            let refs: Vec<&MatmulRequest> = members.iter().collect();
+            let mut core = CoreScheduler::with_backend(*arch, 8, *backend);
+            let results = core.execute_batch(&refs, false).map_err(|e| e.to_string())?;
+            if results.len() != members.len() {
+                return Err(format!("{} results for {} members", results.len(), members.len()));
+            }
+            let total_cycles: u64 = results.iter().map(|r| r.metrics.cycles).sum();
+            if total_cycles == 0 {
+                return Err("no cycles attributed".into());
+            }
+            for (m, res) in members.iter().zip(&results) {
+                if res.outputs.len() != m.bs.len() {
+                    return Err(format!(
+                        "member {} got {} outputs for {} matrices",
+                        m.id,
+                        res.outputs.len(),
+                        m.bs.len()
+                    ));
+                }
+                for (b, out) in m.bs.iter().zip(&res.outputs) {
+                    if *out != a.matmul(b) {
+                        return Err(format!(
+                            "member {} output != naive reference ({arch} {backend})",
+                            m.id
+                        ));
+                    }
+                }
+                // attribution is proportional to matrix count
+                let fused = members.len() > 1 || m.bs.len() > 1;
+                if res.metrics.batched != fused {
+                    return Err("batched flag wrong".into());
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 /// Memory savings equal latency improvements for projection-only gains —
