@@ -49,6 +49,8 @@ fn main() -> anyhow::Result<()> {
         // the serving default: functional numerics + analytical timing
         // (the cycle simulator stays the golden reference in tests)
         backend: adip::arch::Backend::Functional,
+        // default single-core cluster per worker (no sharding, cache off)
+        ..Default::default()
     });
 
     // Request stream: per "layer", one shared input X feeding a Q/K/V

@@ -33,6 +33,7 @@ fn serve_stream(backend: Backend, requests: usize, dim: usize) -> f64 {
         queue_capacity: 1024,
         batch_window: 8,
         backend,
+        ..Default::default()
     });
     let mut rng = Rng::seeded(23);
     let t0 = std::time::Instant::now();

@@ -1,0 +1,117 @@
+//! Bench: cluster scaling sweep + weight-cache serving gain.
+//!
+//! Sweeps cores ∈ {1, 2, 4, 8} at n = 32 on the functional backend over an
+//! M-split GEMM large enough to shard 8 ways, reporting simulated cluster
+//! latency (the metric the subsystem models: max over cores at 1 GHz) and
+//! host wall-clock per run.
+//!
+//! Acceptance gate: ≥ 2× end-to-end speedup (simulated cluster latency) at
+//! 4 cores vs 1 core. The simulated gate is deterministic by construction
+//! — cluster cycles equal the analytical estimate exactly (enforced here
+//! and in `integration_cluster.rs`) — while host wall-clock scaling is
+//! reported for reference (it saturates at the machine's CPU count; CI
+//! runners commonly expose only 2 vCPUs).
+//!
+//! A second section replays a repeated-weights Transformer trace through a
+//! weight-cached cluster and asserts the cache reports hits.
+
+#[path = "common.rs"]
+mod common;
+
+use adip::analytical::gemm::MemoryPolicy;
+use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
+use adip::arch::{ArchConfig, Architecture, Backend};
+use adip::cluster::{ClusterConfig, ClusterScheduler};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::testutil::Rng;
+
+const M: usize = 1024;
+const K: usize = 256;
+const NC: usize = 256;
+const N: usize = 32;
+const MODE: PrecisionMode = PrecisionMode::W2;
+
+fn main() {
+    let mut rng = Rng::seeded(31);
+    let a = Mat::random(&mut rng, M, K, 8);
+    let b = Mat::random(&mut rng, K, NC, MODE.weight_bits());
+    let want = a.matmul(&b);
+    let shape = GemmShape::new(M, K, NC);
+    let acfg = ArchConfig::with_n(N);
+    let single_est = estimate_gemm(Architecture::Adip, &acfg, shape, MODE, MemoryPolicy::default());
+
+    println!("== cluster scaling sweep (ADiP {N}x{N}, {M}x{K}x{NC} {MODE}, M-split, functional) ==");
+    let mut cycles_at = std::collections::BTreeMap::new();
+    for cores in [1usize, 2, 4, 8] {
+        let cluster = ClusterConfig::with_cores(cores);
+        let mut mesh = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
+        let run = mesh.run_gemm(&a, &b, MODE, false).expect("cluster run");
+        assert_eq!(run.result.outputs[0], want, "cores={cores}: outputs must stay bit-exact");
+        let est =
+            estimate_cluster(Architecture::Adip, &acfg, shape, 1, MODE, &cluster, MemoryPolicy::default());
+        assert_eq!(
+            run.result.cycles, est.cycles,
+            "cores={cores}: cluster cycles must equal the analytical estimate"
+        );
+        cycles_at.insert(cores, run.result.cycles);
+        let stat = common::bench(5, || {
+            let mut m = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
+            m.run_gemm(&a, &b, MODE, false).unwrap().result.cycles
+        });
+        let macs = (M * K * NC) as f64;
+        common::report(&format!("cluster {cores} core(s)"), stat, macs, "MAC");
+        println!(
+            "    simulated: {:>9} cycles = {:.3} ms @ 1 GHz | speedup {:.2}x | efficiency {:.0}% | shards {}",
+            run.result.cycles,
+            run.result.cycles as f64 / 1e6,
+            est.speedup_vs(&single_est),
+            est.parallel_efficiency(&single_est) * 100.0,
+            run.shards
+        );
+    }
+
+    let speedup4 = cycles_at[&1] as f64 / cycles_at[&4] as f64;
+    println!("\n  end-to-end simulated speedup at 4 cores: {speedup4:.2}x (acceptance bar: >= 2x)");
+    assert!(
+        speedup4 >= 2.0,
+        "cluster must deliver >= 2x end-to-end speedup at 4 cores (got {speedup4:.2}x)"
+    );
+
+    println!("\n== weight cache on a repeated-weights Transformer trace (BitNet-shaped) ==");
+    use adip::workload::{repeated_attention_trace, TraceConfig, TransformerModel};
+    let model = TransformerModel::by_name("bitnet").expect("bitnet model");
+    let tcfg = TraceConfig { dim: 96, head_cols: 32, layers: 6, heads: 1, rate_per_s: 1e9 };
+    let trace = repeated_attention_trace(&model, &tcfg, 13, 4);
+    let run_trace = |cache_entries: usize| {
+        let cluster = ClusterConfig::with_cores(2).with_cache(cache_entries);
+        let mut mesh = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
+        let t0 = std::time::Instant::now();
+        for t in &trace {
+            let bs: Vec<&Mat> = t.request.bs.iter().map(|b| b.as_ref()).collect();
+            let mode = PrecisionMode::for_weight_bits(t.request.weight_bits);
+            mesh.run_gemm_set(&t.request.a, &bs, mode, t.request.act_act).expect("trace run");
+        }
+        (t0.elapsed().as_secs_f64(), mesh.cache_stats())
+    };
+    let (t_cold, _) = run_trace(0);
+    let (t_cached, stats) = run_trace(512);
+    println!(
+        "  {} requests: uncached {:.3}s | cached {:.3}s ({:.2}x) | {} hits / {} misses / {} evictions",
+        trace.len(),
+        t_cold,
+        t_cached,
+        t_cold / t_cached,
+        stats.hits,
+        stats.misses,
+        stats.evictions
+    );
+    assert!(stats.hits > 0, "repeated-weights trace must produce cache hits");
+    let projections_per_inv = (tcfg.layers * 3) as u64;
+    assert!(
+        stats.hits >= 3 * projections_per_inv,
+        "every replayed projection shard should hit (hits {}, expected >= {})",
+        stats.hits,
+        3 * projections_per_inv
+    );
+}

@@ -1,0 +1,253 @@
+//! Closed-form cluster latency / throughput estimates.
+//!
+//! States, in closed form, exactly what the cluster execution path
+//! ([`crate::cluster::ClusterScheduler`]) measures: each shard of the
+//! partition is an independent [`estimate_gemm_set`] at the shard's
+//! sub-shape, and the shard estimates combine under the reducer's
+//! attribution rules (latency = max over cores, passes/energy-like
+//! quantities = sum, shared-input traffic counted once on broadcast
+//! splits). Because PR 1's differential suite proves the functional
+//! backend equals `estimate_gemm_set` per GEMM, the cluster equality holds
+//! by construction — and `rust/tests/integration_cluster.rs` asserts it
+//! case by case anyway.
+
+use crate::arch::{ArchConfig, Architecture};
+use crate::cluster::partitioner::{partition, ClusterConfig};
+use crate::cluster::ShardSplit;
+use crate::quant::PrecisionMode;
+
+use super::gemm::{estimate_gemm_set, GemmEstimate, GemmShape, MemoryPolicy};
+
+/// Closed-form estimate for one GEMM set sharded across a cluster.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClusterEstimate {
+    /// Split dimension used.
+    pub split: ShardSplit,
+    /// Shards (= cores actually used; ≤ configured cores).
+    pub shards: usize,
+    /// Per-shard estimates, in plan order.
+    pub per_core: Vec<GemmEstimate>,
+    /// Cluster latency: max over cores (cores run concurrently).
+    pub cycles: u64,
+    /// Total stationary passes across the cluster.
+    pub passes: u64,
+    /// Useful operations of the whole logical GEMM set.
+    pub ops: u64,
+    /// Activation read bytes (broadcast splits count the stream once).
+    pub act_read_bytes: u64,
+    /// Stationary (weight carrier) read bytes, summed over cores.
+    pub weight_read_bytes: u64,
+    /// Output write-back bytes, summed over cores.
+    pub output_write_bytes: u64,
+    /// Paper-policy memory total (activation + weight reads, plus
+    /// write-back when the policy counts outputs).
+    pub memory_bytes: u64,
+}
+
+impl ClusterEstimate {
+    /// End-to-end latency speedup over a single-core estimate.
+    pub fn speedup_vs(&self, single: &GemmEstimate) -> f64 {
+        single.cycles as f64 / self.cycles as f64
+    }
+
+    /// Parallel efficiency: speedup divided by the cores used (1.0 =
+    /// perfect linear scaling at this shard granularity).
+    pub fn parallel_efficiency(&self, single: &GemmEstimate) -> f64 {
+        self.speedup_vs(single) / self.shards as f64
+    }
+
+    /// Cluster-wide achieved throughput in ops/cycle (whole-GEMM ops over
+    /// the gating core's latency).
+    pub fn ops_per_cycle(&self) -> f64 {
+        self.ops as f64 / self.cycles as f64
+    }
+}
+
+/// Estimate a shared-input GEMM set of `set_size` matrices sharded across
+/// `cluster`. `set_size == 1` is the single-GEMM case. The partition is
+/// the same tile-aligned plan the cluster scheduler executes, so the
+/// functional cluster path must (and does) match this estimate exactly.
+pub fn estimate_cluster(
+    arch: Architecture,
+    cfg: &ArchConfig,
+    shape: GemmShape,
+    set_size: usize,
+    requested_mode: PrecisionMode,
+    cluster: &ClusterConfig,
+    policy: MemoryPolicy,
+) -> ClusterEstimate {
+    assert!(set_size > 0, "set must contain at least one matrix");
+    let plans = partition(shape.m, shape.k, shape.n, cfg.n, cluster);
+    let per_core: Vec<GemmEstimate> = plans
+        .iter()
+        .map(|p| {
+            let (m, k, n) = p.shape();
+            estimate_gemm_set(arch, cfg, GemmShape::new(m, k, n), set_size, requested_mode, policy)
+        })
+        .collect();
+
+    let cycles = per_core.iter().map(|e| e.cycles).max().unwrap_or(0);
+    let passes = per_core.iter().map(|e| e.passes).sum();
+    let ops = per_core.iter().map(|e| e.ops).sum();
+    let act_read_bytes = if cluster.split.broadcasts_activations() {
+        per_core.iter().map(|e| e.act_read_bytes).max().unwrap_or(0)
+    } else {
+        per_core.iter().map(|e| e.act_read_bytes).sum()
+    };
+    let weight_read_bytes = per_core.iter().map(|e| e.weight_read_bytes).sum();
+    let output_write_bytes = per_core.iter().map(|e| e.output_write_bytes).sum();
+    let mut memory_bytes = act_read_bytes + weight_read_bytes;
+    if policy.count_outputs {
+        memory_bytes += output_write_bytes;
+    }
+
+    ClusterEstimate {
+        split: cluster.split,
+        shards: plans.len(),
+        per_core,
+        cycles,
+        passes,
+        ops,
+        act_read_bytes,
+        weight_read_bytes,
+        output_write_bytes,
+        memory_bytes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analytical::estimate_gemm;
+
+    fn cfg() -> ArchConfig {
+        ArchConfig::with_n(32)
+    }
+
+    #[test]
+    fn single_core_cluster_degenerates_to_gemm_estimate() {
+        let shape = GemmShape::new(256, 256, 256);
+        let single = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
+        let c = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            1,
+            PrecisionMode::W2,
+            &ClusterConfig::default(),
+            MemoryPolicy::default(),
+        );
+        assert_eq!(c.shards, 1);
+        assert_eq!(c.cycles, single.cycles);
+        assert_eq!(c.passes, single.passes);
+        assert_eq!(c.ops, single.ops);
+        assert_eq!(c.memory_bytes, single.memory_bytes);
+    }
+
+    #[test]
+    fn m_split_scales_near_linearly_on_even_shards() {
+        let shape = GemmShape::new(256, 256, 256);
+        let single = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
+        for cores in [2usize, 4, 8] {
+            let c = estimate_cluster(
+                Architecture::Adip,
+                &cfg(),
+                shape,
+                1,
+                PrecisionMode::W2,
+                &ClusterConfig::with_cores(cores),
+                MemoryPolicy::default(),
+            );
+            assert_eq!(c.shards, cores, "256 rows = 8 tiles shard {cores} ways");
+            let s = c.speedup_vs(&single);
+            // per-shard fill overhead keeps it just under linear
+            assert!(s > 0.9 * cores as f64 && s <= cores as f64, "cores={cores} speedup={s}");
+            assert!(c.parallel_efficiency(&single) > 0.9);
+            // same total tile passes, same total weight traffic × cores
+            assert_eq!(c.passes, single.passes);
+        }
+    }
+
+    #[test]
+    fn n_split_counts_broadcast_activations_once() {
+        let shape = GemmShape::new(128, 128, 256);
+        let cluster = ClusterConfig::with_cores(4).with_split(ShardSplit::N);
+        let c = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            1,
+            PrecisionMode::W8,
+            &cluster,
+            MemoryPolicy::default(),
+        );
+        assert_eq!(c.shards, 4);
+        let act_sum: u64 = c.per_core.iter().map(|e| e.act_read_bytes).sum();
+        let act_max = c.per_core.iter().map(|e| e.act_read_bytes).max().unwrap();
+        assert_eq!(c.act_read_bytes, act_max, "broadcast stream counted once");
+        assert!(act_sum > act_max);
+        // weight slices are disjoint: they sum to the single-core total
+        let single = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
+        assert_eq!(c.weight_read_bytes, single.weight_read_bytes);
+    }
+
+    #[test]
+    fn k_split_keeps_total_ops_and_sums_partial_writebacks() {
+        let shape = GemmShape::new(64, 256, 64);
+        let cluster = ClusterConfig::with_cores(4).with_split(ShardSplit::K);
+        let c = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            1,
+            PrecisionMode::W4,
+            &cluster,
+            MemoryPolicy::default(),
+        );
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.ops, shape.ops(), "disjoint K slices cover the GEMM");
+        let single = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W4,
+            MemoryPolicy::default(),
+        );
+        // each core drains a full-size partial product
+        assert_eq!(c.output_write_bytes, 4 * single.output_write_bytes);
+        assert!(c.cycles < single.cycles);
+    }
+
+    #[test]
+    fn unshardable_dimension_caps_the_shard_count() {
+        let shape = GemmShape::new(32, 512, 512); // one M tile at n=32
+        let c = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            1,
+            PrecisionMode::W8,
+            &ClusterConfig::with_cores(8),
+            MemoryPolicy::default(),
+        );
+        assert_eq!(c.shards, 1);
+    }
+}

@@ -68,8 +68,18 @@ pub struct GemmEstimate {
     pub cycles: u64,
     /// Useful operations (2 ops/MAC over the logical GEMM).
     pub ops: u64,
-    /// Off-array memory traffic in bytes.
+    /// Off-array memory traffic in bytes (activation + stationary reads,
+    /// plus write-back when [`MemoryPolicy::count_outputs`] is set).
     pub memory_bytes: u64,
+    /// Activation-tile read bytes (one `N²` tile per pass). Broken out so
+    /// the cluster estimator can apply its broadcast attribution rule
+    /// (shared-input traffic counted once across cores).
+    pub act_read_bytes: u64,
+    /// Stationary (packed weight carrier) tile read bytes.
+    pub weight_read_bytes: u64,
+    /// Output tile write-back bytes (always tracked; included in
+    /// `memory_bytes` only per [`MemoryPolicy::count_outputs`]).
+    pub output_write_bytes: u64,
 }
 
 impl GemmEstimate {
@@ -132,15 +142,28 @@ pub fn estimate_gemm(
     // tiles_m activation passes that reuse it). Matches the co-simulator's
     // counters exactly; the ADiP/DiP ratio is 1/k either way.
     let tile_bytes = (cfg.n * cfg.n) as u64;
-    let mut memory_bytes = passes * tile_bytes + fused_groups * tile_bytes;
+    let act_read_bytes = passes * tile_bytes;
+    let weight_read_bytes = fused_groups * tile_bytes;
+    // Output tiles, requantized to 8-bit, written once per output block
+    // after the last reduction step — identical across architectures and
+    // exactly the co-simulator's write-back counter.
+    let output_write_bytes = (grid.tiles_m() * grid.tiles_n()) as u64 * tile_bytes;
+    let mut memory_bytes = act_read_bytes + weight_read_bytes;
     if policy.count_outputs {
-        // Output tiles, requantized to 8-bit, written once per output
-        // block after the last reduction step — identical across
-        // architectures and exactly the co-simulator's write-back counter.
-        memory_bytes += (grid.tiles_m() * grid.tiles_n()) as u64 * tile_bytes;
+        memory_bytes += output_write_bytes;
     }
 
-    GemmEstimate { arch, mode, passes, cycles, ops: shape.ops(), memory_bytes }
+    GemmEstimate {
+        arch,
+        mode,
+        passes,
+        cycles,
+        ops: shape.ops(),
+        memory_bytes,
+        act_read_bytes,
+        weight_read_bytes,
+        output_write_bytes,
+    }
 }
 
 /// Estimate a shared-input GEMM *set* `C_s = A · B_s` of `set_size`
@@ -169,6 +192,9 @@ pub fn estimate_gemm_set(
             cycles: single.cycles * set_size as u64,
             ops: single.ops * set_size as u64,
             memory_bytes: single.memory_bytes * set_size as u64,
+            act_read_bytes: single.act_read_bytes * set_size as u64,
+            weight_read_bytes: single.weight_read_bytes * set_size as u64,
+            output_write_bytes: single.output_write_bytes * set_size as u64,
             ..single
         };
     }
@@ -184,9 +210,12 @@ pub fn estimate_gemm_set(
     let cycles = (tile_latency - steady) + passes * steady;
 
     let tile_bytes = (cfg.n * cfg.n) as u64;
-    let mut memory_bytes = passes * tile_bytes + groups * tile_bytes;
+    let act_read_bytes = passes * tile_bytes;
+    let weight_read_bytes = groups * tile_bytes;
+    let output_write_bytes = (grid.tiles_m() * slots) as u64 * tile_bytes;
+    let mut memory_bytes = act_read_bytes + weight_read_bytes;
     if policy.count_outputs {
-        memory_bytes += (grid.tiles_m() * slots) as u64 * tile_bytes;
+        memory_bytes += output_write_bytes;
     }
 
     GemmEstimate {
@@ -196,6 +225,9 @@ pub fn estimate_gemm_set(
         cycles,
         ops: shape.ops() * set_size as u64,
         memory_bytes,
+        act_read_bytes,
+        weight_read_bytes,
+        output_write_bytes,
     }
 }
 

@@ -6,10 +6,12 @@
 //! register-level simulators in [`crate::arch::cycle_sim`] validate them
 //! cycle-for-cycle; [`crate::sim`] applies them per-workload.
 
+pub mod cluster;
 pub mod equations;
 pub mod gemm;
 pub mod utilization;
 
+pub use cluster::{estimate_cluster, ClusterEstimate};
 pub use equations::{
     adip_latency, adip_throughput_ops_per_cycle, fig2_series, fig4_series, pe_latency, Fig2Row,
     Fig4Row,

@@ -30,7 +30,11 @@
 //! outputs are bit-exact with the cycle simulator and its reported cycles
 //! equal [`crate::analytical::estimate_gemm`]. Any change to either
 //! backend must keep that suite green; when the two disagree, the cycle
-//! simulator wins and the functional model is the bug.
+//! simulator wins and the functional model is the bug. The cluster
+//! execution path ([`crate::cluster`]) extends the same policy:
+//! `rust/tests/integration_cluster.rs` holds sharded runs (splits × core
+//! counts) to bit-exactness and to the closed-form cluster estimates on
+//! both backends.
 //!
 //! Two modeling depths are provided and cross-checked against each other:
 //!

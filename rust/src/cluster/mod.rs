@@ -1,0 +1,60 @@
+//! Cluster execution subsystem — shard one GEMM across a mesh of array
+//! cores, with a shared weight-tile cache.
+//!
+//! The paper evaluates a single `N×N` ADiP array; its follow-up many-core
+//! work (D-Legion) shows the scaling win comes from ganging many such
+//! arrays. This layer adds that system level: a pool of `P` simulated
+//! cores executes one large GEMM — or a shared-input multi-matrix set —
+//! as tile-aligned shards, and the shards are merged back into the exact
+//! single-core result.
+//!
+//! * [`partitioner`] — [`ShardSplit`] (M / N / K) and tile-aligned,
+//!   balanced shard plans; [`ClusterConfig`] threaded through
+//!   [`crate::coordinator::CoordinatorConfig`].
+//! * [`scheduler`] — [`ClusterScheduler`]: cache probe → concurrent shard
+//!   execution on a pool of [`crate::coordinator::CoreScheduler`] workers
+//!   (one host thread per shard) → reduce.
+//! * [`reducer`] — output reassembly and the accounting attribution rules.
+//! * [`weight_cache`] — result cache keyed by (weight-tile fingerprint,
+//!   precision mode), activation-qualified for bit-exactness.
+//!
+//! # Sharding invariants
+//!
+//! 1. **Bit-exactness.** A cluster run's outputs equal the single-core
+//!    run's outputs — and therefore the `i32` reference GEMM — for every
+//!    split × core count × precision × batch mode × backend. M/N shards
+//!    own disjoint output blocks; K shards produce full-size partial
+//!    products reduced by exact `i32` accumulation (order-independent).
+//!    Cache hits replay previously computed outputs under a key that
+//!    includes the activation fingerprint, so a hit cannot change results.
+//!    `rust/tests/integration_cluster.rs` enforces all of this — per the
+//!    repo's backend policy the cluster path *extends* the differential
+//!    suite, it does not bypass it.
+//! 2. **Accounting attribution.** Cluster latency (`cycles`) is the
+//!    maximum over cores; passes and energy are sums; memory traffic is a
+//!    sum except that a broadcast split (N: every core streams the same
+//!    activation tiles) counts the shared-input traffic once
+//!    ([`ShardSplit::broadcasts_activations`]). The K-split's final
+//!    accumulate is modeled as free. The closed forms in
+//!    [`crate::analytical::cluster`] state the same rules over
+//!    [`crate::analytical::estimate_gemm_set`] per shard, and the
+//!    functional path must match them *exactly* (tested).
+//! 3. **Cache keying.** Entries are keyed by (weight-set fingerprint,
+//!    precision mode, runtime-interleave flag) extended with the
+//!    activation fingerprint — a hit is bit-exact by key construction,
+//!    and M-split shards (identical weight slices, distinct activation
+//!    slices) occupy distinct entries. Hits contribute zero simulated
+//!    cycles/energy/memory (execution skipped) and are surfaced as
+//!    `cache_hits`/`cache_misses`/`cache_evictions` in
+//!    [`crate::coordinator::Metrics`]. A cold cache is
+//!    accounting-neutral, which is what keeps invariant 2 testable.
+
+pub mod partitioner;
+pub mod reducer;
+pub mod scheduler;
+pub mod weight_cache;
+
+pub use partitioner::{partition, ClusterConfig, ShardPlan, ShardSplit};
+pub use reducer::{assemble_outputs, combine_accounting};
+pub use scheduler::{ClusterRun, ClusterScheduler};
+pub use weight_cache::{fingerprint, CacheConfig, CacheStats, WeightCache};

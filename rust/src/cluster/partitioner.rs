@@ -1,0 +1,278 @@
+//! Shard partitioner: splits one GEMM (or shared-input set) into per-core
+//! shard plans.
+//!
+//! A cluster of `P` array cores executes one logical `M×K·K×N` GEMM by
+//! cutting exactly one dimension into at most `P` contiguous slices, each
+//! aligned to the array-tile boundary (`array_n`) so the sharded tile
+//! schedule is the same set of tiles the single-core schedule would
+//! execute, just distributed:
+//!
+//! * [`ShardSplit::M`] — rows of `A`/`C`. Activation slices are disjoint;
+//!   every core loads the full weight set. The default (no reduce step,
+//!   no broadcast).
+//! * [`ShardSplit::N`] — columns of `B`/`C`. Weight slices are disjoint;
+//!   the *same* activation stream is broadcast to every core (the
+//!   shared-input traffic is counted once — see [`crate::cluster::reducer`]).
+//! * [`ShardSplit::K`] — the reduction dimension. Each core produces a
+//!   full-size partial product; the reducer accumulates them
+//!   (`C = Σᵢ Cᵢ`, exact in `i32`, order-independent).
+
+use std::fmt;
+use std::ops::Range;
+use std::str::FromStr;
+
+use super::weight_cache::CacheConfig;
+
+/// Which GEMM dimension the cluster shards across cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ShardSplit {
+    /// Split rows of `A`/`C` (disjoint activations, replicated weights).
+    #[default]
+    M,
+    /// Split columns of `B`/`C` (disjoint weights, broadcast activations).
+    N,
+    /// Split the reduction dimension (partial products, accumulate-reduce).
+    K,
+}
+
+impl ShardSplit {
+    /// All splits, default first.
+    pub const ALL: [ShardSplit; 3] = [ShardSplit::M, ShardSplit::N, ShardSplit::K];
+
+    /// Display/CLI name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            ShardSplit::M => "m",
+            ShardSplit::N => "n",
+            ShardSplit::K => "k",
+        }
+    }
+
+    /// Whether this split streams the *same* activation tiles to every
+    /// core (one broadcast fetch serves the whole cluster). This is the
+    /// single source of the "shared-input traffic counted once"
+    /// attribution rule; the reducer and the analytical cluster estimator
+    /// both key off it.
+    pub const fn broadcasts_activations(self) -> bool {
+        matches!(self, ShardSplit::N)
+    }
+}
+
+impl fmt::Display for ShardSplit {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ShardSplit {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "m" | "rows" => Ok(ShardSplit::M),
+            "n" | "cols" | "columns" => Ok(ShardSplit::N),
+            "k" | "reduce" | "inner" => Ok(ShardSplit::K),
+            other => Err(format!("unknown shard split {other:?} (expected m, n or k)")),
+        }
+    }
+}
+
+/// Cluster execution configuration, threaded through
+/// [`crate::coordinator::CoordinatorConfig`] into the cluster scheduler.
+///
+/// The default is the degenerate single-core cluster with the weight cache
+/// off — byte-identical accounting to a bare
+/// [`crate::coordinator::CoreScheduler`], so existing callers see no
+/// behavior change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ClusterConfig {
+    /// Array cores in the pool (0 is treated as 1).
+    pub cores: usize,
+    /// Dimension sharded across cores.
+    pub split: ShardSplit,
+    /// Weight-tile result cache (capacity 0 = disabled).
+    pub cache: CacheConfig,
+}
+
+impl ClusterConfig {
+    /// A `cores`-wide cluster with the default split and no cache.
+    pub fn with_cores(cores: usize) -> ClusterConfig {
+        ClusterConfig { cores, ..ClusterConfig::default() }
+    }
+
+    /// The same configuration with a different split.
+    pub fn with_split(self, split: ShardSplit) -> ClusterConfig {
+        ClusterConfig { split, ..self }
+    }
+
+    /// The same configuration with a weight cache of `capacity` entries.
+    pub fn with_cache(self, capacity: usize) -> ClusterConfig {
+        ClusterConfig { cache: CacheConfig { capacity }, ..self }
+    }
+
+    /// Effective core count (at least 1).
+    pub fn effective_cores(&self) -> usize {
+        self.cores.max(1)
+    }
+}
+
+/// One shard of a partitioned GEMM: the sub-ranges of the logical
+/// `M×K·K×N` iteration space a single core executes. Exactly one range is
+/// a strict subset (the split dimension); the other two cover their full
+/// extent.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Index of the core executing this shard.
+    pub core: usize,
+    /// Rows of `A`/`C` this shard covers.
+    pub rows: Range<usize>,
+    /// Reduction slice of `A`'s columns / `B`'s rows.
+    pub inner: Range<usize>,
+    /// Columns of `B`/`C` this shard covers.
+    pub cols: Range<usize>,
+}
+
+impl ShardPlan {
+    /// Shard sub-GEMM shape `(m, k, n)`.
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.rows.len(), self.inner.len(), self.cols.len())
+    }
+
+    /// Whether this shard covers the whole GEMM (single-shard degenerate
+    /// case — no slicing or reduction needed).
+    pub fn covers(&self, m: usize, k: usize, n: usize) -> bool {
+        self.rows == (0..m) && self.inner == (0..k) && self.cols == (0..n)
+    }
+}
+
+/// Cut `0..len` into at most `cores` contiguous slices aligned to
+/// `array_n`-element tile boundaries, balanced to within one tile.
+fn split_ranges(len: usize, array_n: usize, cores: usize) -> Vec<Range<usize>> {
+    let tiles = len.div_ceil(array_n).max(1);
+    let shards = cores.clamp(1, tiles);
+    let base = tiles / shards;
+    let extra = tiles % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut tile = 0usize;
+    for s in 0..shards {
+        let take = base + usize::from(s < extra);
+        let start = (tile * array_n).min(len);
+        let end = ((tile + take) * array_n).min(len);
+        out.push(start..end);
+        tile += take;
+    }
+    out
+}
+
+/// Partition an `m×k·k×n` GEMM for a cluster: at most
+/// `cluster.effective_cores()` shards, tile-aligned and balanced along
+/// `cluster.split`. Fewer shards are produced when the split dimension has
+/// fewer tiles than cores (a 1-tile dimension cannot shard).
+pub fn partition(m: usize, k: usize, n: usize, array_n: usize, cluster: &ClusterConfig) -> Vec<ShardPlan> {
+    assert!(array_n > 0, "array size must be positive");
+    let cores = cluster.effective_cores();
+    let make = |core: usize, rows: Range<usize>, inner: Range<usize>, cols: Range<usize>| {
+        ShardPlan { core, rows, inner, cols }
+    };
+    match cluster.split {
+        ShardSplit::M => split_ranges(m, array_n, cores)
+            .into_iter()
+            .enumerate()
+            .map(|(c, r)| make(c, r, 0..k, 0..n))
+            .collect(),
+        ShardSplit::N => split_ranges(n, array_n, cores)
+            .into_iter()
+            .enumerate()
+            .map(|(c, r)| make(c, 0..m, 0..k, r))
+            .collect(),
+        ShardSplit::K => split_ranges(k, array_n, cores)
+            .into_iter()
+            .enumerate()
+            .map(|(c, r)| make(c, 0..m, r, 0..n))
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_parsing_and_names() {
+        assert_eq!("m".parse::<ShardSplit>().unwrap(), ShardSplit::M);
+        assert_eq!("cols".parse::<ShardSplit>().unwrap(), ShardSplit::N);
+        assert_eq!("reduce".parse::<ShardSplit>().unwrap(), ShardSplit::K);
+        assert!("diag".parse::<ShardSplit>().is_err());
+        for s in ShardSplit::ALL {
+            assert_eq!(s.name().parse::<ShardSplit>().unwrap(), s);
+            assert_eq!(s.to_string(), s.name());
+        }
+        assert!(ShardSplit::N.broadcasts_activations());
+        assert!(!ShardSplit::M.broadcasts_activations());
+        assert!(!ShardSplit::K.broadcasts_activations());
+    }
+
+    #[test]
+    fn default_cluster_is_single_core_no_cache() {
+        let c = ClusterConfig::default();
+        assert_eq!(c.effective_cores(), 1);
+        assert_eq!(c.split, ShardSplit::M);
+        assert_eq!(c.cache.capacity, 0);
+        assert_eq!(ClusterConfig::with_cores(0).effective_cores(), 1);
+        assert_eq!(ClusterConfig::with_cores(4).with_cache(16).cache.capacity, 16);
+    }
+
+    #[test]
+    fn shards_are_tile_aligned_balanced_and_cover() {
+        for (len, array_n, cores) in
+            [(256usize, 32usize, 4usize), (97, 8, 3), (64, 32, 8), (7, 8, 4), (33, 8, 2)]
+        {
+            let ranges = split_ranges(len, array_n, cores);
+            let tiles = len.div_ceil(array_n).max(1);
+            assert_eq!(ranges.len(), cores.min(tiles), "len={len} n={array_n} p={cores}");
+            // contiguous cover of 0..len
+            assert_eq!(ranges[0].start, 0);
+            assert_eq!(ranges.last().unwrap().end, len);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+            }
+            // tile-aligned starts, balanced to one tile
+            assert!(ranges.iter().all(|r| r.start % array_n == 0), "{ranges:?}");
+            let tile_counts: Vec<usize> =
+                ranges.iter().map(|r| r.len().div_ceil(array_n).max(1)).collect();
+            let (min, max) =
+                (tile_counts.iter().min().unwrap(), tile_counts.iter().max().unwrap());
+            assert!(max - min <= 1, "unbalanced {tile_counts:?}");
+        }
+    }
+
+    #[test]
+    fn partition_slices_exactly_one_dimension() {
+        let cfg = ClusterConfig::with_cores(4);
+        let m_plans = partition(256, 128, 64, 32, &cfg);
+        assert_eq!(m_plans.len(), 4);
+        for (i, p) in m_plans.iter().enumerate() {
+            assert_eq!(p.core, i);
+            assert_eq!(p.inner, 0..128);
+            assert_eq!(p.cols, 0..64);
+            assert_eq!(p.shape(), (64, 128, 64));
+        }
+        let n_plans = partition(256, 128, 64, 32, &cfg.with_split(ShardSplit::N));
+        assert_eq!(n_plans.len(), 2, "64 cols = 2 tiles caps the shard count");
+        assert!(n_plans.iter().all(|p| p.rows == (0..256) && p.inner == (0..128)));
+        let k_plans = partition(256, 128, 64, 32, &cfg.with_split(ShardSplit::K));
+        assert_eq!(k_plans.len(), 4);
+        assert!(k_plans.iter().all(|p| p.rows == (0..256) && p.cols == (0..64)));
+    }
+
+    #[test]
+    fn single_shard_covers_whole_gemm() {
+        let plans = partition(20, 20, 20, 8, &ClusterConfig::default());
+        assert_eq!(plans.len(), 1);
+        assert!(plans[0].covers(20, 20, 20));
+        // one-tile split dimension degenerates to a single shard too
+        let plans = partition(8, 64, 64, 8, &ClusterConfig::with_cores(4));
+        assert_eq!(plans.len(), 1);
+        assert!(plans[0].covers(8, 64, 64));
+    }
+}

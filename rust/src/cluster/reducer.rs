@@ -1,0 +1,163 @@
+//! Shard reducer: reassembles per-core shard results into the logical
+//! GEMM-set result and aggregates cluster accounting.
+//!
+//! **Output assembly** is bit-exact by construction: M/N shards own
+//! disjoint blocks of `C` and are placed at their offsets; K shards
+//! produce full-size partial products that are accumulated
+//! (`i32` addition — exact and order-independent, so the reduce order
+//! never affects the result).
+//!
+//! **Accounting attribution** (the rules the analytical cluster estimator
+//! in [`crate::analytical::cluster`] mirrors exactly):
+//!
+//! * cluster latency `cycles` = **max** over cores (cores run
+//!   concurrently; the slowest shard gates the answer). The K-split's
+//!   final accumulate is modeled as free — partial psums drain through the
+//!   same write-back path the single-core schedule uses.
+//! * `passes`, `energy` = **sum** over cores (every executed pass burns
+//!   real energy on its core).
+//! * memory traffic = **sum** over cores, except that a broadcast split
+//!   ([`ShardSplit::broadcasts_activations`]) counts the shared activation
+//!   stream **once**: the same tiles are multicast to every core, so the
+//!   cluster's activation read bytes are the maximum any single core
+//!   consumes, not the sum. Weight and output traffic always sum (shards
+//!   own disjoint weights/outputs; K shards each drain a full partial).
+//! * `tile_reads` is recomputed from the combined byte counters (every
+//!   read event in this stack moves exactly one `N²`-byte tile).
+
+use crate::dataflow::Mat;
+use crate::sim::cosim::CoSimResult;
+use crate::sim::memory::MemoryCounters;
+
+use super::partitioner::{ShardPlan, ShardSplit};
+
+/// Assemble per-shard outputs into one full-shape output per source
+/// matrix. `shard_outputs[i]` are the outputs of `plans[i]` (one `Mat` per
+/// weight matrix, in set order).
+pub fn assemble_outputs(
+    m: usize,
+    n: usize,
+    set_size: usize,
+    plans: &[ShardPlan],
+    shard_outputs: &[Vec<Mat>],
+) -> Vec<Mat> {
+    assert_eq!(plans.len(), shard_outputs.len(), "one output set per shard");
+    let mut outs = vec![Mat::zeros(m, n); set_size];
+    for (plan, shard) in plans.iter().zip(shard_outputs) {
+        assert_eq!(shard.len(), set_size, "shard output arity");
+        for (out, tile) in outs.iter_mut().zip(shard) {
+            // disjoint M/N blocks land on zeros (place); K partials add up
+            out.accumulate(plan.rows.start, plan.cols.start, tile);
+        }
+    }
+    outs
+}
+
+/// Combine per-shard accounting into cluster totals per the attribution
+/// rules above. `tile_bytes` is `N²` (the uniform tile size every read
+/// event moves). Returns `(cycles, passes, energy_j, memory)`.
+pub fn combine_accounting(
+    split: ShardSplit,
+    shards: &[&CoSimResult],
+    tile_bytes: u64,
+) -> (u64, u64, f64, MemoryCounters) {
+    let cycles = shards.iter().map(|s| s.cycles).max().unwrap_or(0);
+    let passes = shards.iter().map(|s| s.passes).sum();
+    let energy_j = shards.iter().map(|s| s.energy_j).sum();
+    let act_read_bytes = if split.broadcasts_activations() {
+        shards.iter().map(|s| s.memory.act_read_bytes).max().unwrap_or(0)
+    } else {
+        shards.iter().map(|s| s.memory.act_read_bytes).sum()
+    };
+    let weight_read_bytes = shards.iter().map(|s| s.memory.weight_read_bytes).sum();
+    let output_write_bytes = shards.iter().map(|s| s.memory.output_write_bytes).sum();
+    let conflict_cycles = shards.iter().map(|s| s.memory.conflict_cycles).sum();
+    let memory = MemoryCounters {
+        act_read_bytes,
+        weight_read_bytes,
+        output_write_bytes,
+        tile_reads: (act_read_bytes + weight_read_bytes) / tile_bytes.max(1),
+        conflict_cycles,
+    };
+    (cycles, passes, energy_j, memory)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partitioner::{partition, ClusterConfig};
+    use crate::testutil::Rng;
+
+    fn res(cycles: u64, act: u64, weight: u64) -> CoSimResult {
+        CoSimResult {
+            outputs: vec![],
+            passes: cycles / 2,
+            cycles,
+            energy_j: cycles as f64 * 1e-9,
+            memory: MemoryCounters {
+                act_read_bytes: act,
+                weight_read_bytes: weight,
+                output_write_bytes: 64,
+                tile_reads: (act + weight) / 64,
+                conflict_cycles: 1,
+            },
+        }
+    }
+
+    #[test]
+    fn m_split_assembly_matches_reference() {
+        let mut rng = Rng::seeded(43);
+        let a = Mat::random(&mut rng, 40, 24, 8);
+        let b = Mat::random(&mut rng, 24, 16, 4);
+        let plans = partition(40, 24, 16, 8, &ClusterConfig::with_cores(3));
+        let shard_outputs: Vec<Vec<Mat>> = plans
+            .iter()
+            .map(|p| {
+                let asl = a.tile(p.rows.start, p.inner.start, p.rows.len(), p.inner.len());
+                let bsl = b.tile(p.inner.start, p.cols.start, p.inner.len(), p.cols.len());
+                vec![asl.matmul(&bsl)]
+            })
+            .collect();
+        let outs = assemble_outputs(40, 16, 1, &plans, &shard_outputs);
+        assert_eq!(outs[0], a.matmul(&b));
+    }
+
+    #[test]
+    fn k_split_partials_accumulate_exactly() {
+        let mut rng = Rng::seeded(45);
+        let a = Mat::random(&mut rng, 12, 50, 8);
+        let b = Mat::random(&mut rng, 50, 20, 2);
+        let plans =
+            partition(12, 50, 20, 8, &ClusterConfig::with_cores(4).with_split(ShardSplit::K));
+        assert!(plans.len() > 1);
+        let shard_outputs: Vec<Vec<Mat>> = plans
+            .iter()
+            .map(|p| {
+                let asl = a.tile(p.rows.start, p.inner.start, p.rows.len(), p.inner.len());
+                let bsl = b.tile(p.inner.start, p.cols.start, p.inner.len(), p.cols.len());
+                vec![asl.matmul(&bsl)]
+            })
+            .collect();
+        let outs = assemble_outputs(12, 20, 1, &plans, &shard_outputs);
+        assert_eq!(outs[0], a.matmul(&b));
+    }
+
+    #[test]
+    fn accounting_rules_max_sum_and_broadcast() {
+        let a = res(100, 1024, 256);
+        let b = res(60, 512, 256);
+        let (cycles, passes, energy, mem) =
+            combine_accounting(ShardSplit::M, &[&a, &b], 64);
+        assert_eq!(cycles, 100);
+        assert_eq!(passes, 80);
+        assert!((energy - 160e-9).abs() < 1e-18);
+        assert_eq!(mem.act_read_bytes, 1536, "M-split sums activations");
+        assert_eq!(mem.weight_read_bytes, 512);
+        assert_eq!(mem.output_write_bytes, 128);
+        assert_eq!(mem.tile_reads, (1536 + 512) / 64);
+        assert_eq!(mem.conflict_cycles, 2);
+        let (_, _, _, bmem) = combine_accounting(ShardSplit::N, &[&a, &b], 64);
+        assert_eq!(bmem.act_read_bytes, 1024, "N-split counts the broadcast once");
+        assert_eq!(bmem.weight_read_bytes, 512);
+    }
+}

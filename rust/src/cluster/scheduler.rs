@@ -1,0 +1,476 @@
+//! The cluster shard scheduler: dispatches shard plans to a pool of
+//! [`CoreScheduler`] workers and reduces their results.
+//!
+//! One [`ClusterScheduler`] owns `P` simulated array cores (each a
+//! [`CoreScheduler`] on the configured `Backend` — the backend policy of
+//! `rust/src/arch/mod.rs` applies unchanged: functional serves, the cycle
+//! simulator stays golden). A GEMM (or shared-input multi-matrix set) is
+//! partitioned by [`super::partitioner::partition`], each shard is probed
+//! against the [`super::weight_cache::WeightCache`] and, on a miss,
+//! executed on its own core — concurrently, on host threads, one thread
+//! per shard — then the [`super::reducer`] reassembles outputs and
+//! aggregates accounting.
+//!
+//! The degenerate single-shard case (1 core, or a split dimension with one
+//! tile) skips slicing and reduction entirely and is byte-identical to a
+//! bare [`CoreScheduler`] run — which is what keeps the coordinator's
+//! default configuration (1 cluster core per worker) behavior-neutral.
+
+use std::borrow::Cow;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::arch::{Architecture, Backend};
+use crate::coordinator::scheduler::{attribute_members, CoreScheduler, MemberResult};
+use crate::coordinator::select_mode;
+use crate::coordinator::MatmulRequest;
+use crate::dataflow::Mat;
+use crate::quant::PrecisionMode;
+use crate::sim::cosim::CoSimResult;
+
+use super::partitioner::{partition, ClusterConfig};
+use super::reducer::{assemble_outputs, combine_accounting};
+use super::weight_cache::{combine_fingerprints, fingerprint, CacheStats, WeightCache};
+
+/// Result of one cluster execution: the logical (reduced) co-sim result
+/// plus the shard-level breakdown.
+#[derive(Debug, Clone)]
+pub struct ClusterRun {
+    /// Reduced outputs + aggregated accounting (cluster latency = max over
+    /// cores; passes/energy/memory combined per the reducer's rules).
+    pub result: CoSimResult,
+    /// Shards executed (≤ configured cores; 1 when the GEMM cannot shard).
+    pub shards: usize,
+    /// Simulated cycles per shard, in plan order (0 for cache hits).
+    pub per_core_cycles: Vec<u64>,
+    /// Weight-cache activity during this run (all zero when disabled).
+    pub cache: CacheStats,
+}
+
+/// One shard's operands, ready for a core. Only the split dimension is
+/// actually sliced (copied); ranges covering a full extent borrow the
+/// original matrix — an M-split does not clone the weight set per core,
+/// an N/K-split does not clone the activation matrix per core.
+struct ShardJob<'x> {
+    a: Cow<'x, Mat>,
+    bs: Vec<Cow<'x, Mat>>,
+}
+
+/// Borrow `m` when the requested window is the whole matrix; otherwise
+/// extract the (clipped, hence exact) tile.
+fn slice_or_borrow<'x>(
+    m: &'x Mat,
+    r0: usize,
+    c0: usize,
+    rows: usize,
+    cols: usize,
+) -> Cow<'x, Mat> {
+    if r0 == 0 && c0 == 0 && rows == m.rows() && cols == m.cols() {
+        Cow::Borrowed(m)
+    } else {
+        Cow::Owned(m.tile(r0, c0, rows, cols))
+    }
+}
+
+/// Outcome of the cache probe for one shard.
+enum Probe {
+    /// Served from the cache (outputs reused, accounting zeroed).
+    Hit(CoSimResult),
+    /// Must execute; insert under these fingerprints afterwards.
+    Miss(Option<(u128, u128)>),
+}
+
+/// Pool of `P` array cores + the shared weight-tile cache.
+pub struct ClusterScheduler {
+    cores: Vec<CoreScheduler>,
+    cfg: ClusterConfig,
+    cache: WeightCache,
+    n: usize,
+}
+
+impl ClusterScheduler {
+    /// Build a cluster of `cfg.effective_cores()` cores, each simulating
+    /// `arch` at size `n` on `backend`.
+    pub fn new(arch: Architecture, n: usize, backend: Backend, cfg: ClusterConfig) -> ClusterScheduler {
+        let cores = (0..cfg.effective_cores())
+            .map(|_| CoreScheduler::with_backend(arch, n, backend))
+            .collect();
+        ClusterScheduler { cores, cfg, cache: WeightCache::new(cfg.cache), n }
+    }
+
+    /// Cluster configuration.
+    pub fn cluster_config(&self) -> &ClusterConfig {
+        &self.cfg
+    }
+
+    /// Which architecture the cores simulate.
+    pub fn architecture(&self) -> Architecture {
+        self.cores[0].architecture()
+    }
+
+    /// Which execution backend the cores run on.
+    pub fn backend(&self) -> Backend {
+        self.cores[0].backend()
+    }
+
+    /// Cumulative weight-cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Execute `C = A · B` across the cluster.
+    pub fn run_gemm(
+        &mut self,
+        a: &Mat,
+        b: &Mat,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Result<ClusterRun> {
+        self.run_gemm_set(a, &[b], mode, runtime_interleave)
+    }
+
+    /// Execute a shared-input GEMM set `C_s = A · B_s` across the cluster:
+    /// partition per the configured split, serve shards from the weight
+    /// cache where possible, run the misses concurrently (one core per
+    /// shard), and reduce.
+    pub fn run_gemm_set(
+        &mut self,
+        a: &Mat,
+        bs: &[&Mat],
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Result<ClusterRun> {
+        ensure!(!bs.is_empty(), "need at least one weight matrix");
+        for b in bs {
+            ensure!(
+                b.rows() == bs[0].rows() && b.cols() == bs[0].cols(),
+                "weight matrices must share a shape"
+            );
+            ensure!(a.cols() == b.rows(), "inner dimension mismatch");
+        }
+        let (m, k, nc) = (a.rows(), a.cols(), bs[0].cols());
+        let plans = partition(m, k, nc, self.n, &self.cfg);
+        let stats0 = self.cache.stats();
+
+        // Degenerate single shard: no slicing, no reduction — identical to
+        // a bare core run (plus an optional cache probe on the full set).
+        if plans.len() == 1 && plans[0].covers(m, k, nc) {
+            let probe = if self.cache.enabled() {
+                let weight_fp = combine_fingerprints(bs.iter().map(|b| fingerprint(&[*b])));
+                let act_fp = fingerprint(&[a]);
+                self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
+            } else {
+                Probe::Miss(None)
+            };
+            let result = match probe {
+                Probe::Hit(res) => res,
+                Probe::Miss(key) => {
+                    let res = self.cores[0].run_set(a, bs, mode, runtime_interleave)?;
+                    self.store(key, mode, runtime_interleave, &res);
+                    res
+                }
+            };
+            let cycles = result.cycles;
+            return Ok(ClusterRun {
+                result,
+                shards: 1,
+                per_core_cycles: vec![cycles],
+                cache: self.cache.stats().delta_since(&stats0),
+            });
+        }
+
+        // Slice operands per shard plan (split dimension only; full
+        // extents are borrowed, not copied).
+        let jobs: Vec<ShardJob<'_>> = plans
+            .iter()
+            .map(|p| ShardJob {
+                a: slice_or_borrow(a, p.rows.start, p.inner.start, p.rows.len(), p.inner.len()),
+                bs: bs
+                    .iter()
+                    .map(|b| {
+                        slice_or_borrow(b, p.inner.start, p.cols.start, p.inner.len(), p.cols.len())
+                    })
+                    .collect(),
+            })
+            .collect();
+
+        // Probe the cache (sequentially — the cache is shared state).
+        // Per-matrix fingerprints of *borrowed* operands are memoized by
+        // address, so e.g. an M-split hashes the shared full weight set
+        // once per run, not once per shard.
+        let mut memo: std::collections::HashMap<usize, u128> = std::collections::HashMap::new();
+        let mut fp_of = |c: &Cow<'_, Mat>| -> u128 {
+            match c {
+                Cow::Borrowed(m) => *memo
+                    .entry(*m as *const Mat as usize)
+                    .or_insert_with(|| fingerprint(&[*m])),
+                Cow::Owned(m) => fingerprint(&[m]),
+            }
+        };
+        let mut slots: Vec<Option<CoSimResult>> = Vec::with_capacity(jobs.len());
+        let mut hit: Vec<bool> = Vec::with_capacity(jobs.len());
+        let mut keys: Vec<Option<(u128, u128)>> = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            let probe = if self.cache.enabled() {
+                let act_fp = fp_of(&job.a);
+                let weight_fp = combine_fingerprints(job.bs.iter().map(&mut fp_of));
+                self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
+            } else {
+                Probe::Miss(None)
+            };
+            match probe {
+                Probe::Hit(res) => {
+                    slots.push(Some(res));
+                    hit.push(true);
+                    keys.push(None);
+                }
+                Probe::Miss(key) => {
+                    slots.push(None);
+                    hit.push(false);
+                    keys.push(key);
+                }
+            }
+        }
+
+        // Execute the misses concurrently, one core per shard (shard count
+        // never exceeds the core count, so the pairing is 1:1). A single
+        // miss runs inline — no point paying a thread spawn for it.
+        let misses: Vec<usize> = (0..jobs.len()).filter(|&i| !hit[i]).collect();
+        if misses.len() == 1 {
+            let only = misses[0];
+            let job = &jobs[only];
+            let refs: Vec<&Mat> = job.bs.iter().map(|c| &**c).collect();
+            let res = self.cores[0]
+                .run_set(&job.a, &refs, mode, runtime_interleave)
+                .map_err(|e| anyhow!("shard {only}: {e:#}"))?;
+            self.store(keys[only], mode, runtime_interleave, &res);
+            slots[only] = Some(res);
+        } else if !misses.is_empty() {
+            let executed: Vec<(usize, Result<CoSimResult>)> = std::thread::scope(|scope| {
+                let mut cores = self.cores.iter_mut();
+                let handles: Vec<_> = misses
+                    .iter()
+                    .map(|&i| {
+                        let core = cores.next().expect("shards <= cores");
+                        let job = &jobs[i];
+                        let h = scope.spawn(move || {
+                            let refs: Vec<&Mat> = job.bs.iter().map(|c| &**c).collect();
+                            core.run_set(&job.a, &refs, mode, runtime_interleave)
+                        });
+                        (i, h)
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|(i, h)| (i, h.join().expect("shard worker panicked")))
+                    .collect()
+            });
+            for (i, res) in executed {
+                let res = res.map_err(|e| anyhow!("shard {i}: {e:#}"))?;
+                self.store(keys[i], mode, runtime_interleave, &res);
+                slots[i] = Some(res);
+            }
+        }
+
+        let shard_results: Vec<CoSimResult> =
+            slots.into_iter().map(|s| s.expect("all shards resolved")).collect();
+        let per_core_cycles: Vec<u64> = shard_results.iter().map(|r| r.cycles).collect();
+
+        // Reduce outputs + accounting. Cache hits already carry zeroed
+        // accounting (see `probe_with`), but the broadcast `max` rule must
+        // see only *executed* shards, so hits are masked out of the combine.
+        let executed_refs: Vec<&CoSimResult> = shard_results
+            .iter()
+            .zip(&hit)
+            .filter(|(_, &h)| !h)
+            .map(|(r, _)| r)
+            .collect();
+        let tile_bytes = (self.n * self.n) as u64;
+        let (cycles, passes, energy_j, memory) =
+            combine_accounting(self.cfg.split, &executed_refs, tile_bytes);
+        let shard_outputs: Vec<Vec<Mat>> =
+            shard_results.into_iter().map(|r| r.outputs).collect();
+        let outputs = assemble_outputs(m, nc, bs.len(), &plans, &shard_outputs);
+
+        Ok(ClusterRun {
+            result: CoSimResult { outputs, passes, cycles, energy_j, memory },
+            shards: plans.len(),
+            per_core_cycles,
+            cache: self.cache.stats().delta_since(&stats0),
+        })
+    }
+
+    /// Execute a batch of fused requests (all sharing `members[0].a`)
+    /// across the cluster — the same contract as
+    /// [`CoreScheduler::execute_batch`], with identical per-member
+    /// attribution, so the coordinator's worker loop can use either.
+    pub fn execute_batch(
+        &mut self,
+        members: &[&MatmulRequest],
+        runtime_interleave: bool,
+    ) -> Result<Vec<MemberResult>> {
+        assert!(!members.is_empty());
+        let first = members[0];
+        let mode = select_mode(first.weight_bits, first.act_act);
+        let bs: Vec<&Mat> = members.iter().flat_map(|m| m.bs.iter().map(|b| b.as_ref())).collect();
+        let run = self.run_gemm_set(&first.a, &bs, mode, runtime_interleave)?;
+        Ok(attribute_members(members, &run.result))
+    }
+
+    /// Probe the cache under precomputed fingerprints (the caller derives
+    /// `weight_fp` via [`combine_fingerprints`] over per-matrix
+    /// fingerprints so borrowed operands can be memoized).
+    fn probe_with(
+        &mut self,
+        weight_fp: u128,
+        act_fp: u128,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Probe {
+        match self.cache.lookup(weight_fp, act_fp, mode, runtime_interleave) {
+            Some(mut res) => {
+                // a hit skips execution: outputs reused, accounting zeroed
+                res.passes = 0;
+                res.cycles = 0;
+                res.energy_j = 0.0;
+                res.memory = Default::default();
+                Probe::Hit(res)
+            }
+            None => Probe::Miss(Some((weight_fp, act_fp))),
+        }
+    }
+
+    fn store(
+        &mut self,
+        key: Option<(u128, u128)>,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+        res: &CoSimResult,
+    ) {
+        if let Some((weight_fp, act_fp)) = key {
+            self.cache.insert(weight_fp, act_fp, mode, runtime_interleave, res.clone());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::partitioner::ShardSplit;
+    use crate::testutil::Rng;
+    use std::sync::Arc;
+
+    fn cluster(cores: usize, split: ShardSplit, n: usize) -> ClusterScheduler {
+        ClusterScheduler::new(
+            Architecture::Adip,
+            n,
+            Backend::Functional,
+            ClusterConfig::with_cores(cores).with_split(split),
+        )
+    }
+
+    #[test]
+    fn sharded_gemm_bit_exact_across_splits() {
+        let mut rng = Rng::seeded(51);
+        let a = Mat::random(&mut rng, 48, 40, 8);
+        let b = Mat::random(&mut rng, 40, 32, 2);
+        let want = a.matmul(&b);
+        for split in ShardSplit::ALL {
+            let mut c = cluster(3, split, 8);
+            let run = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+            assert_eq!(run.result.outputs[0], want, "{split}");
+            assert!(run.shards > 1, "{split}: expected sharding");
+            assert_eq!(run.per_core_cycles.len(), run.shards);
+            assert_eq!(
+                run.result.cycles,
+                *run.per_core_cycles.iter().max().unwrap(),
+                "{split}: cluster latency = max over cores"
+            );
+        }
+    }
+
+    #[test]
+    fn single_core_cluster_matches_bare_core() {
+        let mut rng = Rng::seeded(53);
+        let a = Mat::random(&mut rng, 24, 24, 8);
+        let b1 = Mat::random(&mut rng, 24, 24, 4);
+        let b2 = Mat::random(&mut rng, 24, 24, 4);
+        let mut one = cluster(1, ShardSplit::M, 8);
+        let mut core = CoreScheduler::with_backend(Architecture::Adip, 8, Backend::Functional);
+        let cr = one.run_gemm_set(&a, &[&b1, &b2], PrecisionMode::W4, false).unwrap();
+        let sr = core.run_set(&a, &[&b1, &b2], PrecisionMode::W4, false).unwrap();
+        assert_eq!(cr.result.outputs, sr.outputs);
+        assert_eq!(cr.result.cycles, sr.cycles);
+        assert_eq!(cr.result.passes, sr.passes);
+        assert_eq!(cr.result.memory, sr.memory);
+        assert_eq!(cr.shards, 1);
+    }
+
+    #[test]
+    fn execute_batch_attribution_matches_core_scheduler() {
+        let mut rng = Rng::seeded(55);
+        let a = Arc::new(Mat::random(&mut rng, 16, 16, 8));
+        let reqs: Vec<MatmulRequest> = (0..2)
+            .map(|i| MatmulRequest {
+                id: i,
+                input_id: 1,
+                a: a.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, 16, 16, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            })
+            .collect();
+        let refs: Vec<&MatmulRequest> = reqs.iter().collect();
+        let mut c = cluster(1, ShardSplit::M, 8);
+        let mut core = CoreScheduler::new(Architecture::Adip, 8);
+        let from_cluster = c.execute_batch(&refs, false).unwrap();
+        let from_core = core.execute_batch(&refs, false).unwrap();
+        for (x, y) in from_cluster.iter().zip(&from_core) {
+            assert_eq!(x.outputs, y.outputs);
+            assert_eq!(x.metrics.cycles, y.metrics.cycles);
+            assert_eq!(x.metrics.passes, y.metrics.passes);
+            assert_eq!(x.metrics.batched, y.metrics.batched);
+        }
+    }
+
+    #[test]
+    fn repeated_run_hits_cache_and_reports_zero_cycles() {
+        let mut rng = Rng::seeded(57);
+        let a = Mat::random(&mut rng, 64, 32, 8);
+        let b = Mat::random(&mut rng, 32, 32, 2);
+        let mut c = ClusterScheduler::new(
+            Architecture::Adip,
+            8,
+            Backend::Functional,
+            ClusterConfig::with_cores(2).with_cache(32),
+        );
+        let cold = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(cold.cache.hits, 0);
+        assert!(cold.cache.misses > 0);
+        assert!(cold.result.cycles > 0);
+        let warm = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(warm.result.outputs, cold.result.outputs, "hits must be bit-exact");
+        assert_eq!(warm.cache.hits, cold.cache.misses, "every shard served from cache");
+        assert_eq!(warm.result.cycles, 0, "fully cached run skips execution");
+        assert_eq!(warm.result.memory, Default::default());
+        // different activation, same weights: misses into fresh entries
+        let a2 = Mat::random(&mut rng, 64, 32, 8);
+        let other = c.run_gemm(&a2, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(other.cache.hits, 0);
+        assert_eq!(other.result.outputs[0], a2.matmul(&b));
+    }
+
+    #[test]
+    fn rejects_malformed_sets_like_a_single_core() {
+        let a = Mat::zeros(16, 16);
+        let short = Mat::zeros(8, 16);
+        let mut c = cluster(2, ShardSplit::M, 8);
+        let none: Vec<&Mat> = vec![];
+        assert!(c.run_gemm_set(&a, &none, PrecisionMode::W8, false).is_err());
+        assert!(c.run_gemm(&a, &short, PrecisionMode::W8, false).is_err());
+        assert!(c
+            .run_gemm_set(&a, &[&a, &short], PrecisionMode::W8, false)
+            .is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Weight-tile result cache: skip re-executing shards whose stationary
+//! weights (and activation) were already run through a core.
+//!
+//! Transformer serving repeats the same projection weights every layer
+//! invocation; when the *same request* recurs (identical activation too —
+//! re-served prompts, replayed traces, retries), the shard's outputs are
+//! already known and re-execution is pure waste. The cache is keyed by
+//! the `(weight-tile fingerprint, precision mode, runtime-interleave
+//! flag)` triple *extended with the activation fingerprint*: the
+//! cluster's bit-exactness invariant requires a hit to reproduce the
+//! uncached outputs exactly, so a weight match under a different
+//! activation is simply a miss that occupies its own entry. (Folding the
+//! activation into the key — rather than qualifying a weights-only entry
+//! — also keeps M-split shards distinct: their weight slices are
+//! identical full copies of `B` and only their activation slices differ.)
+//!
+//! **Accounting rule:** a hit contributes *zero* simulated cycles, energy
+//! and memory traffic — the execution is skipped entirely — and is
+//! reported through the `cache_hits` / `cache_misses` / `cache_evictions`
+//! counters (surfaced in [`crate::coordinator::Metrics`]). A cold cache is
+//! therefore accounting-neutral: misses change nothing, so the cluster's
+//! analytical-estimate equality holds whenever no hit occurs.
+//!
+//! Fingerprints are 128-bit (two independently-seeded FNV-1a streams over
+//! dimensions + elements). A collision would violate bit-exactness; at
+//! ~2⁻¹²⁸ per pair this is accepted and documented rather than re-verified.
+
+use std::collections::HashMap;
+
+use crate::dataflow::Mat;
+use crate::quant::PrecisionMode;
+use crate::sim::CoSimResult;
+
+/// Weight-cache configuration (`capacity` entries; 0 disables the cache).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheConfig {
+    /// Maximum live entries before LRU eviction; 0 = caching off.
+    pub capacity: usize,
+}
+
+impl CacheConfig {
+    /// Whether the cache is enabled at all.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+}
+
+/// Cumulative cache counters (monotonic; diff snapshots for per-run deltas).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that missed (unknown weights, activation, or mode).
+    pub misses: u64,
+    /// Live entries removed under LRU capacity pressure.
+    pub evictions: u64,
+    /// Current live entries.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// `self - earlier`, for per-run deltas (entries carried as-is).
+    pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+            evictions: self.evictions - earlier.evictions,
+            entries: self.entries,
+        }
+    }
+}
+
+/// 128-bit fingerprint over a list of matrices (dims + every element).
+pub fn fingerprint(mats: &[&Mat]) -> u128 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut lo = OFFSET;
+    let mut hi = OFFSET ^ 0x9e37_79b9_7f4a_7c15; // independent second stream
+    let mut mix = |v: u64| {
+        lo = (lo ^ v).wrapping_mul(PRIME);
+        hi = (hi ^ v.rotate_left(23)).wrapping_mul(PRIME);
+    };
+    for m in mats {
+        mix(m.rows() as u64);
+        mix(m.cols() as u64);
+        for &v in m.as_slice() {
+            mix(v as u32 as u64);
+        }
+    }
+    ((hi as u128) << 64) | lo as u128
+}
+
+/// Fold per-operand fingerprints into one order-sensitive set fingerprint
+/// (128-bit FNV-1a over the element fingerprints). Lets callers memoize
+/// the per-matrix hashes — e.g. the cluster scheduler hashes a borrowed
+/// full weight set once per run instead of once per shard.
+pub fn combine_fingerprints<I: IntoIterator<Item = u128>>(fps: I) -> u128 {
+    const OFFSET: u128 = 0x6c62_272e_07bb_0142_62b8_2175_6295_c58d;
+    const PRIME: u128 = 0x0000_0000_0100_0000_0000_0000_0000_013b;
+    let mut h = OFFSET;
+    for fp in fps {
+        h ^= fp;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Cache key: the stationary weight set of one shard, as executed, plus
+/// the activation fingerprint that makes a hit bit-exact by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct WeightKey {
+    weight_fp: u128,
+    act_fp: u128,
+    mode: PrecisionMode,
+    runtime_interleave: bool,
+}
+
+struct Entry {
+    result: CoSimResult,
+    stamp: u64,
+}
+
+/// LRU map from weight-tile fingerprints to shard execution results.
+pub struct WeightCache {
+    cfg: CacheConfig,
+    map: HashMap<WeightKey, Entry>,
+    clock: u64,
+    stats: CacheStats,
+}
+
+impl WeightCache {
+    /// Empty cache under `cfg`.
+    pub fn new(cfg: CacheConfig) -> WeightCache {
+        WeightCache { cfg, map: HashMap::new(), clock: 0, stats: CacheStats::default() }
+    }
+
+    /// Whether lookups can ever hit.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Cumulative counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { entries: self.map.len(), ..self.stats }
+    }
+
+    /// Look up a shard execution. A hit returns the cached result (outputs
+    /// are bit-exact by key construction) and counts `hits`; any miss
+    /// counts `misses`.
+    pub fn lookup(
+        &mut self,
+        weight_fp: u128,
+        act_fp: u128,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Option<CoSimResult> {
+        if !self.enabled() {
+            return None;
+        }
+        let key = WeightKey { weight_fp, act_fp, mode, runtime_interleave };
+        self.clock += 1;
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                e.stamp = self.clock;
+                self.stats.hits += 1;
+                Some(e.result.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert the result of an executed shard, evicting the
+    /// least-recently-used entries while over capacity.
+    pub fn insert(
+        &mut self,
+        weight_fp: u128,
+        act_fp: u128,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+        result: CoSimResult,
+    ) {
+        if !self.enabled() {
+            return;
+        }
+        let key = WeightKey { weight_fp, act_fp, mode, runtime_interleave };
+        self.clock += 1;
+        // A same-key insert (duplicate shards in one run, all probed before
+        // any executes) replaces a bit-identical result — not an eviction.
+        self.map.insert(key, Entry { result, stamp: self.clock });
+        while self.map.len() > self.cfg.capacity {
+            // O(capacity) victim scan — accepted: capacities are small
+            // (≤ ~512) and the scan is dwarfed by the operand hashing a
+            // miss already paid; revisit with an ordered index if
+            // capacities grow.
+            let lru = *self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| k)
+                .expect("non-empty over-capacity map");
+            self.map.remove(&lru);
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::MemoryCounters;
+    use crate::testutil::Rng;
+
+    fn result(cycles: u64) -> CoSimResult {
+        CoSimResult {
+            outputs: vec![Mat::zeros(2, 2)],
+            passes: 1,
+            cycles,
+            energy_j: 1e-9,
+            memory: MemoryCounters::default(),
+        }
+    }
+
+    #[test]
+    fn fingerprint_discriminates_content_and_shape() {
+        let mut rng = Rng::seeded(41);
+        let a = Mat::random(&mut rng, 6, 6, 8);
+        let mut b = a.clone();
+        b.set(3, 3, b.get(3, 3) ^ 1);
+        assert_ne!(fingerprint(&[&a]), fingerprint(&[&b]));
+        let flat = Mat::zeros(4, 9);
+        let tall = Mat::zeros(9, 4);
+        assert_ne!(fingerprint(&[&flat]), fingerprint(&[&tall]));
+        // order of matrices matters (Q/K/V are distinct slots)
+        assert_ne!(fingerprint(&[&a, &flat]), fingerprint(&[&flat, &a]));
+        assert_eq!(fingerprint(&[&a]), fingerprint(&[&a.clone()]));
+    }
+
+    #[test]
+    fn hit_requires_matching_activation() {
+        let mut c = WeightCache::new(CacheConfig { capacity: 4 });
+        c.insert(1, 100, PrecisionMode::W2, false, result(10));
+        assert!(c.lookup(1, 100, PrecisionMode::W2, false).is_some());
+        assert!(c.lookup(1, 200, PrecisionMode::W2, false).is_none(), "other activation");
+        assert!(c.lookup(1, 100, PrecisionMode::W4, false).is_none(), "other mode");
+        assert!(c.lookup(1, 100, PrecisionMode::W2, true).is_none(), "other interleave");
+        assert!(c.lookup(2, 100, PrecisionMode::W2, false).is_none(), "other weights");
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 4, 1));
+    }
+
+    #[test]
+    fn lru_eviction_under_capacity_pressure() {
+        let mut c = WeightCache::new(CacheConfig { capacity: 2 });
+        c.insert(1, 1, PrecisionMode::W8, false, result(1));
+        c.insert(2, 1, PrecisionMode::W8, false, result(2));
+        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some()); // touch 1: 2 is now LRU
+        c.insert(3, 1, PrecisionMode::W8, false, result(3));
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.lookup(2, 1, PrecisionMode::W8, false).is_none(), "2 evicted as LRU");
+        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
+        // same weights under a new activation occupy their own entry
+        // (bit-exactness: the activation is part of the key), evicting the
+        // LRU entry (3) — the old (1, act 1) result still hits
+        c.insert(1, 9, PrecisionMode::W8, false, result(4));
+        assert_eq!(c.stats().evictions, 2);
+        assert!(c.lookup(1, 9, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(3, 1, PrecisionMode::W8, false).is_none(), "3 evicted as LRU");
+        assert_eq!(c.stats().entries, 2);
+    }
+
+    #[test]
+    fn identical_weight_slices_with_distinct_activations_coexist() {
+        // The M-split shape: every shard's weight slice is the same full
+        // copy of B (equal weight_fp) while activation slices differ —
+        // each shard must get its own entry, not displace its siblings.
+        let mut c = WeightCache::new(CacheConfig { capacity: 8 });
+        c.insert(7, 100, PrecisionMode::W2, false, result(1));
+        c.insert(7, 200, PrecisionMode::W2, false, result(2));
+        assert_eq!(c.stats().evictions, 0);
+        assert_eq!(c.stats().entries, 2);
+        assert!(c.lookup(7, 100, PrecisionMode::W2, false).is_some());
+        assert!(c.lookup(7, 200, PrecisionMode::W2, false).is_some());
+        assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn disabled_cache_never_stores() {
+        let mut c = WeightCache::new(CacheConfig::default());
+        assert!(!c.enabled());
+        c.insert(1, 1, PrecisionMode::W8, false, result(1));
+        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_none());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn combined_fingerprints_are_order_sensitive() {
+        let (a, b) = (1u128 << 100 | 7, 9u128 << 60 | 3);
+        assert_ne!(combine_fingerprints([a, b]), combine_fingerprints([b, a]));
+        assert_ne!(combine_fingerprints([a]), combine_fingerprints([a, a]));
+        assert_eq!(combine_fingerprints([a, b]), combine_fingerprints([a, b]));
+    }
+
+    #[test]
+    fn stats_delta() {
+        let mut c = WeightCache::new(CacheConfig { capacity: 2 });
+        c.insert(1, 1, PrecisionMode::W8, false, result(1));
+        let before = c.stats();
+        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(9, 1, PrecisionMode::W8, false).is_none());
+        let d = c.stats().delta_since(&before);
+        assert_eq!((d.hits, d.misses), (1, 1));
+    }
+}

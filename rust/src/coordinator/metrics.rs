@@ -49,6 +49,12 @@ pub struct Metrics {
     pub passes: AtomicU64,
     /// Total simulated memory traffic (paper policy bytes).
     pub memory_bytes: AtomicU64,
+    /// Weight-tile cache hits (shards served without re-execution).
+    pub cache_hits: AtomicU64,
+    /// Weight-tile cache misses (shards that executed).
+    pub cache_misses: AtomicU64,
+    /// Weight-tile cache evictions (LRU capacity pressure).
+    pub cache_evictions: AtomicU64,
     /// Current queue depth.
     pub queue_depth: AtomicU64,
     sim_energy_j: AtomicF64,
@@ -67,6 +73,14 @@ impl Metrics {
         self.memory_bytes.fetch_add(memory_bytes, Ordering::Relaxed);
         self.passes.fetch_add(passes, Ordering::Relaxed);
         self.sim_energy_j.add(energy_j);
+    }
+
+    /// Record weight-tile cache activity (per-batch deltas from a worker's
+    /// cluster scheduler).
+    pub fn record_cache(&self, hits: u64, misses: u64, evictions: u64) {
+        self.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.cache_misses.fetch_add(misses, Ordering::Relaxed);
+        self.cache_evictions.fetch_add(evictions, Ordering::Relaxed);
     }
 
     /// Cap on retained latency samples (oldest kept; enough for stable
@@ -136,6 +150,12 @@ impl Metrics {
         s.push_str(&c("sim_cycles_total", self.sim_cycles.load(Ordering::Relaxed)));
         s.push_str(&c("tile_passes_total", self.passes.load(Ordering::Relaxed)));
         s.push_str(&c("sim_memory_bytes_total", self.memory_bytes.load(Ordering::Relaxed)));
+        s.push_str(&c("weight_cache_hits_total", self.cache_hits.load(Ordering::Relaxed)));
+        s.push_str(&c("weight_cache_misses_total", self.cache_misses.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "weight_cache_evictions_total",
+            self.cache_evictions.load(Ordering::Relaxed),
+        ));
         s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
         s.push_str(&format!("adip_sim_energy_joules_total {:.6e}\n", self.energy_j()));
         s.push_str(&format!("adip_queue_seconds_mean {:.6e}\n", self.mean_queue_seconds()));
@@ -211,10 +231,24 @@ mod tests {
             "adip_requests_rejected_total",
             "adip_batches_fused_total",
             "adip_sim_energy_joules_total",
+            "adip_weight_cache_hits_total",
+            "adip_weight_cache_misses_total",
+            "adip_weight_cache_evictions_total",
             "adip_queue_depth",
         ] {
             assert!(text.contains(key), "{key} missing from:\n{text}");
         }
+    }
+
+    #[test]
+    fn cache_counters_accumulate_and_render() {
+        let m = Metrics::default();
+        m.record_cache(3, 2, 1);
+        m.record_cache(1, 0, 0);
+        assert_eq!(m.cache_hits.load(Ordering::Relaxed), 4);
+        assert_eq!(m.cache_misses.load(Ordering::Relaxed), 2);
+        assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 1);
+        assert!(m.render().contains("adip_weight_cache_hits_total 4"));
     }
 
     #[test]

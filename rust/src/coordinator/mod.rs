@@ -15,7 +15,10 @@
 //!   modes.
 //! * [`scheduler`] — turns batches into tile schedules on a core.
 //! * [`server`] — the bounded-queue, multi-worker coordinator with
-//!   backpressure and graceful shutdown.
+//!   backpressure and graceful shutdown. Each worker owns a
+//!   [`crate::cluster::ClusterScheduler`] (a degenerate 1-core cluster by
+//!   default), so `CoordinatorConfig::cluster` can shard every request
+//!   across a mesh of cores and cache repeated weight tiles.
 //! * [`metrics`] — atomic counters with a Prometheus-style text dump.
 
 pub mod batcher;

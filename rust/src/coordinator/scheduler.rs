@@ -10,7 +10,8 @@
 
 use crate::arch::{build_array, ArchConfig, Architecture, Backend, SystolicArray};
 use crate::dataflow::Mat;
-use crate::sim::cosim::CoSim;
+use crate::quant::PrecisionMode;
+use crate::sim::cosim::{CoSim, CoSimResult};
 
 use super::precision::select_mode;
 use super::request::{MatmulRequest, ResponseMetrics};
@@ -33,7 +34,10 @@ pub struct MemberResult {
 
 impl CoreScheduler {
     /// Build a core for an architecture at size `n` with the default
-    /// (functional) backend.
+    /// backend — `Backend::Functional`, matching
+    /// [`super::CoordinatorConfig::default`]'s serving defaults (functional
+    /// backend, one core): a bare `CoreScheduler` and a default
+    /// single-core cluster produce byte-identical accounting.
     pub fn new(arch: Architecture, n: usize) -> CoreScheduler {
         CoreScheduler::with_backend(arch, n, Backend::default())
     }
@@ -56,6 +60,22 @@ impl CoreScheduler {
         self.backend
     }
 
+    /// Execute one shared-input GEMM set directly on this core, returning
+    /// the raw (un-attributed) co-simulation result. This is the shard
+    /// execution primitive the cluster scheduler
+    /// ([`crate::cluster::ClusterScheduler`]) dispatches to its worker
+    /// pool; [`CoreScheduler::execute_batch`] layers per-member
+    /// attribution on top of it.
+    pub fn run_set(
+        &mut self,
+        a: &Mat,
+        bs: &[&Mat],
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> anyhow::Result<CoSimResult> {
+        self.cosim.run_gemm_set(a, bs, mode, runtime_interleave)
+    }
+
     /// Execute a batch of fused requests (all sharing `members[0].a`).
     /// Returns one [`MemberResult`] per member, in order.
     pub fn execute_batch(
@@ -68,38 +88,47 @@ impl CoreScheduler {
         let mode = select_mode(first.weight_bits, first.act_act);
         let a: &Mat = &first.a;
         let bs: Vec<&Mat> = members.iter().flat_map(|m| m.bs.iter().map(|b| b.as_ref())).collect();
-        let total = bs.len() as u64;
-
         let res = self.cosim.run_gemm_set(a, &bs, mode, runtime_interleave)?;
-        let fused = members.len() > 1 || first.bs.len() > 1;
-
-        // split outputs back per member; attribute accounting by share
-        let mut out = Vec::with_capacity(members.len());
-        let mut cursor = 0usize;
-        for m in members {
-            let n_b = m.bs.len();
-            let share = n_b as f64 / total as f64;
-            let outputs = res.outputs[cursor..cursor + n_b].to_vec();
-            cursor += n_b;
-            let mut mem = res.memory;
-            mem.act_read_bytes = (mem.act_read_bytes as f64 * share) as u64;
-            mem.weight_read_bytes = (mem.weight_read_bytes as f64 * share) as u64;
-            mem.output_write_bytes = (mem.output_write_bytes as f64 * share) as u64;
-            out.push(MemberResult {
-                outputs,
-                metrics: ResponseMetrics {
-                    cycles: (res.cycles as f64 * share).round() as u64,
-                    energy_j: res.energy_j * share,
-                    memory: mem,
-                    passes: (res.passes as f64 * share).round() as u64,
-                    queue_seconds: 0.0,
-                    service_seconds: 0.0,
-                    batched: fused,
-                },
-            });
-        }
-        Ok(out)
+        Ok(attribute_members(members, &res))
     }
+}
+
+/// Split a fused run's outputs back per member and attribute accounting
+/// proportionally to each member's matrix count (the shared activation
+/// traffic is genuinely shared — see the module docs). Used by both the
+/// single-core and the cluster execution paths so their per-request
+/// accounting is identical.
+pub(crate) fn attribute_members(
+    members: &[&MatmulRequest],
+    res: &CoSimResult,
+) -> Vec<MemberResult> {
+    let total: u64 = members.iter().map(|m| m.bs.len() as u64).sum();
+    let fused = members.len() > 1 || members[0].bs.len() > 1;
+    let mut out = Vec::with_capacity(members.len());
+    let mut cursor = 0usize;
+    for m in members {
+        let n_b = m.bs.len();
+        let share = n_b as f64 / total as f64;
+        let outputs = res.outputs[cursor..cursor + n_b].to_vec();
+        cursor += n_b;
+        let mut mem = res.memory;
+        mem.act_read_bytes = (mem.act_read_bytes as f64 * share) as u64;
+        mem.weight_read_bytes = (mem.weight_read_bytes as f64 * share) as u64;
+        mem.output_write_bytes = (mem.output_write_bytes as f64 * share) as u64;
+        out.push(MemberResult {
+            outputs,
+            metrics: ResponseMetrics {
+                cycles: (res.cycles as f64 * share).round() as u64,
+                energy_j: res.energy_j * share,
+                memory: mem,
+                passes: (res.passes as f64 * share).round() as u64,
+                queue_seconds: 0.0,
+                service_seconds: 0.0,
+                batched: fused,
+            },
+        });
+    }
+    out
 }
 
 #[cfg(test)]

@@ -19,20 +19,26 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::arch::{Architecture, Backend};
+use crate::cluster::{ClusterConfig, ClusterScheduler};
 
 use super::batcher::form_batches;
 use super::metrics::Metrics;
 use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
-use super::scheduler::CoreScheduler;
 
 /// Coordinator configuration.
+///
+/// The defaults are the serving defaults everywhere in the crate:
+/// `Backend::Functional` execution and a degenerate single-core cluster
+/// per worker (no sharding, weight cache off) — byte-identical accounting
+/// to the pre-cluster coordinator, so existing callers that spread
+/// `..Default::default()` keep their behavior.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
     /// Architecture each core simulates.
     pub arch: Architecture,
     /// Array size per core.
     pub n: usize,
-    /// Worker threads (simulated cores).
+    /// Worker threads (each owns one simulated cluster of cores).
     pub workers: usize,
     /// Ingress queue capacity (backpressure bound).
     pub queue_capacity: usize,
@@ -43,6 +49,9 @@ pub struct CoordinatorConfig {
     /// `Backend::CycleAccurate` for calibration/validation runs where the
     /// register-level golden path must execute every request.
     pub backend: Backend,
+    /// Per-worker cluster execution: shard count, split axis and weight
+    /// cache (default: 1 core, M split, cache off).
+    pub cluster: ClusterConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -54,6 +63,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 256,
             batch_window: 16,
             backend: Backend::Functional,
+            cluster: ClusterConfig::default(),
         }
     }
 }
@@ -208,11 +218,21 @@ fn router_loop(
 }
 
 fn worker_loop(rx: Receiver<WorkItem>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
-    let mut core = CoreScheduler::with_backend(cfg.arch, cfg.n, cfg.backend);
+    let mut core = ClusterScheduler::new(cfg.arch, cfg.n, cfg.backend, cfg.cluster);
+    let mut cache_seen = core.cache_stats();
     while let Ok(item) = rx.recv() {
         let started = Instant::now();
         let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
-        match core.execute_batch(&members, item.runtime_interleave) {
+        let outcome = core.execute_batch(&members, item.runtime_interleave);
+        // flush cache activity regardless of batch outcome (a failed batch
+        // may still have probed or populated the cache)
+        let cache_now = core.cache_stats();
+        let d = cache_now.delta_since(&cache_seen);
+        cache_seen = cache_now;
+        if d.hits + d.misses + d.evictions > 0 {
+            metrics.record_cache(d.hits, d.misses, d.evictions);
+        }
+        match outcome {
             Ok(results) => {
                 let service = started.elapsed().as_secs_f64() / results.len() as f64;
                 for (env, mut res) in item.envelopes.iter().zip(results) {

@@ -26,6 +26,10 @@
 //! * [`coordinator`] — the L3 serving layer: request router, shared-input
 //!   batcher (the asymmetric multi-matrix mode), tile scheduler,
 //!   backpressure and metrics.
+//! * [`cluster`] — multi-core execution: shards one GEMM (or shared-input
+//!   set) across a pool of array cores with a shared weight-tile cache,
+//!   merging outputs bit-exactly and accounting per the max/sum/broadcast
+//!   attribution rules (see `cluster/mod.rs` for the invariants).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) from the request path.
 //! * [`report`] — regenerates every table and figure of the paper’s
@@ -36,6 +40,7 @@
 
 pub mod analytical;
 pub mod arch;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;

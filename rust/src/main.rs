@@ -6,6 +6,7 @@
 //! adip all [--csv=true] [--out=DIR]                    every table + figure
 //! adip run   [--model=bitnet] [--arch=adip] [--n=32]   evaluate a workload
 //! adip gemm  [--m=..] [--k=..] [--ncols=..] [--mode=8x2] [--arch=adip] [--n=8]
+//! adip cluster [--cores=4] [--split=m] [--weight-cache=64] [--repeat=2]
 //! adip serve [--requests=64] [--workers=2] [--n=16] [--queue=256]
 //! adip artifacts [--dir=artifacts]                     PJRT runtime self-test
 //! ```
@@ -15,7 +16,10 @@
 
 use std::sync::Arc;
 
+use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
+use adip::analytical::gemm::MemoryPolicy;
 use adip::arch::{Architecture, Backend};
+use adip::cluster::{ClusterConfig, ClusterScheduler, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
 use adip::dataflow::Mat;
@@ -57,6 +61,7 @@ fn run() -> Result<()> {
         "all" => cmd_all(&cfg)?,
         "run" => cmd_run(&cfg)?,
         "gemm" => cmd_gemm(&cfg)?,
+        "cluster" => cmd_cluster(&cfg)?,
         "serve" => cmd_serve(&cfg)?,
         "trace" => cmd_trace(&cfg)?,
         "artifacts" => cmd_artifacts(&cfg)?,
@@ -75,14 +80,20 @@ commands:
   all              every artifact (--csv=true for CSV, --out=DIR to write files)
   run              evaluate an attention workload (--model, --arch, --n)
   gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n/--backend)
+  cluster          shard one GEMM across a core mesh (--cores/--split/--weight-cache/--repeat)
   serve            coordinator demo (--requests/--workers/--n/--queue/--backend)
-  trace            trace-driven serving (--model/--layers/--rate/--workers/--backend)
+  trace            trace-driven serving (--model/--layers/--rate/--workers/--backend/--invocations)
   artifacts        PJRT runtime self-test (--dir=artifacts)
   help             this text
 
 backends (--backend=functional|cycle):
   functional       direct O(M*K*N) GEMM + analytical timing (default, fast)
   cycle            register-level cycle simulation (golden reference, slow)
+
+cluster flags (cluster/serve/trace):
+  --cores=P        array cores per cluster (serve/trace: per worker; default 1)
+  --split=m|n|k    GEMM dimension sharded across cores (default m)
+  --weight-cache=C weight-tile result cache capacity in entries (0 = off)
 ";
 
 fn parse_arch(cfg: &Config) -> Result<Architecture> {
@@ -99,6 +110,16 @@ fn parse_backend(cfg: &Config) -> Result<Backend> {
         None => Ok(Backend::Functional),
         Some(raw) => raw.parse::<Backend>().map_err(|e| anyhow!("--backend: {e}")),
     }
+}
+
+fn parse_cluster(cfg: &Config) -> Result<ClusterConfig> {
+    let split = match cfg.get("split") {
+        None => ShardSplit::default(),
+        Some(raw) => raw.parse::<ShardSplit>().map_err(|e| anyhow!("--split: {e}"))?,
+    };
+    Ok(ClusterConfig::with_cores(cfg.get_usize("cores", 1)?)
+        .with_split(split)
+        .with_cache(cfg.get_usize("weight-cache", 0)?))
 }
 
 fn cmd_all(cfg: &Config) -> Result<()> {
@@ -169,6 +190,86 @@ fn cmd_gemm(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// `adip cluster` — shard one GEMM across a mesh of array cores, verify it
+/// bit-exact against the single-core run and the closed-form cluster
+/// estimate, and report the scaling (optionally over `--repeat` identical
+/// runs to demonstrate the weight cache).
+fn cmd_cluster(cfg: &Config) -> Result<()> {
+    let m = cfg.get_usize("m", 256)?;
+    let k = cfg.get_usize("k", 256)?;
+    let ncols = cfg.get_usize("ncols", 256)?;
+    let n = cfg.get_usize("n", 32)?;
+    let mode = cfg.get_mode("mode", PrecisionMode::W2)?;
+    let arch = parse_arch(cfg)?;
+    let backend = parse_backend(cfg)?;
+    let cluster = parse_cluster(cfg)?;
+    let repeat = cfg.get_usize("repeat", 1)?.max(1);
+
+    let mut rng = Rng::seeded(cfg.get_usize("seed", 42)? as u64);
+    let a = Mat::random(&mut rng, m, k, 8);
+    let b = Mat::random(&mut rng, k, ncols, mode.weight_bits());
+
+    let mut single = ClusterScheduler::new(arch, n, backend, ClusterConfig::default());
+    let baseline = single.run_gemm(&a, &b, mode, false)?;
+    let want = a.matmul(&b);
+    let mut mesh = ClusterScheduler::new(arch, n, backend, cluster);
+
+    println!(
+        "GEMM {m}x{k}x{ncols} on {arch} {n}x{n} ({mode}, {backend}) | cluster: {} cores, {}-split, cache {}",
+        cluster.effective_cores(),
+        cluster.split,
+        if cluster.cache.enabled() { format!("{} entries", cluster.cache.capacity) } else { "off".into() },
+    );
+    let mut first_cycles = 0u64;
+    for round in 0..repeat {
+        let t0 = std::time::Instant::now();
+        let run = mesh.run_gemm(&a, &b, mode, false)?;
+        let host = t0.elapsed();
+        anyhow::ensure!(
+            run.result.outputs == baseline.result.outputs,
+            "cluster output != single-core output"
+        );
+        anyhow::ensure!(run.result.outputs[0] == want, "cluster output != i32 reference GEMM");
+        if round == 0 {
+            first_cycles = run.result.cycles;
+        }
+        println!(
+            "  round {round}: shards {} | cycles {:>10} | per-core {:?} | cache {}h/{}m | host {:.1} ms",
+            run.shards,
+            run.result.cycles,
+            run.per_core_cycles,
+            run.cache.hits,
+            run.cache.misses,
+            host.as_secs_f64() * 1e3
+        );
+    }
+
+    let shape = GemmShape::new(m, k, ncols);
+    let acfg = adip::arch::ArchConfig::with_n(n);
+    let est = estimate_cluster(arch, &acfg, shape, 1, mode, &cluster, MemoryPolicy::default());
+    let est_single = estimate_gemm(arch, &acfg, shape, mode, MemoryPolicy::default());
+    // round 0 is always cold (misses are accounting-neutral), so it must
+    // equal the closed form regardless of the cache setting
+    anyhow::ensure!(
+        first_cycles == est.cycles,
+        "cold-run cluster cycles {first_cycles} != analytical estimate {}",
+        est.cycles
+    );
+    println!("  analytical:  cluster {} cycles (single-core {})", est.cycles, est_single.cycles);
+    println!(
+        "  speedup:     {:.2}x over 1 core | parallel efficiency {:.1}% | {:.0} ops/cycle",
+        est.speedup_vs(&est_single),
+        est.parallel_efficiency(&est_single) * 100.0,
+        est.ops_per_cycle()
+    );
+    println!(
+        "  latency:     {:.3} ms -> {:.3} ms @ 1 GHz | verified: bit-exact vs single core + reference",
+        est_single.cycles as f64 / 1e6,
+        est.cycles as f64 / 1e6
+    );
+    Ok(())
+}
+
 fn cmd_serve(cfg: &Config) -> Result<()> {
     let requests = cfg.get_usize("requests", 64)?;
     let workers = cfg.get_usize("workers", 2)?;
@@ -181,6 +282,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         queue_capacity: queue,
         batch_window: cfg.get_usize("window", 16)?,
         backend: parse_backend(cfg)?,
+        cluster: parse_cluster(cfg)?,
     });
     let mut rng = Rng::seeded(7);
     let mut rxs = Vec::new();
@@ -221,7 +323,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
 }
 
 fn cmd_trace(cfg: &Config) -> Result<()> {
-    use adip::workload::{attention_trace, TraceConfig};
+    use adip::workload::{attention_trace, repeated_attention_trace, TraceConfig};
     let model_name = cfg.get("model").unwrap_or("bitnet");
     let model = TransformerModel::by_name(model_name)
         .ok_or_else(|| anyhow!("unknown model {model_name:?} (gpt2|bert|bitnet)"))?;
@@ -232,7 +334,15 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         layers: cfg.get_usize("layers", 8)?,
         heads: cfg.get_usize("heads", 2)?,
     };
-    let trace = attention_trace(&model, &tcfg, cfg.get_usize("seed", 1)? as u64);
+    let seed = cfg.get_usize("seed", 1)? as u64;
+    // --invocations=I > 1 replays identical layer invocations (the
+    // repeated-weights workload the --weight-cache serves from)
+    let invocations = cfg.get_usize("invocations", 1)?.max(1);
+    let trace = if invocations > 1 {
+        repeated_attention_trace(&model, &tcfg, seed, invocations)
+    } else {
+        attention_trace(&model, &tcfg, seed)
+    };
     let coord = Coordinator::start(CoordinatorConfig {
         arch: parse_arch(cfg)?,
         n: cfg.get_usize("n", 32)?,
@@ -240,6 +350,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         queue_capacity: cfg.get_usize("queue", 1024)?,
         batch_window: cfg.get_usize("window", 8)?,
         backend: parse_backend(cfg)?,
+        cluster: parse_cluster(cfg)?,
     });
     println!(
         "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",
@@ -279,6 +390,12 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         "fused batches: {} / {}",
         m.fused_batches.load(std::sync::atomic::Ordering::Relaxed),
         m.batches.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    println!(
+        "weight cache:  {} hits / {} misses / {} evictions",
+        m.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
+        m.cache_misses.load(std::sync::atomic::Ordering::Relaxed),
+        m.cache_evictions.load(std::sync::atomic::Ordering::Relaxed)
     );
     coord.shutdown();
     Ok(())

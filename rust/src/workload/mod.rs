@@ -11,4 +11,4 @@ pub mod trace;
 
 pub use models::{bert_large, bitnet_1_58b, gpt2_medium, TransformerModel};
 pub use stages::{AttentionStage, StageWorkload};
-pub use trace::{attention_trace, TraceConfig, TracedRequest};
+pub use trace::{attention_trace, repeated_attention_trace, TraceConfig, TracedRequest};

@@ -1,0 +1,423 @@
+//! Cluster differential conformance suite.
+//!
+//! Extends the repo's backend policy (`rust/src/arch/mod.rs`) to the
+//! cluster execution path: sharding a GEMM across a mesh of cores must be
+//! invisible in the numerics and exactly stated by the closed forms.
+//! Randomized over shard splits × core counts × precisions × batch modes
+//! × architectures, this suite asserts:
+//!
+//! * cluster outputs are **bit-exact** vs the single-core run (and the
+//!   i32 reference GEMM) on both backends,
+//! * cluster cycle/pass/memory accounting equals
+//!   [`estimate_cluster`] (latency = max over cores, passes summed,
+//!   broadcast activation traffic counted once),
+//! * the functional and cycle-accurate cluster paths agree with each
+//!   other,
+//! * the weight cache reports hits on a repeated-weights Transformer
+//!   trace with outputs identical to the uncached run,
+//! * the paper's 64×64 peak-TOPS configuration runs sharded (CI smoke).
+
+use std::sync::Arc;
+
+use adip::analytical::gemm::MemoryPolicy;
+use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
+use adip::arch::{ArchConfig, Architecture, Backend};
+use adip::cluster::{ClusterConfig, ClusterScheduler, ShardSplit};
+use adip::coordinator::{Coordinator, CoordinatorConfig, CoreScheduler, MatmulRequest};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::testutil::{check, Rng};
+use adip::workload::{repeated_attention_trace, TraceConfig, TransformerModel};
+
+fn mesh(arch: Architecture, n: usize, backend: Backend, cfg: ClusterConfig) -> ClusterScheduler {
+    ClusterScheduler::new(arch, n, backend, cfg)
+}
+
+/// Randomized single-matrix cluster runs on the functional backend:
+/// splits × core counts × precisions × architectures, ragged shapes.
+#[test]
+fn cluster_gemm_bit_exact_and_matches_estimate() {
+    check(
+        "cluster-diff-single",
+        5001,
+        60,
+        |rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let split = *rng.choose(&ShardSplit::ALL);
+            let cores = 1 + rng.below(5);
+            let n = *rng.choose(&[4usize, 8]);
+            let (m, k, nc) = (1 + rng.below(48), 1 + rng.below(48), 1 + rng.below(48));
+            let a = Mat::random(rng, m, k, 8);
+            let b = Mat::random(rng, k, nc, mode.weight_bits());
+            (arch, mode, split, cores, n, a, b)
+        },
+        |(arch, mode, split, cores, n, a, b)| {
+            let cluster = ClusterConfig::with_cores(*cores).with_split(*split);
+            let mut c = mesh(*arch, *n, Backend::Functional, cluster);
+            let run = c.run_gemm(a, b, *mode, false).map_err(|e| e.to_string())?;
+            if run.result.outputs[0] != a.matmul(b) {
+                return Err("cluster output != reference GEMM".into());
+            }
+            let mut single = CoreScheduler::with_backend(*arch, *n, Backend::Functional);
+            let sr = single.run_set(a, &[b], *mode, false).map_err(|e| e.to_string())?;
+            if run.result.outputs != sr.outputs {
+                return Err("cluster output != single-core output".into());
+            }
+            let est = estimate_cluster(
+                *arch,
+                &ArchConfig::with_n(*n),
+                GemmShape::new(a.rows(), a.cols(), b.cols()),
+                1,
+                *mode,
+                &cluster,
+                MemoryPolicy::default(),
+            );
+            if run.shards != est.shards {
+                return Err(format!("shards {} != estimate {}", run.shards, est.shards));
+            }
+            if run.result.cycles != est.cycles {
+                return Err(format!("cycles {} != estimate {}", run.result.cycles, est.cycles));
+            }
+            if run.result.passes != est.passes {
+                return Err(format!("passes {} != estimate {}", run.result.passes, est.passes));
+            }
+            if run.result.memory.act_read_bytes != est.act_read_bytes {
+                return Err(format!(
+                    "act bytes {} != estimate {}",
+                    run.result.memory.act_read_bytes, est.act_read_bytes
+                ));
+            }
+            if run.result.memory.weight_read_bytes != est.weight_read_bytes {
+                return Err(format!(
+                    "weight bytes {} != estimate {}",
+                    run.result.memory.weight_read_bytes, est.weight_read_bytes
+                ));
+            }
+            if run.result.memory.output_write_bytes != est.output_write_bytes {
+                return Err(format!(
+                    "output bytes {} != estimate {}",
+                    run.result.memory.output_write_bytes, est.output_write_bytes
+                ));
+            }
+            if run.result.memory.paper_total_bytes() != est.memory_bytes {
+                return Err(format!(
+                    "memory {} != estimate {}",
+                    run.result.memory.paper_total_bytes(),
+                    est.memory_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Randomized shared-input multi-matrix sets (the paper's asymmetric
+/// batch mode) across splits × cores: bit-exact and estimate-equal.
+#[test]
+fn cluster_gemm_set_bit_exact_and_matches_estimate() {
+    check(
+        "cluster-diff-set",
+        5003,
+        40,
+        |rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let split = *rng.choose(&ShardSplit::ALL);
+            let cores = 1 + rng.below(4);
+            let n = *rng.choose(&[4usize, 8]);
+            let (m, k, nc) = (1 + rng.below(25), 1 + rng.below(25), 1 + rng.below(25));
+            let s = 1 + rng.below(4);
+            let a = Mat::random(rng, m, k, 8);
+            let bs: Vec<Mat> =
+                (0..s).map(|_| Mat::random(rng, k, nc, mode.weight_bits())).collect();
+            (arch, mode, split, cores, n, a, bs)
+        },
+        |(arch, mode, split, cores, n, a, bs)| {
+            let refs: Vec<&Mat> = bs.iter().collect();
+            let cluster = ClusterConfig::with_cores(*cores).with_split(*split);
+            let mut c = mesh(*arch, *n, Backend::Functional, cluster);
+            let run = c.run_gemm_set(a, &refs, *mode, false).map_err(|e| e.to_string())?;
+            for (out, b) in run.result.outputs.iter().zip(bs.iter()) {
+                if *out != a.matmul(b) {
+                    return Err("cluster set output != reference GEMM".into());
+                }
+            }
+            let mut single = CoreScheduler::with_backend(*arch, *n, Backend::Functional);
+            let sr = single.run_set(a, &refs, *mode, false).map_err(|e| e.to_string())?;
+            if run.result.outputs != sr.outputs {
+                return Err("cluster set output != single-core output".into());
+            }
+            let est = estimate_cluster(
+                *arch,
+                &ArchConfig::with_n(*n),
+                GemmShape::new(a.rows(), a.cols(), bs[0].cols()),
+                bs.len(),
+                *mode,
+                &cluster,
+                MemoryPolicy::default(),
+            );
+            if run.result.cycles != est.cycles {
+                return Err(format!(
+                    "set cycles {} != estimate {}",
+                    run.result.cycles, est.cycles
+                ));
+            }
+            if run.result.passes != est.passes {
+                return Err(format!(
+                    "set passes {} != estimate {}",
+                    run.result.passes, est.passes
+                ));
+            }
+            if run.result.memory.paper_total_bytes() != est.memory_bytes {
+                return Err(format!(
+                    "set memory {} != estimate {}",
+                    run.result.memory.paper_total_bytes(),
+                    est.memory_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The cluster path on both backends: the register-level golden path,
+/// sharded, must agree with the sharded functional path field by field
+/// (small shapes — the cycle simulator steps every PE every beat).
+#[test]
+fn cluster_backends_agree() {
+    check(
+        "cluster-diff-backends",
+        5005,
+        12,
+        |rng| {
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let split = *rng.choose(&ShardSplit::ALL);
+            let cores = 1 + rng.below(3);
+            let (m, k, nc) = (1 + rng.below(14), 1 + rng.below(14), 1 + rng.below(14));
+            let a = Mat::random(rng, m, k, 8);
+            let b = Mat::random(rng, k, nc, mode.weight_bits());
+            (mode, split, cores, a, b)
+        },
+        |(mode, split, cores, a, b)| {
+            for arch in Architecture::ALL {
+                let cluster = ClusterConfig::with_cores(*cores).with_split(*split);
+                let fast = mesh(arch, 4, Backend::Functional, cluster)
+                    .run_gemm(a, b, *mode, false)
+                    .map_err(|e| e.to_string())?;
+                let golden = mesh(arch, 4, Backend::CycleAccurate, cluster)
+                    .run_gemm(a, b, *mode, false)
+                    .map_err(|e| e.to_string())?;
+                if fast.result.outputs != golden.result.outputs {
+                    return Err(format!("{arch}: outputs differ across backends"));
+                }
+                if fast.result.cycles != golden.result.cycles {
+                    return Err(format!(
+                        "{arch}: cycles {} != {}",
+                        fast.result.cycles, golden.result.cycles
+                    ));
+                }
+                if fast.result.passes != golden.result.passes {
+                    return Err(format!(
+                        "{arch}: passes {} != {}",
+                        fast.result.passes, golden.result.passes
+                    ));
+                }
+                if fast.result.memory != golden.result.memory {
+                    return Err(format!(
+                        "{arch}: memory {:?} != {:?}",
+                        fast.result.memory, golden.result.memory
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Acceptance case from ISSUE 2: a 256×256×256 GEMM sharded across 4
+/// functional cores is bit-exact vs the single-core run and reports
+/// cluster cycles equal to the analytical cluster estimate, with ≥ 2×
+/// end-to-end (simulated latency) speedup on the M split.
+#[test]
+fn acceptance_256_cube_across_4_cores() {
+    let mut rng = Rng::seeded(5007);
+    let a = Mat::random(&mut rng, 256, 256, 8);
+    let b = Mat::random(&mut rng, 256, 256, 2);
+    let cluster = ClusterConfig::with_cores(4);
+
+    let mut single = CoreScheduler::with_backend(Architecture::Adip, 32, Backend::Functional);
+    let sr = single.run_set(&a, &[&b], PrecisionMode::W2, false).unwrap();
+    let mut c = mesh(Architecture::Adip, 32, Backend::Functional, cluster);
+    let run = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+
+    assert_eq!(run.shards, 4);
+    assert_eq!(run.result.outputs, sr.outputs, "sharded run must be bit-exact");
+    assert_eq!(run.result.outputs[0], a.matmul(&b));
+
+    let shape = GemmShape::new(256, 256, 256);
+    let est = estimate_cluster(
+        Architecture::Adip,
+        &ArchConfig::with_n(32),
+        shape,
+        1,
+        PrecisionMode::W2,
+        &cluster,
+        MemoryPolicy::default(),
+    );
+    assert_eq!(run.result.cycles, est.cycles, "cluster cycles == analytical estimate");
+    assert_eq!(run.result.passes, est.passes);
+    assert_eq!(run.result.memory.paper_total_bytes(), est.memory_bytes);
+
+    let est_single = estimate_gemm(
+        Architecture::Adip,
+        &ArchConfig::with_n(32),
+        shape,
+        PrecisionMode::W2,
+        MemoryPolicy::default(),
+    );
+    assert_eq!(sr.cycles, est_single.cycles);
+    let speedup = sr.cycles as f64 / run.result.cycles as f64;
+    assert!(speedup >= 2.0, "4-core M-split speedup {speedup:.2} < 2.0");
+}
+
+/// A repeated-weights Transformer trace served through the coordinator
+/// with the weight cache on: > 0 hits, outputs identical to the uncached
+/// run, counters surfaced in the Prometheus dump.
+#[test]
+fn weight_cache_hits_on_repeated_trace_with_identical_outputs() {
+    let tcfg = TraceConfig { dim: 48, head_cols: 16, layers: 3, heads: 1, rate_per_s: 1e9 };
+    let model = TransformerModel::by_name("bitnet").unwrap();
+    let trace = repeated_attention_trace(&model, &tcfg, 11, 3);
+
+    let serve = |cache_entries: usize| {
+        let coord = Coordinator::start(CoordinatorConfig {
+            n: 16,
+            workers: 1,
+            queue_capacity: 1024,
+            batch_window: 1, // deterministic batching: one request per batch
+            cluster: ClusterConfig::with_cores(2).with_cache(cache_entries),
+            ..Default::default()
+        });
+        let mut outputs = Vec::new();
+        let mut rxs = Vec::new();
+        for t in &trace {
+            rxs.push(coord.try_submit(t.request.clone()).unwrap().1);
+        }
+        for rx in rxs {
+            outputs.push(rx.recv().unwrap().result.unwrap());
+        }
+        let m = coord.metrics();
+        let hits = m.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+        let misses = m.cache_misses.load(std::sync::atomic::Ordering::Relaxed);
+        let render = m.render();
+        coord.shutdown();
+        (outputs, hits, misses, render)
+    };
+
+    let (cached_out, hits, misses, render) = serve(256);
+    let (uncached_out, no_hits, no_misses, _) = serve(0);
+    assert_eq!(cached_out, uncached_out, "cache must not change outputs");
+    assert!(hits > 0, "repeated projections must hit ({misses} misses)");
+    assert_eq!((no_hits, no_misses), (0, 0), "disabled cache stays silent");
+    assert!(render.contains(&format!("adip_weight_cache_hits_total {hits}\n")), "{render}");
+    // every projection replay after the first invocation can hit; act-act
+    // requests never do (fresh dynamic operands each invocation)
+    let projections_per_inv = (tcfg.layers * 3) as u64;
+    assert!(hits >= 2 * projections_per_inv, "hits {hits}");
+}
+
+/// CI smoke for the paper's 64×64 peak-TOPS configuration: a sharded
+/// functional run at n = 64 stays bit-exact and estimate-equal.
+#[test]
+fn larger_n_smoke_sweep_n64() {
+    let mut rng = Rng::seeded(5011);
+    let a = Mat::random(&mut rng, 192, 128, 8);
+    for (mode, split) in
+        [(PrecisionMode::W8, ShardSplit::M), (PrecisionMode::W2, ShardSplit::N)]
+    {
+        let b = Mat::random(&mut rng, 128, 192, mode.weight_bits());
+        let cluster = ClusterConfig::with_cores(3).with_split(split);
+        let mut c = mesh(Architecture::Adip, 64, Backend::Functional, cluster);
+        let run = c.run_gemm(&a, &b, mode, false).unwrap();
+        assert_eq!(run.result.outputs[0], a.matmul(&b), "{mode} {split}");
+        assert_eq!(run.shards, 3, "{mode} {split}: 192/64 = 3 tiles");
+        let est = estimate_cluster(
+            Architecture::Adip,
+            &ArchConfig::with_n(64),
+            GemmShape::new(192, 128, 192),
+            1,
+            mode,
+            &cluster,
+            MemoryPolicy::default(),
+        );
+        assert_eq!(run.result.cycles, est.cycles, "{mode} {split}");
+        assert_eq!(run.result.memory.paper_total_bytes(), est.memory_bytes, "{mode} {split}");
+    }
+}
+
+/// End-to-end through the coordinator with sharding on: a multi-request
+/// stream (fused Q/K/V triplets included) completes with exact numerics.
+#[test]
+fn coordinator_serves_correctly_with_sharding_enabled() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 2,
+        queue_capacity: 128,
+        batch_window: 4,
+        cluster: ClusterConfig::with_cores(3).with_split(ShardSplit::K).with_cache(16),
+        ..Default::default()
+    });
+    let mut rng = Rng::seeded(5013);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    // 8 fusable Q/K/V-style triplets: one shared input per triplet (the
+    // shared-input contract: equal input_id ⇒ same activation object)
+    for group in 0..8u64 {
+        let bits = *rng.choose(&[2u32, 4, 8]);
+        let a = Arc::new(Mat::random(&mut rng, 40, 40, 8));
+        for _ in 0..3 {
+            let b = Arc::new(Mat::random(&mut rng, 40, 40, bits));
+            expected.push(a.matmul(&b));
+            let (_, rx) = coord
+                .try_submit(MatmulRequest {
+                    id: 0,
+                    input_id: group,
+                    a: a.clone(),
+                    bs: vec![b],
+                    weight_bits: bits,
+                    act_act: false,
+                    tag: String::new(),
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+    }
+    // plus dynamic act-act requests (runtime interleave path, unique inputs)
+    for i in 0..4u64 {
+        let a = Arc::new(Mat::random(&mut rng, 40, 40, 8));
+        let b = Arc::new(Mat::random(&mut rng, 40, 40, 8));
+        expected.push(a.matmul(&b));
+        let (_, rx) = coord
+            .try_submit(MatmulRequest {
+                id: 0,
+                input_id: 1000 + i,
+                a,
+                bs: vec![b],
+                weight_bits: 8,
+                act_act: true,
+                tag: String::new(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let out = rx.recv().unwrap();
+        assert_eq!(out.result.unwrap()[0], expected[i], "request {i}");
+    }
+    assert_eq!(
+        coord.metrics().completed.load(std::sync::atomic::Ordering::Relaxed),
+        28
+    );
+    coord.shutdown();
+}

@@ -17,6 +17,7 @@ fn cfg(workers: usize, queue: usize) -> CoordinatorConfig {
         queue_capacity: queue,
         batch_window: 8,
         backend: Backend::Functional,
+        ..Default::default()
     }
 }
 
@@ -160,6 +161,7 @@ fn stress_queue_saturation_and_drain_on_both_backends() {
             queue_capacity: 2,
             batch_window: 1,
             backend,
+            ..Default::default()
         });
         let mut rng = Rng::seeded(29);
         // pre-generate so the submission loop outruns the single worker
@@ -225,6 +227,7 @@ fn coordinator_metrics_identical_across_backends() {
             queue_capacity: 64,
             batch_window: 1, // no cross-request fusion: deterministic batching
             backend,
+            ..Default::default()
         });
         let mut rng = Rng::seeded(31);
         let mut rxs = Vec::new();
