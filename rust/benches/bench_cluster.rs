@@ -1,19 +1,34 @@
-//! Bench: cluster scaling sweep + weight-cache serving gain.
+//! Bench: cluster scaling sweep, warm-pool vs spawn-per-run serving, and
+//! the weight-cache gain — emitted as `BENCH_cluster.json` for CI trend
+//! tracking.
 //!
 //! Sweeps cores ∈ {1, 2, 4, 8} at n = 32 on the functional backend over an
 //! M-split GEMM large enough to shard 8 ways, reporting simulated cluster
 //! latency (the metric the subsystem models: max over cores at 1 GHz) and
 //! host wall-clock per run.
 //!
-//! Acceptance gate: ≥ 2× end-to-end speedup (simulated cluster latency) at
-//! 4 cores vs 1 core. The simulated gate is deterministic by construction
-//! — cluster cycles equal the analytical estimate exactly (enforced here
-//! and in `integration_cluster.rs`) — while host wall-clock scaling is
-//! reported for reference (it saturates at the machine's CPU count; CI
-//! runners commonly expose only 2 vCPUs).
+//! Acceptance gates:
 //!
-//! A second section replays a repeated-weights Transformer trace through a
+//! 1. ≥ 2× end-to-end speedup (simulated cluster latency) at 4 cores vs
+//!    1 core. Deterministic by construction — cluster cycles equal the
+//!    analytical estimate exactly (enforced here and in
+//!    `integration_cluster.rs`) — while host wall-clock scaling is
+//!    reported for reference (it saturates at the machine's CPU count; CI
+//!    runners commonly expose only 2 vCPUs).
+//! 2. ≥ 1.1× host wall-clock speedup of the **persistent worker pool**
+//!    over the legacy spawn-per-run engine on a repeated attention trace
+//!    at 4 cores (warm workers + pipelined ingress vs a thread
+//!    spawn/join barrier per GEMM). Simulated accounting is asserted
+//!    identical across the two engines, so the gate isolates pure host
+//!    dispatch overhead.
+//!
+//! A final section replays a repeated-weights Transformer trace through a
 //! weight-cached cluster and asserts the cache reports hits.
+//!
+//! Results land in `BENCH_cluster.json` (override the path with the
+//! `BENCH_JSON` env var): cores-sweep cycles/speedups, the warm-pool
+//! ratio, and shared-cache hit rates — uploaded as a CI artifact so the
+//! perf trajectory is tracked across PRs.
 
 #[path = "common.rs"]
 mod common;
@@ -21,10 +36,11 @@ mod common;
 use adip::analytical::gemm::MemoryPolicy;
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::arch::{ArchConfig, Architecture, Backend};
-use adip::cluster::{ClusterConfig, ClusterScheduler};
+use adip::cluster::{CacheConfig, ClusterConfig, ClusterScheduler, PoolMode, SharedWeightCache};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::testutil::Rng;
+use adip::workload::{repeated_attention_trace, TraceConfig, TransformerModel};
 
 const M: usize = 1024;
 const K: usize = 256;
@@ -43,6 +59,7 @@ fn main() {
 
     println!("== cluster scaling sweep (ADiP {N}x{N}, {M}x{K}x{NC} {MODE}, M-split, functional) ==");
     let mut cycles_at = std::collections::BTreeMap::new();
+    let mut sweep_rows = Vec::new();
     for cores in [1usize, 2, 4, 8] {
         let cluster = ClusterConfig::with_cores(cores);
         let mut mesh = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
@@ -55,10 +72,8 @@ fn main() {
             "cores={cores}: cluster cycles must equal the analytical estimate"
         );
         cycles_at.insert(cores, run.result.cycles);
-        let stat = common::bench(5, || {
-            let mut m = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
-            m.run_gemm(&a, &b, MODE, false).unwrap().result.cycles
-        });
+        // warm-pool steady state: reuse one scheduler across iterations
+        let stat = common::bench(5, || mesh.run_gemm(&a, &b, MODE, false).unwrap().result.cycles);
         let macs = (M * K * NC) as f64;
         common::report(&format!("cluster {cores} core(s)"), stat, macs, "MAC");
         println!(
@@ -69,6 +84,13 @@ fn main() {
             est.parallel_efficiency(&single_est) * 100.0,
             run.shards
         );
+        sweep_rows.push(format!(
+            "    {{\"cores\": {cores}, \"shards\": {}, \"simulated_cycles\": {}, \"simulated_speedup\": {:.4}, \"host_median_s\": {:.6}}}",
+            run.shards,
+            run.result.cycles,
+            est.speedup_vs(&single_est),
+            stat.median_s
+        ));
     }
 
     let speedup4 = cycles_at[&1] as f64 / cycles_at[&4] as f64;
@@ -78,35 +100,111 @@ fn main() {
         "cluster must deliver >= 2x end-to-end speedup at 4 cores (got {speedup4:.2}x)"
     );
 
-    println!("\n== weight cache on a repeated-weights Transformer trace (BitNet-shaped) ==");
-    use adip::workload::{repeated_attention_trace, TraceConfig, TransformerModel};
+    // -- warm persistent pool vs legacy spawn-per-run on a repeated trace --
+    println!("\n== warm pool vs spawn-per-run (repeated attention trace, 4 cores, n=8) ==");
     let model = TransformerModel::by_name("bitnet").expect("bitnet model");
+    // Small per-request GEMMs on purpose: this section measures *dispatch*
+    // overhead (spawn/join barrier vs warm queue), which the compute of a
+    // big GEMM would simply hide. 48/8 = 6 M-tiles shard 4 ways per run.
+    let pool_tcfg = TraceConfig { dim: 48, head_cols: 16, layers: 4, heads: 1, rate_per_s: 1e9 };
+    let pool_trace = repeated_attention_trace(&model, &pool_tcfg, 17, 8);
+    // cache off: every invocation executes, isolating dispatch overhead
+    let run_trace_on = |pool: PoolMode| -> u64 {
+        let cluster = ClusterConfig::with_cores(4).with_pool(pool);
+        let mut mesh = ClusterScheduler::new(Architecture::Adip, 8, Backend::Functional, cluster);
+        let mut sim_cycles = 0u64;
+        for t in &pool_trace {
+            let bs: Vec<&Mat> = t.request.bs.iter().map(|b| b.as_ref()).collect();
+            let mode = PrecisionMode::for_weight_bits(t.request.weight_bits);
+            sim_cycles += mesh
+                .run_gemm_set(&t.request.a, &bs, mode, t.request.act_act)
+                .expect("trace run")
+                .result
+                .cycles;
+        }
+        sim_cycles
+    };
+    // Simulated cycle totals are captured from the benched iterations
+    // themselves (deterministic, identical every rep) — no extra replays.
+    let (mut sim_spawn, mut sim_pool) = (0u64, 0u64);
+    let spawn_stat = common::bench(3, || {
+        sim_spawn = run_trace_on(PoolMode::PerRun);
+        sim_spawn
+    });
+    let pool_stat = common::bench(3, || {
+        sim_pool = run_trace_on(PoolMode::Persistent);
+        sim_pool
+    });
+    assert_eq!(
+        sim_pool, sim_spawn,
+        "pool engines must be accounting-identical (only host time may differ)"
+    );
+    // Gate on the fastest observed iteration: min is noise-resistant
+    // (co-tenant stalls on shared 2-vCPU CI runners only ever inflate a
+    // rep, never deflate it), while medians are reported for context.
+    let pool_gain = spawn_stat.min_s / pool_stat.min_s;
+    println!(
+        "  {} requests: spawn-per-run {:.1} ms | persistent pool {:.1} ms (medians) | warm-pool speedup {pool_gain:.2}x on min (bar: >= 1.1x)",
+        pool_trace.len(),
+        spawn_stat.median_s * 1e3,
+        pool_stat.median_s * 1e3
+    );
+    assert!(
+        pool_gain >= 1.1,
+        "warm pool must beat spawn-per-run by >= 1.1x on the repeated trace (got {pool_gain:.2}x)"
+    );
+
+    println!("\n== shared weight cache on a repeated-weights Transformer trace (2 workers) ==");
     let tcfg = TraceConfig { dim: 96, head_cols: 32, layers: 6, heads: 1, rate_per_s: 1e9 };
-    let trace = repeated_attention_trace(&model, &tcfg, 13, 4);
+    const INVOCATIONS: usize = 4;
+    let trace = repeated_attention_trace(&model, &tcfg, 13, INVOCATIONS);
+    // Two schedulers over ONE shared store, alternating requests with the
+    // parity shifted every invocation — the coordinator's cross-worker
+    // shape, so `shared_hits` in the JSON is a live metric, not a dead 0.
     let run_trace = |cache_entries: usize| {
+        let store = SharedWeightCache::new(CacheConfig { capacity: cache_entries });
         let cluster = ClusterConfig::with_cores(2).with_cache(cache_entries);
-        let mut mesh = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
+        let mut workers: Vec<ClusterScheduler> = (0..2)
+            .map(|_| {
+                ClusterScheduler::with_shared_cache(
+                    Architecture::Adip,
+                    N,
+                    Backend::Functional,
+                    cluster,
+                    store.clone(),
+                )
+            })
+            .collect();
+        let per_inv = trace.len() / INVOCATIONS;
         let t0 = std::time::Instant::now();
-        for t in &trace {
+        for (i, t) in trace.iter().enumerate() {
+            let mesh = &mut workers[(i + i / per_inv) % 2];
             let bs: Vec<&Mat> = t.request.bs.iter().map(|b| b.as_ref()).collect();
             let mode = PrecisionMode::for_weight_bits(t.request.weight_bits);
             mesh.run_gemm_set(&t.request.a, &bs, mode, t.request.act_act).expect("trace run");
         }
-        (t0.elapsed().as_secs_f64(), mesh.cache_stats())
+        (t0.elapsed().as_secs_f64(), store.stats())
     };
     let (t_cold, _) = run_trace(0);
     let (t_cached, stats) = run_trace(512);
+    let hit_rate = stats.hits as f64 / (stats.hits + stats.misses).max(1) as f64;
     println!(
-        "  {} requests: uncached {:.3}s | cached {:.3}s ({:.2}x) | {} hits / {} misses / {} evictions",
+        "  {} requests: uncached {:.3}s | cached {:.3}s ({:.2}x) | {} hits ({} cross-worker) / {} misses / {} evictions (hit rate {:.1}%)",
         trace.len(),
         t_cold,
         t_cached,
         t_cold / t_cached,
         stats.hits,
+        stats.shared_hits,
         stats.misses,
-        stats.evictions
+        stats.evictions,
+        hit_rate * 100.0
     );
     assert!(stats.hits > 0, "repeated-weights trace must produce cache hits");
+    assert!(
+        stats.shared_hits > 0,
+        "parity-shifted replays must hit entries the sibling worker inserted"
+    );
     let projections_per_inv = (tcfg.layers * 3) as u64;
     assert!(
         stats.hits >= 3 * projections_per_inv,
@@ -114,4 +212,22 @@ fn main() {
         stats.hits,
         3 * projections_per_inv
     );
+
+    // -- machine-readable results for the CI artifact --
+    let json = format!(
+        "{{\n  \"bench\": \"bench_cluster\",\n  \"array_n\": {N},\n  \"gemm\": {{\"m\": {M}, \"k\": {K}, \"n\": {NC}, \"mode\": \"{MODE}\"}},\n  \"cores_sweep\": [\n{}\n  ],\n  \"speedup_at_4_cores\": {{\"value\": {speedup4:.4}, \"gate\": 2.0}},\n  \"warm_pool\": {{\"cores\": 4, \"requests\": {}, \"spawn_per_run_min_s\": {:.6}, \"persistent_pool_min_s\": {:.6}, \"speedup\": {pool_gain:.4}, \"gate\": 1.1}},\n  \"weight_cache\": {{\"requests\": {}, \"hits\": {}, \"shared_hits\": {}, \"misses\": {}, \"evictions\": {}, \"hit_rate\": {hit_rate:.4}, \"uncached_s\": {t_cold:.6}, \"cached_s\": {t_cached:.6}, \"speedup\": {:.4}}}\n}}\n",
+        sweep_rows.join(",\n"),
+        pool_trace.len(),
+        spawn_stat.min_s,
+        pool_stat.min_s,
+        trace.len(),
+        stats.hits,
+        stats.shared_hits,
+        stats.misses,
+        stats.evictions,
+        t_cold / t_cached
+    );
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
 }

@@ -4,15 +4,17 @@
 //! ([`crate::cluster::ClusterScheduler`]) measures: each shard of the
 //! partition is an independent [`estimate_gemm_set`] at the shard's
 //! sub-shape, and the shard estimates combine under the reducer's
-//! attribution rules (latency = max over cores, passes/energy-like
-//! quantities = sum, shared-input traffic counted once on broadcast
-//! splits). Because PR 1's differential suite proves the functional
-//! backend equals `estimate_gemm_set` per GEMM, the cluster equality holds
-//! by construction — and `rust/tests/integration_cluster.rs` asserts it
-//! case by case anyway.
+//! attribution rules (latency = max over cores **plus** the explicit
+//! K-split reduce term of [`crate::cluster::reducer::reduce_cycles`],
+//! passes/energy-like quantities = sum, shared-input traffic counted once
+//! on broadcast splits). Because PR 1's differential suite proves the
+//! functional backend equals `estimate_gemm_set` per GEMM, the cluster
+//! equality holds by construction — and
+//! `rust/tests/integration_cluster.rs` asserts it case by case anyway.
 
 use crate::arch::{ArchConfig, Architecture};
 use crate::cluster::partitioner::{partition, ClusterConfig};
+use crate::cluster::reducer::reduce_cycles;
 use crate::cluster::ShardSplit;
 use crate::quant::PrecisionMode;
 
@@ -27,8 +29,12 @@ pub struct ClusterEstimate {
     pub shards: usize,
     /// Per-shard estimates, in plan order.
     pub per_core: Vec<GemmEstimate>,
-    /// Cluster latency: max over cores (cores run concurrently).
+    /// Cluster latency: max over cores (cores run concurrently) plus
+    /// [`ClusterEstimate::reduce_cycles`].
     pub cycles: u64,
+    /// Latency of the K-split accumulate-reduce (0 for M/N splits and
+    /// single-shard plans); already included in `cycles`.
+    pub reduce_cycles: u64,
     /// Total stationary passes across the cluster.
     pub passes: u64,
     /// Useful operations of the whole logical GEMM set.
@@ -86,7 +92,8 @@ pub fn estimate_cluster(
         })
         .collect();
 
-    let cycles = per_core.iter().map(|e| e.cycles).max().unwrap_or(0);
+    let reduce = reduce_cycles(cluster.split, plans.len(), shape.m, shape.n, set_size, cfg.n);
+    let cycles = per_core.iter().map(|e| e.cycles).max().unwrap_or(0) + reduce;
     let passes = per_core.iter().map(|e| e.passes).sum();
     let ops = per_core.iter().map(|e| e.ops).sum();
     let act_read_bytes = if cluster.split.broadcasts_activations() {
@@ -106,6 +113,7 @@ pub fn estimate_cluster(
         shards: plans.len(),
         per_core,
         cycles,
+        reduce_cycles: reduce,
         passes,
         ops,
         act_read_bytes,
@@ -233,7 +241,44 @@ mod tests {
         );
         // each core drains a full-size partial product
         assert_eq!(c.output_write_bytes, 4 * single.output_write_bytes);
-        assert!(c.cycles < single.cycles);
+        // the accumulate-reduce is charged explicitly: 3 extra partials ×
+        // (2 × 2 output tiles at n = 32)
+        assert_eq!(c.reduce_cycles, 3 * 2 * 2);
+        let gating = c.per_core.iter().map(|e| e.cycles).max().unwrap();
+        assert_eq!(c.cycles, gating + c.reduce_cycles);
+        assert!(c.cycles < single.cycles, "reduce cost must not erase the K-split win here");
+    }
+
+    #[test]
+    fn only_k_splits_pay_the_reduce_term() {
+        let shape = GemmShape::new(256, 256, 256);
+        for (split, expect_reduce) in
+            [(ShardSplit::M, false), (ShardSplit::N, false), (ShardSplit::K, true)]
+        {
+            let c = estimate_cluster(
+                Architecture::Adip,
+                &cfg(),
+                shape,
+                1,
+                PrecisionMode::W2,
+                &ClusterConfig::with_cores(4).with_split(split),
+                MemoryPolicy::default(),
+            );
+            assert_eq!(c.shards, 4, "{split}");
+            assert_eq!(c.reduce_cycles > 0, expect_reduce, "{split}");
+        }
+        // degenerate single-shard K plan: nothing to reduce
+        let one = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            GemmShape::new(256, 32, 256), // one K tile at n = 32
+            1,
+            PrecisionMode::W2,
+            &ClusterConfig::with_cores(4).with_split(ShardSplit::K),
+            MemoryPolicy::default(),
+        );
+        assert_eq!(one.shards, 1);
+        assert_eq!(one.reduce_cycles, 0);
     }
 
     #[test]

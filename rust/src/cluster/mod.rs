@@ -1,5 +1,5 @@
 //! Cluster execution subsystem — shard one GEMM across a mesh of array
-//! cores, with a shared weight-tile cache.
+//! cores, with a persistent worker pool and a shareable weight-tile cache.
 //!
 //! The paper evaluates a single `N×N` ADiP array; its follow-up many-core
 //! work (D-Legion) shows the scaling win comes from ganging many such
@@ -9,52 +9,91 @@
 //! single-core result.
 //!
 //! * [`partitioner`] — [`ShardSplit`] (M / N / K) and tile-aligned,
-//!   balanced shard plans; [`ClusterConfig`] threaded through
+//!   balanced shard plans; [`ClusterConfig`] (cores, split, cache,
+//!   [`PoolMode`]) threaded through
 //!   [`crate::coordinator::CoordinatorConfig`].
-//! * [`scheduler`] — [`ClusterScheduler`]: cache probe → concurrent shard
-//!   execution on a pool of [`crate::coordinator::CoreScheduler`] workers
-//!   (one host thread per shard) → reduce.
-//! * [`reducer`] — output reassembly and the accounting attribution rules.
+//! * [`scheduler`] — [`ClusterScheduler`]: pipelined shard ingress
+//!   (slice → fingerprint → cache probe → dispatch, one shard at a time)
+//!   feeding either the persistent worker pool or the legacy spawn-per-run
+//!   engine, then reduce.
+//! * [`reducer`] — output reassembly, the accounting attribution rules and
+//!   the explicit K-split [`reducer::reduce_cycles`] term.
 //! * [`weight_cache`] — result cache keyed by (weight-tile fingerprint,
-//!   precision mode), activation-qualified for bit-exactness.
+//!   precision mode), activation-qualified for bit-exactness;
+//!   [`SharedWeightCache`] lets every worker of one coordinator share one
+//!   store (cross-worker reuse, counted as `shared_hits`).
+//!
+//! # Pool / pipeline design
+//!
+//! The host-side analogue of keeping all `N×N` PEs busy is keeping all `P`
+//! cores busy *across* GEMMs, not just within one. Two mechanisms:
+//!
+//! 1. **Persistent workers** ([`PoolMode::Persistent`], the default).
+//!    Each core lives on a long-lived worker thread that pops shard jobs
+//!    off a shared queue; consecutive invocations reuse warm workers
+//!    instead of paying a `std::thread::scope` spawn/join barrier per
+//!    GEMM. Shutdown (dropping the scheduler) closes the queue, drains
+//!    already-queued shards and joins the workers; a worker that panics
+//!    mid-shard replies with an error first (the submitter can never
+//!    hang), then rebuilds its core and keeps serving. The legacy
+//!    spawn-per-run engine ([`PoolMode::PerRun`]) is retained as the
+//!    benchmark baseline and produces bit-identical runs.
+//! 2. **Pipelined shard ingress.** Shard `i` is sliced, fingerprinted,
+//!    cache-probed and *immediately* dispatched before shard `i+1` is even
+//!    sliced — so host-side operand preparation (partition/quantize) of
+//!    later shards overlaps execution of earlier ones. Jobs own their
+//!    operands (`Arc<Mat>`): split-dimension slices are owned tiles, and a
+//!    full-extent operand is shared through one `Arc` created at most once
+//!    per run (free on the coordinator path, whose requests already carry
+//!    `Arc<Mat>`s — see `run_gemm_set_shared`).
 //!
 //! # Sharding invariants
 //!
 //! 1. **Bit-exactness.** A cluster run's outputs equal the single-core
 //!    run's outputs — and therefore the `i32` reference GEMM — for every
-//!    split × core count × precision × batch mode × backend. M/N shards
-//!    own disjoint output blocks; K shards produce full-size partial
-//!    products reduced by exact `i32` accumulation (order-independent).
+//!    split × core count × precision × batch mode × backend × pool mode.
+//!    M/N shards own disjoint output blocks; K shards produce full-size
+//!    partial products reduced by exact `i32` accumulation
+//!    (order-independent, so out-of-order pool completions cannot matter).
 //!    Cache hits replay previously computed outputs under a key that
-//!    includes the activation fingerprint, so a hit cannot change results.
+//!    includes the activation fingerprint, so a hit cannot change results
+//!    — not even a `shared_hit` on an entry a sibling worker computed.
 //!    `rust/tests/integration_cluster.rs` enforces all of this — per the
 //!    repo's backend policy the cluster path *extends* the differential
 //!    suite, it does not bypass it.
 //! 2. **Accounting attribution.** Cluster latency (`cycles`) is the
-//!    maximum over cores; passes and energy are sums; memory traffic is a
-//!    sum except that a broadcast split (N: every core streams the same
-//!    activation tiles) counts the shared-input traffic once
-//!    ([`ShardSplit::broadcasts_activations`]). The K-split's final
-//!    accumulate is modeled as free. The closed forms in
+//!    maximum over cores plus the explicit K-split reduce term
+//!    ([`reducer::reduce_cycles`]: one `N×N` adder-array merge per partial
+//!    output tile — previously a documented modeled-as-free gap); passes
+//!    and energy are sums; memory traffic is a sum except that a broadcast
+//!    split (N: every core streams the same activation tiles) counts the
+//!    shared-input traffic once
+//!    ([`ShardSplit::broadcasts_activations`]). The closed forms in
 //!    [`crate::analytical::cluster`] state the same rules over
 //!    [`crate::analytical::estimate_gemm_set`] per shard, and the
-//!    functional path must match them *exactly* (tested).
+//!    functional path must match them *exactly* (tested). Accounting is
+//!    engine-independent: pool and spawn-per-run runs are bit-identical.
 //! 3. **Cache keying.** Entries are keyed by (weight-set fingerprint,
 //!    precision mode, runtime-interleave flag) extended with the
 //!    activation fingerprint — a hit is bit-exact by key construction,
 //!    and M-split shards (identical weight slices, distinct activation
 //!    slices) occupy distinct entries. Hits contribute zero simulated
-//!    cycles/energy/memory (execution skipped) and are surfaced as
-//!    `cache_hits`/`cache_misses`/`cache_evictions` in
-//!    [`crate::coordinator::Metrics`]. A cold cache is
+//!    cycles/energy/memory (execution skipped; the K-split reduce term is
+//!    still charged — reassembly is real) and are surfaced as
+//!    `cache_hits`/`cache_misses`/`cache_evictions`/`cache_shared_hits`
+//!    in [`crate::coordinator::Metrics`]. A cold cache is
 //!    accounting-neutral, which is what keeps invariant 2 testable.
+//!    Entries carry the owner id of the scheduler that inserted them;
+//!    under a coordinator-wide [`SharedWeightCache`] a hit on a sibling's
+//!    entry is a `shared_hit` (the cross-worker reuse the shared store
+//!    exists for).
 
 pub mod partitioner;
 pub mod reducer;
 pub mod scheduler;
 pub mod weight_cache;
 
-pub use partitioner::{partition, ClusterConfig, ShardPlan, ShardSplit};
-pub use reducer::{assemble_outputs, combine_accounting};
-pub use scheduler::{ClusterRun, ClusterScheduler};
-pub use weight_cache::{fingerprint, CacheConfig, CacheStats, WeightCache};
+pub use partitioner::{partition, ClusterConfig, PoolMode, ShardPlan, ShardSplit};
+pub use reducer::{assemble_outputs, combine_accounting, reduce_cycles};
+pub use scheduler::{ClusterRun, ClusterScheduler, PoolStats};
+pub use weight_cache::{fingerprint, CacheConfig, CacheStats, SharedWeightCache, WeightCache};

@@ -77,6 +77,49 @@ impl FromStr for ShardSplit {
     }
 }
 
+/// How shard jobs reach their cores (see
+/// [`crate::cluster::scheduler`] for the two engines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum PoolMode {
+    /// Persistent per-core worker threads fed by a shard queue: warm
+    /// workers are reused across invocations and shard ingress is
+    /// pipelined against execution. The default. (A 1-core cluster has
+    /// nothing to overlap and executes inline with no pool threads.)
+    #[default]
+    Persistent,
+    /// Legacy engine: scoped threads spawned per run and joined before it
+    /// returns. Kept as the baseline the pool is benchmarked against.
+    PerRun,
+}
+
+impl PoolMode {
+    /// Display/CLI name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            PoolMode::Persistent => "persistent",
+            PoolMode::PerRun => "spawn",
+        }
+    }
+}
+
+impl fmt::Display for PoolMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for PoolMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "persistent" | "pool" | "warm" => Ok(PoolMode::Persistent),
+            "spawn" | "per-run" | "perrun" | "scoped" => Ok(PoolMode::PerRun),
+            other => Err(format!("unknown pool mode {other:?} (expected persistent or spawn)")),
+        }
+    }
+}
+
 /// Cluster execution configuration, threaded through
 /// [`crate::coordinator::CoordinatorConfig`] into the cluster scheduler.
 ///
@@ -92,6 +135,8 @@ pub struct ClusterConfig {
     pub split: ShardSplit,
     /// Weight-tile result cache (capacity 0 = disabled).
     pub cache: CacheConfig,
+    /// Shard dispatch engine (persistent pool by default).
+    pub pool: PoolMode,
 }
 
 impl ClusterConfig {
@@ -108,6 +153,11 @@ impl ClusterConfig {
     /// The same configuration with a weight cache of `capacity` entries.
     pub fn with_cache(self, capacity: usize) -> ClusterConfig {
         ClusterConfig { cache: CacheConfig { capacity }, ..self }
+    }
+
+    /// The same configuration with a different shard dispatch engine.
+    pub fn with_pool(self, pool: PoolMode) -> ClusterConfig {
+        ClusterConfig { pool, ..self }
     }
 
     /// Effective core count (at least 1).
@@ -218,8 +268,21 @@ mod tests {
         assert_eq!(c.effective_cores(), 1);
         assert_eq!(c.split, ShardSplit::M);
         assert_eq!(c.cache.capacity, 0);
+        assert_eq!(c.pool, PoolMode::Persistent);
         assert_eq!(ClusterConfig::with_cores(0).effective_cores(), 1);
         assert_eq!(ClusterConfig::with_cores(4).with_cache(16).cache.capacity, 16);
+        assert_eq!(ClusterConfig::default().with_pool(PoolMode::PerRun).pool, PoolMode::PerRun);
+    }
+
+    #[test]
+    fn pool_mode_parsing_and_names() {
+        assert_eq!("persistent".parse::<PoolMode>().unwrap(), PoolMode::Persistent);
+        assert_eq!("pool".parse::<PoolMode>().unwrap(), PoolMode::Persistent);
+        assert_eq!("spawn".parse::<PoolMode>().unwrap(), PoolMode::PerRun);
+        assert_eq!("per-run".parse::<PoolMode>().unwrap(), PoolMode::PerRun);
+        assert!("forked".parse::<PoolMode>().is_err());
+        assert_eq!(PoolMode::Persistent.to_string(), "persistent");
+        assert_eq!(PoolMode::PerRun.to_string(), "spawn");
     }
 
     #[test]

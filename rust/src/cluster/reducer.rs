@@ -11,9 +11,11 @@
 //! in [`crate::analytical::cluster`] mirrors exactly):
 //!
 //! * cluster latency `cycles` = **max** over cores (cores run
-//!   concurrently; the slowest shard gates the answer). The K-split's
-//!   final accumulate is modeled as free — partial psums drain through the
-//!   same write-back path the single-core schedule uses.
+//!   concurrently; the slowest shard gates the answer) **plus** the
+//!   explicit K-split reduce term of [`reduce_cycles`]: the cross-core
+//!   accumulate of partial products is real work — an `N×N` adder array
+//!   merges one partial tile per cycle, `(S-1)` merges per output tile.
+//!   M/N splits write disjoint output blocks and pay no reduce step.
 //! * `passes`, `energy` = **sum** over cores (every executed pass burns
 //!   real energy on its core).
 //! * memory traffic = **sum** over cores, except that a broadcast split
@@ -30,6 +32,39 @@ use crate::sim::cosim::CoSimResult;
 use crate::sim::memory::MemoryCounters;
 
 use super::partitioner::{ShardPlan, ShardSplit};
+
+/// Latency of the K-split's cross-core accumulate-reduce, in cycles.
+///
+/// `S` K-shards each drain a full-size `M×N` partial product per weight
+/// matrix; folding them into the final output takes `S-1` elementwise
+/// merges per output tile. The reduce engine is modeled as an `N×N`
+/// (`array_n²`) adder array consuming one partial tile per cycle — as wide
+/// as the array's own datapath, and far cheaper than its MACs — so:
+///
+/// ```text
+/// reduce = (S-1) · ⌈M/N⌉ · ⌈N_c/N⌉ · set_size        (K split, S > 1)
+///        = 0                                          (otherwise)
+/// ```
+///
+/// This term was previously modeled as free (a documented gap); it is now
+/// charged identically by [`crate::analytical::cluster::estimate_cluster`]
+/// and the functional cluster path, so their exact equality still holds.
+/// It depends only on the plan shape — never on cache hits — because the
+/// reassembly happens even when every shard was served from the cache.
+pub fn reduce_cycles(
+    split: ShardSplit,
+    shards: usize,
+    m: usize,
+    n: usize,
+    set_size: usize,
+    array_n: usize,
+) -> u64 {
+    if split != ShardSplit::K || shards <= 1 {
+        return 0;
+    }
+    let tiles = m.div_ceil(array_n) as u64 * n.div_ceil(array_n) as u64 * set_size as u64;
+    (shards as u64 - 1) * tiles
+}
 
 /// Assemble per-shard outputs into one full-shape output per source
 /// matrix. `shard_outputs[i]` are the outputs of `plans[i]` (one `Mat` per
@@ -159,5 +194,16 @@ mod tests {
         let (_, _, _, bmem) = combine_accounting(ShardSplit::N, &[&a, &b], 64);
         assert_eq!(bmem.act_read_bytes, 1024, "N-split counts the broadcast once");
         assert_eq!(bmem.weight_read_bytes, 512);
+    }
+
+    #[test]
+    fn reduce_term_charged_only_for_multi_shard_k_splits() {
+        // 3 extra partials × (⌈100/32⌉ · ⌈64/32⌉ tiles) × 2 matrices
+        assert_eq!(reduce_cycles(ShardSplit::K, 4, 100, 64, 2, 32), 3 * 4 * 2 * 2);
+        assert_eq!(reduce_cycles(ShardSplit::K, 1, 100, 64, 2, 32), 0, "single shard");
+        assert_eq!(reduce_cycles(ShardSplit::M, 4, 100, 64, 2, 32), 0, "disjoint blocks");
+        assert_eq!(reduce_cycles(ShardSplit::N, 4, 100, 64, 2, 32), 0, "disjoint blocks");
+        // tile-rounded, not element-exact: a 1×1 output still costs a merge
+        assert_eq!(reduce_cycles(ShardSplit::K, 2, 1, 1, 1, 32), 1);
     }
 }

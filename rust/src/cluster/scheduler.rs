@@ -1,22 +1,49 @@
-//! The cluster shard scheduler: dispatches shard plans to a pool of
-//! [`CoreScheduler`] workers and reduces their results.
+//! The cluster shard scheduler: a persistent pool of per-core workers fed
+//! by a shard queue, plus the reducer that folds their results back into
+//! one logical run.
 //!
 //! One [`ClusterScheduler`] owns `P` simulated array cores (each a
 //! [`CoreScheduler`] on the configured `Backend` — the backend policy of
 //! `rust/src/arch/mod.rs` applies unchanged: functional serves, the cycle
 //! simulator stays golden). A GEMM (or shared-input multi-matrix set) is
 //! partitioned by [`super::partitioner::partition`], each shard is probed
-//! against the [`super::weight_cache::WeightCache`] and, on a miss,
-//! executed on its own core — concurrently, on host threads, one thread
-//! per shard — then the [`super::reducer`] reassembles outputs and
-//! aggregates accounting.
+//! against the [`super::weight_cache::SharedWeightCache`] and, on a miss,
+//! executed on a core; the [`super::reducer`] then reassembles outputs and
+//! aggregates accounting (including the K-split reduce-step latency).
+//!
+//! # Execution engines ([`PoolMode`])
+//!
+//! * [`PoolMode::Persistent`] (default) — long-lived worker threads, one
+//!   per core, each owning its `CoreScheduler`, fed by a shared shard
+//!   queue. Consecutive invocations reuse warm workers (no spawn/join
+//!   barrier per GEMM), and ingress is **pipelined**: the caller slices,
+//!   fingerprints and cache-probes shard `i+1` while shards `≤ i` are
+//!   already executing. A worker that panics mid-shard reports the shard
+//!   as an error (never a hang — the reply is sent before recovery) and
+//!   rebuilds its core; dropping the scheduler closes the queue, drains
+//!   any queued shards and joins the workers. A **single-core** cluster
+//!   has nothing to overlap, so it spawns no pool threads and executes
+//!   inline (identical to the per-run engine).
+//! * [`PoolMode::PerRun`] — the legacy spawn-per-run engine: scoped
+//!   threads spawned per miss, joined before the run returns (a single
+//!   miss runs inline). Kept as the baseline the persistent pool is
+//!   benchmarked against (`bench_cluster`'s warm-pool gate).
+//!
+//! Both engines execute the identical shard jobs through
+//! [`CoreScheduler::run_set`], so outputs and accounting are bit-identical
+//! across pool modes — `rust/tests/integration_cluster.rs` asserts it.
 //!
 //! The degenerate single-shard case (1 core, or a split dimension with one
 //! tile) skips slicing and reduction entirely and is byte-identical to a
 //! bare [`CoreScheduler`] run — which is what keeps the coordinator's
 //! default configuration (1 cluster core per worker) behavior-neutral.
 
-use std::borrow::Cow;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -28,47 +55,244 @@ use crate::dataflow::Mat;
 use crate::quant::PrecisionMode;
 use crate::sim::cosim::CoSimResult;
 
-use super::partitioner::{partition, ClusterConfig};
-use super::reducer::{assemble_outputs, combine_accounting};
-use super::weight_cache::{combine_fingerprints, fingerprint, CacheStats, WeightCache};
+use super::partitioner::{partition, ClusterConfig, PoolMode};
+use super::reducer::{assemble_outputs, combine_accounting, reduce_cycles};
+use super::weight_cache::{combine_fingerprints, fingerprint, CacheStats, SharedWeightCache};
 
 /// Result of one cluster execution: the logical (reduced) co-sim result
 /// plus the shard-level breakdown.
 #[derive(Debug, Clone)]
 pub struct ClusterRun {
     /// Reduced outputs + aggregated accounting (cluster latency = max over
-    /// cores; passes/energy/memory combined per the reducer's rules).
+    /// cores plus the reduce-step term; passes/energy/memory combined per
+    /// the reducer's rules).
     pub result: CoSimResult,
     /// Shards executed (≤ configured cores; 1 when the GEMM cannot shard).
     pub shards: usize,
     /// Simulated cycles per shard, in plan order (0 for cache hits).
     pub per_core_cycles: Vec<u64>,
-    /// Weight-cache activity during this run (all zero when disabled).
+    /// This scheduler's weight-cache activity during this run (all zero
+    /// when disabled; hits against siblings' entries count `shared_hits`).
     pub cache: CacheStats,
 }
 
-/// One shard's operands, ready for a core. Only the split dimension is
-/// actually sliced (copied); ranges covering a full extent borrow the
-/// original matrix — an M-split does not clone the weight set per core,
-/// an N/K-split does not clone the activation matrix per core.
-struct ShardJob<'x> {
-    a: Cow<'x, Mat>,
-    bs: Vec<Cow<'x, Mat>>,
+/// Cumulative persistent-pool counters (monotonic except `workers`; diff
+/// snapshots via [`PoolStats::delta_since`] for per-batch metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    /// Persistent worker threads in the pool (0 in per-run mode).
+    pub workers: usize,
+    /// Shards handed to pool workers.
+    pub dispatched: u64,
+    /// Total seconds shards spent queued before a worker picked them up.
+    pub queue_wait_s: f64,
+    /// Shard executions that panicked (the worker recovered and rebuilt
+    /// its core; the shard surfaced as an error to the submitter).
+    pub worker_panics: u64,
 }
 
-/// Borrow `m` when the requested window is the whole matrix; otherwise
-/// extract the (clipped, hence exact) tile.
-fn slice_or_borrow<'x>(
-    m: &'x Mat,
-    r0: usize,
-    c0: usize,
-    rows: usize,
-    cols: usize,
-) -> Cow<'x, Mat> {
-    if r0 == 0 && c0 == 0 && rows == m.rows() && cols == m.cols() {
-        Cow::Borrowed(m)
-    } else {
-        Cow::Owned(m.tile(r0, c0, rows, cols))
+impl PoolStats {
+    /// `self - earlier`, for per-batch deltas (`workers` carried as-is).
+    pub fn delta_since(&self, earlier: &PoolStats) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            dispatched: self.dispatched - earlier.dispatched,
+            queue_wait_s: (self.queue_wait_s - earlier.queue_wait_s).max(0.0),
+            worker_panics: self.worker_panics - earlier.worker_panics,
+        }
+    }
+}
+
+/// What a pool worker executes for one shard.
+enum ShardWork {
+    /// A real shard: one shared-input GEMM set on a core.
+    Run { a: Arc<Mat>, bs: Vec<Arc<Mat>>, mode: PrecisionMode, runtime_interleave: bool },
+    /// Test hook: panic inside the worker (exercises panic recovery).
+    #[cfg(test)]
+    Panic,
+}
+
+/// One queued shard job: owned operands plus the reply channel.
+struct ShardJob {
+    seq: usize,
+    submitted: Instant,
+    work: ShardWork,
+    reply: Sender<ShardDone>,
+}
+
+/// A completed (or failed) shard, keyed back to its plan slot.
+struct ShardDone {
+    seq: usize,
+    result: Result<CoSimResult, String>,
+}
+
+/// A miss gathered for the per-run (spawn) engine.
+struct PendingShard {
+    seq: usize,
+    a: Arc<Mat>,
+    bs: Vec<Arc<Mat>>,
+}
+
+/// Atomic counters shared between the pool's workers and the scheduler.
+#[derive(Default)]
+struct PoolCounters {
+    dispatched: AtomicU64,
+    queue_wait_ns: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// Persistent worker pool: `P` long-lived threads, each owning one
+/// [`CoreScheduler`], popping shard jobs off a shared queue.
+struct WorkerPool {
+    /// Job ingress; `None` once shutdown has begun.
+    tx: Option<Sender<ShardJob>>,
+    handles: Vec<JoinHandle<()>>,
+    counters: Arc<PoolCounters>,
+    workers: usize,
+}
+
+impl WorkerPool {
+    fn new(arch: Architecture, n: usize, backend: Backend, workers: usize) -> WorkerPool {
+        let (tx, rx) = channel::<ShardJob>();
+        let rx = Arc::new(Mutex::new(rx));
+        let counters = Arc::new(PoolCounters::default());
+        let handles = (0..workers)
+            .map(|w| {
+                let rx = rx.clone();
+                let counters = counters.clone();
+                std::thread::Builder::new()
+                    .name(format!("adip-cluster-core-{w}"))
+                    .spawn(move || worker_main(arch, n, backend, rx, counters))
+                    .expect("spawn cluster pool worker")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles, counters, workers }
+    }
+
+    /// Enqueue one shard. A send can only fail once every worker has died;
+    /// the job's reply sender is dropped with it, so the collector sees a
+    /// disconnect (an error), never a hang.
+    fn submit(&self, job: ShardJob) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(job);
+        }
+    }
+
+    fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            dispatched: self.counters.dispatched.load(Ordering::Relaxed),
+            queue_wait_s: self.counters.queue_wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            worker_panics: self.counters.panics.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the queue lets each worker drain the jobs already queued
+        // (mpsc receivers keep yielding buffered messages after the sender
+        // drops) and then exit; join makes shutdown deterministic.
+        self.tx = None;
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one persistent pool worker: own a core, pop shards, execute,
+/// reply. A panicking shard is converted into an error reply *before* the
+/// core is rebuilt, so the submitter can never be left waiting.
+fn worker_main(
+    arch: Architecture,
+    n: usize,
+    backend: Backend,
+    rx: Arc<Mutex<Receiver<ShardJob>>>,
+    counters: Arc<PoolCounters>,
+) {
+    let mut core = CoreScheduler::with_backend(arch, n, backend);
+    loop {
+        // Hold the queue lock only for the pop — execution must not block
+        // the sibling workers' ingress.
+        let job = {
+            let guard = rx.lock().unwrap_or_else(PoisonError::into_inner);
+            guard.recv()
+        };
+        let Ok(job) = job else {
+            return; // queue closed and drained: clean shutdown
+        };
+        counters.dispatched.fetch_add(1, Ordering::Relaxed);
+        counters
+            .queue_wait_ns
+            .fetch_add(job.submitted.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| match &job.work {
+            ShardWork::Run { a, bs, mode, runtime_interleave } => {
+                let refs: Vec<&Mat> = bs.iter().map(|b| b.as_ref()).collect();
+                core.run_set(a, &refs, *mode, *runtime_interleave).map_err(|e| format!("{e:#}"))
+            }
+            #[cfg(test)]
+            ShardWork::Panic => panic!("injected shard panic (test hook)"),
+        }));
+        let (result, panicked) = match outcome {
+            Ok(r) => (r, false),
+            Err(_) => (Err("shard worker panicked".to_string()), true),
+        };
+        let _ = job.reply.send(ShardDone { seq: job.seq, result });
+        if panicked {
+            counters.panics.fetch_add(1, Ordering::Relaxed);
+            // The interrupted core may hold torn mid-run state; rebuild it
+            // so the worker keeps serving subsequent shards correctly.
+            core = CoreScheduler::with_backend(arch, n, backend);
+        }
+    }
+}
+
+/// The execution engine behind a cluster (see the module docs).
+enum Engine {
+    /// Legacy spawn-per-run: scoped threads over scheduler-owned cores.
+    PerRun { cores: Vec<CoreScheduler> },
+    /// Persistent worker pool (cores owned by the worker threads).
+    Pool(WorkerPool),
+}
+
+/// One run's operand views plus lazily created shared (`Arc`) handles.
+///
+/// Pool workers outlive any one run, so jobs must own their operands:
+/// sliced tiles are owned `Mat`s wrapped in fresh `Arc`s, while an operand
+/// used at its full extent is shared through a single `Arc` — created at
+/// most once per run (callers that already hold `Arc<Mat>` operands, like
+/// the coordinator's request path, pre-populate it for free).
+struct Operands<'x> {
+    a: &'x Mat,
+    bs: Vec<&'x Mat>,
+    a_arc: Option<Arc<Mat>>,
+    bs_arc: Vec<Option<Arc<Mat>>>,
+}
+
+impl<'x> Operands<'x> {
+    fn borrowed(a: &'x Mat, bs: &[&'x Mat]) -> Operands<'x> {
+        Operands { a, bs: bs.to_vec(), a_arc: None, bs_arc: vec![None; bs.len()] }
+    }
+
+    fn shared(a: &'x Arc<Mat>, bs: &[&'x Arc<Mat>]) -> Operands<'x> {
+        Operands {
+            a: a.as_ref(),
+            bs: bs.iter().map(|b| b.as_ref()).collect(),
+            a_arc: Some(Arc::clone(a)),
+            bs_arc: bs.iter().map(|b| Some(Arc::clone(b))).collect(),
+        }
+    }
+
+    /// Shared handle to the full activation matrix (cloned at most once).
+    fn share_a(&mut self) -> Arc<Mat> {
+        let view = self.a;
+        Arc::clone(self.a_arc.get_or_insert_with(|| Arc::new(view.clone())))
+    }
+
+    /// Shared handle to full weight matrix `j` (cloned at most once).
+    fn share_b(&mut self, j: usize) -> Arc<Mat> {
+        let view = self.bs[j];
+        Arc::clone(self.bs_arc[j].get_or_insert_with(|| Arc::new(view.clone())))
     }
 }
 
@@ -80,22 +304,71 @@ enum Probe {
     Miss(Option<(u128, u128)>),
 }
 
-/// Pool of `P` array cores + the shared weight-tile cache.
+/// Pool of `P` array cores + the (shareable) weight-tile cache.
 pub struct ClusterScheduler {
-    cores: Vec<CoreScheduler>,
+    engine: Engine,
     cfg: ClusterConfig,
-    cache: WeightCache,
+    cache: SharedWeightCache,
+    /// This scheduler's identity in the shared store (cross-owner hits
+    /// are what `shared_hits` counts).
+    cache_id: u64,
+    /// Cache activity caused by *this* scheduler (the shared store also
+    /// keeps global counters; per-worker metrics need the local view).
+    local_cache: CacheStats,
+    arch: Architecture,
+    backend: Backend,
     n: usize,
 }
 
 impl ClusterScheduler {
     /// Build a cluster of `cfg.effective_cores()` cores, each simulating
-    /// `arch` at size `n` on `backend`.
-    pub fn new(arch: Architecture, n: usize, backend: Backend, cfg: ClusterConfig) -> ClusterScheduler {
-        let cores = (0..cfg.effective_cores())
-            .map(|_| CoreScheduler::with_backend(arch, n, backend))
-            .collect();
-        ClusterScheduler { cores, cfg, cache: WeightCache::new(cfg.cache), n }
+    /// `arch` at size `n` on `backend`, with a private weight-cache store.
+    pub fn new(
+        arch: Architecture,
+        n: usize,
+        backend: Backend,
+        cfg: ClusterConfig,
+    ) -> ClusterScheduler {
+        let cache = SharedWeightCache::new(cfg.cache);
+        ClusterScheduler::with_shared_cache(arch, n, backend, cfg, cache)
+    }
+
+    /// Build a cluster whose weight cache is an existing shared store —
+    /// the coordinator hands every server worker the same store so
+    /// siblings reuse each other's projection tiles. The store's own
+    /// capacity governs; `cfg.cache` is ignored in this constructor.
+    pub fn with_shared_cache(
+        arch: Architecture,
+        n: usize,
+        backend: Backend,
+        cfg: ClusterConfig,
+        cache: SharedWeightCache,
+    ) -> ClusterScheduler {
+        // A single-core cluster has nothing to overlap: every run is one
+        // shard, so spinning up a pool thread would only add a queue hop
+        // to the coordinator's default hot path. Run it inline (the
+        // per-run engine with one core spawns no threads at all).
+        let engine = match cfg.pool {
+            PoolMode::Persistent if cfg.effective_cores() > 1 => {
+                Engine::Pool(WorkerPool::new(arch, n, backend, cfg.effective_cores()))
+            }
+            _ => Engine::PerRun {
+                cores: (0..cfg.effective_cores())
+                    .map(|_| CoreScheduler::with_backend(arch, n, backend))
+                    .collect(),
+            },
+        };
+        let cache_id = cache.register();
+        ClusterScheduler {
+            engine,
+            cfg,
+            cache,
+            cache_id,
+            local_cache: CacheStats::default(),
+            arch,
+            backend,
+            n,
+        }
     }
 
     /// Cluster configuration.
@@ -105,17 +378,31 @@ impl ClusterScheduler {
 
     /// Which architecture the cores simulate.
     pub fn architecture(&self) -> Architecture {
-        self.cores[0].architecture()
+        self.arch
     }
 
     /// Which execution backend the cores run on.
     pub fn backend(&self) -> Backend {
-        self.cores[0].backend()
+        self.backend
     }
 
-    /// Cumulative weight-cache counters.
+    /// This scheduler's cumulative weight-cache counters (`entries`
+    /// reflects the — possibly shared — store).
     pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
+        CacheStats { entries: self.cache.entries(), ..self.local_cache }
+    }
+
+    /// Handle to the weight-cache store (global counters, sharing).
+    pub fn shared_cache(&self) -> SharedWeightCache {
+        self.cache.clone()
+    }
+
+    /// Cumulative persistent-pool counters (all zero in per-run mode).
+    pub fn pool_stats(&self) -> PoolStats {
+        match &self.engine {
+            Engine::Pool(pool) => pool.stats(),
+            Engine::PerRun { .. } => PoolStats::default(),
+        }
     }
 
     /// Execute `C = A · B` across the cluster.
@@ -131,8 +418,10 @@ impl ClusterScheduler {
 
     /// Execute a shared-input GEMM set `C_s = A · B_s` across the cluster:
     /// partition per the configured split, serve shards from the weight
-    /// cache where possible, run the misses concurrently (one core per
-    /// shard), and reduce.
+    /// cache where possible, run the misses on the engine's cores, and
+    /// reduce. Full-extent operands are copied into shared handles at most
+    /// once per run; callers that already hold `Arc<Mat>` operands should
+    /// use [`ClusterScheduler::run_gemm_set_shared`] to avoid even that.
     pub fn run_gemm_set(
         &mut self,
         a: &Mat,
@@ -140,24 +429,48 @@ impl ClusterScheduler {
         mode: PrecisionMode,
         runtime_interleave: bool,
     ) -> Result<ClusterRun> {
-        ensure!(!bs.is_empty(), "need at least one weight matrix");
-        for b in bs {
+        let ops = Operands::borrowed(a, bs);
+        self.run_inner(ops, mode, runtime_interleave)
+    }
+
+    /// [`ClusterScheduler::run_gemm_set`] over operands that are already
+    /// shared handles (the coordinator's request path) — zero operand
+    /// copies beyond the split-dimension slices.
+    pub fn run_gemm_set_shared(
+        &mut self,
+        a: &Arc<Mat>,
+        bs: &[&Arc<Mat>],
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Result<ClusterRun> {
+        let ops = Operands::shared(a, bs);
+        self.run_inner(ops, mode, runtime_interleave)
+    }
+
+    fn run_inner(
+        &mut self,
+        mut ops: Operands<'_>,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Result<ClusterRun> {
+        ensure!(!ops.bs.is_empty(), "need at least one weight matrix");
+        for b in &ops.bs {
             ensure!(
-                b.rows() == bs[0].rows() && b.cols() == bs[0].cols(),
+                b.rows() == ops.bs[0].rows() && b.cols() == ops.bs[0].cols(),
                 "weight matrices must share a shape"
             );
-            ensure!(a.cols() == b.rows(), "inner dimension mismatch");
+            ensure!(ops.a.cols() == b.rows(), "inner dimension mismatch");
         }
-        let (m, k, nc) = (a.rows(), a.cols(), bs[0].cols());
+        let (m, k, nc) = (ops.a.rows(), ops.a.cols(), ops.bs[0].cols());
         let plans = partition(m, k, nc, self.n, &self.cfg);
-        let stats0 = self.cache.stats();
+        let stats0 = self.cache_stats();
 
         // Degenerate single shard: no slicing, no reduction — identical to
         // a bare core run (plus an optional cache probe on the full set).
         if plans.len() == 1 && plans[0].covers(m, k, nc) {
             let probe = if self.cache.enabled() {
-                let weight_fp = combine_fingerprints(bs.iter().map(|b| fingerprint(&[*b])));
-                let act_fp = fingerprint(&[a]);
+                let weight_fp = combine_fingerprints(ops.bs.iter().map(|b| fingerprint(&[*b])));
+                let act_fp = fingerprint(&[ops.a]);
                 self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
             } else {
                 Probe::Miss(None)
@@ -165,7 +478,7 @@ impl ClusterScheduler {
             let result = match probe {
                 Probe::Hit(res) => res,
                 Probe::Miss(key) => {
-                    let res = self.cores[0].run_set(a, bs, mode, runtime_interleave)?;
+                    let res = self.exec_whole(&mut ops, mode, runtime_interleave)?;
                     self.store(key, mode, runtime_interleave, &res);
                     res
                 }
@@ -175,100 +488,127 @@ impl ClusterScheduler {
                 result,
                 shards: 1,
                 per_core_cycles: vec![cycles],
-                cache: self.cache.stats().delta_since(&stats0),
+                cache: self.cache_stats().delta_since(&stats0),
             });
         }
 
-        // Slice operands per shard plan (split dimension only; full
-        // extents are borrowed, not copied).
-        let jobs: Vec<ShardJob<'_>> = plans
-            .iter()
-            .map(|p| ShardJob {
-                a: slice_or_borrow(a, p.rows.start, p.inner.start, p.rows.len(), p.inner.len()),
-                bs: bs
+        // Pipelined shard ingress: slice → fingerprint → cache probe →
+        // dispatch, one shard at a time, so warm pool workers execute
+        // shard i while the caller prepares shard i+1. (Per-run mode
+        // gathers the misses and fans out scoped threads at the end — the
+        // legacy barrier semantics kept for comparison.) Fingerprints of
+        // full-extent operands are memoized per run, so e.g. an M-split
+        // hashes the shared weight set once, not once per shard.
+        let (done_tx, done_rx) = channel::<ShardDone>();
+        let mut slots: Vec<Option<CoSimResult>> = vec![None; plans.len()];
+        let mut hit = vec![false; plans.len()];
+        let mut keys: Vec<Option<(u128, u128)>> = vec![None; plans.len()];
+        let mut pending: Vec<PendingShard> = Vec::new();
+        let mut submitted = 0usize;
+        let mut a_fp: Option<u128> = None;
+        let mut bs_fp: Vec<Option<u128>> = vec![None; ops.bs.len()];
+        for (i, p) in plans.iter().enumerate() {
+            let a_full =
+                p.rows.start == 0 && p.inner.start == 0 && p.rows.len() == m && p.inner.len() == k;
+            let b_full =
+                p.inner.start == 0 && p.cols.start == 0 && p.inner.len() == k && p.cols.len() == nc;
+            let a_slice = (!a_full)
+                .then(|| ops.a.tile(p.rows.start, p.inner.start, p.rows.len(), p.inner.len()));
+            let b_slices: Option<Vec<Mat>> = (!b_full).then(|| {
+                ops.bs
                     .iter()
-                    .map(|b| {
-                        slice_or_borrow(b, p.inner.start, p.cols.start, p.inner.len(), p.cols.len())
-                    })
-                    .collect(),
-            })
-            .collect();
+                    .map(|b| b.tile(p.inner.start, p.cols.start, p.inner.len(), p.cols.len()))
+                    .collect()
+            });
 
-        // Probe the cache (sequentially — the cache is shared state).
-        // Per-matrix fingerprints of *borrowed* operands are memoized by
-        // address, so e.g. an M-split hashes the shared full weight set
-        // once per run, not once per shard.
-        let mut memo: std::collections::HashMap<usize, u128> = std::collections::HashMap::new();
-        let mut fp_of = |c: &Cow<'_, Mat>| -> u128 {
-            match c {
-                Cow::Borrowed(m) => *memo
-                    .entry(*m as *const Mat as usize)
-                    .or_insert_with(|| fingerprint(&[*m])),
-                Cow::Owned(m) => fingerprint(&[m]),
-            }
-        };
-        let mut slots: Vec<Option<CoSimResult>> = Vec::with_capacity(jobs.len());
-        let mut hit: Vec<bool> = Vec::with_capacity(jobs.len());
-        let mut keys: Vec<Option<(u128, u128)>> = Vec::with_capacity(jobs.len());
-        for job in &jobs {
             let probe = if self.cache.enabled() {
-                let act_fp = fp_of(&job.a);
-                let weight_fp = combine_fingerprints(job.bs.iter().map(&mut fp_of));
+                let act_fp = match &a_slice {
+                    Some(t) => fingerprint(&[t]),
+                    None => {
+                        let a = ops.a;
+                        *a_fp.get_or_insert_with(|| fingerprint(&[a]))
+                    }
+                };
+                let weight_fp = match &b_slices {
+                    Some(ts) => combine_fingerprints(ts.iter().map(|t| fingerprint(&[t]))),
+                    None => {
+                        let fps: Vec<u128> = ops
+                            .bs
+                            .iter()
+                            .enumerate()
+                            .map(|(j, b)| *bs_fp[j].get_or_insert_with(|| fingerprint(&[*b])))
+                            .collect();
+                        combine_fingerprints(fps)
+                    }
+                };
                 self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
             } else {
                 Probe::Miss(None)
             };
+
             match probe {
                 Probe::Hit(res) => {
-                    slots.push(Some(res));
-                    hit.push(true);
-                    keys.push(None);
+                    slots[i] = Some(res);
+                    hit[i] = true;
                 }
                 Probe::Miss(key) => {
-                    slots.push(None);
-                    hit.push(false);
-                    keys.push(key);
+                    keys[i] = key;
+                    let a_sh = match a_slice {
+                        Some(t) => Arc::new(t),
+                        None => ops.share_a(),
+                    };
+                    let bs_sh: Vec<Arc<Mat>> = match b_slices {
+                        Some(ts) => ts.into_iter().map(Arc::new).collect(),
+                        None => (0..ops.bs.len()).map(|j| ops.share_b(j)).collect(),
+                    };
+                    match &mut self.engine {
+                        Engine::Pool(pool) => {
+                            pool.submit(ShardJob {
+                                seq: i,
+                                submitted: Instant::now(),
+                                work: ShardWork::Run {
+                                    a: a_sh,
+                                    bs: bs_sh,
+                                    mode,
+                                    runtime_interleave,
+                                },
+                                reply: done_tx.clone(),
+                            });
+                            submitted += 1;
+                        }
+                        Engine::PerRun { .. } => {
+                            pending.push(PendingShard { seq: i, a: a_sh, bs: bs_sh })
+                        }
+                    }
                 }
             }
         }
+        // Drop our reply sender: the collector below must see a disconnect
+        // (not a hang) if any in-flight job is lost with a dead worker.
+        drop(done_tx);
 
-        // Execute the misses concurrently, one core per shard (shard count
-        // never exceeds the core count, so the pairing is 1:1). A single
-        // miss runs inline — no point paying a thread spawn for it.
-        let misses: Vec<usize> = (0..jobs.len()).filter(|&i| !hit[i]).collect();
-        if misses.len() == 1 {
-            let only = misses[0];
-            let job = &jobs[only];
-            let refs: Vec<&Mat> = job.bs.iter().map(|c| &**c).collect();
-            let res = self.cores[0]
-                .run_set(&job.a, &refs, mode, runtime_interleave)
-                .map_err(|e| anyhow!("shard {only}: {e:#}"))?;
-            self.store(keys[only], mode, runtime_interleave, &res);
-            slots[only] = Some(res);
-        } else if !misses.is_empty() {
-            let executed: Vec<(usize, Result<CoSimResult>)> = std::thread::scope(|scope| {
-                let mut cores = self.cores.iter_mut();
-                let handles: Vec<_> = misses
-                    .iter()
-                    .map(|&i| {
-                        let core = cores.next().expect("shards <= cores");
-                        let job = &jobs[i];
-                        let h = scope.spawn(move || {
-                            let refs: Vec<&Mat> = job.bs.iter().map(|c| &**c).collect();
-                            core.run_set(&job.a, &refs, mode, runtime_interleave)
-                        });
-                        (i, h)
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|(i, h)| (i, h.join().expect("shard worker panicked")))
-                    .collect()
-            });
-            for (i, res) in executed {
-                let res = res.map_err(|e| anyhow!("shard {i}: {e:#}"))?;
-                self.store(keys[i], mode, runtime_interleave, &res);
-                slots[i] = Some(res);
+        // Per-run engine: fan out the gathered misses (inline when single).
+        if !pending.is_empty() {
+            let executed = match &mut self.engine {
+                Engine::PerRun { cores } => run_pending(cores, &pending, mode, runtime_interleave),
+                Engine::Pool(_) => unreachable!("pending shards only accumulate in per-run mode"),
+            };
+            for (seq, res) in executed {
+                let res = res.map_err(|e| anyhow!("shard {seq}: {e:#}"))?;
+                self.store(keys[seq], mode, runtime_interleave, &res);
+                slots[seq] = Some(res);
+            }
+        }
+        // Pool engine: collect completions (arrival order is irrelevant —
+        // results are keyed back to their plan slots).
+        for _ in 0..submitted {
+            match done_rx.recv() {
+                Ok(d) => {
+                    let res = d.result.map_err(|e| anyhow!("shard {}: {e}", d.seq))?;
+                    self.store(keys[d.seq], mode, runtime_interleave, &res);
+                    slots[d.seq] = Some(res);
+                }
+                Err(_) => return Err(anyhow!("cluster worker pool disconnected")),
             }
         }
 
@@ -286,17 +626,22 @@ impl ClusterScheduler {
             .map(|(r, _)| r)
             .collect();
         let tile_bytes = (self.n * self.n) as u64;
-        let (cycles, passes, energy_j, memory) =
+        let (exec_cycles, passes, energy_j, memory) =
             combine_accounting(self.cfg.split, &executed_refs, tile_bytes);
+        // The K-split's cross-core accumulate is charged explicitly (it
+        // used to be modeled as free). It depends only on the plan shape,
+        // so warm (fully cached) K-split runs still pay for reassembly.
+        let cycles = exec_cycles
+            + reduce_cycles(self.cfg.split, plans.len(), m, nc, ops.bs.len(), self.n);
         let shard_outputs: Vec<Vec<Mat>> =
             shard_results.into_iter().map(|r| r.outputs).collect();
-        let outputs = assemble_outputs(m, nc, bs.len(), &plans, &shard_outputs);
+        let outputs = assemble_outputs(m, nc, ops.bs.len(), &plans, &shard_outputs);
 
         Ok(ClusterRun {
             result: CoSimResult { outputs, passes, cycles, energy_j, memory },
             shards: plans.len(),
             per_core_cycles,
-            cache: self.cache.stats().delta_since(&stats0),
+            cache: self.cache_stats().delta_since(&stats0),
         })
     }
 
@@ -312,14 +657,41 @@ impl ClusterScheduler {
         assert!(!members.is_empty());
         let first = members[0];
         let mode = select_mode(first.weight_bits, first.act_act);
-        let bs: Vec<&Mat> = members.iter().flat_map(|m| m.bs.iter().map(|b| b.as_ref())).collect();
-        let run = self.run_gemm_set(&first.a, &bs, mode, runtime_interleave)?;
+        let bs: Vec<&Arc<Mat>> = members.iter().flat_map(|m| m.bs.iter()).collect();
+        let run = self.run_gemm_set_shared(&first.a, &bs, mode, runtime_interleave)?;
         Ok(attribute_members(members, &run.result))
     }
 
-    /// Probe the cache under precomputed fingerprints (the caller derives
-    /// `weight_fp` via [`combine_fingerprints`] over per-matrix
-    /// fingerprints so borrowed operands can be memoized).
+    /// Execute the whole (unsharded) GEMM set on one core.
+    fn exec_whole(
+        &mut self,
+        ops: &mut Operands<'_>,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Result<CoSimResult> {
+        match &mut self.engine {
+            Engine::PerRun { cores } => cores[0].run_set(ops.a, &ops.bs, mode, runtime_interleave),
+            Engine::Pool(pool) => {
+                let (reply, done) = channel();
+                let a = ops.share_a();
+                let bs: Vec<Arc<Mat>> = (0..ops.bs.len()).map(|j| ops.share_b(j)).collect();
+                pool.submit(ShardJob {
+                    seq: 0,
+                    submitted: Instant::now(),
+                    work: ShardWork::Run { a, bs, mode, runtime_interleave },
+                    reply,
+                });
+                match done.recv() {
+                    Ok(d) => d.result.map_err(|e| anyhow!("shard 0: {e}")),
+                    Err(_) => Err(anyhow!("cluster worker pool disconnected")),
+                }
+            }
+        }
+    }
+
+    /// Probe the cache under precomputed fingerprints. Callers must check
+    /// [`SharedWeightCache::enabled`] first — a disabled cache stays
+    /// silent in both the local and the global counters.
     fn probe_with(
         &mut self,
         weight_fp: u128,
@@ -327,16 +699,25 @@ impl ClusterScheduler {
         mode: PrecisionMode,
         runtime_interleave: bool,
     ) -> Probe {
-        match self.cache.lookup(weight_fp, act_fp, mode, runtime_interleave) {
-            Some(mut res) => {
+        match self.cache.lookup(self.cache_id, weight_fp, act_fp, mode, runtime_interleave) {
+            Some((cached, cross_owner)) => {
+                self.local_cache.hits += 1;
+                if cross_owner {
+                    self.local_cache.shared_hits += 1;
+                }
                 // a hit skips execution: outputs reused, accounting zeroed
+                // (the deep copy happens here, outside the store's mutex)
+                let mut res = (*cached).clone();
                 res.passes = 0;
                 res.cycles = 0;
                 res.energy_j = 0.0;
                 res.memory = Default::default();
                 Probe::Hit(res)
             }
-            None => Probe::Miss(Some((weight_fp, act_fp))),
+            None => {
+                self.local_cache.misses += 1;
+                Probe::Miss(Some((weight_fp, act_fp)))
+            }
         }
     }
 
@@ -348,9 +729,69 @@ impl ClusterScheduler {
         res: &CoSimResult,
     ) {
         if let Some((weight_fp, act_fp)) = key {
-            self.cache.insert(weight_fp, act_fp, mode, runtime_interleave, res.clone());
+            self.local_cache.evictions += self.cache.insert(
+                self.cache_id,
+                weight_fp,
+                act_fp,
+                mode,
+                runtime_interleave,
+                res.clone(),
+            );
         }
     }
+
+    /// Test hook: push a panicking job through the persistent pool and
+    /// return what the submitter observes.
+    #[cfg(test)]
+    fn inject_panic_for_test(&mut self) -> Result<CoSimResult, String> {
+        match &mut self.engine {
+            Engine::Pool(pool) => {
+                let (reply, done) = channel();
+                pool.submit(ShardJob {
+                    seq: 0,
+                    submitted: Instant::now(),
+                    work: ShardWork::Panic,
+                    reply,
+                });
+                done.recv().expect("pool must reply, not hang").result
+            }
+            Engine::PerRun { .. } => panic!("panic injection requires the persistent pool"),
+        }
+    }
+}
+
+/// Execute the per-run engine's gathered misses: scoped threads, one core
+/// per shard (shard count never exceeds the core count, so the pairing is
+/// 1:1); a single miss runs inline — no point paying a thread spawn for it.
+fn run_pending(
+    cores: &mut [CoreScheduler],
+    pending: &[PendingShard],
+    mode: PrecisionMode,
+    runtime_interleave: bool,
+) -> Vec<(usize, Result<CoSimResult>)> {
+    if pending.len() == 1 {
+        let p = &pending[0];
+        let refs: Vec<&Mat> = p.bs.iter().map(|b| b.as_ref()).collect();
+        return vec![(p.seq, cores[0].run_set(&p.a, &refs, mode, runtime_interleave))];
+    }
+    std::thread::scope(|scope| {
+        let mut cores = cores.iter_mut();
+        let handles: Vec<_> = pending
+            .iter()
+            .map(|p| {
+                let core = cores.next().expect("shards <= cores");
+                let h = scope.spawn(move || {
+                    let refs: Vec<&Mat> = p.bs.iter().map(|b| b.as_ref()).collect();
+                    core.run_set(&p.a, &refs, mode, runtime_interleave)
+                });
+                (p.seq, h)
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|(s, h)| (s, h.join().expect("shard worker panicked")))
+            .collect()
+    })
 }
 
 #[cfg(test)]
@@ -358,7 +799,6 @@ mod tests {
     use super::*;
     use crate::cluster::partitioner::ShardSplit;
     use crate::testutil::Rng;
-    use std::sync::Arc;
 
     fn cluster(cores: usize, split: ShardSplit, n: usize) -> ClusterScheduler {
         ClusterScheduler::new(
@@ -381,11 +821,44 @@ mod tests {
             assert_eq!(run.result.outputs[0], want, "{split}");
             assert!(run.shards > 1, "{split}: expected sharding");
             assert_eq!(run.per_core_cycles.len(), run.shards);
+            let reduce = reduce_cycles(split, run.shards, 48, 32, 1, 8);
             assert_eq!(
                 run.result.cycles,
-                *run.per_core_cycles.iter().max().unwrap(),
-                "{split}: cluster latency = max over cores"
+                *run.per_core_cycles.iter().max().unwrap() + reduce,
+                "{split}: cluster latency = max over cores + reduce step"
             );
+        }
+    }
+
+    #[test]
+    fn pool_modes_agree_field_by_field() {
+        let mut rng = Rng::seeded(52);
+        let a = Mat::random(&mut rng, 40, 24, 8);
+        let b1 = Mat::random(&mut rng, 24, 32, 2);
+        let b2 = Mat::random(&mut rng, 24, 32, 2);
+        for split in ShardSplit::ALL {
+            let cfg = ClusterConfig::with_cores(3).with_split(split);
+            let mut pool = ClusterScheduler::new(
+                Architecture::Adip,
+                8,
+                Backend::Functional,
+                cfg.with_pool(PoolMode::Persistent),
+            );
+            let mut spawn = ClusterScheduler::new(
+                Architecture::Adip,
+                8,
+                Backend::Functional,
+                cfg.with_pool(PoolMode::PerRun),
+            );
+            let rp = pool.run_gemm_set(&a, &[&b1, &b2], PrecisionMode::W2, false).unwrap();
+            let rs = spawn.run_gemm_set(&a, &[&b1, &b2], PrecisionMode::W2, false).unwrap();
+            assert_eq!(rp.result.outputs, rs.result.outputs, "{split}");
+            assert_eq!(rp.result.cycles, rs.result.cycles, "{split}");
+            assert_eq!(rp.result.passes, rs.result.passes, "{split}");
+            assert_eq!(rp.result.memory, rs.result.memory, "{split}");
+            assert_eq!(rp.per_core_cycles, rs.per_core_cycles, "{split}");
+            assert!(pool.pool_stats().dispatched > 0);
+            assert_eq!(spawn.pool_stats(), PoolStats::default());
         }
     }
 
@@ -452,13 +925,112 @@ mod tests {
         let warm = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
         assert_eq!(warm.result.outputs, cold.result.outputs, "hits must be bit-exact");
         assert_eq!(warm.cache.hits, cold.cache.misses, "every shard served from cache");
-        assert_eq!(warm.result.cycles, 0, "fully cached run skips execution");
+        assert_eq!(warm.cache.shared_hits, 0, "own entries are not shared hits");
+        assert_eq!(warm.result.cycles, 0, "fully cached M-split run skips execution");
         assert_eq!(warm.result.memory, Default::default());
         // different activation, same weights: misses into fresh entries
         let a2 = Mat::random(&mut rng, 64, 32, 8);
         let other = c.run_gemm(&a2, &b, PrecisionMode::W2, false).unwrap();
         assert_eq!(other.cache.hits, 0);
         assert_eq!(other.result.outputs[0], a2.matmul(&b));
+    }
+
+    #[test]
+    fn warm_pool_repeat_invocations_stay_bit_exact() {
+        let mut rng = Rng::seeded(59);
+        let a = Mat::random(&mut rng, 48, 32, 8);
+        let b = Mat::random(&mut rng, 32, 40, 4);
+        let mut core = CoreScheduler::with_backend(Architecture::Adip, 8, Backend::Functional);
+        let fresh = core.run_set(&a, &[&b], PrecisionMode::W4, false).unwrap();
+        let mut mesh = cluster(4, ShardSplit::M, 8);
+        for round in 0..4 {
+            let run = mesh.run_gemm(&a, &b, PrecisionMode::W4, false).unwrap();
+            assert_eq!(run.result.outputs, fresh.outputs, "round {round}");
+            assert_eq!(run.result.passes, fresh.passes, "round {round}");
+        }
+        let stats = mesh.pool_stats();
+        assert_eq!(stats.workers, 4);
+        assert_eq!(stats.dispatched, 4 * 4, "4 shards per round, 4 rounds, no respawn");
+        assert_eq!(stats.worker_panics, 0);
+    }
+
+    #[test]
+    fn panicked_worker_surfaces_error_and_pool_recovers() {
+        let mut c = cluster(2, ShardSplit::M, 8);
+        let err = c.inject_panic_for_test().unwrap_err();
+        assert!(err.contains("panicked"), "{err}");
+        assert_eq!(c.pool_stats().worker_panics, 1);
+        // the pool rebuilt the panicked core and keeps serving correctly
+        let mut rng = Rng::seeded(61);
+        let a = Mat::random(&mut rng, 32, 16, 8);
+        let b = Mat::random(&mut rng, 16, 16, 2);
+        let run = c.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(run.result.outputs[0], a.matmul(&b));
+    }
+
+    #[test]
+    fn dropping_the_pool_drains_queued_shards() {
+        let mut rng = Rng::seeded(63);
+        let a = Arc::new(Mat::random(&mut rng, 16, 16, 8));
+        let b = Arc::new(Mat::random(&mut rng, 16, 16, 2));
+        let pool = WorkerPool::new(Architecture::Adip, 8, Backend::Functional, 1);
+        let (reply, done) = channel();
+        for seq in 0..6 {
+            pool.submit(ShardJob {
+                seq,
+                submitted: Instant::now(),
+                work: ShardWork::Run {
+                    a: a.clone(),
+                    bs: vec![b.clone()],
+                    mode: PrecisionMode::W2,
+                    runtime_interleave: false,
+                },
+                reply: reply.clone(),
+            });
+        }
+        drop(reply);
+        // Dropping the pool closes the queue and joins the worker — which
+        // must first drain every queued shard.
+        drop(pool);
+        let results: Vec<ShardDone> = done.iter().collect();
+        assert_eq!(results.len(), 6, "all queued shards answered before join");
+        for d in results {
+            assert_eq!(d.result.unwrap().outputs[0], a.matmul(&b));
+        }
+    }
+
+    #[test]
+    fn shared_cache_serves_sibling_schedulers() {
+        let mut rng = Rng::seeded(65);
+        let a = Mat::random(&mut rng, 32, 16, 8);
+        let b = Mat::random(&mut rng, 16, 16, 2);
+        let store = SharedWeightCache::new(crate::cluster::CacheConfig { capacity: 16 });
+        let cfg = ClusterConfig::with_cores(1).with_cache(16);
+        let mut first = ClusterScheduler::with_shared_cache(
+            Architecture::Adip,
+            8,
+            Backend::Functional,
+            cfg,
+            store.clone(),
+        );
+        let mut second = ClusterScheduler::with_shared_cache(
+            Architecture::Adip,
+            8,
+            Backend::Functional,
+            cfg,
+            store.clone(),
+        );
+        let cold = first.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(cold.cache.misses, 1);
+        // the sibling never executed this GEMM, yet hits the shared entry
+        let warm = second.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        assert_eq!(warm.cache.hits, 1);
+        assert_eq!(warm.cache.shared_hits, 1, "hit on a sibling's entry");
+        assert_eq!(warm.result.outputs, cold.result.outputs, "byte-identical reuse");
+        assert_eq!(warm.result.cycles, 0);
+        let global = store.stats();
+        assert_eq!((global.hits, global.misses), (1, 1));
+        assert_eq!(global.shared_hits, 1);
     }
 
     #[test]

@@ -14,6 +14,19 @@
 //! — also keeps M-split shards distinct: their weight slices are
 //! identical full copies of `B` and only their activation slices differ.)
 //!
+//! # Cross-worker sharing
+//!
+//! [`SharedWeightCache`] wraps one [`WeightCache`] store in an
+//! `Arc<Mutex<…>>` so *several* cluster schedulers — e.g. every worker of
+//! one [`crate::coordinator::Coordinator`] — can reuse each other's
+//! entries: sibling workers stop re-executing identical projection tiles
+//! one of them already computed. Each attached scheduler registers for an
+//! owner id; entries remember which owner inserted them, and a hit on
+//! another owner's entry is additionally counted as a `shared_hit`
+//! (surfaced as `adip_weight_cache_shared_hits_total`). Sharing cannot
+//! change results: a hit is bit-exact by key construction regardless of
+//! which worker computed the entry.
+//!
 //! **Accounting rule:** a hit contributes *zero* simulated cycles, energy
 //! and memory traffic — the execution is skipped entirely — and is
 //! reported through the `cache_hits` / `cache_misses` / `cache_evictions`
@@ -26,6 +39,8 @@
 //! ~2⁻¹²⁸ per pair this is accepted and documented rather than re-verified.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
 
 use crate::dataflow::Mat;
 use crate::quant::PrecisionMode;
@@ -50,6 +65,9 @@ impl CacheConfig {
 pub struct CacheStats {
     /// Lookups answered from the cache.
     pub hits: u64,
+    /// Subset of `hits` served from an entry a *different* owner (sibling
+    /// worker on the same shared store) inserted.
+    pub shared_hits: u64,
     /// Lookups that missed (unknown weights, activation, or mode).
     pub misses: u64,
     /// Live entries removed under LRU capacity pressure.
@@ -63,6 +81,7 @@ impl CacheStats {
     pub fn delta_since(&self, earlier: &CacheStats) -> CacheStats {
         CacheStats {
             hits: self.hits - earlier.hits,
+            shared_hits: self.shared_hits - earlier.shared_hits,
             misses: self.misses - earlier.misses,
             evictions: self.evictions - earlier.evictions,
             entries: self.entries,
@@ -116,8 +135,15 @@ struct WeightKey {
 }
 
 struct Entry {
-    result: CoSimResult,
+    /// `Arc`'d so a hit hands back a cheap handle: the deep copy of the
+    /// outputs (needed because hits mutate accounting to zero) happens in
+    /// the *caller*, outside the shared store's mutex — sibling workers
+    /// never serialize behind each other's result copies.
+    result: Arc<CoSimResult>,
     stamp: u64,
+    /// Which registered owner (scheduler) inserted this entry — a hit by
+    /// any *other* owner is a shared (cross-worker) hit.
+    owner: u64,
 }
 
 /// LRU map from weight-tile fingerprints to shard execution results.
@@ -144,16 +170,19 @@ impl WeightCache {
         CacheStats { entries: self.map.len(), ..self.stats }
     }
 
-    /// Look up a shard execution. A hit returns the cached result (outputs
-    /// are bit-exact by key construction) and counts `hits`; any miss
-    /// counts `misses`.
+    /// Look up a shard execution for `requester`. A hit returns a handle
+    /// to the cached result (outputs are bit-exact by key construction)
+    /// plus whether the entry was inserted by a different owner (a
+    /// cross-worker hit), and counts `hits`/`shared_hits`; any miss counts
+    /// `misses`.
     pub fn lookup(
         &mut self,
+        requester: u64,
         weight_fp: u128,
         act_fp: u128,
         mode: PrecisionMode,
         runtime_interleave: bool,
-    ) -> Option<CoSimResult> {
+    ) -> Option<(Arc<CoSimResult>, bool)> {
         if !self.enabled() {
             return None;
         }
@@ -163,7 +192,11 @@ impl WeightCache {
             Some(e) => {
                 e.stamp = self.clock;
                 self.stats.hits += 1;
-                Some(e.result.clone())
+                let cross_owner = e.owner != requester;
+                if cross_owner {
+                    self.stats.shared_hits += 1;
+                }
+                Some((e.result.clone(), cross_owner))
             }
             None => {
                 self.stats.misses += 1;
@@ -172,24 +205,28 @@ impl WeightCache {
         }
     }
 
-    /// Insert the result of an executed shard, evicting the
-    /// least-recently-used entries while over capacity.
+    /// Insert the result of a shard `owner` executed, evicting the
+    /// least-recently-used entries while over capacity. Returns how many
+    /// evictions this insert caused (for the inserter's local accounting).
     pub fn insert(
         &mut self,
+        owner: u64,
         weight_fp: u128,
         act_fp: u128,
         mode: PrecisionMode,
         runtime_interleave: bool,
         result: CoSimResult,
-    ) {
+    ) -> u64 {
         if !self.enabled() {
-            return;
+            return 0;
         }
         let key = WeightKey { weight_fp, act_fp, mode, runtime_interleave };
         self.clock += 1;
         // A same-key insert (duplicate shards in one run, all probed before
-        // any executes) replaces a bit-identical result — not an eviction.
-        self.map.insert(key, Entry { result, stamp: self.clock });
+        // any executes — or sibling workers racing on one request) replaces
+        // a bit-identical result — not an eviction.
+        self.map.insert(key, Entry { result: Arc::new(result), stamp: self.clock, owner });
+        let mut evicted = 0;
         while self.map.len() > self.cfg.capacity {
             // O(capacity) victim scan — accepted: capacities are small
             // (≤ ~512) and the scan is dwarfed by the operand hashing a
@@ -203,7 +240,87 @@ impl WeightCache {
                 .expect("non-empty over-capacity map");
             self.map.remove(&lru);
             self.stats.evictions += 1;
+            evicted += 1;
         }
+        evicted
+    }
+}
+
+/// One weight-cache store shared by any number of cluster schedulers.
+///
+/// Cloning the handle shares the underlying store. Each scheduler calls
+/// [`SharedWeightCache::register`] once to obtain its owner id; the store
+/// then distinguishes a worker re-hitting its own entries from a worker
+/// reusing a sibling's (`shared_hits`). All operations take the mutex for
+/// the duration of one map access only — shard execution never holds it.
+#[derive(Clone)]
+pub struct SharedWeightCache {
+    cfg: CacheConfig,
+    inner: Arc<Mutex<WeightCache>>,
+    next_id: Arc<AtomicU64>,
+}
+
+impl SharedWeightCache {
+    /// A fresh store under `cfg` (capacity 0 = caching off).
+    pub fn new(cfg: CacheConfig) -> SharedWeightCache {
+        SharedWeightCache {
+            cfg,
+            inner: Arc::new(Mutex::new(WeightCache::new(cfg))),
+            next_id: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    /// Whether lookups can ever hit.
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Allocate a unique owner id for one attaching scheduler.
+    pub fn register(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Global counters across every attached scheduler.
+    pub fn stats(&self) -> CacheStats {
+        self.lock().stats()
+    }
+
+    /// Current live entries.
+    pub fn entries(&self) -> usize {
+        self.lock().map.len()
+    }
+
+    /// [`WeightCache::lookup`] under the store lock. The returned handle
+    /// lets the caller deep-copy (and re-account) the result *after* the
+    /// lock is released.
+    pub fn lookup(
+        &self,
+        requester: u64,
+        weight_fp: u128,
+        act_fp: u128,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+    ) -> Option<(Arc<CoSimResult>, bool)> {
+        self.lock().lookup(requester, weight_fp, act_fp, mode, runtime_interleave)
+    }
+
+    /// [`WeightCache::insert`] under the store lock.
+    pub fn insert(
+        &self,
+        owner: u64,
+        weight_fp: u128,
+        act_fp: u128,
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+        result: CoSimResult,
+    ) -> u64 {
+        self.lock().insert(owner, weight_fp, act_fp, mode, runtime_interleave, result)
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, WeightCache> {
+        // Cache operations never panic mid-mutation; recover the guard
+        // rather than poisoning every sibling worker if one ever does.
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
     }
 }
 
@@ -212,6 +329,9 @@ mod tests {
     use super::*;
     use crate::sim::MemoryCounters;
     use crate::testutil::Rng;
+
+    /// Owner id used where cross-owner attribution is not under test.
+    const ME: u64 = 0;
 
     fn result(cycles: u64) -> CoSimResult {
         CoSimResult {
@@ -241,34 +361,48 @@ mod tests {
     #[test]
     fn hit_requires_matching_activation() {
         let mut c = WeightCache::new(CacheConfig { capacity: 4 });
-        c.insert(1, 100, PrecisionMode::W2, false, result(10));
-        assert!(c.lookup(1, 100, PrecisionMode::W2, false).is_some());
-        assert!(c.lookup(1, 200, PrecisionMode::W2, false).is_none(), "other activation");
-        assert!(c.lookup(1, 100, PrecisionMode::W4, false).is_none(), "other mode");
-        assert!(c.lookup(1, 100, PrecisionMode::W2, true).is_none(), "other interleave");
-        assert!(c.lookup(2, 100, PrecisionMode::W2, false).is_none(), "other weights");
+        c.insert(ME, 1, 100, PrecisionMode::W2, false, result(10));
+        assert!(c.lookup(ME, 1, 100, PrecisionMode::W2, false).is_some());
+        assert!(c.lookup(ME, 1, 200, PrecisionMode::W2, false).is_none(), "other activation");
+        assert!(c.lookup(ME, 1, 100, PrecisionMode::W4, false).is_none(), "other mode");
+        assert!(c.lookup(ME, 1, 100, PrecisionMode::W2, true).is_none(), "other interleave");
+        assert!(c.lookup(ME, 2, 100, PrecisionMode::W2, false).is_none(), "other weights");
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 4, 1));
+        assert_eq!(s.shared_hits, 0, "own entry: not a shared hit");
+    }
+
+    #[test]
+    fn cross_owner_hits_are_counted_as_shared() {
+        let mut c = WeightCache::new(CacheConfig { capacity: 4 });
+        c.insert(7, 1, 1, PrecisionMode::W2, false, result(5));
+        let (_, cross) = c.lookup(7, 1, 1, PrecisionMode::W2, false).unwrap();
+        assert!(!cross, "owner re-hits its own entry");
+        let (res, cross) = c.lookup(9, 1, 1, PrecisionMode::W2, false).unwrap();
+        assert!(cross, "sibling hit is a shared hit");
+        assert_eq!(res.cycles, 5, "shared hits return the identical result");
+        let s = c.stats();
+        assert_eq!((s.hits, s.shared_hits), (2, 1));
     }
 
     #[test]
     fn lru_eviction_under_capacity_pressure() {
         let mut c = WeightCache::new(CacheConfig { capacity: 2 });
-        c.insert(1, 1, PrecisionMode::W8, false, result(1));
-        c.insert(2, 1, PrecisionMode::W8, false, result(2));
-        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some()); // touch 1: 2 is now LRU
-        c.insert(3, 1, PrecisionMode::W8, false, result(3));
+        assert_eq!(c.insert(ME, 1, 1, PrecisionMode::W8, false, result(1)), 0);
+        assert_eq!(c.insert(ME, 2, 1, PrecisionMode::W8, false, result(2)), 0);
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some()); // touch 1: 2 is now LRU
+        assert_eq!(c.insert(ME, 3, 1, PrecisionMode::W8, false, result(3)), 1);
         assert_eq!(c.stats().evictions, 1);
-        assert!(c.lookup(2, 1, PrecisionMode::W8, false).is_none(), "2 evicted as LRU");
-        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(ME, 2, 1, PrecisionMode::W8, false).is_none(), "2 evicted as LRU");
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some());
         // same weights under a new activation occupy their own entry
         // (bit-exactness: the activation is part of the key), evicting the
         // LRU entry (3) — the old (1, act 1) result still hits
-        c.insert(1, 9, PrecisionMode::W8, false, result(4));
+        assert_eq!(c.insert(ME, 1, 9, PrecisionMode::W8, false, result(4)), 1);
         assert_eq!(c.stats().evictions, 2);
-        assert!(c.lookup(1, 9, PrecisionMode::W8, false).is_some());
-        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
-        assert!(c.lookup(3, 1, PrecisionMode::W8, false).is_none(), "3 evicted as LRU");
+        assert!(c.lookup(ME, 1, 9, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(ME, 3, 1, PrecisionMode::W8, false).is_none(), "3 evicted as LRU");
         assert_eq!(c.stats().entries, 2);
     }
 
@@ -278,12 +412,12 @@ mod tests {
         // copy of B (equal weight_fp) while activation slices differ —
         // each shard must get its own entry, not displace its siblings.
         let mut c = WeightCache::new(CacheConfig { capacity: 8 });
-        c.insert(7, 100, PrecisionMode::W2, false, result(1));
-        c.insert(7, 200, PrecisionMode::W2, false, result(2));
+        c.insert(ME, 7, 100, PrecisionMode::W2, false, result(1));
+        c.insert(ME, 7, 200, PrecisionMode::W2, false, result(2));
         assert_eq!(c.stats().evictions, 0);
         assert_eq!(c.stats().entries, 2);
-        assert!(c.lookup(7, 100, PrecisionMode::W2, false).is_some());
-        assert!(c.lookup(7, 200, PrecisionMode::W2, false).is_some());
+        assert!(c.lookup(ME, 7, 100, PrecisionMode::W2, false).is_some());
+        assert!(c.lookup(ME, 7, 200, PrecisionMode::W2, false).is_some());
         assert_eq!(c.stats().hits, 2);
     }
 
@@ -291,8 +425,8 @@ mod tests {
     fn disabled_cache_never_stores() {
         let mut c = WeightCache::new(CacheConfig::default());
         assert!(!c.enabled());
-        c.insert(1, 1, PrecisionMode::W8, false, result(1));
-        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_none());
+        assert_eq!(c.insert(ME, 1, 1, PrecisionMode::W8, false, result(1)), 0);
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_none());
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.evictions, s.entries), (0, 0, 0, 0));
     }
@@ -308,11 +442,28 @@ mod tests {
     #[test]
     fn stats_delta() {
         let mut c = WeightCache::new(CacheConfig { capacity: 2 });
-        c.insert(1, 1, PrecisionMode::W8, false, result(1));
+        c.insert(ME, 1, 1, PrecisionMode::W8, false, result(1));
         let before = c.stats();
-        assert!(c.lookup(1, 1, PrecisionMode::W8, false).is_some());
-        assert!(c.lookup(9, 1, PrecisionMode::W8, false).is_none());
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some());
+        assert!(c.lookup(ME, 9, 1, PrecisionMode::W8, false).is_none());
         let d = c.stats().delta_since(&before);
         assert_eq!((d.hits, d.misses), (1, 1));
+    }
+
+    #[test]
+    fn shared_store_clones_share_entries_and_ids_stay_unique() {
+        let store = SharedWeightCache::new(CacheConfig { capacity: 4 });
+        let a = store.register();
+        let b = store.clone().register();
+        assert_ne!(a, b, "every attached scheduler gets its own owner id");
+        assert!(store.enabled());
+        store.insert(a, 1, 1, PrecisionMode::W2, false, result(3));
+        let (res, cross) = store.clone().lookup(b, 1, 1, PrecisionMode::W2, false).unwrap();
+        assert!(cross);
+        assert_eq!(res.cycles, 3);
+        assert_eq!(store.entries(), 1);
+        let s = store.stats();
+        assert_eq!((s.hits, s.shared_hits, s.misses), (1, 1, 0));
+        assert!(!SharedWeightCache::new(CacheConfig::default()).enabled());
     }
 }

@@ -51,15 +51,28 @@ pub struct Metrics {
     pub memory_bytes: AtomicU64,
     /// Weight-tile cache hits (shards served without re-execution).
     pub cache_hits: AtomicU64,
+    /// Subset of `cache_hits` served from an entry another worker of the
+    /// shared store inserted (cross-worker reuse).
+    pub cache_shared_hits: AtomicU64,
     /// Weight-tile cache misses (shards that executed).
     pub cache_misses: AtomicU64,
     /// Weight-tile cache evictions (LRU capacity pressure).
     pub cache_evictions: AtomicU64,
     /// Current queue depth.
     pub queue_depth: AtomicU64,
+    /// Persistent cluster-pool workers across all coordinator workers
+    /// (gauge; 0 for the per-run engine and for single-core clusters,
+    /// which execute inline without pool threads).
+    pub pool_workers: AtomicU64,
+    /// Shards dispatched to persistent pool workers.
+    pub pool_shards_dispatched: AtomicU64,
+    /// Pool shard executions that panicked (recovered per-worker).
+    pub pool_worker_panics: AtomicU64,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
+    /// Total seconds shards waited in pool queues before pickup.
+    pool_queue_seconds: AtomicF64,
     /// Bounded latency sample reservoir for percentile reporting:
     /// `(queue_s, service_s)` pairs, capped at [`Metrics::MAX_SAMPLES`].
     samples: std::sync::Mutex<Vec<(f32, f32)>>,
@@ -76,11 +89,33 @@ impl Metrics {
     }
 
     /// Record weight-tile cache activity (per-batch deltas from a worker's
-    /// cluster scheduler).
-    pub fn record_cache(&self, hits: u64, misses: u64, evictions: u64) {
+    /// cluster scheduler). `shared_hits` is the subset of `hits` served
+    /// from entries a sibling worker inserted into a shared store.
+    pub fn record_cache(&self, hits: u64, shared_hits: u64, misses: u64, evictions: u64) {
         self.cache_hits.fetch_add(hits, Ordering::Relaxed);
+        self.cache_shared_hits.fetch_add(shared_hits, Ordering::Relaxed);
         self.cache_misses.fetch_add(misses, Ordering::Relaxed);
         self.cache_evictions.fetch_add(evictions, Ordering::Relaxed);
+    }
+
+    /// Record persistent-pool activity (per-batch deltas from a worker's
+    /// cluster scheduler): shards dispatched, seconds those shards waited
+    /// in the pool queue, and worker panics survived.
+    pub fn record_pool(&self, dispatched: u64, queue_wait_s: f64, panics: u64) {
+        self.pool_shards_dispatched.fetch_add(dispatched, Ordering::Relaxed);
+        self.pool_worker_panics.fetch_add(panics, Ordering::Relaxed);
+        self.pool_queue_seconds.add(queue_wait_s);
+    }
+
+    /// Total seconds shards waited in pool queues before a worker pickup.
+    pub fn pool_queue_seconds_total(&self) -> f64 {
+        self.pool_queue_seconds.get()
+    }
+
+    /// Mean pool queue wait (s) per dispatched shard.
+    pub fn mean_pool_queue_seconds(&self) -> f64 {
+        let n = self.pool_shards_dispatched.load(Ordering::Relaxed).max(1);
+        self.pool_queue_seconds.get() / n as f64
     }
 
     /// Cap on retained latency samples (oldest kept; enough for stable
@@ -151,12 +186,33 @@ impl Metrics {
         s.push_str(&c("tile_passes_total", self.passes.load(Ordering::Relaxed)));
         s.push_str(&c("sim_memory_bytes_total", self.memory_bytes.load(Ordering::Relaxed)));
         s.push_str(&c("weight_cache_hits_total", self.cache_hits.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "weight_cache_shared_hits_total",
+            self.cache_shared_hits.load(Ordering::Relaxed),
+        ));
         s.push_str(&c("weight_cache_misses_total", self.cache_misses.load(Ordering::Relaxed)));
         s.push_str(&c(
             "weight_cache_evictions_total",
             self.cache_evictions.load(Ordering::Relaxed),
         ));
         s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
+        s.push_str(&c("pool_workers", self.pool_workers.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "pool_shards_dispatched_total",
+            self.pool_shards_dispatched.load(Ordering::Relaxed),
+        ));
+        s.push_str(&c(
+            "pool_worker_panics_total",
+            self.pool_worker_panics.load(Ordering::Relaxed),
+        ));
+        s.push_str(&format!(
+            "adip_pool_queue_seconds_total {:.6e}\n",
+            self.pool_queue_seconds_total()
+        ));
+        s.push_str(&format!(
+            "adip_pool_queue_seconds_mean {:.6e}\n",
+            self.mean_pool_queue_seconds()
+        ));
         s.push_str(&format!("adip_sim_energy_joules_total {:.6e}\n", self.energy_j()));
         s.push_str(&format!("adip_queue_seconds_mean {:.6e}\n", self.mean_queue_seconds()));
         s.push_str(&format!("adip_service_seconds_mean {:.6e}\n", self.mean_service_seconds()));
@@ -232,9 +288,15 @@ mod tests {
             "adip_batches_fused_total",
             "adip_sim_energy_joules_total",
             "adip_weight_cache_hits_total",
+            "adip_weight_cache_shared_hits_total",
             "adip_weight_cache_misses_total",
             "adip_weight_cache_evictions_total",
             "adip_queue_depth",
+            "adip_pool_workers",
+            "adip_pool_shards_dispatched_total",
+            "adip_pool_worker_panics_total",
+            "adip_pool_queue_seconds_total",
+            "adip_pool_queue_seconds_mean",
         ] {
             assert!(text.contains(key), "{key} missing from:\n{text}");
         }
@@ -243,12 +305,30 @@ mod tests {
     #[test]
     fn cache_counters_accumulate_and_render() {
         let m = Metrics::default();
-        m.record_cache(3, 2, 1);
-        m.record_cache(1, 0, 0);
+        m.record_cache(3, 1, 2, 1);
+        m.record_cache(1, 0, 0, 0);
         assert_eq!(m.cache_hits.load(Ordering::Relaxed), 4);
+        assert_eq!(m.cache_shared_hits.load(Ordering::Relaxed), 1);
         assert_eq!(m.cache_misses.load(Ordering::Relaxed), 2);
         assert_eq!(m.cache_evictions.load(Ordering::Relaxed), 1);
         assert!(m.render().contains("adip_weight_cache_hits_total 4"));
+        assert!(m.render().contains("adip_weight_cache_shared_hits_total 1"));
+    }
+
+    #[test]
+    fn pool_counters_accumulate_and_render() {
+        let m = Metrics::default();
+        m.pool_workers.store(8, Ordering::Relaxed);
+        m.record_pool(4, 0.25, 0);
+        m.record_pool(2, 0.15, 1);
+        assert_eq!(m.pool_shards_dispatched.load(Ordering::Relaxed), 6);
+        assert_eq!(m.pool_worker_panics.load(Ordering::Relaxed), 1);
+        assert!((m.pool_queue_seconds_total() - 0.4).abs() < 1e-12);
+        assert!((m.mean_pool_queue_seconds() - 0.4 / 6.0).abs() < 1e-12);
+        let text = m.render();
+        assert!(text.contains("adip_pool_workers 8"));
+        assert!(text.contains("adip_pool_shards_dispatched_total 6"));
+        assert!(text.contains("adip_pool_worker_panics_total 1"));
     }
 
     #[test]

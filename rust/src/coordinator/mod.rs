@@ -16,9 +16,11 @@
 //! * [`scheduler`] — turns batches into tile schedules on a core.
 //! * [`server`] — the bounded-queue, multi-worker coordinator with
 //!   backpressure and graceful shutdown. Each worker owns a
-//!   [`crate::cluster::ClusterScheduler`] (a degenerate 1-core cluster by
-//!   default), so `CoordinatorConfig::cluster` can shard every request
-//!   across a mesh of cores and cache repeated weight tiles.
+//!   [`crate::cluster::ClusterScheduler`] (a degenerate 1-core cluster on
+//!   the persistent pool engine by default), so
+//!   `CoordinatorConfig::cluster` can shard every request across a mesh of
+//!   cores; one coordinator-wide shared weight-cache store lets sibling
+//!   workers reuse each other's repeated projection tiles.
 //! * [`metrics`] — atomic counters with a Prometheus-style text dump.
 
 pub mod batcher;

@@ -1,6 +1,11 @@
 //! Core scheduler: executes a fused batch on one simulated array core.
 //!
-//! One [`CoreScheduler`] wraps one co-simulated array (a worker owns one).
+//! One [`CoreScheduler`] wraps one co-simulated array. It is the shard
+//! execution engine of the cluster layer — in the default
+//! [`crate::cluster::PoolMode::Persistent`] configuration each core is
+//! owned by a long-lived pool worker thread that runs
+//! [`CoreScheduler::run_set`] on queued shards (and is rebuilt from
+//! scratch if a shard panics mid-run).
 //! A batch's weight matrices are concatenated in member order, run as a
 //! shared-input multi-matrix GEMM set, and the outputs are routed back to
 //! their requests. Cycle/energy/memory accounting is attributed to members

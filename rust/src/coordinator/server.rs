@@ -4,11 +4,18 @@
 //! thread pool is the right tool anyway).
 //!
 //! ```text
-//! submit() ──▶ [bounded queue] ──▶ router thread ──▶ worker 0 (CoSim core)
+//! submit() ──▶ [bounded queue] ──▶ router thread ──▶ worker 0 (cluster)
 //!                  │ (reject when full = backpressure)   worker 1 …
 //!                  ▼                                     │
 //!             Metrics ◀──────── outcomes via per-request channels
 //! ```
+//!
+//! Each worker owns a [`ClusterScheduler`] — by default a persistent pool
+//! of per-core threads (see `cluster/mod.rs`) — and, unless
+//! `shared_weight_cache` is disabled, every worker shares one
+//! coordinator-wide [`SharedWeightCache`] store so siblings reuse each
+//! other's repeated projection tiles (surfaced as
+//! `adip_weight_cache_shared_hits_total`).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
@@ -19,7 +26,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::arch::{Architecture, Backend};
-use crate::cluster::{ClusterConfig, ClusterScheduler};
+use crate::cluster::{ClusterConfig, ClusterScheduler, PoolMode, SharedWeightCache};
 
 use super::batcher::form_batches;
 use super::metrics::Metrics;
@@ -49,9 +56,16 @@ pub struct CoordinatorConfig {
     /// `Backend::CycleAccurate` for calibration/validation runs where the
     /// register-level golden path must execute every request.
     pub backend: Backend,
-    /// Per-worker cluster execution: shard count, split axis and weight
-    /// cache (default: 1 core, M split, cache off).
+    /// Per-worker cluster execution: shard count, split axis, weight
+    /// cache and pool mode (default: 1 core, M split, cache off,
+    /// persistent pool).
     pub cluster: ClusterConfig,
+    /// Share one weight-cache store across every worker (default), so
+    /// siblings reuse each other's projection tiles (`shared_hits`); off =
+    /// one private store per worker. Irrelevant while the cache capacity
+    /// is 0, and can never change outputs either way (hits are bit-exact
+    /// by key construction).
+    pub shared_weight_cache: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -64,6 +78,7 @@ impl Default for CoordinatorConfig {
             batch_window: 16,
             backend: Backend::Functional,
             cluster: ClusterConfig::default(),
+            shared_weight_cache: true,
         }
     }
 }
@@ -89,6 +104,19 @@ impl Coordinator {
         assert!(cfg.workers > 0 && cfg.queue_capacity > 0 && cfg.batch_window > 0);
         let metrics = Arc::new(Metrics::default());
         let (ingress_tx, ingress_rx) = sync_channel::<Envelope>(cfg.queue_capacity);
+        // Single-core clusters execute inline (no pool threads), so the
+        // gauge only counts real persistent workers.
+        if cfg.cluster.pool == PoolMode::Persistent && cfg.cluster.effective_cores() > 1 {
+            metrics
+                .pool_workers
+                .store((cfg.workers * cfg.cluster.effective_cores()) as u64, Ordering::Relaxed);
+        }
+        // One weight-cache store per coordinator (the promoted cross-worker
+        // design): sibling workers reuse each other's projection tiles.
+        // `shared_weight_cache: false` falls back to a private store per
+        // worker.
+        let shared_cache =
+            cfg.shared_weight_cache.then(|| SharedWeightCache::new(cfg.cluster.cache));
 
         // worker channels
         let mut worker_txs = Vec::new();
@@ -97,10 +125,13 @@ impl Coordinator {
             let (tx, rx) = sync_channel::<WorkItem>(4);
             worker_txs.push(tx);
             let m = metrics.clone();
+            let cache = shared_cache
+                .clone()
+                .unwrap_or_else(|| SharedWeightCache::new(cfg.cluster.cache));
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adip-worker-{w}"))
-                    .spawn(move || worker_loop(rx, cfg, m))
+                    .spawn(move || worker_loop(rx, cfg, m, cache))
                     .expect("spawn worker"),
             );
         }
@@ -217,20 +248,34 @@ fn router_loop(
     }
 }
 
-fn worker_loop(rx: Receiver<WorkItem>, cfg: CoordinatorConfig, metrics: Arc<Metrics>) {
-    let mut core = ClusterScheduler::new(cfg.arch, cfg.n, cfg.backend, cfg.cluster);
+fn worker_loop(
+    rx: Receiver<WorkItem>,
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    cache: SharedWeightCache,
+) {
+    let mut core =
+        ClusterScheduler::with_shared_cache(cfg.arch, cfg.n, cfg.backend, cfg.cluster, cache);
     let mut cache_seen = core.cache_stats();
+    let mut pool_seen = core.pool_stats();
     while let Ok(item) = rx.recv() {
         let started = Instant::now();
         let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
         let outcome = core.execute_batch(&members, item.runtime_interleave);
-        // flush cache activity regardless of batch outcome (a failed batch
-        // may still have probed or populated the cache)
+        // flush cache + pool activity regardless of batch outcome (a
+        // failed batch may still have probed or populated the cache, or
+        // dispatched shards before erroring)
         let cache_now = core.cache_stats();
         let d = cache_now.delta_since(&cache_seen);
         cache_seen = cache_now;
         if d.hits + d.misses + d.evictions > 0 {
-            metrics.record_cache(d.hits, d.misses, d.evictions);
+            metrics.record_cache(d.hits, d.shared_hits, d.misses, d.evictions);
+        }
+        let pool_now = core.pool_stats();
+        let pd = pool_now.delta_since(&pool_seen);
+        pool_seen = pool_now;
+        if pd.dispatched + pd.worker_panics > 0 {
+            metrics.record_pool(pd.dispatched, pd.queue_wait_s, pd.worker_panics);
         }
         match outcome {
             Ok(results) => {

@@ -27,9 +27,11 @@
 //!   batcher (the asymmetric multi-matrix mode), tile scheduler,
 //!   backpressure and metrics.
 //! * [`cluster`] — multi-core execution: shards one GEMM (or shared-input
-//!   set) across a pool of array cores with a shared weight-tile cache,
-//!   merging outputs bit-exactly and accounting per the max/sum/broadcast
-//!   attribution rules (see `cluster/mod.rs` for the invariants).
+//!   set) across a persistent pool of array-core workers (pipelined shard
+//!   ingress; legacy spawn-per-run engine kept as baseline) with a
+//!   weight-tile cache shareable across coordinator workers, merging
+//!   outputs bit-exactly and accounting per the max/sum/broadcast rules
+//!   plus the explicit K-split reduce term (see `cluster/mod.rs`).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) from the request path.
 //! * [`report`] — regenerates every table and figure of the paper’s

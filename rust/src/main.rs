@@ -19,7 +19,7 @@ use std::sync::Arc;
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::analytical::gemm::MemoryPolicy;
 use adip::arch::{Architecture, Backend};
-use adip::cluster::{ClusterConfig, ClusterScheduler, ShardSplit};
+use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
 use adip::dataflow::Mat;
@@ -94,6 +94,11 @@ cluster flags (cluster/serve/trace):
   --cores=P        array cores per cluster (serve/trace: per worker; default 1)
   --split=m|n|k    GEMM dimension sharded across cores (default m)
   --weight-cache=C weight-tile result cache capacity in entries (0 = off)
+  --pool=MODE      shard dispatch engine: persistent (warm worker pool,
+                   default) or spawn (legacy scoped threads per run)
+  --shared-weight-cache=BOOL
+                   serve/trace: share one weight-cache store across all
+                   workers (default true; false = private store per worker)
 ";
 
 fn parse_arch(cfg: &Config) -> Result<Architecture> {
@@ -117,9 +122,14 @@ fn parse_cluster(cfg: &Config) -> Result<ClusterConfig> {
         None => ShardSplit::default(),
         Some(raw) => raw.parse::<ShardSplit>().map_err(|e| anyhow!("--split: {e}"))?,
     };
+    let pool = match cfg.get("pool") {
+        None => PoolMode::default(),
+        Some(raw) => raw.parse::<PoolMode>().map_err(|e| anyhow!("--pool: {e}"))?,
+    };
     Ok(ClusterConfig::with_cores(cfg.get_usize("cores", 1)?)
         .with_split(split)
-        .with_cache(cfg.get_usize("weight-cache", 0)?))
+        .with_cache(cfg.get_usize("weight-cache", 0)?)
+        .with_pool(pool))
 }
 
 fn cmd_all(cfg: &Config) -> Result<()> {
@@ -215,10 +225,11 @@ fn cmd_cluster(cfg: &Config) -> Result<()> {
     let mut mesh = ClusterScheduler::new(arch, n, backend, cluster);
 
     println!(
-        "GEMM {m}x{k}x{ncols} on {arch} {n}x{n} ({mode}, {backend}) | cluster: {} cores, {}-split, cache {}",
+        "GEMM {m}x{k}x{ncols} on {arch} {n}x{n} ({mode}, {backend}) | cluster: {} cores, {}-split, cache {}, {} pool",
         cluster.effective_cores(),
         cluster.split,
         if cluster.cache.enabled() { format!("{} entries", cluster.cache.capacity) } else { "off".into() },
+        cluster.pool,
     );
     let mut first_cycles = 0u64;
     for round in 0..repeat {
@@ -283,6 +294,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         batch_window: cfg.get_usize("window", 16)?,
         backend: parse_backend(cfg)?,
         cluster: parse_cluster(cfg)?,
+        shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
     });
     let mut rng = Rng::seeded(7);
     let mut rxs = Vec::new();
@@ -351,6 +363,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         batch_window: cfg.get_usize("window", 8)?,
         backend: parse_backend(cfg)?,
         cluster: parse_cluster(cfg)?,
+        shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
     });
     println!(
         "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",
@@ -392,10 +405,17 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.batches.load(std::sync::atomic::Ordering::Relaxed)
     );
     println!(
-        "weight cache:  {} hits / {} misses / {} evictions",
+        "weight cache:  {} hits ({} cross-worker) / {} misses / {} evictions",
         m.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
+        m.cache_shared_hits.load(std::sync::atomic::Ordering::Relaxed),
         m.cache_misses.load(std::sync::atomic::Ordering::Relaxed),
         m.cache_evictions.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    println!(
+        "cluster pool:  {} workers | {} shards dispatched | queue wait mean {:.1} µs",
+        m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
+        m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed),
+        m.mean_pool_queue_seconds() * 1e6
     );
     coord.shutdown();
     Ok(())

@@ -9,20 +9,27 @@
 //! * cluster outputs are **bit-exact** vs the single-core run (and the
 //!   i32 reference GEMM) on both backends,
 //! * cluster cycle/pass/memory accounting equals
-//!   [`estimate_cluster`] (latency = max over cores, passes summed,
-//!   broadcast activation traffic counted once),
+//!   [`estimate_cluster`] (latency = max over cores + the K-split reduce
+//!   term, passes summed, broadcast activation traffic counted once),
 //! * the functional and cycle-accurate cluster paths agree with each
 //!   other,
+//! * the persistent-pool engine is **run-for-run identical** to the
+//!   legacy spawn-per-run engine on both backends (pool-mode differential
+//!   cases), warm pools stay bit-exact across repeat invocations, and
+//!   coordinator shutdown with pools in play drains cleanly,
 //! * the weight cache reports hits on a repeated-weights Transformer
-//!   trace with outputs identical to the uncached run,
-//! * the paper's 64×64 peak-TOPS configuration runs sharded (CI smoke).
+//!   trace with outputs identical to the uncached run, and a
+//!   coordinator-shared store yields cross-worker `shared_hits` with
+//!   byte-identical outputs,
+//! * the paper's 64×64 peak-TOPS configuration runs sharded, plus an
+//!   n = 128 larger-N sweep (CI).
 
 use std::sync::Arc;
 
 use adip::analytical::gemm::MemoryPolicy;
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::arch::{ArchConfig, Architecture, Backend};
-use adip::cluster::{ClusterConfig, ClusterScheduler, ShardSplit};
+use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::coordinator::{Coordinator, CoordinatorConfig, CoreScheduler, MatmulRequest};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
@@ -279,6 +286,233 @@ fn acceptance_256_cube_across_4_cores() {
     assert_eq!(sr.cycles, est_single.cycles);
     let speedup = sr.cycles as f64 / run.result.cycles as f64;
     assert!(speedup >= 2.0, "4-core M-split speedup {speedup:.2} < 2.0");
+}
+
+/// Pool-mode differential cases: the persistent-pool engine must be
+/// run-for-run identical to the legacy spawn-per-run engine — outputs,
+/// cycles, passes, memory, per-core breakdown — across splits × cores ×
+/// precisions × both backends. (The randomized suites above already run
+/// the pool engine, the default; this pins the engines against each
+/// other directly.)
+#[test]
+fn pool_engines_agree_on_both_backends() {
+    check(
+        "cluster-diff-pool",
+        5015,
+        16,
+        |rng| {
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let split = *rng.choose(&ShardSplit::ALL);
+            let cores = 1 + rng.below(4);
+            let backend = *rng.choose(&Backend::ALL);
+            // keep cycle-accurate draws small (every PE steps every beat)
+            let cap = match backend {
+                Backend::Functional => 40,
+                Backend::CycleAccurate => 12,
+            };
+            let (m, k, nc) = (1 + rng.below(cap), 1 + rng.below(cap), 1 + rng.below(cap));
+            let s = 1 + rng.below(3);
+            let a = Mat::random(rng, m, k, 8);
+            let bs: Vec<Mat> =
+                (0..s).map(|_| Mat::random(rng, k, nc, mode.weight_bits())).collect();
+            (mode, split, cores, backend, a, bs)
+        },
+        |(mode, split, cores, backend, a, bs)| {
+            let refs: Vec<&Mat> = bs.iter().collect();
+            let cfg = ClusterConfig::with_cores(*cores).with_split(*split);
+            let mut pool =
+                mesh(Architecture::Adip, 4, *backend, cfg.with_pool(PoolMode::Persistent));
+            let mut spawn = mesh(Architecture::Adip, 4, *backend, cfg.with_pool(PoolMode::PerRun));
+            let rp = pool.run_gemm_set(a, &refs, *mode, false).map_err(|e| e.to_string())?;
+            let rs = spawn.run_gemm_set(a, &refs, *mode, false).map_err(|e| e.to_string())?;
+            if rp.result.outputs != rs.result.outputs {
+                return Err("pool outputs != spawn outputs".into());
+            }
+            if rp.result.cycles != rs.result.cycles {
+                let (p, s) = (rp.result.cycles, rs.result.cycles);
+                return Err(format!("pool cycles {p} != spawn {s}"));
+            }
+            if rp.result.passes != rs.result.passes {
+                let (p, s) = (rp.result.passes, rs.result.passes);
+                return Err(format!("pool passes {p} != spawn {s}"));
+            }
+            if rp.result.memory != rs.result.memory {
+                return Err(format!(
+                    "pool memory {:?} != spawn {:?}",
+                    rp.result.memory, rs.result.memory
+                ));
+            }
+            if rp.per_core_cycles != rs.per_core_cycles || rp.shards != rs.shards {
+                return Err("pool shard breakdown != spawn shard breakdown".into());
+            }
+            if rp.result.outputs[0] != a.matmul(&bs[0]) {
+                return Err("pool output != reference GEMM".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Pool lifecycle: repeat invocations on one *warm* pool stay bit-exact
+/// against a fresh single-core scheduler built per round (no state leaks
+/// between invocations, no respawn drift).
+#[test]
+fn warm_pool_repeats_match_fresh_single_core_runs() {
+    let mut rng = Rng::seeded(5017);
+    let a = Mat::random(&mut rng, 96, 64, 8);
+    let b = Mat::random(&mut rng, 64, 96, 2);
+    let mut warm = mesh(
+        Architecture::Adip,
+        16,
+        Backend::Functional,
+        ClusterConfig::with_cores(4),
+    );
+    for round in 0..5 {
+        let run = warm.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+        let mut fresh = CoreScheduler::with_backend(Architecture::Adip, 16, Backend::Functional);
+        let sr = fresh.run_set(&a, &[&b], PrecisionMode::W2, false).unwrap();
+        assert_eq!(run.result.outputs, sr.outputs, "round {round}: outputs drifted");
+        assert_eq!(run.result.passes, sr.passes, "round {round}");
+        assert_eq!(run.shards, 4, "round {round}");
+    }
+}
+
+/// Pool lifecycle through the serving stack: a coordinator whose workers
+/// each own a multi-core persistent pool serves a full load correctly and
+/// `shutdown()` drains everything without hanging or losing requests.
+#[test]
+fn coordinator_with_pools_shuts_down_cleanly_after_load() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 2,
+        queue_capacity: 128,
+        batch_window: 4,
+        cluster: ClusterConfig::with_cores(3),
+        ..Default::default()
+    });
+    let mut rng = Rng::seeded(5019);
+    let mut expected = Vec::new();
+    let mut rxs = Vec::new();
+    for i in 0..24u64 {
+        let a = Arc::new(Mat::random(&mut rng, 48, 48, 8));
+        let b = Arc::new(Mat::random(&mut rng, 48, 48, 2));
+        expected.push(a.matmul(&b));
+        let (_, rx) = coord
+            .try_submit(MatmulRequest {
+                id: 0,
+                input_id: i,
+                a,
+                bs: vec![b],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            })
+            .unwrap();
+        rxs.push(rx);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], expected[i], "request {i}");
+    }
+    let m = coord.metrics();
+    assert_eq!(m.completed.load(std::sync::atomic::Ordering::Relaxed), 24);
+    assert_eq!(
+        m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
+        6,
+        "2 workers × 3-core pools"
+    );
+    assert!(m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed) > 0);
+    assert_eq!(m.pool_worker_panics.load(std::sync::atomic::Ordering::Relaxed), 0);
+    // shutdown drains in-flight work and joins every pool worker; a hang
+    // here is the failure mode this test exists to catch
+    coord.shutdown();
+}
+
+/// Two server workers submitting identical-weight requests concurrently
+/// against one coordinator-shared weight cache: sibling workers must reuse
+/// each other's entries (> 0 shared hits) with byte-identical outputs.
+#[test]
+fn shared_cache_cross_worker_hits_with_identical_outputs() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 2,
+        queue_capacity: 128,
+        batch_window: 1, // one request per batch: strict round-robin across workers
+        cluster: ClusterConfig::with_cores(1).with_cache(64),
+        shared_weight_cache: true,
+        ..Default::default()
+    });
+    let mut rng = Rng::seeded(5021);
+    let a = Arc::new(Mat::random(&mut rng, 32, 32, 8));
+    let b = Arc::new(Mat::random(&mut rng, 32, 32, 2));
+    let want = a.matmul(&b);
+    let submit = |i: u64| {
+        coord
+            .try_submit(MatmulRequest {
+                id: 0,
+                input_id: 10_000 + i, // distinct ids: no fusion, identical operands
+                a: a.clone(),
+                bs: vec![b.clone()],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            })
+            .unwrap()
+            .1
+    };
+    // Phase 1: both workers see the request concurrently and populate the
+    // shared store (whoever lands last owns the entry).
+    let first: Vec<_> = (0..2).map(submit).collect();
+    for rx in first {
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], want);
+    }
+    // Phase 2: round-robin hands the same request to both workers again —
+    // the worker that doesn't own the entry must score cross-worker hits.
+    let again: Vec<_> = (2..10).map(submit).collect();
+    for rx in again {
+        assert_eq!(rx.recv().unwrap().result.unwrap()[0], want, "hit outputs must be identical");
+    }
+    let m = coord.metrics();
+    let hits = m.cache_hits.load(std::sync::atomic::Ordering::Relaxed);
+    let shared = m.cache_shared_hits.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(hits >= 8, "phase 2 is fully cached (hits {hits})");
+    assert!(shared > 0, "siblings must reuse each other's entries (shared {shared})");
+    assert!(shared <= hits);
+    let render = m.render();
+    assert!(render.contains(&format!("adip_weight_cache_shared_hits_total {shared}\n")));
+    coord.shutdown();
+}
+
+/// Larger-N CI sweep at n = 128 (functional, 4 cores): bit-exact and
+/// estimate-equal — per the ROADMAP's "128+" item. The matching
+/// cycle-accurate spot check runs in CI via `adip cluster --backend=cycle`
+/// and in `cluster_backends_agree` above.
+#[test]
+fn larger_n_sweep_n128() {
+    let mut rng = Rng::seeded(5023);
+    let a = Mat::random(&mut rng, 512, 64, 8);
+    for (mode, split, want_shards) in [
+        (PrecisionMode::W2, ShardSplit::M, 4usize),
+        (PrecisionMode::W8, ShardSplit::N, 2),
+    ] {
+        let b = Mat::random(&mut rng, 64, 256, mode.weight_bits());
+        let cluster = ClusterConfig::with_cores(4).with_split(split);
+        let mut c = mesh(Architecture::Adip, 128, Backend::Functional, cluster);
+        let run = c.run_gemm(&a, &b, mode, false).unwrap();
+        assert_eq!(run.result.outputs[0], a.matmul(&b), "{mode} {split}");
+        assert_eq!(run.shards, want_shards, "{mode} {split}");
+        let est = estimate_cluster(
+            Architecture::Adip,
+            &ArchConfig::with_n(128),
+            GemmShape::new(512, 64, 256),
+            1,
+            mode,
+            &cluster,
+            MemoryPolicy::default(),
+        );
+        assert_eq!(run.result.cycles, est.cycles, "{mode} {split}");
+        assert_eq!(run.result.passes, est.passes, "{mode} {split}");
+        assert_eq!(run.result.memory.paper_total_bytes(), est.memory_bytes, "{mode} {split}");
+    }
 }
 
 /// A repeated-weights Transformer trace served through the coordinator
