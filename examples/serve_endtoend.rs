@@ -20,7 +20,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use adip::arch::Architecture;
-use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, Priority, SubmitOptions, Ticket,
+};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::runtime::{f32_to_mat, mat_to_f32, ArtifactRuntime};
@@ -53,19 +55,23 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     });
 
-    // Request stream: per "layer", one shared input X feeding a Q/K/V
-    // triplet of ternary projections, plus one 8-bit act-act request.
-    let mut pending = Vec::new();
+    // Request stream through the typed submission API: per "layer", one
+    // shared input X feeding a Q/K/V triplet of ternary projections
+    // (submitted as one pre-declared fusion group, class Batch), plus one
+    // 8-bit act-act request (latency-critical: class Interactive).
+    let client = coord.client();
+    let mut pending: Vec<Ticket> = Vec::new();
     let mut verify = Vec::new();
     let t0 = Instant::now();
     for layer in 0..LAYERS {
         let x = Arc::new(Mat::random(&mut rng, DIM, DIM, 8));
+        let mut triplet = Vec::new();
         for name in ["wq", "wk", "wv"] {
             let w = Arc::new(Mat::random(&mut rng, DIM, DIM, 2));
             if layer % 8 == 0 && name == "wq" {
                 verify.push((x.clone(), w.clone(), pending.len()));
             }
-            let req = MatmulRequest {
+            triplet.push(MatmulRequest {
                 id: 0,
                 input_id: layer as u64,
                 a: x.clone(),
@@ -73,9 +79,13 @@ fn main() -> anyhow::Result<()> {
                 weight_bits: 2,
                 act_act: false,
                 tag: format!("L{layer}/{name}"),
-            };
-            pending.push(coord.try_submit(req).expect("queue sized for the stream").1);
+            });
         }
+        pending.extend(
+            client
+                .submit_group(layer as u64, Priority::Batch, triplet)
+                .expect("queue sized for the stream"),
+        );
         let scores = MatmulRequest {
             id: 0,
             input_id: (1000 + layer) as u64,
@@ -85,14 +95,18 @@ fn main() -> anyhow::Result<()> {
             act_act: true,
             tag: format!("L{layer}/scores"),
         };
-        pending.push(coord.try_submit(scores).expect("queue sized for the stream").1);
+        pending.push(
+            client
+                .submit(SubmitOptions::new(scores).priority(Priority::Interactive))
+                .expect("queue sized for the stream"),
+        );
     }
     let submitted = pending.len();
 
     // Collect all outcomes.
     let mut outcomes = Vec::new();
-    for rx in pending {
-        outcomes.push(rx.recv()?);
+    for ticket in pending {
+        outcomes.push(ticket.wait()?);
     }
     let wall = t0.elapsed().as_secs_f64();
 

@@ -13,7 +13,7 @@ mod common;
 use std::sync::Arc;
 
 use adip::arch::{build_array, ArchConfig, Architecture, Backend};
-use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest, SubmitOptions};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::sim::CoSim;
@@ -35,9 +35,10 @@ fn serve_stream(backend: Backend, requests: usize, dim: usize) -> f64 {
         backend,
         ..Default::default()
     });
+    let client = coord.client();
     let mut rng = Rng::seeded(23);
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     let mut shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
     for i in 0..requests {
         if i % 3 == 0 {
@@ -52,10 +53,10 @@ fn serve_stream(backend: Backend, requests: usize, dim: usize) -> f64 {
             act_act: false,
             tag: String::new(),
         };
-        rxs.push(coord.try_submit(req).expect("queue sized").1);
+        tickets.push(client.submit(SubmitOptions::new(req)).expect("queue sized"));
     }
-    for rx in rxs {
-        assert!(rx.recv().unwrap().result.is_ok());
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
     }
     let dt = t0.elapsed().as_secs_f64();
     coord.shutdown();

@@ -1,19 +1,36 @@
-//! Bench: L3 coordinator serving throughput and the batching ablation.
+//! Bench: L3 coordinator serving — throughput, the batching ablation,
+//! per-class queue waits on a saturated mixed-priority trace, and the
+//! pipelined-vs-inline prepare gate — emitted as `BENCH_coordinator.json`
+//! for CI trend tracking (uploaded alongside `BENCH_cluster.json`).
 //!
-//! Measures end-to-end request throughput through the full stack (bounded
-//! queue → router/batcher → worker cores → co-sim execution) and isolates
-//! the shared-input batching benefit by comparing a fusable Q/K/V stream
-//! against the same stream with fusion-defeating input ids.
+//! Acceptance gates:
+//!
+//! 1. **Prepare overlap ≥ 1.1×**: on a decode-shaped stream (skinny
+//!    activations, wide weights — the serving case where host-side
+//!    preparation is a double-digit fraction of execution) with the
+//!    weight cache on (fingerprints are mandatory work), the pipelined
+//!    prepare stage must beat inline preparation by ≥ 1.1× host
+//!    wall-clock. Gated on the min of repeated runs (co-tenant stalls on
+//!    shared CI runners only ever inflate a rep, never deflate it).
+//!    Simulated accounting is asserted identical across the two modes, so
+//!    the gate isolates pure host pipelining.
+//! 2. **Priority order**: on the saturated mixed-priority trace,
+//!    Interactive mean queue wait must not exceed Background's.
 
 #[path = "common.rs"]
 mod common;
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use adip::arch::Architecture;
-use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::cluster::ClusterConfig;
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions,
+};
 use adip::dataflow::Mat;
 use adip::testutil::Rng;
+use adip::workload::{repeated_attention_trace, TraceConfig, TransformerModel};
 
 fn stream(fusable: bool, requests: usize, dim: usize) -> (usize, f64, u64) {
     let coord = Coordinator::start(CoordinatorConfig {
@@ -24,9 +41,10 @@ fn stream(fusable: bool, requests: usize, dim: usize) -> (usize, f64, u64) {
         batch_window: 12,
         ..Default::default()
     });
+    let client = coord.client();
     let mut rng = Rng::seeded(17);
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     let mut shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
     for i in 0..requests {
         if i % 3 == 0 {
@@ -44,27 +62,74 @@ fn stream(fusable: bool, requests: usize, dim: usize) -> (usize, f64, u64) {
             act_act: false,
             tag: String::new(),
         };
-        rxs.push(coord.try_submit(req).expect("queue sized").1);
+        tickets.push(client.submit(SubmitOptions::new(req)).expect("queue sized"));
     }
     let mut ok = 0;
-    for rx in rxs {
-        if rx.recv().unwrap().result.is_ok() {
+    for t in tickets {
+        if t.wait().unwrap().result.is_ok() {
             ok += 1;
         }
     }
     let dt = t0.elapsed().as_secs_f64();
-    let cycles = coord.metrics().sim_cycles.load(std::sync::atomic::Ordering::Relaxed);
+    let cycles = coord.metrics().sim_cycles.load(Ordering::Relaxed);
     coord.shutdown();
     (ok, dt, cycles)
+}
+
+/// Decode-shaped prepare-heavy stream: skinny activations (`m` rows)
+/// against wide `k×nc` weights, unique weights per request (every cache
+/// probe misses, so fingerprinting is mandatory work on every batch).
+/// Returns (host seconds, total simulated cycles).
+fn prepare_stream(prepare: PrepareMode, requests: usize) -> (f64, u64) {
+    const M: usize = 2;
+    const K: usize = 256;
+    const NC: usize = 256;
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 1, // inline mode is then truly serial prepare->execute
+        queue_capacity: 2 * requests,
+        batch_window: 1,
+        cluster: ClusterConfig::with_cores(1).with_cache(32),
+        prepare,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(29);
+    // operands built up front: the measured region is pure serving
+    let reqs: Vec<MatmulRequest> = (0..requests)
+        .map(|i| MatmulRequest {
+            id: 0,
+            input_id: i as u64,
+            a: Arc::new(Mat::random(&mut rng, M, K, 8)),
+            bs: (0..2).map(|_| Arc::new(Mat::random(&mut rng, K, NC, 2))).collect(),
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = reqs
+        .into_iter()
+        .map(|r| client.submit(SubmitOptions::new(r)).expect("queue sized"))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let cycles = coord.metrics().sim_cycles.load(Ordering::Relaxed);
+    coord.shutdown();
+    (dt, cycles)
 }
 
 fn main() {
     const REQS: usize = 96;
     const DIM: usize = 128;
 
-    println!("== coordinator serving throughput (ADiP 32x32, 2 workers) ==");
+    println!("== coordinator serving throughput (ADiP 32x32, 2 workers, Client/Ticket API) ==");
     let stat = common::bench(5, || stream(true, REQS, DIM));
     common::report("serve fusable Q/K/V stream", stat, REQS as f64, "req");
+    let throughput_req_s = REQS as f64 / stat.median_s;
 
     println!("\n== batching ablation (same stream, fusion on/off) ==");
     let (_, t_fused, cyc_fused) = stream(true, REQS, DIM);
@@ -75,4 +140,132 @@ fn main() {
         "  simulated-cycle reduction from shared-input batching: {:.1}% (paper's multi-matrix mode)",
         (1.0 - cyc_fused as f64 / cyc_solo as f64) * 100.0
     );
+
+    // -- saturated mixed-priority trace: per-class queue waits ------------
+    println!("\n== saturated mixed-priority trace (2 workers, all classes) ==");
+    let model = TransformerModel::by_name("bitnet").expect("bitnet model");
+    let tcfg = TraceConfig { dim: 64, head_cols: 16, layers: 4, heads: 2, rate_per_s: 1e9 };
+    // 3 invocations: scores are Interactive, first-invocation projections
+    // Batch, replayed projections Background — all three classes live.
+    // Classes are then round-robin interleaved across the arrival order:
+    // in the raw trace every Background request is a late-invocation
+    // replay at the back of the stream, so plain FIFO would already give
+    // it the longest waits and the mi <= mb gate below could not detect
+    // a priority regression.
+    let trace = {
+        let mut by_class: Vec<Vec<_>> = (0..Priority::COUNT).map(|_| Vec::new()).collect();
+        for t in repeated_attention_trace(&model, &tcfg, 19, 3) {
+            by_class[t.priority.index()].push(t);
+        }
+        let mut mixed = Vec::new();
+        while by_class.iter().any(|v| !v.is_empty()) {
+            for v in by_class.iter_mut() {
+                if !v.is_empty() {
+                    mixed.push(v.remove(0));
+                }
+            }
+        }
+        mixed
+    };
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 32,
+        workers: 2,
+        queue_capacity: 2 * trace.len(),
+        batch_window: 12,
+        // aging off for the gate: everything queues at once under
+        // saturation, so default aging would (correctly) promote aged
+        // Background work ahead of fresh Interactive and blur the
+        // base-class ordering this section measures
+        aging: std::time::Duration::from_secs(3600),
+        ..Default::default()
+    });
+    let client = coord.client();
+    let total = trace.len();
+    let tickets: Vec<_> = trace
+        .into_iter()
+        .map(|t| {
+            client
+                .submit(SubmitOptions::new(t.request).priority(t.priority))
+                .expect("queue sized")
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let m = coord.metrics();
+    // human-readable table comes from the shared summary (single source
+    // with serve/trace); the raw values below feed the JSON artifact
+    print!("{}", m.class_queue_summary());
+    let mut class_rows = Vec::new();
+    for class in Priority::ALL {
+        let completed = m.class_completed[class.index()].load(Ordering::Relaxed);
+        let mean = m.mean_class_queue_seconds(class);
+        let p50 = m.class_queue_percentile(class, 50.0).unwrap_or(0.0);
+        let p95 = m.class_queue_percentile(class, 95.0).unwrap_or(0.0);
+        class_rows.push(format!(
+            "    {{\"class\": \"{}\", \"completed\": {completed}, \"queue_mean_s\": {mean:.6}, \"queue_p50_s\": {p50:.6}, \"queue_p95_s\": {p95:.6}}}",
+            class.name()
+        ));
+    }
+    let mi = m.mean_class_queue_seconds(Priority::Interactive);
+    let mb = m.mean_class_queue_seconds(Priority::Background);
+    println!("  {total} requests | interactive/background mean wait ratio {:.3}", mi / mb.max(1e-12));
+    assert!(
+        mi <= mb,
+        "interactive mean queue wait {mi:.6}s must not exceed background {mb:.6}s under saturation"
+    );
+    coord.shutdown();
+
+    // -- pipelined vs inline prepare: the overlap gate --------------------
+    println!("\n== prepare pipeline: pipelined stage vs inline (decode-shaped stream, 1 worker) ==");
+    const PREP_REQS: usize = 160;
+    // The gate uses the pure-serving duration `prepare_stream` returns
+    // (submit -> last completion), NOT a wall-clock around the whole
+    // call: operand generation (~21M random entries per rep) and
+    // coordinator startup/shutdown are constant in both modes and would
+    // squeeze the measured ratio toward 1.0.
+    let run_reps = |mode: PrepareMode| -> (f64, f64, u64) {
+        let _ = prepare_stream(mode, PREP_REQS); // warmup
+        let mut times = Vec::new();
+        let mut cycles = 0u64;
+        for _ in 0..3 {
+            let (dt, cyc) = prepare_stream(mode, PREP_REQS);
+            times.push(dt);
+            cycles = cyc;
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (times[0], times[times.len() / 2], cycles)
+    };
+    let (inline_min, inline_median, sim_inline) = run_reps(PrepareMode::Inline);
+    let (pipe_min, pipe_median, sim_pipe) = run_reps(PrepareMode::Pipelined);
+    assert_eq!(
+        sim_pipe, sim_inline,
+        "prepare modes must be accounting-identical (only host time may differ)"
+    );
+    // min-of-reps: co-tenant stalls on shared CI runners only ever
+    // inflate a rep, never deflate it
+    let gain = inline_min / pipe_min;
+    println!(
+        "  {PREP_REQS} requests: inline {:.1} ms | pipelined {:.1} ms (serving medians) | overlap speedup {gain:.2}x on min (bar: >= 1.1x)",
+        inline_median * 1e3,
+        pipe_median * 1e3
+    );
+    assert!(
+        gain >= 1.1,
+        "pipelined prepare must beat inline by >= 1.1x on the decode-shaped stream (got {gain:.2}x)"
+    );
+
+    // -- machine-readable results for the CI artifact ---------------------
+    let json = format!(
+        "{{\n  \"bench\": \"bench_coordinator\",\n  \"throughput\": {{\"requests\": {REQS}, \"req_per_s\": {throughput_req_s:.2}}},\n  \"batching\": {{\"fused_cycles\": {cyc_fused}, \"unfused_cycles\": {cyc_solo}, \"cycle_reduction\": {:.4}}},\n  \"per_class\": [\n{}\n  ],\n  \"prepare_pipeline\": {{\"requests\": {PREP_REQS}, \"inline_min_s\": {:.6}, \"pipelined_min_s\": {:.6}, \"speedup\": {gain:.4}, \"gate\": 1.1}}\n}}\n",
+        1.0 - cyc_fused as f64 / cyc_solo as f64,
+        class_rows.join(",\n"),
+        inline_min,
+        pipe_min
+    );
+    let path =
+        std::env::var("BENCH_COORD_JSON").unwrap_or_else(|_| "BENCH_coordinator.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
 }

@@ -128,7 +128,7 @@ impl FunctionalArray {
     fn check_weight_range(&self, b: &Mat, mode: PrecisionMode, which: usize) -> Result<()> {
         let w = mode.weight_bits();
         let (lo, hi) = value_range(w);
-        if let Some(bad) = b.as_slice().iter().find(|v| !(lo..=hi).contains(v)) {
+        if let Some(bad) = b.as_slice().iter().find(|&&v| !(lo..=hi).contains(&v)) {
             bail!("weight matrix {which} value {bad} out of {w}-bit range {lo}..={hi}");
         }
         Ok(())

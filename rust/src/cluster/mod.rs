@@ -95,5 +95,5 @@ pub mod weight_cache;
 
 pub use partitioner::{partition, ClusterConfig, PoolMode, ShardPlan, ShardSplit};
 pub use reducer::{assemble_outputs, combine_accounting, reduce_cycles};
-pub use scheduler::{ClusterRun, ClusterScheduler, PoolStats};
+pub use scheduler::{ClusterRun, ClusterScheduler, PoolStats, PreparedFingerprints};
 pub use weight_cache::{fingerprint, CacheConfig, CacheStats, SharedWeightCache, WeightCache};

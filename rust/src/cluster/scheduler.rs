@@ -255,23 +255,49 @@ enum Engine {
     Pool(WorkerPool),
 }
 
-/// One run's operand views plus lazily created shared (`Arc`) handles.
+/// Full-extent operand fingerprints computed ahead of execution — the
+/// coordinator's prepare stage hashes a batch's operands on its own stage
+/// thread and hands them here, so the execute path (worker hot loop)
+/// never re-hashes what preparation already covered. Harmless to omit:
+/// the scheduler memoizes and computes on demand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PreparedFingerprints {
+    /// Fingerprint of the (full) activation matrix.
+    pub act: u128,
+    /// Per-weight-matrix fingerprints, in operand order.
+    pub weights: Vec<u128>,
+}
+
+/// One run's operand views plus lazily created shared (`Arc`) handles and
+/// memoized full-extent fingerprints.
 ///
 /// Pool workers outlive any one run, so jobs must own their operands:
 /// sliced tiles are owned `Mat`s wrapped in fresh `Arc`s, while an operand
 /// used at its full extent is shared through a single `Arc` — created at
 /// most once per run (callers that already hold `Arc<Mat>` operands, like
-/// the coordinator's request path, pre-populate it for free).
+/// the coordinator's request path, pre-populate it for free). The same
+/// create-at-most-once rule applies to operand fingerprints, which the
+/// coordinator's prepare stage can pre-populate via
+/// [`PreparedFingerprints`].
 struct Operands<'x> {
     a: &'x Mat,
     bs: Vec<&'x Mat>,
     a_arc: Option<Arc<Mat>>,
     bs_arc: Vec<Option<Arc<Mat>>>,
+    a_fp: Option<u128>,
+    bs_fp: Vec<Option<u128>>,
 }
 
 impl<'x> Operands<'x> {
     fn borrowed(a: &'x Mat, bs: &[&'x Mat]) -> Operands<'x> {
-        Operands { a, bs: bs.to_vec(), a_arc: None, bs_arc: vec![None; bs.len()] }
+        Operands {
+            a,
+            bs: bs.to_vec(),
+            a_arc: None,
+            bs_arc: vec![None; bs.len()],
+            a_fp: None,
+            bs_fp: vec![None; bs.len()],
+        }
     }
 
     fn shared(a: &'x Arc<Mat>, bs: &[&'x Arc<Mat>]) -> Operands<'x> {
@@ -280,6 +306,29 @@ impl<'x> Operands<'x> {
             bs: bs.iter().map(|b| b.as_ref()).collect(),
             a_arc: Some(Arc::clone(a)),
             bs_arc: bs.iter().map(|b| Some(Arc::clone(b))).collect(),
+            a_fp: None,
+            bs_fp: vec![None; bs.len()],
+        }
+    }
+
+    /// Adopt fingerprints computed ahead of execution. Ignored (falls
+    /// back to on-demand hashing) if the operand count does not line up.
+    /// Callers are trusted to have hashed *these* operands — the entry
+    /// points taking [`PreparedFingerprints`] are crate-internal (the
+    /// coordinator's prepare stage), and debug builds re-verify, because
+    /// a value mismatch would mis-key the weight cache.
+    fn adopt_fps(&mut self, fps: &PreparedFingerprints) {
+        if fps.weights.len() == self.bs.len() {
+            debug_assert_eq!(fps.act, fingerprint(&[self.a]), "stale activation fingerprint");
+            debug_assert!(
+                fps.weights
+                    .iter()
+                    .zip(&self.bs)
+                    .all(|(&f, b)| f == fingerprint(&[*b])),
+                "stale weight fingerprints"
+            );
+            self.a_fp = Some(fps.act);
+            self.bs_fp = fps.weights.iter().map(|&f| Some(f)).collect();
         }
     }
 
@@ -293,6 +342,24 @@ impl<'x> Operands<'x> {
     fn share_b(&mut self, j: usize) -> Arc<Mat> {
         let view = self.bs[j];
         Arc::clone(self.bs_arc[j].get_or_insert_with(|| Arc::new(view.clone())))
+    }
+
+    /// Fingerprint of the full activation matrix (hashed at most once).
+    fn act_fp(&mut self) -> u128 {
+        let view = self.a;
+        *self.a_fp.get_or_insert_with(|| fingerprint(&[view]))
+    }
+
+    /// Fingerprint of full weight matrix `j` (hashed at most once).
+    fn weight_fp(&mut self, j: usize) -> u128 {
+        let view = self.bs[j];
+        *self.bs_fp[j].get_or_insert_with(|| fingerprint(&[view]))
+    }
+
+    /// Combined fingerprint of the full weight set.
+    fn weight_set_fp(&mut self) -> u128 {
+        let fps: Vec<u128> = (0..self.bs.len()).map(|j| self.weight_fp(j)).collect();
+        combine_fingerprints(fps)
     }
 }
 
@@ -447,6 +514,30 @@ impl ClusterScheduler {
         self.run_inner(ops, mode, runtime_interleave)
     }
 
+    /// [`ClusterScheduler::run_gemm_set_shared`] with operand
+    /// fingerprints computed ahead of execution (the coordinator's
+    /// prepare stage): the cache probe reuses them instead of re-hashing
+    /// on the worker's execute path. `fps = None` degrades gracefully to
+    /// on-demand hashing, so results and accounting are identical either
+    /// way (the fingerprints are a pure function of the operands).
+    /// Crate-internal: supplying fingerprints of *different* operands
+    /// would mis-key the weight cache, so only the trusted prepare stage
+    /// gets to pass them (debug builds re-verify).
+    pub(crate) fn run_gemm_set_prepared(
+        &mut self,
+        a: &Arc<Mat>,
+        bs: &[&Arc<Mat>],
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+        fps: Option<&PreparedFingerprints>,
+    ) -> Result<ClusterRun> {
+        let mut ops = Operands::shared(a, bs);
+        if let Some(f) = fps {
+            ops.adopt_fps(f);
+        }
+        self.run_inner(ops, mode, runtime_interleave)
+    }
+
     fn run_inner(
         &mut self,
         mut ops: Operands<'_>,
@@ -469,8 +560,8 @@ impl ClusterScheduler {
         // a bare core run (plus an optional cache probe on the full set).
         if plans.len() == 1 && plans[0].covers(m, k, nc) {
             let probe = if self.cache.enabled() {
-                let weight_fp = combine_fingerprints(ops.bs.iter().map(|b| fingerprint(&[*b])));
-                let act_fp = fingerprint(&[ops.a]);
+                let weight_fp = ops.weight_set_fp();
+                let act_fp = ops.act_fp();
                 self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
             } else {
                 Probe::Miss(None)
@@ -505,8 +596,6 @@ impl ClusterScheduler {
         let mut keys: Vec<Option<(u128, u128)>> = vec![None; plans.len()];
         let mut pending: Vec<PendingShard> = Vec::new();
         let mut submitted = 0usize;
-        let mut a_fp: Option<u128> = None;
-        let mut bs_fp: Vec<Option<u128>> = vec![None; ops.bs.len()];
         for (i, p) in plans.iter().enumerate() {
             let a_full =
                 p.rows.start == 0 && p.inner.start == 0 && p.rows.len() == m && p.inner.len() == k;
@@ -524,22 +613,11 @@ impl ClusterScheduler {
             let probe = if self.cache.enabled() {
                 let act_fp = match &a_slice {
                     Some(t) => fingerprint(&[t]),
-                    None => {
-                        let a = ops.a;
-                        *a_fp.get_or_insert_with(|| fingerprint(&[a]))
-                    }
+                    None => ops.act_fp(),
                 };
                 let weight_fp = match &b_slices {
                     Some(ts) => combine_fingerprints(ts.iter().map(|t| fingerprint(&[t]))),
-                    None => {
-                        let fps: Vec<u128> = ops
-                            .bs
-                            .iter()
-                            .enumerate()
-                            .map(|(j, b)| *bs_fp[j].get_or_insert_with(|| fingerprint(&[*b])))
-                            .collect();
-                        combine_fingerprints(fps)
-                    }
+                    None => ops.weight_set_fp(),
                 };
                 self.probe_with(weight_fp, act_fp, mode, runtime_interleave)
             } else {
@@ -657,8 +735,26 @@ impl ClusterScheduler {
         assert!(!members.is_empty());
         let first = members[0];
         let mode = select_mode(first.weight_bits, first.act_act);
+        self.execute_batch_prepared(members, mode, runtime_interleave, None)
+    }
+
+    /// [`ClusterScheduler::execute_batch`] with the prepare stage's work
+    /// already done: the precision mode was selected and the operand
+    /// fingerprints were hashed off the execute path. This is the
+    /// coordinator worker's entry point in the three-stage
+    /// admit → prepare → execute pipeline (crate-internal — see
+    /// [`ClusterScheduler::run_gemm_set_prepared`]).
+    pub(crate) fn execute_batch_prepared(
+        &mut self,
+        members: &[&MatmulRequest],
+        mode: PrecisionMode,
+        runtime_interleave: bool,
+        fps: Option<&PreparedFingerprints>,
+    ) -> Result<Vec<MemberResult>> {
+        assert!(!members.is_empty());
+        let first = members[0];
         let bs: Vec<&Arc<Mat>> = members.iter().flat_map(|m| m.bs.iter()).collect();
-        let run = self.run_gemm_set_shared(&first.a, &bs, mode, runtime_interleave)?;
+        let run = self.run_gemm_set_prepared(&first.a, &bs, mode, runtime_interleave, fps)?;
         Ok(attribute_members(members, &run.result))
     }
 
@@ -1031,6 +1127,44 @@ mod tests {
         let global = store.stats();
         assert_eq!((global.hits, global.misses), (1, 1));
         assert_eq!(global.shared_hits, 1);
+    }
+
+    #[test]
+    fn prepared_fingerprints_are_equivalent_to_on_demand_hashing() {
+        // a run that adopted prepared fingerprints must populate the
+        // cache under the same keys an unprepared run computes itself
+        let mut rng = Rng::seeded(71);
+        let a = Arc::new(Mat::random(&mut rng, 48, 32, 8));
+        let b = Arc::new(Mat::random(&mut rng, 32, 32, 2));
+        for cores in [1usize, 2] {
+            let mut c = ClusterScheduler::new(
+                Architecture::Adip,
+                8,
+                Backend::Functional,
+                ClusterConfig::with_cores(cores).with_cache(16),
+            );
+            let fps = PreparedFingerprints {
+                act: fingerprint(&[a.as_ref()]),
+                weights: vec![fingerprint(&[b.as_ref()])],
+            };
+            let cold = c
+                .run_gemm_set_prepared(&a, &[&b], PrecisionMode::W2, false, Some(&fps))
+                .unwrap();
+            assert_eq!(cold.result.outputs[0], a.matmul(&b), "{cores} cores");
+            assert!(cold.cache.misses > 0);
+            // the same GEMM *without* prepared fingerprints must hit
+            // every entry the prepared run inserted
+            let warm = c.run_gemm_set_shared(&a, &[&b], PrecisionMode::W2, false).unwrap();
+            assert_eq!(warm.result.outputs, cold.result.outputs, "{cores} cores");
+            assert_eq!(warm.cache.hits, cold.cache.misses, "{cores} cores: keys must agree");
+            // mismatched operand counts degrade to on-demand hashing
+            // rather than mis-keying the cache
+            let stale = PreparedFingerprints { act: fps.act, weights: vec![fps.weights[0]; 3] };
+            let again = c
+                .run_gemm_set_prepared(&a, &[&b], PrecisionMode::W2, false, Some(&stale))
+                .unwrap();
+            assert_eq!(again.cache.hits, cold.cache.misses, "{cores} cores");
+        }
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Shared-input batcher — the asymmetric multi-matrix fusion policy.
+//! Shared-input batcher — the asymmetric multi-matrix fusion policy, with
+//! priority-aware batch formation.
 //!
 //! Groups pending requests that (a) share the same input operand
 //! (`input_id`), (b) selected the same precision mode, and (c) have
@@ -7,13 +8,31 @@
 //! cannot be fused are emitted as singleton batches (they still benefit
 //! from adjacent-column fusion inside the scheduler).
 //!
+//! [`plan_batches`] adds the service-order policy on top of the fusion
+//! rules: within one batching window, requests are visited in a
+//! **deterministic priority order** — `Interactive` ahead of `Batch`
+//! ahead of `Background`, deadline-ascending within a class, FIFO
+//! (arrival-order) tiebreak — and batches are emitted in the order they
+//! are opened by that traversal, so higher-priority work is dispatched
+//! (and therefore executed) first. **Aging** prevents starvation: every
+//! full `aging` interval a request has waited promotes it one class, so
+//! overdue `Background` work rises to compete with fresh `Interactive`
+//! arrivals on equal (deadline→FIFO) terms instead of being starved
+//! behind them — and since windows are dispatched FIFO, even work that
+//! loses every within-window tiebreak is served within a bounded number
+//! of batches. The ordering is a pure function of
+//! the window contents and lanes — seeded traces reproduce identical
+//! batch orders (property-tested below).
+//!
 //! Invariants (property-tested):
 //! * every input request appears in exactly one batch,
 //! * a batch never mixes input ids, modes, shapes or act-act classes,
-//! * no batch exceeds the mode's interleave capacity.
+//! * no batch exceeds the mode's interleave capacity,
+//! * [`form_batches`] (all-default lanes) and [`plan_batches`] agree.
 
 use crate::quant::PrecisionMode;
 
+use super::client::Priority;
 use super::precision::select_mode;
 use super::request::MatmulRequest;
 
@@ -48,14 +67,97 @@ struct Key {
     act_act: bool,
 }
 
-/// Form batches over a window of pending requests (order-stable greedy
-/// bin packing per fusion key).
-pub fn form_batches(reqs: &[MatmulRequest]) -> Vec<Batch> {
-    use std::collections::HashMap;
-    let mut bins: HashMap<Key, Vec<Batch>> = HashMap::new();
-    let mut order: Vec<Key> = Vec::new();
+/// Scheduling lane of one pending request, as the router sees it at
+/// window-formation time. All fields are plain numbers so the planner is
+/// a pure (deterministic, testable) function of its inputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Lane {
+    /// Service class the request was submitted under.
+    pub priority: Priority,
+    /// Soft-deadline headroom in µs (negative = overdue, `i64::MAX` =
+    /// no deadline). Orders deadline-ascending within a class.
+    pub deadline_us: i64,
+    /// Time the request has already waited in the admission queue (µs);
+    /// drives aging promotion.
+    pub age_us: u64,
+}
 
-    for (idx, r) in reqs.iter().enumerate() {
+impl Default for Lane {
+    fn default() -> Lane {
+        Lane { priority: Priority::default(), deadline_us: i64::MAX, age_us: 0 }
+    }
+}
+
+/// One window's batch plan: the batches in deterministic service order
+/// plus the aging bookkeeping.
+#[derive(Debug, Clone)]
+pub struct WindowPlan {
+    /// Batches in dispatch (service) order.
+    pub batches: Vec<Batch>,
+    /// Requests whose class was promoted at least one level by aging.
+    pub promotions: u64,
+}
+
+/// Form batches over a window of pending requests with all-default lanes
+/// (FIFO visit order). Thin shim over [`plan_batches`].
+///
+/// Batch *membership* is identical to the pre-priority batcher; the
+/// emission order differs in one corner: when a fusion key overflows
+/// into multiple bins, overflow bins are emitted at the position they
+/// were opened (interleaved with other keys) instead of grouped behind
+/// the key's first bin. Membership, modes and capacities are unchanged,
+/// so outputs and per-request accounting cannot differ — only which
+/// round-robin worker a batch lands on may.
+pub fn form_batches(reqs: &[MatmulRequest]) -> Vec<Batch> {
+    plan_batches(reqs, &vec![Lane::default(); reqs.len()], 0).batches
+}
+
+/// Priority-aware batch formation (see the module docs for the policy).
+///
+/// `lanes[i]` describes the scheduling lane of `reqs[i]`;
+/// `aging_us == 0` disables aging promotion. Batch members still index
+/// into `reqs` in its original order; only the *visit* order (and hence
+/// bin packing and batch emission order) follows the service order.
+pub fn plan_batches(reqs: &[MatmulRequest], lanes: &[Lane], aging_us: u64) -> WindowPlan {
+    use std::collections::HashMap;
+    assert_eq!(reqs.len(), lanes.len(), "one lane per request");
+
+    // Deterministic service order: (effective class, deadline, FIFO).
+    // The sort is stable and the window is in arrival order, so equal
+    // keys keep FIFO order; aging subtracts one class per full interval
+    // waited, flooring at Interactive.
+    let mut promotions = 0u64;
+    let ranked: Vec<usize> = {
+        let mut keyed: Vec<(usize, i64, usize)> = Vec::with_capacity(reqs.len());
+        for (idx, lane) in lanes.iter().enumerate() {
+            let base = lane.priority.rank();
+            let promote = if aging_us > 0 { (lane.age_us / aging_us) as usize } else { 0 };
+            let eff = base.saturating_sub(promote);
+            if eff < base {
+                promotions += 1;
+            }
+            // Promotion lifts the class only; within a class the uniform
+            // deadline→FIFO order applies to promoted and native work
+            // alike (an urgency bonus for promoted work would invert
+            // same-age ordering under overload). A promoted request can
+            // still sort behind deadline-carrying natives of its new
+            // class, but never past its own window — windows dispatch
+            // FIFO, so overdue work is served within a bounded number of
+            // batches regardless.
+            keyed.push((eff, lane.deadline_us, idx));
+        }
+        keyed.sort_by_key(|&(eff, dl, _)| (eff, dl));
+        keyed.into_iter().map(|(_, _, idx)| idx).collect()
+    };
+
+    // Greedy bin packing per fusion key, visiting requests in service
+    // order; batches are emitted in the order their bin was opened, so
+    // the plan's dispatch order respects the service order of each
+    // batch's first (highest-ranked) member.
+    let mut out: Vec<Batch> = Vec::new();
+    let mut bins: HashMap<Key, Vec<usize>> = HashMap::new(); // key -> indices into `out`
+    for idx in ranked {
+        let r = &reqs[idx];
         let mode = select_mode(r.weight_bits, r.act_act);
         let key = Key {
             input_id: r.input_id,
@@ -67,36 +169,30 @@ pub fn form_batches(reqs: &[MatmulRequest]) -> Vec<Batch> {
             act_act: r.act_act,
         };
         let cap = mode.interleave_factor();
-        let entry = bins.entry(key).or_insert_with(|| {
-            order.push(key);
-            Vec::new()
-        });
-        // greedy: drop into the first bin with room for all of this
+        // greedy: drop into the first open bin with room for all of this
         // request's matrices (requests are never split across passes)
         let need = r.bs.len();
-        let slot = entry.iter_mut().find(|b| b.matrices + need <= cap);
+        let entry = bins.entry(key).or_default();
+        let slot = entry.iter().copied().find(|&b| out[b].matrices + need <= cap);
         match slot {
             Some(b) => {
-                b.members.push(idx);
-                b.matrices += need;
-                b.fused = true;
+                out[b].members.push(idx);
+                out[b].matrices += need;
+                out[b].fused = true;
             }
-            None => entry.push(Batch {
-                mode,
-                members: vec![idx],
-                matrices: need,
-                fused: need > 1,
-                runtime_interleave: r.act_act,
-            }),
+            None => {
+                entry.push(out.len());
+                out.push(Batch {
+                    mode,
+                    members: vec![idx],
+                    matrices: need,
+                    fused: need > 1,
+                    runtime_interleave: r.act_act,
+                });
+            }
         }
     }
-
-    // stable order: keys in first-seen order, bins in creation order
-    let mut out = Vec::new();
-    for key in order {
-        out.extend(bins.remove(&key).unwrap());
-    }
-    out
+    WindowPlan { batches: out, promotions }
 }
 
 #[cfg(test)]
@@ -206,6 +302,197 @@ mod tests {
         let batches = form_batches(&reqs);
         assert!(batches[0].runtime_interleave);
         assert_eq!(batches[0].mode, PrecisionMode::W8);
+    }
+
+    /// Distinct-key requests (distinct inputs) so batch order mirrors
+    /// request order 1:1 — isolates the ordering policy from fusion.
+    fn solo(i: u64) -> MatmulRequest {
+        mk(i, 1000 + i, 2, false, 1, 8)
+    }
+
+    fn lane(p: Priority, deadline_us: i64, age_us: u64) -> Lane {
+        Lane { priority: p, deadline_us, age_us }
+    }
+
+    #[test]
+    fn service_order_is_priority_then_deadline_then_fifo() {
+        let reqs: Vec<_> = (0..6).map(solo).collect();
+        let lanes = vec![
+            lane(Priority::Background, i64::MAX, 0), // 0
+            lane(Priority::Interactive, 500, 0),     // 1: tight deadline
+            lane(Priority::Batch, i64::MAX, 0),      // 2
+            lane(Priority::Interactive, i64::MAX, 0), // 3: no deadline
+            lane(Priority::Interactive, 500, 0),     // 4: deadline tie -> FIFO after 1
+            lane(Priority::Batch, 100, 0),           // 5: deadline beats 2
+        ];
+        let plan = plan_batches(&reqs, &lanes, 0);
+        let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
+        assert_eq!(order, vec![1, 4, 3, 5, 2, 0]);
+        assert_eq!(plan.promotions, 0);
+    }
+
+    #[test]
+    fn seeded_windows_reproduce_identical_batch_orders() {
+        let mut rng = Rng::seeded(411);
+        let reqs: Vec<_> = (0..16)
+            .map(|i| mk(i, rng.below(4) as u64, *rng.choose(&[2u32, 4, 8]), false, 1, 8))
+            .collect();
+        let lanes: Vec<_> = (0..16)
+            .map(|_| {
+                lane(
+                    *rng.choose(&Priority::ALL),
+                    *rng.choose(&[100i64, 5_000, i64::MAX]),
+                    rng.below(60_000) as u64,
+                )
+            })
+            .collect();
+        let a = plan_batches(&reqs, &lanes, 20_000);
+        let b = plan_batches(&reqs, &lanes, 20_000);
+        assert_eq!(a.batches, b.batches, "planning must be deterministic");
+        assert_eq!(a.promotions, b.promotions);
+    }
+
+    #[test]
+    fn aging_promotes_overdue_background_ahead_of_fresh_interactive() {
+        let reqs: Vec<_> = (0..3).map(solo).collect();
+        // background has waited 2 full aging intervals -> Interactive
+        // rank, and FIFO (arrival order) puts it ahead of the fresh one
+        let lanes = vec![
+            lane(Priority::Background, i64::MAX, 45_000),
+            lane(Priority::Interactive, i64::MAX, 0),
+            lane(Priority::Batch, i64::MAX, 0),
+        ];
+        let plan = plan_batches(&reqs, &lanes, 20_000);
+        let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
+        assert_eq!(order, vec![0, 1, 2]);
+        assert_eq!(plan.promotions, 1);
+        // promotion lifts the class only: a deadline-carrying native of
+        // the promoted class still sorts first (uniform deadline→FIFO
+        // within a class — an urgency bonus would invert same-age
+        // ordering under overload), while the promoted request beats
+        // deadline-less natives by FIFO
+        let lanes = vec![
+            lane(Priority::Background, i64::MAX, 45_000),
+            lane(Priority::Interactive, 500, 0),
+            lane(Priority::Batch, i64::MAX, 0),
+        ];
+        let plan = plan_batches(&reqs, &lanes, 20_000);
+        let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
+        assert_eq!(order, vec![1, 0, 2], "deadline-carrying native first, then promoted by FIFO");
+        // one interval only promotes one level: Background -> Batch
+        let lanes = vec![
+            lane(Priority::Background, i64::MAX, 25_000),
+            lane(Priority::Interactive, i64::MAX, 0),
+            lane(Priority::Batch, i64::MAX, 0),
+        ];
+        let plan = plan_batches(&reqs, &lanes, 20_000);
+        let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
+        assert_eq!(order, vec![1, 0, 2], "aged background ties Batch, FIFO wins");
+        // aging disabled: base classes only
+        let plan = plan_batches(&reqs, &lanes, 0);
+        let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
+        assert_eq!(order, vec![1, 2, 0]);
+        assert_eq!(plan.promotions, 0);
+    }
+
+    #[test]
+    fn priority_never_breaks_fusion_invariants() {
+        // mixed-class Q/K/V off one input still fuses into one batch when
+        // the classes tie after ordering has run (same key, capacity 4)
+        let reqs =
+            vec![mk(1, 77, 2, false, 1, 8), mk(2, 77, 2, false, 1, 8), mk(3, 77, 2, false, 1, 8)];
+        let lanes = vec![
+            lane(Priority::Batch, i64::MAX, 0),
+            lane(Priority::Interactive, i64::MAX, 0),
+            lane(Priority::Background, i64::MAX, 0),
+        ];
+        let plan = plan_batches(&reqs, &lanes, 0);
+        assert_eq!(plan.batches.len(), 1, "one fusion key -> one batch");
+        // visited in service order: Interactive member opened the bin
+        assert_eq!(plan.batches[0].members, vec![1, 0, 2]);
+        assert_eq!(plan.batches[0].matrices, 3);
+    }
+
+    /// Independent oracle: the pre-priority batcher (greedy first-fit
+    /// per fusion key, FIFO visit order, bins grouped behind their key).
+    /// Reimplemented here so the shim test compares against the old
+    /// algorithm, not against itself.
+    fn legacy_form_batches(reqs: &[MatmulRequest]) -> Vec<Batch> {
+        use std::collections::HashMap;
+        let mut bins: HashMap<(u64, usize, PrecisionMode, usize, usize, usize, bool), Vec<Batch>> =
+            HashMap::new();
+        let mut order = Vec::new();
+        for (idx, r) in reqs.iter().enumerate() {
+            let mode = select_mode(r.weight_bits, r.act_act);
+            let key = (
+                r.input_id,
+                Arc::as_ptr(&r.a) as usize,
+                mode,
+                r.a.rows(),
+                r.a.cols(),
+                r.bs[0].cols(),
+                r.act_act,
+            );
+            let cap = mode.interleave_factor();
+            let entry = bins.entry(key).or_insert_with(|| {
+                order.push(key);
+                Vec::new()
+            });
+            let need = r.bs.len();
+            match entry.iter_mut().find(|b| b.matrices + need <= cap) {
+                Some(b) => {
+                    b.members.push(idx);
+                    b.matrices += need;
+                    b.fused = true;
+                }
+                None => entry.push(Batch {
+                    mode,
+                    members: vec![idx],
+                    matrices: need,
+                    fused: need > 1,
+                    runtime_interleave: r.act_act,
+                }),
+            }
+        }
+        let mut out = Vec::new();
+        for key in order {
+            out.extend(bins.remove(&key).unwrap());
+        }
+        out
+    }
+
+    #[test]
+    fn default_lanes_match_the_legacy_batcher() {
+        check(
+            "plan-default-lanes-fifo",
+            721,
+            30,
+            |rng| {
+                let n = 1 + rng.below(16);
+                (0..n as u64)
+                    .map(|i| {
+                        let bits = *rng.choose(&[2u32, 4, 8]);
+                        mk(i, rng.below(3) as u64, bits, false, 1 + rng.below(2), 8)
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |reqs| {
+                let mut shim = form_batches(reqs);
+                if shim != plan_batches(reqs, &vec![Lane::default(); reqs.len()], 0).batches {
+                    return Err("form_batches must be the default-lane plan".into());
+                }
+                // vs the old algorithm: identical batch *membership*
+                // (emission order may differ only in the documented
+                // key-overflow corner, so compare order-normalized)
+                let mut legacy = legacy_form_batches(reqs);
+                shim.sort_by_key(|b| b.members[0]);
+                legacy.sort_by_key(|b| b.members[0]);
+                if shim != legacy {
+                    return Err(format!("shim {shim:?} != legacy batcher {legacy:?}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,383 @@
+//! Client-facing submission API: [`Client`] handles, [`SubmitOptions`]
+//! and typed [`Ticket`] completion objects.
+//!
+//! This is the coordinator's public serving surface. A [`Client`] is a
+//! cheap, cloneable handle onto a running [`super::Coordinator`]; every
+//! submission goes through a [`SubmitOptions`] builder that carries the
+//! request plus its scheduling intent:
+//!
+//! * a [`Priority`] class (`Interactive` ahead of `Batch` ahead of
+//!   `Background` in the batcher's deterministic service order),
+//! * an optional **soft deadline** (deadline-ascending ordering within a
+//!   class — a hint to the scheduler, never an admission filter), and
+//! * an optional **group tag** that pre-declares shared-input fusion: all
+//!   members of a group share one `input_id`, so Q/K/V projections off one
+//!   `X` submitted as one group are fused into a single multi-matrix pass
+//!   whenever they land in the same batching window.
+//!
+//! A successful submit returns a [`Ticket`] — the typed replacement for
+//! the raw `Receiver<RequestOutcome>` the old API exposed — with
+//! [`Ticket::wait`], [`Ticket::try_wait`], [`Ticket::wait_timeout`] and
+//! [`Ticket::id`]. The legacy `Coordinator::try_submit` /
+//! `Coordinator::submit_wait` entry points survive as thin shims over this
+//! path (asserted byte-identical by the differential suite in
+//! `rust/tests/integration_pipeline.rs`).
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Metrics;
+use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
+
+/// Service class of a request. Classes earlier in [`Priority::ALL`] are
+/// served first; the batcher's aging rule promotes overdue lower-class
+/// work so nothing starves (see `batcher::plan_batches`). The single
+/// source of truth for the service order is [`Priority::rank`] — the
+/// enum deliberately does not derive `Ord`, so declaration order can
+/// never silently diverge from the scheduler's order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Priority {
+    /// Latency-critical requests (e.g. decode-path attention scores):
+    /// served ahead of everything else.
+    Interactive,
+    /// The default class for throughput work (projection GEMM streams).
+    #[default]
+    Batch,
+    /// Best-effort work (trace replays, offline re-scoring): served last,
+    /// but aged into higher classes rather than starved.
+    Background,
+}
+
+impl Priority {
+    /// All classes, in service order.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Batch, Priority::Background];
+    /// Number of classes (sizes the per-class metric arrays).
+    pub const COUNT: usize = 3;
+
+    /// Service rank: 0 is served first.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+            Priority::Background => 2,
+        }
+    }
+
+    /// Index into per-class metric arrays (same as [`Priority::rank`]).
+    pub fn index(self) -> usize {
+        self.rank()
+    }
+
+    /// Lower-case class name (metric labels, CLI).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Priority, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            "background" => Ok(Priority::Background),
+            other => Err(format!("unknown priority {other:?} (interactive|batch|background)")),
+        }
+    }
+}
+
+/// Builder for one submission: the request plus its scheduling intent.
+#[derive(Debug, Clone)]
+pub struct SubmitOptions {
+    request: MatmulRequest,
+    priority: Priority,
+    deadline: Option<Duration>,
+    group: Option<u64>,
+}
+
+impl SubmitOptions {
+    /// Wrap a request with default scheduling (class [`Priority::Batch`],
+    /// no deadline, no group) — byte-identical to the legacy `try_submit`
+    /// path.
+    pub fn new(request: MatmulRequest) -> SubmitOptions {
+        SubmitOptions { request, priority: Priority::default(), deadline: None, group: None }
+    }
+
+    /// Service class.
+    pub fn priority(mut self, priority: Priority) -> SubmitOptions {
+        self.priority = priority;
+        self
+    }
+
+    /// Soft deadline, relative to submit time. Within a class the batcher
+    /// orders deadline-ascending (no deadline sorts last); an expired
+    /// deadline never cancels a request.
+    pub fn deadline(mut self, soft: Duration) -> SubmitOptions {
+        self.deadline = Some(soft);
+        self
+    }
+
+    /// Group tag pre-declaring shared-input fusion: overwrites the
+    /// request's `input_id` so every member of the group shares one fusion
+    /// key. Members must also share the same activation `Arc` (the batcher
+    /// only fuses requests referencing the *same* matrix object).
+    pub fn group(mut self, group: u64) -> SubmitOptions {
+        self.group = Some(group);
+        self
+    }
+}
+
+/// Admission gate shared by the [`super::Coordinator`] and every
+/// [`Client`] clone: the ingress sender (slot emptied on shutdown so
+/// outstanding clients observe "coordinator stopped" instead of keeping
+/// the router alive), the metrics sink and the id counter.
+pub(crate) struct Gate {
+    ingress: RwLock<Option<SyncSender<Envelope>>>,
+    pub(crate) metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Gate {
+    pub(crate) fn new(metrics: Arc<Metrics>, ingress: SyncSender<Envelope>) -> Gate {
+        Gate { ingress: RwLock::new(Some(ingress)), metrics, next_id: AtomicU64::new(1) }
+    }
+
+    /// Close admission: drops the ingress sender (the router drains and
+    /// exits) while live `Client` clones start failing cleanly.
+    pub(crate) fn close(&self) {
+        *self.ingress.write().unwrap_or_else(|e| e.into_inner()) = None;
+    }
+}
+
+/// Cheap, cloneable submission handle onto a running coordinator.
+///
+/// Clones share the coordinator's admission gate; a handle outliving
+/// `Coordinator::shutdown` fails submissions with "coordinator stopped"
+/// rather than keeping the server threads alive.
+#[derive(Clone)]
+pub struct Client {
+    gate: Arc<Gate>,
+}
+
+impl Client {
+    pub(crate) fn new(gate: Arc<Gate>) -> Client {
+        Client { gate }
+    }
+
+    /// Submit one request without blocking. Validation failures and
+    /// backpressure (full admission queue) reject the submission; on
+    /// success the returned [`Ticket`] resolves to the request's
+    /// [`RequestOutcome`].
+    pub fn submit(&self, opts: SubmitOptions) -> Result<Ticket> {
+        let SubmitOptions { mut request, priority, deadline, group } = opts;
+        if let Some(g) = group {
+            request.input_id = g;
+        }
+        if let Err(reason) = request.validate() {
+            self.gate.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("invalid request: {reason}"));
+        }
+        let id = self.gate.next_id.fetch_add(1, Ordering::Relaxed);
+        request.id = id;
+        let (tx, rx) = std::sync::mpsc::channel();
+        let now = Instant::now();
+        let env = Envelope {
+            req: request,
+            reply: tx,
+            enqueued: now,
+            priority,
+            // a duration too large for the clock (e.g. Duration::MAX as a
+            // "no deadline" sentinel) degrades to no deadline instead of
+            // panicking on Instant overflow
+            deadline: deadline.and_then(|d| now.checked_add(d)),
+        };
+        let guard = self.gate.ingress.read().unwrap_or_else(|e| e.into_inner());
+        let Some(ingress) = guard.as_ref() else {
+            return Err(anyhow!("coordinator stopped"));
+        };
+        let m = &self.gate.metrics;
+        // The gauge is incremented *before* the send: once the envelope
+        // is in the channel the router may drain and decrement it at any
+        // moment, and add-after-send could then underflow the u64 gauge.
+        m.queue_depth.fetch_add(1, Ordering::Relaxed);
+        match ingress.try_send(env) {
+            Ok(()) => {
+                m.accepted.fetch_add(1, Ordering::Relaxed);
+                m.class_accepted[priority.index()].fetch_add(1, Ordering::Relaxed);
+                Ok(Ticket { id, priority, rx, claimed: false })
+            }
+            Err(TrySendError::Full(_)) => {
+                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                m.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!(
+                    "queue full ({} pending)",
+                    m.queue_depth.load(Ordering::Relaxed)
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                Err(anyhow!("coordinator stopped"))
+            }
+        }
+    }
+
+    /// Submit and block for the outcome (convenience).
+    pub fn submit_wait(&self, opts: SubmitOptions) -> Result<RequestOutcome> {
+        self.submit(opts)?.wait()
+    }
+
+    /// Submit a shared-input group (e.g. a Q/K/V triplet off one `X`) in
+    /// one call: every member gets the `group` fusion tag, the given
+    /// class, and back-to-back admission so the router usually windows
+    /// them together. Returns one ticket per member, in order. On a
+    /// mid-group rejection (backpressure) the error is returned and the
+    /// already-admitted members stay in flight — their outcomes are
+    /// simply discarded with the dropped tickets. Callers that need
+    /// per-member rejection handling (retry, dedupe, partial waits)
+    /// should submit members individually with
+    /// [`SubmitOptions::group`] instead, as `adip serve` does.
+    pub fn submit_group<I>(&self, group: u64, priority: Priority, requests: I) -> Result<Vec<Ticket>>
+    where
+        I: IntoIterator<Item = MatmulRequest>,
+    {
+        requests
+            .into_iter()
+            .map(|r| self.submit(SubmitOptions::new(r).priority(priority).group(group)))
+            .collect()
+    }
+}
+
+/// Typed completion handle for one submitted request.
+///
+/// The outcome can be claimed exactly once — through [`Ticket::wait`]
+/// (consuming), or through the first [`Ticket::try_wait`] /
+/// [`Ticket::wait_timeout`] call that returns `Ok(Some(_))`; after that,
+/// polling again reports an error.
+#[derive(Debug)]
+pub struct Ticket {
+    id: RequestId,
+    priority: Priority,
+    rx: Receiver<RequestOutcome>,
+    /// Set once a poll returned the outcome, so later polls error
+    /// deterministically (the worker may drop its reply sender slightly
+    /// after the outcome is consumed — the flag, not the channel state,
+    /// is the contract).
+    claimed: bool,
+}
+
+impl Ticket {
+    /// The id the coordinator assigned to this request.
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// The class the request was submitted under.
+    pub fn priority(&self) -> Priority {
+        self.priority
+    }
+
+    /// Block until the outcome arrives.
+    pub fn wait(self) -> Result<RequestOutcome> {
+        if self.claimed {
+            return Err(anyhow!("outcome already claimed"));
+        }
+        self.rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// Non-blocking poll: `Ok(None)` while the request is still in
+    /// flight, `Ok(Some(outcome))` exactly once when it completes.
+    pub fn try_wait(&mut self) -> Result<Option<RequestOutcome>> {
+        if self.claimed {
+            return Err(anyhow!("outcome already claimed"));
+        }
+        match self.rx.try_recv() {
+            Ok(out) => {
+                self.claimed = true;
+                Ok(Some(out))
+            }
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => {
+                Err(anyhow!("coordinator dropped the request"))
+            }
+        }
+    }
+
+    /// Bounded-wait poll: blocks up to `timeout`, then `Ok(None)` if the
+    /// request is still in flight.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Result<Option<RequestOutcome>> {
+        if self.claimed {
+            return Err(anyhow!("outcome already claimed"));
+        }
+        match self.rx.recv_timeout(timeout) {
+            Ok(out) => {
+                self.claimed = true;
+                Ok(Some(out))
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(anyhow!("coordinator dropped the request"))
+            }
+        }
+    }
+
+    /// Unwrap into the legacy `(id, Receiver)` pair — the old-API shims
+    /// (`Coordinator::try_submit`) are built on this.
+    pub fn into_parts(self) -> (RequestId, Receiver<RequestOutcome>) {
+        (self.id, self.rx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_order_and_names() {
+        assert!(Priority::Interactive.rank() < Priority::Batch.rank());
+        assert!(Priority::Batch.rank() < Priority::Background.rank());
+        assert_eq!(Priority::default(), Priority::Batch);
+        for p in Priority::ALL {
+            assert_eq!(p.name().parse::<Priority>().unwrap(), p);
+            assert!(p.index() < Priority::COUNT);
+        }
+        assert!("turbo".parse::<Priority>().is_err());
+    }
+
+    #[test]
+    fn options_builder_carries_intent() {
+        let mut rng = crate::testutil::Rng::seeded(1);
+        let req = MatmulRequest {
+            id: 0,
+            input_id: 9,
+            a: Arc::new(crate::dataflow::Mat::random(&mut rng, 4, 4, 8)),
+            bs: vec![Arc::new(crate::dataflow::Mat::random(&mut rng, 4, 4, 2))],
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        };
+        let opts = SubmitOptions::new(req)
+            .priority(Priority::Interactive)
+            .deadline(Duration::from_millis(5))
+            .group(42);
+        assert_eq!(opts.priority, Priority::Interactive);
+        assert_eq!(opts.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(opts.group, Some(42));
+    }
+}

@@ -1,6 +1,36 @@
 //! Coordinator metrics: lock-free counters + Prometheus-style text dump.
+//!
+//! Alongside the global counters, the serving redesign added per-class
+//! series (accepted/completed/queue-wait per [`Priority`]) and the
+//! pipeline's prepare-stage series (`prepared_depth` — the gauge that
+//! makes prepare/execute overlap observable — plus prepared totals,
+//! prepare seconds and aging promotions).
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::client::Priority;
+
+/// Nearest-rank percentile over an ascending-sorted, non-empty slice —
+/// the one index/rounding rule shared by [`Metrics::queue_percentile`]
+/// and the per-class series in [`Metrics::render`].
+fn percentile_of_sorted(sorted: &[f32], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx] as f64
+}
+
+/// One class's queue-wait samples from a reservoir snapshot, sorted
+/// ascending — the shared per-class extraction behind
+/// [`Metrics::class_queue_summary`] and [`Metrics::render`].
+fn sorted_class_waits(snapshot: &[(f32, f32, u8)], class: Priority) -> Vec<f32> {
+    let mut waits: Vec<f32> = snapshot
+        .iter()
+        .filter(|x| x.2 == class.index() as u8)
+        .map(|x| x.0)
+        .collect();
+    waits.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    waits
+}
 
 /// Atomic f64 stored as bits (sums only; no CAS loops needed beyond add).
 #[derive(Debug, Default)]
@@ -68,14 +98,36 @@ pub struct Metrics {
     pub pool_shards_dispatched: AtomicU64,
     /// Pool shard executions that panicked (recovered per-worker).
     pub pool_worker_panics: AtomicU64,
+    /// Requests accepted per service class (indexed by
+    /// [`Priority::index`]).
+    pub class_accepted: [AtomicU64; Priority::COUNT],
+    /// Requests completed per service class.
+    pub class_completed: [AtomicU64; Priority::COUNT],
+    /// Batches fully prepared but not yet picked up by a worker (gauge).
+    /// Nonzero under load is the observable proof that the prepare stage
+    /// runs ahead of execution.
+    pub prepared_depth: AtomicU64,
+    /// Batches that went through the prepare stage (pipelined or inline).
+    pub prepared_batches: AtomicU64,
+    /// Requests promoted at least one class by the batcher's aging rule.
+    pub aging_promotions: AtomicU64,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
     /// Total seconds shards waited in pool queues before pickup.
     pool_queue_seconds: AtomicF64,
+    /// Host seconds spent preparing batches (validation already happened
+    /// at admission; this is mode selection + fingerprinting + assembly).
+    prepare_seconds: AtomicF64,
+    /// Per-class queue-wait sums (means need a denominator:
+    /// `class_completed`).
+    class_queue_seconds: [AtomicF64; Priority::COUNT],
     /// Bounded latency sample reservoir for percentile reporting:
-    /// `(queue_s, service_s)` pairs, capped at [`Metrics::MAX_SAMPLES`].
-    samples: std::sync::Mutex<Vec<(f32, f32)>>,
+    /// `(queue_s, service_s, class index)` triples plus the rolling
+    /// overwrite cursor. At [`Metrics::MAX_SAMPLES`] the oldest sample is
+    /// overwritten (sliding window), so percentiles keep tracking a
+    /// long-running server instead of freezing on its warm-up period.
+    samples: std::sync::Mutex<(Vec<(f32, f32, u8)>, usize)>,
 }
 
 impl Metrics {
@@ -118,41 +170,89 @@ impl Metrics {
         self.pool_queue_seconds.get() / n as f64
     }
 
-    /// Cap on retained latency samples (oldest kept; enough for stable
-    /// p99 over any bench run here).
+    /// Cap on retained latency samples (a sliding window once full;
+    /// enough for stable p99 over any bench run here).
     pub const MAX_SAMPLES: usize = 1 << 16;
 
-    /// Record host-side latencies.
-    pub fn record_latency(&self, queue_s: f64, service_s: f64) {
+    /// Record host-side latencies for one completed request of `class`.
+    pub fn record_latency(&self, queue_s: f64, service_s: f64, class: Priority) {
         self.queue_seconds.add(queue_s);
         self.service_seconds.add(service_s);
-        let mut samples = self.samples.lock().expect("metrics lock");
-        if samples.len() < Self::MAX_SAMPLES {
-            samples.push((queue_s as f32, service_s as f32));
+        self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed);
+        self.class_queue_seconds[class.index()].add(queue_s);
+        let sample = (queue_s as f32, service_s as f32, class.index() as u8);
+        let mut guard = self.samples.lock().expect("metrics lock");
+        let (buf, cursor) = &mut *guard;
+        if buf.len() < Self::MAX_SAMPLES {
+            buf.push(sample);
+        } else {
+            // sliding window: overwrite the oldest so a long-running
+            // server's percentiles never freeze on its warm-up period
+            buf[*cursor] = sample;
+            *cursor = (*cursor + 1) % Self::MAX_SAMPLES;
         }
+    }
+
+    /// Record host seconds one batch spent in the prepare stage.
+    pub fn record_prepare(&self, seconds: f64) {
+        self.prepared_batches.fetch_add(1, Ordering::Relaxed);
+        self.prepare_seconds.add(seconds);
+    }
+
+    /// Total host seconds spent preparing batches.
+    pub fn prepare_seconds_total(&self) -> f64 {
+        self.prepare_seconds.get()
     }
 
     /// Queue-wait percentile in seconds (`p` in 0..=100); `None` when no
     /// samples were recorded.
     pub fn queue_percentile(&self, p: f64) -> Option<f64> {
-        self.percentile(p, |s| s.0)
+        self.percentile(p, |s| s.0, None)
     }
 
     /// Service-time percentile in seconds.
     pub fn service_percentile(&self, p: f64) -> Option<f64> {
-        self.percentile(p, |s| s.1)
+        self.percentile(p, |s| s.1, None)
     }
 
-    fn percentile(&self, p: f64, f: impl Fn(&(f32, f32)) -> f32) -> Option<f64> {
+    /// Queue-wait percentile over one service class only.
+    pub fn class_queue_percentile(&self, class: Priority, p: f64) -> Option<f64> {
+        self.percentile(p, |s| s.0, Some(class))
+    }
+
+    /// Mean queue wait (s) per completed request of one class.
+    pub fn mean_class_queue_seconds(&self, class: Priority) -> f64 {
+        let n = self.class_completed[class.index()].load(Ordering::Relaxed).max(1);
+        self.class_queue_seconds[class.index()].get() / n as f64
+    }
+
+    fn percentile(
+        &self,
+        p: f64,
+        f: impl Fn(&(f32, f32, u8)) -> f32,
+        class: Option<Priority>,
+    ) -> Option<f64> {
         assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
-        let samples = self.samples.lock().expect("metrics lock");
-        if samples.is_empty() {
+        // the lock is held only for the filtered copy; the O(n log n)
+        // sort runs outside it so a metrics scrape cannot stall workers
+        // recording latencies
+        let mut vals: Vec<f32> = {
+            let guard = self.samples.lock().expect("metrics lock");
+            guard
+                .0
+                .iter()
+                .filter(|s| match class {
+                    None => true,
+                    Some(c) => s.2 == c.index() as u8,
+                })
+                .map(&f)
+                .collect()
+        };
+        if vals.is_empty() {
             return None;
         }
-        let mut vals: Vec<f32> = samples.iter().map(f).collect();
         vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (vals.len() - 1) as f64).round() as usize;
-        Some(vals[idx] as f64)
+        Some(percentile_of_sorted(&vals, p))
     }
 
     /// Total simulated energy (J).
@@ -170,6 +270,34 @@ impl Metrics {
     pub fn mean_service_seconds(&self) -> f64 {
         let n = self.completed.load(Ordering::Relaxed).max(1);
         self.service_seconds.get() / n as f64
+    }
+
+    /// Human-readable per-class queue-wait table (one row per
+    /// [`Priority`]) — the single source for the CLI summaries, so the
+    /// serve and trace reports cannot drift apart.
+    pub fn class_queue_summary(&self) -> String {
+        // one reservoir snapshot for all six percentiles (same pattern
+        // as `render`): one lock+copy, one sort per class
+        let snapshot: Vec<(f32, f32, u8)> =
+            self.samples.lock().expect("metrics lock").0.clone();
+        let mut s = String::new();
+        for class in Priority::ALL {
+            let i = class.index();
+            let waits = sorted_class_waits(&snapshot, class);
+            let pct = |p: f64| {
+                if waits.is_empty() { 0.0 } else { percentile_of_sorted(&waits, p) }
+            };
+            s.push_str(&format!(
+                "  {:<12} accepted {:>5} | completed {:>5} | queue wait mean {:.3} ms | p50 {:.3} ms | p95 {:.3} ms\n",
+                class.name(),
+                self.class_accepted[i].load(Ordering::Relaxed),
+                self.class_completed[i].load(Ordering::Relaxed),
+                self.mean_class_queue_seconds(class) * 1e3,
+                pct(50.0) * 1e3,
+                pct(95.0) * 1e3
+            ));
+        }
+        s
     }
 
     /// Prometheus-style text exposition.
@@ -196,6 +324,38 @@ impl Metrics {
             self.cache_evictions.load(Ordering::Relaxed),
         ));
         s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
+        s.push_str(&c("prepared_depth", self.prepared_depth.load(Ordering::Relaxed)));
+        s.push_str(&c("prepared_batches_total", self.prepared_batches.load(Ordering::Relaxed)));
+        s.push_str(&c("aging_promotions_total", self.aging_promotions.load(Ordering::Relaxed)));
+        s.push_str(&format!("adip_prepare_seconds_total {:.6e}\n", self.prepare_seconds_total()));
+        // one snapshot of the reservoir serves every per-class percentile
+        // below — per-class filter + sort over the copy, instead of a
+        // lock + copy + sort per series
+        let snapshot: Vec<(f32, f32, u8)> =
+            self.samples.lock().expect("metrics lock").0.clone();
+        for class in Priority::ALL {
+            let l = class.name();
+            let i = class.index();
+            s.push_str(&format!(
+                "adip_class_requests_accepted_total{{class=\"{l}\"}} {}\n",
+                self.class_accepted[i].load(Ordering::Relaxed)
+            ));
+            s.push_str(&format!(
+                "adip_class_requests_completed_total{{class=\"{l}\"}} {}\n",
+                self.class_completed[i].load(Ordering::Relaxed)
+            ));
+            s.push_str(&format!(
+                "adip_class_queue_seconds_mean{{class=\"{l}\"}} {:.6e}\n",
+                self.mean_class_queue_seconds(class)
+            ));
+            let waits = sorted_class_waits(&snapshot, class);
+            for (pname, p) in [("p50", 50.0), ("p95", 95.0)] {
+                let v = if waits.is_empty() { 0.0 } else { percentile_of_sorted(&waits, p) };
+                s.push_str(&format!(
+                    "adip_class_queue_seconds_{pname}{{class=\"{l}\"}} {v:.6e}\n"
+                ));
+            }
+        }
         s.push_str(&c("pool_workers", self.pool_workers.load(Ordering::Relaxed)));
         s.push_str(&c(
             "pool_shards_dispatched_total",
@@ -249,10 +409,45 @@ mod tests {
         let m = Metrics::default();
         m.record_completion(1, 0.0, 0, 1);
         m.record_completion(1, 0.0, 0, 1);
-        m.record_latency(0.2, 0.4);
-        m.record_latency(0.4, 0.6);
+        m.record_latency(0.2, 0.4, Priority::Batch);
+        m.record_latency(0.4, 0.6, Priority::Batch);
         assert!((m.mean_queue_seconds() - 0.3).abs() < 1e-12);
         assert!((m.mean_service_seconds() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_class_latency_accounting() {
+        let m = Metrics::default();
+        m.record_latency(0.1, 0.0, Priority::Interactive);
+        m.record_latency(0.3, 0.0, Priority::Interactive);
+        m.record_latency(0.8, 0.0, Priority::Background);
+        assert_eq!(m.class_completed[Priority::Interactive.index()].load(Ordering::Relaxed), 2);
+        assert_eq!(m.class_completed[Priority::Background.index()].load(Ordering::Relaxed), 1);
+        assert_eq!(m.class_completed[Priority::Batch.index()].load(Ordering::Relaxed), 0);
+        assert!((m.mean_class_queue_seconds(Priority::Interactive) - 0.2).abs() < 1e-9);
+        assert!((m.mean_class_queue_seconds(Priority::Background) - 0.8).abs() < 1e-9);
+        let p50 = m.class_queue_percentile(Priority::Background, 50.0).unwrap();
+        assert!((p50 - 0.8).abs() < 1e-6, "{p50}");
+        assert!(m.class_queue_percentile(Priority::Batch, 50.0).is_none());
+        let text = m.render();
+        assert!(text.contains("adip_class_requests_completed_total{class=\"interactive\"} 2"));
+        assert!(text.contains("adip_class_queue_seconds_p95{class=\"background\"}"));
+    }
+
+    #[test]
+    fn prepare_counters_accumulate_and_render() {
+        let m = Metrics::default();
+        m.prepared_depth.fetch_add(2, Ordering::Relaxed);
+        m.record_prepare(0.25);
+        m.record_prepare(0.15);
+        m.aging_promotions.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(m.prepared_batches.load(Ordering::Relaxed), 2);
+        assert!((m.prepare_seconds_total() - 0.4).abs() < 1e-12);
+        let text = m.render();
+        assert!(text.contains("adip_prepared_depth 2"));
+        assert!(text.contains("adip_prepared_batches_total 2"));
+        assert!(text.contains("adip_aging_promotions_total 3"));
+        assert!(text.contains("adip_prepare_seconds_total"));
     }
 
     #[test]
@@ -260,7 +455,7 @@ mod tests {
         let m = Metrics::default();
         assert!(m.queue_percentile(50.0).is_none());
         for i in 1..=100 {
-            m.record_latency(i as f64 / 100.0, (101 - i) as f64 / 100.0);
+            m.record_latency(i as f64 / 100.0, (101 - i) as f64 / 100.0, Priority::Batch);
         }
         let p50 = m.queue_percentile(50.0).unwrap();
         assert!((p50 - 0.5).abs() < 0.02, "{p50}");
@@ -292,6 +487,13 @@ mod tests {
             "adip_weight_cache_misses_total",
             "adip_weight_cache_evictions_total",
             "adip_queue_depth",
+            "adip_prepared_depth",
+            "adip_prepared_batches_total",
+            "adip_aging_promotions_total",
+            "adip_prepare_seconds_total",
+            "adip_class_requests_accepted_total{class=\"interactive\"}",
+            "adip_class_requests_completed_total{class=\"background\"}",
+            "adip_class_queue_seconds_mean{class=\"batch\"}",
             "adip_pool_workers",
             "adip_pool_shards_dispatched_total",
             "adip_pool_worker_panics_total",

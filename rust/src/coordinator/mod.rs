@@ -1,38 +1,71 @@
 //! L3 coordinator — the serving layer around the simulated accelerator.
 //!
-//! A vLLM-router-style stack scaled to this paper: matmul/attention
-//! requests arrive on a bounded queue, a precision selector picks the
-//! execution mode, the **shared-input batcher** fuses compatible requests
-//! into ADiP's asymmetric multi-matrix passes, and a pool of worker threads
-//! (one simulated array core each) executes them through the co-simulator,
-//! returning exact numerics + cycle/energy/memory accounting per request.
+//! A vLLM-router-style stack scaled to this paper, restructured as an
+//! explicit three-stage **admit → prepare → execute** pipeline so
+//! host-side preparation of request `i+1` overlaps execution of request
+//! `i`:
 //!
+//! 1. **Admit** — callers hold a [`Client`] handle and submit through a
+//!    [`SubmitOptions`] builder carrying a [`Priority`] class
+//!    (`Interactive` / `Batch` / `Background`), an optional soft
+//!    deadline, and an optional group tag that pre-declares shared-input
+//!    fusion (Q/K/V off one `X` submitted as one group). Admission
+//!    validates shapes *and* operand ranges, classifies, and enqueues
+//!    onto the bounded ingress queue (full queue = backpressure reject).
+//!    Every submission resolves through a typed [`Ticket`]
+//!    (`wait`/`try_wait`/`wait_timeout`/`id`).
+//! 2. **Prepare** — the router forms batches in a deterministic
+//!    priority/deadline order (aging promotes overdue `Background` work,
+//!    so nothing starves) via the **shared-input batcher** (which fixes
+//!    each batch's precision mode as part of its fusion key), then a
+//!    prepare-stage thread per worker fingerprints operands into
+//!    `PreparedBatch`es queued ahead of execution — workers never idle
+//!    on host-side packing.
+//! 3. **Execute** — a pool of worker threads (one simulated cluster
+//!    each) runs the prepared batches through the co-simulator as ADiP's
+//!    asymmetric multi-matrix passes, returning exact numerics +
+//!    cycle/energy/memory accounting per request.
+//!
+//! * [`client`] — [`Client`] / [`SubmitOptions`] / [`Ticket`] /
+//!   [`Priority`]: the public submission surface. The legacy
+//!   `Coordinator::try_submit` / `submit_wait` survive as thin shims over
+//!   it (asserted byte-identical by the differential suite).
 //! * [`request`] — request/response types.
 //! * [`precision`] — weight-precision → [`crate::quant::PrecisionMode`]
-//!   selection policy (activation-to-activation pins 8b×8b).
-//! * [`batcher`] — groups requests that share an input matrix into
-//!   interleave sets (the Fig. 5(d) Q/K/V mode), never mixing shapes or
-//!   modes.
+//!   selection policy (activation-to-activation pins 8b×8b); invoked by
+//!   the prepare stage, off the execute path.
+//! * [`batcher`] — priority/deadline/aging-ordered batch formation
+//!   ([`batcher::plan_batches`]) over the shared-input fusion rules (the
+//!   Fig. 5(d) Q/K/V mode), never mixing shapes or modes.
+//! * [`prepare`] — the prepare stage: mode selection + operand
+//!   fingerprinting on dedicated stage threads
+//!   (`PrepareMode::Pipelined`, default) or inline on the worker
+//!   (`PrepareMode::Inline`, the benchmarked serial baseline).
 //! * [`scheduler`] — turns batches into tile schedules on a core.
-//! * [`server`] — the bounded-queue, multi-worker coordinator with
-//!   backpressure and graceful shutdown. Each worker owns a
-//!   [`crate::cluster::ClusterScheduler`] (a degenerate 1-core cluster on
-//!   the persistent pool engine by default), so
-//!   `CoordinatorConfig::cluster` can shard every request across a mesh of
-//!   cores; one coordinator-wide shared weight-cache store lets sibling
-//!   workers reuse each other's repeated projection tiles.
-//! * [`metrics`] — atomic counters with a Prometheus-style text dump.
+//! * [`server`] — the pipeline itself: bounded-queue admission, router,
+//!   prepare stage, multi-worker execution, backpressure and graceful
+//!   shutdown. Each worker owns a [`crate::cluster::ClusterScheduler`]
+//!   (a degenerate 1-core cluster on the persistent pool engine by
+//!   default), so `CoordinatorConfig::cluster` can shard every request
+//!   across a mesh of cores; one coordinator-wide shared weight-cache
+//!   store lets sibling workers reuse each other's projection tiles.
+//! * [`metrics`] — atomic counters with a Prometheus-style text dump,
+//!   including per-class queue-wait series and the `prepared_depth`
+//!   gauge that makes prepare/execute overlap observable.
 
 pub mod batcher;
+pub mod client;
 pub mod metrics;
 pub mod precision;
+pub(crate) mod prepare;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{form_batches, Batch};
+pub use batcher::{form_batches, plan_batches, Batch, Lane, WindowPlan};
+pub use client::{Client, Priority, SubmitOptions, Ticket};
 pub use metrics::Metrics;
 pub use precision::select_mode;
 pub use request::{MatmulRequest, RequestId, RequestOutcome, ResponseMetrics};
 pub use scheduler::CoreScheduler;
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, PrepareMode};

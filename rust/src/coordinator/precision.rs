@@ -6,6 +6,12 @@
 //! otherwise 8b×8b — while activation-to-activation requests always run at
 //! 8b×8b (dynamic operands cannot be pre-quantized below 8 bits without
 //! accuracy loss, and their preprocessing happens at runtime).
+//!
+//! In the three-stage pipeline this policy runs at batch formation (the
+//! batcher's fusion key fixes each batch's mode, carried through the
+//! prepare stage unchanged), off the worker's execute path; admission
+//! (`MatmulRequest::validate`) uses it too, to check operand ranges
+//! against the mode the request will actually run at.
 
 use crate::quant::PrecisionMode;
 

@@ -1,0 +1,197 @@
+//! The prepare stage of the admit → prepare → execute pipeline.
+//!
+//! Everything host-side that used to run inline on the worker hot path —
+//! operand fingerprinting for the weight cache and prepared-batch
+//! assembly (the precision mode is fixed even earlier, by the batcher's
+//! fusion key, and carried through) — happens here, on a dedicated stage
+//! thread per worker (`PrepareMode::Pipelined`, the default). The stage turns the
+//! router's raw [`BatchWork`] into [`PreparedBatch`]es queued ahead of
+//! execution, so preparation of batch `i+1` overlaps execution of batch
+//! `i` and workers never idle on host-side packing. The
+//! `prepared_depth` gauge counts batches sitting fully prepared ahead of
+//! a worker — nonzero under load is the observable proof of overlap.
+//!
+//! `PrepareMode::Inline` keeps the same code path but runs
+//! [`prepare_batch`] on the worker thread right before execution — the
+//! serial baseline the `bench_coordinator` pipelined-vs-inline gate
+//! measures against. Both modes produce identical results and simulated
+//! accounting (the prepared fingerprints are a pure function of the
+//! operands; `rust/tests/integration_pipeline.rs` asserts it).
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cluster::{fingerprint, PreparedFingerprints};
+use crate::quant::PrecisionMode;
+
+use super::metrics::Metrics;
+use super::request::Envelope;
+
+/// One formed batch as the router hands it to the prepare stage: the
+/// member envelopes in fusion order plus the routing decisions that are
+/// already fixed at formation time.
+pub(crate) struct BatchWork {
+    pub envelopes: Vec<Envelope>,
+    /// Execution mode the batcher grouped this batch under (the fusion
+    /// key's mode — carried through, never re-derived downstream).
+    pub mode: PrecisionMode,
+    pub runtime_interleave: bool,
+    /// Global batch-formation sequence number (the deterministic service
+    /// order; stamped into every member's `ResponseMetrics`).
+    pub batch_seq: u64,
+}
+
+/// A batch with all host-side preparation done, queued ahead of
+/// execution.
+pub(crate) struct PreparedBatch {
+    pub envelopes: Vec<Envelope>,
+    /// Execution mode selected by the prepare stage.
+    pub mode: PrecisionMode,
+    pub runtime_interleave: bool,
+    /// Operand fingerprints for the weight-cache probe (`None` while the
+    /// cache is disabled — hashing would be pure waste).
+    pub fps: Option<PreparedFingerprints>,
+    pub batch_seq: u64,
+}
+
+/// What a worker receives: a batch prepared by the stage thread
+/// (pipelined mode) or one it must prepare itself (inline mode).
+pub(crate) enum WorkMsg {
+    Raw(BatchWork),
+    Prepared(PreparedBatch),
+}
+
+/// Do the host-side preparation of one batch: when the weight cache
+/// needs them, hash the operand fingerprints (the mode was already
+/// selected at batch formation — it is the fusion key's mode and is
+/// carried through unchanged). This is the work the pipelined stage
+/// moves off the execute path.
+pub(crate) fn prepare_batch(
+    work: BatchWork,
+    cache_enabled: bool,
+    metrics: &Metrics,
+) -> PreparedBatch {
+    let t0 = Instant::now();
+    let first = &work.envelopes[0].req;
+    let fps = cache_enabled.then(|| PreparedFingerprints {
+        act: fingerprint(&[first.a.as_ref()]),
+        weights: work
+            .envelopes
+            .iter()
+            .flat_map(|e| e.req.bs.iter())
+            .map(|b| fingerprint(&[b.as_ref()]))
+            .collect(),
+    });
+    metrics.record_prepare(t0.elapsed().as_secs_f64());
+    PreparedBatch {
+        envelopes: work.envelopes,
+        mode: work.mode,
+        runtime_interleave: work.runtime_interleave,
+        fps,
+        batch_seq: work.batch_seq,
+    }
+}
+
+/// Body of one pipelined prepare thread: pull raw batches from the
+/// router, prepare them, and queue them ahead of the paired worker. The
+/// bounded output queue applies backpressure to the stage (and through
+/// it, to the router); `prepared_depth` counts batches between the two.
+///
+/// Shutdown chain: the router dropping its sender ends `rx` — the loop
+/// drains every remaining raw batch first (prepared work is never
+/// dropped), then exits, dropping `tx` so the worker drains in turn.
+pub(crate) fn prepare_loop(
+    rx: Receiver<BatchWork>,
+    tx: SyncSender<WorkMsg>,
+    cache_enabled: bool,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(work) = rx.recv() {
+        let prepared = prepare_batch(work, cache_enabled, &metrics);
+        // counted before the (possibly blocking) send: a prepared batch
+        // waiting for queue room is exactly "prepared ahead of execution"
+        metrics.prepared_depth.fetch_add(1, Ordering::Relaxed);
+        if tx.send(WorkMsg::Prepared(prepared)).is_err() {
+            metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
+            return; // worker gone (only during teardown)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::weight_cache::combine_fingerprints;
+    use crate::coordinator::client::Priority;
+    use crate::coordinator::request::MatmulRequest;
+    use crate::dataflow::Mat;
+    use crate::testutil::Rng;
+
+    fn envelope(rng: &mut Rng, bits: u32, n_b: usize) -> Envelope {
+        // the receiver is dropped — prepare never replies, and a worker
+        // send to a gone receiver is harmless by design
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Envelope {
+            req: MatmulRequest {
+                id: 0,
+                input_id: 1,
+                a: Arc::new(Mat::random(rng, 8, 8, 8)),
+                bs: (0..n_b).map(|_| Arc::new(Mat::random(rng, 8, 8, bits))).collect(),
+                weight_bits: bits,
+                act_act: false,
+                tag: String::new(),
+            },
+            reply: tx,
+            enqueued: Instant::now(),
+            priority: Priority::Batch,
+            deadline: None,
+        }
+    }
+
+    #[test]
+    fn prepare_carries_mode_and_hashes_all_member_operands() {
+        let mut rng = Rng::seeded(31);
+        let metrics = Metrics::default();
+        let work = BatchWork {
+            envelopes: vec![envelope(&mut rng, 2, 2), envelope(&mut rng, 2, 1)],
+            mode: PrecisionMode::W2,
+            runtime_interleave: false,
+            batch_seq: 7,
+        };
+        let expect_act = fingerprint(&[work.envelopes[0].req.a.as_ref()]);
+        let expect_ws: Vec<u128> = work
+            .envelopes
+            .iter()
+            .flat_map(|e| e.req.bs.iter())
+            .map(|b| fingerprint(&[b.as_ref()]))
+            .collect();
+        let pb = prepare_batch(work, true, &metrics);
+        assert_eq!(pb.mode, PrecisionMode::W2);
+        assert_eq!(pb.batch_seq, 7);
+        let fps = pb.fps.expect("cache enabled -> fingerprints prepared");
+        assert_eq!(fps.act, expect_act);
+        assert_eq!(fps.weights, expect_ws);
+        assert_eq!(fps.weights.len(), 3, "concatenated in member order");
+        // the combined form is what the degenerate cache probe uses
+        let _ = combine_fingerprints(fps.weights.iter().copied());
+        assert_eq!(metrics.prepared_batches.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn prepare_skips_hashing_when_cache_disabled() {
+        let mut rng = Rng::seeded(33);
+        let metrics = Metrics::default();
+        let work = BatchWork {
+            envelopes: vec![envelope(&mut rng, 8, 1)],
+            mode: PrecisionMode::W8,
+            runtime_interleave: true,
+            batch_seq: 0,
+        };
+        let pb = prepare_batch(work, false, &metrics);
+        assert!(pb.fps.is_none());
+        assert!(pb.runtime_interleave);
+        assert_eq!(pb.mode, PrecisionMode::W8);
+    }
+}

@@ -2,9 +2,14 @@
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::dataflow::Mat;
+use crate::quant::value_range;
 use crate::sim::memory::MemoryCounters;
+
+use super::client::Priority;
+use super::precision::select_mode;
 
 /// Monotonic request identifier.
 pub type RequestId = u64;
@@ -34,13 +39,37 @@ pub struct MatmulRequest {
 }
 
 impl MatmulRequest {
-    /// Basic shape/content validation; returns a reason when malformed.
+    /// Shape *and content* validation; returns a reason when malformed.
+    ///
+    /// Content rules (this is the admission stage — a request that passes
+    /// here can never fail the pack-time range check deep inside a
+    /// worker):
+    /// * activation-to-activation requests must declare `weight_bits == 8`
+    ///   (dynamic operands are never pre-quantized below 8 bits; the
+    ///   precision selector pins 8b×8b for them),
+    /// * every weight entry must fit the *selected mode's* width — the
+    ///   signed range of `select_mode(weight_bits, act_act).weight_bits()`
+    ///   bits, so `weight_bits = 1` (BitNet ternary) checks against the
+    ///   2-bit mode it maps to,
+    /// * every activation entry must fit the 8-bit operand width.
     pub fn validate(&self) -> Result<(), String> {
         if self.bs.is_empty() {
             return Err("no weight matrices".into());
         }
         if !(1..=8).contains(&self.weight_bits) {
             return Err(format!("weight_bits {} out of 1..=8", self.weight_bits));
+        }
+        if self.act_act && self.weight_bits != 8 {
+            return Err(format!(
+                "act_act requests run 8b\u{d7}8b but declared weight_bits {}",
+                self.weight_bits
+            ));
+        }
+        let mode_bits = select_mode(self.weight_bits, self.act_act).weight_bits();
+        let (wlo, whi) = value_range(mode_bits);
+        let (alo, ahi) = value_range(8);
+        if let Some(bad) = self.a.as_slice().iter().find(|&&v| !(alo..=ahi).contains(&v)) {
+            return Err(format!("activation entry {bad} out of 8-bit range {alo}..={ahi}"));
         }
         let (r, c) = (self.bs[0].rows(), self.bs[0].cols());
         for (i, b) in self.bs.iter().enumerate() {
@@ -54,6 +83,12 @@ impl MatmulRequest {
                     self.a.cols(),
                     b.rows(),
                     b.cols()
+                ));
+            }
+            if let Some(bad) = b.as_slice().iter().find(|&&v| !(wlo..=whi).contains(&v)) {
+                return Err(format!(
+                    "weight matrix {i} entry {bad} does not fit the {mode_bits}-bit mode \
+                     range {wlo}..={whi}"
                 ));
             }
         }
@@ -78,6 +113,13 @@ pub struct ResponseMetrics {
     pub service_seconds: f64,
     /// Whether the request was fused into a shared-input batch.
     pub batched: bool,
+    /// Global sequence number (from 1) of the batch this request
+    /// executed in — assigned by the router at batch-formation time, so
+    /// it exposes the coordinator's deterministic
+    /// (priority/deadline/aging) service order to callers and tests.
+    /// 0 means the request never went through the router (direct
+    /// scheduler use).
+    pub batch_seq: u64,
 }
 
 /// Completion message for one request.
@@ -91,11 +133,16 @@ pub struct RequestOutcome {
     pub metrics: ResponseMetrics,
 }
 
-/// Internal envelope: request + response channel + enqueue timestamp.
+/// Internal envelope: request + response channel + scheduling lane
+/// (class, soft deadline, enqueue timestamp).
 pub(crate) struct Envelope {
     pub req: MatmulRequest,
     pub reply: Sender<RequestOutcome>,
-    pub enqueued: std::time::Instant,
+    pub enqueued: Instant,
+    /// Service class the request was submitted under.
+    pub priority: Priority,
+    /// Absolute soft deadline (submit time + the requested offset).
+    pub deadline: Option<Instant>,
 }
 
 #[cfg(test)]
@@ -137,5 +184,53 @@ mod tests {
         let mut r = req(8);
         r.a = Arc::new(Mat::zeros(4, 5));
         assert!(r.validate().is_err());
+    }
+
+    /// Regression: the doc always claimed "entries must fit `weight_bits`"
+    /// but `validate` never looked at matrix contents — an out-of-range
+    /// weight sailed through admission and only failed at pack time deep
+    /// inside a worker.
+    #[test]
+    fn validation_checks_weight_entries_fit_the_mode() {
+        // 2-bit mode range is -2..=1: a 5 must be rejected up front
+        let mut r = req(2);
+        let mut w = (*r.bs[0]).clone();
+        w.set(1, 1, 5);
+        r.bs[0] = Arc::new(w);
+        let err = r.validate().unwrap_err();
+        assert!(err.contains("does not fit"), "{err}");
+        // weight_bits = 1 maps to the 2-bit mode: BitNet ternary {-1,0,1}
+        // must pass even though +1 does not fit a 1-bit signed field
+        let mut r = req(1);
+        r.bs[0] = Arc::new(Mat::from_vec(4, 4, vec![-1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, 0]));
+        assert!(r.validate().is_ok());
+        // ... but -3 exceeds even the 2-bit mode range
+        let mut r = req(1);
+        r.bs[0] = Arc::new(Mat::from_vec(4, 4, vec![-3; 16]));
+        assert!(r.validate().is_err());
+        // activations are 8-bit operands regardless of mode
+        let mut r = req(8);
+        let mut a = (*r.a).clone();
+        a.set(0, 0, 300);
+        r.a = Arc::new(a);
+        let err = r.validate().unwrap_err();
+        assert!(err.contains("activation"), "{err}");
+    }
+
+    /// Regression: `act_act` forces the 8b×8b mode, so a request that
+    /// declares a narrower weight width is inconsistent and must be
+    /// rejected at admission.
+    #[test]
+    fn validation_requires_act_act_to_declare_8_bits() {
+        for bits in [1u32, 2, 4, 7] {
+            let mut r = req(8);
+            r.act_act = true;
+            r.weight_bits = bits;
+            let err = r.validate().unwrap_err();
+            assert!(err.contains("act_act"), "{err}");
+        }
+        let mut r = req(8);
+        r.act_act = true;
+        assert!(r.validate().is_ok());
     }
 }

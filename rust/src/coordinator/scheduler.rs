@@ -130,6 +130,9 @@ pub(crate) fn attribute_members(
                 queue_seconds: 0.0,
                 service_seconds: 0.0,
                 batched: fused,
+                // stamped by the coordinator worker from the router's
+                // batch-formation sequence; 0 for direct scheduler use
+                batch_seq: 0,
             },
         });
     }

@@ -1,44 +1,105 @@
-//! The coordinator server: bounded ingress queue, batching router, worker
-//! pool, backpressure and graceful shutdown — all on std threads/channels
-//! (the offline crate snapshot has no async runtime; on a 1-vCPU host the
-//! thread pool is the right tool anyway).
+//! The coordinator server: a three-stage **admit → prepare → execute**
+//! pipeline on std threads/channels (the offline crate snapshot has no
+//! async runtime; on small hosts the thread pipeline is the right tool
+//! anyway).
 //!
 //! ```text
-//! submit() ──▶ [bounded queue] ──▶ router thread ──▶ worker 0 (cluster)
-//!                  │ (reject when full = backpressure)   worker 1 …
-//!                  ▼                                     │
-//!             Metrics ◀──────── outcomes via per-request channels
+//!            ADMIT                    PREPARE                  EXECUTE
+//! Client::submit(opts)          adip-prepare-0             adip-worker-0
+//!   validate + classify    ┌──▶ [raw batches] ─▶ mode/fps ─▶ [prepared] ─▶ cluster
+//!        │                 │                                   queue        exec
+//!        ▼                 │
+//!  [bounded ingress] ─▶ router: window → priority/deadline/aging order
+//!        │ (reject when     │   → form_batches → round-robin dispatch
+//!        │  full =          └──▶ adip-prepare-1 ─▶ … ─▶ adip-worker-1
+//!        ▼  backpressure)
+//!     Metrics ◀─────────── outcomes via per-request channels (Tickets)
 //! ```
 //!
-//! Each worker owns a [`ClusterScheduler`] — by default a persistent pool
-//! of per-core threads (see `cluster/mod.rs`) — and, unless
-//! `shared_weight_cache` is disabled, every worker shares one
-//! coordinator-wide [`SharedWeightCache`] store so siblings reuse each
-//! other's repeated projection tiles (surfaced as
-//! `adip_weight_cache_shared_hits_total`).
+//! * **Admit** — [`super::client::Client::submit`] validates (shapes *and*
+//!   operand ranges), assigns the id, stamps the scheduling lane
+//!   (priority class, soft deadline, group tag) and enqueues; a full
+//!   queue rejects (backpressure).
+//! * **Prepare** — one stage thread per worker turns formed batches into
+//!   [`PreparedBatch`]es (mode selection, weight/activation
+//!   fingerprinting) queued ahead of execution, so preparing batch `i+1`
+//!   overlaps executing batch `i`. `PrepareMode::Inline` runs the same
+//!   code on the worker thread instead — the serial baseline for the
+//!   `bench_coordinator` overlap gate. The `prepared_depth` gauge counts
+//!   batches sitting ready ahead of workers.
+//! * **Execute** — each worker owns a [`ClusterScheduler`] (by default a
+//!   persistent pool of per-core threads, see `cluster/mod.rs`) and,
+//!   unless `shared_weight_cache` is disabled, all workers share one
+//!   coordinator-wide [`SharedWeightCache`] store
+//!   (`adip_weight_cache_shared_hits_total`).
+//!
+//! Batch formation is priority-aware ([`plan_batches`]): Interactive
+//! ahead of Batch ahead of Background, deadline-ascending within a class,
+//! FIFO tiebreak, with aging promotion so Background work is never
+//! starved. The formation order is stamped into every outcome as
+//! `ResponseMetrics::batch_seq`, making the deterministic service order
+//! observable.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::arch::{Architecture, Backend};
 use crate::cluster::{ClusterConfig, ClusterScheduler, PoolMode, SharedWeightCache};
 
-use super::batcher::form_batches;
+use super::batcher::{plan_batches, Lane};
+use super::client::{Client, Gate, SubmitOptions, Ticket};
 use super::metrics::Metrics;
+use super::prepare::{prepare_batch, prepare_loop, BatchWork, PreparedBatch, WorkMsg};
 use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
+
+/// Where batch preparation runs (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PrepareMode {
+    /// A dedicated prepare thread per worker overlaps preparation with
+    /// execution (the default). When the weight cache is disabled there
+    /// is no host-side prepare work to overlap, so this collapses to
+    /// direct dispatch — no stage threads, no extra queue hop.
+    #[default]
+    Pipelined,
+    /// Preparation runs serially on the worker thread right before
+    /// execution — the baseline the overlap is benchmarked against.
+    Inline,
+}
+
+impl std::fmt::Display for PrepareMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PrepareMode::Pipelined => "pipelined",
+            PrepareMode::Inline => "inline",
+        })
+    }
+}
+
+impl std::str::FromStr for PrepareMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<PrepareMode, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "pipelined" | "pipeline" => Ok(PrepareMode::Pipelined),
+            "inline" => Ok(PrepareMode::Inline),
+            other => Err(format!("unknown prepare mode {other:?} (pipelined|inline)")),
+        }
+    }
+}
 
 /// Coordinator configuration.
 ///
 /// The defaults are the serving defaults everywhere in the crate:
-/// `Backend::Functional` execution and a degenerate single-core cluster
-/// per worker (no sharding, weight cache off) — byte-identical accounting
-/// to the pre-cluster coordinator, so existing callers that spread
-/// `..Default::default()` keep their behavior.
+/// `Backend::Functional` execution, a degenerate single-core cluster per
+/// worker, and the pipelined prepare stage — which is accounting-neutral
+/// (prepared fingerprints are a pure function of the operands), so
+/// existing callers that spread `..Default::default()` keep byte-identical
+/// outputs and simulated accounting.
 #[derive(Debug, Clone, Copy)]
 pub struct CoordinatorConfig {
     /// Architecture each core simulates.
@@ -66,6 +127,21 @@ pub struct CoordinatorConfig {
     /// is 0, and can never change outputs either way (hits are bit-exact
     /// by key construction).
     pub shared_weight_cache: bool,
+    /// Where batch preparation runs (default: pipelined stage threads).
+    pub prepare: PrepareMode,
+    /// Capacity of each worker's prepared-batch queue (how far the
+    /// prepare stage may run ahead of execution).
+    pub prepared_capacity: usize,
+    /// Aging interval of the batcher's no-starvation rule: every full
+    /// interval a request has waited promotes it one priority class,
+    /// where it competes on the class's normal deadline→FIFO terms.
+    /// `Duration::ZERO` disables aging. Trade-off: once queue waits
+    /// exceed the interval under sustained overload, promoted work
+    /// reaches the Interactive rank and service degrades toward FIFO —
+    /// deliberate (overload fairness beats starvation), but it means the
+    /// interval should sit well above the burst waits you still want
+    /// strictly class-ordered.
+    pub aging: Duration,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,29 +155,38 @@ impl Default for CoordinatorConfig {
             backend: Backend::Functional,
             cluster: ClusterConfig::default(),
             shared_weight_cache: true,
+            prepare: PrepareMode::default(),
+            prepared_capacity: 4,
+            aging: Duration::from_millis(100),
         }
     }
 }
 
-/// Work sent to a worker: the envelopes of one batch.
-struct WorkItem {
-    envelopes: Vec<Envelope>,
-    runtime_interleave: bool,
+/// Router-side handle to one worker's pipeline: either through its
+/// prepare stage (pipelined) or straight to the worker (inline).
+enum StageTx {
+    Prepare(SyncSender<BatchWork>),
+    Direct(SyncSender<WorkMsg>),
 }
 
 /// The running coordinator.
 pub struct Coordinator {
-    ingress: SyncSender<Envelope>,
-    metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+    gate: Arc<Gate>,
+    client: Client,
     router: Option<JoinHandle<()>>,
+    preparers: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Start the router + worker threads.
+    /// Start the router + prepare-stage + worker threads.
     pub fn start(cfg: CoordinatorConfig) -> Coordinator {
-        assert!(cfg.workers > 0 && cfg.queue_capacity > 0 && cfg.batch_window > 0);
+        assert!(
+            cfg.workers > 0
+                && cfg.queue_capacity > 0
+                && cfg.batch_window > 0
+                && cfg.prepared_capacity > 0
+        );
         let metrics = Arc::new(Metrics::default());
         let (ingress_tx, ingress_rx) = sync_channel::<Envelope>(cfg.queue_capacity);
         // Single-core clusters execute inline (no pool threads), so the
@@ -118,12 +203,11 @@ impl Coordinator {
         let shared_cache =
             cfg.shared_weight_cache.then(|| SharedWeightCache::new(cfg.cluster.cache));
 
-        // worker channels
-        let mut worker_txs = Vec::new();
+        let mut stage_txs = Vec::new();
+        let mut preparers = Vec::new();
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
-            let (tx, rx) = sync_channel::<WorkItem>(4);
-            worker_txs.push(tx);
+            let (work_tx, work_rx) = sync_channel::<WorkMsg>(cfg.prepared_capacity);
             let m = metrics.clone();
             let cache = shared_cache
                 .clone()
@@ -131,71 +215,82 @@ impl Coordinator {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adip-worker-{w}"))
-                    .spawn(move || worker_loop(rx, cfg, m, cache))
+                    .spawn(move || worker_loop(work_rx, cfg, m, cache))
                     .expect("spawn worker"),
             );
+            match cfg.prepare {
+                // With the weight cache disabled there are no
+                // fingerprints to compute — the stage would be a pure
+                // channel hop plus an idle thread per worker — so the
+                // pipeline collapses to direct dispatch (same rationale
+                // as the 1-core cluster executing inline, PR 3).
+                PrepareMode::Pipelined if cfg.cluster.cache.enabled() => {
+                    let (prep_tx, prep_rx) = sync_channel::<BatchWork>(cfg.prepared_capacity);
+                    let m = metrics.clone();
+                    preparers.push(
+                        std::thread::Builder::new()
+                            .name(format!("adip-prepare-{w}"))
+                            .spawn(move || prepare_loop(prep_rx, work_tx, true, m))
+                            .expect("spawn prepare stage"),
+                    );
+                    stage_txs.push(StageTx::Prepare(prep_tx));
+                }
+                PrepareMode::Pipelined | PrepareMode::Inline => {
+                    stage_txs.push(StageTx::Direct(work_tx))
+                }
+            }
         }
 
         let m = metrics.clone();
         let router = std::thread::Builder::new()
             .name("adip-router".into())
-            .spawn(move || router_loop(ingress_rx, worker_txs, cfg, m))
+            .spawn(move || router_loop(ingress_rx, stage_txs, cfg, m))
             .expect("spawn router");
 
-        Coordinator {
-            ingress: ingress_tx,
-            metrics,
-            next_id: AtomicU64::new(1),
-            router: Some(router),
-            workers,
-        }
+        let gate = Arc::new(Gate::new(metrics, ingress_tx));
+        let client = Client::new(gate.clone());
+        Coordinator { gate, client, router: Some(router), preparers, workers }
     }
 
-    /// Submit a request without blocking. On success the request id is
-    /// assigned and a receiver for the outcome is returned; a full queue
-    /// rejects the request (backpressure).
+    /// A cheap, cloneable submission handle. Handles stay valid across
+    /// the coordinator's lifetime; after [`Coordinator::shutdown`] they
+    /// fail submissions with "coordinator stopped".
+    pub fn client(&self) -> Client {
+        self.client.clone()
+    }
+
+    /// Legacy entry point — thin shim over [`Client::submit`] with
+    /// default [`SubmitOptions`] (class `Batch`, no deadline, no group):
+    /// byte-identical behavior to the pre-`Client` API. On success the
+    /// request id and a receiver for the outcome are returned; a full
+    /// queue rejects the request (backpressure).
     pub fn try_submit(
         &self,
-        mut req: MatmulRequest,
+        req: MatmulRequest,
     ) -> Result<(RequestId, Receiver<RequestOutcome>)> {
-        if let Err(reason) = req.validate() {
-            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
-            return Err(anyhow!("invalid request: {reason}"));
-        }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        req.id = id;
-        let (tx, rx) = std::sync::mpsc::channel();
-        let env = Envelope { req, reply: tx, enqueued: Instant::now() };
-        match self.ingress.try_send(env) {
-            Ok(()) => {
-                self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
-                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-                Ok((id, rx))
-            }
-            Err(TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(anyhow!("queue full ({} pending)", self.metrics.queue_depth.load(Ordering::Relaxed)))
-            }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("coordinator stopped")),
-        }
+        self.client.submit(SubmitOptions::new(req)).map(Ticket::into_parts)
     }
 
-    /// Submit and block for the outcome (convenience).
+    /// Legacy entry point — submit and block for the outcome. Shim over
+    /// [`Client::submit_wait`], so the two paths cannot diverge.
     pub fn submit_wait(&self, req: MatmulRequest) -> Result<RequestOutcome> {
-        let (_, rx) = self.try_submit(req)?;
-        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+        self.client.submit_wait(SubmitOptions::new(req))
     }
 
     /// Shared metrics handle.
     pub fn metrics(&self) -> Arc<Metrics> {
-        self.metrics.clone()
+        self.gate.metrics.clone()
     }
 
-    /// Stop accepting requests, drain in-flight work, join all threads.
+    /// Stop accepting requests, drain in-flight work through all three
+    /// stages (router → prepare → workers), join every thread.
     pub fn shutdown(mut self) {
-        drop(self.ingress);
+        self.gate.close();
         if let Some(r) = self.router.take() {
             let _ = r.join();
+        }
+        for p in self.preparers.drain(..) {
+            let _ = p.join();
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
@@ -205,11 +300,15 @@ impl Coordinator {
 
 fn router_loop(
     ingress: Receiver<Envelope>,
-    worker_txs: Vec<SyncSender<WorkItem>>,
+    stage_txs: Vec<StageTx>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
 ) {
-    let mut next_worker = 0usize;
+    let mut next_stage = 0usize;
+    // starts at 1: batch_seq 0 is the "never routed" sentinel that
+    // direct (coordinator-less) scheduler use reports
+    let mut batch_seq = 1u64;
+    let aging_us = cfg.aging.as_micros() as u64;
     loop {
         // blocking pull of the first request, then drain a window
         let first = match ingress.recv() {
@@ -225,43 +324,94 @@ fn router_loop(
         }
         metrics.queue_depth.fetch_sub(window.len() as u64, Ordering::Relaxed);
 
+        // scheduling lanes are snapshotted once per window so the plan is
+        // a pure (deterministic) function of its inputs
+        let now = Instant::now();
+        let lanes: Vec<Lane> = window
+            .iter()
+            .map(|e| Lane {
+                priority: e.priority,
+                deadline_us: e.deadline.map_or(i64::MAX, |d| {
+                    // clamped casts: a far-future sentinel deadline must
+                    // saturate to "no deadline", not wrap negative into
+                    // maximum urgency
+                    let ahead = i64::try_from(d.saturating_duration_since(now).as_micros())
+                        .unwrap_or(i64::MAX);
+                    if ahead > 0 {
+                        ahead
+                    } else {
+                        i64::try_from(now.saturating_duration_since(d).as_micros())
+                            .map_or(i64::MIN, |o| -o)
+                    }
+                }),
+                age_us: u64::try_from(
+                    now.saturating_duration_since(e.enqueued).as_micros(),
+                )
+                .unwrap_or(u64::MAX),
+            })
+            .collect();
         let reqs: Vec<MatmulRequest> = window.iter().map(|e| e.req.clone()).collect();
-        let batches = form_batches(&reqs);
+        let plan = plan_batches(&reqs, &lanes, aging_us);
+        if plan.promotions > 0 {
+            metrics.aging_promotions.fetch_add(plan.promotions, Ordering::Relaxed);
+        }
 
         // move envelopes into their batches (indices are into `window`)
         let mut slots: Vec<Option<Envelope>> = window.into_iter().map(Some).collect();
-        for b in batches {
+        for b in plan.batches {
             let envelopes: Vec<Envelope> =
                 b.members.iter().map(|&i| slots[i].take().expect("batch partition")).collect();
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             if envelopes.len() > 1 || envelopes[0].req.bs.len() > 1 {
                 metrics.fused_batches.fetch_add(1, Ordering::Relaxed);
             }
-            let item = WorkItem { envelopes, runtime_interleave: b.runtime_interleave };
+            let work = BatchWork {
+                envelopes,
+                mode: b.mode,
+                runtime_interleave: b.runtime_interleave,
+                batch_seq,
+            };
+            batch_seq += 1;
             // round-robin dispatch; blocking send applies backpressure to
             // the router (ingress queue keeps absorbing bursts)
-            if worker_txs[next_worker % worker_txs.len()].send(item).is_err() {
-                return; // workers gone
+            let delivered = match &stage_txs[next_stage % stage_txs.len()] {
+                StageTx::Prepare(tx) => tx.send(work).is_ok(),
+                StageTx::Direct(tx) => tx.send(WorkMsg::Raw(work)).is_ok(),
+            };
+            if !delivered {
+                return; // pipeline gone
             }
-            next_worker += 1;
+            next_stage += 1;
         }
     }
 }
 
 fn worker_loop(
-    rx: Receiver<WorkItem>,
+    rx: Receiver<WorkMsg>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
     cache: SharedWeightCache,
 ) {
     let mut core =
         ClusterScheduler::with_shared_cache(cfg.arch, cfg.n, cfg.backend, cfg.cluster, cache);
+    let cache_enabled = cfg.cluster.cache.enabled();
     let mut cache_seen = core.cache_stats();
     let mut pool_seen = core.pool_stats();
-    while let Ok(item) = rx.recv() {
+    while let Ok(msg) = rx.recv() {
+        let item: PreparedBatch = match msg {
+            WorkMsg::Prepared(p) => {
+                metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
+                p
+            }
+            // inline mode: the prepare work runs here, serialized with
+            // execution — the baseline the pipelined stage is gated
+            // against
+            WorkMsg::Raw(work) => prepare_batch(work, cache_enabled, &metrics),
+        };
         let started = Instant::now();
         let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
-        let outcome = core.execute_batch(&members, item.runtime_interleave);
+        let outcome =
+            core.execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref());
         // flush cache + pool activity regardless of batch outcome (a
         // failed batch may still have probed or populated the cache, or
         // dispatched shards before erroring)
@@ -283,13 +433,18 @@ fn worker_loop(
                 for (env, mut res) in item.envelopes.iter().zip(results) {
                     res.metrics.queue_seconds = (started - env.enqueued).as_secs_f64();
                     res.metrics.service_seconds = service;
+                    res.metrics.batch_seq = item.batch_seq;
                     metrics.record_completion(
                         res.metrics.cycles,
                         res.metrics.energy_j,
                         res.metrics.memory.paper_total_bytes(),
                         res.metrics.passes,
                     );
-                    metrics.record_latency(res.metrics.queue_seconds, service);
+                    metrics.record_latency(
+                        res.metrics.queue_seconds,
+                        service,
+                        env.priority,
+                    );
                     let _ = env.reply.send(RequestOutcome {
                         id: env.req.id,
                         result: Ok(res.outputs),
@@ -314,6 +469,7 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::client::Priority;
     use crate::dataflow::Mat;
     use crate::testutil::Rng;
 
@@ -343,6 +499,26 @@ mod tests {
         assert_eq!(out.result.unwrap()[0], want);
         assert!(out.metrics.cycles > 0);
         coord.shutdown();
+    }
+
+    #[test]
+    fn client_submit_resolves_tickets_with_ids() {
+        let coord = Coordinator::start(cfg());
+        let client = coord.client();
+        let mut rng = Rng::seeded(902);
+        let req = request(&mut rng, 1, 2);
+        let want = req.a.matmul(&req.bs[0]);
+        let ticket = client
+            .submit(SubmitOptions::new(req).priority(Priority::Interactive))
+            .unwrap();
+        assert!(ticket.id() > 0);
+        assert_eq!(ticket.priority(), Priority::Interactive);
+        let out = ticket.wait().unwrap();
+        assert_eq!(out.result.unwrap()[0], want);
+        coord.shutdown();
+        // handles outliving shutdown fail cleanly instead of hanging
+        let err = client.submit(SubmitOptions::new(request(&mut rng, 1, 2))).unwrap_err();
+        assert!(err.to_string().contains("stopped"), "{err}");
     }
 
     #[test]
@@ -459,6 +635,43 @@ mod tests {
         // the router windowed them together (single worker, same instant)
         assert!(any_batched, "Q/K/V requests should fuse");
         assert!(coord.metrics().fused_batches.load(Ordering::Relaxed) >= 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn submit_group_pre_declares_fusion() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            n: 8,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 8,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut rng = Rng::seeded(911);
+        let x = Arc::new(Mat::random(&mut rng, 16, 16, 8));
+        // inconsistent input_ids on purpose: the group tag overrides them
+        let reqs: Vec<MatmulRequest> = (0..3)
+            .map(|i| MatmulRequest {
+                id: 0,
+                input_id: 500 + i, // would defeat fusion if kept
+                a: x.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, 16, 16, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: format!("g{i}"),
+            })
+            .collect();
+        let want: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+        let tickets = client.submit_group(7, Priority::Interactive, reqs).unwrap();
+        assert_eq!(tickets.len(), 3);
+        let mut any_batched = false;
+        for (t, w) in tickets.into_iter().zip(&want) {
+            let out = t.wait().unwrap();
+            assert_eq!(&out.result.unwrap()[0], w);
+            any_batched |= out.metrics.batched;
+        }
+        assert!(any_batched, "grouped Q/K/V should fuse");
         coord.shutdown();
     }
 }

@@ -73,7 +73,7 @@ pub fn interleave_tiles(tiles: &[&Mat], mode: PrecisionMode) -> Result<Interleav
             rows,
             cols
         );
-        if let Some(bad) = t.as_slice().iter().find(|v| !(lo..=hi).contains(v)) {
+        if let Some(bad) = t.as_slice().iter().find(|&&v| !(lo..=hi).contains(&v)) {
             bail!("tile {s} value {bad} out of {w}-bit range {lo}..={hi}");
         }
     }

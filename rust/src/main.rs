@@ -21,7 +21,9 @@ use adip::analytical::gemm::MemoryPolicy;
 use adip::arch::{Architecture, Backend};
 use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
-use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions, Ticket,
+};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::report;
@@ -99,6 +101,20 @@ cluster flags (cluster/serve/trace):
   --shared-weight-cache=BOOL
                    serve/trace: share one weight-cache store across all
                    workers (default true; false = private store per worker)
+
+pipeline flags (serve/trace):
+  --prepare=MODE   batch preparation: pipelined (stage thread per worker,
+                   default — prepare of batch i+1 overlaps execution of
+                   batch i) or inline (serial, on the worker)
+  --aging-ms=T     batcher aging interval in ms (default 100; every full
+                   interval waited promotes a request one priority class;
+                   0 disables aging)
+
+serve submits a mixed-priority stream (interactive | batch | background)
+through the Client/SubmitOptions/Ticket API, with Q/K/V triplets sent as
+pre-declared fusion groups; trace submits each request under the class
+its workload stage implies (scores interactive, projections batch,
+replays background).
 ";
 
 fn parse_arch(cfg: &Config) -> Result<Architecture> {
@@ -115,6 +131,17 @@ fn parse_backend(cfg: &Config) -> Result<Backend> {
         None => Ok(Backend::Functional),
         Some(raw) => raw.parse::<Backend>().map_err(|e| anyhow!("--backend: {e}")),
     }
+}
+
+fn parse_prepare(cfg: &Config) -> Result<PrepareMode> {
+    match cfg.get("prepare") {
+        None => Ok(PrepareMode::default()),
+        Some(raw) => raw.parse::<PrepareMode>().map_err(|e| anyhow!("--prepare: {e}")),
+    }
+}
+
+fn parse_aging(cfg: &Config) -> Result<std::time::Duration> {
+    Ok(std::time::Duration::from_secs_f64(cfg.get_f64("aging-ms", 100.0)?.max(0.0) / 1e3))
 }
 
 fn parse_cluster(cfg: &Config) -> Result<ClusterConfig> {
@@ -281,6 +308,10 @@ fn cmd_cluster(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
+/// `adip serve` — mixed-priority demo stream through the new submission
+/// API: Q/K/V triplets as pre-declared fusion groups (class cycling
+/// batch/background), interleaved with deadline-carrying interactive
+/// act-act requests.
 fn cmd_serve(cfg: &Config) -> Result<()> {
     let requests = cfg.get_usize("requests", 64)?;
     let workers = cfg.get_usize("workers", 2)?;
@@ -295,41 +326,80 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         backend: parse_backend(cfg)?,
         cluster: parse_cluster(cfg)?,
         shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
+        prepare: parse_prepare(cfg)?,
+        aging: parse_aging(cfg)?,
+        ..Default::default()
     });
+    let client = coord.client();
     let mut rng = Rng::seeded(7);
-    let mut rxs = Vec::new();
+    let mut tickets: Vec<Ticket> = Vec::new();
     let t0 = std::time::Instant::now();
     let mut rejected = 0usize;
-    for i in 0..requests {
-        // mix of Q/K/V-style shared-input 2-bit requests and 8-bit act-act
-        let shared = Arc::new(Mat::random(&mut rng, 64, 64, 8));
-        let bits = *rng.choose(&[2u32, 4, 8]);
-        let req = MatmulRequest {
-            id: 0,
-            input_id: (i / 3) as u64,
-            a: shared,
-            bs: vec![Arc::new(Mat::random(&mut rng, 64, 64, bits))],
-            weight_bits: bits,
-            act_act: i % 7 == 0,
-            tag: format!("req-{i}"),
-        };
-        match coord.try_submit(req) {
-            Ok((_, rx)) => rxs.push(rx),
-            Err(_) => rejected += 1,
+    let mut submitted = 0usize;
+    let mut group = 0u64;
+    while submitted < requests {
+        if submitted % 7 == 0 {
+            // latency-critical act-act score request with a soft deadline
+            let req = MatmulRequest {
+                id: 0,
+                input_id: 10_000 + submitted as u64,
+                a: Arc::new(Mat::random(&mut rng, 64, 64, 8)),
+                bs: vec![Arc::new(Mat::random(&mut rng, 64, 64, 8))],
+                weight_bits: 8,
+                act_act: true,
+                tag: format!("scores-{submitted}"),
+            };
+            let opts = SubmitOptions::new(req)
+                .priority(Priority::Interactive)
+                .deadline(std::time::Duration::from_millis(50));
+            match client.submit(opts) {
+                Ok(t) => tickets.push(t),
+                Err(_) => rejected += 1,
+            }
+            submitted += 1;
+        } else {
+            // a Q/K/V-style triplet off one shared X, tagged as one
+            // pre-declared fusion group; class alternates
+            // batch/background. Members are submitted individually so a
+            // backpressure rejection mid-triplet is counted per request
+            // and already-admitted members are still waited on.
+            let members = 3.min(requests - submitted);
+            let x = Arc::new(Mat::random(&mut rng, 64, 64, 8));
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            let class = if group % 2 == 0 { Priority::Batch } else { Priority::Background };
+            for j in 0..members {
+                let req = MatmulRequest {
+                    id: 0,
+                    input_id: 0, // the group tag overrides this
+                    a: x.clone(),
+                    bs: vec![Arc::new(Mat::random(&mut rng, 64, 64, bits))],
+                    weight_bits: bits,
+                    act_act: false,
+                    tag: format!("g{group}/w{j}"),
+                };
+                match client.submit(SubmitOptions::new(req).priority(class).group(group)) {
+                    Ok(t) => tickets.push(t),
+                    Err(_) => rejected += 1,
+                }
+            }
+            group += 1;
+            submitted += members;
         }
     }
     let mut ok = 0;
-    for rx in rxs {
-        if rx.recv()?.result.is_ok() {
+    for t in tickets {
+        if t.wait()?.result.is_ok() {
             ok += 1;
         }
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {ok}/{requests} requests ({rejected} rejected) in {dt:.3}s = {:.0} req/s",
+        "served {ok}/{requests} requests ({rejected} rejected submissions) in {dt:.3}s = {:.0} req/s",
         ok as f64 / dt
     );
-    println!("--- metrics ---\n{}", coord.metrics().render());
+    let m = coord.metrics();
+    print!("{}", m.class_queue_summary());
+    println!("--- metrics ---\n{}", m.render());
     coord.shutdown();
     Ok(())
 }
@@ -364,7 +434,11 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         backend: parse_backend(cfg)?,
         cluster: parse_cluster(cfg)?,
         shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
+        prepare: parse_prepare(cfg)?,
+        aging: parse_aging(cfg)?,
+        ..Default::default()
     });
+    let client = coord.client();
     println!(
         "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",
         model.name,
@@ -373,18 +447,20 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         tcfg.rate_per_s
     );
     let t0 = std::time::Instant::now();
-    let mut rxs = Vec::new();
+    let mut tickets: Vec<Ticket> = Vec::new();
     for t in trace {
         // pace submissions to the trace's arrival process
         let until = std::time::Duration::from_secs_f64(t.arrival_s);
         if let Some(sleep) = until.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        rxs.push(coord.try_submit(t.request)?.1);
+        // submit under the class the workload stage implies (scores
+        // interactive, projections batch, replays background)
+        tickets.push(client.submit(SubmitOptions::new(t.request).priority(t.priority))?);
     }
-    let total = rxs.len();
-    for rx in rxs {
-        rx.recv()?.result.map_err(|e| anyhow!("request failed: {e}"))?;
+    let total = tickets.len();
+    for t in tickets {
+        t.wait()?.result.map_err(|e| anyhow!("request failed: {e}"))?;
     }
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
@@ -394,6 +470,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.queue_percentile(50.0).unwrap_or(0.0) * 1e3,
         m.queue_percentile(99.0).unwrap_or(0.0) * 1e3
     );
+    print!("{}", m.class_queue_summary());
     println!(
         "service time: p50 {:.3} ms | p99 {:.3} ms",
         m.service_percentile(50.0).unwrap_or(0.0) * 1e3,
@@ -416,6 +493,12 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
         m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed),
         m.mean_pool_queue_seconds() * 1e6
+    );
+    println!(
+        "prepare:       {} batches prepared | {:.3} ms total | {} aging promotions",
+        m.prepared_batches.load(std::sync::atomic::Ordering::Relaxed),
+        m.prepare_seconds_total() * 1e3,
+        m.aging_promotions.load(std::sync::atomic::Ordering::Relaxed)
     );
     coord.shutdown();
     Ok(())

@@ -9,17 +9,23 @@
 
 use std::sync::Arc;
 
-use crate::coordinator::MatmulRequest;
+use crate::coordinator::{MatmulRequest, Priority};
 use crate::dataflow::Mat;
 use crate::testutil::Rng;
 use crate::workload::TransformerModel;
 
-/// One traced request: payload + arrival offset from stream start.
+/// One traced request: payload + arrival offset from stream start + the
+/// service class a driver should submit it under.
 pub struct TracedRequest {
     /// The request to submit.
     pub request: MatmulRequest,
     /// Arrival time offset in seconds.
     pub arrival_s: f64,
+    /// Suggested service class: activation-to-activation score requests
+    /// are latency-critical (`Interactive`), projection streams are
+    /// throughput work (`Batch`), and replayed invocations are
+    /// best-effort (`Background`).
+    pub priority: Priority,
 }
 
 /// Trace generation parameters.
@@ -76,6 +82,7 @@ pub fn attention_trace(model: &TransformerModel, cfg: &TraceConfig, seed: u64) -
                     tag: format!("L{layer}/{name}_proj"),
                 },
                 arrival_s: next_arrival(&mut rng, &mut clock),
+                priority: Priority::Batch,
             });
         }
         for h in 0..cfg.heads {
@@ -92,6 +99,7 @@ pub fn attention_trace(model: &TransformerModel, cfg: &TraceConfig, seed: u64) -
                     tag: format!("L{layer}/h{h}_scores"),
                 },
                 arrival_s: next_arrival(&mut rng, &mut clock),
+                priority: Priority::Interactive,
             });
         }
     }
@@ -135,7 +143,15 @@ pub fn repeated_attention_trace(
                 t.request.clone()
             };
             request.tag = format!("i{inv}/{}", t.request.tag);
-            out.push(TracedRequest { request, arrival_s: clock });
+            // replayed projection invocations are best-effort background
+            // work (retries, re-served prompts); score requests stay
+            // latency-critical — their operands are fresh every time
+            let priority = if inv > 0 && !request.act_act {
+                Priority::Background
+            } else {
+                t.priority
+            };
+            out.push(TracedRequest { request, arrival_s: clock, priority });
         }
     }
     out
@@ -159,8 +175,10 @@ mod tests {
             if !t.request.act_act {
                 assert_eq!(t.request.weight_bits, 2);
                 assert_eq!(t.request.bs[0].cols(), cfg.head_cols);
+                assert_eq!(t.priority, Priority::Batch);
             } else {
                 assert_eq!(t.request.weight_bits, 8);
+                assert_eq!(t.priority, Priority::Interactive, "scores are latency-critical");
             }
         }
     }
@@ -211,6 +229,11 @@ mod tests {
         let scores0 = trace.iter().find(|t| t.request.act_act).unwrap();
         let scores1 = trace[per_inv..].iter().find(|t| t.request.act_act).unwrap();
         assert!(!Arc::ptr_eq(&scores0.request.a, &scores1.request.a));
+        // replayed projections demote to Background; scores stay Interactive
+        assert!(!first.act_act);
+        assert_eq!(trace[0].priority, Priority::Batch);
+        assert_eq!(trace[per_inv].priority, Priority::Background);
+        assert_eq!(scores1.priority, Priority::Interactive);
         // arrivals stay monotone across the whole replayed stream
         assert!(trace.windows(2).all(|w| w[1].arrival_s > w[0].arrival_s));
         for t in &trace {

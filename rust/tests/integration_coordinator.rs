@@ -1,11 +1,19 @@
 //! Integration: the L3 coordinator under concurrent load — correctness,
 //! fusion accounting, backpressure and failure-injection behaviour.
+//!
+//! The stream tests drive the typed `Client`/`Ticket` API; the
+//! saturation/stress tests deliberately stay on the legacy
+//! `try_submit` shim so both admission surfaces keep coverage (the shim
+//! is asserted byte-identical to the client path in
+//! `integration_pipeline.rs`).
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use adip::arch::{Architecture, Backend};
-use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, Priority, SubmitOptions,
+};
 use adip::dataflow::Mat;
 use adip::testutil::Rng;
 
@@ -24,46 +32,46 @@ fn cfg(workers: usize, queue: usize) -> CoordinatorConfig {
 #[test]
 fn attention_layer_stream_serves_correctly() {
     let coord = Coordinator::start(cfg(2, 256));
+    let client = coord.client();
     let mut rng = Rng::seeded(21);
     let mut expected = Vec::new();
-    let mut rxs = Vec::new();
-    // 8 layers × (QKV triplet + act-act)
+    let mut tickets = Vec::new();
+    // 8 layers × (QKV triplet submitted as one fusion group + act-act)
     for layer in 0..8u64 {
         let x = Arc::new(Mat::random(&mut rng, 48, 48, 8));
+        let mut triplet = Vec::new();
         for _ in 0..3 {
             let w = Arc::new(Mat::random(&mut rng, 48, 48, 2));
             expected.push(x.matmul(&w));
-            let (_, rx) = coord
-                .try_submit(MatmulRequest {
-                    id: 0,
-                    input_id: layer,
-                    a: x.clone(),
-                    bs: vec![w],
-                    weight_bits: 2,
-                    act_act: false,
-                    tag: "proj".into(),
-                })
-                .unwrap();
-            rxs.push(rx);
+            triplet.push(MatmulRequest {
+                id: 0,
+                input_id: layer,
+                a: x.clone(),
+                bs: vec![w],
+                weight_bits: 2,
+                act_act: false,
+                tag: "proj".into(),
+            });
         }
+        tickets.extend(client.submit_group(layer, Priority::Batch, triplet).unwrap());
         let qa = Arc::new(Mat::random(&mut rng, 48, 48, 8));
         let ka = Arc::new(Mat::random(&mut rng, 48, 48, 8));
         expected.push(qa.matmul(&ka));
-        let (_, rx) = coord
-            .try_submit(MatmulRequest {
-                id: 0,
-                input_id: 100 + layer,
-                a: qa,
-                bs: vec![ka],
-                weight_bits: 8,
-                act_act: true,
-                tag: "scores".into(),
-            })
-            .unwrap();
-        rxs.push(rx);
+        let scores = MatmulRequest {
+            id: 0,
+            input_id: 100 + layer,
+            a: qa,
+            bs: vec![ka],
+            weight_bits: 8,
+            act_act: true,
+            tag: "scores".into(),
+        };
+        tickets.push(
+            client.submit(SubmitOptions::new(scores).priority(Priority::Interactive)).unwrap(),
+        );
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let out = rx.recv().unwrap();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap();
         assert_eq!(out.result.unwrap()[0], expected[i], "request {i}");
     }
     let m = coord.metrics();
@@ -77,14 +85,15 @@ fn attention_layer_stream_serves_correctly() {
 #[test]
 fn shutdown_drains_in_flight_work() {
     let coord = Coordinator::start(cfg(1, 64));
+    let client = coord.client();
     let mut rng = Rng::seeded(23);
-    let mut rxs = Vec::new();
+    let mut tickets = Vec::new();
     for _ in 0..16 {
         let a = Arc::new(Mat::random(&mut rng, 64, 64, 8));
         let b = Arc::new(Mat::random(&mut rng, 64, 64, 8));
-        rxs.push(
-            coord
-                .try_submit(MatmulRequest {
+        tickets.push(
+            client
+                .submit(SubmitOptions::new(MatmulRequest {
                     id: 0,
                     input_id: 0,
                     a,
@@ -92,14 +101,13 @@ fn shutdown_drains_in_flight_work() {
                     weight_bits: 8,
                     act_act: false,
                     tag: String::new(),
-                })
-                .unwrap()
-                .1,
+                }))
+                .unwrap(),
         );
     }
-    coord.shutdown(); // must drain, not drop
-    for rx in rxs {
-        assert!(rx.recv().unwrap().result.is_ok());
+    coord.shutdown(); // must drain all three stages, not drop
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
     }
 }
 

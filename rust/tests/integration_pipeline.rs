@@ -1,0 +1,426 @@
+//! Integration: the staged submission API and the three-stage pipeline.
+//!
+//! Extends the differential suite to the serving surface:
+//! * the legacy `try_submit` shim and the new `Client`/`Ticket` path must
+//!   produce bit-exact outputs and identical simulated accounting on the
+//!   same trace, on **both** execution backends;
+//! * `PrepareMode::Pipelined` and `PrepareMode::Inline` must be
+//!   accounting-identical (the prepare stage only moves work, never
+//!   changes it);
+//! * priority interleavings must never change numerics;
+//! * priority classes must reorder service (Interactive queue-wait ≤
+//!   Background under saturation) without starving Background (aging);
+//! * prepare/execute overlap must be observable (`prepared_depth > 0`
+//!   under load) and shutdown must drain prepared work.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adip::arch::{Architecture, Backend};
+use adip::cluster::ClusterConfig;
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions,
+};
+use adip::dataflow::Mat;
+use adip::testutil::Rng;
+use adip::workload::{attention_trace, TraceConfig, TransformerModel};
+
+fn request(rng: &mut Rng, input_id: u64, dim: usize, bits: u32, n_b: usize) -> MatmulRequest {
+    MatmulRequest {
+        id: 0,
+        input_id,
+        a: Arc::new(Mat::random(rng, dim, dim, 8)),
+        bs: (0..n_b).map(|_| Arc::new(Mat::random(rng, dim, dim, bits))).collect(),
+        weight_bits: bits,
+        act_act: false,
+        tag: String::new(),
+    }
+}
+
+/// Everything the differential comparison needs from one serving run.
+#[derive(Debug, PartialEq)]
+struct RunRecord {
+    outputs: Vec<Vec<Mat>>,
+    per_request: Vec<(u64, u64, bool)>, // (cycles, passes, batched)
+    sim_cycles: u64,
+    passes: u64,
+    memory_bytes: u64,
+    energy_bits: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    completed: u64,
+}
+
+/// Drive one deterministic serving run (1 worker, window=1 — no timing
+/// dependence in batching) over the given trace, through either the
+/// legacy shim or the typed client API.
+fn run_stream(
+    backend: Backend,
+    prepare: PrepareMode,
+    via_client: bool,
+    reqs: &[MatmulRequest],
+    n: usize,
+) -> RunRecord {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n,
+        workers: 1,
+        queue_capacity: 4 * reqs.len().max(1),
+        batch_window: 1,
+        backend,
+        // weight cache on, so the prepared-fingerprint path is exercised
+        // and compared across all variants
+        cluster: ClusterConfig::with_cores(1).with_cache(16),
+        prepare,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut outcomes = Vec::new();
+    type Waiter = Box<dyn FnOnce() -> adip::coordinator::RequestOutcome>;
+    let mut waiters: Vec<Waiter> = Vec::new();
+    for r in reqs {
+        if via_client {
+            let t = client.submit(SubmitOptions::new(r.clone())).unwrap();
+            waiters.push(Box::new(move || t.wait().unwrap()));
+        } else {
+            let (_, rx) = coord.try_submit(r.clone()).unwrap();
+            waiters.push(Box::new(move || rx.recv().unwrap()));
+        }
+    }
+    for w in waiters {
+        outcomes.push(w());
+    }
+    let m = coord.metrics();
+    let record = RunRecord {
+        outputs: outcomes.iter().map(|o| o.result.clone().unwrap()).collect(),
+        per_request: outcomes
+            .iter()
+            .map(|o| (o.metrics.cycles, o.metrics.passes, o.metrics.batched))
+            .collect(),
+        sim_cycles: m.sim_cycles.load(Ordering::Relaxed),
+        passes: m.passes.load(Ordering::Relaxed),
+        memory_bytes: m.memory_bytes.load(Ordering::Relaxed),
+        energy_bits: m.energy_j().to_bits(),
+        cache_hits: m.cache_hits.load(Ordering::Relaxed),
+        cache_misses: m.cache_misses.load(Ordering::Relaxed),
+        completed: m.completed.load(Ordering::Relaxed),
+    };
+    coord.shutdown();
+    record
+}
+
+/// Old-API shim vs `Client`/`Ticket`, pipelined vs inline prepare — all
+/// four variants must agree bit-for-bit on outputs and simulated
+/// accounting, on both execution backends (the serving differential
+/// suite: new surface, same numbers).
+#[test]
+fn shim_and_client_api_identical_across_backends_and_prepare_modes() {
+    let model = TransformerModel::by_name("bitnet").unwrap();
+    for backend in Backend::ALL {
+        // the golden backend's share stays small so the suite is fast
+        let (tcfg, n) = match backend {
+            Backend::Functional => {
+                (TraceConfig { dim: 64, head_cols: 16, layers: 3, heads: 1, rate_per_s: 1e9 }, 16)
+            }
+            Backend::CycleAccurate => {
+                (TraceConfig { dim: 24, head_cols: 8, layers: 2, heads: 1, rate_per_s: 1e9 }, 8)
+            }
+        };
+        let reqs: Vec<MatmulRequest> =
+            attention_trace(&model, &tcfg, 42).into_iter().map(|t| t.request).collect();
+        let baseline = run_stream(backend, PrepareMode::Pipelined, false, &reqs, n);
+        assert_eq!(baseline.completed, reqs.len() as u64, "{backend}");
+        assert!(baseline.sim_cycles > 0 && baseline.cache_misses > 0, "{backend}");
+        for (via_client, prepare) in [
+            (true, PrepareMode::Pipelined),
+            (true, PrepareMode::Inline),
+            (false, PrepareMode::Inline),
+        ] {
+            let got = run_stream(backend, prepare, via_client, &reqs, n);
+            assert_eq!(
+                got, baseline,
+                "{backend}: via_client={via_client} prepare={prepare} diverged from the shim"
+            );
+        }
+    }
+}
+
+/// Satellite (a): outcomes are bit-exact regardless of how priorities
+/// interleave the stream — scheduling may reorder, fuse and regroup, but
+/// it can never change numerics.
+#[test]
+fn outcomes_bit_exact_under_priority_interleavings() {
+    let mut rng = Rng::seeded(1213);
+    let mut reqs = Vec::new();
+    let mut want = Vec::new();
+    for i in 0..18u64 {
+        let bits = *rng.choose(&[2u32, 4, 8]);
+        let r = if i % 5 == 0 {
+            let mut r = request(&mut rng, 100 + i, 32, 8, 1);
+            r.act_act = true;
+            r
+        } else {
+            request(&mut rng, i / 3, 32, bits, 1)
+        };
+        want.push(r.bs.iter().map(|b| r.a.matmul(b)).collect::<Vec<_>>());
+        reqs.push(r);
+    }
+    for rotation in 0..3 {
+        let coord = Coordinator::start(CoordinatorConfig {
+            n: 8,
+            workers: 2,
+            queue_capacity: 128,
+            batch_window: 8,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let tickets: Vec<_> = reqs
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let class = Priority::ALL[(i + rotation) % 3];
+                client.submit(SubmitOptions::new(r.clone()).priority(class)).unwrap()
+            })
+            .collect();
+        for (i, t) in tickets.into_iter().enumerate() {
+            let out = t.wait().unwrap();
+            assert_eq!(
+                out.result.unwrap(),
+                want[i],
+                "rotation {rotation}, request {i}: numerics must not depend on priority"
+            );
+        }
+        assert_eq!(coord.metrics().completed.load(Ordering::Relaxed), reqs.len() as u64);
+        coord.shutdown();
+    }
+}
+
+/// Satellite (b): under saturation, Interactive requests wait less than
+/// Background ones — the priority order is visible in per-class
+/// queue-wait metrics (and those metrics appear in the Prometheus dump).
+#[test]
+fn interactive_waits_less_than_background_under_saturation() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 16,
+        workers: 1,
+        queue_capacity: 128,
+        batch_window: 8,
+        // effectively disable aging: this test isolates base classes
+        aging: Duration::from_secs(3600),
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1311);
+    // saturate the single worker with one long-running batch request
+    let blocker = request(&mut rng, 999, 256, 8, 1);
+    let blocker_ticket = client.submit(SubmitOptions::new(blocker)).unwrap();
+    // then a backlog of alternating interactive/background work
+    let mut tickets = Vec::new();
+    for i in 0..24u64 {
+        let class = if i % 2 == 0 { Priority::Interactive } else { Priority::Background };
+        let r = request(&mut rng, 2000 + i, 64, 2, 1);
+        tickets.push(client.submit(SubmitOptions::new(r).priority(class)).unwrap());
+    }
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    assert!(blocker_ticket.wait().unwrap().result.is_ok());
+    let m = coord.metrics();
+    assert_eq!(m.class_completed[Priority::Interactive.index()].load(Ordering::Relaxed), 12);
+    assert_eq!(m.class_completed[Priority::Background.index()].load(Ordering::Relaxed), 12);
+    let mi = m.mean_class_queue_seconds(Priority::Interactive);
+    let mb = m.mean_class_queue_seconds(Priority::Background);
+    assert!(
+        mi < mb,
+        "interactive mean queue wait {mi:.6}s must be below background {mb:.6}s"
+    );
+    let text = m.render();
+    assert!(text.contains("adip_class_requests_completed_total{class=\"interactive\"} 12"));
+    assert!(text.contains("adip_class_requests_completed_total{class=\"background\"} 12"));
+    assert!(text.contains("adip_class_queue_seconds_p50{class=\"interactive\"}"));
+    coord.shutdown();
+}
+
+/// Satellite (c): aging prevents Background starvation — an overdue
+/// Background request overtakes a flood of fresh Interactive arrivals in
+/// the deterministic service order (observable through `batch_seq`).
+#[test]
+fn aging_promotes_overdue_background_work() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 16,
+        workers: 1,
+        queue_capacity: 128,
+        batch_window: 32,
+        prepared_capacity: 1, // tight stage queues: the router stays busy
+        aging: Duration::from_millis(4),
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1411);
+    // one heavy shared-input set keeps the worker busy for tens of ms
+    let blocker = request(&mut rng, 900, 384, 2, 4);
+    let blocker_ticket = client.submit(SubmitOptions::new(blocker)).unwrap();
+    // small fillers soak up the bounded stage queues behind the blocker
+    let fillers: Vec<_> = (0..4)
+        .map(|i| {
+            client
+                .submit(SubmitOptions::new(request(&mut rng, 910 + i, 64, 2, 1)))
+                .unwrap()
+        })
+        .collect();
+    // let the router absorb the fillers and wedge on the full stage
+    // queues, so everything submitted from here on waits in the
+    // admission queue until the blocker completes
+    std::thread::sleep(Duration::from_millis(5));
+    // the background request arrives, then ages past many intervals
+    // while the pipeline is still jammed
+    let bg = client
+        .submit(SubmitOptions::new(request(&mut rng, 950, 64, 2, 1)).priority(Priority::Background))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(20));
+    // a flood of fresh interactive work lands after it
+    let flood: Vec<_> = (0..12)
+        .map(|i| {
+            client
+                .submit(
+                    SubmitOptions::new(request(&mut rng, 3000 + i, 64, 2, 1))
+                        .priority(Priority::Interactive),
+                )
+                .unwrap()
+        })
+        .collect();
+    let bg_seq = bg.wait().unwrap().metrics.batch_seq;
+    let flood_seqs: Vec<u64> =
+        flood.into_iter().map(|t| t.wait().unwrap().metrics.batch_seq).collect();
+    assert!(
+        bg_seq < *flood_seqs.iter().min().unwrap(),
+        "aged background (seq {bg_seq}) must be served ahead of the fresh interactive flood \
+         ({flood_seqs:?})"
+    );
+    assert!(blocker_ticket.wait().unwrap().result.is_ok());
+    for t in fillers {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let m = coord.metrics();
+    assert!(
+        m.aging_promotions.load(Ordering::Relaxed) > 0,
+        "the overdue background request must be counted as promoted"
+    );
+    coord.shutdown();
+}
+
+/// Prepare-stage satellite: on a slow-prepare trace (many weight
+/// matrices per request) the prepared-batch queue runs ahead of the
+/// worker — `prepared_depth > 0` while execution is in progress is the
+/// observable proof that prepare/execute overlap actually happens.
+#[test]
+fn prepared_queue_runs_ahead_of_execution_under_load() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 1,
+        queue_capacity: 128,
+        batch_window: 1, // one batch per request: a steady batch stream
+        prepare: PrepareMode::Pipelined,
+        // cache on: preparation includes real fingerprint hashing
+        cluster: ClusterConfig::with_cores(1).with_cache(64),
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1511);
+    let tickets: Vec<_> = (0..32u64)
+        .map(|i| {
+            // 4 weight matrices each: the slow-prepare shape
+            client
+                .submit(SubmitOptions::new(request(&mut rng, i, 96, 2, 4)))
+                .unwrap()
+        })
+        .collect();
+    // poll the gauge while the stream executes: it must be seen > 0
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let m = coord.metrics();
+    let mut max_depth = 0u64;
+    while Instant::now() < deadline {
+        max_depth = max_depth.max(m.prepared_depth.load(Ordering::Relaxed));
+        if max_depth > 0 {
+            break;
+        }
+        std::thread::yield_now();
+    }
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    assert!(
+        max_depth > 0,
+        "prepared-batch queue depth was never observed > 0: no prepare/execute overlap"
+    );
+    assert_eq!(m.prepared_batches.load(Ordering::Relaxed), 32);
+    assert_eq!(m.prepared_depth.load(Ordering::Relaxed), 0, "gauge must drain to zero");
+    coord.shutdown();
+}
+
+/// Prepare-stage satellite: shutdown drains work sitting in the prepare
+/// stage and the prepared queues — nothing admitted is ever dropped.
+#[test]
+fn shutdown_drains_prepared_work() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 1,
+        queue_capacity: 64,
+        batch_window: 1,
+        prepare: PrepareMode::Pipelined,
+        prepared_capacity: 2,
+        // cache on: the prepare stage threads actually run (cache off
+        // collapses pipelined to direct dispatch by design)
+        cluster: ClusterConfig::with_cores(1).with_cache(32),
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1611);
+    let mut want = Vec::new();
+    let tickets: Vec<_> = (0..12u64)
+        .map(|i| {
+            let r = request(&mut rng, i, 64, 4, 2);
+            want.push(r.bs.iter().map(|b| r.a.matmul(b)).collect::<Vec<_>>());
+            client.submit(SubmitOptions::new(r)).unwrap()
+        })
+        .collect();
+    // immediate shutdown: batches are still queued raw, mid-prepare and
+    // prepared-ahead — the three-stage drain must deliver all of them
+    coord.shutdown();
+    for (i, t) in tickets.into_iter().enumerate() {
+        let out = t.wait().unwrap();
+        assert_eq!(out.result.unwrap(), want[i], "request {i} dropped in the drain");
+    }
+}
+
+/// Ticket polling semantics: `try_wait`/`wait_timeout` report in-flight
+/// work as `Ok(None)`, deliver the outcome exactly once, and error on
+/// double-claims.
+#[test]
+fn ticket_polling_semantics() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 16,
+        workers: 1,
+        queue_capacity: 16,
+        batch_window: 1,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1711);
+    // heavy blocker occupies the single worker
+    let blocker = client
+        .submit(SubmitOptions::new(request(&mut rng, 1, 384, 2, 4)))
+        .unwrap();
+    let mut target = client
+        .submit(SubmitOptions::new(request(&mut rng, 2, 32, 2, 1)).priority(Priority::Interactive))
+        .unwrap();
+    assert!(target.try_wait().unwrap().is_none(), "target cannot finish behind the blocker");
+    assert!(target.wait_timeout(Duration::from_millis(1)).unwrap().is_none());
+    // once claimed, the outcome is gone
+    let out = target.wait_timeout(Duration::from_secs(60)).unwrap().expect("must complete");
+    assert!(out.result.is_ok());
+    assert!(target.try_wait().is_err(), "second claim must error, not hang");
+    assert!(blocker.wait().unwrap().result.is_ok());
+    coord.shutdown();
+}
