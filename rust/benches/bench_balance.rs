@@ -1,0 +1,218 @@
+//! Bench: the global balance subsystem — work-stealing throughput on a
+//! skewed mixed-priority trace, plus the cross-request coalescing hit
+//! rate and its simulated-cycle win — emitted as `BENCH_balance.json` for
+//! CI trend tracking (uploaded alongside the cluster/coordinator JSONs).
+//!
+//! Acceptance gates:
+//!
+//! 1. **Idle stealing ≥ 1.15×** over `StealPolicy::Off` host wall-clock
+//!    on the skewed trace. The skew is adversarial by construction: with
+//!    2 workers and `batch_window = 1`, round-robin dispatch parks every
+//!    heavy batch on worker 0 (heavy requests sit at even submission
+//!    indices), so the static baseline serializes all heavy work on one
+//!    worker while worker 1 idles — exactly the pathology the ROADMAP
+//!    names. Gated on min-of-reps (co-tenant stalls on shared CI runners
+//!    only ever inflate a rep, never deflate it).
+//! 2. **Coalescing fires**: the same-weights multi-client stream must
+//!    report `coalesced_passes_total > 0` and strictly fewer simulated
+//!    cycles than the uncoalesced run of the identical stream (weight
+//!    tiles loaded once per stacked pass instead of once per request).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adip::arch::Architecture;
+use adip::balance::{CoalesceConfig, StealPolicy};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, Priority, SubmitOptions, Ticket,
+};
+use adip::dataflow::Mat;
+use adip::testutil::Rng;
+
+const WORKERS: usize = 2;
+
+/// Build the skewed mixed-priority trace: heavy Batch-class requests at
+/// even indices (→ all land on worker 0 under round-robin), light
+/// Interactive requests at odd indices. Distinct inputs and weights:
+/// nothing fuses, nothing coalesces — the gate isolates pure stealing.
+fn skewed_requests(n_requests: usize) -> Vec<(MatmulRequest, Priority)> {
+    let mut rng = Rng::seeded(41);
+    (0..n_requests as u64)
+        .map(|i| {
+            if i % WORKERS as u64 == 0 {
+                (
+                    MatmulRequest {
+                        id: 0,
+                        input_id: i,
+                        a: Arc::new(Mat::random(&mut rng, 192, 192, 8)),
+                        bs: vec![Arc::new(Mat::random(&mut rng, 192, 192, 2))],
+                        weight_bits: 2,
+                        act_act: false,
+                        tag: format!("heavy-{i}"),
+                    },
+                    Priority::Batch,
+                )
+            } else {
+                (
+                    MatmulRequest {
+                        id: 0,
+                        input_id: i,
+                        a: Arc::new(Mat::random(&mut rng, 16, 16, 8)),
+                        bs: vec![Arc::new(Mat::random(&mut rng, 16, 16, 2))],
+                        weight_bits: 2,
+                        act_act: false,
+                        tag: format!("light-{i}"),
+                    },
+                    Priority::Interactive,
+                )
+            }
+        })
+        .collect()
+}
+
+/// Serve the skewed trace under one steal policy; returns (host seconds,
+/// steals, steal failures).
+fn run_skewed(reqs: &[(MatmulRequest, Priority)], steal: StealPolicy) -> (f64, u64, u64) {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: WORKERS,
+        queue_capacity: 4 * reqs.len(),
+        batch_window: 1, // one batch per request: round-robin skew holds
+        steal,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<Ticket> = reqs
+        .iter()
+        .map(|(r, p)| client.submit(SubmitOptions::new(r.clone()).priority(*p)).unwrap())
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    let steals = m.steals.load(Ordering::Relaxed);
+    let failures = m.steal_failures.load(Ordering::Relaxed);
+    coord.shutdown();
+    (dt, steals, failures)
+}
+
+/// Serve a same-weights multi-client stream (skinny decode-shaped
+/// activations against one shared projection set) with coalescing on or
+/// off; returns (host s, simulated cycles, coalesced passes, members).
+fn run_same_weights(n_requests: usize, coalesce_on: bool) -> (f64, u64, u64, u64) {
+    let mut rng = Rng::seeded(43);
+    let b = Arc::new(Mat::random(&mut rng, 256, 256, 2));
+    let reqs: Vec<MatmulRequest> = (0..n_requests as u64)
+        .map(|i| MatmulRequest {
+            id: 0,
+            input_id: 1_000 * (i % 4) + i, // 4 interleaved clients
+            a: Arc::new(Mat::random(&mut rng, 8, 256, 8)),
+            bs: vec![b.clone()],
+            weight_bits: 2,
+            act_act: false,
+            tag: format!("client{}/r{i}", i % 4),
+        })
+        .collect();
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: WORKERS,
+        queue_capacity: 4 * reqs.len(),
+        batch_window: 1,
+        steal: StealPolicy::Idle,
+        coalesce: CoalesceConfig {
+            enabled: coalesce_on,
+            window: Duration::from_millis(2),
+            max_members: 8,
+        },
+        ..Default::default()
+    });
+    let client = coord.client();
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<Ticket> = reqs
+        .iter()
+        .map(|r| client.submit(SubmitOptions::new(r.clone())).unwrap())
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    let out = (
+        dt,
+        m.sim_cycles.load(Ordering::Relaxed),
+        m.coalesced_passes.load(Ordering::Relaxed),
+        m.coalesced_members.load(Ordering::Relaxed),
+    );
+    coord.shutdown();
+    out
+}
+
+fn main() {
+    const SKEW_REQS: usize = 48;
+    const REPS: usize = 3;
+
+    println!("== balance fabric: skewed mixed-priority trace ({WORKERS} workers, heavy on worker 0) ==");
+    let reqs = skewed_requests(SKEW_REQS);
+    let run_reps = |steal: StealPolicy| -> (f64, u64, u64) {
+        let _ = run_skewed(&reqs, steal); // warmup
+        let (mut best, mut steals, mut failures) = (f64::INFINITY, 0, 0);
+        for _ in 0..REPS {
+            let (dt, s, f) = run_skewed(&reqs, steal);
+            if dt < best {
+                best = dt;
+            }
+            steals = s;
+            failures = f;
+        }
+        (best, steals, failures)
+    };
+    let (off_s, _, _) = run_reps(StealPolicy::Off);
+    let (idle_s, idle_steals, idle_failures) = run_reps(StealPolicy::Idle);
+    let (aggr_s, aggr_steals, _) = run_reps(StealPolicy::Aggressive);
+    let gain = off_s / idle_s;
+    println!(
+        "  off {:.1} ms | idle {:.1} ms ({idle_steals} steals, {idle_failures} empty idle scans) | aggressive {:.1} ms ({aggr_steals} steals)",
+        off_s * 1e3,
+        idle_s * 1e3,
+        aggr_s * 1e3
+    );
+    println!("  idle-vs-off speedup {gain:.2}x on min-of-{REPS} (bar: >= 1.15x)");
+    assert!(idle_steals > 0, "the skewed trace must provoke steals");
+    assert!(
+        gain >= 1.15,
+        "Idle stealing must beat static ownership by >= 1.15x on the skewed trace (got {gain:.2}x)"
+    );
+
+    println!("\n== cross-request coalescing: same-weights multi-client stream ==");
+    const CO_REQS: usize = 64;
+    let (solo_s, solo_cycles, _, _) = run_same_weights(CO_REQS, false);
+    let (co_s, co_cycles, passes, members) = run_same_weights(CO_REQS, true);
+    let cycle_reduction = 1.0 - co_cycles as f64 / solo_cycles as f64;
+    println!(
+        "  uncoalesced: {:.1} ms host, {solo_cycles} simulated cycles",
+        solo_s * 1e3
+    );
+    println!(
+        "  coalesced:   {:.1} ms host, {co_cycles} simulated cycles | {passes} passes, {members} members | cycle reduction {:.1}%",
+        co_s * 1e3,
+        cycle_reduction * 100.0
+    );
+    assert!(passes > 0, "the same-weights stream must coalesce");
+    assert!(
+        co_cycles < solo_cycles,
+        "coalescing must reduce simulated cycles (weights loaded once per stacked pass): {co_cycles} vs {solo_cycles}"
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_balance\",\n  \"skew\": {{\"requests\": {SKEW_REQS}, \"workers\": {WORKERS}, \"off_min_s\": {off_s:.6}, \"idle_min_s\": {idle_s:.6}, \"aggressive_min_s\": {aggr_s:.6}, \"idle_speedup\": {gain:.4}, \"gate\": 1.15, \"idle_steals\": {idle_steals}, \"idle_steal_failures\": {idle_failures}}},\n  \"coalesce\": {{\"requests\": {CO_REQS}, \"uncoalesced_cycles\": {solo_cycles}, \"coalesced_cycles\": {co_cycles}, \"cycle_reduction\": {cycle_reduction:.4}, \"coalesced_passes\": {passes}, \"coalesced_members\": {members}}}\n}}\n"
+    );
+    let path =
+        std::env::var("BENCH_BALANCE_JSON").unwrap_or_else(|_| "BENCH_balance.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
+}

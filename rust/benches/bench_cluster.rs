@@ -162,7 +162,7 @@ fn main() {
     // parity shifted every invocation — the coordinator's cross-worker
     // shape, so `shared_hits` in the JSON is a live metric, not a dead 0.
     let run_trace = |cache_entries: usize| {
-        let store = SharedWeightCache::new(CacheConfig { capacity: cache_entries });
+        let store = SharedWeightCache::new(CacheConfig { capacity: cache_entries, ..Default::default() });
         let cluster = ClusterConfig::with_cores(2).with_cache(cache_entries);
         let mut workers: Vec<ClusterScheduler> = (0..2)
             .map(|_| {

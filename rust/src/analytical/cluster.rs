@@ -123,6 +123,87 @@ pub fn estimate_cluster(
     }
 }
 
+/// Closed-form estimate for one **coalesced** pass: member batches with
+/// identical weight sets stacked along `M` and executed as one
+/// shared-input cluster run (see `balance/coalescer.rs`), with the pass's
+/// accounting attributed back per member by row share.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CoalescedEstimate {
+    /// The whole stacked pass: a plain cluster estimate at shape
+    /// `(Σ rows, k, n)`.
+    pub total: ClusterEstimate,
+    /// Per-member attributed accounting, in stacking order.
+    pub members: Vec<CoalescedMember>,
+}
+
+/// One member's row-share slice of a coalesced pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalescedMember {
+    /// Activation rows this member contributed.
+    pub rows: usize,
+    /// Cycles attributed (row share of the pass, rounded to nearest).
+    pub cycles: u64,
+    /// Passes attributed (row share, rounded to nearest).
+    pub passes: u64,
+    /// Activation read bytes attributed (row share, truncated).
+    pub act_read_bytes: u64,
+    /// Weight read bytes attributed (row share, truncated).
+    pub weight_read_bytes: u64,
+    /// Output write-back bytes attributed (row share, truncated).
+    pub output_write_bytes: u64,
+}
+
+/// Estimate a coalesced pass: `member_rows[i]` activation rows per member,
+/// all multiplying the same `set_size`-matrix weight set of shape
+/// `k × n_cols` in `requested_mode`, sharded across `cluster`.
+///
+/// The per-member attribution uses **exactly** the arithmetic of
+/// `balance::split_back` (the helpers are shared), so the functional
+/// serving path's per-ticket accounting equals this estimate by
+/// construction — `rust/tests/integration_balance.rs` asserts it case by
+/// case. The win the estimate exposes: the stacked pass runs
+/// `ceil(Σm / n)` activation tile rows against each stationary weight
+/// tile instead of `Σ ceil(mᵢ / n)`, so skinny (decode-shaped) members
+/// amortize fill/drain and re-load the weight tiles once per pass rather
+/// than once per request.
+#[allow(clippy::too_many_arguments)] // mirrors estimate_cluster + the member split
+pub fn estimate_coalesced(
+    arch: Architecture,
+    cfg: &ArchConfig,
+    member_rows: &[usize],
+    k: usize,
+    n_cols: usize,
+    set_size: usize,
+    requested_mode: PrecisionMode,
+    cluster: &ClusterConfig,
+    policy: MemoryPolicy,
+) -> CoalescedEstimate {
+    use crate::balance::split_back::{row_share_bytes, row_share_cycles};
+    assert!(!member_rows.is_empty(), "a coalesced pass needs at least one member");
+    let m_total: usize = member_rows.iter().sum();
+    let total = estimate_cluster(
+        arch,
+        cfg,
+        GemmShape::new(m_total, k, n_cols),
+        set_size,
+        requested_mode,
+        cluster,
+        policy,
+    );
+    let members = member_rows
+        .iter()
+        .map(|&rows| CoalescedMember {
+            rows,
+            cycles: row_share_cycles(total.cycles, rows, m_total),
+            passes: row_share_cycles(total.passes, rows, m_total),
+            act_read_bytes: row_share_bytes(total.act_read_bytes, rows, m_total),
+            weight_read_bytes: row_share_bytes(total.weight_read_bytes, rows, m_total),
+            output_write_bytes: row_share_bytes(total.output_write_bytes, rows, m_total),
+        })
+        .collect();
+    CoalescedEstimate { total, members }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +360,77 @@ mod tests {
         );
         assert_eq!(one.shards, 1);
         assert_eq!(one.reduce_cycles, 0);
+    }
+
+    #[test]
+    fn coalesced_estimate_is_the_stacked_cluster_estimate_split_by_rows() {
+        // two skinny decode-shaped members against one shared weight set
+        let (k, n_cols) = (256usize, 256usize);
+        let members = [8usize, 24];
+        let est = estimate_coalesced(
+            Architecture::Adip,
+            &cfg(),
+            &members,
+            k,
+            n_cols,
+            2,
+            PrecisionMode::W2,
+            &ClusterConfig::default(),
+            MemoryPolicy::default(),
+        );
+        let stacked = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            GemmShape::new(32, k, n_cols),
+            2,
+            PrecisionMode::W2,
+            &ClusterConfig::default(),
+            MemoryPolicy::default(),
+        );
+        assert_eq!(est.total, stacked, "the pass is a plain stacked estimate");
+        assert_eq!(est.members.len(), 2);
+        // row-share attribution sums back to the pass (within rounding)
+        let cyc: u64 = est.members.iter().map(|m| m.cycles).sum();
+        assert!(cyc.abs_diff(stacked.cycles) <= 1, "{cyc} vs {}", stacked.cycles);
+        assert!(est.members[1].cycles > est.members[0].cycles, "3x the rows, bigger share");
+    }
+
+    #[test]
+    fn coalescing_skinny_members_beats_solo_passes() {
+        // the data-reuse win in closed form: one stacked pass loads the
+        // stationary weight set once; two solo passes load it twice
+        let (k, n_cols) = (256usize, 128usize);
+        let solo = estimate_cluster(
+            Architecture::Adip,
+            &cfg(),
+            GemmShape::new(8, k, n_cols),
+            1,
+            PrecisionMode::W2,
+            &ClusterConfig::default(),
+            MemoryPolicy::default(),
+        );
+        let co = estimate_coalesced(
+            Architecture::Adip,
+            &cfg(),
+            &[8, 8],
+            k,
+            n_cols,
+            1,
+            PrecisionMode::W2,
+            &ClusterConfig::default(),
+            MemoryPolicy::default(),
+        );
+        assert!(
+            co.total.cycles < 2 * solo.cycles,
+            "stacked {} vs 2 solo {}",
+            co.total.cycles,
+            2 * solo.cycles
+        );
+        assert!(
+            co.total.weight_read_bytes < 2 * solo.weight_read_bytes,
+            "weights loaded once per pass, not once per request"
+        );
+        assert_eq!(co.total.passes, solo.passes, "8+8 rows still fit one tile row");
     }
 
     #[test]

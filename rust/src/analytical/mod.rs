@@ -11,7 +11,9 @@ pub mod equations;
 pub mod gemm;
 pub mod utilization;
 
-pub use cluster::{estimate_cluster, ClusterEstimate};
+pub use cluster::{
+    estimate_cluster, estimate_coalesced, CoalescedEstimate, CoalescedMember, ClusterEstimate,
+};
 pub use equations::{
     adip_latency, adip_throughput_ops_per_cycle, fig2_series, fig4_series, pe_latency, Fig2Row,
     Fig4Row,

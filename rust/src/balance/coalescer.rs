@@ -1,0 +1,227 @@
+//! Cross-request shard coalescing: merge compatible prepared batches from
+//! *different* requests into one asymmetric shared-input pass.
+//!
+//! The batcher already fuses requests that share one activation object
+//! (Q/K/V off one `X`). Serving traffic has a second, dual reuse pattern
+//! the batcher cannot see: **many clients hitting the same weights** with
+//! different activations (the same projection layer invoked for many
+//! prompts). Two batches whose weight sets are byte-identical (equal
+//! combined fingerprint), in the same precision mode and `K`/`N` shape,
+//! compute `A₁·[B…]` and `A₂·[B…]` — stacking the activations along `M`
+//! turns them into **one** multi-matrix pass `[A₁;A₂]·[B…]`: the paper's
+//! asymmetric shared-input mode applied at the serving layer, with the
+//! stationary weight tiles loaded once for every member's rows instead of
+//! once per request. [`crate::balance::split_back`] recovers each member's
+//! output rows and row-share accounting exactly.
+//!
+//! Only static-weight batches coalesce (`runtime_interleave == false`):
+//! activation-to-activation operands are dynamic, so their "weights" are
+//! fresh every request and fingerprint equality would be both vanishingly
+//! rare and semantically misleading.
+//!
+//! The key is computed **off the execute path** — on the prepare-stage (or
+//! router) thread at push time — under a hash-once policy: a prepared
+//! batch's key reuses the prepare stage's weight fingerprints, and a raw
+//! batch's per-weight hashes are memoized into the batch so the worker's
+//! later preparation never re-hashes the weight set. One deliberate
+//! trade-off: in inline/direct dispatch the raw-batch key hash runs on
+//! the single router thread (the key must exist at queue time — queued
+//! batches are matched by it), so serving coalescing-heavy traffic with
+//! *large* weight sets is best run with `--prepare=pipelined` and the
+//! cache on, where the key reuses hashes computed in parallel on the
+//! per-worker stage threads.
+
+use std::time::Duration;
+
+use crate::cluster::weight_cache::{combine_fingerprints, fingerprint};
+use crate::coordinator::prepare::WorkMsg;
+use crate::quant::PrecisionMode;
+
+/// Coalescing configuration, threaded through
+/// [`crate::coordinator::CoordinatorConfig`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoalesceConfig {
+    /// Master switch (default off — coalescing is opt-in).
+    pub enabled: bool,
+    /// Bounded wait window: how long an **otherwise idle** worker holds an
+    /// eligible batch waiting for a partner before executing it solo.
+    /// Under load partners are found in the queues without waiting, so the
+    /// window only ever delays work that would have left the fabric empty.
+    pub window: Duration,
+    /// Maximum member batches merged into one pass.
+    pub max_members: usize,
+}
+
+impl Default for CoalesceConfig {
+    fn default() -> Self {
+        CoalesceConfig { enabled: false, window: Duration::from_millis(2), max_members: 8 }
+    }
+}
+
+impl CoalesceConfig {
+    /// Whether coalescing can ever merge anything.
+    pub fn active(&self) -> bool {
+        self.enabled && self.max_members >= 2
+    }
+}
+
+/// Compatibility key: two batches coalesce iff their keys are equal. The
+/// weight-set fingerprint covers every weight matrix's dimensions and
+/// contents (in order), so equal keys imply byte-identical weight sets —
+/// which is what makes the merged pass's outputs bit-exact per member.
+/// `k`/`n_cols` are implied by the fingerprint (it hashes dimensions) but
+/// kept explicit so the invariant is visible and cheap to debug.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CoalesceKey {
+    weight_fp: u128,
+    mode: PrecisionMode,
+    k: usize,
+    n_cols: usize,
+}
+
+/// Compute the coalescing key of one formed batch, or `None` when the
+/// batch is ineligible (runtime-interleaved / activation-to-activation).
+///
+/// Hash-once policy: a prepared batch's key reuses the prepare stage's
+/// per-weight fingerprints; a raw batch is hashed here (push-side, off
+/// the worker's execute path) and the per-weight fingerprints are
+/// **memoized into the batch** (`BatchWork::weight_fps`) so the worker's
+/// later `prepare_batch` never re-hashes the weight set — preparation
+/// itself (the activation hash and assembly) stays on the worker, keeping
+/// inline-mode preparation parallel across workers.
+pub(crate) fn coalesce_key(msg: &mut WorkMsg) -> Option<CoalesceKey> {
+    if msg.runtime_interleave() {
+        return None;
+    }
+    let weight_fp = match msg.prepared_fps() {
+        Some(fps) => combine_fingerprints(fps.weights.iter().copied()),
+        None => {
+            let WorkMsg::Raw(work) = msg else { unreachable!("prepared_fps covered Prepared") };
+            let fps: Vec<u128> = work
+                .envelopes
+                .iter()
+                .flat_map(|e| e.req.bs.iter())
+                .map(|b| fingerprint(&[b.as_ref()]))
+                .collect();
+            let combined = combine_fingerprints(fps.iter().copied());
+            work.weight_fps = Some(fps);
+            combined
+        }
+    };
+    let first = &msg.envelopes()[0].req;
+    Some(CoalesceKey {
+        weight_fp,
+        mode: msg.mode(),
+        k: first.a.cols(),
+        n_cols: first.bs[0].cols(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::prepare::{prepare_batch, BatchWork};
+    use crate::coordinator::request::{Envelope, MatmulRequest};
+    use crate::coordinator::{Metrics, Priority};
+    use crate::dataflow::Mat;
+    use crate::testutil::Rng;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    fn batch(a: Arc<Mat>, bs: Vec<Arc<Mat>>, act_act: bool, seq: u64) -> BatchWork {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let bits = if act_act { 8 } else { 2 };
+        BatchWork {
+            envelopes: vec![Envelope {
+                req: MatmulRequest {
+                    id: seq,
+                    input_id: seq,
+                    a,
+                    bs,
+                    weight_bits: bits,
+                    act_act,
+                    tag: String::new(),
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+                priority: Priority::Batch,
+                deadline: None,
+            }],
+            mode: if act_act { PrecisionMode::W8 } else { PrecisionMode::W2 },
+            runtime_interleave: act_act,
+            batch_seq: seq,
+            weight_fps: None,
+        }
+    }
+
+    fn raw_key(work: BatchWork) -> Option<CoalesceKey> {
+        coalesce_key(&mut WorkMsg::Raw(work))
+    }
+
+    #[test]
+    fn same_weights_different_inputs_share_a_key() {
+        let mut rng = Rng::seeded(7);
+        let b = Arc::new(Mat::random(&mut rng, 8, 8, 2));
+        let a1 = Arc::new(Mat::random(&mut rng, 4, 8, 8));
+        let a2 = Arc::new(Mat::random(&mut rng, 6, 8, 8));
+        let k1 = raw_key(batch(a1, vec![b.clone()], false, 1)).unwrap();
+        let k2 = raw_key(batch(a2, vec![b.clone()], false, 2)).unwrap();
+        assert_eq!(k1, k2, "same weights, same mode/shape: must coalesce");
+        // identical contents under a *different* Arc still match — the
+        // fingerprint keys on bytes, not identity
+        let b_copy = Arc::new((*b).clone());
+        let a3 = Arc::new(Mat::random(&mut rng, 2, 8, 8));
+        let k3 = raw_key(batch(a3, vec![b_copy], false, 3)).unwrap();
+        assert_eq!(k1, k3);
+        // different weights never match
+        let other = Arc::new(Mat::random(&mut rng, 8, 8, 2));
+        let a4 = Arc::new(Mat::random(&mut rng, 4, 8, 8));
+        let k4 = raw_key(batch(a4, vec![other], false, 4)).unwrap();
+        assert_ne!(k1, k4);
+    }
+
+    #[test]
+    fn act_act_batches_are_ineligible() {
+        let mut rng = Rng::seeded(9);
+        let a = Arc::new(Mat::random(&mut rng, 8, 8, 8));
+        let b = Arc::new(Mat::random(&mut rng, 8, 8, 8));
+        assert!(raw_key(batch(a, vec![b], true, 1)).is_none());
+    }
+
+    #[test]
+    fn raw_key_memoizes_weight_fps_for_prepare_to_reuse() {
+        let mut rng = Rng::seeded(13);
+        let b = Arc::new(Mat::random(&mut rng, 8, 8, 2));
+        let a = Arc::new(Mat::random(&mut rng, 8, 8, 8));
+        let mut msg = WorkMsg::Raw(batch(a, vec![b.clone()], false, 1));
+        coalesce_key(&mut msg).unwrap();
+        let WorkMsg::Raw(work) = msg else { panic!("raw stays raw") };
+        let memoized = work.weight_fps.clone().expect("key computation memoizes");
+        assert_eq!(memoized, vec![fingerprint(&[b.as_ref()])]);
+        // prepare reuses the memoized hashes (debug builds re-verify them)
+        let metrics = Metrics::default();
+        let prepared = prepare_batch(work, true, &metrics);
+        assert_eq!(prepared.fps.expect("cache on").weights, memoized);
+    }
+
+    #[test]
+    fn prepared_fingerprints_yield_the_same_key_as_hashing() {
+        let mut rng = Rng::seeded(11);
+        let b = Arc::new(Mat::random(&mut rng, 8, 8, 2));
+        let a = Arc::new(Mat::random(&mut rng, 8, 8, 8));
+        let mut raw = WorkMsg::Raw(batch(a.clone(), vec![b.clone()], false, 1));
+        let raw_key = coalesce_key(&mut raw).unwrap();
+        let metrics = Metrics::default();
+        let mut prepared =
+            WorkMsg::Prepared(prepare_batch(batch(a, vec![b], false, 1), true, &metrics));
+        assert_eq!(coalesce_key(&mut prepared).unwrap(), raw_key);
+    }
+
+    #[test]
+    fn config_defaults_and_activation() {
+        let d = CoalesceConfig::default();
+        assert!(!d.active(), "coalescing is opt-in");
+        assert!(CoalesceConfig { enabled: true, ..d }.active());
+        assert!(!CoalesceConfig { enabled: true, max_members: 1, ..d }.active());
+    }
+}

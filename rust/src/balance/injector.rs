@@ -1,0 +1,630 @@
+//! The execution fabric: a global injector queue plus per-worker deques of
+//! formed batches, with optional work-stealing and cross-request
+//! coalescing at pop time.
+//!
+//! One [`Fabric`] replaces the per-worker mpsc channels the coordinator
+//! used to feed its execute stage. Producers (the router in direct mode,
+//! the prepare-stage threads in pipelined mode) [`Fabric::push`] batches to
+//! their owner's deque; each execute worker [`Fabric::pop`]s — and,
+//! depending on the [`StealPolicy`], an idle worker pops from the injector
+//! or steals from the deepest sibling deque instead of going to sleep.
+//!
+//! # Queue topology and ordering
+//!
+//! * **Per-worker deques** keep the router's round-robin ownership: a
+//!   batch's owner is fixed at dispatch, so with [`StealPolicy::Off`] the
+//!   fabric reproduces the legacy static assignment exactly (FIFO pops,
+//!   strict ownership, injector unused).
+//! * **The injector** absorbs spill: when stealing is on and an owner's
+//!   deque is already at its fair share of the global bound, the batch
+//!   goes to the injector, where *any* idle worker takes it FIFO.
+//! * **Steal order**: local pops are LIFO (the freshest batch is the one
+//!   whose operands are warmest in this worker's cache hierarchy) up to
+//!   the [`LIFO_BURST`] anti-starvation bound — after that many
+//!   older-work-skipping pops in a row, the front (oldest) batch is
+//!   served, so sustained saturation can neither starve a batch nor run
+//!   unboundedly ahead of the batcher's priority order. Steals are FIFO
+//!   from the victim (the oldest batch is the coldest and has waited
+//!   longest — the locality and the fairness argument pick the same
+//!   end). [`StealPolicy::Aggressive`] additionally re-homes half of the
+//!   victim's remainder in the same grab.
+//! * **Capacity**: one global bound (`workers × prepared_capacity`)
+//!   preserves the pipeline's backpressure — `push` blocks while the
+//!   fabric is full, which propagates through the prepare stage to the
+//!   router and the bounded admission queue. Under [`StealPolicy::Off`]
+//!   `push` additionally blocks at the owner's fair share, reproducing
+//!   the legacy per-worker channel bounds exactly (no cross-worker
+//!   head-of-line blocking through the global bound).
+//!
+//! # Coalescing at pop time
+//!
+//! When coalescing is enabled, every eligible batch carries its
+//! [`CoalesceKey`] (computed push-side). A worker that pops an eligible
+//! batch first *gathers* every compatible batch already queued anywhere in
+//! the fabric — injector and all deques; a merge is not a steal, so this
+//! crosses ownership under every policy — and only if it found none **and
+//! the fabric is otherwise empty** does it wait up to the bounded window
+//! for a partner to arrive. Under load, partners are in the queues and the
+//! window never delays anything. The gathered group is returned to the
+//! worker, which executes it as one stacked pass (see
+//! [`crate::balance::coalescer`]). Best-effort by design: two workers that
+//! each pop a compatible batch while the fabric is otherwise empty will
+//! both run solo after the window — a lost optimization, never a lost or
+//! duplicated ticket.
+//!
+//! # Shutdown
+//!
+//! [`Fabric::close`] is called after every producer has been joined; the
+//! workers drain everything still queued (a waiting coalescer returns its
+//! held batch immediately) and `pop` then yields `None`. No admitted batch
+//! is ever dropped — `rust/tests/integration_balance.rs` shuts down
+//! mid-steal and asserts every ticket resolves.
+
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Instant;
+
+use crate::coordinator::metrics::{Metrics, MAX_DEQUE_GAUGES};
+use crate::coordinator::prepare::WorkMsg;
+
+use super::coalescer::{coalesce_key, CoalesceConfig, CoalesceKey};
+use super::steal::{choose_victim, StealPolicy};
+
+/// One queued batch plus its (push-side) coalescing key.
+struct Item {
+    msg: WorkMsg,
+    key: Option<CoalesceKey>,
+}
+
+struct State {
+    injector: VecDeque<Item>,
+    deques: Vec<VecDeque<Item>>,
+    /// Items queued anywhere in the fabric (injector + all deques).
+    outstanding: usize,
+    /// Per-worker run length of consecutive LIFO pops that skipped older
+    /// queued work — bounds priority inversion (see [`LIFO_BURST`]).
+    lifo_runs: Vec<u32>,
+    /// Workers that have exited (normal drain or panic): their deques are
+    /// re-homed to the injector and producers are redirected there, so a
+    /// dead worker can never wedge a blocked `push`.
+    dead: Vec<bool>,
+    /// How many entries of `dead` are set (O(1) all-dead check in `push`).
+    dead_count: usize,
+    closed: bool,
+}
+
+/// Cap on consecutive LIFO local pops that skip older queued batches:
+/// after this many, the worker takes its deque's **front** (oldest) batch
+/// once. Under sustained saturation a pure LIFO discipline would starve
+/// the front batch forever (the router refills the back as fast as the
+/// worker drains it); the burst cap bounds how far service can run ahead
+/// of the batcher's priority/deadline order — any queued batch is served
+/// within `LIFO_BURST` pops of its worker, while the common case keeps
+/// the cache-warm newest batch home.
+const LIFO_BURST: u32 = 8;
+
+/// The coordinator-wide balance fabric (see the module docs).
+pub(crate) struct Fabric {
+    state: Mutex<State>,
+    /// Signalled on push and close: wakes poppers (and coalesce waiters).
+    available: Condvar,
+    /// Signalled on pop: wakes producers blocked on the global bound.
+    space: Condvar,
+    capacity: usize,
+    /// Fair per-worker share of `capacity`: the per-owner push bound
+    /// under [`StealPolicy::Off`]; beyond it, stealing policies spill to
+    /// the injector instead.
+    fair_share: usize,
+    steal: StealPolicy,
+    coalesce: CoalesceConfig,
+    metrics: Arc<Metrics>,
+}
+
+impl Fabric {
+    /// A fabric for `workers` execute workers bounded at `capacity`
+    /// outstanding batches in total.
+    pub fn new(
+        workers: usize,
+        capacity: usize,
+        steal: StealPolicy,
+        coalesce: CoalesceConfig,
+        metrics: Arc<Metrics>,
+    ) -> Arc<Fabric> {
+        assert!(workers > 0 && capacity > 0);
+        Arc::new(Fabric {
+            state: Mutex::new(State {
+                injector: VecDeque::new(),
+                deques: (0..workers).map(|_| VecDeque::new()).collect(),
+                outstanding: 0,
+                lifo_runs: vec![0; workers],
+                dead: vec![false; workers],
+                dead_count: 0,
+                closed: false,
+            }),
+            available: Condvar::new(),
+            space: Condvar::new(),
+            capacity,
+            fair_share: (capacity / workers).max(1),
+            steal,
+            coalesce,
+            metrics,
+        })
+    }
+
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Enqueue one batch for `owner`, blocking while the fabric is at its
+    /// global bound — or, under [`StealPolicy::Off`], while the owner's
+    /// own deque is at its fair share, which reproduces the legacy
+    /// per-worker channel bounds exactly (a hot worker's backlog cannot
+    /// starve producers feeding an idle sibling; under stealing policies
+    /// the spill-to-injector path serves the same purpose). After close
+    /// the batch is accepted unconditionally so a late producer can never
+    /// deadlock — workers drain until empty.
+    pub fn push(&self, owner: usize, mut msg: WorkMsg) {
+        // The coalesce key needs the weight-set fingerprint at queue time
+        // (queued items are matched by key). A raw batch is hashed here —
+        // once: the per-weight fingerprints are memoized into the batch
+        // so the worker's prepare never re-hashes them — while prepared
+        // batches reuse their prepare-stage fingerprints outright.
+        let key = if self.coalesce.active() { coalesce_key(&mut msg) } else { None };
+        let mut s = self.lock();
+        // Block on the bounds only while someone can make progress: a
+        // fully dead worker set must degrade to unbounded queueing (the
+        // admission queue still bounds total work) so a blocked push can
+        // never wedge the router — and with it shutdown — forever.
+        while !s.closed
+            && s.dead_count < s.deques.len()
+            && (s.outstanding >= self.capacity
+                || (!self.steal.steals()
+                    && !s.dead[owner]
+                    && s.deques[owner].len() >= self.fair_share))
+        {
+            s = self.space.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+        let item = Item { msg, key };
+        // spill to the injector once the owner's deque exceeds its fair
+        // share *and* someone may actually take it from there; under Off
+        // the injector is only fed when the owner died (every live worker
+        // drains the injector regardless of policy), preserving strict
+        // ownership on the healthy path
+        if s.dead[owner] || (self.steal.steals() && s.deques[owner].len() >= self.fair_share) {
+            s.injector.push_back(item);
+        } else {
+            s.deques[owner].push_back(item);
+        }
+        s.outstanding += 1;
+        self.refresh_gauges(&s);
+        drop(s);
+        self.available.notify_all();
+    }
+
+    /// Mark the fabric closed and wake every worker so they drain what is
+    /// queued and exit. Call only after all producers have been joined.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.available.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Mark one worker as gone — called on **any** worker-thread exit,
+    /// normal drain or panic (a drop guard in the server's worker loop).
+    /// Its queued batches are re-homed to the global injector so every
+    /// surviving worker can drain them under any policy, and future
+    /// pushes for this owner are redirected there too. This replaces the
+    /// legacy mpsc liveness escape (`send` erroring on a dropped
+    /// receiver): a dead worker degrades service instead of wedging a
+    /// blocked `push` — and with it the router and shutdown — forever.
+    pub fn worker_down(&self, worker: usize) {
+        let mut s = self.lock();
+        if !s.dead[worker] {
+            s.dead[worker] = true;
+            s.dead_count += 1;
+        }
+        while let Some(it) = s.deques[worker].pop_front() {
+            s.injector.push_back(it);
+        }
+        self.refresh_gauges(&s);
+        drop(s);
+        self.available.notify_all();
+        self.space.notify_all();
+    }
+
+    /// Pop the next unit of work for `worker`: one batch, or a coalesced
+    /// group of compatible batches (first element = the batch that seeded
+    /// the group). `None` once the fabric is closed and fully drained.
+    pub fn pop(&self, worker: usize) -> Option<Vec<WorkMsg>> {
+        let mut s = self.lock();
+        let mut counted_failure = false;
+        loop {
+            if let Some(item) = self.take(&mut s, worker, &mut counted_failure) {
+                let mut group = vec![item];
+                if let Some(key) = group[0].key {
+                    self.gather(&mut s, key, &mut group);
+                    if group.len() == 1 && !self.coalesce.window.is_zero() {
+                        s = self.wait_for_partner(s, key, &mut group);
+                    }
+                }
+                self.refresh_gauges(&s);
+                drop(s);
+                self.space.notify_all();
+                return Some(group.into_iter().map(|i| i.msg).collect());
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.available.wait(s).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Take one item for `worker`: own deque (FIFO under Off; LIFO under
+    /// stealing policies, with the [`LIFO_BURST`] anti-starvation bound),
+    /// then the injector, then — policy permitting — a steal from the
+    /// deepest sibling.
+    fn take(&self, s: &mut State, worker: usize, counted_failure: &mut bool) -> Option<Item> {
+        let own = if self.steal.steals() {
+            // LIFO keeps the cache-warm newest batch home, but a pop that
+            // skips older queued work counts against the burst bound —
+            // after LIFO_BURST such pops the front (oldest) batch is
+            // served, so saturation can never starve it.
+            if s.lifo_runs[worker] >= LIFO_BURST && s.deques[worker].len() > 1 {
+                s.lifo_runs[worker] = 0;
+                s.deques[worker].pop_front()
+            } else {
+                if s.deques[worker].len() > 1 {
+                    s.lifo_runs[worker] += 1;
+                } else {
+                    s.lifo_runs[worker] = 0;
+                }
+                s.deques[worker].pop_back()
+            }
+        } else {
+            s.deques[worker].pop_front() // legacy FIFO service order
+        };
+        if let Some(it) = own {
+            s.outstanding -= 1;
+            return Some(it);
+        }
+        if let Some(it) = s.injector.pop_front() {
+            s.outstanding -= 1;
+            return Some(it);
+        }
+        if !self.steal.steals() {
+            return None;
+        }
+        let depths: Vec<usize> = s.deques.iter().map(|d| d.len()).collect();
+        match choose_victim(&depths, worker) {
+            Some(victim) => {
+                // FIFO-steal: the victim's oldest (coldest) batch
+                let it = s.deques[victim].pop_front().expect("non-empty victim");
+                s.outstanding -= 1;
+                let mut stolen = 1u64;
+                if self.steal == StealPolicy::Aggressive {
+                    // one grab rebalances: re-home half of the remainder
+                    let extra = s.deques[victim].len() / 2;
+                    for _ in 0..extra {
+                        let x = s.deques[victim].pop_front().expect("counted above");
+                        s.deques[worker].push_back(x);
+                    }
+                    stolen += extra as u64;
+                }
+                self.metrics.steals.fetch_add(stolen, Ordering::Relaxed);
+                Some(it)
+            }
+            None => {
+                // Nothing to steal anywhere. Counted once per pop call
+                // (not per wakeup) and never during the shutdown drain, so
+                // the counter reads as "idle scans that came up empty"
+                // rather than shutdown noise. Note steals under the fabric
+                // lock cannot race, so this is an idleness signal, not
+                // contention.
+                if !*counted_failure && !s.closed {
+                    self.metrics.steal_failures.fetch_add(1, Ordering::Relaxed);
+                    *counted_failure = true;
+                }
+                None
+            }
+        }
+    }
+
+    /// Move every queued batch compatible with `key` into `group`, up to
+    /// the member cap — injector first (oldest spill), then every deque.
+    /// A merge is not a steal: it crosses ownership under every policy,
+    /// because the members execute as one pass wherever it lands.
+    fn gather(&self, s: &mut State, key: CoalesceKey, group: &mut Vec<Item>) {
+        let cap = self.coalesce.max_members;
+        let State { injector, deques, outstanding, .. } = s;
+        let mut drain = |dq: &mut VecDeque<Item>| {
+            let mut i = 0;
+            while i < dq.len() && group.len() < cap {
+                if dq[i].key == Some(key) {
+                    group.push(dq.remove(i).expect("index checked"));
+                    *outstanding -= 1;
+                } else {
+                    i += 1;
+                }
+            }
+        };
+        drain(injector);
+        for dq in deques.iter_mut() {
+            drain(dq);
+        }
+    }
+
+    /// Hold a partner-less eligible batch for up to the coalesce window —
+    /// but only while the fabric is otherwise idle: the moment any other
+    /// work is queued (or close is signalled), run solo rather than stall
+    /// the pipeline.
+    fn wait_for_partner<'g>(
+        &self,
+        mut s: MutexGuard<'g, State>,
+        key: CoalesceKey,
+        group: &mut Vec<Item>,
+    ) -> MutexGuard<'g, State> {
+        let deadline = Instant::now() + self.coalesce.window;
+        while group.len() < self.coalesce.max_members && s.outstanding == 0 && !s.closed {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else { break };
+            let (guard, timeout) = self
+                .available
+                .wait_timeout(s, left)
+                .unwrap_or_else(PoisonError::into_inner);
+            s = guard;
+            self.gather(&mut s, key, group);
+            if group.len() > 1 || timeout.timed_out() {
+                break;
+            }
+        }
+        s
+    }
+
+    fn refresh_gauges(&self, s: &State) {
+        self.metrics.injector_depth.store(s.injector.len() as u64, Ordering::Relaxed);
+        for (w, d) in s.deques.iter().enumerate().take(MAX_DEQUE_GAUGES) {
+            self.metrics.worker_deque_depth[w].store(d.len() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::prepare::BatchWork;
+    use crate::coordinator::request::{Envelope, MatmulRequest};
+    use crate::coordinator::Priority;
+    use crate::dataflow::Mat;
+    use crate::quant::PrecisionMode;
+    use crate::testutil::Rng;
+    use std::time::Duration;
+
+    fn msg(rng: &mut Rng, seq: u64, b: Option<Arc<Mat>>) -> WorkMsg {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        let b = b.unwrap_or_else(|| Arc::new(Mat::random(rng, 8, 8, 2)));
+        WorkMsg::Raw(BatchWork {
+            envelopes: vec![Envelope {
+                req: MatmulRequest {
+                    id: seq,
+                    input_id: seq,
+                    a: Arc::new(Mat::random(rng, 8, 8, 8)),
+                    bs: vec![b],
+                    weight_bits: 2,
+                    act_act: false,
+                    tag: String::new(),
+                },
+                reply: tx,
+                enqueued: Instant::now(),
+                priority: Priority::Batch,
+                deadline: None,
+            }],
+            mode: PrecisionMode::W2,
+            runtime_interleave: false,
+            batch_seq: seq,
+            weight_fps: None,
+        })
+    }
+
+    fn seq_of(m: &WorkMsg) -> u64 {
+        m.envelopes()[0].req.id
+    }
+
+    #[test]
+    fn off_policy_is_fifo_per_owner_and_never_steals() {
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 8, StealPolicy::Off, CoalesceConfig::default(), metrics.clone());
+        let mut rng = Rng::seeded(21);
+        for seq in 0..3 {
+            f.push(0, msg(&mut rng, seq, None));
+        }
+        // worker 0 sees its batches FIFO; worker 1 sees nothing
+        for want in 0..3 {
+            let got = f.pop(0).unwrap();
+            assert_eq!(got.len(), 1);
+            assert_eq!(seq_of(&got[0]), want);
+        }
+        f.close();
+        assert!(f.pop(1).is_none(), "Off never crosses ownership");
+        assert_eq!(metrics.steals.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn idle_steals_fifo_from_the_deepest_sibling() {
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 16, StealPolicy::Idle, CoalesceConfig::default(), metrics.clone());
+        let mut rng = Rng::seeded(23);
+        for seq in 0..4 {
+            f.push(0, msg(&mut rng, seq, None));
+        }
+        // the thief takes the victim's OLDEST batch
+        let stolen = f.pop(1).unwrap();
+        assert_eq!(seq_of(&stolen[0]), 0, "FIFO-steal takes the oldest");
+        assert_eq!(metrics.steals.load(Ordering::Relaxed), 1);
+        // the owner pops LIFO: the freshest stays home
+        let own = f.pop(0).unwrap();
+        assert_eq!(seq_of(&own[0]), 3, "LIFO-local keeps the warm batch home");
+    }
+
+    #[test]
+    fn aggressive_rehomes_half_the_victim_deque() {
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(
+            2,
+            32,
+            StealPolicy::Aggressive,
+            CoalesceConfig::default(),
+            metrics.clone(),
+        );
+        let mut rng = Rng::seeded(25);
+        for seq in 0..9 {
+            f.push(0, msg(&mut rng, seq, None));
+        }
+        let _ = f.pop(1).unwrap(); // steals 1, re-homes 4 of the remaining 8
+        assert_eq!(metrics.steals.load(Ordering::Relaxed), 5);
+        assert!(metrics.worker_deque_depth[1].load(Ordering::Relaxed) >= 4);
+    }
+
+    #[test]
+    fn lifo_burst_bound_serves_the_oldest_batch_eventually() {
+        let metrics = Arc::new(Metrics::default());
+        let f =
+            Fabric::new(2, 32, StealPolicy::Idle, CoalesceConfig::default(), metrics);
+        let mut rng = Rng::seeded(37);
+        for seq in 0..12 {
+            f.push(0, msg(&mut rng, seq, None));
+        }
+        // LIFO pops run newest-first, but the burst cap forces the front
+        // (oldest) batch out before it can starve
+        let seqs: Vec<u64> =
+            (0..12).map(|_| seq_of(&f.pop(0).unwrap()[0])).collect();
+        assert_eq!(&seqs[..8], &[11, 10, 9, 8, 7, 6, 5, 4], "LIFO burst");
+        assert_eq!(seqs[8], 0, "burst bound: the starving front batch is served");
+        let served: std::collections::HashSet<u64> = seqs.iter().copied().collect();
+        assert_eq!(served.len(), 12, "every batch served exactly once");
+    }
+
+    #[test]
+    fn off_policy_bounds_each_owner_at_its_fair_share() {
+        // capacity 8 over 2 workers = fair share 4: worker 0's backlog
+        // must not be able to absorb the whole global bound under Off
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 8, StealPolicy::Off, CoalesceConfig::default(), metrics);
+        let mut rng = Rng::seeded(39);
+        for seq in 0..4 {
+            f.push(0, msg(&mut rng, seq, None)); // fills worker 0's share
+        }
+        // worker 1's producer must still get through immediately even
+        // though worker 0 is saturated (a blocked push would hang here)
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        let f2 = f.clone();
+        let m = msg(&mut rng, 100, None);
+        let t = std::thread::spawn(move || {
+            f2.push(1, m);
+            done_tx.send(()).unwrap();
+        });
+        done_rx
+            .recv_timeout(Duration::from_secs(5))
+            .expect("push for the idle worker must not block behind the hot one");
+        t.join().unwrap();
+        assert_eq!(seq_of(&f.pop(1).unwrap()[0]), 100);
+    }
+
+    #[test]
+    fn steal_failure_counted_once_per_pop_and_never_during_shutdown() {
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 8, StealPolicy::Idle, CoalesceConfig::default(), metrics.clone());
+        let f2 = f.clone();
+        // an idle worker's blocking pop scans once (one empty-scan
+        // failure) and then sleeps on the condvar
+        let t = std::thread::spawn(move || f2.pop(0));
+        std::thread::sleep(Duration::from_millis(50));
+        f.close();
+        assert!(t.join().unwrap().is_none());
+        assert_eq!(
+            metrics.steal_failures.load(Ordering::Relaxed),
+            1,
+            "one idle scan counted; the shutdown drain adds no noise"
+        );
+        // a pop arriving after close counts nothing at all
+        assert!(f.pop(1).is_none());
+        assert_eq!(metrics.steal_failures.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn gather_merges_compatible_batches_across_owners() {
+        let metrics = Arc::new(Metrics::default());
+        let coalesce = CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(50),
+            max_members: 8,
+        };
+        let f = Fabric::new(2, 16, StealPolicy::Off, coalesce, metrics);
+        let mut rng = Rng::seeded(27);
+        let shared_b = Arc::new(Mat::random(&mut rng, 8, 8, 2));
+        f.push(0, msg(&mut rng, 0, Some(shared_b.clone())));
+        f.push(1, msg(&mut rng, 1, Some(shared_b.clone())));
+        f.push(0, msg(&mut rng, 2, None)); // incompatible weights
+        let group = f.pop(0).unwrap();
+        assert_eq!(group.len(), 2, "compatible sibling batch merged across owners");
+        let seqs: Vec<u64> = group.iter().map(seq_of).collect();
+        assert!(seqs.contains(&0) && seqs.contains(&1), "{seqs:?}");
+        let solo = f.pop(0).unwrap();
+        assert_eq!(solo.len(), 1);
+        assert_eq!(seq_of(&solo[0]), 2);
+    }
+
+    #[test]
+    fn idle_worker_waits_the_window_then_runs_solo() {
+        let metrics = Arc::new(Metrics::default());
+        let coalesce = CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(20),
+            max_members: 4,
+        };
+        let f = Fabric::new(1, 8, StealPolicy::Off, coalesce, metrics);
+        let mut rng = Rng::seeded(29);
+        f.push(0, msg(&mut rng, 0, None));
+        let t0 = Instant::now();
+        let group = f.pop(0).unwrap();
+        assert_eq!(group.len(), 1, "no partner ever arrived");
+        assert!(t0.elapsed() >= Duration::from_millis(15), "must have waited the window");
+    }
+
+    #[test]
+    fn dead_workers_deques_rehome_to_the_injector_and_pushes_redirect() {
+        // even under Off (strict ownership), a dead worker's backlog must
+        // become drainable by survivors and never wedge a producer
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 8, StealPolicy::Off, CoalesceConfig::default(), metrics);
+        let mut rng = Rng::seeded(41);
+        for seq in 0..4 {
+            f.push(0, msg(&mut rng, seq, None)); // worker 0 at fair share
+        }
+        f.worker_down(0);
+        // a push for the dead owner redirects to the injector instead of
+        // blocking on its (frozen) fair-share bound
+        f.push(0, msg(&mut rng, 4, None));
+        // the surviving worker drains the re-homed backlog FIFO
+        let seqs: Vec<u64> = (0..5).map(|_| seq_of(&f.pop(1).unwrap()[0])).collect();
+        assert_eq!(seqs, vec![0, 1, 2, 3, 4]);
+        f.close();
+        assert!(f.pop(1).is_none());
+    }
+
+    #[test]
+    fn close_drains_everything_then_yields_none() {
+        let metrics = Arc::new(Metrics::default());
+        let f = Fabric::new(2, 8, StealPolicy::Idle, CoalesceConfig::default(), metrics);
+        let mut rng = Rng::seeded(31);
+        for seq in 0..4 {
+            f.push(seq as usize % 2, msg(&mut rng, seq, None));
+        }
+        f.close();
+        let mut drained = 0;
+        while f.pop(0).is_some() {
+            drained += 1;
+        }
+        assert_eq!(drained, 4, "close must drain, not drop");
+        assert!(f.pop(1).is_none());
+    }
+}

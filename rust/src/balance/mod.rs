@@ -1,0 +1,67 @@
+//! Global balance subsystem — a work-stealing execution fabric plus
+//! cross-request shard coalescing for the coordinator's execute stage.
+//!
+//! The paper's headline system feature beyond adaptive precision is the
+//! **asymmetric multi-matrix mode**: several weight matrices multiplied
+//! against one shared input in a single pass, raising PE utilization and
+//! input-data reuse. Before this subsystem the coordinator exploited it
+//! only *within* one request group (the batcher's Q/K/V fusion), and each
+//! server worker executed only the batches statically routed to it — a
+//! skewed trace left whole clusters idle while a hot worker queued. This
+//! module removes both limits:
+//!
+//! * [`injector`] — the [`Fabric`](injector::Fabric): one global injector
+//!   queue plus per-worker deques of formed batches, replacing the
+//!   per-worker mpsc channels. The router/prepare stage pushes to the
+//!   owner's deque; spill beyond an owner's fair share goes to the
+//!   injector.
+//! * [`steal`] — [`StealPolicy`]: `Off` (legacy static ownership, the
+//!   differential baseline), `Idle` (an idle worker steals one batch from
+//!   the deepest sibling) and `Aggressive` (a steal re-homes half of the
+//!   victim's deque). Victim selection is by deque depth; local pops are
+//!   LIFO (bounded by an anti-starvation burst cap — see
+//!   `injector::LIFO_BURST`) and steals FIFO, so cache-warm batches stay
+//!   home and the oldest (coldest, longest-waiting) work travels.
+//! * [`coalescer`] — [`CoalesceConfig`] and the compatibility key: batches
+//!   from *different* requests whose weight sets are byte-identical (equal
+//!   combined fingerprint) in the same precision mode and `K`/`N` shape
+//!   are stacked along `M` into **one** asymmetric shared-input
+//!   `run_gemm_set` pass — the paper's multi-matrix mode applied across
+//!   clients at the serving layer. An eligible batch with no queued
+//!   partner waits at most the bounded window, and only while the fabric
+//!   is otherwise idle.
+//! * [`split_back`] — the inverse: per-member output rows sliced back
+//!   bit-exactly, and the pass's accounting attributed by **row share**
+//!   with the same rounding conventions the in-batch attribution uses.
+//!   [`crate::analytical::cluster::estimate_coalesced`] states the same
+//!   arithmetic in closed form (sharing these helpers), so the functional
+//!   path equals the model exactly.
+//!
+//! # Invariants (enforced by `rust/tests/integration_balance.rs`)
+//!
+//! 1. **Bit-exact outputs** under every `StealPolicy` × coalescing on/off
+//!    × backend: stealing only moves a batch between identically
+//!    configured clusters, and a coalesced pass computes the identical
+//!    integer GEMM per member (row stacking is exact on both backends).
+//! 2. **Accounting**: with coalescing off (and the weight cache off, so
+//!    no order-dependent hits), per-ticket accounting is *identical*
+//!    across steal policies — the simulated numbers are a pure function
+//!    of the batch. With coalescing on, per-member accounting equals
+//!    `estimate_coalesced` (row-share attribution over the stacked-shape
+//!    cluster estimate).
+//! 3. **No ticket is ever lost**: shutdown closes the fabric only after
+//!    every producer joined; workers drain every queued batch — including
+//!    mid-steal and mid-coalesce-wait — before exiting.
+//!
+//! Observability: `steals_total`, `steal_failures_total`,
+//! `coalesced_passes_total`, `coalesced_members_total`, per-worker deque
+//! depth and injector depth gauges in [`crate::coordinator::Metrics`] and
+//! its Prometheus dump.
+
+pub mod coalescer;
+pub(crate) mod injector;
+pub mod split_back;
+pub mod steal;
+
+pub use coalescer::CoalesceConfig;
+pub use steal::StealPolicy;

@@ -1,0 +1,127 @@
+//! Split a coalesced pass back into its member batches.
+//!
+//! A coalesced pass stacks the member batches' activation matrices along
+//! `M` and runs one shared-weight multi-matrix GEMM set (see
+//! [`crate::balance::coalescer`]). This module is the inverse: each
+//! member's outputs are the row block it contributed, and the pass's
+//! accounting is attributed **proportionally to row share** — the row
+//! analogue of the matrix-count attribution
+//! [`crate::coordinator::scheduler`] applies inside one fused batch
+//! (`attribute_members`), using the same rounding conventions (cycles and
+//! passes round to nearest, byte counters truncate).
+//!
+//! The arithmetic lives in [`row_share_cycles`] / [`row_share_bytes`] /
+//! [`row_share_f64`] so the closed-form mirror
+//! ([`crate::analytical::cluster::estimate_coalesced`]) applies *exactly*
+//! the same expression — the functional path's per-member accounting and
+//! the analytical model cannot drift apart by a rounding convention.
+
+use crate::dataflow::Mat;
+use crate::sim::cosim::CoSimResult;
+
+/// Proportional share of an integer counter that rounds to nearest —
+/// used for cycles and passes (mirrors `attribute_members`).
+pub fn row_share_cycles(total: u64, rows: usize, rows_total: usize) -> u64 {
+    (total as f64 * (rows as f64 / rows_total as f64)).round() as u64
+}
+
+/// Proportional share of a byte counter — truncating, mirroring the
+/// memory attribution in `attribute_members`.
+pub fn row_share_bytes(total: u64, rows: usize, rows_total: usize) -> u64 {
+    (total as f64 * (rows as f64 / rows_total as f64)) as u64
+}
+
+/// Proportional share of a float quantity (energy).
+pub fn row_share_f64(total: f64, rows: usize, rows_total: usize) -> f64 {
+    total * (rows as f64 / rows_total as f64)
+}
+
+/// Split one coalesced run back into per-member results. `member_rows[i]`
+/// is the row count member `i` contributed to the stacked activation, in
+/// stacking order; the run's outputs must each have `Σ member_rows` rows.
+///
+/// Outputs are **bit-exact** by construction: the functional and
+/// cycle-accurate backends both compute the stacked GEMM exactly, and row
+/// slicing recovers precisely `A_i · B_j` for every member `i` and weight
+/// `j`. Accounting is attributed by row share with the conventions above;
+/// `tile_reads`/`conflict_cycles` are carried whole, exactly as
+/// `attribute_members` carries them for fused batch members.
+pub fn split_back(run: &CoSimResult, member_rows: &[usize]) -> Vec<CoSimResult> {
+    let rows_total: usize = member_rows.iter().sum();
+    debug_assert!(run.outputs.iter().all(|c| c.rows() == rows_total));
+    let n_cols = run.outputs[0].cols();
+    let mut out = Vec::with_capacity(member_rows.len());
+    let mut r0 = 0usize;
+    for &rows in member_rows {
+        let outputs: Vec<Mat> =
+            run.outputs.iter().map(|c| c.tile(r0, 0, rows, n_cols)).collect();
+        r0 += rows;
+        let mut memory = run.memory;
+        memory.act_read_bytes = row_share_bytes(memory.act_read_bytes, rows, rows_total);
+        memory.weight_read_bytes = row_share_bytes(memory.weight_read_bytes, rows, rows_total);
+        memory.output_write_bytes = row_share_bytes(memory.output_write_bytes, rows, rows_total);
+        out.push(CoSimResult {
+            outputs,
+            passes: row_share_cycles(run.passes, rows, rows_total),
+            cycles: row_share_cycles(run.cycles, rows, rows_total),
+            energy_j: row_share_f64(run.energy_j, rows, rows_total),
+            memory,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::memory::MemoryCounters;
+    use crate::testutil::Rng;
+
+    #[test]
+    fn outputs_slice_back_exactly() {
+        let mut rng = Rng::seeded(91);
+        let a1 = Mat::random(&mut rng, 5, 8, 8);
+        let a2 = Mat::random(&mut rng, 3, 8, 8);
+        let b = Mat::random(&mut rng, 8, 6, 4);
+        let mut stacked = Vec::new();
+        stacked.extend_from_slice(a1.as_slice());
+        stacked.extend_from_slice(a2.as_slice());
+        let a_cat = Mat::from_vec(8, 8, stacked);
+        let run = CoSimResult {
+            outputs: vec![a_cat.matmul(&b)],
+            passes: 10,
+            cycles: 101,
+            energy_j: 2.0,
+            memory: MemoryCounters {
+                act_read_bytes: 801,
+                weight_read_bytes: 400,
+                output_write_bytes: 200,
+                tile_reads: 7,
+                conflict_cycles: 0,
+            },
+        };
+        let parts = split_back(&run, &[5, 3]);
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[0].outputs[0], a1.matmul(&b));
+        assert_eq!(parts[1].outputs[0], a2.matmul(&b));
+        // row-share attribution with the documented rounding conventions
+        assert_eq!(parts[0].cycles, row_share_cycles(101, 5, 8));
+        assert_eq!(parts[1].cycles, row_share_cycles(101, 3, 8));
+        assert_eq!(parts[0].memory.act_read_bytes, row_share_bytes(801, 5, 8));
+        assert!((parts[0].energy_j + parts[1].energy_j - 2.0).abs() < 1e-12);
+        // non-byte memory counters carried whole, like attribute_members
+        assert_eq!(parts[0].memory.tile_reads, 7);
+    }
+
+    #[test]
+    fn share_arithmetic_conventions() {
+        // cycles round to nearest, bytes truncate — the exact expressions
+        // estimate_coalesced mirrors
+        assert_eq!(row_share_cycles(10, 1, 3), 3);
+        assert_eq!(row_share_cycles(10, 2, 3), 7);
+        assert_eq!(row_share_bytes(10, 1, 3), 3);
+        assert_eq!(row_share_bytes(10, 2, 3), 6);
+        assert_eq!(row_share_cycles(100, 4, 4), 100);
+        assert_eq!(row_share_bytes(100, 4, 4), 100);
+    }
+}

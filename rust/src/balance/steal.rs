@@ -1,0 +1,109 @@
+//! Work-stealing policy: when (and how much) an idle worker may pull
+//! prepared batches that were queued at a sibling.
+//!
+//! The policy only governs *where* a batch executes — every worker owns an
+//! identically configured cluster and the simulated accounting is a pure
+//! function of the batch — so stealing can never change outputs, and with
+//! the weight cache disabled it cannot change per-ticket accounting either
+//! (`rust/tests/integration_balance.rs` asserts both).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// How aggressively an idle worker rebalances queued work (see the
+/// [`crate::balance`] module docs for the queue topology the policy acts
+/// on).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum StealPolicy {
+    /// Static ownership — the legacy dispatch: a worker executes only the
+    /// batches routed to its own deque, in FIFO order. The differential
+    /// baseline.
+    #[default]
+    Off,
+    /// An idle worker (own deque and the injector empty) steals **one**
+    /// batch from the front (the oldest, cache-coldest end) of the deepest
+    /// sibling deque. Local pops switch to LIFO so cache-warm batches stay
+    /// home.
+    Idle,
+    /// Like [`StealPolicy::Idle`], but a successful steal also re-homes
+    /// half of the victim's remaining deque onto the thief — one steal
+    /// rebalances a badly skewed queue instead of draining it item by
+    /// item.
+    Aggressive,
+}
+
+impl StealPolicy {
+    /// All policies, default first.
+    pub const ALL: [StealPolicy; 3] =
+        [StealPolicy::Off, StealPolicy::Idle, StealPolicy::Aggressive];
+
+    /// Display/CLI name.
+    pub const fn name(self) -> &'static str {
+        match self {
+            StealPolicy::Off => "off",
+            StealPolicy::Idle => "idle",
+            StealPolicy::Aggressive => "aggressive",
+        }
+    }
+
+    /// Whether this policy permits cross-worker stealing at all.
+    pub const fn steals(self) -> bool {
+        !matches!(self, StealPolicy::Off)
+    }
+}
+
+impl fmt::Display for StealPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for StealPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<StealPolicy, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" | "static" => Ok(StealPolicy::Off),
+            "idle" => Ok(StealPolicy::Idle),
+            "aggressive" | "half" => Ok(StealPolicy::Aggressive),
+            other => Err(format!("unknown steal policy {other:?} (off|idle|aggressive)")),
+        }
+    }
+}
+
+/// Pick the victim for one steal attempt: the sibling (`!= thief`) with
+/// the deepest non-empty deque; ties resolve to the highest worker index
+/// (deterministic). `None` when every sibling deque is empty.
+pub fn choose_victim(depths: &[usize], thief: usize) -> Option<usize> {
+    (0..depths.len())
+        .filter(|&v| v != thief && depths[v] > 0)
+        .max_by_key(|&v| depths[v])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip_and_order() {
+        assert_eq!(StealPolicy::default(), StealPolicy::Off);
+        for p in StealPolicy::ALL {
+            assert_eq!(p.name().parse::<StealPolicy>().unwrap(), p);
+        }
+        assert_eq!("static".parse::<StealPolicy>().unwrap(), StealPolicy::Off);
+        assert!("turbo".parse::<StealPolicy>().is_err());
+        assert!(!StealPolicy::Off.steals());
+        assert!(StealPolicy::Idle.steals());
+        assert!(StealPolicy::Aggressive.steals());
+    }
+
+    #[test]
+    fn victim_is_deepest_nonempty_sibling() {
+        assert_eq!(choose_victim(&[0, 3, 5], 0), Some(2));
+        assert_eq!(choose_victim(&[9, 3, 5], 0), Some(2), "own depth never matters");
+        assert_eq!(choose_victim(&[1, 0, 0], 0), None, "siblings empty");
+        assert_eq!(choose_victim(&[0, 0], 1), None);
+        // deterministic tie-break: highest index
+        assert_eq!(choose_victim(&[0, 4, 4], 0), Some(2));
+    }
+}

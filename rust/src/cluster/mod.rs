@@ -86,7 +86,13 @@
 //!    Entries carry the owner id of the scheduler that inserted them;
 //!    under a coordinator-wide [`SharedWeightCache`] a hit on a sibling's
 //!    entry is a `shared_hit` (the cross-worker reuse the shared store
-//!    exists for).
+//!    exists for). Admission is eviction-aware: with
+//!    [`CacheConfig::protect`] set (`--cache-protect`), an insert cannot
+//!    evict a *sibling's* entry hit within the last `protect` lookups —
+//!    when everything else is protected the inserter's own fresh entry is
+//!    the victim, so one worker's streaming trace cannot flush the other
+//!    workers' hot projection tiles (and protection can never block an
+//!    owner's own LRU churn).
 
 pub mod partitioner;
 pub mod reducer;

@@ -150,9 +150,17 @@ impl ClusterConfig {
         ClusterConfig { split, ..self }
     }
 
-    /// The same configuration with a weight cache of `capacity` entries.
+    /// The same configuration with a weight cache of `capacity` entries
+    /// (any configured eviction-protection window is preserved).
     pub fn with_cache(self, capacity: usize) -> ClusterConfig {
-        ClusterConfig { cache: CacheConfig { capacity }, ..self }
+        ClusterConfig { cache: CacheConfig { capacity, ..self.cache }, ..self }
+    }
+
+    /// The same configuration with the cache's cross-owner
+    /// eviction-protection window set to `protect` lookups (see
+    /// [`CacheConfig::protect`]; 0 = plain LRU).
+    pub fn with_cache_protect(self, protect: usize) -> ClusterConfig {
+        ClusterConfig { cache: CacheConfig { protect, ..self.cache }, ..self }
     }
 
     /// The same configuration with a different shard dispatch engine.

@@ -1100,7 +1100,7 @@ mod tests {
         let mut rng = Rng::seeded(65);
         let a = Mat::random(&mut rng, 32, 16, 8);
         let b = Mat::random(&mut rng, 16, 16, 2);
-        let store = SharedWeightCache::new(crate::cluster::CacheConfig { capacity: 16 });
+        let store = SharedWeightCache::new(crate::cluster::CacheConfig { capacity: 16, ..Default::default() });
         let cfg = ClusterConfig::with_cores(1).with_cache(16);
         let mut first = ClusterScheduler::with_shared_cache(
             Architecture::Adip,

@@ -51,6 +51,17 @@ use crate::sim::CoSimResult;
 pub struct CacheConfig {
     /// Maximum live entries before LRU eviction; 0 = caching off.
     pub capacity: usize,
+    /// Eviction-protection window in **lookups**: an entry that was hit
+    /// within the last `protect` lookups cannot be evicted by a
+    /// *different* owner's insert (0 = plain LRU). This is the
+    /// eviction-aware admission policy for the shared store: one worker's
+    /// streaming trace (endless one-shot inserts) cannot flush a sibling's
+    /// hot projection tiles — when every other entry is protected, the
+    /// streamer's own newest entry is the eviction victim, i.e. the
+    /// insert is effectively refused admission. An owner always remains
+    /// free to evict its *own* entries, so a single-owner cache degrades
+    /// to plain LRU and the protection can never deadlock capacity.
+    pub protect: usize,
 }
 
 impl CacheConfig {
@@ -144,6 +155,9 @@ struct Entry {
     /// Which registered owner (scheduler) inserted this entry — a hit by
     /// any *other* owner is a shared (cross-worker) hit.
     owner: u64,
+    /// Value of the store's lookup counter when this entry was last hit
+    /// (0 = never). Drives the cross-owner eviction protection window.
+    last_hit_lookup: u64,
 }
 
 /// LRU map from weight-tile fingerprints to shard execution results.
@@ -151,13 +165,16 @@ pub struct WeightCache {
     cfg: CacheConfig,
     map: HashMap<WeightKey, Entry>,
     clock: u64,
+    /// Lookup calls served so far (the protection window's time base —
+    /// distinct from `clock`, which also advances on inserts).
+    lookups: u64,
     stats: CacheStats,
 }
 
 impl WeightCache {
     /// Empty cache under `cfg`.
     pub fn new(cfg: CacheConfig) -> WeightCache {
-        WeightCache { cfg, map: HashMap::new(), clock: 0, stats: CacheStats::default() }
+        WeightCache { cfg, map: HashMap::new(), clock: 0, lookups: 0, stats: CacheStats::default() }
     }
 
     /// Whether lookups can ever hit.
@@ -188,9 +205,11 @@ impl WeightCache {
         }
         let key = WeightKey { weight_fp, act_fp, mode, runtime_interleave };
         self.clock += 1;
+        self.lookups += 1;
         match self.map.get_mut(&key) {
             Some(e) => {
                 e.stamp = self.clock;
+                e.last_hit_lookup = self.lookups;
                 self.stats.hits += 1;
                 let cross_owner = e.owner != requester;
                 if cross_owner {
@@ -225,19 +244,37 @@ impl WeightCache {
         // A same-key insert (duplicate shards in one run, all probed before
         // any executes — or sibling workers racing on one request) replaces
         // a bit-identical result — not an eviction.
-        self.map.insert(key, Entry { result: Arc::new(result), stamp: self.clock, owner });
+        self.map.insert(
+            key,
+            Entry { result: Arc::new(result), stamp: self.clock, owner, last_hit_lookup: 0 },
+        );
         let mut evicted = 0;
         while self.map.len() > self.cfg.capacity {
             // O(capacity) victim scan — accepted: capacities are small
             // (≤ ~512) and the scan is dwarfed by the operand hashing a
             // miss already paid; revisit with an ordered index if
             // capacities grow.
+            //
+            // Eviction-aware admission: a *sibling's* entry hit within the
+            // last `protect` lookups is off-limits to this owner's insert.
+            // The just-inserted entry is always a candidate (it is our own
+            // and has never been hit), so when everything else is
+            // protected, the newcomer itself is the LRU-by-stamp victim —
+            // the insert refuses admission rather than flushing hot tiles.
+            let protect = self.cfg.protect as i64;
+            let lookups = self.lookups;
             let lru = *self
                 .map
                 .iter()
+                .filter(|(_, e)| {
+                    !(protect > 0
+                        && e.owner != owner
+                        && e.last_hit_lookup > 0
+                        && (lookups as i64 - e.last_hit_lookup as i64) < protect)
+                })
                 .min_by_key(|(_, e)| e.stamp)
                 .map(|(k, _)| k)
-                .expect("non-empty over-capacity map");
+                .expect("the inserter's own fresh entry is always evictable");
             self.map.remove(&lru);
             self.stats.evictions += 1;
             evicted += 1;
@@ -360,7 +397,7 @@ mod tests {
 
     #[test]
     fn hit_requires_matching_activation() {
-        let mut c = WeightCache::new(CacheConfig { capacity: 4 });
+        let mut c = WeightCache::new(CacheConfig { capacity: 4, ..Default::default() });
         c.insert(ME, 1, 100, PrecisionMode::W2, false, result(10));
         assert!(c.lookup(ME, 1, 100, PrecisionMode::W2, false).is_some());
         assert!(c.lookup(ME, 1, 200, PrecisionMode::W2, false).is_none(), "other activation");
@@ -374,7 +411,7 @@ mod tests {
 
     #[test]
     fn cross_owner_hits_are_counted_as_shared() {
-        let mut c = WeightCache::new(CacheConfig { capacity: 4 });
+        let mut c = WeightCache::new(CacheConfig { capacity: 4, ..Default::default() });
         c.insert(7, 1, 1, PrecisionMode::W2, false, result(5));
         let (_, cross) = c.lookup(7, 1, 1, PrecisionMode::W2, false).unwrap();
         assert!(!cross, "owner re-hits its own entry");
@@ -387,7 +424,7 @@ mod tests {
 
     #[test]
     fn lru_eviction_under_capacity_pressure() {
-        let mut c = WeightCache::new(CacheConfig { capacity: 2 });
+        let mut c = WeightCache::new(CacheConfig { capacity: 2, ..Default::default() });
         assert_eq!(c.insert(ME, 1, 1, PrecisionMode::W8, false, result(1)), 0);
         assert_eq!(c.insert(ME, 2, 1, PrecisionMode::W8, false, result(2)), 0);
         assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some()); // touch 1: 2 is now LRU
@@ -411,7 +448,7 @@ mod tests {
         // The M-split shape: every shard's weight slice is the same full
         // copy of B (equal weight_fp) while activation slices differ —
         // each shard must get its own entry, not displace its siblings.
-        let mut c = WeightCache::new(CacheConfig { capacity: 8 });
+        let mut c = WeightCache::new(CacheConfig { capacity: 8, ..Default::default() });
         c.insert(ME, 7, 100, PrecisionMode::W2, false, result(1));
         c.insert(ME, 7, 200, PrecisionMode::W2, false, result(2));
         assert_eq!(c.stats().evictions, 0);
@@ -419,6 +456,64 @@ mod tests {
         assert!(c.lookup(ME, 7, 100, PrecisionMode::W2, false).is_some());
         assert!(c.lookup(ME, 7, 200, PrecisionMode::W2, false).is_some());
         assert_eq!(c.stats().hits, 2);
+    }
+
+    #[test]
+    fn protect_window_shields_siblings_hot_entries_from_streaming() {
+        // Owner A's hot entry (hit recently) must survive owner B's
+        // streaming inserts: B's own newest entries become the victims
+        // (admission effectively refused), so A keeps hitting.
+        let mut c = WeightCache::new(CacheConfig { capacity: 2, protect: 100 });
+        c.insert(1, 10, 1, PrecisionMode::W2, false, result(1));
+        assert!(c.lookup(1, 10, 1, PrecisionMode::W2, false).is_some(), "warm A's entry");
+        for i in 0..20u128 {
+            // B streams one-shot entries; each lookup misses, each insert
+            // overflows capacity
+            assert!(c.lookup(2, 100 + i, 1, PrecisionMode::W2, false).is_none());
+            c.insert(2, 100 + i, 1, PrecisionMode::W2, false, result(2));
+        }
+        assert!(
+            c.lookup(1, 10, 1, PrecisionMode::W2, false).is_some(),
+            "A's hot entry must not be flushed by B's stream"
+        );
+        assert_eq!(c.stats().entries, 2);
+        // ... but an entry that was never hit has no protection
+        let mut plain = WeightCache::new(CacheConfig { capacity: 2, protect: 100 });
+        plain.insert(1, 10, 1, PrecisionMode::W2, false, result(1));
+        for i in 0..3u128 {
+            plain.insert(2, 100 + i, 1, PrecisionMode::W2, false, result(2));
+        }
+        assert!(plain.lookup(1, 10, 1, PrecisionMode::W2, false).is_none(), "never-hit: plain LRU");
+    }
+
+    #[test]
+    fn protect_window_expires_after_w_lookups() {
+        let mut c = WeightCache::new(CacheConfig { capacity: 2, protect: 4 });
+        c.insert(1, 10, 1, PrecisionMode::W2, false, result(1));
+        assert!(c.lookup(1, 10, 1, PrecisionMode::W2, false).is_some());
+        // push the hit out of the 4-lookup window with unrelated misses
+        for i in 0..6u128 {
+            assert!(c.lookup(2, 500 + i, 1, PrecisionMode::W2, false).is_none());
+        }
+        c.insert(2, 100, 1, PrecisionMode::W2, false, result(2));
+        c.insert(2, 101, 1, PrecisionMode::W2, false, result(2));
+        assert!(
+            c.lookup(1, 10, 1, PrecisionMode::W2, false).is_none(),
+            "protection lapsed: the stale entry evicts normally"
+        );
+    }
+
+    #[test]
+    fn protect_never_blocks_an_owners_own_evictions() {
+        // single owner: protection must degrade to plain LRU
+        let mut c = WeightCache::new(CacheConfig { capacity: 2, protect: 1000 });
+        c.insert(ME, 1, 1, PrecisionMode::W2, false, result(1));
+        assert!(c.lookup(ME, 1, 1, PrecisionMode::W2, false).is_some());
+        c.insert(ME, 2, 1, PrecisionMode::W2, false, result(2));
+        c.insert(ME, 3, 1, PrecisionMode::W2, false, result(3));
+        assert_eq!(c.stats().entries, 2);
+        assert_eq!(c.stats().evictions, 1);
+        assert!(c.lookup(ME, 3, 1, PrecisionMode::W2, false).is_some(), "newest admitted");
     }
 
     #[test]
@@ -441,7 +536,7 @@ mod tests {
 
     #[test]
     fn stats_delta() {
-        let mut c = WeightCache::new(CacheConfig { capacity: 2 });
+        let mut c = WeightCache::new(CacheConfig { capacity: 2, ..Default::default() });
         c.insert(ME, 1, 1, PrecisionMode::W8, false, result(1));
         let before = c.stats();
         assert!(c.lookup(ME, 1, 1, PrecisionMode::W8, false).is_some());
@@ -452,7 +547,7 @@ mod tests {
 
     #[test]
     fn shared_store_clones_share_entries_and_ids_stay_unique() {
-        let store = SharedWeightCache::new(CacheConfig { capacity: 4 });
+        let store = SharedWeightCache::new(CacheConfig { capacity: 4, ..Default::default() });
         let a = store.register();
         let b = store.clone().register();
         assert_ne!(a, b, "every attached scheduler gets its own owner id");

@@ -88,6 +88,49 @@ impl Default for Lane {
     }
 }
 
+/// What the deadline-shedding policy decides for one request at
+/// batch-formation time (see [`shed_verdict`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedVerdict {
+    /// Deadline absent or still achievable: schedule normally.
+    Keep,
+    /// Deadline hopeless but the class is Interactive/Batch: execute
+    /// anyway, demoted to Background — the latency claim is forfeit, the
+    /// work is not.
+    Demote,
+    /// Deadline hopeless and the class is Background: fail fast with a
+    /// `shed:` error instead of burning a pass on work nobody can use in
+    /// time.
+    Shed,
+}
+
+/// Deadline shedding: decide whether a request whose **soft deadline is
+/// already hopeless at batch-formation time** should still execute.
+///
+/// `est_cycles` is the closed-form service estimate for the request's
+/// shape on the worker's cluster
+/// ([`crate::analytical::cluster::estimate_cluster`]); at the simulated
+/// 1 GHz clock one cycle is one nanosecond, so the deadline is hopeless
+/// when the remaining headroom (µs; negative = overdue) is below
+/// `est_cycles / 1000`. The estimate deliberately ignores host queueing —
+/// it is a *lower bound* on service, so a shed decision is conservative:
+/// anything shed could not have met its deadline even on an idle
+/// coordinator. Opt-in via `CoordinatorConfig::shed`; a soft deadline
+/// remains a pure ordering hint when shedding is off.
+pub fn shed_verdict(priority: Priority, deadline_us: i64, est_cycles: u64) -> ShedVerdict {
+    if deadline_us == i64::MAX {
+        return ShedVerdict::Keep; // no deadline
+    }
+    let est_us = i64::try_from(est_cycles / 1_000).unwrap_or(i64::MAX);
+    if deadline_us >= est_us {
+        return ShedVerdict::Keep;
+    }
+    match priority {
+        Priority::Background => ShedVerdict::Shed,
+        Priority::Interactive | Priority::Batch => ShedVerdict::Demote,
+    }
+}
+
 /// One window's batch plan: the batches in deterministic service order
 /// plus the aging bookkeeping.
 #[derive(Debug, Clone)]
@@ -393,6 +436,24 @@ mod tests {
         let order: Vec<usize> = plan.batches.iter().map(|b| b.members[0]).collect();
         assert_eq!(order, vec![1, 2, 0]);
         assert_eq!(plan.promotions, 0);
+    }
+
+    #[test]
+    fn shed_verdicts_by_class_and_headroom() {
+        use ShedVerdict::*;
+        // no deadline: always kept, however large the estimate
+        assert_eq!(shed_verdict(Priority::Background, i64::MAX, u64::MAX), Keep);
+        // achievable: 2 ms headroom vs 1 ms estimated service
+        assert_eq!(shed_verdict(Priority::Background, 2_000, 1_000_000), Keep);
+        // exact boundary is achievable (>=)
+        assert_eq!(shed_verdict(Priority::Interactive, 1_000, 1_000_000), Keep);
+        // hopeless: overdue or shorter than the service estimate
+        assert_eq!(shed_verdict(Priority::Background, 500, 1_000_000), Shed);
+        assert_eq!(shed_verdict(Priority::Background, -10, 1), Shed);
+        assert_eq!(shed_verdict(Priority::Interactive, 500, 1_000_000), Demote);
+        assert_eq!(shed_verdict(Priority::Batch, -10, 1), Demote);
+        // sub-µs estimates truncate to 0: any non-negative headroom keeps
+        assert_eq!(shed_verdict(Priority::Background, 0, 999), Keep);
     }
 
     #[test]

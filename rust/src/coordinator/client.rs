@@ -128,7 +128,12 @@ impl SubmitOptions {
 
     /// Soft deadline, relative to submit time. Within a class the batcher
     /// orders deadline-ascending (no deadline sorts last); an expired
-    /// deadline never cancels a request.
+    /// deadline never cancels a request — unless the coordinator opted
+    /// into deadline shedding (`CoordinatorConfig::shed`), in which case
+    /// a deadline that is already hopeless against the closed-form
+    /// service bound fails fast with a distinct `shed:` error
+    /// (Background) or demotes the request to Background
+    /// (Interactive/Batch). See `batcher::shed_verdict`.
     pub fn deadline(mut self, soft: Duration) -> SubmitOptions {
         self.deadline = Some(soft);
         self

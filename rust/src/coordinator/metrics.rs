@@ -10,6 +10,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::client::Priority;
 
+/// How many per-worker deque-depth gauges the balance fabric exports
+/// individually; workers beyond this (unrealistic for the simulated
+/// clusters here) are simply not gauged per-worker.
+pub const MAX_DEQUE_GAUGES: usize = 16;
+
 /// Nearest-rank percentile over an ascending-sorted, non-empty slice —
 /// the one index/rounding rule shared by [`Metrics::queue_percentile`]
 /// and the per-class series in [`Metrics::render`].
@@ -111,6 +116,37 @@ pub struct Metrics {
     pub prepared_batches: AtomicU64,
     /// Requests promoted at least one class by the batcher's aging rule.
     pub aging_promotions: AtomicU64,
+    /// Requests failed fast at batch-formation time because their soft
+    /// deadline was already hopeless (also counted in `failed`).
+    pub shed: AtomicU64,
+    /// Deadline-hopeless Interactive/Batch requests demoted to Background
+    /// instead of shed. They still execute, re-classed end-to-end: their
+    /// completion and queue-wait series count as Background (so their
+    /// deliberately long waits cannot pollute the SLO of the class they
+    /// forfeited), while `class_accepted` keeps the submitted class — the
+    /// gap between the two is exactly this counter.
+    pub deadline_demotions: AtomicU64,
+    /// Batches taken from a sibling worker's deque by the balance
+    /// fabric's work-stealing (includes Aggressive re-homing).
+    pub steals: AtomicU64,
+    /// Pop attempts where an idle worker scanned every sibling deque and
+    /// found nothing to steal (once per pop, never during the shutdown
+    /// drain). Steals under the fabric lock cannot race, so this is an
+    /// idleness signal — spare capacity the trace never used — not steal
+    /// contention.
+    pub steal_failures: AtomicU64,
+    /// Cross-request coalesced passes executed (≥ 2 member batches merged
+    /// into one shared-weight stacked pass).
+    pub coalesced_passes: AtomicU64,
+    /// Member batches that executed inside a coalesced pass.
+    pub coalesced_members: AtomicU64,
+    /// Workers whose balance-fabric deque depth is gauged individually
+    /// (`min(workers, MAX_DEQUE_GAUGES)`; 0 when no coordinator runs).
+    pub balance_workers: AtomicU64,
+    /// Per-worker deque depth gauges (indices `0..balance_workers`).
+    pub worker_deque_depth: [AtomicU64; MAX_DEQUE_GAUGES],
+    /// Batches queued in the fabric's global injector (gauge).
+    pub injector_depth: AtomicU64,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
@@ -324,6 +360,29 @@ impl Metrics {
             self.cache_evictions.load(Ordering::Relaxed),
         ));
         s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
+        s.push_str(&c("shed_total", self.shed.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "deadline_demotions_total",
+            self.deadline_demotions.load(Ordering::Relaxed),
+        ));
+        s.push_str(&c("steals_total", self.steals.load(Ordering::Relaxed)));
+        s.push_str(&c("steal_failures_total", self.steal_failures.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "coalesced_passes_total",
+            self.coalesced_passes.load(Ordering::Relaxed),
+        ));
+        s.push_str(&c(
+            "coalesced_members_total",
+            self.coalesced_members.load(Ordering::Relaxed),
+        ));
+        s.push_str(&c("injector_depth", self.injector_depth.load(Ordering::Relaxed)));
+        let gauged = (self.balance_workers.load(Ordering::Relaxed) as usize).min(MAX_DEQUE_GAUGES);
+        for w in 0..gauged {
+            s.push_str(&format!(
+                "adip_worker_deque_depth{{worker=\"{w}\"}} {}\n",
+                self.worker_deque_depth[w].load(Ordering::Relaxed)
+            ));
+        }
         s.push_str(&c("prepared_depth", self.prepared_depth.load(Ordering::Relaxed)));
         s.push_str(&c("prepared_batches_total", self.prepared_batches.load(Ordering::Relaxed)));
         s.push_str(&c("aging_promotions_total", self.aging_promotions.load(Ordering::Relaxed)));
@@ -502,6 +561,37 @@ mod tests {
         ] {
             assert!(text.contains(key), "{key} missing from:\n{text}");
         }
+    }
+
+    #[test]
+    fn balance_series_render_with_per_worker_labels() {
+        let m = Metrics::default();
+        m.shed.fetch_add(2, Ordering::Relaxed);
+        m.deadline_demotions.fetch_add(1, Ordering::Relaxed);
+        m.steals.fetch_add(7, Ordering::Relaxed);
+        m.steal_failures.fetch_add(3, Ordering::Relaxed);
+        m.coalesced_passes.fetch_add(4, Ordering::Relaxed);
+        m.coalesced_members.fetch_add(9, Ordering::Relaxed);
+        m.injector_depth.store(5, Ordering::Relaxed);
+        m.balance_workers.store(2, Ordering::Relaxed);
+        m.worker_deque_depth[0].store(11, Ordering::Relaxed);
+        m.worker_deque_depth[1].store(13, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains("adip_shed_total 2"), "{text}");
+        assert!(text.contains("adip_deadline_demotions_total 1"));
+        assert!(text.contains("adip_steals_total 7"));
+        assert!(text.contains("adip_steal_failures_total 3"));
+        assert!(text.contains("adip_coalesced_passes_total 4"));
+        assert!(text.contains("adip_coalesced_members_total 9"));
+        assert!(text.contains("adip_injector_depth 5"));
+        assert!(text.contains("adip_worker_deque_depth{worker=\"0\"} 11"));
+        assert!(text.contains("adip_worker_deque_depth{worker=\"1\"} 13"));
+        // gauges only render for registered workers
+        assert!(!text.contains("adip_worker_deque_depth{worker=\"2\"}"));
+        // with no coordinator running, no per-worker series at all
+        let idle = Metrics::default().render();
+        assert!(!idle.contains("adip_worker_deque_depth{"));
+        assert!(idle.contains("adip_steals_total 0"));
     }
 
     #[test]

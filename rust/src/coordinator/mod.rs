@@ -21,10 +21,20 @@
 //!    prepare-stage thread per worker fingerprints operands into
 //!    `PreparedBatch`es queued ahead of execution — workers never idle
 //!    on host-side packing.
-//! 3. **Execute** — a pool of worker threads (one simulated cluster
-//!    each) runs the prepared batches through the co-simulator as ADiP's
-//!    asymmetric multi-matrix passes, returning exact numerics +
-//!    cycle/energy/memory accounting per request.
+//! 3. **Execute** — worker threads (one simulated cluster each) pull
+//!    batches off the coordinator-wide **balance fabric**
+//!    ([`crate::balance`]): formed batches land on their owner's deque,
+//!    and — policy permitting ([`StealPolicy`]) — an idle worker pops the
+//!    global injector or steals from the deepest sibling, so a skewed
+//!    trace can no longer idle whole clusters. Compatible batches from
+//!    *different* requests (byte-identical weight sets, same mode and
+//!    shape) may be coalesced into one asymmetric shared-input pass
+//!    ([`CoalesceConfig`]), with outputs and row-share accounting split
+//!    back per ticket. Execution runs through the co-simulator as ADiP's
+//!    multi-matrix passes, returning exact numerics + cycle/energy/memory
+//!    accounting per request. Opt-in **deadline shedding**
+//!    ([`shed_verdict`]) fails hopeless Background work fast with a
+//!    distinct `shed:` error and demotes hopeless higher classes.
 //!
 //! * [`client`] — [`Client`] / [`SubmitOptions`] / [`Ticket`] /
 //!   [`Priority`]: the public submission surface. The legacy
@@ -62,10 +72,11 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{form_batches, plan_batches, Batch, Lane, WindowPlan};
+pub use crate::balance::{CoalesceConfig, StealPolicy};
+pub use batcher::{form_batches, plan_batches, shed_verdict, Batch, Lane, ShedVerdict, WindowPlan};
 pub use client::{Client, Priority, SubmitOptions, Ticket};
 pub use metrics::Metrics;
 pub use precision::select_mode;
-pub use request::{MatmulRequest, RequestId, RequestOutcome, ResponseMetrics};
+pub use request::{MatmulRequest, RequestId, RequestOutcome, ResponseMetrics, SHED_ERROR_PREFIX};
 pub use scheduler::CoreScheduler;
 pub use server::{Coordinator, CoordinatorConfig, PrepareMode};

@@ -19,7 +19,7 @@
 //! operands; `rust/tests/integration_pipeline.rs` asserts it).
 
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{Receiver, SyncSender};
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -41,6 +41,12 @@ pub(crate) struct BatchWork {
     /// Global batch-formation sequence number (the deterministic service
     /// order; stamped into every member's `ResponseMetrics`).
     pub batch_seq: u64,
+    /// Per-weight fingerprints memoized push-side by the balance fabric's
+    /// coalesce-key computation (`None` when coalescing is off):
+    /// [`prepare_batch`] reuses them so the weight set is never hashed
+    /// twice. Crate-internal trust, same policy as
+    /// `PreparedFingerprints` — debug builds re-verify.
+    pub weight_fps: Option<Vec<u128>>,
 }
 
 /// A batch with all host-side preparation done, queued ahead of
@@ -63,6 +69,41 @@ pub(crate) enum WorkMsg {
     Prepared(PreparedBatch),
 }
 
+impl WorkMsg {
+    /// The member envelopes, whichever side of preparation the batch is on
+    /// (the balance fabric's coalescer keys on them).
+    pub(crate) fn envelopes(&self) -> &[Envelope] {
+        match self {
+            WorkMsg::Raw(w) => &w.envelopes,
+            WorkMsg::Prepared(p) => &p.envelopes,
+        }
+    }
+
+    /// The batch's fixed execution mode.
+    pub(crate) fn mode(&self) -> PrecisionMode {
+        match self {
+            WorkMsg::Raw(w) => w.mode,
+            WorkMsg::Prepared(p) => p.mode,
+        }
+    }
+
+    /// Whether the batch needs runtime (multi-bank) interleaving.
+    pub(crate) fn runtime_interleave(&self) -> bool {
+        match self {
+            WorkMsg::Raw(w) => w.runtime_interleave,
+            WorkMsg::Prepared(p) => p.runtime_interleave,
+        }
+    }
+
+    /// Prepared operand fingerprints, when the prepare stage hashed them.
+    pub(crate) fn prepared_fps(&self) -> Option<&PreparedFingerprints> {
+        match self {
+            WorkMsg::Raw(_) => None,
+            WorkMsg::Prepared(p) => p.fps.as_ref(),
+        }
+    }
+}
+
 /// Do the host-side preparation of one batch: when the weight cache
 /// needs them, hash the operand fingerprints (the mode was already
 /// selected at batch formation — it is the fusion key's mode and is
@@ -77,12 +118,25 @@ pub(crate) fn prepare_batch(
     let first = &work.envelopes[0].req;
     let fps = cache_enabled.then(|| PreparedFingerprints {
         act: fingerprint(&[first.a.as_ref()]),
-        weights: work
-            .envelopes
-            .iter()
-            .flat_map(|e| e.req.bs.iter())
-            .map(|b| fingerprint(&[b.as_ref()]))
-            .collect(),
+        // reuse weight fingerprints the coalesce key already computed
+        // push-side (hash-once); only the activation is hashed here
+        weights: match &work.weight_fps {
+            Some(w) => {
+                debug_assert!(
+                    w.iter()
+                        .zip(work.envelopes.iter().flat_map(|e| e.req.bs.iter()))
+                        .all(|(&f, b)| f == fingerprint(&[b.as_ref()])),
+                    "stale memoized weight fingerprints"
+                );
+                w.clone()
+            }
+            None => work
+                .envelopes
+                .iter()
+                .flat_map(|e| e.req.bs.iter())
+                .map(|b| fingerprint(&[b.as_ref()]))
+                .collect(),
+        },
     });
     metrics.record_prepare(t0.elapsed().as_secs_f64());
     PreparedBatch {
@@ -95,28 +149,28 @@ pub(crate) fn prepare_batch(
 }
 
 /// Body of one pipelined prepare thread: pull raw batches from the
-/// router, prepare them, and queue them ahead of the paired worker. The
-/// bounded output queue applies backpressure to the stage (and through
-/// it, to the router); `prepared_depth` counts batches between the two.
+/// router, prepare them, and queue them on the balance fabric under this
+/// stage's worker as owner. The fabric's bounded global capacity applies
+/// backpressure to the stage (and through it, to the router);
+/// `prepared_depth` counts batches prepared ahead of execution.
 ///
 /// Shutdown chain: the router dropping its sender ends `rx` — the loop
 /// drains every remaining raw batch first (prepared work is never
-/// dropped), then exits, dropping `tx` so the worker drains in turn.
+/// dropped), then exits; the coordinator closes the fabric only after
+/// every prepare thread is joined, so the workers drain in turn.
 pub(crate) fn prepare_loop(
     rx: Receiver<BatchWork>,
-    tx: SyncSender<WorkMsg>,
+    fabric: Arc<crate::balance::injector::Fabric>,
+    owner: usize,
     cache_enabled: bool,
     metrics: Arc<Metrics>,
 ) {
     while let Ok(work) = rx.recv() {
         let prepared = prepare_batch(work, cache_enabled, &metrics);
-        // counted before the (possibly blocking) send: a prepared batch
-        // waiting for queue room is exactly "prepared ahead of execution"
+        // counted before the (possibly blocking) push: a prepared batch
+        // waiting for fabric room is exactly "prepared ahead of execution"
         metrics.prepared_depth.fetch_add(1, Ordering::Relaxed);
-        if tx.send(WorkMsg::Prepared(prepared)).is_err() {
-            metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
-            return; // worker gone (only during teardown)
-        }
+        fabric.push(owner, WorkMsg::Prepared(prepared));
     }
 }
 
@@ -159,6 +213,7 @@ mod tests {
             mode: PrecisionMode::W2,
             runtime_interleave: false,
             batch_seq: 7,
+            weight_fps: None,
         };
         let expect_act = fingerprint(&[work.envelopes[0].req.a.as_ref()]);
         let expect_ws: Vec<u128> = work
@@ -188,6 +243,7 @@ mod tests {
             mode: PrecisionMode::W8,
             runtime_interleave: true,
             batch_seq: 0,
+            weight_fps: None,
         };
         let pb = prepare_batch(work, false, &metrics);
         assert!(pb.fps.is_none());

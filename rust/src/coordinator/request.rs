@@ -122,6 +122,12 @@ pub struct ResponseMetrics {
     pub batch_seq: u64,
 }
 
+/// Error prefix of outcomes failed fast by the deadline-shedding policy
+/// (see `batcher::shed_verdict`): a `shed:` error means the request never
+/// executed because its soft deadline was already hopeless at
+/// batch-formation time.
+pub const SHED_ERROR_PREFIX: &str = "shed:";
+
 /// Completion message for one request.
 #[derive(Debug)]
 pub struct RequestOutcome {
@@ -131,6 +137,14 @@ pub struct RequestOutcome {
     pub result: Result<Vec<Mat>, String>,
     /// Accounting (valid also for failed requests where meaningful).
     pub metrics: ResponseMetrics,
+}
+
+impl RequestOutcome {
+    /// Whether this request was shed (failed fast on a hopeless soft
+    /// deadline) rather than executed — the distinct `Shed` failure class.
+    pub fn was_shed(&self) -> bool {
+        matches!(&self.result, Err(e) if e.starts_with(SHED_ERROR_PREFIX))
+    }
 }
 
 /// Internal envelope: request + response channel + scheduling lane

@@ -31,7 +31,15 @@
 //!   persistent pool of per-core threads, see `cluster/mod.rs`) and,
 //!   unless `shared_weight_cache` is disabled, all workers share one
 //!   coordinator-wide [`SharedWeightCache`] store
-//!   (`adip_weight_cache_shared_hits_total`).
+//!   (`adip_weight_cache_shared_hits_total`). Workers pull from the
+//!   coordinator-wide **balance fabric** ([`crate::balance`]) instead of
+//!   private channels: the router/prepare stages push each batch to its
+//!   round-robin owner's deque, and — per [`StealPolicy`] — an idle
+//!   worker pops the global injector or steals from the deepest sibling,
+//!   while compatible same-weight batches from different requests may be
+//!   coalesced into one stacked shared-input pass ([`CoalesceConfig`]).
+//!   With the default `StealPolicy::Off` and coalescing disabled the
+//!   fabric reproduces the legacy static dispatch exactly.
 //!
 //! Batch formation is priority-aware ([`plan_batches`]): Interactive
 //! ahead of Batch ahead of Background, deadline-ascending within a class,
@@ -48,14 +56,27 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::arch::{Architecture, Backend};
-use crate::cluster::{ClusterConfig, ClusterScheduler, PoolMode, SharedWeightCache};
+use crate::analytical::cluster::estimate_cluster;
+use crate::analytical::gemm::{GemmShape, MemoryPolicy};
+use crate::arch::{ArchConfig, Architecture, Backend};
+use crate::balance::injector::Fabric;
+use crate::balance::split_back::split_back;
+use crate::balance::{CoalesceConfig, StealPolicy};
+use crate::cluster::{
+    fingerprint, ClusterConfig, ClusterScheduler, PoolMode, PreparedFingerprints,
+    SharedWeightCache,
+};
+use crate::dataflow::Mat;
 
-use super::batcher::{plan_batches, Lane};
-use super::client::{Client, Gate, SubmitOptions, Ticket};
-use super::metrics::Metrics;
+use super::batcher::{plan_batches, shed_verdict, Lane, ShedVerdict};
+use super::client::{Client, Gate, Priority, SubmitOptions, Ticket};
+use super::metrics::{Metrics, MAX_DEQUE_GAUGES};
 use super::prepare::{prepare_batch, prepare_loop, BatchWork, PreparedBatch, WorkMsg};
-use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
+use super::request::{
+    Envelope, MatmulRequest, RequestId, RequestOutcome, SHED_ERROR_PREFIX,
+};
+use super::scheduler::{attribute_members, MemberResult};
+use super::select_mode;
 
 /// Where batch preparation runs (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -142,6 +163,23 @@ pub struct CoordinatorConfig {
     /// interval should sit well above the burst waits you still want
     /// strictly class-ordered.
     pub aging: Duration,
+    /// Work-stealing across workers' deques on the balance fabric
+    /// (default [`StealPolicy::Off`] — the static legacy dispatch; see
+    /// `balance/mod.rs`). Stealing can never change outputs, and with the
+    /// weight cache disabled cannot change per-ticket accounting either.
+    pub steal: StealPolicy,
+    /// Cross-request shard coalescing: merge queued batches with
+    /// byte-identical weight sets (same precision mode and `K`/`N` shape)
+    /// into one asymmetric shared-input pass, attributing accounting back
+    /// by row share (default off; see `balance/coalescer.rs`).
+    pub coalesce: CoalesceConfig,
+    /// Deadline shedding: at batch-formation time, fail-fast Background
+    /// requests whose soft deadline is already hopeless (per the
+    /// closed-form `estimate_cluster` service bound) with a distinct
+    /// `shed:` error, and demote hopeless Interactive/Batch requests to
+    /// Background. Default off — a soft deadline is then purely an
+    /// ordering hint, as before.
+    pub shed: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -158,21 +196,26 @@ impl Default for CoordinatorConfig {
             prepare: PrepareMode::default(),
             prepared_capacity: 4,
             aging: Duration::from_millis(100),
+            steal: StealPolicy::Off,
+            coalesce: CoalesceConfig::default(),
+            shed: false,
         }
     }
 }
 
 /// Router-side handle to one worker's pipeline: either through its
-/// prepare stage (pipelined) or straight to the worker (inline).
+/// prepare stage (pipelined) or straight onto the balance fabric
+/// (inline/direct, tagged with the owning worker).
 enum StageTx {
     Prepare(SyncSender<BatchWork>),
-    Direct(SyncSender<WorkMsg>),
+    Direct(usize),
 }
 
 /// The running coordinator.
 pub struct Coordinator {
     gate: Arc<Gate>,
     client: Client,
+    fabric: Arc<Fabric>,
     router: Option<JoinHandle<()>>,
     preparers: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
@@ -203,19 +246,34 @@ impl Coordinator {
         let shared_cache =
             cfg.shared_weight_cache.then(|| SharedWeightCache::new(cfg.cluster.cache));
 
+        // The balance fabric replaces the per-worker work channels: one
+        // global injector + per-worker deques, bounded at the same total
+        // the channel bounds used to give (workers × prepared_capacity),
+        // so the backpressure chain toward the router is unchanged.
+        let fabric = Fabric::new(
+            cfg.workers,
+            cfg.workers * cfg.prepared_capacity,
+            cfg.steal,
+            cfg.coalesce,
+            metrics.clone(),
+        );
+        metrics
+            .balance_workers
+            .store(cfg.workers.min(MAX_DEQUE_GAUGES) as u64, Ordering::Relaxed);
+
         let mut stage_txs = Vec::new();
         let mut preparers = Vec::new();
         let mut workers = Vec::new();
         for w in 0..cfg.workers {
-            let (work_tx, work_rx) = sync_channel::<WorkMsg>(cfg.prepared_capacity);
             let m = metrics.clone();
             let cache = shared_cache
                 .clone()
                 .unwrap_or_else(|| SharedWeightCache::new(cfg.cluster.cache));
+            let f = fabric.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adip-worker-{w}"))
-                    .spawn(move || worker_loop(work_rx, cfg, m, cache))
+                    .spawn(move || worker_loop(w, f, cfg, m, cache))
                     .expect("spawn worker"),
             );
             match cfg.prepare {
@@ -227,29 +285,31 @@ impl Coordinator {
                 PrepareMode::Pipelined if cfg.cluster.cache.enabled() => {
                     let (prep_tx, prep_rx) = sync_channel::<BatchWork>(cfg.prepared_capacity);
                     let m = metrics.clone();
+                    let f = fabric.clone();
                     preparers.push(
                         std::thread::Builder::new()
                             .name(format!("adip-prepare-{w}"))
-                            .spawn(move || prepare_loop(prep_rx, work_tx, true, m))
+                            .spawn(move || prepare_loop(prep_rx, f, w, true, m))
                             .expect("spawn prepare stage"),
                     );
                     stage_txs.push(StageTx::Prepare(prep_tx));
                 }
                 PrepareMode::Pipelined | PrepareMode::Inline => {
-                    stage_txs.push(StageTx::Direct(work_tx))
+                    stage_txs.push(StageTx::Direct(w))
                 }
             }
         }
 
         let m = metrics.clone();
+        let f = fabric.clone();
         let router = std::thread::Builder::new()
             .name("adip-router".into())
-            .spawn(move || router_loop(ingress_rx, stage_txs, cfg, m))
+            .spawn(move || router_loop(ingress_rx, stage_txs, f, cfg, m))
             .expect("spawn router");
 
         let gate = Arc::new(Gate::new(metrics, ingress_tx));
         let client = Client::new(gate.clone());
-        Coordinator { gate, client, router: Some(router), preparers, workers }
+        Coordinator { gate, client, fabric, router: Some(router), preparers, workers }
     }
 
     /// A cheap, cloneable submission handle. Handles stay valid across
@@ -283,7 +343,9 @@ impl Coordinator {
     }
 
     /// Stop accepting requests, drain in-flight work through all three
-    /// stages (router → prepare → workers), join every thread.
+    /// stages (router → prepare → fabric → workers), join every thread.
+    /// The fabric is closed only after every producer has been joined, so
+    /// workers drain every queued batch — nothing admitted is dropped.
     pub fn shutdown(mut self) {
         self.gate.close();
         if let Some(r) = self.router.take() {
@@ -292,6 +354,7 @@ impl Coordinator {
         for p in self.preparers.drain(..) {
             let _ = p.join();
         }
+        self.fabric.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -301,6 +364,7 @@ impl Coordinator {
 fn router_loop(
     ingress: Receiver<Envelope>,
     stage_txs: Vec<StageTx>,
+    fabric: Arc<Fabric>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
 ) {
@@ -327,7 +391,7 @@ fn router_loop(
         // scheduling lanes are snapshotted once per window so the plan is
         // a pure (deterministic) function of its inputs
         let now = Instant::now();
-        let lanes: Vec<Lane> = window
+        let mut lanes: Vec<Lane> = window
             .iter()
             .map(|e| Lane {
                 priority: e.priority,
@@ -350,6 +414,74 @@ fn router_loop(
                 .unwrap_or(u64::MAX),
             })
             .collect();
+
+        // Deadline shedding (opt-in): a request whose soft deadline is
+        // already hopeless against the closed-form service bound either
+        // fails fast here (Background → distinct `shed:` error, no pass
+        // burned) or forfeits its latency claim (Interactive/Batch →
+        // demoted to Background for this window's plan). The estimate is
+        // a lower bound on service, so shedding is conservative.
+        if cfg.shed {
+            let acfg = ArchConfig::with_n(cfg.n);
+            let (mut kept_w, mut kept_l) =
+                (Vec::with_capacity(window.len()), Vec::with_capacity(lanes.len()));
+            for (mut env, mut lane) in window.into_iter().zip(lanes) {
+                if lane.deadline_us != i64::MAX {
+                    let r = &env.req;
+                    let mode = select_mode(r.weight_bits, r.act_act);
+                    let est = estimate_cluster(
+                        cfg.arch,
+                        &acfg,
+                        GemmShape::new(r.a.rows(), r.a.cols(), r.bs[0].cols()),
+                        r.bs.len(),
+                        mode,
+                        &cfg.cluster,
+                        MemoryPolicy::default(),
+                    );
+                    match shed_verdict(lane.priority, lane.deadline_us, est.cycles) {
+                        ShedVerdict::Keep => {}
+                        ShedVerdict::Demote => {
+                            // re-class end-to-end: the lane (so this
+                            // window's plan orders it as Background), the
+                            // lane's age (so the batcher's aging rule
+                            // cannot promote it right back within the
+                            // same plan), and the envelope (so per-class
+                            // latency metrics attribute its deliberately
+                            // long wait to Background, not to the class
+                            // whose SLO it forfeited)
+                            lane.priority = Priority::Background;
+                            lane.age_us = 0;
+                            env.priority = Priority::Background;
+                            metrics.deadline_demotions.fetch_add(1, Ordering::Relaxed);
+                        }
+                        ShedVerdict::Shed => {
+                            metrics.shed.fetch_add(1, Ordering::Relaxed);
+                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            let _ = env.reply.send(RequestOutcome {
+                                id: env.req.id,
+                                result: Err(format!(
+                                    "{SHED_ERROR_PREFIX} soft deadline hopeless at batch \
+                                     formation (needs ~{} µs simulated service, {} µs \
+                                     headroom)",
+                                    est.cycles / 1_000,
+                                    lane.deadline_us
+                                )),
+                                metrics: Default::default(),
+                            });
+                            continue;
+                        }
+                    }
+                }
+                kept_w.push(env);
+                kept_l.push(lane);
+            }
+            window = kept_w;
+            lanes = kept_l;
+            if window.is_empty() {
+                continue;
+            }
+        }
+
         let reqs: Vec<MatmulRequest> = window.iter().map(|e| e.req.clone()).collect();
         let plan = plan_batches(&reqs, &lanes, aging_us);
         if plan.promotions > 0 {
@@ -370,13 +502,19 @@ fn router_loop(
                 mode: b.mode,
                 runtime_interleave: b.runtime_interleave,
                 batch_seq,
+                weight_fps: None,
             };
             batch_seq += 1;
-            // round-robin dispatch; blocking send applies backpressure to
-            // the router (ingress queue keeps absorbing bursts)
+            // round-robin ownership; a blocking send/push applies
+            // backpressure to the router (ingress queue keeps absorbing
+            // bursts). The owner is only an affinity under stealing
+            // policies — an idle sibling may take the batch later.
             let delivered = match &stage_txs[next_stage % stage_txs.len()] {
                 StageTx::Prepare(tx) => tx.send(work).is_ok(),
-                StageTx::Direct(tx) => tx.send(WorkMsg::Raw(work)).is_ok(),
+                StageTx::Direct(owner) => {
+                    fabric.push(*owner, WorkMsg::Raw(work));
+                    true
+                }
             };
             if !delivered {
                 return; // pipeline gone
@@ -387,31 +525,57 @@ fn router_loop(
 }
 
 fn worker_loop(
-    rx: Receiver<WorkMsg>,
+    w: usize,
+    fabric: Arc<Fabric>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
     cache: SharedWeightCache,
 ) {
+    /// On any exit — normal drain or panic — report the worker down so
+    /// its queued batches re-home to the injector and producers redirect
+    /// there (a dead worker must degrade service, never wedge a blocked
+    /// `Fabric::push` and with it the router and shutdown).
+    struct DownGuard(Arc<Fabric>, usize);
+    impl Drop for DownGuard {
+        fn drop(&mut self) {
+            self.0.worker_down(self.1);
+        }
+    }
+    let _down = DownGuard(fabric.clone(), w);
     let mut core =
         ClusterScheduler::with_shared_cache(cfg.arch, cfg.n, cfg.backend, cfg.cluster, cache);
     let cache_enabled = cfg.cluster.cache.enabled();
     let mut cache_seen = core.cache_stats();
     let mut pool_seen = core.pool_stats();
-    while let Ok(msg) = rx.recv() {
-        let item: PreparedBatch = match msg {
-            WorkMsg::Prepared(p) => {
-                metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
-                p
-            }
-            // inline mode: the prepare work runs here, serialized with
-            // execution — the baseline the pipelined stage is gated
-            // against
-            WorkMsg::Raw(work) => prepare_batch(work, cache_enabled, &metrics),
-        };
+    while let Some(group) = fabric.pop(w) {
+        let mut prepared: Vec<PreparedBatch> = group
+            .into_iter()
+            .map(|msg| match msg {
+                WorkMsg::Prepared(p) => {
+                    metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
+                    p
+                }
+                // inline mode: the prepare work runs here, serialized with
+                // execution — the baseline the pipelined stage is gated
+                // against
+                WorkMsg::Raw(work) => prepare_batch(work, cache_enabled, &metrics),
+            })
+            .collect();
         let started = Instant::now();
-        let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
-        let outcome =
-            core.execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref());
+        let coalesced = prepared.len() > 1;
+        // Execute: a solo batch runs the existing prepared path; a
+        // coalesced group runs as one stacked shared-weight pass and is
+        // split back per member (see balance/{coalescer,split_back}.rs).
+        let executed: Vec<BatchOutcome> = if !coalesced {
+            let item = prepared.pop().expect("popped group is non-empty");
+            let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
+            let outcome = core
+                .execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref())
+                .map_err(|e| e.to_string());
+            vec![(item, outcome)]
+        } else {
+            execute_coalesced(&mut core, prepared, &metrics)
+        };
         // flush cache + pool activity regardless of batch outcome (a
         // failed batch may still have probed or populated the cache, or
         // dispatched shards before erroring)
@@ -427,41 +591,127 @@ fn worker_loop(
         if pd.dispatched + pd.worker_panics > 0 {
             metrics.record_pool(pd.dispatched, pd.queue_wait_s, pd.worker_panics);
         }
-        match outcome {
-            Ok(results) => {
-                let service = started.elapsed().as_secs_f64() / results.len() as f64;
-                for (env, mut res) in item.envelopes.iter().zip(results) {
-                    res.metrics.queue_seconds = (started - env.enqueued).as_secs_f64();
-                    res.metrics.service_seconds = service;
-                    res.metrics.batch_seq = item.batch_seq;
-                    metrics.record_completion(
-                        res.metrics.cycles,
-                        res.metrics.energy_j,
-                        res.metrics.memory.paper_total_bytes(),
-                        res.metrics.passes,
-                    );
-                    metrics.record_latency(
-                        res.metrics.queue_seconds,
-                        service,
-                        env.priority,
-                    );
-                    let _ = env.reply.send(RequestOutcome {
-                        id: env.req.id,
-                        result: Ok(res.outputs),
-                        metrics: res.metrics,
-                    });
+        let completed: usize =
+            executed.iter().map(|(_, o)| o.as_ref().map_or(0, Vec::len)).sum();
+        let service = started.elapsed().as_secs_f64() / completed.max(1) as f64;
+        for (item, outcome) in executed {
+            match outcome {
+                Ok(results) => {
+                    for (env, mut res) in item.envelopes.iter().zip(results) {
+                        res.metrics.queue_seconds = (started - env.enqueued).as_secs_f64();
+                        res.metrics.service_seconds = service;
+                        res.metrics.batch_seq = item.batch_seq;
+                        // a coalesced member executed in a merged pass even
+                        // if its own batch was a singleton
+                        res.metrics.batched |= coalesced;
+                        metrics.record_completion(
+                            res.metrics.cycles,
+                            res.metrics.energy_j,
+                            res.metrics.memory.paper_total_bytes(),
+                            res.metrics.passes,
+                        );
+                        metrics.record_latency(
+                            res.metrics.queue_seconds,
+                            service,
+                            env.priority,
+                        );
+                        let _ = env.reply.send(RequestOutcome {
+                            id: env.req.id,
+                            result: Ok(res.outputs),
+                            metrics: res.metrics,
+                        });
+                    }
+                }
+                Err(e) => {
+                    for env in &item.envelopes {
+                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = env.reply.send(RequestOutcome {
+                            id: env.req.id,
+                            result: Err(e.clone()),
+                            metrics: Default::default(),
+                        });
+                    }
                 }
             }
-            Err(e) => {
-                for env in &item.envelopes {
-                    metrics.failed.fetch_add(1, Ordering::Relaxed);
-                    let _ = env.reply.send(RequestOutcome {
-                        id: env.req.id,
-                        result: Err(e.to_string()),
-                        metrics: Default::default(),
-                    });
-                }
-            }
+        }
+    }
+}
+
+/// One executed batch: the batch plus its per-member results (or the
+/// error every member envelope is failed with).
+type BatchOutcome = (PreparedBatch, std::result::Result<Vec<MemberResult>, String>);
+
+/// Execute a coalesced group as **one** asymmetric shared-input pass:
+/// stack the member batches' activations along `M` (the coalescer
+/// guarantees equal `K`/`N` shape and byte-identical weight sets), run the
+/// stacked set through the cluster once, then split outputs and row-share
+/// accounting back per member batch and apply the ordinary in-batch
+/// attribution. A run error fails every member — tickets are never lost.
+fn execute_coalesced(
+    core: &mut ClusterScheduler,
+    items: Vec<PreparedBatch>,
+    metrics: &Metrics,
+) -> Vec<BatchOutcome> {
+    let first = &items[0].envelopes[0].req;
+    let k = first.a.cols();
+    let mode = items[0].mode;
+    let member_rows: Vec<usize> =
+        items.iter().map(|i| i.envelopes[0].req.a.rows()).collect();
+    let total_rows: usize = member_rows.iter().sum();
+    let mut stacked = Vec::with_capacity(total_rows * k);
+    for it in &items {
+        stacked.extend_from_slice(it.envelopes[0].req.a.as_slice());
+    }
+    let a_cat = Arc::new(Mat::from_vec(total_rows, k, stacked));
+    // weight sets are byte-identical across members (coalesce-key
+    // invariant): execute against the first member's set, through the
+    // prepared/shared path — the requests' existing `Arc<Mat>` handles
+    // are reused (no weight deep-copies) and the prepare stage's weight
+    // fingerprints serve the cache probe, so the only execute-path hash
+    // is the stacked activation's (which exists only post-merge).
+    let bs: Vec<&Arc<Mat>> =
+        items[0].envelopes.iter().flat_map(|e| e.req.bs.iter()).collect();
+    let fps = items[0].fps.as_ref().map(|f| PreparedFingerprints {
+        act: fingerprint(&[a_cat.as_ref()]),
+        weights: f.weights.clone(),
+    });
+    match core.run_gemm_set_prepared(&a_cat, &bs, mode, false, fps.as_ref()) {
+        Ok(run) => {
+            metrics.coalesced_passes.fetch_add(1, Ordering::Relaxed);
+            metrics.coalesced_members.fetch_add(items.len() as u64, Ordering::Relaxed);
+            let parts = split_back(&run.result, &member_rows);
+            items
+                .into_iter()
+                .zip(parts)
+                .map(|(item, part)| {
+                    let members: Vec<&MatmulRequest> =
+                        item.envelopes.iter().map(|e| &e.req).collect();
+                    let results = attribute_members(&members, &part);
+                    (item, Ok(results))
+                })
+                .collect()
+        }
+        Err(_) => {
+            // No shared failure fate across clients: a failed stacked
+            // pass (e.g. a transient pool-worker panic, which PR 3 made
+            // recoverable) falls back to executing every member solo —
+            // each ticket then succeeds or fails on its own merits.
+            items
+                .into_iter()
+                .map(|item| {
+                    let members: Vec<&MatmulRequest> =
+                        item.envelopes.iter().map(|e| &e.req).collect();
+                    let outcome = core
+                        .execute_batch_prepared(
+                            &members,
+                            item.mode,
+                            item.runtime_interleave,
+                            item.fps.as_ref(),
+                        )
+                        .map_err(|e| e.to_string());
+                    (item, outcome)
+                })
+                .collect()
         }
     }
 }
@@ -546,6 +796,153 @@ mod tests {
         assert_eq!(m.completed.load(Ordering::Relaxed), 32);
         assert_eq!(m.failed.load(Ordering::Relaxed), 0);
         coord.shutdown();
+    }
+
+    #[test]
+    fn hopeless_background_deadline_is_shed_and_interactive_demoted() {
+        let coord = Coordinator::start(CoordinatorConfig { shed: true, ..cfg() });
+        let client = coord.client();
+        let mut rng = Rng::seeded(915);
+        // big enough that the closed-form service estimate is ≥ 1 µs —
+        // the shed decision must be driven by the estimate, not by the
+        // sub-µs truncation corner
+        let mut big = |input_id: u64| MatmulRequest {
+            id: 0,
+            input_id,
+            a: Arc::new(Mat::random(&mut rng, 96, 96, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, 96, 96, 8))],
+            weight_bits: 8,
+            act_act: false,
+            tag: "big".into(),
+        };
+        // an already-expired deadline is hopeless by definition
+        let bg = client
+            .submit(
+                SubmitOptions::new(big(1))
+                    .priority(Priority::Background)
+                    .deadline(Duration::ZERO),
+            )
+            .unwrap();
+        let out = bg.wait().unwrap();
+        assert!(out.was_shed(), "background + hopeless deadline must shed: {:?}", out.result);
+        assert!(out.result.unwrap_err().starts_with("shed:"));
+        // interactive work is demoted, never shed — it still executes
+        let hot = client
+            .submit(
+                SubmitOptions::new(big(2))
+                    .priority(Priority::Interactive)
+                    .deadline(Duration::ZERO),
+            )
+            .unwrap();
+        let out = hot.wait().unwrap();
+        assert!(!out.was_shed());
+        assert!(out.result.is_ok(), "demoted work still completes");
+        // achievable deadlines are untouched
+        let easy = client
+            .submit(
+                SubmitOptions::new(big(3))
+                    .priority(Priority::Background)
+                    .deadline(Duration::from_secs(60)),
+            )
+            .unwrap();
+        assert!(easy.wait().unwrap().result.is_ok());
+        let m = coord.metrics();
+        assert_eq!(m.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_demotions.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1, "shed counts as failed too");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn shedding_off_keeps_soft_deadlines_advisory() {
+        let coord = Coordinator::start(cfg());
+        let mut rng = Rng::seeded(917);
+        let t = coord
+            .client()
+            .submit(
+                SubmitOptions::new(request(&mut rng, 1, 8))
+                    .priority(Priority::Background)
+                    .deadline(Duration::ZERO),
+            )
+            .unwrap();
+        assert!(t.wait().unwrap().result.is_ok(), "expired deadline must not cancel");
+        assert_eq!(coord.metrics().shed.load(Ordering::Relaxed), 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn same_weight_requests_coalesce_into_one_pass() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            n: 8,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 1, // one batch per request: coalescing, not fusion
+            coalesce: CoalesceConfig {
+                enabled: true,
+                window: Duration::from_millis(500),
+                max_members: 8,
+            },
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut rng = Rng::seeded(919);
+        let b = Arc::new(Mat::random(&mut rng, 16, 16, 2));
+        let mut want = Vec::new();
+        let tickets: Vec<Ticket> = (0..3u64)
+            .map(|i| {
+                let a = Arc::new(Mat::random(&mut rng, 16, 16, 8));
+                want.push(a.matmul(&b));
+                let req = MatmulRequest {
+                    id: 0,
+                    input_id: 100 + i, // distinct inputs: the batcher cannot fuse
+                    a,
+                    bs: vec![b.clone()],
+                    weight_bits: 2,
+                    act_act: false,
+                    tag: String::new(),
+                };
+                client.submit(SubmitOptions::new(req)).unwrap()
+            })
+            .collect();
+        for (t, w) in tickets.into_iter().zip(&want) {
+            let out = t.wait().unwrap();
+            assert_eq!(&out.result.unwrap()[0], w, "coalesced outputs must be bit-exact");
+        }
+        let m = coord.metrics();
+        assert!(
+            m.coalesced_passes.load(Ordering::Relaxed) >= 1,
+            "same-weight solo batches must coalesce"
+        );
+        assert!(m.coalesced_members.load(Ordering::Relaxed) >= 2);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stealing_policies_serve_identical_results() {
+        let mut rng = Rng::seeded(921);
+        let reqs: Vec<MatmulRequest> =
+            (0..12u64).map(|i| request(&mut rng, 1000 + i, 2)).collect();
+        let want: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+        for steal in StealPolicy::ALL {
+            let coord = Coordinator::start(CoordinatorConfig {
+                n: 8,
+                workers: 3,
+                queue_capacity: 64,
+                batch_window: 1,
+                steal,
+                ..Default::default()
+            });
+            let client = coord.client();
+            let tickets: Vec<Ticket> = reqs
+                .iter()
+                .map(|r| client.submit(SubmitOptions::new(r.clone())).unwrap())
+                .collect();
+            for (t, w) in tickets.into_iter().zip(&want) {
+                assert_eq!(&t.wait().unwrap().result.unwrap()[0], w, "{steal}");
+            }
+            assert_eq!(coord.metrics().completed.load(Ordering::Relaxed), 12, "{steal}");
+            coord.shutdown();
+        }
     }
 
     #[test]

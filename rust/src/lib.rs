@@ -26,6 +26,10 @@
 //! * [`coordinator`] — the L3 serving layer: request router, shared-input
 //!   batcher (the asymmetric multi-matrix mode), tile scheduler,
 //!   backpressure and metrics.
+//! * [`balance`] — the coordinator-wide execution fabric: a global
+//!   injector + per-worker deques with work-stealing (`StealPolicy`) and
+//!   cross-request shard coalescing into asymmetric shared-input passes
+//!   (see `balance/mod.rs` for the design doc).
 //! * [`cluster`] — multi-core execution: shards one GEMM (or shared-input
 //!   set) across a persistent pool of array-core workers (pipelined shard
 //!   ingress; legacy spawn-per-run engine kept as baseline) with a
@@ -42,6 +46,7 @@
 
 pub mod analytical;
 pub mod arch;
+pub mod balance;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

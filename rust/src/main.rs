@@ -19,6 +19,7 @@ use std::sync::Arc;
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::analytical::gemm::MemoryPolicy;
 use adip::arch::{Architecture, Backend};
+use adip::balance::{CoalesceConfig, StealPolicy};
 use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{
@@ -96,6 +97,11 @@ cluster flags (cluster/serve/trace):
   --cores=P        array cores per cluster (serve/trace: per worker; default 1)
   --split=m|n|k    GEMM dimension sharded across cores (default m)
   --weight-cache=C weight-tile result cache capacity in entries (0 = off)
+  --cache-protect=W
+                   eviction-protection window in lookups: an insert never
+                   evicts a sibling worker's entry hit within the last W
+                   lookups (0 = plain LRU; streaming traces cannot flush
+                   hot shared tiles)
   --pool=MODE      shard dispatch engine: persistent (warm worker pool,
                    default) or spawn (legacy scoped threads per run)
   --shared-weight-cache=BOOL
@@ -109,6 +115,24 @@ pipeline flags (serve/trace):
   --aging-ms=T     batcher aging interval in ms (default 100; every full
                    interval waited promotes a request one priority class;
                    0 disables aging)
+
+balance flags (serve/trace; --steal also accepted by cluster):
+  --steal=POLICY   work-stealing across workers' deques: off (static
+                   ownership, default), idle (an idle worker steals one
+                   batch from the deepest sibling) or aggressive (a steal
+                   re-homes half the victim's deque). Outputs are always
+                   bit-exact. (adip cluster's own shard queue is shared by
+                   all cores, i.e. inherently balanced; the flag matters
+                   for the serve/trace worker level.)
+  --coalesce-ms=T  cross-request coalescing: merge queued batches with
+                   byte-identical weight sets into one shared-input pass;
+                   an otherwise idle worker waits up to T ms for a
+                   partner (0/absent = off)
+  --coalesce-members=M
+                   max member batches per coalesced pass (default 8)
+  --shed=BOOL      deadline shedding: fail hopeless Background deadlines
+                   fast with a distinct shed: error and demote hopeless
+                   Interactive/Batch work (default false)
 
 serve submits a mixed-priority stream (interactive | batch | background)
 through the Client/SubmitOptions/Ticket API, with Q/K/V triplets sent as
@@ -156,7 +180,24 @@ fn parse_cluster(cfg: &Config) -> Result<ClusterConfig> {
     Ok(ClusterConfig::with_cores(cfg.get_usize("cores", 1)?)
         .with_split(split)
         .with_cache(cfg.get_usize("weight-cache", 0)?)
+        .with_cache_protect(cfg.get_usize("cache-protect", 0)?)
         .with_pool(pool))
+}
+
+fn parse_steal(cfg: &Config) -> Result<StealPolicy> {
+    match cfg.get("steal") {
+        None => Ok(StealPolicy::default()),
+        Some(raw) => raw.parse::<StealPolicy>().map_err(|e| anyhow!("--steal: {e}")),
+    }
+}
+
+fn parse_coalesce(cfg: &Config) -> Result<CoalesceConfig> {
+    let ms = cfg.get_f64("coalesce-ms", 0.0)?.max(0.0);
+    Ok(CoalesceConfig {
+        enabled: ms > 0.0,
+        window: std::time::Duration::from_secs_f64(ms / 1e3),
+        max_members: cfg.get_usize("coalesce-members", 8)?.max(2),
+    })
 }
 
 fn cmd_all(cfg: &Config) -> Result<()> {
@@ -241,6 +282,16 @@ fn cmd_cluster(cfg: &Config) -> Result<()> {
     let backend = parse_backend(cfg)?;
     let cluster = parse_cluster(cfg)?;
     let repeat = cfg.get_usize("repeat", 1)?.max(1);
+    // --steal is accepted (and validated) here for flag symmetry with
+    // serve/trace; a single cluster's shard queue is shared by all its
+    // cores, so shard dispatch is already globally balanced.
+    let steal = parse_steal(cfg)?;
+    if steal.steals() {
+        println!(
+            "note: --steal={steal} applies to coordinator workers (serve/trace); \
+             a cluster's own shard queue is inherently balanced"
+        );
+    }
 
     let mut rng = Rng::seeded(cfg.get_usize("seed", 42)? as u64);
     let a = Mat::random(&mut rng, m, k, 8);
@@ -328,6 +379,9 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
         prepare: parse_prepare(cfg)?,
         aging: parse_aging(cfg)?,
+        steal: parse_steal(cfg)?,
+        coalesce: parse_coalesce(cfg)?,
+        shed: cfg.get_bool("shed", false)?,
         ..Default::default()
     });
     let client = coord.client();
@@ -436,6 +490,9 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
         prepare: parse_prepare(cfg)?,
         aging: parse_aging(cfg)?,
+        steal: parse_steal(cfg)?,
+        coalesce: parse_coalesce(cfg)?,
+        shed: cfg.get_bool("shed", false)?,
         ..Default::default()
     });
     let client = coord.client();
@@ -499,6 +556,15 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.prepared_batches.load(std::sync::atomic::Ordering::Relaxed),
         m.prepare_seconds_total() * 1e3,
         m.aging_promotions.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    println!(
+        "balance:       {} steals ({} empty idle scans) | {} coalesced passes ({} members) | {} shed | {} demoted",
+        m.steals.load(std::sync::atomic::Ordering::Relaxed),
+        m.steal_failures.load(std::sync::atomic::Ordering::Relaxed),
+        m.coalesced_passes.load(std::sync::atomic::Ordering::Relaxed),
+        m.coalesced_members.load(std::sync::atomic::Ordering::Relaxed),
+        m.shed.load(std::sync::atomic::Ordering::Relaxed),
+        m.deadline_demotions.load(std::sync::atomic::Ordering::Relaxed)
     );
     coord.shutdown();
     Ok(())

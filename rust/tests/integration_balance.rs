@@ -1,0 +1,385 @@
+//! Integration: the global balance subsystem — work-stealing execution
+//! fabric + cross-request shard coalescing.
+//!
+//! Extends the differential suite to the balance layer (per the repo's
+//! backend policy: new execution paths extend the suite, never bypass it):
+//!
+//! * every [`StealPolicy`] must produce bit-exact outputs, and — with the
+//!   weight cache off, so no order-dependent hits — *identical* per-ticket
+//!   accounting to the static (`Off`) baseline, on skewed traces;
+//! * the functional and cycle-accurate backends must agree under stealing;
+//! * coalesced passes must be bit-exact, and their per-ticket accounting
+//!   must equal the closed form
+//!   [`adip::analytical::cluster::estimate_coalesced`] exactly;
+//! * a same-weights multi-client trace must actually coalesce
+//!   (`coalesced_passes_total > 0`);
+//! * shutdown mid-steal/mid-coalesce must never lose a ticket;
+//! * the eviction-protection window must keep sibling workers' hot cache
+//!   entries alive under a streaming trace (`shared_hits > 0`).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use adip::analytical::cluster::estimate_coalesced;
+use adip::analytical::gemm::MemoryPolicy;
+use adip::arch::{ArchConfig, Architecture, Backend};
+use adip::balance::{CoalesceConfig, StealPolicy};
+use adip::cluster::{CacheConfig, ClusterConfig, ClusterScheduler, SharedWeightCache};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, SubmitOptions, Ticket,
+};
+use adip::dataflow::Mat;
+use adip::quant::PrecisionMode;
+use adip::testutil::Rng;
+
+fn request(rng: &mut Rng, input_id: u64, m: usize, kn: usize, bits: u32) -> MatmulRequest {
+    MatmulRequest {
+        id: 0,
+        input_id,
+        a: Arc::new(Mat::random(rng, m, kn, 8)),
+        bs: vec![Arc::new(Mat::random(rng, kn, kn, bits))],
+        weight_bits: bits,
+        act_act: false,
+        tag: String::new(),
+    }
+}
+
+/// A deterministically skewed trace: every third request is heavy, the
+/// rest are light, all with distinct inputs (singleton batches under
+/// `batch_window = 1`, so per-ticket accounting is a pure function of the
+/// request — the property the steal differential relies on).
+fn skewed_trace(seed: u64, n_requests: usize, heavy: usize, light: usize) -> Vec<MatmulRequest> {
+    let mut rng = Rng::seeded(seed);
+    (0..n_requests as u64)
+        .map(|i| {
+            let bits = *rng.choose(&[2u32, 4, 8]);
+            if i % 3 == 0 {
+                request(&mut rng, 10_000 + i, heavy, heavy, bits)
+            } else {
+                request(&mut rng, 10_000 + i, light, light, bits)
+            }
+        })
+        .collect()
+}
+
+/// Serve `reqs` and return `(outputs, (cycles, passes, memory, energy))`
+/// per ticket, in submission order.
+#[allow(clippy::type_complexity)]
+fn serve(
+    reqs: &[MatmulRequest],
+    backend: Backend,
+    n: usize,
+    workers: usize,
+    steal: StealPolicy,
+    coalesce: CoalesceConfig,
+) -> (Vec<Vec<Mat>>, Vec<(u64, u64, u64, u64)>) {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n,
+        workers,
+        queue_capacity: 4 * reqs.len().max(1),
+        batch_window: 1,
+        backend,
+        steal,
+        coalesce,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let tickets: Vec<Ticket> =
+        reqs.iter().map(|r| client.submit(SubmitOptions::new(r.clone())).unwrap()).collect();
+    let mut outputs = Vec::new();
+    let mut accounting = Vec::new();
+    for t in tickets {
+        let out = t.wait().unwrap();
+        accounting.push((
+            out.metrics.cycles,
+            out.metrics.passes,
+            out.metrics.memory.paper_total_bytes(),
+            out.metrics.energy_j.to_bits(),
+        ));
+        outputs.push(out.result.unwrap());
+    }
+    coord.shutdown();
+    (outputs, accounting)
+}
+
+#[test]
+fn steal_policies_bit_exact_with_identical_accounting_on_skewed_traces() {
+    let reqs = skewed_trace(71, 24, 64, 16);
+    let no_coalesce = CoalesceConfig::default();
+    let (base_out, base_acct) =
+        serve(&reqs, Backend::Functional, 8, 3, StealPolicy::Off, no_coalesce);
+    // sanity: the outputs are the reference GEMMs
+    for (r, outs) in reqs.iter().zip(&base_out) {
+        assert_eq!(outs[0], r.a.matmul(&r.bs[0]));
+    }
+    for steal in [StealPolicy::Idle, StealPolicy::Aggressive] {
+        let (out, acct) = serve(&reqs, Backend::Functional, 8, 3, steal, no_coalesce);
+        assert_eq!(out, base_out, "{steal}: outputs must be bit-exact vs the static path");
+        assert_eq!(
+            acct, base_acct,
+            "{steal}: per-ticket accounting must be identical (cache off, singleton batches)"
+        );
+    }
+}
+
+#[test]
+fn backends_agree_under_stealing() {
+    // the golden backend is slow: tiny shapes, few requests
+    let reqs = skewed_trace(73, 9, 24, 8);
+    let (f_out, f_acct) =
+        serve(&reqs, Backend::Functional, 8, 2, StealPolicy::Idle, CoalesceConfig::default());
+    let (c_out, c_acct) =
+        serve(&reqs, Backend::CycleAccurate, 8, 2, StealPolicy::Idle, CoalesceConfig::default());
+    assert_eq!(f_out, c_out, "backends must agree bit-for-bit under stealing");
+    assert_eq!(f_acct, c_acct, "backends must agree on per-ticket accounting");
+}
+
+#[test]
+fn coalesced_outputs_bit_exact_on_both_backends() {
+    // one shared weight set, distinct activations, generous window
+    let mut rng = Rng::seeded(75);
+    let b = Arc::new(Mat::random(&mut rng, 16, 16, 2));
+    let reqs: Vec<MatmulRequest> = (0..6u64)
+        .map(|i| MatmulRequest {
+            id: 0,
+            input_id: 100 + i,
+            a: Arc::new(Mat::random(&mut rng, 16, 16, 8)),
+            bs: vec![b.clone()],
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        })
+        .collect();
+    let coalesce =
+        CoalesceConfig { enabled: true, window: Duration::from_millis(200), max_members: 8 };
+    for backend in Backend::ALL {
+        let (out, _) = serve(&reqs, backend, 8, 2, StealPolicy::Idle, coalesce);
+        for (r, outs) in reqs.iter().zip(&out) {
+            assert_eq!(
+                outs[0],
+                r.a.matmul(&r.bs[0]),
+                "{backend}: coalesced member output must equal the reference GEMM"
+            );
+        }
+    }
+}
+
+#[test]
+fn coalesced_accounting_equals_estimate_coalesced() {
+    // 1 worker, FIFO: a heavy blocker occupies the worker while three
+    // same-weight members (different row counts) queue up behind it, so
+    // the pop after the blocker deterministically gathers all three into
+    // one stacked pass in submission order.
+    let (n, k, n_cols) = (8usize, 32usize, 32usize);
+    let member_rows = [8usize, 16, 24];
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n,
+        workers: 1,
+        queue_capacity: 64,
+        batch_window: 1,
+        coalesce: CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(500),
+            max_members: 8,
+        },
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(77);
+    let blocker = request(&mut rng, 1, 128, 128, 8);
+    let blocker_ticket = client.submit(SubmitOptions::new(blocker)).unwrap();
+    let b = Arc::new(Mat::random(&mut rng, k, n_cols, 2));
+    let mut want = Vec::new();
+    let tickets: Vec<Ticket> = member_rows
+        .iter()
+        .enumerate()
+        .map(|(i, &rows)| {
+            let a = Arc::new(Mat::random(&mut rng, rows, k, 8));
+            want.push(a.matmul(&b));
+            let req = MatmulRequest {
+                id: 0,
+                input_id: 200 + i as u64,
+                a,
+                bs: vec![b.clone()],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            };
+            client.submit(SubmitOptions::new(req)).unwrap()
+        })
+        .collect();
+    assert!(blocker_ticket.wait().unwrap().result.is_ok());
+    let est = estimate_coalesced(
+        Architecture::Adip,
+        &ArchConfig::with_n(n),
+        &member_rows,
+        k,
+        n_cols,
+        1,
+        PrecisionMode::W2,
+        &ClusterConfig::default(),
+        MemoryPolicy::default(),
+    );
+    for ((t, w), est_m) in tickets.into_iter().zip(&want).zip(&est.members) {
+        let out = t.wait().unwrap();
+        let metrics = out.metrics;
+        assert_eq!(&out.result.unwrap()[0], w, "bit-exact member output");
+        assert!(metrics.batched, "a coalesced member counts as batched");
+        assert_eq!(metrics.cycles, est_m.cycles, "cycles == estimate_coalesced");
+        assert_eq!(metrics.passes, est_m.passes, "passes == estimate_coalesced");
+        assert_eq!(metrics.memory.act_read_bytes, est_m.act_read_bytes);
+        assert_eq!(metrics.memory.weight_read_bytes, est_m.weight_read_bytes);
+        assert_eq!(metrics.memory.output_write_bytes, est_m.output_write_bytes);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.coalesced_passes.load(Ordering::Relaxed), 1, "one merged pass");
+    assert_eq!(m.coalesced_members.load(Ordering::Relaxed), 3);
+    coord.shutdown();
+}
+
+#[test]
+fn same_weights_multi_client_trace_coalesces() {
+    // two "clients" hammer the same projection weights with their own
+    // activations; the fabric must merge cross-request work even though
+    // the batcher can never fuse it (distinct inputs)
+    let mut rng = Rng::seeded(79);
+    let b = Arc::new(Mat::random(&mut rng, 32, 32, 2));
+    let reqs: Vec<MatmulRequest> = (0..16u64)
+        .map(|i| MatmulRequest {
+            id: 0,
+            input_id: 1_000 * (i % 2) + i, // alternating clients, unique inputs
+            a: Arc::new(Mat::random(&mut rng, 8, 32, 8)),
+            bs: vec![b.clone()],
+            weight_bits: 2,
+            act_act: false,
+            tag: format!("client{}/r{i}", i % 2),
+        })
+        .collect();
+    let want: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 8,
+        workers: 2,
+        queue_capacity: 64,
+        batch_window: 1,
+        steal: StealPolicy::Idle,
+        coalesce: CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(300),
+            max_members: 8,
+        },
+        ..Default::default()
+    });
+    let client = coord.client();
+    let tickets: Vec<Ticket> =
+        reqs.iter().map(|r| client.submit(SubmitOptions::new(r.clone())).unwrap()).collect();
+    for (t, w) in tickets.into_iter().zip(&want) {
+        assert_eq!(&t.wait().unwrap().result.unwrap()[0], w);
+    }
+    let m = coord.metrics();
+    assert!(
+        m.coalesced_passes.load(Ordering::Relaxed) > 0,
+        "a same-weights multi-client trace must coalesce at least once"
+    );
+    assert!(
+        m.coalesced_members.load(Ordering::Relaxed)
+            >= 2 * m.coalesced_passes.load(Ordering::Relaxed),
+        "every coalesced pass has >= 2 members"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_drain_mid_steal_loses_no_ticket() {
+    // saturate 4 stealing workers, then shut down immediately: every
+    // admitted ticket must still resolve with a correct result — batches
+    // queued raw, mid-prepare, mid-steal and mid-coalesce-wait included
+    let mut rng = Rng::seeded(81);
+    let b = Arc::new(Mat::random(&mut rng, 24, 24, 2));
+    let reqs: Vec<MatmulRequest> = (0..32u64)
+        .map(|i| {
+            if i % 4 == 0 {
+                request(&mut rng, 500 + i, 48, 48, 8) // heavy, unique weights
+            } else {
+                MatmulRequest {
+                    id: 0,
+                    input_id: 500 + i,
+                    a: Arc::new(Mat::random(&mut rng, 8, 24, 8)),
+                    bs: vec![b.clone()], // coalescable
+                    weight_bits: 2,
+                    act_act: false,
+                    tag: String::new(),
+                }
+            }
+        })
+        .collect();
+    let want: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 8,
+        workers: 4,
+        queue_capacity: 64,
+        batch_window: 2,
+        steal: StealPolicy::Aggressive,
+        coalesce: CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(100),
+            max_members: 4,
+        },
+        ..Default::default()
+    });
+    let client = coord.client();
+    let tickets: Vec<Ticket> =
+        reqs.iter().map(|r| client.submit(SubmitOptions::new(r.clone())).unwrap()).collect();
+    // immediate shutdown: the drain must deliver everything
+    coord.shutdown();
+    for (i, (t, w)) in tickets.into_iter().zip(&want).enumerate() {
+        let out = t.wait().unwrap();
+        assert_eq!(&out.result.unwrap()[0], w, "ticket {i} lost or corrupted in the drain");
+    }
+}
+
+#[test]
+fn protect_window_keeps_sibling_hits_alive_under_streaming() {
+    // scheduler A warms one projection GEMM; scheduler B floods the shared
+    // store with a streaming trace far beyond capacity; B then replays A's
+    // GEMM and must still hit it cross-owner (shared_hits > 0)
+    let mut rng = Rng::seeded(83);
+    let a = Mat::random(&mut rng, 32, 16, 8);
+    let b = Mat::random(&mut rng, 16, 16, 2);
+    let store = SharedWeightCache::new(CacheConfig { capacity: 8, protect: 1_000 });
+    let cfg = ClusterConfig::with_cores(1).with_cache(8).with_cache_protect(1_000);
+    let mut warm = ClusterScheduler::with_shared_cache(
+        Architecture::Adip,
+        8,
+        Backend::Functional,
+        cfg,
+        store.clone(),
+    );
+    let mut streamer = ClusterScheduler::with_shared_cache(
+        Architecture::Adip,
+        8,
+        Backend::Functional,
+        cfg,
+        store.clone(),
+    );
+    let cold = warm.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+    let hot = warm.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+    assert_eq!(hot.cache.hits, 1, "A's entry is hot (recently hit)");
+    // B streams 40 unique GEMMs through an 8-entry store
+    for _ in 0..40 {
+        let sa = Mat::random(&mut rng, 32, 16, 8);
+        let sb = Mat::random(&mut rng, 16, 16, 2);
+        let run = streamer.run_gemm(&sa, &sb, PrecisionMode::W2, false).unwrap();
+        assert_eq!(run.result.outputs[0], sa.matmul(&sb));
+    }
+    // B replays A's request: the hot entry must have survived the flood
+    let replay = streamer.run_gemm(&a, &b, PrecisionMode::W2, false).unwrap();
+    assert_eq!(replay.cache.hits, 1, "A's hot entry must survive B's streaming trace");
+    assert_eq!(replay.cache.shared_hits, 1, "…and the hit is cross-owner");
+    assert_eq!(replay.result.outputs, cold.result.outputs, "bit-exact reuse");
+    assert!(store.stats().shared_hits > 0);
+}
