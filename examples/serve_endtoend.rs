@@ -117,8 +117,8 @@ fn main() -> anyhow::Result<()> {
     println!("  simulated cycles:     {}", m.sim_cycles.load(std::sync::atomic::Ordering::Relaxed));
     println!("  simulated energy:     {:.3} mJ", m.energy_j() * 1e3);
     println!("  simulated memory:     {:.2} MiB", m.memory_bytes.load(std::sync::atomic::Ordering::Relaxed) as f64 / (1 << 20) as f64);
-    println!("  mean queue wait:      {:.3} ms", m.mean_queue_seconds() * 1e3);
-    println!("  mean service time:    {:.3} ms", m.mean_service_seconds() * 1e3);
+    println!("  mean queue wait:      {:.3} ms", m.mean_queue_seconds().unwrap_or(0.0) * 1e3);
+    println!("  mean service time:    {:.3} ms", m.mean_service_seconds().unwrap_or(0.0) * 1e3);
     anyhow::ensure!(fused > 0, "expected shared-input fusion in the Q/K/V stream");
 
     // ---- Cross-check L3 outputs vs reference and vs PJRT (L1/L2) ----

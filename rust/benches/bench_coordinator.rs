@@ -200,7 +200,7 @@ fn main() {
     let mut class_rows = Vec::new();
     for class in Priority::ALL {
         let completed = m.class_completed[class.index()].load(Ordering::Relaxed);
-        let mean = m.mean_class_queue_seconds(class);
+        let mean = m.mean_class_queue_seconds(class).unwrap_or(0.0);
         let p50 = m.class_queue_percentile(class, 50.0).unwrap_or(0.0);
         let p95 = m.class_queue_percentile(class, 95.0).unwrap_or(0.0);
         class_rows.push(format!(
@@ -208,8 +208,8 @@ fn main() {
             class.name()
         ));
     }
-    let mi = m.mean_class_queue_seconds(Priority::Interactive);
-    let mb = m.mean_class_queue_seconds(Priority::Background);
+    let mi = m.mean_class_queue_seconds(Priority::Interactive).expect("interactive completed");
+    let mb = m.mean_class_queue_seconds(Priority::Background).expect("background completed");
     println!("  {total} requests | interactive/background mean wait ratio {:.3}", mi / mb.max(1e-12));
     assert!(
         mi <= mb,

@@ -1,0 +1,152 @@
+//! Bench: served hot-path contention — the sharded atomic latency
+//! reservoir (default) vs the legacy single-mutex reservoir
+//! (`Metrics::legacy()`), plus saturated-server throughput with a
+//! concurrent Prometheus scraper — emitted as `BENCH_hotpath.json` for
+//! CI trend tracking (uploaded alongside the other bench artifacts).
+//!
+//! The contention microbench is deliberately worst-case: every thread
+//! does nothing but `record_latency`, so the reservoir synchronization
+//! is the entire measured cost. Both modes share the same summary
+//! atomics (queue/service sums, per-class counters); only the sample
+//! storage differs, which is exactly the delta the sharding removed.
+//! No hard speed gate here — the numbers feed the JSON artifact and the
+//! correctness asserts (full sample retention, identical percentile
+//! readers) are what must hold; `bench_backends` carries the kernel
+//! speed gate.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use adip::arch::Architecture;
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, Metrics, Priority, SubmitOptions,
+};
+use adip::dataflow::Mat;
+use adip::testutil::Rng;
+
+const THREADS: usize = 8;
+const PER_THREAD: usize = 20_000;
+
+/// All `THREADS` writers hammer `record_latency` on one `Metrics`
+/// instance with zero think time; returns wall seconds for the storm.
+fn hammer(m: &Metrics) -> f64 {
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            scope.spawn(move || {
+                for i in 0..PER_THREAD {
+                    let q = ((t * PER_THREAD + i) % 1000) as f64 * 1e-6;
+                    m.record_latency(q, q * 0.5, Priority::ALL[i % Priority::COUNT]);
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+/// Saturated mixed stream through the coordinator while a scraper thread
+/// reads `render()` + percentiles in a tight loop (the serving scrape
+/// pattern the sharded reservoir exists for). Returns (host seconds,
+/// completed scrapes).
+fn saturated_serve(requests: usize, dim: usize) -> (f64, u64) {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 32,
+        workers: 2,
+        queue_capacity: 2 * requests,
+        batch_window: 8,
+        ..Default::default()
+    });
+    let metrics = coord.metrics();
+    let stop = Arc::new(AtomicBool::new(false));
+    let scrapes = Arc::new(AtomicU64::new(0));
+    let scraper = {
+        let (m, stop, scrapes) = (metrics, stop.clone(), scrapes.clone());
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                std::hint::black_box(m.render());
+                std::hint::black_box(m.queue_percentile(95.0));
+                std::hint::black_box(m.class_queue_summary());
+                scrapes.fetch_add(1, Ordering::Relaxed);
+            }
+        })
+    };
+    let client = coord.client();
+    let mut rng = Rng::seeded(41);
+    let t0 = std::time::Instant::now();
+    let mut shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
+    let tickets: Vec<_> = (0..requests)
+        .map(|i| {
+            if i % 3 == 0 {
+                shared = Arc::new(Mat::random(&mut rng, dim, dim, 8));
+            }
+            let req = MatmulRequest {
+                id: 0,
+                input_id: (i / 3) as u64,
+                a: shared.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, dim, 32, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            };
+            client.submit(SubmitOptions::new(req)).expect("queue sized")
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    scraper.join().unwrap();
+    coord.shutdown();
+    (dt, scrapes.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let total = (THREADS * PER_THREAD) as f64;
+
+    // Correctness under the storm (untimed): both reservoirs keep every
+    // summary counter, and the percentile readers stay available.
+    for m in [Metrics::default(), Metrics::legacy()] {
+        hammer(&m);
+        let completed: u64 =
+            Priority::ALL.iter().map(|c| m.class_completed[c.index()].load(Ordering::Relaxed)).sum();
+        assert_eq!(completed, (THREADS * PER_THREAD) as u64, "summary counters must not drop records");
+        assert!(m.queue_percentile(50.0).is_some(), "reservoir must have samples");
+    }
+
+    println!("== metrics reservoir under max contention ({THREADS} writers x {PER_THREAD} records) ==");
+    let sharded = common::bench(5, || hammer(&Metrics::default()));
+    common::report("sharded reservoir (default)", sharded, total, "rec");
+    let legacy_metrics = Metrics::legacy();
+    let legacy = common::bench(5, || hammer(&legacy_metrics));
+    common::report("legacy mutex reservoir", legacy, total, "rec");
+    let lock_waits = legacy_metrics.metrics_lock_waits.load(Ordering::Relaxed);
+    let speedup = legacy.min_s / sharded.min_s;
+    println!(
+        "  -> sharded/legacy record throughput: {speedup:.2}x (legacy contended lock acquisitions: {lock_waits})"
+    );
+
+    println!("\n== saturated server with concurrent scraper (2 workers, Q/K/V stream) ==");
+    const REQS: usize = 96;
+    const DIM: usize = 64;
+    let (dt, scrapes) = saturated_serve(REQS, DIM);
+    let req_per_s = REQS as f64 / dt;
+    println!(
+        "  {REQS} requests in {dt:.3}s = {req_per_s:.0} req/s with {scrapes} scrapes in flight"
+    );
+    assert!(scrapes > 0, "scraper thread must have completed at least one scrape");
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_hotpath\",\n  \"metrics_contention\": {{\"threads\": {THREADS}, \"records_per_thread\": {PER_THREAD}, \"sharded_rec_per_s\": {:.0}, \"legacy_rec_per_s\": {:.0}, \"speedup\": {speedup:.4}, \"legacy_lock_waits\": {lock_waits}}},\n  \"saturated_server\": {{\"requests\": {REQS}, \"req_per_s\": {req_per_s:.2}, \"scrapes\": {scrapes}}}\n}}\n",
+        total / sharded.min_s,
+        total / legacy.min_s
+    );
+    let path =
+        std::env::var("BENCH_HOTPATH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
+}

@@ -91,6 +91,57 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Arithmetic kernel the functional backend computes GEMMs with.
+///
+/// The kernel choice affects **host wall-clock only**: accounting
+/// (passes / cycles / energy / memory) is analytical and outputs are
+/// bit-exact across kernels — `i32` accumulation is exact in any order, so
+/// the blocked kernel's reordered loops produce the identical matrix. The
+/// cycle-accurate backend ignores this field (it steps PEs, not GEMMs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelMode {
+    /// Straightforward triple loop ([`Mat::matmul`]) — the reference
+    /// oracle and the differential baseline for the blocked kernel.
+    #[default]
+    Naive,
+    /// Cache-blocked, B-transposed tile loop with `std::thread` row-band
+    /// parallelism ([`Mat::matmul_blocked`]) — the serving fast path.
+    Blocked,
+}
+
+impl KernelMode {
+    /// Both kernels, naive (the default / baseline) first.
+    pub const ALL: [KernelMode; 2] = [KernelMode::Naive, KernelMode::Blocked];
+
+    /// Display name used by the CLI / config files.
+    pub const fn name(self) -> &'static str {
+        match self {
+            KernelMode::Naive => "naive",
+            KernelMode::Blocked => "blocked",
+        }
+    }
+}
+
+impl std::fmt::Display for KernelMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for KernelMode {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "naive" | "reference" | "simple" => Ok(KernelMode::Naive),
+            "blocked" | "block" | "tiled" => Ok(KernelMode::Blocked),
+            other => Err(format!(
+                "unknown kernel {other:?} (expected `naive` or `blocked`)"
+            )),
+        }
+    }
+}
+
 /// Array-level static configuration.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ArchConfig {
@@ -102,13 +153,26 @@ pub struct ArchConfig {
     pub mac_stages: u64,
     /// Execution backend for tile passes / GEMMs.
     pub backend: Backend,
+    /// Arithmetic kernel the functional backend computes with (host speed
+    /// only — accounting and outputs are kernel-independent).
+    pub kernel: KernelMode,
+    /// Worker threads for [`KernelMode::Blocked`]; 0 = one per available
+    /// CPU. Ignored by [`KernelMode::Naive`].
+    pub kernel_threads: usize,
 }
 
 impl Default for ArchConfig {
     fn default() -> Self {
         // The paper's workload evaluation point is 32×32 with the selected
         // 16-multiplier PE and single-stage MACs, served functionally.
-        ArchConfig { n: 32, multipliers: 16, mac_stages: 1, backend: Backend::Functional }
+        ArchConfig {
+            n: 32,
+            multipliers: 16,
+            mac_stages: 1,
+            backend: Backend::Functional,
+            kernel: KernelMode::Naive,
+            kernel_threads: 0,
+        }
     }
 }
 
@@ -121,6 +185,17 @@ impl ArchConfig {
     /// The same configuration with a different backend.
     pub fn with_backend(self, backend: Backend) -> ArchConfig {
         ArchConfig { backend, ..self }
+    }
+
+    /// The same configuration with a different functional kernel.
+    pub fn with_kernel(self, kernel: KernelMode) -> ArchConfig {
+        ArchConfig { kernel, ..self }
+    }
+
+    /// The same configuration with a blocked-kernel thread budget
+    /// (0 = one thread per available CPU).
+    pub fn with_kernel_threads(self, kernel_threads: usize) -> ArchConfig {
+        ArchConfig { kernel_threads, ..self }
     }
 
     /// Convenience constructor for an `n × n` cycle-accurate array.
@@ -265,6 +340,25 @@ mod tests {
     }
 
     #[test]
+    fn kernel_parsing_and_builders() {
+        assert_eq!(KernelMode::default(), KernelMode::Naive);
+        assert_eq!("naive".parse::<KernelMode>().unwrap(), KernelMode::Naive);
+        assert_eq!("blocked".parse::<KernelMode>().unwrap(), KernelMode::Blocked);
+        assert_eq!("tiled".parse::<KernelMode>().unwrap(), KernelMode::Blocked);
+        assert!("warp".parse::<KernelMode>().is_err());
+        for k in KernelMode::ALL {
+            assert_eq!(k.name().parse::<KernelMode>().unwrap(), k);
+            assert_eq!(k.to_string(), k.name());
+        }
+        let c = ArchConfig::with_n(16).with_kernel(KernelMode::Blocked).with_kernel_threads(4);
+        assert_eq!(c.kernel, KernelMode::Blocked);
+        assert_eq!(c.kernel_threads, 4);
+        assert_eq!(c.n, 16);
+        // builders compose without resetting each other
+        assert_eq!(c.with_backend(Backend::CycleAccurate).kernel, KernelMode::Blocked);
+    }
+
+    #[test]
     fn architecture_names() {
         assert_eq!(Architecture::Ws.name(), "WS");
         assert_eq!(Architecture::Dip.to_string(), "DiP");
@@ -279,6 +373,8 @@ mod tests {
         assert_eq!(c.multipliers, 16);
         assert_eq!(c.mac_stages, 1);
         assert_eq!(c.backend, Backend::Functional);
+        assert_eq!(c.kernel, KernelMode::Naive);
+        assert_eq!(c.kernel_threads, 0);
         assert_eq!(ArchConfig::with_n(64).n, 64);
         assert_eq!(ArchConfig::with_n(64).multipliers, 16);
     }

@@ -22,7 +22,13 @@
 //!   directly in `O(M·K·N)` integer arithmetic (bit-exact with the 2-bit
 //!   subword decomposition the PE hardware performs) and reports latency,
 //!   energy and memory figures from the analytical models
-//!   ([`crate::analytical`]) instead of cycle stepping.
+//!   ([`crate::analytical`]) instead of cycle stepping. *How* that integer
+//!   arithmetic runs on the host is a second, orthogonal selector:
+//!   [`KernelMode::Naive`] (the reference triple loop, default) or
+//!   [`KernelMode::Blocked`] (cache-blocked, B-transposed, multithreaded —
+//!   `--kernel=blocked`). The kernel changes host wall-clock only; outputs
+//!   are bit-exact across kernels (`i32` accumulation is order-exact) and
+//!   all simulated accounting is analytical, hence kernel-independent.
 //!
 //! **Differential-testing policy:** the functional backend is only allowed
 //! to exist because `rust/tests/integration_backends.rs` proves, for
@@ -30,8 +36,11 @@
 //! outputs are bit-exact with the cycle simulator and its reported cycles
 //! equal [`crate::analytical::estimate_gemm`]. Any change to either
 //! backend must keep that suite green; when the two disagree, the cycle
-//! simulator wins and the functional model is the bug. The cluster
-//! execution path ([`crate::cluster`]) extends the same policy:
+//! simulator wins and the functional model is the bug. The same suite
+//! carries a Naive-vs-Blocked kernel axis: the blocked kernel is only
+//! allowed to serve because it is bit-exact with the naive triple loop
+//! (with identical cycles/passes/memory) across that matrix too. The
+//! cluster execution path ([`crate::cluster`]) extends the same policy:
 //! `rust/tests/integration_cluster.rs` holds sharded runs (splits × core
 //! counts) to bit-exactness and to the closed-form cluster estimates on
 //! both backends.
@@ -55,7 +64,7 @@ pub mod pe;
 pub mod ws;
 
 pub use adip::AdipArray;
-pub use array::{build_array, ArchConfig, Architecture, Backend, SystolicArray, TilePass};
+pub use array::{build_array, ArchConfig, Architecture, Backend, KernelMode, SystolicArray, TilePass};
 pub use column_unit::SharedColumnUnit;
 pub use dip::DipArray;
 pub use functional::{FunctionalArray, FunctionalRun};

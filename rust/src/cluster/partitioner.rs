@@ -22,6 +22,7 @@ use std::ops::Range;
 use std::str::FromStr;
 
 use super::weight_cache::CacheConfig;
+use crate::arch::KernelMode;
 
 /// Which GEMM dimension the cluster shards across cores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
@@ -137,6 +138,11 @@ pub struct ClusterConfig {
     pub cache: CacheConfig,
     /// Shard dispatch engine (persistent pool by default).
     pub pool: PoolMode,
+    /// Functional arithmetic kernel for every core
+    /// ([`KernelMode::Naive`] by default — the differential baseline).
+    pub kernel: KernelMode,
+    /// Blocked-kernel threads per core (0 = one per available CPU).
+    pub kernel_threads: usize,
 }
 
 impl ClusterConfig {
@@ -166,6 +172,17 @@ impl ClusterConfig {
     /// The same configuration with a different shard dispatch engine.
     pub fn with_pool(self, pool: PoolMode) -> ClusterConfig {
         ClusterConfig { pool, ..self }
+    }
+
+    /// The same configuration with a different functional kernel.
+    pub fn with_kernel(self, kernel: KernelMode) -> ClusterConfig {
+        ClusterConfig { kernel, ..self }
+    }
+
+    /// The same configuration with a blocked-kernel thread budget per core
+    /// (0 = one thread per available CPU).
+    pub fn with_kernel_threads(self, kernel_threads: usize) -> ClusterConfig {
+        ClusterConfig { kernel_threads, ..self }
     }
 
     /// Effective core count (at least 1).
@@ -277,7 +294,11 @@ mod tests {
         assert_eq!(c.split, ShardSplit::M);
         assert_eq!(c.cache.capacity, 0);
         assert_eq!(c.pool, PoolMode::Persistent);
+        assert_eq!(c.kernel, KernelMode::Naive);
+        assert_eq!(c.kernel_threads, 0);
         assert_eq!(ClusterConfig::with_cores(0).effective_cores(), 1);
+        let k = ClusterConfig::with_cores(2).with_kernel(KernelMode::Blocked).with_kernel_threads(3);
+        assert_eq!((k.kernel, k.kernel_threads, k.cores), (KernelMode::Blocked, 3, 2));
         assert_eq!(ClusterConfig::with_cores(4).with_cache(16).cache.capacity, 16);
         assert_eq!(ClusterConfig::default().with_pool(PoolMode::PerRun).pool, PoolMode::PerRun);
     }

@@ -47,7 +47,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::arch::{Architecture, Backend};
+use crate::arch::{ArchConfig, Architecture, Backend};
 use crate::coordinator::scheduler::{attribute_members, CoreScheduler, MemberResult};
 use crate::coordinator::select_mode;
 use crate::coordinator::MatmulRequest;
@@ -152,7 +152,7 @@ struct WorkerPool {
 }
 
 impl WorkerPool {
-    fn new(arch: Architecture, n: usize, backend: Backend, workers: usize) -> WorkerPool {
+    fn new(arch: Architecture, core_cfg: ArchConfig, workers: usize) -> WorkerPool {
         let (tx, rx) = channel::<ShardJob>();
         let rx = Arc::new(Mutex::new(rx));
         let counters = Arc::new(PoolCounters::default());
@@ -162,7 +162,7 @@ impl WorkerPool {
                 let counters = counters.clone();
                 std::thread::Builder::new()
                     .name(format!("adip-cluster-core-{w}"))
-                    .spawn(move || worker_main(arch, n, backend, rx, counters))
+                    .spawn(move || worker_main(arch, core_cfg, rx, counters))
                     .expect("spawn cluster pool worker")
             })
             .collect();
@@ -205,12 +205,11 @@ impl Drop for WorkerPool {
 /// core is rebuilt, so the submitter can never be left waiting.
 fn worker_main(
     arch: Architecture,
-    n: usize,
-    backend: Backend,
+    core_cfg: ArchConfig,
     rx: Arc<Mutex<Receiver<ShardJob>>>,
     counters: Arc<PoolCounters>,
 ) {
-    let mut core = CoreScheduler::with_backend(arch, n, backend);
+    let mut core = CoreScheduler::with_config(arch, core_cfg);
     loop {
         // Hold the queue lock only for the pop — execution must not block
         // the sibling workers' ingress.
@@ -242,7 +241,7 @@ fn worker_main(
             counters.panics.fetch_add(1, Ordering::Relaxed);
             // The interrupted core may hold torn mid-run state; rebuild it
             // so the worker keeps serving subsequent shards correctly.
-            core = CoreScheduler::with_backend(arch, n, backend);
+            core = CoreScheduler::with_config(arch, core_cfg);
         }
     }
 }
@@ -415,13 +414,17 @@ impl ClusterScheduler {
         // shard, so spinning up a pool thread would only add a queue hop
         // to the coordinator's default hot path. Run it inline (the
         // per-run engine with one core spawns no threads at all).
+        let core_cfg = ArchConfig::with_n(n)
+            .with_backend(backend)
+            .with_kernel(cfg.kernel)
+            .with_kernel_threads(cfg.kernel_threads);
         let engine = match cfg.pool {
             PoolMode::Persistent if cfg.effective_cores() > 1 => {
-                Engine::Pool(WorkerPool::new(arch, n, backend, cfg.effective_cores()))
+                Engine::Pool(WorkerPool::new(arch, core_cfg, cfg.effective_cores()))
             }
             _ => Engine::PerRun {
                 cores: (0..cfg.effective_cores())
-                    .map(|_| CoreScheduler::with_backend(arch, n, backend))
+                    .map(|_| CoreScheduler::with_config(arch, core_cfg))
                     .collect(),
             },
         };
@@ -1069,7 +1072,7 @@ mod tests {
         let mut rng = Rng::seeded(63);
         let a = Arc::new(Mat::random(&mut rng, 16, 16, 8));
         let b = Arc::new(Mat::random(&mut rng, 16, 16, 2));
-        let pool = WorkerPool::new(Architecture::Adip, 8, Backend::Functional, 1);
+        let pool = WorkerPool::new(Architecture::Adip, ArchConfig::with_n(8), 1);
         let (reply, done) = channel();
         for seq in 0..6 {
             pool.submit(ShardJob {

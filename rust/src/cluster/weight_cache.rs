@@ -16,11 +16,12 @@
 //!
 //! # Cross-worker sharing
 //!
-//! [`SharedWeightCache`] wraps one [`WeightCache`] store in an
-//! `Arc<Mutex<…>>` so *several* cluster schedulers — e.g. every worker of
-//! one [`crate::coordinator::Coordinator`] — can reuse each other's
-//! entries: sibling workers stop re-executing identical projection tiles
-//! one of them already computed. Each attached scheduler registers for an
+//! [`SharedWeightCache`] shares one logical store — split into
+//! fingerprint-routed, independently-locked [`WeightCache`] shards at
+//! useful capacities — so *several* cluster schedulers — e.g. every
+//! worker of one [`crate::coordinator::Coordinator`] — can reuse each
+//! other's entries: sibling workers stop re-executing identical
+//! projection tiles one of them already computed. Each attached scheduler registers for an
 //! owner id; entries remember which owner inserted them, and a hit on
 //! another owner's entry is additionally counted as a `shared_hit`
 //! (surfaced as `adip_weight_cache_shared_hits_total`). Sharing cannot
@@ -40,7 +41,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, PoisonError};
+use std::sync::{Arc, Mutex, PoisonError, TryLockError};
 
 use crate::dataflow::Mat;
 use crate::quant::PrecisionMode;
@@ -283,27 +284,57 @@ impl WeightCache {
     }
 }
 
+/// Lock shards a [`SharedWeightCache`] splits into once its capacity
+/// reaches [`MIN_SHARDED_CAPACITY`] (power of two — the router masks
+/// fingerprint bits).
+pub const CACHE_SHARDS: usize = 8;
+
+/// Smallest total capacity worth sharding: below this a single shard
+/// keeps behavior (one LRU, one protect window) byte-identical to the
+/// historical unsharded store, and per-shard capacities stay ≥ 8 above
+/// it.
+pub const MIN_SHARDED_CAPACITY: usize = 64;
+
 /// One weight-cache store shared by any number of cluster schedulers.
 ///
 /// Cloning the handle shares the underlying store. Each scheduler calls
 /// [`SharedWeightCache::register`] once to obtain its owner id; the store
 /// then distinguishes a worker re-hitting its own entries from a worker
-/// reusing a sibling's (`shared_hits`). All operations take the mutex for
+/// reusing a sibling's (`shared_hits`). All operations take a lock for
 /// the duration of one map access only — shard execution never holds it.
+///
+/// # Lock sharding
+///
+/// At capacity ≥ [`MIN_SHARDED_CAPACITY`] the store splits into
+/// [`CACHE_SHARDS`] independently-locked [`WeightCache`]s, routed by
+/// fingerprint bits (`(weight_fp ^ act_fp) & (shards-1)`): concurrent
+/// workers probing *different* tiles no longer serialize on one mutex.
+/// A key always routes to the same shard, so hit/miss behavior is
+/// unchanged; LRU and the protect window become per-shard (capacity is
+/// divided evenly). Below the threshold there is exactly one shard and
+/// the store behaves byte-identically to the historical unsharded one.
+/// Contended acquisitions are counted in [`SharedWeightCache::lock_waits`]
+/// (surfaced as `adip_weight_cache_lock_waits_total`).
 #[derive(Clone)]
 pub struct SharedWeightCache {
     cfg: CacheConfig,
-    inner: Arc<Mutex<WeightCache>>,
+    shards: Arc<Vec<Mutex<WeightCache>>>,
     next_id: Arc<AtomicU64>,
+    lock_waits: Arc<AtomicU64>,
 }
 
 impl SharedWeightCache {
     /// A fresh store under `cfg` (capacity 0 = caching off).
     pub fn new(cfg: CacheConfig) -> SharedWeightCache {
+        let shard_count = if cfg.capacity >= MIN_SHARDED_CAPACITY { CACHE_SHARDS } else { 1 };
+        let shard_cfg = CacheConfig { capacity: cfg.capacity / shard_count, ..cfg };
         SharedWeightCache {
             cfg,
-            inner: Arc::new(Mutex::new(WeightCache::new(cfg))),
+            shards: Arc::new(
+                (0..shard_count).map(|_| Mutex::new(WeightCache::new(shard_cfg))).collect(),
+            ),
             next_id: Arc::new(AtomicU64::new(0)),
+            lock_waits: Arc::new(AtomicU64::new(0)),
         }
     }
 
@@ -317,19 +348,52 @@ impl SharedWeightCache {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Global counters across every attached scheduler.
+    /// Global counters across every attached scheduler, aggregated over
+    /// all lock shards.
     pub fn stats(&self) -> CacheStats {
-        self.lock().stats()
+        let mut total = CacheStats::default();
+        for shard in self.shards.iter() {
+            let s = self.lock(shard).stats();
+            total.hits += s.hits;
+            total.shared_hits += s.shared_hits;
+            total.misses += s.misses;
+            total.evictions += s.evictions;
+            total.entries += s.entries;
+        }
+        total
     }
 
-    /// Current live entries.
+    /// Current live entries across all lock shards.
     pub fn entries(&self) -> usize {
-        self.lock().map.len()
+        self.shards.iter().map(|shard| self.lock(shard).map.len()).sum()
     }
 
-    /// [`WeightCache::lookup`] under the store lock. The returned handle
-    /// lets the caller deep-copy (and re-account) the result *after* the
-    /// lock is released.
+    /// How many independently-locked shards this store runs.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards currently holding at least one entry (occupancy gauge —
+    /// routing spread made observable).
+    pub fn occupied_shards(&self) -> usize {
+        self.shards.iter().filter(|shard| !self.lock(shard).map.is_empty()).count()
+    }
+
+    /// Cumulative lock acquisitions that found a shard lock held and had
+    /// to wait (the store's contention signal).
+    pub fn lock_waits(&self) -> u64 {
+        self.lock_waits.load(Ordering::Relaxed)
+    }
+
+    /// The shard a key routes to — pure function of the key, so a hit
+    /// can never be missed by looking in the wrong shard.
+    fn shard_for(&self, weight_fp: u128, act_fp: u128) -> &Mutex<WeightCache> {
+        &self.shards[((weight_fp ^ act_fp) as usize) & (self.shards.len() - 1)]
+    }
+
+    /// [`WeightCache::lookup`] under the key's shard lock. The returned
+    /// handle lets the caller deep-copy (and re-account) the result
+    /// *after* the lock is released.
     pub fn lookup(
         &self,
         requester: u64,
@@ -338,10 +402,16 @@ impl SharedWeightCache {
         mode: PrecisionMode,
         runtime_interleave: bool,
     ) -> Option<(Arc<CoSimResult>, bool)> {
-        self.lock().lookup(requester, weight_fp, act_fp, mode, runtime_interleave)
+        self.lock(self.shard_for(weight_fp, act_fp)).lookup(
+            requester,
+            weight_fp,
+            act_fp,
+            mode,
+            runtime_interleave,
+        )
     }
 
-    /// [`WeightCache::insert`] under the store lock.
+    /// [`WeightCache::insert`] under the key's shard lock.
     pub fn insert(
         &self,
         owner: u64,
@@ -351,13 +421,29 @@ impl SharedWeightCache {
         runtime_interleave: bool,
         result: CoSimResult,
     ) -> u64 {
-        self.lock().insert(owner, weight_fp, act_fp, mode, runtime_interleave, result)
+        self.lock(self.shard_for(weight_fp, act_fp)).insert(
+            owner,
+            weight_fp,
+            act_fp,
+            mode,
+            runtime_interleave,
+            result,
+        )
     }
 
-    fn lock(&self) -> std::sync::MutexGuard<'_, WeightCache> {
-        // Cache operations never panic mid-mutation; recover the guard
-        // rather than poisoning every sibling worker if one ever does.
-        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    fn lock<'a>(&self, shard: &'a Mutex<WeightCache>) -> std::sync::MutexGuard<'a, WeightCache> {
+        match shard.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                // contended: count the wait, then block like before
+                self.lock_waits.fetch_add(1, Ordering::Relaxed);
+                shard.lock().unwrap_or_else(PoisonError::into_inner)
+            }
+            // Cache operations never panic mid-mutation; recover the
+            // guard rather than poisoning every sibling worker if one
+            // ever does.
+            Err(TryLockError::Poisoned(e)) => e.into_inner(),
+        }
     }
 }
 
@@ -560,5 +646,77 @@ mod tests {
         let s = store.stats();
         assert_eq!((s.hits, s.shared_hits, s.misses), (1, 1, 0));
         assert!(!SharedWeightCache::new(CacheConfig::default()).enabled());
+    }
+
+    #[test]
+    fn store_shards_by_capacity_threshold() {
+        // small capacities: one shard — byte-identical to the historical
+        // unsharded store (one LRU, one protect window)
+        assert_eq!(
+            SharedWeightCache::new(CacheConfig { capacity: 4, ..Default::default() })
+                .shard_count(),
+            1
+        );
+        assert_eq!(
+            SharedWeightCache::new(CacheConfig { capacity: 63, ..Default::default() })
+                .shard_count(),
+            1
+        );
+        let store = SharedWeightCache::new(CacheConfig { capacity: 64, ..Default::default() });
+        assert_eq!(store.shard_count(), CACHE_SHARDS);
+        assert_eq!(store.occupied_shards(), 0);
+        assert_eq!(store.lock_waits(), 0);
+    }
+
+    #[test]
+    fn sharded_store_routes_consistently_and_aggregates_stats() {
+        let store = SharedWeightCache::new(CacheConfig { capacity: 64, ..Default::default() });
+        let me = store.register();
+        // spray keys evenly across shards (consecutive weight
+        // fingerprints walk the shard mask); every insert must be found
+        // again (consistent routing) and totals aggregate across shards
+        for i in 0..32u128 {
+            store.insert(me, i, 0, PrecisionMode::W2, false, result(i as u64));
+        }
+        assert_eq!(store.entries(), 32);
+        for i in 0..32u128 {
+            let (res, cross) = store.lookup(me, i, 0, PrecisionMode::W2, false).unwrap();
+            assert_eq!(res.cycles, i as u64);
+            assert!(!cross);
+        }
+        assert!(store.lookup(me, 777, 0, PrecisionMode::W2, false).is_none());
+        let s = store.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (32, 1, 32));
+        assert_eq!(store.occupied_shards(), CACHE_SHARDS);
+    }
+
+    #[test]
+    fn sharded_store_counts_contended_lock_acquisitions() {
+        use std::sync::atomic::AtomicBool;
+        let store = SharedWeightCache::new(CacheConfig { capacity: 64, ..Default::default() });
+        let me = store.register();
+        store.insert(me, 1, 1, PrecisionMode::W2, false, result(1));
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let hammer = |store: SharedWeightCache, stop: &AtomicBool| {
+                move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        // all threads probe the same key → same shard
+                        let _ = store.lookup(me, 1, 1, PrecisionMode::W2, false);
+                    }
+                }
+            };
+            let workers: Vec<_> =
+                (0..4).map(|_| scope.spawn(hammer(store.clone(), &stop))).collect();
+            // spin until contention is observed (bounded by test timeout)
+            while store.lock_waits() == 0 {
+                std::hint::spin_loop();
+            }
+            stop.store(true, Ordering::Relaxed);
+            for w in workers {
+                w.join().unwrap();
+            }
+        });
+        assert!(store.lock_waits() > 0);
     }
 }

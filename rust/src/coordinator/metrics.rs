@@ -15,13 +15,17 @@ use super::client::Priority;
 /// clusters here) are simply not gauged per-worker.
 pub const MAX_DEQUE_GAUGES: usize = 16;
 
-/// Nearest-rank percentile over an ascending-sorted, non-empty slice —
-/// the one index/rounding rule shared by [`Metrics::queue_percentile`]
-/// and the per-class series in [`Metrics::render`].
+/// Nearest-rank percentile over an ascending-sorted, non-empty slice:
+/// rank `⌈p/100 · len⌉`, so the reported value is always an observed
+/// sample and p = 100 is exactly the maximum (p = 0 degenerates to the
+/// first element). This is the one index/rounding rule shared by
+/// [`Metrics::queue_percentile`] and the per-class series in
+/// [`Metrics::render`] — it used to *document* nearest-rank while
+/// implementing linear-index rounding, which disagreed at small `len`.
 fn percentile_of_sorted(sorted: &[f32], p: f64) -> f64 {
     debug_assert!(!sorted.is_empty());
-    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
-    sorted[idx] as f64
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)] as f64
 }
 
 /// One class's queue-wait samples from a reservoir snapshot, sorted
@@ -60,6 +64,128 @@ impl AtomicF64 {
 
     fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shards in the default lock-free latency reservoir. Recording threads
+/// are assigned round-robin, so any worker count up to this records with
+/// zero cross-thread contention.
+const LATENCY_SHARDS: usize = 16;
+
+/// Packed samples retained per (shard, class) ring — together the shards
+/// keep a sliding window of the most recent
+/// `LATENCY_SHARDS · LATENCY_SHARD_CAP` samples per class.
+const LATENCY_SHARD_CAP: usize = 1024;
+
+/// Ring-slot sentinel for "never written". A real sample cannot collide:
+/// it would need both packed halves to be all-ones NaN bit patterns, and
+/// recorded latencies are finite (`record` re-maps the collision anyway).
+const EMPTY_SLOT: u64 = u64::MAX;
+
+/// One shard of the lock-free latency reservoir: per-class rings of
+/// packed `(queue f32 << 32 | service f32)` words. The class is implied
+/// by which ring a slot lives in, so a single atomic store publishes a
+/// whole sample — a concurrent scrape can never observe a torn
+/// `(queue, service, class)` triple.
+#[derive(Debug)]
+struct LatencyShard {
+    slots: [Vec<AtomicU64>; Priority::COUNT],
+    /// Monotone per-class write counters; slot = counter % CAP.
+    written: [AtomicU64; Priority::COUNT],
+}
+
+impl Default for LatencyShard {
+    fn default() -> LatencyShard {
+        LatencyShard {
+            slots: std::array::from_fn(|_| {
+                (0..LATENCY_SHARD_CAP).map(|_| AtomicU64::new(EMPTY_SLOT)).collect()
+            }),
+            written: Default::default(),
+        }
+    }
+}
+
+/// The default latency reservoir: each recording thread owns one of
+/// [`LATENCY_SHARDS`] private shards for its lifetime (round-robin
+/// assignment on first record), so saturated recording never serializes
+/// on a mutex; a scrape reads every slot with plain atomic loads.
+#[derive(Debug)]
+struct ShardedReservoir {
+    shards: Vec<LatencyShard>,
+}
+
+impl Default for ShardedReservoir {
+    fn default() -> ShardedReservoir {
+        ShardedReservoir {
+            shards: (0..LATENCY_SHARDS).map(|_| LatencyShard::default()).collect(),
+        }
+    }
+}
+
+impl ShardedReservoir {
+    /// The calling thread's stable shard (assigned round-robin from a
+    /// process-wide counter on first use).
+    fn my_shard(&self) -> &LatencyShard {
+        use std::cell::Cell;
+        static NEXT_SHARD: AtomicU64 = AtomicU64::new(0);
+        thread_local! {
+            static SHARD: Cell<usize> = const { Cell::new(usize::MAX) };
+        }
+        let idx = SHARD.with(|s| {
+            let mut v = s.get();
+            if v == usize::MAX {
+                v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARDS;
+                s.set(v);
+            }
+            v
+        });
+        &self.shards[idx]
+    }
+
+    fn record(&self, sample: (f32, f32, u8)) {
+        let mut packed = ((sample.0.to_bits() as u64) << 32) | sample.1.to_bits() as u64;
+        if packed == EMPTY_SLOT {
+            // unreachable for finite latencies; keep the sentinel unique
+            packed -= 1;
+        }
+        let shard = self.my_shard();
+        let class = sample.2 as usize;
+        let slot =
+            shard.written[class].fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARD_CAP;
+        shard.slots[class][slot].store(packed, Ordering::Relaxed);
+    }
+
+    /// Copy out every occupied slot. A slot whose index was reserved but
+    /// whose store has not landed yet still holds the sentinel or a
+    /// previous complete sample — never a half-written one.
+    fn snapshot(&self) -> Vec<(f32, f32, u8)> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            for class in 0..Priority::COUNT {
+                let n = (shard.written[class].load(Ordering::Relaxed) as usize)
+                    .min(LATENCY_SHARD_CAP);
+                for slot in &shard.slots[class][..n] {
+                    let v = slot.load(Ordering::Relaxed);
+                    if v == EMPTY_SLOT {
+                        continue;
+                    }
+                    out.push((
+                        f32::from_bits((v >> 32) as u32),
+                        f32::from_bits(v as u32),
+                        class as u8,
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Shards holding at least one recorded sample (occupancy gauge).
+    fn occupied(&self) -> usize {
+        self.shards
+            .iter()
+            .filter(|sh| sh.written.iter().any(|w| w.load(Ordering::Relaxed) > 0))
+            .count()
     }
 }
 
@@ -147,6 +273,19 @@ pub struct Metrics {
     pub worker_deque_depth: [AtomicU64; MAX_DEQUE_GAUGES],
     /// Batches queued in the fabric's global injector (gauge).
     pub injector_depth: AtomicU64,
+    /// Times a latency-recording thread found the legacy reservoir mutex
+    /// held and had to wait (stays 0 in the default sharded mode, which
+    /// has no lock to wait on — the differential the hot-path bench
+    /// measures).
+    pub metrics_lock_waits: AtomicU64,
+    /// Cumulative shared-weight-cache lock acquisitions that had to wait
+    /// (gauge mirroring the store's own counter; stored by the
+    /// coordinator worker loop alongside the cache delta flush).
+    pub cache_lock_waits: AtomicU64,
+    /// Lock shards in the shared weight-cache store (gauge).
+    pub cache_shards: AtomicU64,
+    /// Weight-cache shards currently holding at least one entry (gauge).
+    pub cache_shards_occupied: AtomicU64,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
@@ -158,12 +297,20 @@ pub struct Metrics {
     /// Per-class queue-wait sums (means need a denominator:
     /// `class_completed`).
     class_queue_seconds: [AtomicF64; Priority::COUNT],
-    /// Bounded latency sample reservoir for percentile reporting:
+    /// Legacy bounded latency reservoir for percentile reporting:
     /// `(queue_s, service_s, class index)` triples plus the rolling
     /// overwrite cursor. At [`Metrics::MAX_SAMPLES`] the oldest sample is
     /// overwritten (sliding window), so percentiles keep tracking a
     /// long-running server instead of freezing on its warm-up period.
+    /// Only written when `use_legacy_reservoir` is set ([`Metrics::legacy`]);
+    /// the default path records into `sharded` without any lock.
     samples: std::sync::Mutex<(Vec<(f32, f32, u8)>, usize)>,
+    /// Default lock-free latency store (see [`ShardedReservoir`]).
+    sharded: ShardedReservoir,
+    /// Route `record_latency` through the single-mutex `samples`
+    /// reservoir instead of `sharded` — the pre-sharding behavior, kept
+    /// as the differential/contention baseline.
+    use_legacy_reservoir: bool,
 }
 
 impl Metrics {
@@ -200,15 +347,36 @@ impl Metrics {
         self.pool_queue_seconds.get()
     }
 
-    /// Mean pool queue wait (s) per dispatched shard.
-    pub fn mean_pool_queue_seconds(&self) -> f64 {
-        let n = self.pool_shards_dispatched.load(Ordering::Relaxed).max(1);
-        self.pool_queue_seconds.get() / n as f64
+    /// Mean pool queue wait (s) per dispatched shard; `None` before any
+    /// shard was dispatched. (This used to divide by `count.max(1)`,
+    /// which silently fabricated a `total/1` "mean" whenever seconds had
+    /// accrued with a zero denominator.)
+    pub fn mean_pool_queue_seconds(&self) -> Option<f64> {
+        match self.pool_shards_dispatched.load(Ordering::Relaxed) {
+            0 => None,
+            n => Some(self.pool_queue_seconds.get() / n as f64),
+        }
     }
 
-    /// Cap on retained latency samples (a sliding window once full;
-    /// enough for stable p99 over any bench run here).
+    /// Cap on retained latency samples in the legacy reservoir (a
+    /// sliding window once full; enough for stable p99 over any bench
+    /// run here). The sharded store's window is
+    /// `LATENCY_SHARDS · LATENCY_SHARD_CAP` per class.
     pub const MAX_SAMPLES: usize = 1 << 16;
+
+    /// Metrics recording latencies through the legacy single-mutex
+    /// reservoir — the pre-sharding hot path, kept as the differential
+    /// and contention baseline that `bench_hotpath` measures the default
+    /// sharded store against. Every series and reader is identical; only
+    /// the `record_latency` synchronization differs.
+    pub fn legacy() -> Metrics {
+        Metrics { use_legacy_reservoir: true, ..Metrics::default() }
+    }
+
+    /// Whether this instance records through the legacy mutex reservoir.
+    pub fn is_legacy_reservoir(&self) -> bool {
+        self.use_legacy_reservoir
+    }
 
     /// Record host-side latencies for one completed request of `class`.
     pub fn record_latency(&self, queue_s: f64, service_s: f64, class: Priority) {
@@ -217,7 +385,15 @@ impl Metrics {
         self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed);
         self.class_queue_seconds[class.index()].add(queue_s);
         let sample = (queue_s as f32, service_s as f32, class.index() as u8);
-        let mut guard = self.samples.lock().expect("metrics lock");
+        if !self.use_legacy_reservoir {
+            self.sharded.record(sample);
+            return;
+        }
+        let mut guard = self.samples.try_lock().unwrap_or_else(|_| {
+            // contended: count the wait, then block like before
+            self.metrics_lock_waits.fetch_add(1, Ordering::Relaxed);
+            self.samples.lock().expect("metrics lock")
+        });
         let (buf, cursor) = &mut *guard;
         if buf.len() < Self::MAX_SAMPLES {
             buf.push(sample);
@@ -226,6 +402,17 @@ impl Metrics {
             // server's percentiles never freeze on its warm-up period
             buf[*cursor] = sample;
             *cursor = (*cursor + 1) % Self::MAX_SAMPLES;
+        }
+    }
+
+    /// One coherent copy of the latency reservoir, whichever hot-path
+    /// store is active — every percentile/summary reader works over this
+    /// so the two stores are observationally identical.
+    fn sample_snapshot(&self) -> Vec<(f32, f32, u8)> {
+        if self.use_legacy_reservoir {
+            self.samples.lock().expect("metrics lock").0.clone()
+        } else {
+            self.sharded.snapshot()
         }
     }
 
@@ -256,10 +443,14 @@ impl Metrics {
         self.percentile(p, |s| s.0, Some(class))
     }
 
-    /// Mean queue wait (s) per completed request of one class.
-    pub fn mean_class_queue_seconds(&self, class: Priority) -> f64 {
-        let n = self.class_completed[class.index()].load(Ordering::Relaxed).max(1);
-        self.class_queue_seconds[class.index()].get() / n as f64
+    /// Mean queue wait (s) per completed request of one class; `None`
+    /// before any request of that class completed (no fabricated
+    /// `total/1` means — see [`Metrics::mean_pool_queue_seconds`]).
+    pub fn mean_class_queue_seconds(&self, class: Priority) -> Option<f64> {
+        match self.class_completed[class.index()].load(Ordering::Relaxed) {
+            0 => None,
+            n => Some(self.class_queue_seconds[class.index()].get() / n as f64),
+        }
     }
 
     fn percentile(
@@ -269,21 +460,18 @@ impl Metrics {
         class: Option<Priority>,
     ) -> Option<f64> {
         assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
-        // the lock is held only for the filtered copy; the O(n log n)
-        // sort runs outside it so a metrics scrape cannot stall workers
-        // recording latencies
-        let mut vals: Vec<f32> = {
-            let guard = self.samples.lock().expect("metrics lock");
-            guard
-                .0
-                .iter()
-                .filter(|s| match class {
-                    None => true,
-                    Some(c) => s.2 == c.index() as u8,
-                })
-                .map(&f)
-                .collect()
-        };
+        // snapshot first (on the legacy store the lock is held only for
+        // the copy); the O(n log n) sort runs over the copy so a metrics
+        // scrape cannot stall workers recording latencies
+        let mut vals: Vec<f32> = self
+            .sample_snapshot()
+            .iter()
+            .filter(|s| match class {
+                None => true,
+                Some(c) => s.2 == c.index() as u8,
+            })
+            .map(&f)
+            .collect();
         if vals.is_empty() {
             return None;
         }
@@ -296,16 +484,22 @@ impl Metrics {
         self.sim_energy_j.get()
     }
 
-    /// Mean host queue wait (s) per completed request.
-    pub fn mean_queue_seconds(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed).max(1);
-        self.queue_seconds.get() / n as f64
+    /// Mean host queue wait (s) per completed request; `None` before any
+    /// request completed.
+    pub fn mean_queue_seconds(&self) -> Option<f64> {
+        match self.completed.load(Ordering::Relaxed) {
+            0 => None,
+            n => Some(self.queue_seconds.get() / n as f64),
+        }
     }
 
-    /// Mean host service time (s) per completed request.
-    pub fn mean_service_seconds(&self) -> f64 {
-        let n = self.completed.load(Ordering::Relaxed).max(1);
-        self.service_seconds.get() / n as f64
+    /// Mean host service time (s) per completed request; `None` before
+    /// any request completed.
+    pub fn mean_service_seconds(&self) -> Option<f64> {
+        match self.completed.load(Ordering::Relaxed) {
+            0 => None,
+            n => Some(self.service_seconds.get() / n as f64),
+        }
     }
 
     /// Human-readable per-class queue-wait table (one row per
@@ -313,9 +507,8 @@ impl Metrics {
     /// serve and trace reports cannot drift apart.
     pub fn class_queue_summary(&self) -> String {
         // one reservoir snapshot for all six percentiles (same pattern
-        // as `render`): one lock+copy, one sort per class
-        let snapshot: Vec<(f32, f32, u8)> =
-            self.samples.lock().expect("metrics lock").0.clone();
+        // as `render`): one copy, one sort per class
+        let snapshot = self.sample_snapshot();
         let mut s = String::new();
         for class in Priority::ALL {
             let i = class.index();
@@ -328,7 +521,7 @@ impl Metrics {
                 class.name(),
                 self.class_accepted[i].load(Ordering::Relaxed),
                 self.class_completed[i].load(Ordering::Relaxed),
-                self.mean_class_queue_seconds(class) * 1e3,
+                self.mean_class_queue_seconds(class).unwrap_or(0.0) * 1e3,
                 pct(50.0) * 1e3,
                 pct(95.0) * 1e3
             ));
@@ -389,9 +582,8 @@ impl Metrics {
         s.push_str(&format!("adip_prepare_seconds_total {:.6e}\n", self.prepare_seconds_total()));
         // one snapshot of the reservoir serves every per-class percentile
         // below — per-class filter + sort over the copy, instead of a
-        // lock + copy + sort per series
-        let snapshot: Vec<(f32, f32, u8)> =
-            self.samples.lock().expect("metrics lock").0.clone();
+        // copy + sort per series
+        let snapshot = self.sample_snapshot();
         for class in Priority::ALL {
             let l = class.name();
             let i = class.index();
@@ -405,7 +597,7 @@ impl Metrics {
             ));
             s.push_str(&format!(
                 "adip_class_queue_seconds_mean{{class=\"{l}\"}} {:.6e}\n",
-                self.mean_class_queue_seconds(class)
+                self.mean_class_queue_seconds(class).unwrap_or(0.0)
             ));
             let waits = sorted_class_waits(&snapshot, class);
             for (pname, p) in [("p50", 50.0), ("p95", 95.0)] {
@@ -430,11 +622,37 @@ impl Metrics {
         ));
         s.push_str(&format!(
             "adip_pool_queue_seconds_mean {:.6e}\n",
-            self.mean_pool_queue_seconds()
+            self.mean_pool_queue_seconds().unwrap_or(0.0)
+        ));
+        s.push_str(&c(
+            "metrics_lock_waits_total",
+            self.metrics_lock_waits.load(Ordering::Relaxed),
+        ));
+        let (lat_shards, lat_occupied) = if self.use_legacy_reservoir {
+            (0, 0)
+        } else {
+            (LATENCY_SHARDS as u64, self.sharded.occupied() as u64)
+        };
+        s.push_str(&c("latency_shards", lat_shards));
+        s.push_str(&c("latency_shards_occupied", lat_occupied));
+        s.push_str(&c(
+            "weight_cache_lock_waits_total",
+            self.cache_lock_waits.load(Ordering::Relaxed),
+        ));
+        s.push_str(&c("weight_cache_shards", self.cache_shards.load(Ordering::Relaxed)));
+        s.push_str(&c(
+            "weight_cache_shards_occupied",
+            self.cache_shards_occupied.load(Ordering::Relaxed),
         ));
         s.push_str(&format!("adip_sim_energy_joules_total {:.6e}\n", self.energy_j()));
-        s.push_str(&format!("adip_queue_seconds_mean {:.6e}\n", self.mean_queue_seconds()));
-        s.push_str(&format!("adip_service_seconds_mean {:.6e}\n", self.mean_service_seconds()));
+        s.push_str(&format!(
+            "adip_queue_seconds_mean {:.6e}\n",
+            self.mean_queue_seconds().unwrap_or(0.0)
+        ));
+        s.push_str(&format!(
+            "adip_service_seconds_mean {:.6e}\n",
+            self.mean_service_seconds().unwrap_or(0.0)
+        ));
         for (name, v) in [
             ("adip_queue_seconds_p50", self.queue_percentile(50.0)),
             ("adip_queue_seconds_p99", self.queue_percentile(99.0)),
@@ -470,8 +688,31 @@ mod tests {
         m.record_completion(1, 0.0, 0, 1);
         m.record_latency(0.2, 0.4, Priority::Batch);
         m.record_latency(0.4, 0.6, Priority::Batch);
-        assert!((m.mean_queue_seconds() - 0.3).abs() < 1e-12);
-        assert!((m.mean_service_seconds() - 0.5).abs() < 1e-12);
+        assert!((m.mean_queue_seconds().unwrap() - 0.3).abs() < 1e-12);
+        assert!((m.mean_service_seconds().unwrap() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn means_are_none_until_a_denominator_exists() {
+        let m = Metrics::default();
+        assert!(m.mean_queue_seconds().is_none());
+        assert!(m.mean_service_seconds().is_none());
+        assert!(m.mean_pool_queue_seconds().is_none());
+        assert!(m.mean_class_queue_seconds(Priority::Interactive).is_none());
+        // regression: seconds accrued against a zero denominator must not
+        // fabricate a mean (the old `.max(1)` paths reported `total/1`)
+        m.queue_seconds.add(0.7);
+        m.service_seconds.add(0.7);
+        m.pool_queue_seconds.add(0.7);
+        m.class_queue_seconds[Priority::Interactive.index()].add(0.7);
+        assert!(m.mean_queue_seconds().is_none());
+        assert!(m.mean_service_seconds().is_none());
+        assert!(m.mean_pool_queue_seconds().is_none());
+        assert!(m.mean_class_queue_seconds(Priority::Interactive).is_none());
+        // the rendered exposition falls back to an explicit zero
+        let text = m.render();
+        assert!(text.contains("adip_queue_seconds_mean 0.000000e0"), "{text}");
+        assert!(text.contains("adip_pool_queue_seconds_mean 0.000000e0"));
     }
 
     #[test]
@@ -483,8 +724,9 @@ mod tests {
         assert_eq!(m.class_completed[Priority::Interactive.index()].load(Ordering::Relaxed), 2);
         assert_eq!(m.class_completed[Priority::Background.index()].load(Ordering::Relaxed), 1);
         assert_eq!(m.class_completed[Priority::Batch.index()].load(Ordering::Relaxed), 0);
-        assert!((m.mean_class_queue_seconds(Priority::Interactive) - 0.2).abs() < 1e-9);
-        assert!((m.mean_class_queue_seconds(Priority::Background) - 0.8).abs() < 1e-9);
+        assert!((m.mean_class_queue_seconds(Priority::Interactive).unwrap() - 0.2).abs() < 1e-9);
+        assert!((m.mean_class_queue_seconds(Priority::Background).unwrap() - 0.8).abs() < 1e-9);
+        assert!(m.mean_class_queue_seconds(Priority::Batch).is_none());
         let p50 = m.class_queue_percentile(Priority::Background, 50.0).unwrap();
         assert!((p50 - 0.8).abs() < 1e-6, "{p50}");
         assert!(m.class_queue_percentile(Priority::Batch, 50.0).is_none());
@@ -558,8 +800,121 @@ mod tests {
             "adip_pool_worker_panics_total",
             "adip_pool_queue_seconds_total",
             "adip_pool_queue_seconds_mean",
+            "adip_metrics_lock_waits_total",
+            "adip_latency_shards",
+            "adip_latency_shards_occupied",
+            "adip_weight_cache_lock_waits_total",
+            "adip_weight_cache_shards",
+            "adip_weight_cache_shards_occupied",
         ] {
             assert!(text.contains(key), "{key} missing from:\n{text}");
+        }
+    }
+
+    #[test]
+    fn nearest_rank_percentile_boundaries() {
+        // nearest-rank: rank ⌈p/100·len⌉, clamped; p=0 → first element
+        for (vals, p, want) in [
+            (&[1.0f32][..], 0.0, 1.0),
+            (&[1.0][..], 50.0, 1.0),
+            (&[1.0][..], 100.0, 1.0),
+            (&[1.0, 2.0][..], 0.0, 1.0),
+            (&[1.0, 2.0][..], 50.0, 1.0),
+            (&[1.0, 2.0][..], 100.0, 2.0),
+            (&[1.0, 2.0, 3.0, 4.0][..], 0.0, 1.0),
+            (&[1.0, 2.0, 3.0, 4.0][..], 50.0, 2.0),
+            (&[1.0, 2.0, 3.0, 4.0][..], 75.0, 3.0),
+            (&[1.0, 2.0, 3.0, 4.0][..], 76.0, 4.0),
+            (&[1.0, 2.0, 3.0, 4.0][..], 100.0, 4.0),
+        ] {
+            assert_eq!(
+                percentile_of_sorted(vals, p),
+                want,
+                "len {} p{p}",
+                vals.len()
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_and_legacy_reservoirs_agree_on_percentiles() {
+        let sharded = Metrics::default();
+        let legacy = Metrics::legacy();
+        assert!(!sharded.is_legacy_reservoir());
+        assert!(legacy.is_legacy_reservoir());
+        for i in 1..=100 {
+            for m in [&sharded, &legacy] {
+                m.record_latency(i as f64 / 100.0, (101 - i) as f64 / 100.0, Priority::Batch);
+            }
+        }
+        for p in [0.0, 25.0, 50.0, 95.0, 100.0] {
+            assert_eq!(sharded.queue_percentile(p), legacy.queue_percentile(p), "p{p}");
+            assert_eq!(sharded.service_percentile(p), legacy.service_percentile(p), "p{p}");
+        }
+        assert_eq!(
+            sharded.class_queue_percentile(Priority::Batch, 50.0),
+            legacy.class_queue_percentile(Priority::Batch, 50.0)
+        );
+        assert_eq!(sharded.class_queue_summary(), legacy.class_queue_summary());
+        // the lock-free store reports its shards; legacy reports none
+        assert!(sharded.render().contains("adip_latency_shards 16"));
+        assert!(sharded.render().contains("adip_latency_shards_occupied 1"));
+        assert!(legacy.render().contains("adip_latency_shards 0"));
+        assert_eq!(legacy.metrics_lock_waits.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn concurrent_scrape_never_panics_or_drops_samples() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        // 4 writers × 256 samples ≤ one shard ring's capacity, so every
+        // sample is retained even if thread→shard assignment collides
+        const WRITERS: usize = 4;
+        const PER_WRITER: usize = 256;
+        for m in [Metrics::default(), Metrics::legacy()] {
+            let stop = Arc::new(AtomicBool::new(false));
+            std::thread::scope(|scope| {
+                let writers: Vec<_> = (0..WRITERS)
+                    .map(|w| {
+                        let m = &m;
+                        scope.spawn(move || {
+                            for i in 0..PER_WRITER {
+                                let v = (w * PER_WRITER + i) as f64 * 1e-6;
+                                m.record_latency(v, v, Priority::Interactive);
+                            }
+                        })
+                    })
+                    .collect();
+                let scraper = {
+                    let (m, stop) = (&m, &stop);
+                    scope.spawn(move || {
+                        let mut scrapes = 0u64;
+                        while !stop.load(Ordering::Relaxed) || scrapes == 0 {
+                            // scrapes racing saturated recording must
+                            // never panic or observe a torn sample
+                            let _ = m.queue_percentile(99.0);
+                            let _ = m.class_queue_summary();
+                            let _ = m.render();
+                            scrapes += 1;
+                        }
+                        scrapes
+                    })
+                };
+                for h in writers {
+                    h.join().unwrap();
+                }
+                stop.store(true, Ordering::Relaxed);
+                assert!(scraper.join().unwrap() >= 1);
+            });
+            // quiesced: nothing was dropped by either store
+            let total = (WRITERS * PER_WRITER) as u64;
+            assert_eq!(
+                m.class_completed[Priority::Interactive.index()].load(Ordering::Relaxed),
+                total
+            );
+            assert_eq!(m.sample_snapshot().len() as u64, total, "retained samples");
+            let p100 = m.queue_percentile(100.0).unwrap();
+            assert!((p100 - (total - 1) as f64 * 1e-6).abs() < 1e-9, "{p100}");
         }
     }
 
@@ -616,7 +971,7 @@ mod tests {
         assert_eq!(m.pool_shards_dispatched.load(Ordering::Relaxed), 6);
         assert_eq!(m.pool_worker_panics.load(Ordering::Relaxed), 1);
         assert!((m.pool_queue_seconds_total() - 0.4).abs() < 1e-12);
-        assert!((m.mean_pool_queue_seconds() - 0.4 / 6.0).abs() < 1e-12);
+        assert!((m.mean_pool_queue_seconds().unwrap() - 0.4 / 6.0).abs() < 1e-12);
         let text = m.render();
         assert!(text.contains("adip_pool_workers 8"));
         assert!(text.contains("adip_pool_shards_dispatched_total 6"));

@@ -51,7 +51,14 @@ impl CoreScheduler {
     /// execution backend (`Backend::CycleAccurate` pins the register-level
     /// golden path; used by calibration runs and the differential tests).
     pub fn with_backend(arch: Architecture, n: usize, backend: Backend) -> CoreScheduler {
-        let cfg = ArchConfig::with_n(n).with_backend(backend);
+        CoreScheduler::with_config(arch, ArchConfig::with_n(n).with_backend(backend))
+    }
+
+    /// Build a core from a full [`ArchConfig`] — the cluster layer uses
+    /// this to thread the functional kernel selection (`cfg.kernel` /
+    /// `cfg.kernel_threads`) through to every pool worker's array.
+    pub fn with_config(arch: Architecture, cfg: ArchConfig) -> CoreScheduler {
+        let backend = cfg.backend;
         CoreScheduler { cosim: CoSim::new(build_array(arch, cfg)), arch, backend }
     }
 

@@ -542,9 +542,16 @@ fn worker_loop(
         }
     }
     let _down = DownGuard(fabric.clone(), w);
+    // keep a handle to the store for the contention/occupancy gauges
+    // (with private per-worker stores the gauges show the last flusher's
+    // store — the shared default is the configuration they exist for)
+    let cache_handle = cache.clone();
     let mut core =
         ClusterScheduler::with_shared_cache(cfg.arch, cfg.n, cfg.backend, cfg.cluster, cache);
     let cache_enabled = cfg.cluster.cache.enabled();
+    if cache_enabled {
+        metrics.cache_shards.store(cache_handle.shard_count() as u64, Ordering::Relaxed);
+    }
     let mut cache_seen = core.cache_stats();
     let mut pool_seen = core.pool_stats();
     while let Some(group) = fabric.pop(w) {
@@ -584,6 +591,14 @@ fn worker_loop(
         cache_seen = cache_now;
         if d.hits + d.misses + d.evictions > 0 {
             metrics.record_cache(d.hits, d.shared_hits, d.misses, d.evictions);
+        }
+        if cache_enabled {
+            metrics
+                .cache_lock_waits
+                .store(cache_handle.lock_waits(), Ordering::Relaxed);
+            metrics
+                .cache_shards_occupied
+                .store(cache_handle.occupied_shards() as u64, Ordering::Relaxed);
         }
         let pool_now = core.pool_stats();
         let pd = pool_now.delta_since(&pool_seen);
@@ -943,6 +958,69 @@ mod tests {
             assert_eq!(coord.metrics().completed.load(Ordering::Relaxed), 12, "{steal}");
             coord.shutdown();
         }
+    }
+
+    #[test]
+    fn cache_contention_gauges_surface_in_render() {
+        let coord = Coordinator::start(CoordinatorConfig {
+            // capacity ≥ MIN_SHARDED_CAPACITY: the store runs sharded
+            cluster: crate::cluster::ClusterConfig::with_cores(1).with_cache(64),
+            workers: 2,
+            ..cfg()
+        });
+        let mut rng = Rng::seeded(923);
+        let r = request(&mut rng, 1, 8);
+        for _ in 0..3 {
+            assert!(coord.submit_wait(r.clone()).unwrap().result.is_ok());
+        }
+        let text = coord.metrics().render();
+        coord.shutdown();
+        assert!(text.contains("adip_weight_cache_shards 8"), "{text}");
+        assert!(text.contains("adip_weight_cache_lock_waits_total"));
+        // repeated identical requests populate at least one shard
+        let m = |key: &str| {
+            text.lines()
+                .find(|l| l.starts_with(key))
+                .and_then(|l| l.split(' ').nth(1))
+                .and_then(|v| v.parse::<u64>().ok())
+                .unwrap_or_else(|| panic!("{key} missing:\n{text}"))
+        };
+        assert!(m("adip_weight_cache_shards_occupied") >= 1);
+        assert!(m("adip_weight_cache_hits_total") >= 1, "re-served request must hit");
+    }
+
+    #[test]
+    fn blocked_kernel_serves_identical_results_and_accounting() {
+        use crate::arch::KernelMode;
+        let mut rng = Rng::seeded(925);
+        let reqs: Vec<MatmulRequest> = (0..6u64).map(|i| request(&mut rng, i, 2)).collect();
+        let run = |kernel: KernelMode| {
+            let coord = Coordinator::start(CoordinatorConfig {
+                cluster: crate::cluster::ClusterConfig::with_cores(1)
+                    .with_kernel(kernel)
+                    .with_kernel_threads(2),
+                ..cfg()
+            });
+            let outs: Vec<_> = reqs
+                .iter()
+                .map(|r| {
+                    let o = coord.submit_wait(r.clone()).unwrap();
+                    (o.result.unwrap(), o.metrics.cycles, o.metrics.passes)
+                })
+                .collect();
+            let m = coord.metrics();
+            let totals = (
+                m.sim_cycles.load(Ordering::Relaxed),
+                m.passes.load(Ordering::Relaxed),
+                m.memory_bytes.load(Ordering::Relaxed),
+            );
+            coord.shutdown();
+            (outs, totals)
+        };
+        let (naive, naive_totals) = run(KernelMode::Naive);
+        let (blocked, blocked_totals) = run(KernelMode::Blocked);
+        assert_eq!(naive, blocked, "served kernels must be bit-exact");
+        assert_eq!(naive_totals, blocked_totals, "accounting must be kernel-invariant");
     }
 
     #[test]

@@ -150,9 +150,76 @@ impl Mat {
         out
     }
 
+    /// Blocked GEMM: `self (m×k) · other (k×n)`, bit-exact with
+    /// [`Mat::matmul`] (`i32` accumulation is exact in any order, and each
+    /// output element still accumulates in ascending `k`). `other` is
+    /// transposed once so the inner loop reduces two contiguous slices,
+    /// the loops are blocked so a `KERNEL_BLOCK`-sized patch of it stays
+    /// cache-resident, and the output is split into row bands executed on
+    /// `threads` scoped threads (0 = one per available CPU). This is the
+    /// `KernelMode::Blocked` serving kernel; [`Mat::matmul`] remains the
+    /// reference oracle and differential baseline.
+    pub fn matmul_blocked(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "inner dims: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut data = vec![0i32; m * n];
+        if m == 0 || k == 0 || n == 0 {
+            return Mat { rows: m, cols: n, data };
+        }
+        let threads = match threads {
+            0 => std::thread::available_parallelism().map_or(1, |t| t.get()),
+            t => t,
+        }
+        .min(m);
+        let bt = other.transpose();
+        let (a, btd) = (self.data.as_slice(), bt.data.as_slice());
+        let band = m.div_ceil(threads);
+        std::thread::scope(|scope| {
+            for (bi, out) in data.chunks_mut(band * n).enumerate() {
+                let work = move || matmul_band(a, btd, out, bi * band, k, n);
+                if threads == 1 {
+                    work();
+                } else {
+                    scope.spawn(work);
+                }
+            }
+        });
+        Mat { rows: m, cols: n, data }
+    }
+
     /// Max absolute element (for quick sanity checks).
     pub fn abs_max(&self) -> i32 {
         self.data.iter().map(|v| v.abs()).max().unwrap_or(0)
+    }
+}
+
+/// Cache block edge for [`Mat::matmul_blocked`]: a `64×64` `i32` patch of
+/// the transposed weight matrix is 16 KiB — comfortably L1-resident while
+/// every row of the band streams over it.
+const KERNEL_BLOCK: usize = 64;
+
+/// One row band of the blocked GEMM: `out = A[r0..r0+rows] · Bᵀᵀ`, with
+/// `bt` the k-contiguous transposed `B`. Blocking order is `k` outer then
+/// `j`, so each `(kb, jb)` patch of `bt` is reused by every row of the
+/// band before the next patch is touched; per output element the partial
+/// products still accumulate in ascending `k`.
+fn matmul_band(a: &[i32], bt: &[i32], out: &mut [i32], r0: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(KERNEL_BLOCK) {
+        let kend = (kb + KERNEL_BLOCK).min(k);
+        for jb in (0..n).step_by(KERNEL_BLOCK) {
+            let jend = (jb + KERNEL_BLOCK).min(n);
+            for (ri, orow) in out.chunks_mut(n).enumerate() {
+                let arow = &a[(r0 + ri) * k + kb..(r0 + ri) * k + kend];
+                for j in jb..jend {
+                    let brow = &bt[j * k + kb..j * k + kend];
+                    let mut acc = orow[j];
+                    for (&av, &bv) in arow.iter().zip(brow) {
+                        acc += av * bv;
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
     }
 }
 
@@ -235,6 +302,44 @@ mod tests {
         acc.accumulate(0, 0, &t);
         acc.accumulate(0, 0, &t);
         assert_eq!(acc, Mat::from_vec(2, 2, vec![2, 4, 6, 8]));
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes_and_thread_counts() {
+        crate::testutil::check(
+            "matmul-blocked-vs-naive",
+            15,
+            40,
+            |rng| {
+                // ragged shapes straddling the 64-wide block edge
+                let (m, k, n) = (1 + rng.below(97), 1 + rng.below(97), 1 + rng.below(97));
+                let threads = *rng.choose(&[0usize, 1, 2, 4]);
+                (Mat::random(rng, m, k, 8), Mat::random(rng, k, n, 4), threads)
+            },
+            |(a, b, threads)| {
+                if a.matmul_blocked(b, *threads) == a.matmul(b) {
+                    Ok(())
+                } else {
+                    Err(format!("blocked != naive at {threads} threads"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn blocked_handles_degenerate_and_multi_band_shapes() {
+        // empty output / empty inner dimension
+        let e = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        assert_eq!(e.matmul_blocked(&b, 4), e.matmul(&b));
+        let a = Mat::zeros(4, 0);
+        let b0 = Mat::zeros(0, 3);
+        assert_eq!(a.matmul_blocked(&b0, 2), a.matmul(&b0));
+        // more threads than rows: one band per row
+        let mut rng = Rng::seeded(16);
+        let a = Mat::random(&mut rng, 3, 70, 8);
+        let b = Mat::random(&mut rng, 70, 66, 8);
+        assert_eq!(a.matmul_blocked(&b, 16), a.matmul(&b));
     }
 
     #[test]

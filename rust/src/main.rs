@@ -5,7 +5,7 @@
 //! adip table  <table1|table2>                          regenerate a paper table
 //! adip all [--csv=true] [--out=DIR]                    every table + figure
 //! adip run   [--model=bitnet] [--arch=adip] [--n=32]   evaluate a workload
-//! adip gemm  [--m=..] [--k=..] [--ncols=..] [--mode=8x2] [--arch=adip] [--n=8]
+//! adip gemm  [--m=..] [--k=..] [--ncols=..] [--mode=8x2] [--arch=adip] [--n=8] [--kernel=blocked]
 //! adip cluster [--cores=4] [--split=m] [--weight-cache=64] [--repeat=2]
 //! adip serve [--requests=64] [--workers=2] [--n=16] [--queue=256]
 //! adip artifacts [--dir=artifacts]                     PJRT runtime self-test
@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::analytical::gemm::MemoryPolicy;
-use adip::arch::{Architecture, Backend};
+use adip::arch::{Architecture, Backend, KernelMode};
 use adip::balance::{CoalesceConfig, StealPolicy};
 use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
@@ -82,7 +82,7 @@ commands:
   table <name>     regenerate table1|table2
   all              every artifact (--csv=true for CSV, --out=DIR to write files)
   run              evaluate an attention workload (--model, --arch, --n)
-  gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n/--backend)
+  gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n/--backend/--kernel)
   cluster          shard one GEMM across a core mesh (--cores/--split/--weight-cache/--repeat)
   serve            coordinator demo (--requests/--workers/--n/--queue/--backend)
   trace            trace-driven serving (--model/--layers/--rate/--workers/--backend/--invocations)
@@ -92,6 +92,16 @@ commands:
 backends (--backend=functional|cycle):
   functional       direct O(M*K*N) GEMM + analytical timing (default, fast)
   cycle            register-level cycle simulation (golden reference, slow)
+
+functional kernel (gemm/cluster/serve/trace; cycle backend ignores it):
+  --kernel=K       host arithmetic kernel: naive (reference triple loop,
+                   default — the differential baseline) or blocked
+                   (cache-blocked multithreaded kernel; bit-exact with
+                   naive and identical simulated accounting, faster host
+                   wall-clock)
+  --kernel-threads=T
+                   row-band threads for the blocked kernel (0 = one per
+                   available CPU, default)
 
 cluster flags (cluster/serve/trace):
   --cores=P        array cores per cluster (serve/trace: per worker; default 1)
@@ -157,6 +167,13 @@ fn parse_backend(cfg: &Config) -> Result<Backend> {
     }
 }
 
+fn parse_kernel(cfg: &Config) -> Result<KernelMode> {
+    match cfg.get("kernel") {
+        None => Ok(KernelMode::default()),
+        Some(raw) => raw.parse::<KernelMode>().map_err(|e| anyhow!("--kernel: {e}")),
+    }
+}
+
 fn parse_prepare(cfg: &Config) -> Result<PrepareMode> {
     match cfg.get("prepare") {
         None => Ok(PrepareMode::default()),
@@ -181,7 +198,9 @@ fn parse_cluster(cfg: &Config) -> Result<ClusterConfig> {
         .with_split(split)
         .with_cache(cfg.get_usize("weight-cache", 0)?)
         .with_cache_protect(cfg.get_usize("cache-protect", 0)?)
-        .with_pool(pool))
+        .with_pool(pool)
+        .with_kernel(parse_kernel(cfg)?)
+        .with_kernel_threads(cfg.get_usize("kernel-threads", 0)?))
 }
 
 fn parse_steal(cfg: &Config) -> Result<StealPolicy> {
@@ -249,16 +268,22 @@ fn cmd_gemm(cfg: &Config) -> Result<()> {
     let mode = cfg.get_mode("mode", PrecisionMode::W2)?;
     let arch = parse_arch(cfg)?;
     let backend = parse_backend(cfg)?;
+    let kernel = parse_kernel(cfg)?;
     let mut rng = Rng::seeded(cfg.get_usize("seed", 42)? as u64);
     let a = Mat::random(&mut rng, m, k, 8);
     let b = Mat::random(&mut rng, k, ncols, mode.weight_bits());
-    let acfg = adip::arch::ArchConfig::with_n(n).with_backend(backend);
+    let acfg = adip::arch::ArchConfig::with_n(n)
+        .with_backend(backend)
+        .with_kernel(kernel)
+        .with_kernel_threads(cfg.get_usize("kernel-threads", 0)?);
     let mut sim = CoSim::new(adip::arch::build_array(arch, acfg));
     let t0 = std::time::Instant::now();
     let r = sim.run_gemm(&a, &b, mode, false)?;
     let host = t0.elapsed();
     anyhow::ensure!(r.outputs[0] == a.matmul(&b), "co-sim output mismatch vs reference");
-    println!("GEMM {m}x{k}x{ncols} on {arch} {n}x{n}, mode {mode}, backend {backend}");
+    println!(
+        "GEMM {m}x{k}x{ncols} on {arch} {n}x{n}, mode {mode}, backend {backend}, kernel {kernel}"
+    );
     println!("  passes:        {}", r.passes);
     println!("  cycles:        {}", r.cycles);
     println!("  energy:        {:.3} µJ", r.energy_j * 1e6);
@@ -549,7 +574,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         "cluster pool:  {} workers | {} shards dispatched | queue wait mean {:.1} µs",
         m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
         m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed),
-        m.mean_pool_queue_seconds() * 1e6
+        m.mean_pool_queue_seconds().unwrap_or(0.0) * 1e6
     );
     println!(
         "prepare:       {} batches prepared | {:.3} ms total | {} aging promotions",

@@ -12,13 +12,15 @@
 //! * the functional backend's cycles equal the closed-form
 //!   [`estimate_gemm`] / [`estimate_gemm_set`] for every case.
 //!
-//! ≥ 240 randomized cases run per suite execution (120 single-matrix +
-//! 120 shared-input sets), plus targeted runtime-interleave and
-//! larger-shape checks.
+//! ≥ 300 randomized cases run per suite execution (120 single-matrix +
+//! 120 shared-input sets + 60 host-kernel differential), plus targeted
+//! runtime-interleave and larger-shape checks. The host-kernel axis
+//! ([`KernelMode::Blocked`] at 1/2/4 threads vs [`KernelMode::Naive`])
+//! must be invisible in both outputs and accounting.
 
 use adip::analytical::gemm::{estimate_gemm, estimate_gemm_set, MemoryPolicy};
 use adip::analytical::GemmShape;
-use adip::arch::{build_array, ArchConfig, Architecture, Backend, SystolicArray};
+use adip::arch::{build_array, ArchConfig, Architecture, Backend, KernelMode, SystolicArray};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::sim::{CoSim, CoSimResult};
@@ -229,6 +231,69 @@ fn functional_matches_estimate_at_scale() {
             assert_eq!(r.memory.paper_total_bytes(), est.memory_bytes, "{arch} {mode}");
         }
     }
+}
+
+fn cosim_kernel(
+    arch: Architecture,
+    n: usize,
+    kernel: KernelMode,
+    threads: usize,
+) -> CoSim<Box<dyn SystolicArray + Send>> {
+    CoSim::new(build_array(
+        arch,
+        ArchConfig::with_n(n)
+            .with_backend(Backend::Functional)
+            .with_kernel(kernel)
+            .with_kernel_threads(threads),
+    ))
+}
+
+/// Host-kernel differential axis: the blocked (tiled, multithreaded)
+/// functional kernel vs the naive reference kernel vs the cycle-accurate
+/// golden. The kernel selector is a pure host-arithmetic choice — outputs
+/// must be bit-exact and every accounting counter identical across
+/// kernels and thread counts (including ragged shapes that don't divide
+/// the block size and degenerate single-row/column bands).
+#[test]
+fn kernel_differential_conformance() {
+    check(
+        "backend-diff-kernel",
+        4009,
+        60,
+        |rng| {
+            let arch = *rng.choose(&Architecture::ALL);
+            let mode = *rng.choose(&PrecisionMode::ALL);
+            let n = *rng.choose(&[4usize, 8]);
+            let threads = *rng.choose(&[1usize, 2, 4]);
+            let s = 1 + rng.below(3);
+            let (m, k, nc) = (1 + rng.below(33), 1 + rng.below(33), 1 + rng.below(33));
+            let a = Mat::random(rng, m, k, 8);
+            let bs: Vec<Mat> =
+                (0..s).map(|_| Mat::random(rng, k, nc, mode.weight_bits())).collect();
+            (arch, mode, n, threads, a, bs)
+        },
+        |(arch, mode, n, threads, a, bs)| {
+            let refs: Vec<&Mat> = bs.iter().collect();
+            let what = format!("{arch} {mode} n={n} t={threads} s={}", bs.len());
+            let blocked = cosim_kernel(*arch, *n, KernelMode::Blocked, *threads)
+                .run_gemm_set(a, &refs, *mode, false)
+                .map_err(|e| e.to_string())?;
+            let naive = cosim_kernel(*arch, *n, KernelMode::Naive, 1)
+                .run_gemm_set(a, &refs, *mode, false)
+                .map_err(|e| e.to_string())?;
+            assert_equivalent(&blocked, &naive, &format!("{what} [blocked vs naive]"))?;
+            let golden = cosim(*arch, *n, Backend::CycleAccurate)
+                .run_gemm_set(a, &refs, *mode, false)
+                .map_err(|e| e.to_string())?;
+            assert_equivalent(&blocked, &golden, &format!("{what} [blocked vs golden]"))?;
+            for (out, b) in blocked.outputs.iter().zip(bs.iter()) {
+                if *out != a.matmul(b) {
+                    return Err(format!("{what}: blocked outputs != reference GEMM"));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 /// Both backends reject the same malformed inputs (shape mismatch,

@@ -229,8 +229,8 @@ fn interactive_waits_less_than_background_under_saturation() {
     let m = coord.metrics();
     assert_eq!(m.class_completed[Priority::Interactive.index()].load(Ordering::Relaxed), 12);
     assert_eq!(m.class_completed[Priority::Background.index()].load(Ordering::Relaxed), 12);
-    let mi = m.mean_class_queue_seconds(Priority::Interactive);
-    let mb = m.mean_class_queue_seconds(Priority::Background);
+    let mi = m.mean_class_queue_seconds(Priority::Interactive).expect("interactive completed");
+    let mb = m.mean_class_queue_seconds(Priority::Background).expect("background completed");
     assert!(
         mi < mb,
         "interactive mean queue wait {mi:.6}s must be below background {mb:.6}s"
