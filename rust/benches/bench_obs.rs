@@ -1,0 +1,148 @@
+//! Bench: lifecycle-tracing overhead — the tentpole's performance bar.
+//!
+//! Measures saturated-server throughput (the `bench_hotpath` Q/K/V
+//! pattern: 2 workers, rotating shared input) with tracing off, fully on,
+//! and sampled at 1/16, plus a recorder micro-benchmark (events/s into
+//! the sharded rings and the cost of the disabled fast path). Emitted as
+//! `BENCH_obs.json` for CI trend tracking.
+//!
+//! Gates (soft-retried to ride out scheduler noise, then hard):
+//! * full tracing costs ≤ 5% of saturated throughput,
+//! * 1/16 sampling costs ≤ 1%.
+//! Both compare best-of-N wall clock, the most noise-robust statistic the
+//! tiny harness offers.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use adip::arch::Architecture;
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, SubmitOptions, TraceMode,
+};
+use adip::dataflow::Mat;
+use adip::obs::{Recorder, SpanKind, LANE_CLIENT};
+use adip::testutil::Rng;
+
+const REQS: usize = 96;
+const DIM: usize = 64;
+
+/// One saturated serving run under the given trace mode; returns host
+/// seconds for the whole stream.
+fn saturated_serve(trace: TraceMode) -> f64 {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 32,
+        workers: 2,
+        queue_capacity: 2 * REQS,
+        batch_window: 8,
+        trace,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(41);
+    let t0 = std::time::Instant::now();
+    let mut shared = Arc::new(Mat::random(&mut rng, DIM, DIM, 8));
+    let tickets: Vec<_> = (0..REQS)
+        .map(|i| {
+            if i % 3 == 0 {
+                shared = Arc::new(Mat::random(&mut rng, DIM, DIM, 8));
+            }
+            let req = MatmulRequest {
+                id: 0,
+                input_id: (i / 3) as u64,
+                a: shared.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, DIM, 32, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            };
+            client.submit(SubmitOptions::new(req)).expect("queue sized")
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    coord.shutdown();
+    dt
+}
+
+/// Best observed throughput (req/s) over `reps` runs.
+fn best_req_per_s(trace: TraceMode, reps: usize) -> f64 {
+    let stat = common::bench(reps, || saturated_serve(trace));
+    REQS as f64 / stat.min_s
+}
+
+fn main() {
+    // Recorder micro-bench: raw event ingest (single writer, enabled)
+    // and the disabled fast path (one relaxed load + branch per call).
+    // EVENTS stays under the rings' aggregate capacity so the enabled
+    // case measures real slot-claim stores, not the overflow path.
+    const EVENTS: usize = 60_000;
+    let on = common::bench(5, || {
+        let r = Recorder::default();
+        r.enable(TraceMode::On);
+        for i in 0..EVENTS {
+            r.event(SpanKind::Queue, i as u64, LANE_CLIENT, 0);
+        }
+        assert_eq!(r.dropped(), 0, "sized under capacity");
+    });
+    let disabled = Recorder::default();
+    let off = common::bench(5, || {
+        for i in 0..EVENTS {
+            disabled.event(SpanKind::Queue, i as u64, LANE_CLIENT, 0);
+        }
+    });
+    println!("== recorder micro-bench ({EVENTS} events/iter) ==");
+    common::report("event ingest (enabled)", on, EVENTS as f64, "ev");
+    common::report("event ingest (disabled path)", off, EVENTS as f64, "ev");
+    assert_eq!(disabled.snapshot().len(), 0, "disabled recorder must store nothing");
+    assert_eq!(disabled.dropped(), 0);
+
+    // Saturated-throughput differential: off vs on vs sample=16. The
+    // comparison is retried on gate failure — a saturated 2-worker serve
+    // has real scheduler noise, and the 1% gate is tighter than one
+    // cold run's variance; the best observation across attempts is the
+    // honest estimate of each mode's capability.
+    println!("\n== saturated server tracing overhead ({REQS} requests, 2 workers) ==");
+    let mut base = 0f64;
+    let mut full = 0f64;
+    let mut sampled = 0f64;
+    let (mut over_full, mut over_sampled) = (f64::INFINITY, f64::INFINITY);
+    for attempt in 0..3 {
+        base = base.max(best_req_per_s(TraceMode::Off, 5));
+        full = full.max(best_req_per_s(TraceMode::On, 5));
+        sampled = sampled.max(best_req_per_s(TraceMode::Sample(16), 5));
+        over_full = (base / full - 1.0).max(0.0);
+        over_sampled = (base / sampled - 1.0).max(0.0);
+        println!(
+            "  attempt {attempt}: off {base:.1} req/s | on {full:.1} ({:+.2}%) | sample=16 {sampled:.1} ({:+.2}%)",
+            over_full * 100.0,
+            over_sampled * 100.0
+        );
+        if over_full <= 0.05 && over_sampled <= 0.01 {
+            break;
+        }
+    }
+    assert!(
+        over_full <= 0.05,
+        "full tracing overhead {:.2}% exceeds the 5% gate",
+        over_full * 100.0
+    );
+    assert!(
+        over_sampled <= 0.01,
+        "sample=16 tracing overhead {:.2}% exceeds the 1% gate",
+        over_sampled * 100.0
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_obs\",\n  \"recorder\": {{\"events_per_iter\": {EVENTS}, \"enabled_ev_per_s\": {:.0}, \"disabled_ev_per_s\": {:.0}}},\n  \"saturated_server\": {{\"requests\": {REQS}, \"off_req_per_s\": {base:.2}, \"on_req_per_s\": {full:.2}, \"sample16_req_per_s\": {sampled:.2}, \"overhead_on\": {over_full:.4}, \"overhead_sample16\": {over_sampled:.4}}}\n}}\n",
+        EVENTS as f64 / on.min_s,
+        EVENTS as f64 / off.min_s
+    );
+    let path = std::env::var("BENCH_OBS_JSON").unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
+}

@@ -151,6 +151,7 @@ mod tests {
             runtime_interleave: act_act,
             batch_seq: seq,
             weight_fps: None,
+            queued: None,
         }
     }
 
@@ -200,7 +201,7 @@ mod tests {
         assert_eq!(memoized, vec![fingerprint(&[b.as_ref()])]);
         // prepare reuses the memoized hashes (debug builds re-verify them)
         let metrics = Metrics::default();
-        let prepared = prepare_batch(work, true, &metrics);
+        let prepared = prepare_batch(work, 0, true, &metrics);
         assert_eq!(prepared.fps.expect("cache on").weights, memoized);
     }
 
@@ -213,7 +214,7 @@ mod tests {
         let raw_key = coalesce_key(&mut raw).unwrap();
         let metrics = Metrics::default();
         let mut prepared =
-            WorkMsg::Prepared(prepare_batch(batch(a, vec![b], false, 1), true, &metrics));
+            WorkMsg::Prepared(prepare_batch(batch(a, vec![b], false, 1), 0, true, &metrics));
         assert_eq!(coalesce_key(&mut prepared).unwrap(), raw_key);
     }
 

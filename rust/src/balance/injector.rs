@@ -67,6 +67,7 @@ use std::time::Instant;
 
 use crate::coordinator::metrics::{Metrics, MAX_DEQUE_GAUGES};
 use crate::coordinator::prepare::WorkMsg;
+use crate::obs::{lane_worker, SpanKind};
 
 use super::coalescer::{coalesce_key, CoalesceConfig, CoalesceKey};
 use super::steal::{choose_victim, StealPolicy};
@@ -171,6 +172,9 @@ impl Fabric {
         // so the worker's prepare never re-hashes them — while prepared
         // batches reuse their prepare-stage fingerprints outright.
         let key = if self.coalesce.active() { coalesce_key(&mut msg) } else { None };
+        // fabric-residency stamp: read by the popping worker to attribute
+        // `ResponseMetrics::fabric_seconds` and the Fabric trace span
+        msg.mark_queued(Instant::now());
         let mut s = self.lock();
         // Block on the bounds only while someone can make progress: a
         // fully dead worker set must degrade to unbounded queueing (the
@@ -301,6 +305,17 @@ impl Fabric {
                 // FIFO-steal: the victim's oldest (coldest) batch
                 let it = s.deques[victim].pop_front().expect("non-empty victim");
                 s.outstanding -= 1;
+                // attributed to the directly-stolen batch's tickets only;
+                // Aggressive's re-homed extras are a bulk rebalance, not a
+                // per-ticket migration worth an event each
+                for env in it.msg.envelopes() {
+                    self.metrics.trace.event(
+                        SpanKind::Steal,
+                        env.req.id,
+                        lane_worker(worker),
+                        ((victim as u64) << 32) | worker as u64,
+                    );
+                }
                 let mut stolen = 1u64;
                 if self.steal == StealPolicy::Aggressive {
                     // one grab rebalances: re-home half of the remainder
@@ -422,6 +437,7 @@ mod tests {
             runtime_interleave: false,
             batch_seq: seq,
             weight_fps: None,
+            queued: None,
         })
     }
 

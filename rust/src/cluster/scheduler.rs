@@ -52,6 +52,7 @@ use crate::coordinator::scheduler::{attribute_members, CoreScheduler, MemberResu
 use crate::coordinator::select_mode;
 use crate::coordinator::MatmulRequest;
 use crate::dataflow::Mat;
+use crate::obs::{Recorder, SpanKind};
 use crate::quant::PrecisionMode;
 use crate::sim::cosim::CoSimResult;
 
@@ -384,6 +385,14 @@ pub struct ClusterScheduler {
     arch: Architecture,
     backend: Backend,
     n: usize,
+    /// Lifecycle-trace sink (disabled by default — a bare scheduler
+    /// records nothing). The coordinator's worker loop installs its
+    /// metrics recorder + worker lane via [`ClusterScheduler::set_trace`].
+    trace: Recorder,
+    trace_lane: u32,
+    /// Ticket the next run's shard/reduce spans are attributed to
+    /// (stamped per batch by the worker loop; 0 for direct use).
+    trace_ticket: u64,
 }
 
 impl ClusterScheduler {
@@ -438,7 +447,24 @@ impl ClusterScheduler {
             arch,
             backend,
             n,
+            trace: Recorder::default(),
+            trace_lane: 0,
+            trace_ticket: 0,
         }
+    }
+
+    /// Install a lifecycle-trace recorder and the lane (thread track) this
+    /// scheduler's shard/reduce spans render under. Observability only —
+    /// the recorder never influences partitioning, caching or execution.
+    pub(crate) fn set_trace(&mut self, rec: Recorder, lane: u32) {
+        self.trace = rec;
+        self.trace_lane = lane;
+    }
+
+    /// Attribute the next run's shard/reduce spans to this ticket (the
+    /// coordinator worker stamps the batch leader's request id).
+    pub(crate) fn set_trace_ticket(&mut self, id: u64) {
+        self.trace_ticket = id;
     }
 
     /// Cluster configuration.
@@ -572,7 +598,9 @@ impl ClusterScheduler {
             let result = match probe {
                 Probe::Hit(res) => res,
                 Probe::Miss(key) => {
+                    let t0 = Instant::now();
                     let res = self.exec_whole(&mut ops, mode, runtime_interleave)?;
+                    self.trace.span_since(SpanKind::Shard, self.trace_ticket, self.trace_lane, t0, 0);
                     self.store(key, mode, runtime_interleave, &res);
                     res
                 }
@@ -599,6 +627,9 @@ impl ClusterScheduler {
         let mut keys: Vec<Option<(u128, u128)>> = vec![None; plans.len()];
         let mut pending: Vec<PendingShard> = Vec::new();
         let mut submitted = 0usize;
+        // Dispatch instants keyed by plan slot — Shard spans cover
+        // dispatch → completion (queue wait + execution); hits record none.
+        let mut dispatched_at: Vec<Option<Instant>> = vec![None; plans.len()];
         for (i, p) in plans.iter().enumerate() {
             let a_full =
                 p.rows.start == 0 && p.inner.start == 0 && p.rows.len() == m && p.inner.len() == k;
@@ -642,11 +673,13 @@ impl ClusterScheduler {
                         Some(ts) => ts.into_iter().map(Arc::new).collect(),
                         None => (0..ops.bs.len()).map(|j| ops.share_b(j)).collect(),
                     };
+                    let now = Instant::now();
+                    dispatched_at[i] = Some(now);
                     match &mut self.engine {
                         Engine::Pool(pool) => {
                             pool.submit(ShardJob {
                                 seq: i,
-                                submitted: Instant::now(),
+                                submitted: now,
                                 work: ShardWork::Run {
                                     a: a_sh,
                                     bs: bs_sh,
@@ -676,6 +709,15 @@ impl ClusterScheduler {
             };
             for (seq, res) in executed {
                 let res = res.map_err(|e| anyhow!("shard {seq}: {e:#}"))?;
+                if let Some(t0) = dispatched_at[seq] {
+                    self.trace.span_since(
+                        SpanKind::Shard,
+                        self.trace_ticket,
+                        self.trace_lane,
+                        t0,
+                        seq as u64,
+                    );
+                }
                 self.store(keys[seq], mode, runtime_interleave, &res);
                 slots[seq] = Some(res);
             }
@@ -686,6 +728,15 @@ impl ClusterScheduler {
             match done_rx.recv() {
                 Ok(d) => {
                     let res = d.result.map_err(|e| anyhow!("shard {}: {e}", d.seq))?;
+                    if let Some(t0) = dispatched_at[d.seq] {
+                        self.trace.span_since(
+                            SpanKind::Shard,
+                            self.trace_ticket,
+                            self.trace_lane,
+                            t0,
+                            d.seq as u64,
+                        );
+                    }
                     self.store(keys[d.seq], mode, runtime_interleave, &res);
                     slots[d.seq] = Some(res);
                 }
@@ -700,6 +751,7 @@ impl ClusterScheduler {
         // Reduce outputs + accounting. Cache hits already carry zeroed
         // accounting (see `probe_with`), but the broadcast `max` rule must
         // see only *executed* shards, so hits are masked out of the combine.
+        let t_reduce = Instant::now();
         let executed_refs: Vec<&CoSimResult> = shard_results
             .iter()
             .zip(&hit)
@@ -717,6 +769,13 @@ impl ClusterScheduler {
         let shard_outputs: Vec<Vec<Mat>> =
             shard_results.into_iter().map(|r| r.outputs).collect();
         let outputs = assemble_outputs(m, nc, ops.bs.len(), &plans, &shard_outputs);
+        self.trace.span_since(
+            SpanKind::Reduce,
+            self.trace_ticket,
+            self.trace_lane,
+            t_reduce,
+            plans.len() as u64,
+        );
 
         Ok(ClusterRun {
             result: CoSimResult { outputs, passes, cycles, energy_j, memory },

@@ -139,6 +139,10 @@ pub struct WindowPlan {
     pub batches: Vec<Batch>,
     /// Requests whose class was promoted at least one level by aging.
     pub promotions: u64,
+    /// Indices into the window's `reqs` of the promoted requests, in
+    /// window (arrival) order — `promoted.len() == promotions`. Lets the
+    /// router attribute each promotion to its ticket in the trace.
+    pub promoted: Vec<usize>,
 }
 
 /// Form batches over a window of pending requests with all-default lanes
@@ -170,6 +174,7 @@ pub fn plan_batches(reqs: &[MatmulRequest], lanes: &[Lane], aging_us: u64) -> Wi
     // keys keep FIFO order; aging subtracts one class per full interval
     // waited, flooring at Interactive.
     let mut promotions = 0u64;
+    let mut promoted: Vec<usize> = Vec::new();
     let ranked: Vec<usize> = {
         let mut keyed: Vec<(usize, i64, usize)> = Vec::with_capacity(reqs.len());
         for (idx, lane) in lanes.iter().enumerate() {
@@ -178,6 +183,7 @@ pub fn plan_batches(reqs: &[MatmulRequest], lanes: &[Lane], aging_us: u64) -> Wi
             let eff = base.saturating_sub(promote);
             if eff < base {
                 promotions += 1;
+                promoted.push(idx);
             }
             // Promotion lifts the class only; within a class the uniform
             // deadline→FIFO order applies to promoted and native work
@@ -235,7 +241,7 @@ pub fn plan_batches(reqs: &[MatmulRequest], lanes: &[Lane], aging_us: u64) -> Wi
             }
         }
     }
-    WindowPlan { batches: out, promotions }
+    WindowPlan { batches: out, promotions, promoted }
 }
 
 #[cfg(test)]

@@ -32,6 +32,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::{Recorder, SpanKind, SpanRecord, LANE_CLIENT};
+
 use super::metrics::Metrics;
 use super::request::{Envelope, MatmulRequest, RequestId, RequestOutcome};
 
@@ -226,7 +228,8 @@ impl Client {
             Ok(()) => {
                 m.accepted.fetch_add(1, Ordering::Relaxed);
                 m.class_accepted[priority.index()].fetch_add(1, Ordering::Relaxed);
-                Ok(Ticket { id, priority, rx, claimed: false })
+                m.trace.event(SpanKind::Submit, id, LANE_CLIENT, priority.rank() as u64);
+                Ok(Ticket { id, priority, rx, claimed: false, recorder: m.trace.clone() })
             }
             Err(TrySendError::Full(_)) => {
                 m.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -285,6 +288,9 @@ pub struct Ticket {
     /// after the outcome is consumed — the flag, not the channel state,
     /// is the contract).
     claimed: bool,
+    /// Handle onto the coordinator's trace recorder, so the ticket can
+    /// pull its own lifecycle spans ([`Ticket::trace`]).
+    recorder: Recorder,
 }
 
 impl Ticket {
@@ -296,6 +302,16 @@ impl Ticket {
     /// The class the request was submitted under.
     pub fn priority(&self) -> Priority {
         self.priority
+    }
+
+    /// This ticket's lifecycle spans, in `(start, seq)` order — empty
+    /// while tracing is off ([`crate::obs::TraceMode::Off`], the default)
+    /// or when sampling skipped this ticket. Spans recorded after the
+    /// call (e.g. the worker's `complete` event racing a prompt waiter)
+    /// appear in later calls; for the full picture, call after the
+    /// outcome arrived.
+    pub fn trace(&self) -> Vec<SpanRecord> {
+        self.recorder.for_ticket(self.id)
     }
 
     /// Block until the outcome arrives.

@@ -6,13 +6,17 @@
 //! makes prepare/execute overlap observable — plus prepared totals,
 //! prepare seconds and aging promotions).
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::Recorder;
 
 use super::client::Priority;
 
 /// How many per-worker deque-depth gauges the balance fabric exports
-/// individually; workers beyond this (unrealistic for the simulated
-/// clusters here) are simply not gauged per-worker.
+/// individually; workers beyond this are not gauged per-worker — the
+/// `adip_worker_deque_gauges_truncated` gauge counts the untracked tail
+/// so dashboards can tell it is missing.
 pub const MAX_DEQUE_GAUGES: usize = 16;
 
 /// Nearest-rank percentile over an ascending-sorted, non-empty slice:
@@ -286,6 +290,11 @@ pub struct Metrics {
     pub cache_shards: AtomicU64,
     /// Weight-cache shards currently holding at least one entry (gauge).
     pub cache_shards_occupied: AtomicU64,
+    /// Per-ticket lifecycle trace recorder (see [`crate::obs`]). Off —
+    /// and unallocated — by default; `Coordinator::start` enables it
+    /// per `CoordinatorConfig::trace`. Lives on the metrics handle so
+    /// every pipeline stage that can count can also trace.
+    pub trace: Recorder,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
@@ -529,139 +538,322 @@ impl Metrics {
         s
     }
 
-    /// Prometheus-style text exposition.
+    /// Prometheus text exposition. Every emitted series is preceded by
+    /// its `# HELP`/`# TYPE` comment pair, and series whose value is
+    /// genuinely absent (a mean or percentile whose denominator or
+    /// sample set is empty — `Option<f64>::None` internally) are
+    /// omitted entirely instead of rendered as a fabricated `0.0`.
+    ///
+    /// HELP text never contains `{` or `\n`, so line-oriented scrapers
+    /// that key on `name{label=...}` prefixes cannot mistake a comment
+    /// for a sample.
     pub fn render(&self) -> String {
         let mut s = String::new();
-        let c = |name: &str, v: u64| format!("adip_{name} {v}\n");
-        s.push_str(&c("requests_accepted_total", self.accepted.load(Ordering::Relaxed)));
-        s.push_str(&c("requests_rejected_total", self.rejected.load(Ordering::Relaxed)));
-        s.push_str(&c("requests_completed_total", self.completed.load(Ordering::Relaxed)));
-        s.push_str(&c("requests_failed_total", self.failed.load(Ordering::Relaxed)));
-        s.push_str(&c("batches_total", self.batches.load(Ordering::Relaxed)));
-        s.push_str(&c("batches_fused_total", self.fused_batches.load(Ordering::Relaxed)));
-        s.push_str(&c("sim_cycles_total", self.sim_cycles.load(Ordering::Relaxed)));
-        s.push_str(&c("tile_passes_total", self.passes.load(Ordering::Relaxed)));
-        s.push_str(&c("sim_memory_bytes_total", self.memory_bytes.load(Ordering::Relaxed)));
-        s.push_str(&c("weight_cache_hits_total", self.cache_hits.load(Ordering::Relaxed)));
-        s.push_str(&c(
-            "weight_cache_shared_hits_total",
-            self.cache_shared_hits.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c("weight_cache_misses_total", self.cache_misses.load(Ordering::Relaxed)));
-        s.push_str(&c(
-            "weight_cache_evictions_total",
-            self.cache_evictions.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c("queue_depth", self.queue_depth.load(Ordering::Relaxed)));
-        s.push_str(&c("shed_total", self.shed.load(Ordering::Relaxed)));
-        s.push_str(&c(
-            "deadline_demotions_total",
-            self.deadline_demotions.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c("steals_total", self.steals.load(Ordering::Relaxed)));
-        s.push_str(&c("steal_failures_total", self.steal_failures.load(Ordering::Relaxed)));
-        s.push_str(&c(
-            "coalesced_passes_total",
-            self.coalesced_passes.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c(
-            "coalesced_members_total",
-            self.coalesced_members.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c("injector_depth", self.injector_depth.load(Ordering::Relaxed)));
-        let gauged = (self.balance_workers.load(Ordering::Relaxed) as usize).min(MAX_DEQUE_GAUGES);
-        for w in 0..gauged {
-            s.push_str(&format!(
-                "adip_worker_deque_depth{{worker=\"{w}\"}} {}\n",
-                self.worker_deque_depth[w].load(Ordering::Relaxed)
-            ));
+        self.render_scalar_counters(&mut s);
+        // per-worker deque gauges: the first MAX_DEQUE_GAUGES workers
+        // individually, plus an explicit gauge for the untracked tail so
+        // dashboards can tell when depth data is missing
+        let workers = self.balance_workers.load(Ordering::Relaxed) as usize;
+        let gauged = workers.min(MAX_DEQUE_GAUGES);
+        if gauged > 0 {
+            head(&mut s, "worker_deque_depth", "gauge", "Balance-fabric deque depth per worker.");
+            for w in 0..gauged {
+                let _ = writeln!(
+                    s,
+                    "adip_worker_deque_depth{{worker=\"{w}\"}} {}",
+                    self.worker_deque_depth[w].load(Ordering::Relaxed)
+                );
+            }
         }
-        s.push_str(&c("prepared_depth", self.prepared_depth.load(Ordering::Relaxed)));
-        s.push_str(&c("prepared_batches_total", self.prepared_batches.load(Ordering::Relaxed)));
-        s.push_str(&c("aging_promotions_total", self.aging_promotions.load(Ordering::Relaxed)));
-        s.push_str(&format!("adip_prepare_seconds_total {:.6e}\n", self.prepare_seconds_total()));
+        series_u64(
+            &mut s,
+            "worker_deque_gauges_truncated",
+            "gauge",
+            "Workers whose deque depth is not gauged individually (worker count beyond the gauge array).",
+            workers.saturating_sub(MAX_DEQUE_GAUGES) as u64,
+        );
+        series_f64(
+            &mut s,
+            "prepare_seconds_total",
+            "counter",
+            "Host seconds spent in the prepare stage.",
+            self.prepare_seconds_total(),
+        );
+        self.render_class_series(&mut s);
+        self.render_pool_and_contention(&mut s);
+        series_u64(
+            &mut s,
+            "trace_dropped_total",
+            "counter",
+            "Trace records lost to full trace rings (tracing never blocks the hot path).",
+            self.trace.dropped(),
+        );
+        series_f64(
+            &mut s,
+            "sim_energy_joules_total",
+            "counter",
+            "Total simulated energy in joules.",
+            self.energy_j(),
+        );
+        series_opt(
+            &mut s,
+            "queue_seconds_mean",
+            "Mean host queue wait per completed request; absent until a request completes.",
+            self.mean_queue_seconds(),
+        );
+        series_opt(
+            &mut s,
+            "service_seconds_mean",
+            "Mean host service time per completed request; absent until a request completes.",
+            self.mean_service_seconds(),
+        );
+        for (name, help, v) in [
+            (
+                "queue_seconds_p50",
+                "Queue-wait p50 over recent samples; absent without samples.",
+                self.queue_percentile(50.0),
+            ),
+            (
+                "queue_seconds_p99",
+                "Queue-wait p99 over recent samples; absent without samples.",
+                self.queue_percentile(99.0),
+            ),
+            (
+                "service_seconds_p50",
+                "Service-time p50 over recent samples; absent without samples.",
+                self.service_percentile(50.0),
+            ),
+            (
+                "service_seconds_p99",
+                "Service-time p99 over recent samples; absent without samples.",
+                self.service_percentile(99.0),
+            ),
+        ] {
+            series_opt(&mut s, name, help, v);
+        }
+        s
+    }
+
+    fn render_scalar_counters(&self, s: &mut String) {
+        let rows: [(&str, &str, &str, u64); 22] = [
+            ("requests_accepted_total", "counter", "Requests accepted into the admission queue.", self.accepted.load(Ordering::Relaxed)),
+            ("requests_rejected_total", "counter", "Requests rejected by admission backpressure.", self.rejected.load(Ordering::Relaxed)),
+            ("requests_completed_total", "counter", "Requests completed successfully.", self.completed.load(Ordering::Relaxed)),
+            ("requests_failed_total", "counter", "Requests that failed validation or execution.", self.failed.load(Ordering::Relaxed)),
+            ("batches_total", "counter", "Batches executed.", self.batches.load(Ordering::Relaxed)),
+            ("batches_fused_total", "counter", "Batches that fused more than one matrix or request.", self.fused_batches.load(Ordering::Relaxed)),
+            ("sim_cycles_total", "counter", "Total simulated accelerator cycles.", self.sim_cycles.load(Ordering::Relaxed)),
+            ("tile_passes_total", "counter", "Total stationary-tile passes.", self.passes.load(Ordering::Relaxed)),
+            ("sim_memory_bytes_total", "counter", "Total simulated memory traffic in bytes.", self.memory_bytes.load(Ordering::Relaxed)),
+            ("weight_cache_hits_total", "counter", "Weight-tile cache hits.", self.cache_hits.load(Ordering::Relaxed)),
+            ("weight_cache_shared_hits_total", "counter", "Cache hits served by an entry another worker inserted.", self.cache_shared_hits.load(Ordering::Relaxed)),
+            ("weight_cache_misses_total", "counter", "Weight-tile cache misses.", self.cache_misses.load(Ordering::Relaxed)),
+            ("weight_cache_evictions_total", "counter", "Weight-tile cache evictions.", self.cache_evictions.load(Ordering::Relaxed)),
+            ("queue_depth", "gauge", "Requests currently queued for batching.", self.queue_depth.load(Ordering::Relaxed)),
+            ("shed_total", "counter", "Requests failed fast on a hopeless soft deadline.", self.shed.load(Ordering::Relaxed)),
+            ("deadline_demotions_total", "counter", "Deadline-hopeless requests demoted to the background class.", self.deadline_demotions.load(Ordering::Relaxed)),
+            ("steals_total", "counter", "Batches stolen from sibling worker deques.", self.steals.load(Ordering::Relaxed)),
+            ("steal_failures_total", "counter", "Idle pops that found no victim worth stealing from.", self.steal_failures.load(Ordering::Relaxed)),
+            ("coalesced_passes_total", "counter", "Cross-request coalesced passes executed.", self.coalesced_passes.load(Ordering::Relaxed)),
+            ("coalesced_members_total", "counter", "Member batches executed inside coalesced passes.", self.coalesced_members.load(Ordering::Relaxed)),
+            ("injector_depth", "gauge", "Batches queued in the balance fabric global injector.", self.injector_depth.load(Ordering::Relaxed)),
+            ("prepared_depth", "gauge", "Batches fully prepared but not yet picked up by a worker.", self.prepared_depth.load(Ordering::Relaxed)),
+        ];
+        for (name, kind, help, v) in rows {
+            series_u64(s, name, kind, help, v);
+        }
+        series_u64(
+            s,
+            "prepared_batches_total",
+            "counter",
+            "Batches that went through the prepare stage.",
+            self.prepared_batches.load(Ordering::Relaxed),
+        );
+        series_u64(
+            s,
+            "aging_promotions_total",
+            "counter",
+            "Requests promoted at least one class by the aging rule.",
+            self.aging_promotions.load(Ordering::Relaxed),
+        );
+    }
+
+    fn render_class_series(&self, s: &mut String) {
         // one snapshot of the reservoir serves every per-class percentile
         // below — per-class filter + sort over the copy, instead of a
         // copy + sort per series
         let snapshot = self.sample_snapshot();
+        head(s, "class_requests_accepted_total", "counter", "Requests accepted per service class.");
         for class in Priority::ALL {
-            let l = class.name();
-            let i = class.index();
-            s.push_str(&format!(
-                "adip_class_requests_accepted_total{{class=\"{l}\"}} {}\n",
-                self.class_accepted[i].load(Ordering::Relaxed)
-            ));
-            s.push_str(&format!(
-                "adip_class_requests_completed_total{{class=\"{l}\"}} {}\n",
-                self.class_completed[i].load(Ordering::Relaxed)
-            ));
-            s.push_str(&format!(
-                "adip_class_queue_seconds_mean{{class=\"{l}\"}} {:.6e}\n",
-                self.mean_class_queue_seconds(class).unwrap_or(0.0)
-            ));
-            let waits = sorted_class_waits(&snapshot, class);
-            for (pname, p) in [("p50", 50.0), ("p95", 95.0)] {
-                let v = if waits.is_empty() { 0.0 } else { percentile_of_sorted(&waits, p) };
-                s.push_str(&format!(
-                    "adip_class_queue_seconds_{pname}{{class=\"{l}\"}} {v:.6e}\n"
-                ));
+            let _ = writeln!(
+                s,
+                "adip_class_requests_accepted_total{{class=\"{}\"}} {}",
+                class.name(),
+                self.class_accepted[class.index()].load(Ordering::Relaxed)
+            );
+        }
+        head(s, "class_requests_completed_total", "counter", "Requests completed per service class.");
+        for class in Priority::ALL {
+            let _ = writeln!(
+                s,
+                "adip_class_requests_completed_total{{class=\"{}\"}} {}",
+                class.name(),
+                self.class_completed[class.index()].load(Ordering::Relaxed)
+            );
+        }
+        let means: Vec<(Priority, f64)> = Priority::ALL
+            .iter()
+            .filter_map(|&c| self.mean_class_queue_seconds(c).map(|v| (c, v)))
+            .collect();
+        if !means.is_empty() {
+            head(
+                s,
+                "class_queue_seconds_mean",
+                "gauge",
+                "Mean queue wait per completed request of the class; absent classes completed nothing.",
+            );
+            for (c, v) in means {
+                let _ = writeln!(
+                    s,
+                    "adip_class_queue_seconds_mean{{class=\"{}\"}} {v:.6e}",
+                    c.name()
+                );
             }
         }
-        s.push_str(&c("pool_workers", self.pool_workers.load(Ordering::Relaxed)));
-        s.push_str(&c(
+        let waits: Vec<Vec<f32>> =
+            Priority::ALL.iter().map(|&c| sorted_class_waits(&snapshot, c)).collect();
+        for (pname, p) in [("p50", 50.0), ("p95", 95.0)] {
+            let vals: Vec<(Priority, f64)> = Priority::ALL
+                .iter()
+                .filter(|c| !waits[c.index()].is_empty())
+                .map(|&c| (c, percentile_of_sorted(&waits[c.index()], p)))
+                .collect();
+            if vals.is_empty() {
+                continue;
+            }
+            head(
+                s,
+                &format!("class_queue_seconds_{pname}"),
+                "gauge",
+                "Queue-wait percentile over the class's recent samples; absent classes have none.",
+            );
+            for (c, v) in vals {
+                let _ = writeln!(
+                    s,
+                    "adip_class_queue_seconds_{pname}{{class=\"{}\"}} {v:.6e}",
+                    c.name()
+                );
+            }
+        }
+    }
+
+    fn render_pool_and_contention(&self, s: &mut String) {
+        series_u64(
+            s,
+            "pool_workers",
+            "gauge",
+            "Persistent cluster-pool worker threads.",
+            self.pool_workers.load(Ordering::Relaxed),
+        );
+        series_u64(
+            s,
             "pool_shards_dispatched_total",
+            "counter",
+            "Shard jobs dispatched to the cluster pool.",
             self.pool_shards_dispatched.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c(
+        );
+        series_u64(
+            s,
             "pool_worker_panics_total",
+            "counter",
+            "Cluster-pool worker threads lost to panics.",
             self.pool_worker_panics.load(Ordering::Relaxed),
-        ));
-        s.push_str(&format!(
-            "adip_pool_queue_seconds_total {:.6e}\n",
-            self.pool_queue_seconds_total()
-        ));
-        s.push_str(&format!(
-            "adip_pool_queue_seconds_mean {:.6e}\n",
-            self.mean_pool_queue_seconds().unwrap_or(0.0)
-        ));
-        s.push_str(&c(
+        );
+        series_f64(
+            s,
+            "pool_queue_seconds_total",
+            "counter",
+            "Host seconds shard jobs spent waiting in the pool queue.",
+            self.pool_queue_seconds_total(),
+        );
+        series_opt(
+            s,
+            "pool_queue_seconds_mean",
+            "Mean pool queue wait per dispatched shard; absent until a shard is dispatched.",
+            self.mean_pool_queue_seconds(),
+        );
+        series_u64(
+            s,
             "metrics_lock_waits_total",
+            "counter",
+            "Contended acquisitions of the legacy latency-reservoir lock.",
             self.metrics_lock_waits.load(Ordering::Relaxed),
-        ));
+        );
         let (lat_shards, lat_occupied) = if self.use_legacy_reservoir {
             (0, 0)
         } else {
             (LATENCY_SHARDS as u64, self.sharded.occupied() as u64)
         };
-        s.push_str(&c("latency_shards", lat_shards));
-        s.push_str(&c("latency_shards_occupied", lat_occupied));
-        s.push_str(&c(
+        series_u64(
+            s,
+            "latency_shards",
+            "gauge",
+            "Latency-reservoir shards (0 when the legacy locked store is active).",
+            lat_shards,
+        );
+        series_u64(
+            s,
+            "latency_shards_occupied",
+            "gauge",
+            "Latency-reservoir shards holding at least one sample.",
+            lat_occupied,
+        );
+        series_u64(
+            s,
             "weight_cache_lock_waits_total",
+            "counter",
+            "Contended acquisitions of weight-cache shard locks.",
             self.cache_lock_waits.load(Ordering::Relaxed),
-        ));
-        s.push_str(&c("weight_cache_shards", self.cache_shards.load(Ordering::Relaxed)));
-        s.push_str(&c(
+        );
+        series_u64(
+            s,
+            "weight_cache_shards",
+            "gauge",
+            "Weight-cache shards (0 for an unsharded cache).",
+            self.cache_shards.load(Ordering::Relaxed),
+        );
+        series_u64(
+            s,
             "weight_cache_shards_occupied",
+            "gauge",
+            "Weight-cache shards holding at least one entry.",
             self.cache_shards_occupied.load(Ordering::Relaxed),
-        ));
-        s.push_str(&format!("adip_sim_energy_joules_total {:.6e}\n", self.energy_j()));
-        s.push_str(&format!(
-            "adip_queue_seconds_mean {:.6e}\n",
-            self.mean_queue_seconds().unwrap_or(0.0)
-        ));
-        s.push_str(&format!(
-            "adip_service_seconds_mean {:.6e}\n",
-            self.mean_service_seconds().unwrap_or(0.0)
-        ));
-        for (name, v) in [
-            ("adip_queue_seconds_p50", self.queue_percentile(50.0)),
-            ("adip_queue_seconds_p99", self.queue_percentile(99.0)),
-            ("adip_service_seconds_p50", self.service_percentile(50.0)),
-            ("adip_service_seconds_p99", self.service_percentile(99.0)),
-        ] {
-            s.push_str(&format!("{name} {:.6e}\n", v.unwrap_or(0.0)));
-        }
-        s
+        );
+    }
+}
+
+/// `# HELP`/`# TYPE` preamble for one series. `help` must stay free of
+/// `{` and newlines (see [`Metrics::render`]).
+fn head(s: &mut String, name: &str, kind: &str, help: &str) {
+    debug_assert!(!help.contains('{') && !help.contains('\n'));
+    let _ = writeln!(s, "# HELP adip_{name} {help}\n# TYPE adip_{name} {kind}");
+}
+
+fn series_u64(s: &mut String, name: &str, kind: &str, help: &str, v: u64) {
+    head(s, name, kind, help);
+    let _ = writeln!(s, "adip_{name} {v}");
+}
+
+fn series_f64(s: &mut String, name: &str, kind: &str, help: &str, v: f64) {
+    head(s, name, kind, help);
+    let _ = writeln!(s, "adip_{name} {v:.6e}");
+}
+
+/// Gauge emitted only when the value exists — absent means/percentiles
+/// vanish from the exposition instead of reading as a fabricated zero.
+fn series_opt(s: &mut String, name: &str, help: &str, v: Option<f64>) {
+    if let Some(v) = v {
+        series_f64(s, name, "gauge", help, v);
     }
 }
 
@@ -709,10 +901,12 @@ mod tests {
         assert!(m.mean_service_seconds().is_none());
         assert!(m.mean_pool_queue_seconds().is_none());
         assert!(m.mean_class_queue_seconds(Priority::Interactive).is_none());
-        // the rendered exposition falls back to an explicit zero
+        // absent means vanish from the exposition entirely (no sample,
+        // no orphan HELP/TYPE pair) instead of reading as `0.0`
         let text = m.render();
-        assert!(text.contains("adip_queue_seconds_mean 0.000000e0"), "{text}");
-        assert!(text.contains("adip_pool_queue_seconds_mean 0.000000e0"));
+        assert!(!text.contains("adip_queue_seconds_mean"), "{text}");
+        assert!(!text.contains("adip_pool_queue_seconds_mean"), "{text}");
+        assert!(!text.contains("adip_class_queue_seconds_mean"), "{text}");
     }
 
     #[test]
@@ -792,23 +986,101 @@ mod tests {
             "adip_prepared_batches_total",
             "adip_aging_promotions_total",
             "adip_prepare_seconds_total",
+            "adip_worker_deque_gauges_truncated",
             "adip_class_requests_accepted_total{class=\"interactive\"}",
             "adip_class_requests_completed_total{class=\"background\"}",
-            "adip_class_queue_seconds_mean{class=\"batch\"}",
             "adip_pool_workers",
             "adip_pool_shards_dispatched_total",
             "adip_pool_worker_panics_total",
             "adip_pool_queue_seconds_total",
-            "adip_pool_queue_seconds_mean",
             "adip_metrics_lock_waits_total",
             "adip_latency_shards",
             "adip_latency_shards_occupied",
             "adip_weight_cache_lock_waits_total",
             "adip_weight_cache_shards",
             "adip_weight_cache_shards_occupied",
+            "adip_trace_dropped_total",
         ] {
             assert!(text.contains(key), "{key} missing from:\n{text}");
         }
+        // every series carries its HELP/TYPE preamble
+        assert!(text.contains("# HELP adip_requests_accepted_total "), "{text}");
+        assert!(text.contains("# TYPE adip_requests_accepted_total counter"));
+        assert!(text.contains("# TYPE adip_queue_depth gauge"));
+    }
+
+    #[test]
+    fn exposition_format_every_line_parses() {
+        fn valid_name(n: &str) -> bool {
+            !n.is_empty()
+                && n.chars().next().unwrap().is_ascii_alphabetic()
+                && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+        }
+        let m = Metrics::default();
+        // populate every subsystem so the optional series render too
+        m.record_completion(100, 1.5e-6, 2048, 4);
+        m.record_latency(0.2, 0.4, Priority::Interactive);
+        m.record_prepare(0.1);
+        m.record_pool(4, 0.25, 0);
+        m.balance_workers.store(MAX_DEQUE_GAUGES as u64 + 4, Ordering::Relaxed);
+        let text = m.render();
+        let mut typed = std::collections::HashSet::new();
+        let mut samples = 0usize;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let (name, help) = rest.split_once(' ').unwrap_or_else(|| panic!("{line}"));
+                assert!(valid_name(name), "{line}");
+                assert!(!help.is_empty() && !help.contains('{'), "{line}");
+            } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let (name, kind) = rest.split_once(' ').unwrap_or_else(|| panic!("{line}"));
+                assert!(valid_name(name), "{line}");
+                assert!(kind == "counter" || kind == "gauge", "{line}");
+                assert!(typed.insert(name.to_string()), "duplicate TYPE for {name}");
+            } else {
+                // sample line: name[{label="v",...}] value
+                assert!(!line.starts_with('#'), "unrecognized comment: {line}");
+                let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line}"));
+                assert!(value.parse::<f64>().is_ok(), "unparseable value: {line}");
+                let name = match series.split_once('{') {
+                    None => series,
+                    Some((name, labels)) => {
+                        let labels = labels.strip_suffix('}').unwrap_or_else(|| panic!("{line}"));
+                        for pair in labels.split(',') {
+                            let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("{line}"));
+                            assert!(valid_name(k), "{line}");
+                            assert!(
+                                v.len() >= 2 && v.starts_with('"') && v.ends_with('"'),
+                                "{line}"
+                            );
+                        }
+                        name
+                    }
+                };
+                assert!(valid_name(name), "{line}");
+                assert!(typed.contains(name), "sample without preceding # TYPE: {line}");
+                samples += 1;
+            }
+        }
+        assert!(typed.len() > 30, "expected a full exposition, saw {} series", typed.len());
+        assert!(samples > typed.len(), "labeled series should add extra samples");
+    }
+
+    #[test]
+    fn deque_gauge_truncation_is_reported() {
+        let m = Metrics::default();
+        // worker count within the gauge array: nothing truncated
+        m.balance_workers.store(MAX_DEQUE_GAUGES as u64, Ordering::Relaxed);
+        let text = m.render();
+        let last = format!("adip_worker_deque_depth{{worker=\"{}\"}}", MAX_DEQUE_GAUGES - 1);
+        assert!(text.contains(&last), "{text}");
+        assert!(text.contains("adip_worker_deque_gauges_truncated 0"), "{text}");
+        // beyond the array: the untracked tail is counted, not silent
+        m.balance_workers.store(MAX_DEQUE_GAUGES as u64 + 9, Ordering::Relaxed);
+        let text = m.render();
+        assert!(text.contains(&last), "{text}");
+        let beyond = format!("adip_worker_deque_depth{{worker=\"{MAX_DEQUE_GAUGES}\"}}");
+        assert!(!text.contains(&beyond), "{text}");
+        assert!(text.contains("adip_worker_deque_gauges_truncated 9"), "{text}");
     }
 
     #[test]

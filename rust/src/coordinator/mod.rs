@@ -61,7 +61,9 @@
 //!   store lets sibling workers reuse each other's projection tiles.
 //! * [`metrics`] — atomic counters with a Prometheus-style text dump,
 //!   including per-class queue-wait series and the `prepared_depth`
-//!   gauge that makes prepare/execute overlap observable.
+//!   gauge that makes prepare/execute overlap observable. Carries the
+//!   pipeline-wide [`crate::obs::Recorder`] for per-ticket lifecycle
+//!   tracing (`CoordinatorConfig::trace`, off by default).
 
 pub mod batcher;
 pub mod client;
@@ -73,6 +75,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use crate::balance::{CoalesceConfig, StealPolicy};
+pub use crate::obs::{SpanKind, SpanRecord, TraceMode};
 pub use batcher::{form_batches, plan_batches, shed_verdict, Batch, Lane, ShedVerdict, WindowPlan};
 pub use client::{Client, Priority, SubmitOptions, Ticket};
 pub use metrics::Metrics;

@@ -24,6 +24,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cluster::{fingerprint, PreparedFingerprints};
+use crate::obs::{lane_worker, SpanKind};
 use crate::quant::PrecisionMode;
 
 use super::metrics::Metrics;
@@ -47,6 +48,11 @@ pub(crate) struct BatchWork {
     /// twice. Crate-internal trust, same policy as
     /// `PreparedFingerprints` — debug builds re-verify.
     pub weight_fps: Option<Vec<u128>>,
+    /// When the batch entered the balance fabric (stamped by
+    /// `Fabric::push`; `None` until then). Read by the executing worker
+    /// to attribute fabric residency per member — observability only,
+    /// never consulted by any scheduling decision.
+    pub queued: Option<Instant>,
 }
 
 /// A batch with all host-side preparation done, queued ahead of
@@ -60,6 +66,12 @@ pub(crate) struct PreparedBatch {
     /// cache is disabled — hashing would be pure waste).
     pub fps: Option<PreparedFingerprints>,
     pub batch_seq: u64,
+    /// When the batch entered the balance fabric (see
+    /// [`BatchWork::queued`]).
+    pub queued: Option<Instant>,
+    /// Host seconds [`prepare_batch`] spent on this batch — surfaced per
+    /// member in `ResponseMetrics::prepare_seconds`.
+    pub prepare_seconds: f64,
 }
 
 /// What a worker receives: a batch prepared by the stage thread
@@ -102,6 +114,15 @@ impl WorkMsg {
             WorkMsg::Prepared(p) => p.fps.as_ref(),
         }
     }
+
+    /// Stamp the instant the batch entered the balance fabric (called by
+    /// `Fabric::push`; feeds fabric-residency attribution only).
+    pub(crate) fn mark_queued(&mut self, t: Instant) {
+        match self {
+            WorkMsg::Raw(w) => w.queued = Some(t),
+            WorkMsg::Prepared(p) => p.queued = Some(t),
+        }
+    }
 }
 
 /// Do the host-side preparation of one batch: when the weight cache
@@ -111,6 +132,7 @@ impl WorkMsg {
 /// moves off the execute path.
 pub(crate) fn prepare_batch(
     work: BatchWork,
+    owner: usize,
     cache_enabled: bool,
     metrics: &Metrics,
 ) -> PreparedBatch {
@@ -138,13 +160,19 @@ pub(crate) fn prepare_batch(
                 .collect(),
         },
     });
-    metrics.record_prepare(t0.elapsed().as_secs_f64());
+    let prepare_seconds = t0.elapsed().as_secs_f64();
+    metrics.record_prepare(prepare_seconds);
+    for env in &work.envelopes {
+        metrics.trace.span_since(SpanKind::Prepare, env.req.id, lane_worker(owner), t0, 0);
+    }
     PreparedBatch {
         envelopes: work.envelopes,
         mode: work.mode,
         runtime_interleave: work.runtime_interleave,
         fps,
         batch_seq: work.batch_seq,
+        queued: work.queued,
+        prepare_seconds,
     }
 }
 
@@ -166,7 +194,7 @@ pub(crate) fn prepare_loop(
     metrics: Arc<Metrics>,
 ) {
     while let Ok(work) = rx.recv() {
-        let prepared = prepare_batch(work, cache_enabled, &metrics);
+        let prepared = prepare_batch(work, owner, cache_enabled, &metrics);
         // counted before the (possibly blocking) push: a prepared batch
         // waiting for fabric room is exactly "prepared ahead of execution"
         metrics.prepared_depth.fetch_add(1, Ordering::Relaxed);
@@ -214,6 +242,7 @@ mod tests {
             runtime_interleave: false,
             batch_seq: 7,
             weight_fps: None,
+            queued: None,
         };
         let expect_act = fingerprint(&[work.envelopes[0].req.a.as_ref()]);
         let expect_ws: Vec<u128> = work
@@ -222,9 +251,10 @@ mod tests {
             .flat_map(|e| e.req.bs.iter())
             .map(|b| fingerprint(&[b.as_ref()]))
             .collect();
-        let pb = prepare_batch(work, true, &metrics);
+        let pb = prepare_batch(work, 0, true, &metrics);
         assert_eq!(pb.mode, PrecisionMode::W2);
         assert_eq!(pb.batch_seq, 7);
+        assert!(pb.prepare_seconds >= 0.0);
         let fps = pb.fps.expect("cache enabled -> fingerprints prepared");
         assert_eq!(fps.act, expect_act);
         assert_eq!(fps.weights, expect_ws);
@@ -244,8 +274,9 @@ mod tests {
             runtime_interleave: true,
             batch_seq: 0,
             weight_fps: None,
+            queued: None,
         };
-        let pb = prepare_batch(work, false, &metrics);
+        let pb = prepare_batch(work, 0, false, &metrics);
         assert!(pb.fps.is_none());
         assert!(pb.runtime_interleave);
         assert_eq!(pb.mode, PrecisionMode::W8);

@@ -111,6 +111,18 @@ pub struct ResponseMetrics {
     pub queue_seconds: f64,
     /// Host wall-clock spent executing (seconds).
     pub service_seconds: f64,
+    /// Host wall-clock the batch spent in the prepare stage (seconds).
+    /// Stage timings below are measured from the same clock reads the
+    /// trace spans use, so a ticket's trace and its `ResponseMetrics`
+    /// cannot disagree; 0.0 when the stage did not run (direct scheduler
+    /// use, raw batches prepared inline on the worker).
+    pub prepare_seconds: f64,
+    /// Host wall-clock between the batch entering the balance fabric
+    /// (injector or a worker deque) and a worker popping it (seconds).
+    pub fabric_seconds: f64,
+    /// Host wall-clock share of the execute stage attributed to this
+    /// request (seconds).
+    pub execute_seconds: f64,
     /// Whether the request was fused into a shared-input batch.
     pub batched: bool,
     /// Global sequence number (from 1) of the batch this request

@@ -136,6 +136,9 @@ pub(crate) fn attribute_members(
                 passes: (res.passes as f64 * share).round() as u64,
                 queue_seconds: 0.0,
                 service_seconds: 0.0,
+                prepare_seconds: 0.0,
+                fabric_seconds: 0.0,
+                execute_seconds: 0.0,
                 batched: fused,
                 // stamped by the coordinator worker from the router's
                 // batch-formation sequence; 0 for direct scheduler use

@@ -67,10 +67,11 @@ use crate::cluster::{
     SharedWeightCache,
 };
 use crate::dataflow::Mat;
+use crate::obs::{lane_worker, SpanKind, TraceMode, LANE_ROUTER};
 
 use super::batcher::{plan_batches, shed_verdict, Lane, ShedVerdict};
 use super::client::{Client, Gate, Priority, SubmitOptions, Ticket};
-use super::metrics::{Metrics, MAX_DEQUE_GAUGES};
+use super::metrics::Metrics;
 use super::prepare::{prepare_batch, prepare_loop, BatchWork, PreparedBatch, WorkMsg};
 use super::request::{
     Envelope, MatmulRequest, RequestId, RequestOutcome, SHED_ERROR_PREFIX,
@@ -180,6 +181,12 @@ pub struct CoordinatorConfig {
     /// Background. Default off — a soft deadline is then purely an
     /// ordering hint, as before.
     pub shed: bool,
+    /// Per-ticket lifecycle tracing (see [`crate::obs`]). Off by default;
+    /// `TraceMode::Sample(n)` traces every n-th ticket. Tracing can never
+    /// change outputs or simulated accounting — recorders only read
+    /// clocks and write their own rings (`integration_pipeline.rs`
+    /// asserts off ≡ on ≡ sampled bit-exactly).
+    pub trace: TraceMode,
 }
 
 impl Default for CoordinatorConfig {
@@ -199,6 +206,7 @@ impl Default for CoordinatorConfig {
             steal: StealPolicy::Off,
             coalesce: CoalesceConfig::default(),
             shed: false,
+            trace: TraceMode::Off,
         }
     }
 }
@@ -231,6 +239,9 @@ impl Coordinator {
                 && cfg.prepared_capacity > 0
         );
         let metrics = Arc::new(Metrics::default());
+        if cfg.trace != TraceMode::Off {
+            metrics.trace.enable(cfg.trace);
+        }
         let (ingress_tx, ingress_rx) = sync_channel::<Envelope>(cfg.queue_capacity);
         // Single-core clusters execute inline (no pool threads), so the
         // gauge only counts real persistent workers.
@@ -257,9 +268,11 @@ impl Coordinator {
             cfg.coalesce,
             metrics.clone(),
         );
-        metrics
-            .balance_workers
-            .store(cfg.workers.min(MAX_DEQUE_GAUGES) as u64, Ordering::Relaxed);
+        // full worker count: `render` gauges the first MAX_DEQUE_GAUGES
+        // individually and reports the rest via
+        // `adip_worker_deque_gauges_truncated` instead of silently
+        // dropping them
+        metrics.balance_workers.store(cfg.workers as u64, Ordering::Relaxed);
 
         let mut stage_txs = Vec::new();
         let mut preparers = Vec::new();
@@ -453,10 +466,12 @@ fn router_loop(
                             lane.age_us = 0;
                             env.priority = Priority::Background;
                             metrics.deadline_demotions.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.event(SpanKind::Demote, env.req.id, LANE_ROUTER, 0);
                         }
                         ShedVerdict::Shed => {
                             metrics.shed.fetch_add(1, Ordering::Relaxed);
                             metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            metrics.trace.event(SpanKind::Shed, env.req.id, LANE_ROUTER, 0);
                             let _ = env.reply.send(RequestOutcome {
                                 id: env.req.id,
                                 result: Err(format!(
@@ -486,6 +501,9 @@ fn router_loop(
         let plan = plan_batches(&reqs, &lanes, aging_us);
         if plan.promotions > 0 {
             metrics.aging_promotions.fetch_add(plan.promotions, Ordering::Relaxed);
+            for &idx in &plan.promoted {
+                metrics.trace.event(SpanKind::Promote, reqs[idx].id, LANE_ROUTER, 0);
+            }
         }
 
         // move envelopes into their batches (indices are into `window`)
@@ -497,12 +515,19 @@ fn router_loop(
             if envelopes.len() > 1 || envelopes[0].req.bs.len() > 1 {
                 metrics.fused_batches.fetch_add(1, Ordering::Relaxed);
             }
+            for env in &envelopes {
+                // queue span: admission → batch formation; the formation
+                // event carries the deterministic service order
+                metrics.trace.span_since(SpanKind::Queue, env.req.id, LANE_ROUTER, env.enqueued, 0);
+                metrics.trace.event(SpanKind::BatchForm, env.req.id, LANE_ROUTER, batch_seq);
+            }
             let work = BatchWork {
                 envelopes,
                 mode: b.mode,
                 runtime_interleave: b.runtime_interleave,
                 batch_seq,
                 weight_fps: None,
+                queued: None,
             };
             batch_seq += 1;
             // round-robin ownership; a blocking send/push applies
@@ -548,6 +573,7 @@ fn worker_loop(
     let cache_handle = cache.clone();
     let mut core =
         ClusterScheduler::with_shared_cache(cfg.arch, cfg.n, cfg.backend, cfg.cluster, cache);
+    core.set_trace(metrics.trace.clone(), lane_worker(w));
     let cache_enabled = cfg.cluster.cache.enabled();
     if cache_enabled {
         metrics.cache_shards.store(cache_handle.shard_count() as u64, Ordering::Relaxed);
@@ -555,6 +581,7 @@ fn worker_loop(
     let mut cache_seen = core.cache_stats();
     let mut pool_seen = core.pool_stats();
     while let Some(group) = fabric.pop(w) {
+        let popped = Instant::now();
         let mut prepared: Vec<PreparedBatch> = group
             .into_iter()
             .map(|msg| match msg {
@@ -565,24 +592,37 @@ fn worker_loop(
                 // inline mode: the prepare work runs here, serialized with
                 // execution — the baseline the pipelined stage is gated
                 // against
-                WorkMsg::Raw(work) => prepare_batch(work, cache_enabled, &metrics),
+                WorkMsg::Raw(work) => prepare_batch(work, w, cache_enabled, &metrics),
             })
             .collect();
         let started = Instant::now();
         let coalesced = prepared.len() > 1;
+        if coalesced {
+            // attribute the merge: the group leader carries the member
+            // count, every other member points back at the leader
+            let leader = prepared[0].envelopes[0].req.id;
+            metrics.trace.event(SpanKind::Coalesce, leader, lane_worker(w), prepared.len() as u64);
+            for item in &prepared[1..] {
+                for env in &item.envelopes {
+                    metrics.trace.event(SpanKind::CoalesceMember, env.req.id, lane_worker(w), leader);
+                }
+            }
+        }
         // Execute: a solo batch runs the existing prepared path; a
         // coalesced group runs as one stacked shared-weight pass and is
         // split back per member (see balance/{coalescer,split_back}.rs).
         let executed: Vec<BatchOutcome> = if !coalesced {
             let item = prepared.pop().expect("popped group is non-empty");
+            core.set_trace_ticket(item.envelopes[0].req.id);
             let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
             let outcome = core
                 .execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref())
                 .map_err(|e| e.to_string());
             vec![(item, outcome)]
         } else {
-            execute_coalesced(&mut core, prepared, &metrics)
+            execute_coalesced(&mut core, w, prepared, &metrics)
         };
+        let exec_elapsed = started.elapsed();
         // flush cache + pool activity regardless of batch outcome (a
         // failed batch may still have probed or populated the cache, or
         // dispatched shards before erroring)
@@ -608,17 +648,44 @@ fn worker_loop(
         }
         let completed: usize =
             executed.iter().map(|(_, o)| o.as_ref().map_or(0, Vec::len)).sum();
-        let service = started.elapsed().as_secs_f64() / completed.max(1) as f64;
+        let service = exec_elapsed.as_secs_f64() / completed.max(1) as f64;
         for (item, outcome) in executed {
+            // fabric residency: push-stamp → this worker's pop (per item —
+            // a stolen batch was stamped by its original producer)
+            let fabric_seconds = item
+                .queued
+                .map(|q| popped.saturating_duration_since(q).as_secs_f64())
+                .unwrap_or(0.0);
             match outcome {
                 Ok(results) => {
                     for (env, mut res) in item.envelopes.iter().zip(results) {
                         res.metrics.queue_seconds = (started - env.enqueued).as_secs_f64();
                         res.metrics.service_seconds = service;
+                        res.metrics.prepare_seconds = item.prepare_seconds;
+                        res.metrics.fabric_seconds = fabric_seconds;
+                        res.metrics.execute_seconds = service;
                         res.metrics.batch_seq = item.batch_seq;
                         // a coalesced member executed in a merged pass even
                         // if its own batch was a singleton
                         res.metrics.batched |= coalesced;
+                        if let Some(q) = item.queued {
+                            metrics.trace.span_at(
+                                SpanKind::Fabric,
+                                env.req.id,
+                                lane_worker(w),
+                                q,
+                                popped.saturating_duration_since(q),
+                                0,
+                            );
+                        }
+                        metrics.trace.span_at(
+                            SpanKind::Execute,
+                            env.req.id,
+                            lane_worker(w),
+                            started,
+                            exec_elapsed,
+                            item.batch_seq,
+                        );
                         metrics.record_completion(
                             res.metrics.cycles,
                             res.metrics.energy_j,
@@ -635,6 +702,7 @@ fn worker_loop(
                             result: Ok(res.outputs),
                             metrics: res.metrics,
                         });
+                        metrics.trace.event(SpanKind::Complete, env.req.id, lane_worker(w), 0);
                     }
                 }
                 Err(e) => {
@@ -664,10 +732,13 @@ type BatchOutcome = (PreparedBatch, std::result::Result<Vec<MemberResult>, Strin
 /// attribution. A run error fails every member — tickets are never lost.
 fn execute_coalesced(
     core: &mut ClusterScheduler,
+    w: usize,
     items: Vec<PreparedBatch>,
     metrics: &Metrics,
 ) -> Vec<BatchOutcome> {
     let first = &items[0].envelopes[0].req;
+    let leader = first.id;
+    core.set_trace_ticket(leader);
     let k = first.a.cols();
     let mode = items[0].mode;
     let member_rows: Vec<usize> =
@@ -694,7 +765,15 @@ fn execute_coalesced(
         Ok(run) => {
             metrics.coalesced_passes.fetch_add(1, Ordering::Relaxed);
             metrics.coalesced_members.fetch_add(items.len() as u64, Ordering::Relaxed);
+            let t_split = Instant::now();
             let parts = split_back(&run.result, &member_rows);
+            metrics.trace.span_since(
+                SpanKind::SplitBack,
+                leader,
+                lane_worker(w),
+                t_split,
+                items.len() as u64,
+            );
             items
                 .into_iter()
                 .zip(parts)
@@ -714,6 +793,7 @@ fn execute_coalesced(
             items
                 .into_iter()
                 .map(|item| {
+                    core.set_trace_ticket(item.envelopes[0].req.id);
                     let members: Vec<&MatmulRequest> =
                         item.envelopes.iter().map(|e| &e.req).collect();
                     let outcome = core

@@ -30,6 +30,10 @@
 //!   injector + per-worker deques with work-stealing (`StealPolicy`) and
 //!   cross-request shard coalescing into asymmetric shared-input passes
 //!   (see `balance/mod.rs` for the design doc).
+//! * [`obs`] — per-ticket lifecycle tracing: a bounded, sharded,
+//!   lock-free span recorder covering the whole pipeline, exported as
+//!   Chrome/Perfetto trace-event JSON (`--trace-out`) and per ticket
+//!   via `Ticket::trace()`.
 //! * [`cluster`] — multi-core execution: shards one GEMM (or shared-input
 //!   set) across a persistent pool of array-core workers (pipelined shard
 //!   ingress; legacy spawn-per-run engine kept as baseline) with a
@@ -51,6 +55,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
+pub mod obs;
 pub mod power;
 pub mod quant;
 pub mod report;

@@ -24,6 +24,7 @@ use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{
     Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions, Ticket,
+    TraceMode,
 };
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
@@ -144,6 +145,15 @@ balance flags (serve/trace; --steal also accepted by cluster):
                    fast with a distinct shed: error and demote hopeless
                    Interactive/Batch work (default false)
 
+observability flags (serve/trace):
+  --trace=MODE     per-ticket lifecycle tracing: off (default), on, or
+                   sample=N (record every Nth ticket). Observability
+                   only — outputs and simulated accounting are bit-exact
+                   across off/on/sampled
+  --trace-sample=N shorthand for --trace=sample=N (1 = every ticket)
+  --trace-out=PATH write the whole-run Chrome/Perfetto trace-event JSON
+                   to PATH (open in ui.perfetto.dev or chrome://tracing)
+
 serve submits a mixed-priority stream (interactive | batch | background)
 through the Client/SubmitOptions/Ticket API, with Q/K/V triplets sent as
 pre-declared fusion groups; trace submits each request under the class
@@ -208,6 +218,20 @@ fn parse_steal(cfg: &Config) -> Result<StealPolicy> {
         None => Ok(StealPolicy::default()),
         Some(raw) => raw.parse::<StealPolicy>().map_err(|e| anyhow!("--steal: {e}")),
     }
+}
+
+fn parse_trace(cfg: &Config) -> Result<TraceMode> {
+    let mode = match cfg.get("trace") {
+        None => TraceMode::Off,
+        Some(raw) => raw.parse::<TraceMode>().map_err(|e| anyhow!("--trace: {e}"))?,
+    };
+    // --trace-sample=N is shorthand for --trace=sample=N (and wins when
+    // both are given — the more specific knob)
+    Ok(match cfg.get_usize("trace-sample", 0)? {
+        0 => mode,
+        1 => TraceMode::On,
+        n => TraceMode::Sample(n as u32),
+    })
 }
 
 fn parse_coalesce(cfg: &Config) -> Result<CoalesceConfig> {
@@ -407,6 +431,7 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         steal: parse_steal(cfg)?,
         coalesce: parse_coalesce(cfg)?,
         shed: cfg.get_bool("shed", false)?,
+        trace: parse_trace(cfg)?,
         ..Default::default()
     });
     let client = coord.client();
@@ -480,6 +505,10 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     print!("{}", m.class_queue_summary());
     println!("--- metrics ---\n{}", m.render());
     coord.shutdown();
+    if let Some(path) = cfg.get("trace-out") {
+        std::fs::write(path, m.trace.chrome_trace_json())?;
+        println!("lifecycle trace written to {path} ({} spans dropped)", m.trace.dropped());
+    }
     Ok(())
 }
 
@@ -518,6 +547,7 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         steal: parse_steal(cfg)?,
         coalesce: parse_coalesce(cfg)?,
         shed: cfg.get_bool("shed", false)?,
+        trace: parse_trace(cfg)?,
         ..Default::default()
     });
     let client = coord.client();
@@ -541,8 +571,13 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         tickets.push(client.submit(SubmitOptions::new(t.request).priority(t.priority))?);
     }
     let total = tickets.len();
+    let mut outcomes = Vec::with_capacity(total);
     for t in tickets {
-        t.wait()?.result.map_err(|e| anyhow!("request failed: {e}"))?;
+        let o = t.wait()?;
+        if let Err(e) = &o.result {
+            bail!("request failed: {e}");
+        }
+        outcomes.push(o);
     }
     let dt = t0.elapsed().as_secs_f64();
     let m = coord.metrics();
@@ -553,11 +588,23 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.queue_percentile(99.0).unwrap_or(0.0) * 1e3
     );
     print!("{}", m.class_queue_summary());
-    println!(
-        "service time: p50 {:.3} ms | p99 {:.3} ms",
-        m.service_percentile(50.0).unwrap_or(0.0) * 1e3,
-        m.service_percentile(99.0).unwrap_or(0.0) * 1e3
-    );
+    // per-request stage breakdown (from ResponseMetrics): where a ticket's
+    // wall-clock went, stage by stage, instead of one service-time figure
+    let stage = |name: &str, pick: fn(&adip::coordinator::ResponseMetrics) -> f64| {
+        let mut xs: Vec<f64> = outcomes.iter().map(|o| pick(&o.metrics)).collect();
+        if xs.is_empty() {
+            return;
+        }
+        xs.sort_by(f64::total_cmp);
+        let at = |p: f64| xs[((p / 100.0) * (xs.len() - 1) as f64).round() as usize] * 1e3;
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64 * 1e3;
+        println!("  {name:<8} mean {mean:>8.3} ms | p50 {:>8.3} ms | p99 {:>8.3} ms", at(50.0), at(99.0));
+    };
+    println!("stage timings (per request):");
+    stage("queue", |r| r.queue_seconds);
+    stage("prepare", |r| r.prepare_seconds);
+    stage("fabric", |r| r.fabric_seconds);
+    stage("execute", |r| r.execute_seconds);
     println!(
         "fused batches: {} / {}",
         m.fused_batches.load(std::sync::atomic::Ordering::Relaxed),
@@ -592,6 +639,10 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         m.deadline_demotions.load(std::sync::atomic::Ordering::Relaxed)
     );
     coord.shutdown();
+    if let Some(path) = cfg.get("trace-out") {
+        std::fs::write(path, m.trace.chrome_trace_json())?;
+        println!("lifecycle trace written to {path} ({} spans dropped)", m.trace.dropped());
+    }
     Ok(())
 }
 

@@ -11,7 +11,11 @@
 //! * priority classes must reorder service (Interactive queue-wait ≤
 //!   Background under saturation) without starving Background (aging);
 //! * prepare/execute overlap must be observable (`prepared_depth > 0`
-//!   under load) and shutdown must drain prepared work.
+//!   under load) and shutdown must drain prepared work;
+//! * lifecycle tracing (`CoordinatorConfig::trace`) is a new differential
+//!   axis: outputs and simulated accounting must be bit-exact across
+//!   off/on/sampled, and `Ticket::trace()` must return ordered spans
+//!   attributed to the right ticket.
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -20,7 +24,8 @@ use std::time::{Duration, Instant};
 use adip::arch::{Architecture, Backend};
 use adip::cluster::ClusterConfig;
 use adip::coordinator::{
-    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions,
+    CoalesceConfig, Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority,
+    SpanKind, StealPolicy, SubmitOptions, TraceMode,
 };
 use adip::dataflow::Mat;
 use adip::testutil::Rng;
@@ -49,6 +54,8 @@ struct RunRecord {
     energy_bits: u64,
     cache_hits: u64,
     cache_misses: u64,
+    steals: u64,
+    coalesced_passes: u64,
     completed: u64,
 }
 
@@ -61,6 +68,7 @@ fn run_stream(
     via_client: bool,
     reqs: &[MatmulRequest],
     n: usize,
+    trace: TraceMode,
 ) -> RunRecord {
     let coord = Coordinator::start(CoordinatorConfig {
         arch: Architecture::Adip,
@@ -73,6 +81,7 @@ fn run_stream(
         // and compared across all variants
         cluster: ClusterConfig::with_cores(1).with_cache(16),
         prepare,
+        trace,
         ..Default::default()
     });
     let client = coord.client();
@@ -104,6 +113,8 @@ fn run_stream(
         energy_bits: m.energy_j().to_bits(),
         cache_hits: m.cache_hits.load(Ordering::Relaxed),
         cache_misses: m.cache_misses.load(Ordering::Relaxed),
+        steals: m.steals.load(Ordering::Relaxed),
+        coalesced_passes: m.coalesced_passes.load(Ordering::Relaxed),
         completed: m.completed.load(Ordering::Relaxed),
     };
     coord.shutdown();
@@ -129,7 +140,7 @@ fn shim_and_client_api_identical_across_backends_and_prepare_modes() {
         };
         let reqs: Vec<MatmulRequest> =
             attention_trace(&model, &tcfg, 42).into_iter().map(|t| t.request).collect();
-        let baseline = run_stream(backend, PrepareMode::Pipelined, false, &reqs, n);
+        let baseline = run_stream(backend, PrepareMode::Pipelined, false, &reqs, n, TraceMode::Off);
         assert_eq!(baseline.completed, reqs.len() as u64, "{backend}");
         assert!(baseline.sim_cycles > 0 && baseline.cache_misses > 0, "{backend}");
         for (via_client, prepare) in [
@@ -137,7 +148,7 @@ fn shim_and_client_api_identical_across_backends_and_prepare_modes() {
             (true, PrepareMode::Inline),
             (false, PrepareMode::Inline),
         ] {
-            let got = run_stream(backend, prepare, via_client, &reqs, n);
+            let got = run_stream(backend, prepare, via_client, &reqs, n, TraceMode::Off);
             assert_eq!(
                 got, baseline,
                 "{backend}: via_client={via_client} prepare={prepare} diverged from the shim"
@@ -423,4 +434,148 @@ fn ticket_polling_semantics() {
     assert!(target.try_wait().is_err(), "second claim must error, not hang");
     assert!(blocker.wait().unwrap().result.is_ok());
     coord.shutdown();
+}
+
+/// Tentpole differential axis: lifecycle tracing is observability only.
+/// Outputs, per-request accounting and the cumulative simulated counters
+/// must be bit-exact across `--trace=off|on|sample=16`, on both backends.
+#[test]
+fn tracing_modes_never_change_outputs_or_accounting() {
+    let model = TransformerModel::by_name("bitnet").unwrap();
+    for backend in Backend::ALL {
+        let (tcfg, n) = match backend {
+            Backend::Functional => {
+                (TraceConfig { dim: 64, head_cols: 16, layers: 2, heads: 1, rate_per_s: 1e9 }, 16)
+            }
+            Backend::CycleAccurate => {
+                (TraceConfig { dim: 24, head_cols: 8, layers: 1, heads: 1, rate_per_s: 1e9 }, 8)
+            }
+        };
+        let reqs: Vec<MatmulRequest> =
+            attention_trace(&model, &tcfg, 43).into_iter().map(|t| t.request).collect();
+        let baseline = run_stream(backend, PrepareMode::Pipelined, true, &reqs, n, TraceMode::Off);
+        assert_eq!(baseline.completed, reqs.len() as u64, "{backend}");
+        for mode in [TraceMode::On, TraceMode::Sample(16)] {
+            let got = run_stream(backend, PrepareMode::Pipelined, true, &reqs, n, mode);
+            assert_eq!(got, baseline, "{backend}: trace={mode} changed outputs or accounting");
+        }
+    }
+}
+
+/// `Ticket::trace()` contract: with tracing on, every ticket's spans are
+/// attributed to that ticket only, sorted by start time, and bracket the
+/// lifecycle (submit first, complete last, an execute span in between).
+#[test]
+fn ticket_trace_returns_ordered_attributed_spans() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 16,
+        workers: 1,
+        queue_capacity: 64,
+        batch_window: 1,
+        cluster: ClusterConfig::with_cores(1).with_cache(16),
+        trace: TraceMode::On,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1811);
+    let mut tickets: Vec<_> = (0..6u64)
+        .map(|i| client.submit(SubmitOptions::new(request(&mut rng, i, 32, 2, 1))).unwrap())
+        .collect();
+    for t in &mut tickets {
+        let out = t.wait_timeout(Duration::from_secs(60)).unwrap().expect("must complete");
+        assert!(out.result.is_ok());
+    }
+    // shutdown joins the workers, so even the post-reply Complete events
+    // are recorded before we read the rings
+    coord.shutdown();
+    for t in &tickets {
+        let spans = t.trace();
+        assert!(!spans.is_empty(), "tracing on: ticket {} has spans", t.id());
+        assert!(spans.iter().all(|s| s.ticket == t.id()), "foreign span in ticket view");
+        assert!(
+            spans.windows(2).all(|w| w[0].start_ns <= w[1].start_ns),
+            "spans must be sorted by start time"
+        );
+        // the queue span's start is the enqueue instant, stamped just
+        // before the submit event — so only assert the orderings the
+        // clocks guarantee: admission side before execution, execution
+        // before completion
+        let pos = |k: SpanKind| spans.iter().position(|s| s.kind == k);
+        let submit = pos(SpanKind::Submit).expect("submit event recorded");
+        let queue = pos(SpanKind::Queue).expect("queue span recorded");
+        let execute = pos(SpanKind::Execute).expect("execute span recorded");
+        let complete = pos(SpanKind::Complete).expect("complete event recorded");
+        assert!(submit < complete, "lifecycle order: submit before complete");
+        assert!(queue <= execute && execute <= complete, "lifecycle order: queue -> execute");
+        // batch formation stamped the deterministic sequence number
+        let form = spans.iter().find(|s| s.kind == SpanKind::BatchForm).expect("batch_form");
+        assert!(form.aux >= 1, "batch_seq starts at 1");
+    }
+}
+
+/// Steal and coalesce events must be attributed to real submitted
+/// tickets, and every coalesce member must point at a real leader. Both
+/// mechanisms are timing-dependent, so the linkage assertions only fire
+/// when the counters say the mechanism actually ran.
+#[test]
+fn steal_and_coalesce_events_attribute_to_real_tickets() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        n: 8,
+        workers: 2,
+        queue_capacity: 256,
+        batch_window: 1,
+        steal: StealPolicy::Idle,
+        coalesce: CoalesceConfig {
+            enabled: true,
+            window: Duration::from_millis(2),
+            max_members: 8,
+        },
+        trace: TraceMode::On,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(1911);
+    // many requests over one shared weight set: coalescable batches that
+    // also spread across two workers (steal opportunities)
+    let b = Arc::new(Mat::random(&mut rng, 32, 32, 2));
+    let mut ids = std::collections::HashSet::new();
+    let tickets: Vec<_> = (0..24u64)
+        .map(|i| {
+            let req = MatmulRequest {
+                id: 0,
+                input_id: 5000 + i,
+                a: Arc::new(Mat::random(&mut rng, 32, 32, 8)),
+                bs: vec![b.clone()],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            };
+            let t = client.submit(SubmitOptions::new(req)).unwrap();
+            ids.insert(t.id());
+            t
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let m = coord.metrics();
+    coord.shutdown();
+    let spans = m.trace.snapshot();
+    assert!(!spans.is_empty());
+    for s in &spans {
+        if matches!(s.kind, SpanKind::Steal | SpanKind::Coalesce | SpanKind::CoalesceMember) {
+            assert!(ids.contains(&s.ticket), "{:?} on unknown ticket {}", s.kind, s.ticket);
+        }
+    }
+    if m.coalesced_passes.load(Ordering::Relaxed) > 0 {
+        let members: Vec<_> =
+            spans.iter().filter(|s| s.kind == SpanKind::CoalesceMember).collect();
+        for s in &members {
+            assert!(ids.contains(&s.aux), "coalesce member leader {} unknown", s.aux);
+        }
+        assert!(
+            spans.iter().any(|s| s.kind == SpanKind::Coalesce),
+            "coalesced passes counted but no coalesce event recorded"
+        );
+    }
 }
