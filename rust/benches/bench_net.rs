@@ -1,0 +1,201 @@
+//! Bench: the network serving tier — loopback TCP round-trip latency by
+//! priority class under a concurrent-connection sweep, plus the row-band
+//! streaming throughput of a large output and the Cancel-frame ack RTT —
+//! emitted as `BENCH_net.json` for CI trend tracking (uploaded alongside
+//! the balance/cluster/coordinator JSONs).
+//!
+//! Acceptance gates (correctness, not wall-clock — loopback timing on a
+//! shared CI runner is noise):
+//!
+//! 1. Every request of the sweep completes `Ok` and **bit-exact** versus
+//!    the host matmul — the wire tier never corrupts a result under
+//!    connection concurrency.
+//! 2. The large streamed output crosses the socket in more than one
+//!    row-band chunk and reassembles bit-exactly.
+//! 3. Cancel acks round-trip (idempotent no-op on unknown ids).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use adip::arch::{Architecture, Backend};
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest, Priority};
+use adip::dataflow::Mat;
+use adip::net::{NetClient, NetServer, SubmitReply};
+use adip::testutil::Rng;
+
+const REQS_PER_CONN: usize = 16;
+const CLASS_NAMES: [&str; 3] = ["interactive", "batch", "background"];
+
+/// Per-class request shapes: interactive small (latency-bound), batch
+/// large (throughput), background medium.
+fn class_request(rng: &mut Rng, class: usize, seq: u64) -> (MatmulRequest, Priority) {
+    let (d, bits, prio) = match class {
+        0 => (24, 8, Priority::Interactive),
+        1 => (96, 2, Priority::Batch),
+        _ => (48, 4, Priority::Background),
+    };
+    (
+        MatmulRequest {
+            id: 0,
+            input_id: seq,
+            a: Arc::new(Mat::random(rng, d, d, 8)),
+            bs: vec![Arc::new(Mat::random(rng, d, d, bits))],
+            weight_bits: bits,
+            act_act: false,
+            tag: format!("{}-{seq}", CLASS_NAMES[class]),
+        },
+        prio,
+    )
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// One sweep point: `conns` closed-loop connections, each its own
+/// `NetClient` + thread, each submitting a class-rotating trace and
+/// verifying every output. Returns (elapsed_s, per-class latency lists).
+fn sweep_point(addr: std::net::SocketAddr, conns: usize) -> (f64, [Vec<f64>; 3]) {
+    let t0 = Instant::now();
+    let per_thread: Vec<Vec<(usize, f64)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..conns)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = Rng::seeded(1000 + c as u64);
+                    let mut net = NetClient::connect(addr).expect("connect");
+                    let mut lat = Vec::with_capacity(REQS_PER_CONN);
+                    for i in 0..REQS_PER_CONN {
+                        let class = i % 3;
+                        let (req, prio) = class_request(&mut rng, class, i as u64);
+                        let want = req.a.matmul(&req.bs[0]);
+                        let wire_id = i as u64 + 1;
+                        let t = Instant::now();
+                        match net.submit(wire_id, &req, prio, None).expect("submit") {
+                            SubmitReply::Accepted { .. } => {}
+                            other => panic!("conn {c} req {i} refused: {other:?}"),
+                        }
+                        let out = net.wait(wire_id).expect("wait");
+                        lat.push((class, t.elapsed().as_secs_f64()));
+                        assert_eq!(
+                            out.result.expect("request failed"),
+                            vec![want],
+                            "conn {c} req {i}: wire output not bit-exact"
+                        );
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("conn thread")).collect()
+    });
+    let elapsed = t0.elapsed().as_secs_f64();
+    let mut classes: [Vec<f64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+    for lat in per_thread {
+        for (class, secs) in lat {
+            classes[class].push(secs);
+        }
+    }
+    for c in classes.iter_mut() {
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    }
+    (elapsed, classes)
+}
+
+fn main() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 2,
+        queue_capacity: 1024,
+        batch_window: 4,
+        backend: Backend::Functional,
+        ..Default::default()
+    });
+    let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics())
+        .expect("bind loopback server");
+    let addr = server.local_addr();
+
+    println!("== net serving: closed-loop connection sweep ({REQS_PER_CONN} reqs/conn) ==");
+    let mut sweep_json = Vec::new();
+    for &conns in &[1usize, 2, 4] {
+        let (elapsed, classes) = sweep_point(addr, conns);
+        let total = conns * REQS_PER_CONN;
+        let rps = total as f64 / elapsed;
+        print!("  conns={conns}: {total} reqs in {:.1} ms ({rps:.0} req/s)", elapsed * 1e3);
+        let mut class_json = Vec::new();
+        for (ci, name) in CLASS_NAMES.iter().enumerate() {
+            let p50 = percentile(&classes[ci], 0.50) * 1e3;
+            let p95 = percentile(&classes[ci], 0.95) * 1e3;
+            print!(" | {name} p50 {p50:.2} ms p95 {p95:.2} ms");
+            class_json.push(format!(
+                "\"{name}\": {{\"p50_ms\": {p50:.4}, \"p95_ms\": {p95:.4}, \"n\": {}}}",
+                classes[ci].len()
+            ));
+        }
+        println!();
+        sweep_json.push(format!(
+            "{{\"connections\": {conns}, \"requests\": {total}, \"elapsed_s\": {elapsed:.6}, \"rps\": {rps:.1}, \"classes\": {{{}}}}}",
+            class_json.join(", ")
+        ));
+    }
+
+    println!("\n== row-band streaming: one large output over the socket ==");
+    let mut rng = Rng::seeded(7);
+    let (rows, cols) = (512usize, 512usize);
+    let big = MatmulRequest {
+        id: 0,
+        input_id: 9000,
+        a: Arc::new(Mat::random(&mut rng, rows, cols, 8)),
+        bs: vec![Arc::new(Mat::random(&mut rng, cols, cols, 2))],
+        weight_bits: 2,
+        act_act: false,
+        tag: "stream".into(),
+    };
+    let want = big.a.matmul(&big.bs[0]);
+    let band = adip::net::wire::chunk_rows(cols);
+    let chunks = rows.div_ceil(band);
+    assert!(chunks > 1, "the streaming figure must cover multiple chunks (got {chunks})");
+    let mut net = NetClient::connect(addr).expect("connect");
+    let t = Instant::now();
+    assert!(matches!(
+        net.submit(1, &big, Priority::Batch, None).expect("submit big"),
+        SubmitReply::Accepted { .. }
+    ));
+    let out = net.wait(1).expect("wait big");
+    let stream_s = t.elapsed().as_secs_f64();
+    assert_eq!(out.result.expect("big request failed"), vec![want], "streamed reassembly");
+    let payload_mib = (rows * cols * 4) as f64 / (1 << 20) as f64;
+    println!(
+        "  {rows}x{cols} output: {chunks} chunks of {band} rows, {:.1} ms round-trip ({:.1} MiB payload)",
+        stream_s * 1e3,
+        payload_mib
+    );
+
+    // Cancel-frame ack RTT: unknown ids are idempotent no-ops, so this
+    // measures the pure frame round-trip on a warm session.
+    let mut rtts: Vec<f64> = (0..64)
+        .map(|i| {
+            let t = Instant::now();
+            assert!(!net.cancel(50_000 + i).expect("cancel ack"));
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    rtts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let cancel_p50_us = percentile(&rtts, 0.50) * 1e6;
+    println!("  cancel-ack RTT p50 {cancel_p50_us:.0} us");
+
+    server.shutdown();
+    coord.shutdown();
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_net\",\n  \"sweep\": [\n    {}\n  ],\n  \"stream\": {{\"rows\": {rows}, \"cols\": {cols}, \"chunks\": {chunks}, \"band_rows\": {band}, \"elapsed_s\": {stream_s:.6}, \"payload_mib\": {payload_mib:.2}}},\n  \"cancel_ack_rtt_us_p50\": {cancel_p50_us:.1}\n}}\n",
+        sweep_json.join(",\n    ")
+    );
+    let path = std::env::var("BENCH_NET_JSON").unwrap_or_else(|_| "BENCH_net.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
+}

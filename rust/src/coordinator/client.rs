@@ -17,17 +17,20 @@
 //!
 //! A successful submit returns a [`Ticket`] — the typed replacement for
 //! the raw `Receiver<RequestOutcome>` the old API exposed — with
-//! [`Ticket::wait`], [`Ticket::try_wait`], [`Ticket::wait_timeout`] and
-//! [`Ticket::id`]. The legacy `Coordinator::try_submit` /
-//! `Coordinator::submit_wait` entry points survive as thin shims over this
-//! path (asserted byte-identical by the differential suite in
-//! `rust/tests/integration_pipeline.rs`).
+//! [`Ticket::wait`], [`Ticket::try_wait`], [`Ticket::wait_timeout`],
+//! [`Ticket::id`] and first-class cancellation via [`Ticket::cancel`]
+//! (honored at every pipeline boundary; a killed request resolves to
+//! `Err(RequestError::Cancelled)`). The legacy `Coordinator::try_submit` /
+//! `Coordinator::submit_wait` entry points are `#[deprecated]` thin shims
+//! over this path (still asserted byte-identical by the differential
+//! suite in `rust/tests/integration_pipeline.rs` until removal).
 
+use std::collections::HashSet;
 use std::fmt;
 use std::str::FromStr;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -151,19 +154,77 @@ impl SubmitOptions {
     }
 }
 
+/// Cancellation rendezvous between [`Ticket::cancel`] callers and the
+/// pipeline stages. Registered ids are honored at the next stage
+/// boundary the request crosses — router window formation, the prepare
+/// stage, or a worker popping the batch off the balance fabric — so a
+/// cancel kills a request anywhere in admit → prepare → execute without
+/// the stages polling. The common no-cancellation case costs one atomic
+/// load per check; entries are removed when the cancel is honored or the
+/// outcome is delivered, so the set cannot leak ids.
+#[derive(Default)]
+pub(crate) struct CancelRegistry {
+    pending: Mutex<HashSet<RequestId>>,
+    /// Mirror of `pending.len()` for the lock-free empty fast path.
+    len: AtomicUsize,
+}
+
+impl CancelRegistry {
+    /// Register a cancellation request for `id`.
+    pub(crate) fn request(&self, id: RequestId) {
+        let mut set = self.pending.lock().unwrap_or_else(|e| e.into_inner());
+        if set.insert(id) {
+            self.len.store(set.len(), Ordering::Release);
+        }
+    }
+
+    /// Whether `id` has a pending cancellation. The empty fast path is a
+    /// single atomic load, so stage boundaries can check every envelope
+    /// without contending on the lock when nobody cancels.
+    pub(crate) fn is_cancelled(&self, id: RequestId) -> bool {
+        if self.len.load(Ordering::Acquire) == 0 {
+            return false;
+        }
+        self.pending.lock().unwrap_or_else(|e| e.into_inner()).contains(&id)
+    }
+
+    /// Drop `id`'s entry once its ticket resolved (cancel honored, or the
+    /// outcome raced the cancel and was delivered anyway).
+    pub(crate) fn resolve(&self, id: RequestId) {
+        if self.len.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut set = self.pending.lock().unwrap_or_else(|e| e.into_inner());
+        if set.remove(&id) {
+            self.len.store(set.len(), Ordering::Release);
+        }
+    }
+
+    /// Number of registered, not-yet-honored cancellations.
+    pub(crate) fn pending(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+}
+
 /// Admission gate shared by the [`super::Coordinator`] and every
 /// [`Client`] clone: the ingress sender (slot emptied on shutdown so
 /// outstanding clients observe "coordinator stopped" instead of keeping
-/// the router alive), the metrics sink and the id counter.
+/// the router alive), the metrics sink, the cancellation registry and
+/// the id counter.
 pub(crate) struct Gate {
     ingress: RwLock<Option<SyncSender<Envelope>>>,
     pub(crate) metrics: Arc<Metrics>,
+    pub(crate) cancels: Arc<CancelRegistry>,
     next_id: AtomicU64,
 }
 
 impl Gate {
-    pub(crate) fn new(metrics: Arc<Metrics>, ingress: SyncSender<Envelope>) -> Gate {
-        Gate { ingress: RwLock::new(Some(ingress)), metrics, next_id: AtomicU64::new(1) }
+    pub(crate) fn new(
+        metrics: Arc<Metrics>,
+        ingress: SyncSender<Envelope>,
+        cancels: Arc<CancelRegistry>,
+    ) -> Gate {
+        Gate { ingress: RwLock::new(Some(ingress)), metrics, cancels, next_id: AtomicU64::new(1) }
     }
 
     /// Close admission: drops the ingress sender (the router drains and
@@ -229,7 +290,15 @@ impl Client {
                 m.accepted.fetch_add(1, Ordering::Relaxed);
                 m.class_accepted[priority.index()].fetch_add(1, Ordering::Relaxed);
                 m.trace.event(SpanKind::Submit, id, LANE_CLIENT, priority.rank() as u64);
-                Ok(Ticket { id, priority, rx, claimed: false, recorder: m.trace.clone() })
+                Ok(Ticket {
+                    id,
+                    priority,
+                    rx,
+                    claimed: false,
+                    stashed: None,
+                    recorder: m.trace.clone(),
+                    cancels: self.gate.cancels.clone(),
+                })
             }
             Err(TrySendError::Full(_)) => {
                 m.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -249,6 +318,13 @@ impl Client {
     /// Submit and block for the outcome (convenience).
     pub fn submit_wait(&self, opts: SubmitOptions) -> Result<RequestOutcome> {
         self.submit(opts)?.wait()
+    }
+
+    /// Number of cancellations requested but not yet honored by a
+    /// pipeline stage. Converges to 0 once the affected tickets resolve —
+    /// the cancellation-leak assertion of the race suite.
+    pub fn pending_cancellations(&self) -> usize {
+        self.gate.cancels.pending()
     }
 
     /// Submit a shared-input group (e.g. a Q/K/V triplet off one `X`) in
@@ -278,7 +354,6 @@ impl Client {
 /// (consuming), or through the first [`Ticket::try_wait`] /
 /// [`Ticket::wait_timeout`] call that returns `Ok(Some(_))`; after that,
 /// polling again reports an error.
-#[derive(Debug)]
 pub struct Ticket {
     id: RequestId,
     priority: Priority,
@@ -288,9 +363,24 @@ pub struct Ticket {
     /// after the outcome is consumed — the flag, not the channel state,
     /// is the contract).
     claimed: bool,
+    /// Outcome drained off the channel by [`Ticket::cancel`]'s
+    /// race-closing poll; consumed by the next wait/poll.
+    stashed: Option<RequestOutcome>,
     /// Handle onto the coordinator's trace recorder, so the ticket can
     /// pull its own lifecycle spans ([`Ticket::trace`]).
     recorder: Recorder,
+    /// Shared cancellation registry (see [`Ticket::cancel`]).
+    cancels: Arc<CancelRegistry>,
+}
+
+impl fmt::Debug for Ticket {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ticket")
+            .field("id", &self.id)
+            .field("priority", &self.priority)
+            .field("claimed", &self.claimed)
+            .finish_non_exhaustive()
+    }
 }
 
 impl Ticket {
@@ -314,10 +404,49 @@ impl Ticket {
         self.recorder.for_ticket(self.id)
     }
 
+    /// Request cancellation. Returns `true` when a cancellation was
+    /// registered, `false` when the outcome had already arrived (a
+    /// post-completion cancel is a no-op: the outcome stays claimable and
+    /// nothing is registered).
+    ///
+    /// Cancellation is honored at the next stage boundary the request
+    /// crosses — router window formation, the prepare stage, or a worker
+    /// popping it off the balance fabric (which covers fabric deques,
+    /// steals and coalesce windows: members are filtered before the
+    /// merged pass forms). A batch already inside `execute` runs to
+    /// completion — its outcome then wins the race and the registry entry
+    /// is dropped. A honored cancel resolves the ticket with
+    /// `Err(RequestError::Cancelled)`.
+    pub fn cancel(&mut self) -> bool {
+        if self.claimed || self.stashed.is_some() {
+            return false;
+        }
+        // Already complete? Then cancelling is a no-op: stash the outcome
+        // for the next wait/poll instead of registering a dead id.
+        if let Ok(out) = self.rx.try_recv() {
+            self.stashed = Some(out);
+            return false;
+        }
+        self.cancels.request(self.id);
+        self.recorder.event(SpanKind::Cancel, self.id, LANE_CLIENT, 0);
+        // Close the submit/complete race: if the outcome landed between
+        // the poll above and the registration, the pipeline may never see
+        // the entry again — drain it now so the registry cannot leak.
+        if let Ok(out) = self.rx.try_recv() {
+            self.cancels.resolve(self.id);
+            self.stashed = Some(out);
+            return false;
+        }
+        true
+    }
+
     /// Block until the outcome arrives.
-    pub fn wait(self) -> Result<RequestOutcome> {
+    pub fn wait(mut self) -> Result<RequestOutcome> {
         if self.claimed {
             return Err(anyhow!("outcome already claimed"));
+        }
+        if let Some(out) = self.stashed.take() {
+            return Ok(out);
         }
         self.rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
     }
@@ -327,6 +456,10 @@ impl Ticket {
     pub fn try_wait(&mut self) -> Result<Option<RequestOutcome>> {
         if self.claimed {
             return Err(anyhow!("outcome already claimed"));
+        }
+        if let Some(out) = self.stashed.take() {
+            self.claimed = true;
+            return Ok(Some(out));
         }
         match self.rx.try_recv() {
             Ok(out) => {
@@ -346,6 +479,10 @@ impl Ticket {
         if self.claimed {
             return Err(anyhow!("outcome already claimed"));
         }
+        if let Some(out) = self.stashed.take() {
+            self.claimed = true;
+            return Ok(Some(out));
+        }
         match self.rx.recv_timeout(timeout) {
             Ok(out) => {
                 self.claimed = true;
@@ -358,9 +495,12 @@ impl Ticket {
         }
     }
 
-    /// Unwrap into the legacy `(id, Receiver)` pair — the old-API shims
-    /// (`Coordinator::try_submit`) are built on this.
+    /// Unwrap into the legacy `(id, Receiver)` pair — the deprecated
+    /// old-API shims (`Coordinator::try_submit`) are built on this. Must
+    /// not follow a [`Ticket::cancel`] call: an outcome the cancel poll
+    /// already drained off the channel cannot be put back.
     pub fn into_parts(self) -> (RequestId, Receiver<RequestOutcome>) {
+        debug_assert!(self.stashed.is_none(), "into_parts after cancel would drop the outcome");
         (self.id, self.rx)
     }
 }

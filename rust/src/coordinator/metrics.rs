@@ -249,6 +249,9 @@ pub struct Metrics {
     /// Requests failed fast at batch-formation time because their soft
     /// deadline was already hopeless (also counted in `failed`).
     pub shed: AtomicU64,
+    /// Requests killed by `Ticket::cancel` (or a net-tier Cancel frame)
+    /// before reaching execution (also counted in `failed`).
+    pub cancelled: AtomicU64,
     /// Deadline-hopeless Interactive/Batch requests demoted to Background
     /// instead of shed. They still execute, re-classed end-to-end: their
     /// completion and queue-wait series count as Background (so their
@@ -635,7 +638,7 @@ impl Metrics {
     }
 
     fn render_scalar_counters(&self, s: &mut String) {
-        let rows: [(&str, &str, &str, u64); 22] = [
+        let rows: [(&str, &str, &str, u64); 23] = [
             ("requests_accepted_total", "counter", "Requests accepted into the admission queue.", self.accepted.load(Ordering::Relaxed)),
             ("requests_rejected_total", "counter", "Requests rejected by admission backpressure.", self.rejected.load(Ordering::Relaxed)),
             ("requests_completed_total", "counter", "Requests completed successfully.", self.completed.load(Ordering::Relaxed)),
@@ -651,6 +654,7 @@ impl Metrics {
             ("weight_cache_evictions_total", "counter", "Weight-tile cache evictions.", self.cache_evictions.load(Ordering::Relaxed)),
             ("queue_depth", "gauge", "Requests currently queued for batching.", self.queue_depth.load(Ordering::Relaxed)),
             ("shed_total", "counter", "Requests failed fast on a hopeless soft deadline.", self.shed.load(Ordering::Relaxed)),
+            ("cancelled_total", "counter", "Requests killed by cancellation before execution.", self.cancelled.load(Ordering::Relaxed)),
             ("deadline_demotions_total", "counter", "Deadline-hopeless requests demoted to the background class.", self.deadline_demotions.load(Ordering::Relaxed)),
             ("steals_total", "counter", "Batches stolen from sibling worker deques.", self.steals.load(Ordering::Relaxed)),
             ("steal_failures_total", "counter", "Idle pops that found no victim worth stealing from.", self.steal_failures.load(Ordering::Relaxed)),
@@ -982,6 +986,7 @@ mod tests {
             "adip_weight_cache_misses_total",
             "adip_weight_cache_evictions_total",
             "adip_queue_depth",
+            "adip_cancelled_total",
             "adip_prepared_depth",
             "adip_prepared_batches_total",
             "adip_aging_promotions_total",

@@ -37,10 +37,14 @@
 //!    distinct `shed:` error and demotes hopeless higher classes.
 //!
 //! * [`client`] — [`Client`] / [`SubmitOptions`] / [`Ticket`] /
-//!   [`Priority`]: the public submission surface. The legacy
-//!   `Coordinator::try_submit` / `submit_wait` survive as thin shims over
-//!   it (asserted byte-identical by the differential suite).
-//! * [`request`] — request/response types.
+//!   [`Priority`]: the public submission surface, including first-class
+//!   cancellation ([`Ticket::cancel`] kills a request at any pipeline
+//!   boundary, surfacing as [`RequestError::Cancelled`]). The legacy
+//!   `Coordinator::try_submit` / `submit_wait` shims are `#[deprecated]`
+//!   (still asserted byte-identical by the differential suite until
+//!   removal).
+//! * [`request`] — request/response types and the typed [`RequestError`]
+//!   failure taxonomy (Shed / Cancelled / RangeCheck / Shutdown / …).
 //! * [`precision`] — weight-precision → [`crate::quant::PrecisionMode`]
 //!   selection policy (activation-to-activation pins 8b×8b); invoked by
 //!   the prepare stage, off the execute path.
@@ -80,6 +84,8 @@ pub use batcher::{form_batches, plan_batches, shed_verdict, Batch, Lane, ShedVer
 pub use client::{Client, Priority, SubmitOptions, Ticket};
 pub use metrics::Metrics;
 pub use precision::select_mode;
-pub use request::{MatmulRequest, RequestId, RequestOutcome, ResponseMetrics, SHED_ERROR_PREFIX};
+pub use request::{
+    MatmulRequest, RequestError, RequestId, RequestOutcome, ResponseMetrics, SHED_ERROR_PREFIX,
+};
 pub use scheduler::CoreScheduler;
 pub use server::{Coordinator, CoordinatorConfig, PrepareMode};

@@ -27,8 +27,72 @@ use crate::cluster::{fingerprint, PreparedFingerprints};
 use crate::obs::{lane_worker, SpanKind};
 use crate::quant::PrecisionMode;
 
+use super::client::CancelRegistry;
 use super::metrics::Metrics;
-use super::request::Envelope;
+use super::request::{Envelope, RequestError, RequestOutcome, ResponseMetrics};
+
+/// `SpanKind::Cancel` aux codes: which pipeline boundary honored the
+/// cancellation (aux 0 is the client-side `Ticket::cancel` event).
+pub(crate) const CANCEL_AT_ROUTER: u64 = 1;
+pub(crate) const CANCEL_AT_PREPARE: u64 = 2;
+pub(crate) const CANCEL_AT_WORKER: u64 = 3;
+
+/// Fail one cancelled envelope: reply with [`RequestError::Cancelled`],
+/// bump the cancelled/failed counters, record the Cancel span (aux says
+/// which boundary honored it), and drop the registry entry so the set
+/// stays empty in steady state.
+pub(crate) fn honor_cancel(
+    env: &Envelope,
+    metrics: &Metrics,
+    cancels: &CancelRegistry,
+    lane: u32,
+    aux: u64,
+) {
+    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
+    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    metrics.trace.event(SpanKind::Cancel, env.req.id, lane, aux);
+    let _ = env.reply.send(RequestOutcome {
+        id: env.req.id,
+        result: Err(RequestError::Cancelled),
+        metrics: ResponseMetrics::default(),
+    });
+    cancels.resolve(env.req.id);
+}
+
+/// Drop every cancelled envelope from a formed batch, failing each via
+/// [`honor_cancel`], and keep the flat per-weight fingerprint list (one
+/// entry per member weight matrix, member order) aligned with the
+/// survivors. Returns whether anything was removed — a changed batch has
+/// a different weight set and may no longer share a coalesced pass with
+/// partners gathered under the old key.
+pub(crate) fn strip_cancelled_envelopes(
+    envelopes: &mut Vec<Envelope>,
+    mut weight_fps: Option<&mut Vec<u128>>,
+    metrics: &Metrics,
+    cancels: &CancelRegistry,
+    lane: u32,
+    aux: u64,
+) -> bool {
+    if cancels.pending() == 0 || !envelopes.iter().any(|e| cancels.is_cancelled(e.req.id)) {
+        return false;
+    }
+    let old = std::mem::take(envelopes);
+    let old_fps = weight_fps.as_mut().map(|w| std::mem::take(&mut **w));
+    let mut pos = 0usize;
+    for env in old {
+        let n = env.req.bs.len();
+        if cancels.is_cancelled(env.req.id) {
+            honor_cancel(&env, metrics, cancels, lane, aux);
+        } else {
+            if let (Some(dst), Some(src)) = (weight_fps.as_mut(), old_fps.as_ref()) {
+                dst.extend_from_slice(&src[pos..pos + n]);
+            }
+            envelopes.push(env);
+        }
+        pos += n;
+    }
+    true
+}
 
 /// One formed batch as the router hands it to the prepare stage: the
 /// member envelopes in fusion order plus the routing decisions that are
@@ -192,8 +256,22 @@ pub(crate) fn prepare_loop(
     owner: usize,
     cache_enabled: bool,
     metrics: Arc<Metrics>,
+    cancels: Arc<CancelRegistry>,
 ) {
-    while let Ok(work) = rx.recv() {
+    while let Ok(mut work) = rx.recv() {
+        // Cancellation boundary: a request killed while its batch sat in
+        // the stage queue fails here, before any hashing is spent on it.
+        strip_cancelled_envelopes(
+            &mut work.envelopes,
+            work.weight_fps.as_mut(),
+            &metrics,
+            &cancels,
+            lane_worker(owner),
+            CANCEL_AT_PREPARE,
+        );
+        if work.envelopes.is_empty() {
+            continue;
+        }
         let prepared = prepare_batch(work, owner, cache_enabled, &metrics);
         // counted before the (possibly blocking) push: a prepared batch
         // waiting for fabric room is exactly "prepared ahead of execution"

@@ -137,25 +137,102 @@ pub struct ResponseMetrics {
 /// Error prefix of outcomes failed fast by the deadline-shedding policy
 /// (see `batcher::shed_verdict`): a `shed:` error means the request never
 /// executed because its soft deadline was already hopeless at
-/// batch-formation time.
+/// batch-formation time. Kept for log greps — typed matchers should use
+/// [`RequestError::Shed`].
 pub const SHED_ERROR_PREFIX: &str = "shed:";
+
+/// Typed failure classes of a request's lifetime. Replaces the former
+/// stringly-typed `Result<_, String>` signaling: matchers switch on the
+/// variant while `Display` keeps the historical strings byte-compatible
+/// ([`RequestError::Shed`] still renders behind [`SHED_ERROR_PREFIX`];
+/// execute-stage messages render verbatim), so log greps survive the
+/// migration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RequestError {
+    /// Admission validation rejected the request contents. Normally
+    /// surfaced synchronously by `Client::submit`; carried here so remote
+    /// (net-tier) submissions can report it through the same taxonomy.
+    Validation(String),
+    /// Failed fast by the deadline-shedding policy — the request never
+    /// executed because its soft deadline was already hopeless at
+    /// batch-formation time.
+    Shed {
+        /// Verdict detail (estimated service vs remaining headroom).
+        detail: String,
+    },
+    /// Killed by `Ticket::cancel` (or a net-tier Cancel frame) before it
+    /// reached execution.
+    Cancelled,
+    /// An operand failed the executed mode's range check at pack time
+    /// inside a worker (admission validation makes this unreachable via
+    /// `Client::submit`; direct scheduler use can still trip it).
+    RangeCheck {
+        /// Index of the offending weight matrix within its request.
+        set_index: usize,
+        /// The scheduler's full message, rendered verbatim by `Display`.
+        detail: String,
+    },
+    /// The coordinator (or the serving tier fronting it) shut down before
+    /// the request completed.
+    Shutdown,
+    /// Any other execution failure, carrying the scheduler's message.
+    Execution(String),
+}
+
+impl RequestError {
+    /// Classify a stringified execute-stage error into the typed
+    /// taxonomy. Range-check failures keep their weight-set index
+    /// machine-readable: the functional/cycle backends report
+    /// `weight matrix {i} value {v} out of {w}-bit range ...` (possibly
+    /// behind `shard {s}:` context), which parses into
+    /// [`RequestError::RangeCheck`]; everything else lands in
+    /// [`RequestError::Execution`].
+    pub fn from_execution(msg: String) -> RequestError {
+        if let Some(pos) = msg.find("weight matrix ") {
+            let rest = &msg[pos + "weight matrix ".len()..];
+            let digits: &str =
+                &rest[..rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len())];
+            if !digits.is_empty() && rest[digits.len()..].starts_with(" value ") {
+                if let Ok(set_index) = digits.parse() {
+                    return RequestError::RangeCheck { set_index, detail: msg };
+                }
+            }
+        }
+        RequestError::Execution(msg)
+    }
+}
+
+impl std::fmt::Display for RequestError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RequestError::Validation(reason) => write!(f, "invalid request: {reason}"),
+            RequestError::Shed { detail } => write!(f, "{SHED_ERROR_PREFIX} {detail}"),
+            RequestError::Cancelled => f.write_str("cancelled"),
+            RequestError::RangeCheck { detail, .. } => f.write_str(detail),
+            RequestError::Shutdown => f.write_str("coordinator stopped"),
+            RequestError::Execution(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for RequestError {}
 
 /// Completion message for one request.
 #[derive(Debug)]
 pub struct RequestOutcome {
     /// The request id.
     pub id: RequestId,
-    /// Output matrices (one per weight matrix), or an error string.
-    pub result: Result<Vec<Mat>, String>,
+    /// Output matrices (one per weight matrix), or a typed failure.
+    pub result: Result<Vec<Mat>, RequestError>,
     /// Accounting (valid also for failed requests where meaningful).
     pub metrics: ResponseMetrics,
 }
 
 impl RequestOutcome {
     /// Whether this request was shed (failed fast on a hopeless soft
-    /// deadline) rather than executed — the distinct `Shed` failure class.
+    /// deadline) rather than executed.
     pub fn was_shed(&self) -> bool {
-        matches!(&self.result, Err(e) if e.starts_with(SHED_ERROR_PREFIX))
+        matches!(self.result, Err(RequestError::Shed { .. }))
     }
 }
 
@@ -241,6 +318,43 @@ mod tests {
         r.a = Arc::new(a);
         let err = r.validate().unwrap_err();
         assert!(err.contains("activation"), "{err}");
+    }
+
+    #[test]
+    fn request_error_display_is_byte_compatible_with_the_legacy_strings() {
+        // the shed class keeps its greppable prefix exactly
+        let shed = RequestError::Shed { detail: "soft deadline hopeless".into() };
+        assert_eq!(shed.to_string(), format!("{SHED_ERROR_PREFIX} soft deadline hopeless"));
+        assert!(shed.to_string().starts_with(SHED_ERROR_PREFIX));
+        // execute-stage messages render verbatim
+        let msg = "shard 0: weight matrix 2 value 9 out of 2-bit range -2..=1";
+        assert_eq!(RequestError::from_execution(msg.into()).to_string(), msg);
+        assert_eq!(RequestError::Execution("boom".into()).to_string(), "boom");
+        assert_eq!(RequestError::Cancelled.to_string(), "cancelled");
+        assert_eq!(RequestError::Shutdown.to_string(), "coordinator stopped");
+        assert_eq!(RequestError::Validation("no weight matrices".into()).to_string(), "invalid request: no weight matrices");
+    }
+
+    #[test]
+    fn from_execution_classifies_range_checks_with_their_set_index() {
+        let msg = "shard 3: weight matrix 2 value 9 out of 2-bit range -2..=1";
+        match RequestError::from_execution(msg.into()) {
+            RequestError::RangeCheck { set_index, detail } => {
+                assert_eq!(set_index, 2);
+                assert!(detail.contains("out of 2-bit range"));
+            }
+            other => panic!("expected RangeCheck, got {other:?}"),
+        }
+        // admission-style messages ("entry", not "value") and plain
+        // failures stay in the Execution catch-all
+        assert!(matches!(
+            RequestError::from_execution("weight matrix 1 shape mismatch".into()),
+            RequestError::Execution(_)
+        ));
+        assert!(matches!(
+            RequestError::from_execution("cluster worker pool disconnected".into()),
+            RequestError::Execution(_)
+        ));
     }
 
     /// Regression: `act_act` forces the 8b×8b mode, so a request that

@@ -70,12 +70,13 @@ use crate::dataflow::Mat;
 use crate::obs::{lane_worker, SpanKind, TraceMode, LANE_ROUTER};
 
 use super::batcher::{plan_batches, shed_verdict, Lane, ShedVerdict};
-use super::client::{Client, Gate, Priority, SubmitOptions, Ticket};
+use super::client::{CancelRegistry, Client, Gate, Priority, SubmitOptions, Ticket};
 use super::metrics::Metrics;
-use super::prepare::{prepare_batch, prepare_loop, BatchWork, PreparedBatch, WorkMsg};
-use super::request::{
-    Envelope, MatmulRequest, RequestId, RequestOutcome, SHED_ERROR_PREFIX,
+use super::prepare::{
+    honor_cancel, prepare_batch, prepare_loop, strip_cancelled_envelopes, BatchWork,
+    PreparedBatch, WorkMsg, CANCEL_AT_ROUTER, CANCEL_AT_WORKER,
 };
+use super::request::{Envelope, MatmulRequest, RequestError, RequestId, RequestOutcome};
 use super::scheduler::{attribute_members, MemberResult};
 use super::select_mode;
 
@@ -242,6 +243,10 @@ impl Coordinator {
         if cfg.trace != TraceMode::Off {
             metrics.trace.enable(cfg.trace);
         }
+        // One cancellation registry per coordinator: `Ticket::cancel`
+        // registers ids, every pipeline boundary (router window, prepare
+        // stage, worker pop) honors them (see `prepare::honor_cancel`).
+        let cancels = Arc::new(CancelRegistry::default());
         let (ingress_tx, ingress_rx) = sync_channel::<Envelope>(cfg.queue_capacity);
         // Single-core clusters execute inline (no pool threads), so the
         // gauge only counts real persistent workers.
@@ -283,10 +288,11 @@ impl Coordinator {
                 .clone()
                 .unwrap_or_else(|| SharedWeightCache::new(cfg.cluster.cache));
             let f = fabric.clone();
+            let c = cancels.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("adip-worker-{w}"))
-                    .spawn(move || worker_loop(w, f, cfg, m, cache))
+                    .spawn(move || worker_loop(w, f, cfg, m, cache, c))
                     .expect("spawn worker"),
             );
             match cfg.prepare {
@@ -299,10 +305,11 @@ impl Coordinator {
                     let (prep_tx, prep_rx) = sync_channel::<BatchWork>(cfg.prepared_capacity);
                     let m = metrics.clone();
                     let f = fabric.clone();
+                    let c = cancels.clone();
                     preparers.push(
                         std::thread::Builder::new()
                             .name(format!("adip-prepare-{w}"))
-                            .spawn(move || prepare_loop(prep_rx, f, w, true, m))
+                            .spawn(move || prepare_loop(prep_rx, f, w, true, m, c))
                             .expect("spawn prepare stage"),
                     );
                     stage_txs.push(StageTx::Prepare(prep_tx));
@@ -315,12 +322,13 @@ impl Coordinator {
 
         let m = metrics.clone();
         let f = fabric.clone();
+        let c = cancels.clone();
         let router = std::thread::Builder::new()
             .name("adip-router".into())
-            .spawn(move || router_loop(ingress_rx, stage_txs, f, cfg, m))
+            .spawn(move || router_loop(ingress_rx, stage_txs, f, cfg, m, c))
             .expect("spawn router");
 
-        let gate = Arc::new(Gate::new(metrics, ingress_tx));
+        let gate = Arc::new(Gate::new(metrics, ingress_tx, cancels));
         let client = Client::new(gate.clone());
         Coordinator { gate, client, fabric, router: Some(router), preparers, workers }
     }
@@ -337,6 +345,12 @@ impl Coordinator {
     /// byte-identical behavior to the pre-`Client` API. On success the
     /// request id and a receiver for the outcome are returned; a full
     /// queue rejects the request (backpressure).
+    ///
+    /// Deprecated since PR 8: use `coord.client().submit(SubmitOptions::new(req))`
+    /// — a [`Ticket`] carries the same id/receiver pair (`Ticket::into_parts`)
+    /// plus cancellation. `rust/tests/integration_pipeline.rs` pins the
+    /// shim behavior-identical to the typed path until removal.
+    #[deprecated(note = "use Coordinator::client() + Client::submit(SubmitOptions::new(req))")]
     pub fn try_submit(
         &self,
         req: MatmulRequest,
@@ -346,6 +360,10 @@ impl Coordinator {
 
     /// Legacy entry point — submit and block for the outcome. Shim over
     /// [`Client::submit_wait`], so the two paths cannot diverge.
+    ///
+    /// Deprecated since PR 8: use
+    /// `coord.client().submit_wait(SubmitOptions::new(req))`.
+    #[deprecated(note = "use Coordinator::client() + Client::submit_wait(SubmitOptions::new(req))")]
     pub fn submit_wait(&self, req: MatmulRequest) -> Result<RequestOutcome> {
         self.client.submit_wait(SubmitOptions::new(req))
     }
@@ -380,6 +398,7 @@ fn router_loop(
     fabric: Arc<Fabric>,
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
+    cancels: Arc<CancelRegistry>,
 ) {
     let mut next_stage = 0usize;
     // starts at 1: batch_seq 0 is the "never routed" sentinel that
@@ -400,6 +419,22 @@ fn router_loop(
             }
         }
         metrics.queue_depth.fetch_sub(window.len() as u64, Ordering::Relaxed);
+
+        // Cancellation boundary: requests cancelled while waiting in the
+        // ingress queue fail here, before a lane or plan is built around
+        // them.
+        if cancels.pending() > 0 {
+            window.retain(|env| {
+                if cancels.is_cancelled(env.req.id) {
+                    honor_cancel(env, &metrics, &cancels, LANE_ROUTER, CANCEL_AT_ROUTER);
+                    return false;
+                }
+                true
+            });
+            if window.is_empty() {
+                continue;
+            }
+        }
 
         // scheduling lanes are snapshotted once per window so the plan is
         // a pure (deterministic) function of its inputs
@@ -474,15 +509,18 @@ fn router_loop(
                             metrics.trace.event(SpanKind::Shed, env.req.id, LANE_ROUTER, 0);
                             let _ = env.reply.send(RequestOutcome {
                                 id: env.req.id,
-                                result: Err(format!(
-                                    "{SHED_ERROR_PREFIX} soft deadline hopeless at batch \
-                                     formation (needs ~{} µs simulated service, {} µs \
-                                     headroom)",
-                                    est.cycles / 1_000,
-                                    lane.deadline_us
-                                )),
+                                result: Err(RequestError::Shed {
+                                    detail: format!(
+                                        "soft deadline hopeless at batch formation \
+                                         (needs ~{} µs simulated service, {} µs \
+                                         headroom)",
+                                        est.cycles / 1_000,
+                                        lane.deadline_us
+                                    ),
+                                }),
                                 metrics: Default::default(),
                             });
+                            cancels.resolve(env.req.id);
                             continue;
                         }
                     }
@@ -555,6 +593,7 @@ fn worker_loop(
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
     cache: SharedWeightCache,
+    cancels: Arc<CancelRegistry>,
 ) {
     /// On any exit — normal drain or panic — report the worker down so
     /// its queued batches re-home to the injector and producers redirect
@@ -595,6 +634,37 @@ fn worker_loop(
                 WorkMsg::Raw(work) => prepare_batch(work, w, cache_enabled, &metrics),
             })
             .collect();
+        // Cancellation boundary: the last check before the array, covering
+        // fabric residency, steals, and coalesce gathering — a cancelled
+        // member never executes. A partially stripped batch has a changed
+        // weight set, so it may no longer share a coalesced pass with
+        // partners gathered under the old key: it runs solo instead.
+        let mut stripped_solo: Vec<PreparedBatch> = Vec::new();
+        if cancels.pending() > 0 {
+            let full = std::mem::take(&mut prepared);
+            let group_size = full.len();
+            for mut item in full {
+                let changed = strip_cancelled_envelopes(
+                    &mut item.envelopes,
+                    item.fps.as_mut().map(|f| &mut f.weights),
+                    &metrics,
+                    &cancels,
+                    lane_worker(w),
+                    CANCEL_AT_WORKER,
+                );
+                if item.envelopes.is_empty() {
+                    continue; // every member cancelled — batch dissolved
+                }
+                if changed && group_size > 1 {
+                    stripped_solo.push(item);
+                } else {
+                    prepared.push(item);
+                }
+            }
+            if prepared.is_empty() && stripped_solo.is_empty() {
+                continue;
+            }
+        }
         let started = Instant::now();
         let coalesced = prepared.len() > 1;
         if coalesced {
@@ -611,17 +681,21 @@ fn worker_loop(
         // Execute: a solo batch runs the existing prepared path; a
         // coalesced group runs as one stacked shared-weight pass and is
         // split back per member (see balance/{coalescer,split_back}.rs).
-        let executed: Vec<BatchOutcome> = if !coalesced {
-            let item = prepared.pop().expect("popped group is non-empty");
-            core.set_trace_ticket(item.envelopes[0].req.id);
-            let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
-            let outcome = core
-                .execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref())
-                .map_err(|e| e.to_string());
-            vec![(item, outcome)]
-        } else {
-            execute_coalesced(&mut core, w, prepared, &metrics)
-        };
+        // The bool tags whether the item ran inside a merged pass (feeds
+        // `ResponseMetrics::batched` — stripped stragglers ran solo).
+        let mut executed: Vec<(BatchOutcome, bool)> = Vec::new();
+        if coalesced {
+            executed.extend(
+                execute_coalesced(&mut core, w, prepared, &metrics)
+                    .into_iter()
+                    .map(|o| (o, true)),
+            );
+        } else if let Some(item) = prepared.pop() {
+            executed.push((execute_solo(&mut core, item), false));
+        }
+        for item in stripped_solo {
+            executed.push((execute_solo(&mut core, item), false));
+        }
         let exec_elapsed = started.elapsed();
         // flush cache + pool activity regardless of batch outcome (a
         // failed batch may still have probed or populated the cache, or
@@ -647,9 +721,9 @@ fn worker_loop(
             metrics.record_pool(pd.dispatched, pd.queue_wait_s, pd.worker_panics);
         }
         let completed: usize =
-            executed.iter().map(|(_, o)| o.as_ref().map_or(0, Vec::len)).sum();
+            executed.iter().map(|((_, o), _)| o.as_ref().map_or(0, Vec::len)).sum();
         let service = exec_elapsed.as_secs_f64() / completed.max(1) as f64;
-        for (item, outcome) in executed {
+        for ((item, outcome), merged) in executed {
             // fabric residency: push-stamp → this worker's pop (per item —
             // a stolen batch was stamped by its original producer)
             let fabric_seconds = item
@@ -667,7 +741,7 @@ fn worker_loop(
                         res.metrics.batch_seq = item.batch_seq;
                         // a coalesced member executed in a merged pass even
                         // if its own batch was a singleton
-                        res.metrics.batched |= coalesced;
+                        res.metrics.batched |= merged;
                         if let Some(q) = item.queued {
                             metrics.trace.span_at(
                                 SpanKind::Fabric,
@@ -703,6 +777,10 @@ fn worker_loop(
                             metrics: res.metrics,
                         });
                         metrics.trace.event(SpanKind::Complete, env.req.id, lane_worker(w), 0);
+                        // a cancel that raced past the pop boundary lost:
+                        // the outcome stands — but its registry entry must
+                        // not outlive the request
+                        cancels.resolve(env.req.id);
                     }
                 }
                 Err(e) => {
@@ -713,6 +791,7 @@ fn worker_loop(
                             result: Err(e.clone()),
                             metrics: Default::default(),
                         });
+                        cancels.resolve(env.req.id);
                     }
                 }
             }
@@ -721,8 +800,19 @@ fn worker_loop(
 }
 
 /// One executed batch: the batch plus its per-member results (or the
-/// error every member envelope is failed with).
-type BatchOutcome = (PreparedBatch, std::result::Result<Vec<MemberResult>, String>);
+/// typed error every member envelope is failed with).
+type BatchOutcome = (PreparedBatch, std::result::Result<Vec<MemberResult>, RequestError>);
+
+/// Execute one batch through the prepared path, classifying any run
+/// error into the typed [`RequestError`] taxonomy.
+fn execute_solo(core: &mut ClusterScheduler, item: PreparedBatch) -> BatchOutcome {
+    core.set_trace_ticket(item.envelopes[0].req.id);
+    let members: Vec<&MatmulRequest> = item.envelopes.iter().map(|e| &e.req).collect();
+    let outcome = core
+        .execute_batch_prepared(&members, item.mode, item.runtime_interleave, item.fps.as_ref())
+        .map_err(|e| RequestError::from_execution(e.to_string()));
+    (item, outcome)
+}
 
 /// Execute a coalesced group as **one** asymmetric shared-input pass:
 /// stack the member batches' activations along `M` (the coalescer
@@ -790,23 +880,7 @@ fn execute_coalesced(
             // pass (e.g. a transient pool-worker panic, which PR 3 made
             // recoverable) falls back to executing every member solo —
             // each ticket then succeeds or fails on its own merits.
-            items
-                .into_iter()
-                .map(|item| {
-                    core.set_trace_ticket(item.envelopes[0].req.id);
-                    let members: Vec<&MatmulRequest> =
-                        item.envelopes.iter().map(|e| &e.req).collect();
-                    let outcome = core
-                        .execute_batch_prepared(
-                            &members,
-                            item.mode,
-                            item.runtime_interleave,
-                            item.fps.as_ref(),
-                        )
-                        .map_err(|e| e.to_string());
-                    (item, outcome)
-                })
-                .collect()
+            items.into_iter().map(|item| execute_solo(core, item)).collect()
         }
     }
 }
@@ -815,6 +889,7 @@ fn execute_coalesced(
 mod tests {
     use super::*;
     use crate::coordinator::client::Priority;
+    use crate::coordinator::request::SHED_ERROR_PREFIX;
     use crate::dataflow::Mat;
     use crate::testutil::Rng;
 
@@ -840,7 +915,7 @@ mod tests {
         let mut rng = Rng::seeded(901);
         let req = request(&mut rng, 1, 8);
         let want = req.a.matmul(&req.bs[0]);
-        let out = coord.submit_wait(req).unwrap();
+        let out = coord.client().submit_wait(SubmitOptions::new(req)).unwrap();
         assert_eq!(out.result.unwrap()[0], want);
         assert!(out.metrics.cycles > 0);
         coord.shutdown();
@@ -869,6 +944,7 @@ mod tests {
     #[test]
     fn concurrent_submissions_all_complete_exactly_once() {
         let coord = Coordinator::start(cfg());
+        let client = coord.client();
         let mut rng = Rng::seeded(903);
         let mut expected = Vec::new();
         let mut rxs = Vec::new();
@@ -876,7 +952,7 @@ mod tests {
             let bits = *rng.choose(&[2, 4, 8]);
             let r = request(&mut rng, i % 4, bits);
             expected.push((r.a.clone(), r.bs[0].clone()));
-            let (id, rx) = coord.try_submit(r).unwrap();
+            let (id, rx) = client.submit(SubmitOptions::new(r)).unwrap().into_parts();
             rxs.push((id, rx));
         }
         let mut seen = std::collections::HashSet::new();
@@ -920,7 +996,10 @@ mod tests {
             .unwrap();
         let out = bg.wait().unwrap();
         assert!(out.was_shed(), "background + hopeless deadline must shed: {:?}", out.result);
-        assert!(out.result.unwrap_err().starts_with("shed:"));
+        let err = out.result.unwrap_err();
+        assert!(matches!(err, RequestError::Shed { .. }), "{err:?}");
+        // the typed variant still renders the legacy greppable prefix
+        assert!(err.to_string().starts_with(SHED_ERROR_PREFIX));
         // interactive work is demoted, never shed — it still executes
         let hot = client
             .submit(
@@ -1049,9 +1128,10 @@ mod tests {
             ..cfg()
         });
         let mut rng = Rng::seeded(923);
+        let client = coord.client();
         let r = request(&mut rng, 1, 8);
         for _ in 0..3 {
-            assert!(coord.submit_wait(r.clone()).unwrap().result.is_ok());
+            assert!(client.submit_wait(SubmitOptions::new(r.clone())).unwrap().result.is_ok());
         }
         let text = coord.metrics().render();
         coord.shutdown();
@@ -1081,10 +1161,11 @@ mod tests {
                     .with_kernel_threads(2),
                 ..cfg()
             });
+            let client = coord.client();
             let outs: Vec<_> = reqs
                 .iter()
                 .map(|r| {
-                    let o = coord.submit_wait(r.clone()).unwrap();
+                    let o = client.submit_wait(SubmitOptions::new(r.clone())).unwrap();
                     (o.result.unwrap(), o.metrics.cycles, o.metrics.passes)
                 })
                 .collect();
@@ -1109,7 +1190,7 @@ mod tests {
         let mut rng = Rng::seeded(905);
         let mut bad = request(&mut rng, 1, 8);
         bad.bs.clear();
-        assert!(coord.try_submit(bad).is_err());
+        assert!(coord.client().submit(SubmitOptions::new(bad)).is_err());
         assert_eq!(coord.metrics().failed.load(Ordering::Relaxed), 1);
         coord.shutdown();
     }
@@ -1125,6 +1206,7 @@ mod tests {
             ..Default::default()
         };
         let coord = Coordinator::start(c);
+        let client = coord.client();
         let mut rng = Rng::seeded(907);
         let mut rejected = 0;
         let mut rxs = Vec::new();
@@ -1139,8 +1221,8 @@ mod tests {
                 act_act: false,
                 tag: String::new(),
             };
-            match coord.try_submit(r) {
-                Ok((_, rx)) => rxs.push(rx),
+            match client.submit(SubmitOptions::new(r)) {
+                Ok(t) => rxs.push(t.into_parts().1),
                 Err(_) => rejected += 1,
             }
         }
@@ -1166,6 +1248,7 @@ mod tests {
             batch_window: 8,
             ..Default::default()
         });
+        let client = coord.client();
         let mut rng = Rng::seeded(909);
         let x = Arc::new(Mat::random(&mut rng, 16, 16, 8));
         let mut rxs = Vec::new();
@@ -1179,7 +1262,7 @@ mod tests {
                 act_act: false,
                 tag: "qkv".into(),
             };
-            rxs.push(coord.try_submit(r).unwrap().1);
+            rxs.push(client.submit(SubmitOptions::new(r)).unwrap().into_parts().1);
         }
         let mut any_batched = false;
         for rx in rxs {

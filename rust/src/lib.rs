@@ -30,6 +30,11 @@
 //!   injector + per-worker deques with work-stealing (`StealPolicy`) and
 //!   cross-request shard coalescing into asymmetric shared-input passes
 //!   (see `balance/mod.rs` for the design doc).
+//! * [`net`] — the network serving tier: a length-prefixed TCP wire
+//!   protocol over the coordinator's `Client` API with row-band
+//!   streaming of large outputs, backpressure mapped onto admission
+//!   bounds (`Busy`), remote cancellation (`Cancel` → `Ticket::cancel`)
+//!   and graceful drain (see `net/mod.rs` for the frame table).
 //! * [`obs`] — per-ticket lifecycle tracing: a bounded, sharded,
 //!   lock-free span recorder covering the whole pipeline, exported as
 //!   Chrome/Perfetto trace-event JSON (`--trace-out`) and per ticket
@@ -55,6 +60,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod dataflow;
+pub mod net;
 pub mod obs;
 pub mod power;
 pub mod quant;

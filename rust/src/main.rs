@@ -8,6 +8,7 @@
 //! adip gemm  [--m=..] [--k=..] [--ncols=..] [--mode=8x2] [--arch=adip] [--n=8] [--kernel=blocked]
 //! adip cluster [--cores=4] [--split=m] [--weight-cache=64] [--repeat=2]
 //! adip serve [--requests=64] [--workers=2] [--n=16] [--queue=256]
+//! adip net-serve [--listen=127.0.0.1:0] [--self-test=true]
 //! adip artifacts [--dir=artifacts]                     PJRT runtime self-test
 //! ```
 //!
@@ -23,10 +24,11 @@ use adip::balance::{CoalesceConfig, StealPolicy};
 use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
 use adip::config::{parse_cli_overrides, Config};
 use adip::coordinator::{
-    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, SubmitOptions, Ticket,
-    TraceMode,
+    Coordinator, CoordinatorConfig, MatmulRequest, PrepareMode, Priority, RequestError,
+    SubmitOptions, Ticket, TraceMode,
 };
 use adip::dataflow::Mat;
+use adip::net::{NetClient, NetServer, SubmitReply};
 use adip::quant::PrecisionMode;
 use adip::report;
 use adip::runtime::ArtifactRuntime;
@@ -67,6 +69,7 @@ fn run() -> Result<()> {
         "gemm" => cmd_gemm(&cfg)?,
         "cluster" => cmd_cluster(&cfg)?,
         "serve" => cmd_serve(&cfg)?,
+        "net-serve" => cmd_net_serve(&cfg)?,
         "trace" => cmd_trace(&cfg)?,
         "artifacts" => cmd_artifacts(&cfg)?,
         "help" | "--help" | "-h" => print!("{}", HELP),
@@ -86,6 +89,13 @@ commands:
   gemm             co-simulate one GEMM (--m/--k/--ncols/--mode/--arch/--n/--backend/--kernel)
   cluster          shard one GEMM across a core mesh (--cores/--split/--weight-cache/--repeat)
   serve            coordinator demo (--requests/--workers/--n/--queue/--backend)
+  net-serve        TCP serving tier (--listen=ADDR, default 127.0.0.1:0; plus
+                   all serve flags). Prints the bound address, serves until
+                   stdin reaches EOF, then drains (in-flight requests finish,
+                   new submits get a Draining frame) and exits.
+                   --self-test=true runs a loopback submit/stream/cancel
+                   round-trip instead and exits (the CI smoke). See
+                   rust/src/net/mod.rs for the wire protocol.
   trace            trace-driven serving (--model/--layers/--rate/--workers/--backend/--invocations)
   artifacts        PJRT runtime self-test (--dir=artifacts)
   help             this text
@@ -508,6 +518,103 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
     if let Some(path) = cfg.get("trace-out") {
         std::fs::write(path, m.trace.chrome_trace_json())?;
         println!("lifecycle trace written to {path} ({} spans dropped)", m.trace.dropped());
+    }
+    Ok(())
+}
+
+fn cmd_net_serve(cfg: &Config) -> Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: parse_arch(cfg)?,
+        n: cfg.get_usize("n", 16)?,
+        workers: cfg.get_usize("workers", 2)?,
+        queue_capacity: cfg.get_usize("queue", 256)?,
+        batch_window: cfg.get_usize("window", 8)?,
+        backend: parse_backend(cfg)?,
+        cluster: parse_cluster(cfg)?,
+        shared_weight_cache: cfg.get_bool("shared-weight-cache", true)?,
+        prepare: parse_prepare(cfg)?,
+        aging: parse_aging(cfg)?,
+        steal: parse_steal(cfg)?,
+        coalesce: parse_coalesce(cfg)?,
+        shed: cfg.get_bool("shed", false)?,
+        trace: parse_trace(cfg)?,
+        ..Default::default()
+    });
+    let listen = cfg.get("listen").unwrap_or("127.0.0.1:0");
+    let server = NetServer::bind(listen, coord.client(), coord.metrics())?;
+    println!("net-serve: listening on {}", server.local_addr());
+    if cfg.get_bool("self-test", false)? {
+        net_self_test(server.local_addr())?;
+        println!("net-serve: self-test ok");
+        server.shutdown();
+        coord.shutdown();
+        return Ok(());
+    }
+    println!("net-serve: serving — EOF on stdin (Ctrl-D) drains and exits");
+    {
+        use std::io::BufRead;
+        for line in std::io::stdin().lock().lines() {
+            line?; // discard input; EOF ends the loop
+        }
+    }
+    println!("net-serve: draining (in-flight requests finish; new submits refused)");
+    server.drain();
+    server.shutdown();
+    coord.shutdown();
+    Ok(())
+}
+
+/// Loopback smoke for `--self-test`: submit over TCP, reassemble the
+/// streamed result, verify against a host matmul, exercise the cancel
+/// and metrics paths.
+fn net_self_test(addr: std::net::SocketAddr) -> Result<()> {
+    let mut rng = Rng::seeded(99);
+    let mut net = NetClient::connect(addr)?;
+    // 96×96 with two weight sets: large enough to stream in several
+    // row-band chunks per output
+    let a = Mat::random(&mut rng, 96, 96, 8);
+    let bs = vec![Mat::random(&mut rng, 96, 96, 2), Mat::random(&mut rng, 96, 96, 2)];
+    let expected: Vec<Mat> = bs.iter().map(|b| a.matmul(b)).collect();
+    let req = MatmulRequest {
+        id: 0,
+        input_id: 1,
+        a: Arc::new(a),
+        bs: bs.into_iter().map(Arc::new).collect(),
+        weight_bits: 2,
+        act_act: false,
+        tag: "self-test".into(),
+    };
+    match net.submit(1, &req, Priority::Interactive, None)? {
+        SubmitReply::Accepted { .. } => {}
+        other => bail!("self-test submit refused: {other:?}"),
+    }
+    let out = net.wait(1)?;
+    let mats = out.result.map_err(|e| anyhow!("self-test request failed: {e}"))?;
+    if mats != expected {
+        bail!("self-test outputs differ from the host matmul");
+    }
+    if out.accounting.cycles == 0 {
+        bail!("self-test accounting missing simulated cycles");
+    }
+    // cancel path: race a cancel against the pipeline — both outcomes
+    // (ran to completion, or typed Cancelled) are valid; anything else
+    // is a protocol failure
+    match net.submit(2, &req, Priority::Background, None)? {
+        SubmitReply::Accepted { .. } => {}
+        other => bail!("self-test submit refused: {other:?}"),
+    }
+    net.cancel(2)?;
+    match net.wait(2)?.result {
+        Ok(_) | Err(RequestError::Cancelled) => {}
+        Err(e) => bail!("self-test cancel resolved to an unexpected error: {e}"),
+    }
+    // a cancel for an unknown wire id is an idempotent no-op
+    if net.cancel(77)? {
+        bail!("cancel of an unknown wire id must not register");
+    }
+    let metrics = net.metrics()?;
+    if !metrics.contains("adip_requests_completed_total") {
+        bail!("metrics dump missing adip_requests_completed_total");
     }
     Ok(())
 }

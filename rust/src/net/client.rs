@@ -1,0 +1,209 @@
+//! Blocking wire client: the reference implementation of the protocol's
+//! consumer side, used by the loopback differential suite, the net
+//! bench, and `adip net-serve --self-test`.
+//!
+//! One [`NetClient`] wraps one connection. The protocol is strictly
+//! request/reply per connection (the server never pushes unsolicited
+//! frames), so a blocking client needs no demultiplexer: send a frame,
+//! read until its terminal reply. Outcome streams are reassembled
+//! row-band by row-band into full output matrices ([`WireOutcome`]).
+
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{MatmulRequest, Priority, RequestError};
+use crate::dataflow::Mat;
+
+use super::wire::{decode_error, Frame, SubmitFrame, WireAccounting};
+
+/// Server's reply to a Submit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitReply {
+    /// Admitted; reply frames for the wire id will follow on demand.
+    Accepted {
+        /// The coordinator-assigned request id.
+        request_id: u64,
+    },
+    /// Backpressure reject: the admission queue stayed full through the
+    /// server's bounded retry.
+    Busy {
+        /// Server-side detail (queue depth).
+        detail: String,
+    },
+    /// The server is draining and refuses new work.
+    Draining,
+    /// Typed reject (validation failure, stopped coordinator, duplicate
+    /// wire id).
+    Rejected(RequestError),
+}
+
+/// A fully reassembled outcome: the remote mirror of
+/// `RequestOutcome`, with the simulated accounting the server shipped
+/// in the header ([`WireAccounting`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireOutcome {
+    /// Coordinator-assigned request id (0 when the request never
+    /// entered the pipeline).
+    pub request_id: u64,
+    /// Reassembled output matrices, or the typed failure.
+    pub result: std::result::Result<Vec<Mat>, RequestError>,
+    /// Simulated per-request accounting.
+    pub accounting: WireAccounting,
+}
+
+/// One blocking protocol connection.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect to a serving tier.
+    pub fn connect<A: ToSocketAddrs + std::fmt::Debug>(addr: A) -> Result<NetClient> {
+        let stream = TcpStream::connect(&addr).with_context(|| format!("connect {addr:?}"))?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        Ok(NetClient { stream })
+    }
+
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        frame.write_to(&mut self.stream).context("write frame")?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Frame> {
+        Frame::read_from(&mut self.stream).context("read frame")
+    }
+
+    /// Submit a request under a client-chosen `wire_id` (unique per
+    /// connection). `deadline` maps onto the submission's soft
+    /// deadline; `request.id` is ignored (the server assigns ids).
+    pub fn submit(
+        &mut self,
+        wire_id: u64,
+        request: &MatmulRequest,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<SubmitReply> {
+        self.send(&Frame::Submit(SubmitFrame {
+            wire_id,
+            priority,
+            deadline_us: deadline.map(|d| d.as_micros().min(u64::MAX as u128) as u64),
+            input_id: request.input_id,
+            weight_bits: request.weight_bits,
+            act_act: request.act_act,
+            tag: request.tag.clone(),
+            a: (*request.a).clone(),
+            bs: request.bs.iter().map(|b| (**b).clone()).collect(),
+        }))?;
+        match self.recv()? {
+            Frame::Submitted { wire_id: w, request_id } if w == wire_id => {
+                Ok(SubmitReply::Accepted { request_id })
+            }
+            Frame::Busy { wire_id: w, detail } if w == wire_id => Ok(SubmitReply::Busy { detail }),
+            Frame::Draining { wire_id: w } if w == wire_id => Ok(SubmitReply::Draining),
+            Frame::OutcomeError(e) if e.wire_id == wire_id => {
+                Ok(SubmitReply::Rejected(decode_error(e.code, e.set_index, e.detail)?))
+            }
+            other => bail!("unexpected submit reply: {other:?}"),
+        }
+    }
+
+    /// Block until `wire_id` completes and reassemble its outcome.
+    pub fn wait(&mut self, wire_id: u64) -> Result<WireOutcome> {
+        self.send(&Frame::Wait { wire_id })?;
+        match self.read_outcome(wire_id)? {
+            Some(out) => Ok(out),
+            None => bail!("server answered Wait with Pending"),
+        }
+    }
+
+    /// Non-blocking completion check: `None` while still in flight.
+    pub fn poll(&mut self, wire_id: u64) -> Result<Option<WireOutcome>> {
+        self.send(&Frame::Poll { wire_id })?;
+        self.read_outcome(wire_id)
+    }
+
+    /// Request cancellation of `wire_id`. `Ok(true)` when the server
+    /// registered a cancellation, `Ok(false)` when the outcome had
+    /// already arrived (post-completion cancels are no-ops) or the id
+    /// is unknown. A cancelled request still resolves — [`Self::wait`]
+    /// returns its `Err(RequestError::Cancelled)` outcome.
+    pub fn cancel(&mut self, wire_id: u64) -> Result<bool> {
+        self.send(&Frame::Cancel { wire_id })?;
+        match self.recv()? {
+            Frame::CancelAck { wire_id: w, registered } if w == wire_id => Ok(registered),
+            other => bail!("unexpected cancel reply: {other:?}"),
+        }
+    }
+
+    /// Fetch the coordinator's metrics dump.
+    pub fn metrics(&mut self) -> Result<String> {
+        self.send(&Frame::Metrics)?;
+        match self.recv()? {
+            Frame::MetricsText { text } => Ok(text),
+            other => bail!("unexpected metrics reply: {other:?}"),
+        }
+    }
+
+    /// Read one outcome stream (or `Pending` → `None`, or a terminal
+    /// `OutcomeError`). Chunks are validated against the header shapes:
+    /// every row of every output must be delivered exactly once.
+    fn read_outcome(&mut self, wire_id: u64) -> Result<Option<WireOutcome>> {
+        let (request_id, shapes, accounting) = match self.recv()? {
+            Frame::Pending { wire_id: w } if w == wire_id => return Ok(None),
+            Frame::OutcomeError(e) if e.wire_id == wire_id => {
+                return Ok(Some(WireOutcome {
+                    request_id: e.request_id,
+                    result: Err(decode_error(e.code, e.set_index, e.detail)?),
+                    accounting: e.accounting,
+                }))
+            }
+            Frame::OutcomeHeader(h) if h.wire_id == wire_id => {
+                (h.request_id, h.shapes, h.accounting)
+            }
+            other => bail!("unexpected outcome frame: {other:?}"),
+        };
+        let mut buffers: Vec<Vec<i32>> = shapes
+            .iter()
+            .map(|&(r, c)| vec![0i32; r as usize * c as usize])
+            .collect();
+        let mut filled: Vec<usize> = vec![0; shapes.len()];
+        loop {
+            match self.recv()? {
+                Frame::StreamChunk(c) if c.wire_id == wire_id => {
+                    let idx = c.output_index as usize;
+                    let (_rows, cols) = *shapes
+                        .get(idx)
+                        .ok_or_else(|| anyhow!("chunk for unknown output {idx}"))?;
+                    let cols = cols as usize;
+                    if cols == 0 || c.data.len() % cols != 0 {
+                        bail!("chunk of {} values is not whole rows of {cols}", c.data.len());
+                    }
+                    let start = c.row_start as usize * cols;
+                    let end = start + c.data.len();
+                    let buf = &mut buffers[idx];
+                    if end > buf.len() {
+                        bail!("chunk rows overflow output {idx}");
+                    }
+                    buf[start..end].copy_from_slice(&c.data);
+                    filled[idx] += c.data.len();
+                }
+                Frame::OutcomeDone { wire_id: w } if w == wire_id => break,
+                other => bail!("unexpected stream frame: {other:?}"),
+            }
+        }
+        for (i, (&(r, c), &got)) in shapes.iter().zip(&filled).enumerate() {
+            let want = r as usize * c as usize;
+            if got != want {
+                bail!("output {i}: {got} of {want} values streamed");
+            }
+        }
+        let mats = shapes
+            .iter()
+            .zip(buffers)
+            .map(|(&(r, c), data)| Mat::from_vec(r as usize, c as usize, data))
+            .collect();
+        Ok(Some(WireOutcome { request_id, result: Ok(mats), accounting }))
+    }
+}

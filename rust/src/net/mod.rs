@@ -1,0 +1,98 @@
+//! Network serving tier: a length-prefixed TCP wire protocol over the
+//! coordinator's typed [`Client`](crate::coordinator::Client) API, with
+//! streaming responses and first-class remote cancellation.
+//!
+//! Built entirely on `std::net` (no async runtime, no codec crates):
+//! [`NetServer`] runs one listener thread plus one session thread per
+//! connection; [`NetClient`] is the blocking reference consumer used by
+//! the loopback differential suite and `adip net-serve --self-test`.
+//!
+//! # Frame layout
+//!
+//! Every frame is
+//!
+//! ```text
+//! [u32 body_len (LE)] [u8 opcode] [body: body_len bytes]
+//! ```
+//!
+//! `body_len` counts the body only. All integers are little-endian;
+//! strings are `u32 len + UTF-8 bytes`; matrices are row-major
+//! `u32 rows, u32 cols, rows*cols × i32`. Bodies above 64 MiB
+//! ([`wire::MAX_BODY_BYTES`]) are rejected before allocation.
+//!
+//! | opcode | frame           | direction | body |
+//! |--------|-----------------|-----------|------|
+//! | `0x01` | Submit          | c → s | `u64 wire_id, u8 priority_rank, u64 deadline_us (MAX = none), u64 input_id, u32 weight_bits, u8 act_act, str tag, mat a, u16 n, n × mat` |
+//! | `0x02` | Poll            | c → s | `u64 wire_id` |
+//! | `0x03` | Wait            | c → s | `u64 wire_id` |
+//! | `0x04` | Cancel          | c → s | `u64 wire_id` |
+//! | `0x05` | Metrics         | c → s | empty |
+//! | `0x81` | Submitted       | s → c | `u64 wire_id, u64 request_id` |
+//! | `0x82` | Busy            | s → c | `u64 wire_id, str detail` |
+//! | `0x83` | Draining        | s → c | `u64 wire_id` |
+//! | `0x84` | Pending         | s → c | `u64 wire_id` |
+//! | `0x85` | OutcomeHeader   | s → c | `u64 wire_id, u64 request_id, u16 n, n × (u32 rows, u32 cols), accounting` |
+//! | `0x86` | StreamChunk     | s → c | `u64 wire_id, u32 output_index, u32 row_start, u32 n, n × i32` |
+//! | `0x87` | OutcomeDone     | s → c | `u64 wire_id` |
+//! | `0x88` | OutcomeError    | s → c | `u64 wire_id, u64 request_id, u8 code, u32 set_index, str detail, accounting` |
+//! | `0x89` | MetricsText     | s → c | `str text` |
+//! | `0x8A` | CancelAck       | s → c | `u64 wire_id, u8 registered` |
+//!
+//! `accounting` is 9 × `u64` + `u8`: cycles, passes, energy bits
+//! (`f64::to_bits`), activation/weight/output bytes, tile reads,
+//! conflict cycles, batch seq, batched flag — the simulated
+//! (deterministic) half of `ResponseMetrics`, so a loopback trace can
+//! be asserted bit-identical to the in-process path. Host wall-clock
+//! timings never cross the wire.
+//!
+//! Error codes (see [`wire::encode_error`]): 1 Validation, 2 Shed,
+//! 3 Cancelled, 4 RangeCheck (`set_index` meaningful), 5 Shutdown,
+//! 6 Execution. The detail string carries the variant payload, so the
+//! decoded [`RequestError`](crate::coordinator::RequestError) `Display`
+//! is byte-identical to the in-process rendering.
+//!
+//! # Session lifecycle
+//!
+//! A connection is a session holding a private `wire_id →`
+//! [`Ticket`](crate::coordinator::Ticket) map; wire ids are chosen by
+//! the client and scoped to the connection. Frames are serviced
+//! strictly in arrival order and every reply echoes the wire id, so a
+//! blocking client needs no demultiplexer:
+//!
+//! 1. **Submit** → `Submitted` (ticket mapped), `Busy` (admission queue
+//!    stayed full through the server's bounded retry — the socket-side
+//!    image of the coordinator's backpressure reject), `Draining`, or
+//!    `OutcomeError` (validation reject, duplicate wire id, stopped
+//!    coordinator).
+//! 2. **Poll / Wait** → `Pending` (Poll only) or the outcome stream:
+//!    `OutcomeHeader`, one `StreamChunk` per row band (~64 KiB — a
+//!    1024×1024 result crosses the socket in 64 bounded frames, never
+//!    one giant allocation), `OutcomeDone`. Failed requests resolve as
+//!    one `OutcomeError` carrying the typed code and the accounting
+//!    accumulated before the failure. Either way the outcome is
+//!    claimed: the wire id is then unknown.
+//! 3. **Cancel** → `CancelAck`. Drives
+//!    [`Ticket::cancel`](crate::coordinator::Ticket::cancel): honored at
+//!    the next pipeline boundary (router window, prepare stage, worker
+//!    pop — covering fabric deques, steals and coalesce windows); the
+//!    request then resolves as `OutcomeError` code 3 (Cancelled),
+//!    still collected via Wait/Poll. `registered = 0` means the outcome
+//!    had already arrived (or the id is unknown) — a no-op, the result
+//!    stays claimable.
+//! 4. Dropping the connection discards unclaimed tickets, exactly like
+//!    dropping an in-process `Ticket`.
+//!
+//! **Drain** ([`NetServer::drain`]): new Submits are refused with
+//! `Draining` while Wait/Poll/Cancel/Metrics stay serviceable, so
+//! clients collect every in-flight ticket — nothing admitted is lost,
+//! including batches still parked in fabric deques or mid-steal.
+//! **Shutdown** ([`NetServer::shutdown`]) stops accepting and joins all
+//! threads.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, SubmitReply, WireOutcome};
+pub use server::NetServer;
+pub use wire::{Frame, WireAccounting};

@@ -1,0 +1,475 @@
+//! The serving side: a TCP listener fronting a coordinator [`Client`].
+//!
+//! [`NetServer::bind`] starts one listener thread (non-blocking accept
+//! poll, so shutdown never hangs in `accept`) that spawns one session
+//! thread per connection. A session owns the connection's wire-id →
+//! [`Ticket`] map and services frames strictly in arrival order —
+//! replies for one connection never interleave because each frame is
+//! written with a single `write_all`.
+//!
+//! Lifecycle knobs:
+//!
+//! * [`NetServer::drain`] — refuse *new* Submits with a `Draining`
+//!   frame while everything already admitted keeps running; `Wait`,
+//!   `Poll`, `Cancel` and `Metrics` stay serviceable, so clients can
+//!   collect (or cancel) their in-flight work to the last ticket.
+//! * [`NetServer::shutdown`] — stop accepting, wake every session
+//!   (tickets still held by a session are dropped; their outcomes are
+//!   discarded exactly like dropping an in-process [`Ticket`]), and
+//!   join all threads. The coordinator itself is owned by the caller
+//!   and shut down separately.
+
+use std::collections::HashMap;
+use std::io::{self, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{
+    Client, MatmulRequest, Metrics, RequestOutcome, SubmitOptions, Ticket,
+};
+
+use super::wire::{
+    chunk_rows, encode_error, Frame, FrameReader, OutcomeError, OutcomeHeader, StreamChunk,
+    SubmitFrame, WireAccounting,
+};
+
+/// How long a session retries a backpressured admission (the
+/// coordinator's bounded ingress queue is full) before giving up with a
+/// `Busy` frame. The fast path is still a single lock-free `try_send`;
+/// the retry loop only runs while the queue is actually full.
+const ADMIT_RETRY_BUDGET: Duration = Duration::from_millis(50);
+/// Pause between admission retries.
+const ADMIT_RETRY_STEP: Duration = Duration::from_millis(2);
+/// Socket read timeout — the granularity at which sessions notice the
+/// stop flag; also the `Wait` poll step.
+const SESSION_POLL: Duration = Duration::from_millis(25);
+/// Accept-poll pause of the non-blocking listener thread.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+
+/// A running TCP serving tier over one coordinator [`Client`].
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving. `client`/`metrics` come from the coordinator the
+    /// tier fronts (`Coordinator::client()` / `Coordinator::metrics()`).
+    pub fn bind(addr: &str, client: Client, metrics: Arc<Metrics>) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local_addr = listener.local_addr().context("local_addr")?;
+        listener.set_nonblocking(true).context("set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let drain = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let handle = {
+            let (stop, drain, sessions) = (stop.clone(), drain.clone(), sessions.clone());
+            thread::Builder::new()
+                .name("net-listener".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                let (client, metrics) = (client.clone(), metrics.clone());
+                                let (stop, drain) = (stop.clone(), drain.clone());
+                                let h = thread::Builder::new()
+                                    .name("net-session".into())
+                                    .spawn(move || session(stream, client, metrics, stop, drain))
+                                    .expect("spawn net session");
+                                sessions.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                            }
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                                thread::sleep(ACCEPT_POLL);
+                            }
+                            // transient accept failures (e.g. aborted
+                            // handshake) must not kill the listener
+                            Err(_) => thread::sleep(ACCEPT_POLL),
+                        }
+                    }
+                })
+                .context("spawn net listener")?
+        };
+        Ok(NetServer { local_addr, stop, drain, listener: Some(handle), sessions })
+    }
+
+    /// The bound address (resolves the ephemeral port of `":0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Enter drain mode: new Submits are refused with a `Draining`
+    /// frame; in-flight requests keep executing and stay collectable.
+    pub fn drain(&self) {
+        self.drain.store(true, Ordering::Release);
+    }
+
+    /// Whether the server is draining.
+    pub fn is_draining(&self) -> bool {
+        self.drain.load(Ordering::Acquire)
+    }
+
+    /// Stop accepting, wake every session, join all threads. Sessions
+    /// notice the flag within one socket-timeout tick.
+    pub fn shutdown(mut self) {
+        self.drain.store(true, Ordering::Release);
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.listener.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> =
+            std::mem::take(&mut *self.sessions.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-connection session: reads frames, drives the coordinator client,
+/// writes replies. Exits when the peer disconnects, an io error hits
+/// the socket, or the server stops.
+fn session(
+    stream: TcpStream,
+    client: Client,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(SESSION_POLL)).is_err() {
+        return;
+    }
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = FrameReader::new(reader_stream);
+    let mut s = Session { out: stream, client, metrics, stop: stop.clone(), drain, tickets: HashMap::new() };
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return;
+        }
+        match reader.poll_frame() {
+            Ok(None) => continue,
+            Ok(Some(frame)) => {
+                if s.handle(frame).is_err() {
+                    return; // socket gone (or coordinator unreachable mid-write)
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                // malformed frame: report once (wire_id 0 = connection
+                // scope), then hang up — framing is unrecoverable
+                let _ = s.write(&Frame::OutcomeError(OutcomeError {
+                    wire_id: 0,
+                    request_id: 0,
+                    code: 6,
+                    set_index: 0,
+                    detail: format!("protocol error: {e}"),
+                    accounting: WireAccounting::default(),
+                }));
+                return;
+            }
+            Err(_) => return,
+        }
+    }
+}
+
+struct Session {
+    out: TcpStream,
+    client: Client,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    drain: Arc<AtomicBool>,
+    tickets: HashMap<u64, Ticket>,
+}
+
+impl Session {
+    fn write(&mut self, frame: &Frame) -> io::Result<()> {
+        frame.write_to(&mut self.out)
+    }
+
+    fn handle(&mut self, frame: Frame) -> io::Result<()> {
+        match frame {
+            Frame::Submit(sub) => self.handle_submit(sub),
+            Frame::Poll { wire_id } => match self.tickets.remove(&wire_id) {
+                None => self.unknown_wire_id(wire_id),
+                Some(mut t) => match t.try_wait() {
+                    Ok(Some(out)) => self.stream_outcome(wire_id, out),
+                    Ok(None) => {
+                        self.tickets.insert(wire_id, t);
+                        self.write(&Frame::Pending { wire_id })
+                    }
+                    Err(_) => self.coordinator_gone(wire_id),
+                },
+            },
+            Frame::Wait { wire_id } => match self.tickets.remove(&wire_id) {
+                None => self.unknown_wire_id(wire_id),
+                Some(mut t) => loop {
+                    match t.wait_timeout(SESSION_POLL) {
+                        Ok(Some(out)) => return self.stream_outcome(wire_id, out),
+                        Ok(None) => {
+                            if self.stop.load(Ordering::Acquire) {
+                                return self.coordinator_gone(wire_id);
+                            }
+                        }
+                        Err(_) => return self.coordinator_gone(wire_id),
+                    }
+                },
+            },
+            Frame::Cancel { wire_id } => {
+                let registered = match self.tickets.get_mut(&wire_id) {
+                    Some(t) => t.cancel(),
+                    // unknown or already-collected id: idempotent no-op
+                    None => false,
+                };
+                self.write(&Frame::CancelAck { wire_id, registered })
+            }
+            Frame::Metrics => {
+                let text = self.metrics.render();
+                self.write(&Frame::MetricsText { text })
+            }
+            // a reply opcode arriving on the server side is a protocol
+            // violation by the peer
+            other => {
+                let frame = Frame::OutcomeError(OutcomeError {
+                    wire_id: 0,
+                    request_id: 0,
+                    code: 6,
+                    set_index: 0,
+                    detail: format!("unexpected frame {:#04x} on the server side", other.opcode()),
+                    accounting: WireAccounting::default(),
+                });
+                self.write(&frame)
+            }
+        }
+    }
+
+    fn handle_submit(&mut self, sub: SubmitFrame) -> io::Result<()> {
+        let wire_id = sub.wire_id;
+        if self.drain.load(Ordering::Acquire) {
+            return self.write(&Frame::Draining { wire_id });
+        }
+        if self.tickets.contains_key(&wire_id) {
+            return self.reject(wire_id, format!("wire id {wire_id} already in flight"));
+        }
+        let request = MatmulRequest {
+            id: 0,
+            input_id: sub.input_id,
+            a: Arc::new(sub.a),
+            bs: sub.bs.into_iter().map(Arc::new).collect(),
+            weight_bits: sub.weight_bits,
+            act_act: sub.act_act,
+            tag: sub.tag,
+        };
+        let mut opts = SubmitOptions::new(request).priority(sub.priority);
+        if let Some(us) = sub.deadline_us {
+            opts = opts.deadline(Duration::from_micros(us));
+        }
+        // Backpressure mapping: the first attempt is the client's
+        // lock-free try-send; only a full ingress queue enters the
+        // bounded retry loop, and exhausting the budget surfaces as an
+        // explicit Busy frame instead of an unbounded server-side stall.
+        let deadline = Instant::now() + ADMIT_RETRY_BUDGET;
+        loop {
+            match self.client.submit(opts.clone()) {
+                Ok(ticket) => {
+                    let request_id = ticket.id();
+                    self.tickets.insert(wire_id, ticket);
+                    return self.write(&Frame::Submitted { wire_id, request_id });
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    if msg.starts_with("queue full") {
+                        if Instant::now() < deadline && !self.stop.load(Ordering::Acquire) {
+                            thread::sleep(ADMIT_RETRY_STEP);
+                            continue;
+                        }
+                        return self.write(&Frame::Busy { wire_id, detail: msg });
+                    }
+                    // validation reject or a stopped coordinator: map
+                    // onto the typed taxonomy (the in-process path
+                    // surfaces these synchronously from `submit`)
+                    let (code, detail) = match msg.strip_prefix("invalid request: ") {
+                        Some(reason) => (1, reason.to_string()),
+                        None => (5, String::new()),
+                    };
+                    return self.write(&Frame::OutcomeError(OutcomeError {
+                        wire_id,
+                        request_id: 0,
+                        code,
+                        set_index: 0,
+                        detail,
+                        accounting: WireAccounting::default(),
+                    }));
+                }
+            }
+        }
+    }
+
+    /// Stream one resolved outcome: header, row-band chunks, done — or
+    /// a single typed error frame.
+    fn stream_outcome(&mut self, wire_id: u64, out: RequestOutcome) -> io::Result<()> {
+        let accounting = WireAccounting::from_metrics(&out.metrics);
+        match out.result {
+            Ok(mats) => {
+                let shapes =
+                    mats.iter().map(|m| (m.rows() as u32, m.cols() as u32)).collect();
+                self.write(&Frame::OutcomeHeader(OutcomeHeader {
+                    wire_id,
+                    request_id: out.id,
+                    shapes,
+                    accounting,
+                }))?;
+                for (i, m) in mats.iter().enumerate() {
+                    let (rows, cols) = (m.rows(), m.cols());
+                    if cols == 0 {
+                        continue; // degenerate shape: nothing to stream
+                    }
+                    let band = chunk_rows(cols);
+                    let data = m.as_slice();
+                    let mut row = 0usize;
+                    while row < rows {
+                        let take = band.min(rows - row);
+                        self.write(&Frame::StreamChunk(StreamChunk {
+                            wire_id,
+                            output_index: i as u32,
+                            row_start: row as u32,
+                            data: data[row * cols..(row + take) * cols].to_vec(),
+                        }))?;
+                        row += take;
+                    }
+                }
+                self.write(&Frame::OutcomeDone { wire_id })?;
+                self.out.flush()
+            }
+            Err(e) => {
+                let (code, set_index, detail) = encode_error(&e);
+                self.write(&Frame::OutcomeError(OutcomeError {
+                    wire_id,
+                    request_id: out.id,
+                    code,
+                    set_index,
+                    detail,
+                    accounting,
+                }))
+            }
+        }
+    }
+
+    fn unknown_wire_id(&mut self, wire_id: u64) -> io::Result<()> {
+        self.reject(wire_id, format!("unknown wire id {wire_id}"))
+    }
+
+    fn reject(&mut self, wire_id: u64, detail: String) -> io::Result<()> {
+        self.write(&Frame::OutcomeError(OutcomeError {
+            wire_id,
+            request_id: 0,
+            code: 1,
+            set_index: 0,
+            detail,
+            accounting: WireAccounting::default(),
+        }))
+    }
+
+    fn coordinator_gone(&mut self, wire_id: u64) -> io::Result<()> {
+        self.write(&Frame::OutcomeError(OutcomeError {
+            wire_id,
+            request_id: 0,
+            code: 5,
+            set_index: 0,
+            detail: String::new(),
+            accounting: WireAccounting::default(),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::mpsc::sync_channel;
+    use std::sync::Arc;
+
+    use super::*;
+    use crate::coordinator::client::{CancelRegistry, Gate};
+    use crate::coordinator::Priority;
+    use crate::dataflow::Mat;
+    use crate::net::{NetClient, SubmitReply};
+    use crate::testutil::Rng;
+
+    fn request() -> MatmulRequest {
+        let mut rng = Rng::seeded(91);
+        MatmulRequest {
+            id: 0,
+            input_id: 1,
+            a: Arc::new(Mat::random(&mut rng, 8, 8, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, 8, 8, 2))],
+            weight_bits: 2,
+            act_act: false,
+            tag: String::new(),
+        }
+    }
+
+    /// Deterministic backpressure: a hand-built admission gate whose
+    /// capacity-1 ingress channel nobody drains. The first Submit fills
+    /// the slot; the second stays Full through the server's entire retry
+    /// budget and MUST surface as a `Busy` frame — no live coordinator,
+    /// no timing races.
+    #[test]
+    fn full_admission_queue_surfaces_as_a_busy_frame() {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, _parked) = sync_channel(1);
+        let gate = Arc::new(Gate::new(metrics.clone(), tx, Arc::new(CancelRegistry::default())));
+        let client = Client::new(gate);
+        let server = NetServer::bind("127.0.0.1:0", client, metrics).unwrap();
+        let mut net = NetClient::connect(server.local_addr()).unwrap();
+        let req = request();
+        assert!(matches!(
+            net.submit(1, &req, Priority::Batch, None).unwrap(),
+            SubmitReply::Accepted { .. }
+        ));
+        match net.submit(2, &req, Priority::Batch, None).unwrap() {
+            SubmitReply::Busy { detail } => assert!(detail.contains("queue full"), "{detail}"),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        // draining outranks backpressure: refused before admission
+        server.drain();
+        assert!(matches!(
+            net.submit(3, &req, Priority::Batch, None).unwrap(),
+            SubmitReply::Draining
+        ));
+        server.shutdown();
+        drop(_parked);
+    }
+
+    /// A client that closes its connection mid-stream must not take the
+    /// server down: the session thread exits and a fresh connection is
+    /// served normally.
+    #[test]
+    fn dropped_connections_do_not_poison_the_listener() {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, _parked) = sync_channel(4);
+        let gate = Arc::new(Gate::new(metrics.clone(), tx, Arc::new(CancelRegistry::default())));
+        let client = Client::new(gate);
+        let server = NetServer::bind("127.0.0.1:0", client, metrics).unwrap();
+        {
+            let mut net = NetClient::connect(server.local_addr()).unwrap();
+            let _ = net.submit(1, &request(), Priority::Batch, None).unwrap();
+            // dropped here with an unclaimed ticket
+        }
+        let mut net = NetClient::connect(server.local_addr()).unwrap();
+        assert!(matches!(
+            net.submit(1, &request(), Priority::Batch, None).unwrap(),
+            SubmitReply::Accepted { .. }
+        ));
+        server.shutdown();
+        drop(_parked);
+    }
+}

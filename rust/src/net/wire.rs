@@ -1,0 +1,826 @@
+//! Wire codec: frame types, length-prefixed encoding, and the
+//! incremental [`FrameReader`].
+//!
+//! Every frame is `[u32 body_len LE][u8 opcode][body]`; `body_len`
+//! counts the body only (not the opcode). Multi-byte integers are
+//! little-endian throughout; matrices travel row-major as
+//! `u32 rows, u32 cols, rows*cols × i32`. See [`super`] for the full
+//! protocol table and session semantics.
+
+use std::io::{self, Read, Write};
+
+use crate::coordinator::{Priority, RequestError, ResponseMetrics};
+use crate::dataflow::Mat;
+
+/// Hard cap on a frame body — a malformed or hostile length prefix must
+/// not drive an unbounded allocation. 64 MiB fits a 4096×4096 i32 matrix
+/// with headroom; results larger than that stream in chunks anyway.
+pub const MAX_BODY_BYTES: usize = 64 << 20;
+
+/// Target byte size of one [`Frame::StreamChunk`] payload. Output
+/// matrices are streamed in row bands of roughly this size so a large
+/// result (e.g. 1024×1024 ≈ 4 MiB) never materializes as one giant
+/// frame on either side of the socket.
+pub const CHUNK_TARGET_BYTES: usize = 64 << 10;
+
+/// Rows per stream chunk for a matrix with `cols` columns: as many
+/// whole rows as fit [`CHUNK_TARGET_BYTES`], and always at least one
+/// (a single row wider than the target still travels as one chunk).
+pub fn chunk_rows(cols: usize) -> usize {
+    (CHUNK_TARGET_BYTES / (cols.max(1) * 4)).max(1)
+}
+
+// Client → server opcodes.
+const OP_SUBMIT: u8 = 0x01;
+const OP_POLL: u8 = 0x02;
+const OP_WAIT: u8 = 0x03;
+const OP_CANCEL: u8 = 0x04;
+const OP_METRICS: u8 = 0x05;
+// Server → client opcodes (high bit set).
+const OP_SUBMITTED: u8 = 0x81;
+const OP_BUSY: u8 = 0x82;
+const OP_DRAINING: u8 = 0x83;
+const OP_PENDING: u8 = 0x84;
+const OP_OUTCOME_HEADER: u8 = 0x85;
+const OP_STREAM_CHUNK: u8 = 0x86;
+const OP_OUTCOME_DONE: u8 = 0x87;
+const OP_OUTCOME_ERROR: u8 = 0x88;
+const OP_METRICS_TEXT: u8 = 0x89;
+const OP_CANCEL_ACK: u8 = 0x8A;
+
+/// A Submit request body: one matmul request plus its scheduling intent,
+/// keyed by the connection-scoped `wire_id` the client chose.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitFrame {
+    /// Client-chosen id, unique per connection; every reply frame for
+    /// this request echoes it.
+    pub wire_id: u64,
+    /// Service class (`Priority::rank` on the wire).
+    pub priority: Priority,
+    /// Soft deadline in microseconds from server-side admission
+    /// (`None` = no deadline; `u64::MAX` sentinel on the wire).
+    pub deadline_us: Option<u64>,
+    /// Shared-input fusion key (see `MatmulRequest::input_id`).
+    pub input_id: u64,
+    /// Declared weight bit-width (1–8).
+    pub weight_bits: u32,
+    /// Activation-to-activation workload flag.
+    pub act_act: bool,
+    /// Free-form tag for metrics/debugging.
+    pub tag: String,
+    /// The activation matrix.
+    pub a: Mat,
+    /// Weight matrices.
+    pub bs: Vec<Mat>,
+}
+
+/// Simulated per-request accounting mirrored onto the wire. Energy
+/// travels as `f64::to_bits` so the loopback differential gate can
+/// assert bit-exact equality with the in-process path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct WireAccounting {
+    /// Simulated accelerator cycles.
+    pub cycles: u64,
+    /// Stationary-tile passes.
+    pub passes: u64,
+    /// `energy_j.to_bits()`.
+    pub energy_j_bits: u64,
+    /// Activation tile bytes read.
+    pub act_read_bytes: u64,
+    /// Packed weight tile bytes read.
+    pub weight_read_bytes: u64,
+    /// Output tile bytes written.
+    pub output_write_bytes: u64,
+    /// Tile-read events.
+    pub tile_reads: u64,
+    /// Bank-conflict stall cycles.
+    pub conflict_cycles: u64,
+    /// Router batch sequence number (0 = never routed).
+    pub batch_seq: u64,
+    /// Whether the request fused into a shared-input batch.
+    pub batched: bool,
+}
+
+impl WireAccounting {
+    /// Capture the simulated (deterministic) accounting of a response.
+    /// Host wall-clock fields are deliberately dropped: they can never
+    /// be bit-compared across transports.
+    pub fn from_metrics(m: &ResponseMetrics) -> WireAccounting {
+        WireAccounting {
+            cycles: m.cycles,
+            passes: m.passes,
+            energy_j_bits: m.energy_j.to_bits(),
+            act_read_bytes: m.memory.act_read_bytes,
+            weight_read_bytes: m.memory.weight_read_bytes,
+            output_write_bytes: m.memory.output_write_bytes,
+            tile_reads: m.memory.tile_reads,
+            conflict_cycles: m.memory.conflict_cycles,
+            batch_seq: m.batch_seq,
+            batched: m.batched,
+        }
+    }
+}
+
+/// Header of a successful outcome: shapes of every output matrix (data
+/// follows in [`Frame::StreamChunk`]s) plus the accounting.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutcomeHeader {
+    pub wire_id: u64,
+    /// The coordinator-assigned request id.
+    pub request_id: u64,
+    /// `(rows, cols)` of each output matrix, in request order.
+    pub shapes: Vec<(u32, u32)>,
+    pub accounting: WireAccounting,
+}
+
+/// One row band of one output matrix. `data.len()` is always a multiple
+/// of the output's column count; `row_start` is the first row carried.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamChunk {
+    pub wire_id: u64,
+    /// Which output matrix of the outcome this band belongs to.
+    pub output_index: u32,
+    pub row_start: u32,
+    pub data: Vec<i32>,
+}
+
+/// Terminal failure of a submitted request, carrying the typed
+/// [`RequestError`] as `(code, set_index, detail)` — see
+/// [`encode_error`] / [`decode_error`] — plus whatever accounting was
+/// accumulated before the failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OutcomeError {
+    pub wire_id: u64,
+    /// Coordinator request id; 0 when the request never entered the
+    /// pipeline (validation reject, duplicate wire id).
+    pub request_id: u64,
+    pub code: u8,
+    /// `RequestError::RangeCheck::set_index`; 0 for every other code.
+    pub set_index: u32,
+    pub detail: String,
+    pub accounting: WireAccounting,
+}
+
+/// Every protocol frame. Client→server requests carry a low opcode;
+/// server→client replies have the high bit set.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Submit a request (`0x01`). Replied with `Submitted`, `Busy`,
+    /// `Draining` or `OutcomeError`.
+    Submit(SubmitFrame),
+    /// Non-blocking completion check (`0x02`): `Pending` or the outcome
+    /// stream.
+    Poll { wire_id: u64 },
+    /// Blocking completion wait (`0x03`): the outcome stream.
+    Wait { wire_id: u64 },
+    /// Cancel an in-flight request (`0x04`): `CancelAck`.
+    Cancel { wire_id: u64 },
+    /// Fetch the coordinator metrics dump (`0x05`): `MetricsText`.
+    Metrics,
+    /// Request admitted (`0x81`).
+    Submitted { wire_id: u64, request_id: u64 },
+    /// Backpressure reject after the bounded admission retry (`0x82`).
+    Busy { wire_id: u64, detail: String },
+    /// Submission refused: the server is draining (`0x83`).
+    Draining { wire_id: u64 },
+    /// Poll reply: still in flight (`0x84`).
+    Pending { wire_id: u64 },
+    /// Start of an outcome stream (`0x85`).
+    OutcomeHeader(OutcomeHeader),
+    /// One row band of output data (`0x86`).
+    StreamChunk(StreamChunk),
+    /// End of an outcome stream (`0x87`).
+    OutcomeDone { wire_id: u64 },
+    /// Terminal typed failure (`0x88`).
+    OutcomeError(OutcomeError),
+    /// Metrics dump reply (`0x89`).
+    MetricsText { text: String },
+    /// Cancel reply (`0x8A`): `registered` mirrors `Ticket::cancel` —
+    /// `false` means the outcome had already arrived (or the wire id is
+    /// unknown) and the cancel was a no-op.
+    CancelAck { wire_id: u64, registered: bool },
+}
+
+/// Map a typed [`RequestError`] onto its wire triple. The detail string
+/// carries the variant's payload, not its `Display` rendering, so
+/// [`decode_error`] reconstructs the exact variant and `Display`
+/// round-trips byte-identically.
+pub fn encode_error(e: &RequestError) -> (u8, u32, String) {
+    match e {
+        RequestError::Validation(reason) => (1, 0, reason.clone()),
+        RequestError::Shed { detail } => (2, 0, detail.clone()),
+        RequestError::Cancelled => (3, 0, String::new()),
+        RequestError::RangeCheck { set_index, detail } => (4, *set_index as u32, detail.clone()),
+        RequestError::Shutdown => (5, 0, String::new()),
+        RequestError::Execution(msg) => (6, 0, msg.clone()),
+    }
+}
+
+/// Inverse of [`encode_error`]. Unknown codes are a protocol error.
+pub fn decode_error(code: u8, set_index: u32, detail: String) -> io::Result<RequestError> {
+    Ok(match code {
+        1 => RequestError::Validation(detail),
+        2 => RequestError::Shed { detail },
+        3 => RequestError::Cancelled,
+        4 => RequestError::RangeCheck { set_index: set_index as usize, detail },
+        5 => RequestError::Shutdown,
+        6 => RequestError::Execution(detail),
+        other => return Err(bad(format!("unknown error code {other}"))),
+    })
+}
+
+fn bad(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+// ---------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_mat(buf: &mut Vec<u8>, m: &Mat) {
+    put_u32(buf, m.rows() as u32);
+    put_u32(buf, m.cols() as u32);
+    for &v in m.as_slice() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_accounting(buf: &mut Vec<u8>, a: &WireAccounting) {
+    put_u64(buf, a.cycles);
+    put_u64(buf, a.passes);
+    put_u64(buf, a.energy_j_bits);
+    put_u64(buf, a.act_read_bytes);
+    put_u64(buf, a.weight_read_bytes);
+    put_u64(buf, a.output_write_bytes);
+    put_u64(buf, a.tile_reads);
+    put_u64(buf, a.conflict_cycles);
+    put_u64(buf, a.batch_seq);
+    buf.push(a.batched as u8);
+}
+
+impl Frame {
+    /// This frame's opcode byte.
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Frame::Submit(_) => OP_SUBMIT,
+            Frame::Poll { .. } => OP_POLL,
+            Frame::Wait { .. } => OP_WAIT,
+            Frame::Cancel { .. } => OP_CANCEL,
+            Frame::Metrics => OP_METRICS,
+            Frame::Submitted { .. } => OP_SUBMITTED,
+            Frame::Busy { .. } => OP_BUSY,
+            Frame::Draining { .. } => OP_DRAINING,
+            Frame::Pending { .. } => OP_PENDING,
+            Frame::OutcomeHeader(_) => OP_OUTCOME_HEADER,
+            Frame::StreamChunk(_) => OP_STREAM_CHUNK,
+            Frame::OutcomeDone { .. } => OP_OUTCOME_DONE,
+            Frame::OutcomeError(_) => OP_OUTCOME_ERROR,
+            Frame::MetricsText { .. } => OP_METRICS_TEXT,
+            Frame::CancelAck { .. } => OP_CANCEL_ACK,
+        }
+    }
+
+    /// Encode the complete frame — length prefix, opcode, body — into
+    /// one buffer, so the caller can hand the socket a single
+    /// `write_all` and frames never interleave mid-write.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            Frame::Submit(s) => {
+                put_u64(&mut body, s.wire_id);
+                body.push(s.priority.rank() as u8);
+                put_u64(&mut body, s.deadline_us.unwrap_or(u64::MAX));
+                put_u64(&mut body, s.input_id);
+                put_u32(&mut body, s.weight_bits);
+                body.push(s.act_act as u8);
+                put_str(&mut body, &s.tag);
+                put_mat(&mut body, &s.a);
+                put_u16(&mut body, s.bs.len() as u16);
+                for b in &s.bs {
+                    put_mat(&mut body, b);
+                }
+            }
+            Frame::Poll { wire_id }
+            | Frame::Wait { wire_id }
+            | Frame::Cancel { wire_id }
+            | Frame::Draining { wire_id }
+            | Frame::Pending { wire_id }
+            | Frame::OutcomeDone { wire_id } => put_u64(&mut body, *wire_id),
+            Frame::Metrics => {}
+            Frame::Submitted { wire_id, request_id } => {
+                put_u64(&mut body, *wire_id);
+                put_u64(&mut body, *request_id);
+            }
+            Frame::Busy { wire_id, detail } => {
+                put_u64(&mut body, *wire_id);
+                put_str(&mut body, detail);
+            }
+            Frame::OutcomeHeader(h) => {
+                put_u64(&mut body, h.wire_id);
+                put_u64(&mut body, h.request_id);
+                put_u16(&mut body, h.shapes.len() as u16);
+                for &(r, c) in &h.shapes {
+                    put_u32(&mut body, r);
+                    put_u32(&mut body, c);
+                }
+                put_accounting(&mut body, &h.accounting);
+            }
+            Frame::StreamChunk(c) => {
+                put_u64(&mut body, c.wire_id);
+                put_u32(&mut body, c.output_index);
+                put_u32(&mut body, c.row_start);
+                put_u32(&mut body, c.data.len() as u32);
+                for &v in &c.data {
+                    body.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Frame::OutcomeError(e) => {
+                put_u64(&mut body, e.wire_id);
+                put_u64(&mut body, e.request_id);
+                body.push(e.code);
+                put_u32(&mut body, e.set_index);
+                put_str(&mut body, &e.detail);
+                put_accounting(&mut body, &e.accounting);
+            }
+            Frame::MetricsText { text } => put_str(&mut body, text),
+            Frame::CancelAck { wire_id, registered } => {
+                put_u64(&mut body, *wire_id);
+                body.push(*registered as u8);
+            }
+        }
+        debug_assert!(body.len() <= MAX_BODY_BYTES, "frame body exceeds MAX_BODY_BYTES");
+        let mut out = Vec::with_capacity(5 + body.len());
+        put_u32(&mut out, body.len() as u32);
+        out.push(self.opcode());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Write the frame to `w` as one `write_all`.
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        w.write_all(&self.encode())
+    }
+
+    /// Blocking read of one frame (the test client's path; server
+    /// sessions use [`FrameReader`] so a read timeout cannot split a
+    /// frame).
+    pub fn read_from(r: &mut impl Read) -> io::Result<Frame> {
+        let mut header = [0u8; 5];
+        r.read_exact(&mut header)?;
+        let len = u32::from_le_bytes([header[0], header[1], header[2], header[3]]) as usize;
+        if len > MAX_BODY_BYTES {
+            return Err(bad(format!("frame body {len} exceeds {MAX_BODY_BYTES}")));
+        }
+        let mut body = vec![0u8; len];
+        r.read_exact(&mut body)?;
+        Frame::decode(header[4], &body)
+    }
+
+    /// Decode a frame body. Trailing bytes are a protocol error — every
+    /// frame's length is fully determined by its contents.
+    pub fn decode(opcode: u8, body: &[u8]) -> io::Result<Frame> {
+        let mut b = Body { buf: body, pos: 0 };
+        let frame = match opcode {
+            OP_SUBMIT => {
+                let wire_id = b.u64()?;
+                let rank = b.u8()?;
+                let priority = *Priority::ALL
+                    .get(rank as usize)
+                    .ok_or_else(|| bad(format!("priority rank {rank} out of range")))?;
+                let deadline = b.u64()?;
+                let deadline_us = (deadline != u64::MAX).then_some(deadline);
+                let input_id = b.u64()?;
+                let weight_bits = b.u32()?;
+                let act_act = b.u8()? != 0;
+                let tag = b.string()?;
+                let a = b.mat()?;
+                let n = b.u16()? as usize;
+                let mut bs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    bs.push(b.mat()?);
+                }
+                Frame::Submit(SubmitFrame {
+                    wire_id,
+                    priority,
+                    deadline_us,
+                    input_id,
+                    weight_bits,
+                    act_act,
+                    tag,
+                    a,
+                    bs,
+                })
+            }
+            OP_POLL => Frame::Poll { wire_id: b.u64()? },
+            OP_WAIT => Frame::Wait { wire_id: b.u64()? },
+            OP_CANCEL => Frame::Cancel { wire_id: b.u64()? },
+            OP_METRICS => Frame::Metrics,
+            OP_SUBMITTED => Frame::Submitted { wire_id: b.u64()?, request_id: b.u64()? },
+            OP_BUSY => Frame::Busy { wire_id: b.u64()?, detail: b.string()? },
+            OP_DRAINING => Frame::Draining { wire_id: b.u64()? },
+            OP_PENDING => Frame::Pending { wire_id: b.u64()? },
+            OP_OUTCOME_HEADER => {
+                let wire_id = b.u64()?;
+                let request_id = b.u64()?;
+                let n = b.u16()? as usize;
+                let mut shapes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    shapes.push((b.u32()?, b.u32()?));
+                }
+                let accounting = b.accounting()?;
+                Frame::OutcomeHeader(OutcomeHeader { wire_id, request_id, shapes, accounting })
+            }
+            OP_STREAM_CHUNK => {
+                let wire_id = b.u64()?;
+                let output_index = b.u32()?;
+                let row_start = b.u32()?;
+                let n = b.u32()? as usize;
+                let mut data = Vec::with_capacity(n);
+                for _ in 0..n {
+                    data.push(b.i32()?);
+                }
+                Frame::StreamChunk(StreamChunk { wire_id, output_index, row_start, data })
+            }
+            OP_OUTCOME_DONE => Frame::OutcomeDone { wire_id: b.u64()? },
+            OP_OUTCOME_ERROR => Frame::OutcomeError(OutcomeError {
+                wire_id: b.u64()?,
+                request_id: b.u64()?,
+                code: b.u8()?,
+                set_index: b.u32()?,
+                detail: b.string()?,
+                accounting: b.accounting()?,
+            }),
+            OP_METRICS_TEXT => Frame::MetricsText { text: b.string()? },
+            OP_CANCEL_ACK => Frame::CancelAck { wire_id: b.u64()?, registered: b.u8()? != 0 },
+            other => return Err(bad(format!("unknown opcode {other:#04x}"))),
+        };
+        if b.pos != body.len() {
+            return Err(bad(format!(
+                "{} trailing bytes after opcode {opcode:#04x}",
+                body.len() - b.pos
+            )));
+        }
+        Ok(frame)
+    }
+}
+
+/// Bounds-checked little-endian body cursor.
+struct Body<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl Body<'_> {
+    fn take(&mut self, n: usize) -> io::Result<&[u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(bad(format!(
+                "body truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn i32(&mut self) -> io::Result<i32> {
+        let s = self.take(4)?;
+        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn string(&mut self) -> io::Result<String> {
+        let n = self.u32()? as usize;
+        let s = self.take(n)?;
+        String::from_utf8(s.to_vec()).map_err(|e| bad(format!("invalid utf-8 string: {e}")))
+    }
+
+    fn mat(&mut self) -> io::Result<Mat> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .filter(|&n| n * 4 <= MAX_BODY_BYTES)
+            .ok_or_else(|| bad(format!("matrix {rows}x{cols} overflows the frame cap")))?;
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.i32()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    fn accounting(&mut self) -> io::Result<WireAccounting> {
+        Ok(WireAccounting {
+            cycles: self.u64()?,
+            passes: self.u64()?,
+            energy_j_bits: self.u64()?,
+            act_read_bytes: self.u64()?,
+            weight_read_bytes: self.u64()?,
+            output_write_bytes: self.u64()?,
+            tile_reads: self.u64()?,
+            conflict_cycles: self.u64()?,
+            batch_seq: self.u64()?,
+            batched: self.u8()? != 0,
+        })
+    }
+}
+
+/// Incremental frame parser for sockets with a read timeout. Bytes
+/// accumulate in an internal buffer across `poll_frame` calls, so a
+/// timeout that lands mid-frame never loses data — the next call
+/// resumes exactly where the socket left off.
+pub struct FrameReader<R> {
+    src: R,
+    buf: Vec<u8>,
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(src: R) -> FrameReader<R> {
+        FrameReader { src, buf: Vec::new() }
+    }
+
+    /// Pull one frame if available. `Ok(None)` means the read timed out
+    /// (or would block) before a complete frame arrived; an
+    /// `UnexpectedEof` error means the peer closed the connection.
+    pub fn poll_frame(&mut self) -> io::Result<Option<Frame>> {
+        loop {
+            if self.buf.len() >= 5 {
+                let len =
+                    u32::from_le_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]])
+                        as usize;
+                if len > MAX_BODY_BYTES {
+                    return Err(bad(format!("frame body {len} exceeds {MAX_BODY_BYTES}")));
+                }
+                if self.buf.len() >= 5 + len {
+                    let frame = Frame::decode(self.buf[4], &self.buf[5..5 + len])?;
+                    self.buf.drain(..5 + len);
+                    return Ok(Some(frame));
+                }
+            }
+            let mut tmp = [0u8; 4096];
+            match self.src.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "connection closed",
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(None)
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::Rng;
+    use std::io::Cursor;
+
+    fn roundtrip(f: Frame) {
+        let bytes = f.encode();
+        let back = Frame::read_from(&mut Cursor::new(&bytes)).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        let mut rng = Rng::seeded(3);
+        roundtrip(Frame::Submit(SubmitFrame {
+            wire_id: 7,
+            priority: Priority::Interactive,
+            deadline_us: Some(1500),
+            input_id: 42,
+            weight_bits: 2,
+            act_act: false,
+            tag: "qkv".into(),
+            a: Mat::random(&mut rng, 5, 3, 8),
+            bs: vec![Mat::random(&mut rng, 3, 4, 2), Mat::random(&mut rng, 3, 4, 2)],
+        }));
+        roundtrip(Frame::Submit(SubmitFrame {
+            wire_id: 8,
+            priority: Priority::Background,
+            deadline_us: None,
+            input_id: 0,
+            weight_bits: 8,
+            act_act: true,
+            tag: String::new(),
+            a: Mat::random(&mut rng, 2, 2, 8),
+            bs: vec![Mat::random(&mut rng, 2, 2, 8)],
+        }));
+        roundtrip(Frame::Poll { wire_id: 1 });
+        roundtrip(Frame::Wait { wire_id: 2 });
+        roundtrip(Frame::Cancel { wire_id: 3 });
+        roundtrip(Frame::Metrics);
+        roundtrip(Frame::Submitted { wire_id: 4, request_id: 99 });
+        roundtrip(Frame::Busy { wire_id: 5, detail: "queue full (8 pending)".into() });
+        roundtrip(Frame::Draining { wire_id: 6 });
+        roundtrip(Frame::Pending { wire_id: 7 });
+        roundtrip(Frame::OutcomeHeader(OutcomeHeader {
+            wire_id: 8,
+            request_id: 100,
+            shapes: vec![(64, 64), (64, 32)],
+            accounting: WireAccounting {
+                cycles: 1234,
+                passes: 5,
+                energy_j_bits: 0.125f64.to_bits(),
+                act_read_bytes: 4096,
+                weight_read_bytes: 2048,
+                output_write_bytes: 1024,
+                tile_reads: 17,
+                conflict_cycles: 3,
+                batch_seq: 2,
+                batched: true,
+            },
+        }));
+        roundtrip(Frame::StreamChunk(StreamChunk {
+            wire_id: 9,
+            output_index: 1,
+            row_start: 32,
+            data: vec![-5, 0, 7, 123456, -987654],
+        }));
+        roundtrip(Frame::OutcomeDone { wire_id: 10 });
+        roundtrip(Frame::OutcomeError(OutcomeError {
+            wire_id: 11,
+            request_id: 101,
+            code: 4,
+            set_index: 2,
+            detail: "weight matrix 2 value 9 out of 2-bit range -2..=1".into(),
+            accounting: WireAccounting::default(),
+        }));
+        roundtrip(Frame::MetricsText { text: "adip_completed_total 7\n".into() });
+        roundtrip(Frame::CancelAck { wire_id: 12, registered: true });
+    }
+
+    #[test]
+    fn error_codes_round_trip_and_display_survives() {
+        let errors = [
+            RequestError::Validation("no weight matrices".into()),
+            RequestError::Shed { detail: "soft deadline hopeless".into() },
+            RequestError::Cancelled,
+            RequestError::RangeCheck {
+                set_index: 3,
+                detail: "weight matrix 3 value 9 out of 2-bit range -2..=1".into(),
+            },
+            RequestError::Shutdown,
+            RequestError::Execution("cluster worker pool disconnected".into()),
+        ];
+        for e in errors {
+            let (code, set_index, detail) = encode_error(&e);
+            let back = decode_error(code, set_index, detail).unwrap();
+            assert_eq!(back, e);
+            assert_eq!(back.to_string(), e.to_string(), "Display must survive the wire");
+        }
+        assert!(decode_error(0, 0, String::new()).is_err());
+        assert!(decode_error(7, 0, String::new()).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_malformed_frames() {
+        // unknown opcode
+        assert!(Frame::decode(0x7F, &[]).is_err());
+        // truncated body
+        assert!(Frame::decode(OP_POLL, &[1, 2, 3]).is_err());
+        // trailing garbage
+        let mut body = 9u64.to_le_bytes().to_vec();
+        body.push(0xAA);
+        assert!(Frame::decode(OP_POLL, &body).is_err());
+        // oversized length prefix
+        let mut bytes = ((MAX_BODY_BYTES + 1) as u32).to_le_bytes().to_vec();
+        bytes.push(OP_POLL);
+        assert!(Frame::read_from(&mut Cursor::new(&bytes)).is_err());
+        // submit with an out-of-range priority rank
+        let mut sub = Frame::Submit(SubmitFrame {
+            wire_id: 1,
+            priority: Priority::Batch,
+            deadline_us: None,
+            input_id: 0,
+            weight_bits: 8,
+            act_act: false,
+            tag: String::new(),
+            a: Mat::zeros(1, 1),
+            bs: vec![Mat::zeros(1, 1)],
+        })
+        .encode();
+        sub[5 + 8] = 9; // priority byte follows the u64 wire id
+        assert!(Frame::read_from(&mut Cursor::new(&sub)).is_err());
+    }
+
+    /// A `Read` source that yields its bytes in dribbles with
+    /// `WouldBlock` between them — the shape of a socket under a read
+    /// timeout. The reader must hold partial frames across polls.
+    struct Dribble {
+        bytes: Vec<u8>,
+        pos: usize,
+        step: usize,
+        armed: bool,
+    }
+
+    impl std::io::Read for Dribble {
+        fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+            if !self.armed {
+                self.armed = true;
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "not yet"));
+            }
+            self.armed = false;
+            let n = self.step.min(self.bytes.len() - self.pos).min(out.len());
+            if n == 0 {
+                return Ok(0);
+            }
+            out[..n].copy_from_slice(&self.bytes[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_survives_split_delivery() {
+        let frames = vec![
+            Frame::Submitted { wire_id: 1, request_id: 10 },
+            Frame::Pending { wire_id: 1 },
+            Frame::StreamChunk(StreamChunk {
+                wire_id: 1,
+                output_index: 0,
+                row_start: 0,
+                data: (0..100).collect(),
+            }),
+            Frame::OutcomeDone { wire_id: 1 },
+        ];
+        let mut bytes = Vec::new();
+        for f in &frames {
+            bytes.extend_from_slice(&f.encode());
+        }
+        for step in [1usize, 3, 7, 16] {
+            let mut reader =
+                FrameReader::new(Dribble { bytes: bytes.clone(), pos: 0, step, armed: false });
+            let mut got = Vec::new();
+            loop {
+                match reader.poll_frame() {
+                    Ok(Some(f)) => got.push(f),
+                    Ok(None) => continue, // simulated timeout: poll again
+                    Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => break,
+                    Err(e) => panic!("unexpected error at step {step}: {e}"),
+                }
+            }
+            assert_eq!(got, frames, "step {step}");
+        }
+    }
+
+    #[test]
+    fn chunk_rows_targets_the_band_size() {
+        assert_eq!(chunk_rows(0), CHUNK_TARGET_BYTES / 4);
+        // 1024 cols × 4 bytes = 4 KiB per row → 16 rows per 64 KiB band
+        assert_eq!(chunk_rows(1024), 16);
+        // a row wider than the target still ships one row per chunk
+        assert_eq!(chunk_rows(1 << 20), 1);
+        for cols in [1usize, 16, 48, 64, 1000, 1024] {
+            let rows = chunk_rows(cols);
+            assert!(rows >= 1);
+            assert!(rows * cols * 4 <= CHUNK_TARGET_BYTES || rows == 1, "cols {cols}");
+        }
+    }
+}

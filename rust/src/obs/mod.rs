@@ -175,6 +175,10 @@ pub enum SpanKind {
     SplitBack = 15,
     /// Instant: the outcome was sent back to the ticket.
     Complete = 16,
+    /// Instant: the request was cancelled (aux: 0 = requested by the
+    /// client, 1 = honored by the router, 2 = honored by the prepare
+    /// stage, 3 = honored by a worker at fabric pop).
+    Cancel = 17,
 }
 
 impl SpanKind {
@@ -199,6 +203,7 @@ impl SpanKind {
             14 => Reduce,
             15 => SplitBack,
             16 => Complete,
+            17 => Cancel,
             _ => return None,
         })
     }
@@ -222,6 +227,7 @@ impl SpanKind {
             SpanKind::Reduce => "reduce",
             SpanKind::SplitBack => "split_back",
             SpanKind::Complete => "complete",
+            SpanKind::Cancel => "cancel",
         }
     }
 }

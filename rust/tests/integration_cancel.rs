@@ -1,0 +1,313 @@
+//! Integration: first-class cancellation races, on both execution
+//! backends.
+//!
+//! `Ticket::cancel` is honored at whichever pipeline boundary the
+//! request crosses next — router window formation, the prepare stage,
+//! or a worker popping the batch off the balance fabric (covering
+//! deques, steals and coalesce windows). A batch already inside
+//! `execute` runs to completion and its outcome wins the race. Every
+//! test therefore accepts *either* terminal state for a cancelled
+//! ticket — `Err(RequestError::Cancelled)` or a bit-exact `Ok` — and
+//! asserts the invariants that must hold regardless of who wins:
+//!
+//! * no registry leak: `Client::pending_cancellations()` converges to 0,
+//! * conservation: every accepted request resolves exactly once, and
+//!   `completed + cancelled` covers them all (`failed` mirrors
+//!   `cancelled` when nothing else fails),
+//! * survivors are bit-exact against the host matmul,
+//! * the pipeline keeps serving after cancellations.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adip::arch::{Architecture, Backend};
+use adip::balance::{CoalesceConfig, StealPolicy};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, RequestError, SpanKind, SubmitOptions,
+    TraceMode,
+};
+use adip::dataflow::Mat;
+use adip::testutil::Rng;
+
+fn request(rng: &mut Rng, input_id: u64, dim: usize, bits: u32) -> MatmulRequest {
+    MatmulRequest {
+        id: 0,
+        input_id,
+        a: Arc::new(Mat::random(rng, dim, dim, 8)),
+        bs: vec![Arc::new(Mat::random(rng, dim, dim, bits))],
+        weight_bits: bits,
+        act_act: false,
+        tag: String::new(),
+    }
+}
+
+fn expected(r: &MatmulRequest) -> Vec<Mat> {
+    r.bs.iter().map(|b| r.a.matmul(b)).collect()
+}
+
+/// Block until the coordinator reports `n` completed-or-failed
+/// requests (bounded, so a regression fails instead of hanging).
+fn await_settled(coord: &Coordinator, n: u64) {
+    let m = coord.metrics();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while m.completed.load(Ordering::Relaxed) + m.failed.load(Ordering::Relaxed) < n {
+        assert!(Instant::now() < deadline, "requests never settled");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[test]
+fn post_completion_cancel_is_a_no_op_on_both_backends() {
+    for backend in Backend::ALL {
+        let coord = Coordinator::start(CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 16,
+            workers: 1,
+            queue_capacity: 16,
+            batch_window: 1,
+            backend,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut rng = Rng::seeded(61);
+        let r = request(&mut rng, 1, 24, 2);
+        let want = expected(&r);
+        let mut t = client.submit(SubmitOptions::new(r)).unwrap();
+        await_settled(&coord, 1);
+        // the outcome has arrived: cancel must be a no-op that keeps
+        // the outcome claimable and registers nothing
+        assert!(!t.cancel(), "{backend}: post-completion cancel must not register");
+        assert_eq!(client.pending_cancellations(), 0, "{backend}");
+        let out = t.wait().unwrap();
+        assert_eq!(out.result.unwrap(), want, "{backend}");
+        let m = coord.metrics();
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), 0, "{backend}");
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0, "{backend}");
+        coord.shutdown();
+    }
+}
+
+/// Cancel requests parked behind a long-running head-of-line batch:
+/// they are killed in the router window, the prepare stage, or at the
+/// worker-pop boundary — wherever each one happens to sit.
+#[test]
+fn cancel_mid_pipeline_resolves_typed_cancelled_on_both_backends() {
+    for backend in Backend::ALL {
+        // the head batch must hold the single worker long enough for
+        // the cancels (microseconds) to land while targets queue
+        let (head_dim, target_dim) = match backend {
+            Backend::Functional => (256, 32),
+            Backend::CycleAccurate => (48, 16),
+        };
+        let coord = Coordinator::start(CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 16,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 1,
+            backend,
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut rng = Rng::seeded(63);
+        let head = request(&mut rng, 100, head_dim, 8);
+        let head_want = expected(&head);
+        let head_ticket = client.submit(SubmitOptions::new(head)).unwrap();
+        let targets: Vec<MatmulRequest> =
+            (0..7).map(|i| request(&mut rng, 200 + i, target_dim, 2)).collect();
+        let target_want: Vec<Vec<Mat>> = targets.iter().map(expected).collect();
+        let mut tickets: Vec<_> = targets
+            .into_iter()
+            .map(|r| client.submit(SubmitOptions::new(r)).unwrap())
+            .collect();
+        for t in &mut tickets {
+            t.cancel();
+        }
+        let head_out = head_ticket.wait().unwrap();
+        assert_eq!(head_out.result.unwrap(), head_want, "{backend}: head-of-line batch");
+        let mut cancelled = 0u64;
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.wait().unwrap().result {
+                Err(RequestError::Cancelled) => cancelled += 1,
+                Ok(mats) => assert_eq!(mats, target_want[i], "{backend}: survivor {i}"),
+                Err(e) => panic!("{backend}: target {i} resolved to a non-cancel error: {e}"),
+            }
+        }
+        assert!(cancelled >= 1, "{backend}: no cancel won its race behind a busy worker");
+        let m = coord.metrics();
+        assert_eq!(m.cancelled.load(Ordering::Relaxed), cancelled, "{backend}");
+        assert_eq!(m.failed.load(Ordering::Relaxed), cancelled, "{backend}");
+        assert_eq!(m.completed.load(Ordering::Relaxed), 8 - cancelled, "{backend}");
+        assert_eq!(client.pending_cancellations(), 0, "{backend}: registry leaked");
+        // the pipeline keeps serving after cancellations
+        let tail = request(&mut rng, 999, target_dim, 2);
+        let tail_want = expected(&tail);
+        let out = client.submit_wait(SubmitOptions::new(tail)).unwrap();
+        assert_eq!(out.result.unwrap(), tail_want, "{backend}: post-cancel request");
+        coord.shutdown();
+    }
+}
+
+/// Cancels racing aggressive stealing across four workers: batches may
+/// be re-homed between the cancel and the pop, and the pop-side check
+/// must still kill them — or they complete bit-exactly. Nothing leaks
+/// either way.
+#[test]
+fn cancel_races_aggressive_stealing_without_leaking_tickets() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 4,
+        queue_capacity: 128,
+        batch_window: 1,
+        backend: Backend::Functional,
+        steal: StealPolicy::Aggressive,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(67);
+    let total = 32usize;
+    let reqs: Vec<MatmulRequest> =
+        (0..total as u64).map(|i| request(&mut rng, i, 48, 2)).collect();
+    let want: Vec<Vec<Mat>> = reqs.iter().map(expected).collect();
+    let mut tickets = Vec::new();
+    for (i, r) in reqs.into_iter().enumerate() {
+        let mut t = client.submit(SubmitOptions::new(r)).unwrap();
+        if i % 2 == 1 {
+            t.cancel(); // cancel every odd request right behind its submit
+        }
+        tickets.push(t);
+    }
+    let mut cancelled = 0u64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        match t.wait().unwrap().result {
+            Ok(mats) => assert_eq!(mats, want[i], "request {i}"),
+            Err(RequestError::Cancelled) => {
+                assert_eq!(i % 2, 1, "request {i} was never cancelled");
+                cancelled += 1;
+            }
+            Err(e) => panic!("request {i}: unexpected error {e}"),
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.cancelled.load(Ordering::Relaxed), cancelled);
+    assert_eq!(
+        m.completed.load(Ordering::Relaxed) + m.cancelled.load(Ordering::Relaxed),
+        total as u64,
+        "conservation: every accepted request resolves exactly once"
+    );
+    assert_eq!(client.pending_cancellations(), 0, "registry leaked");
+    assert_eq!(m.queue_depth.load(Ordering::Relaxed), 0);
+    coord.shutdown();
+}
+
+/// Cancel a member of a would-be coalesced pass while the candidates
+/// wait behind a busy worker. The stripped member dies typed; the
+/// surviving same-weights partners stay mergeable and bit-exact —
+/// exercised with the first-submitted (leader) and a later (member)
+/// candidate as the victim.
+#[test]
+fn cancel_inside_a_coalesce_window_leaves_partners_bit_exact() {
+    for victim in [0usize, 1] {
+        let coord = Coordinator::start(CoordinatorConfig {
+            arch: Architecture::Adip,
+            n: 16,
+            workers: 1,
+            queue_capacity: 64,
+            batch_window: 1,
+            backend: Backend::Functional,
+            steal: StealPolicy::Idle,
+            coalesce: CoalesceConfig {
+                enabled: true,
+                window: Duration::from_millis(20),
+                max_members: 8,
+            },
+            ..Default::default()
+        });
+        let client = coord.client();
+        let mut rng = Rng::seeded(71 + victim as u64);
+        // head batch keeps the worker busy while the candidates queue up
+        let head = request(&mut rng, 1, 256, 8);
+        let head_ticket = client.submit(SubmitOptions::new(head)).unwrap();
+        // three candidates sharing one weight set (identical Arc):
+        // byte-identical weights + same mode = coalesce-compatible
+        let shared_b = Arc::new(Mat::random(&mut rng, 64, 64, 2));
+        let cands: Vec<MatmulRequest> = (0..3u64)
+            .map(|i| MatmulRequest {
+                id: 0,
+                input_id: 10 + i,
+                a: Arc::new(Mat::random(&mut rng, 64, 64, 8)),
+                bs: vec![shared_b.clone()],
+                weight_bits: 2,
+                act_act: false,
+                tag: format!("cand-{i}"),
+            })
+            .collect();
+        let want: Vec<Vec<Mat>> = cands.iter().map(expected).collect();
+        let mut tickets: Vec<_> = cands
+            .into_iter()
+            .map(|r| client.submit(SubmitOptions::new(r)).unwrap())
+            .collect();
+        tickets[victim].cancel();
+        assert!(head_ticket.wait().unwrap().result.is_ok());
+        for (i, t) in tickets.into_iter().enumerate() {
+            match t.wait().unwrap().result {
+                Ok(mats) => assert_eq!(mats, want[i], "victim {victim}: candidate {i}"),
+                Err(RequestError::Cancelled) => {
+                    assert_eq!(i, victim, "victim {victim}: wrong candidate cancelled")
+                }
+                Err(e) => panic!("victim {victim}: candidate {i} failed: {e}"),
+            }
+        }
+        assert_eq!(client.pending_cancellations(), 0, "victim {victim}: registry leaked");
+        coord.shutdown();
+    }
+}
+
+/// The cancel request and (when the cancel wins) the honoring stage
+/// both land in the ticket's lifecycle trace.
+#[test]
+fn cancel_events_land_in_the_ticket_trace() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 1,
+        queue_capacity: 16,
+        batch_window: 1,
+        backend: Backend::Functional,
+        trace: TraceMode::On,
+        ..Default::default()
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(73);
+    let head = client.submit(SubmitOptions::new(request(&mut rng, 1, 256, 8))).unwrap();
+    let mut t = client.submit(SubmitOptions::new(request(&mut rng, 2, 16, 2))).unwrap();
+    t.cancel();
+    let spans = t.trace();
+    assert!(
+        spans.iter().any(|s| s.kind == SpanKind::Cancel && s.worker == 0),
+        "client-lane cancel event missing: {spans:?}"
+    );
+    assert!(head.wait().unwrap().result.is_ok());
+    // resolve through the polling API so the ticket (and its trace
+    // handle) stays usable after the outcome
+    let out = loop {
+        if let Some(out) = t.wait_timeout(Duration::from_millis(50)).unwrap() {
+            break out;
+        }
+    };
+    if matches!(out.result, Err(RequestError::Cancelled)) {
+        // the honoring stage logs its own cancel event; aux encodes the
+        // boundary (1 router, 2 prepare, 3 worker pop)
+        let spans = t.trace();
+        assert!(
+            spans
+                .iter()
+                .any(|s| s.kind == SpanKind::Cancel && (1..=3).contains(&s.aux)),
+            "stage-side cancel event missing: {spans:?}"
+        );
+    }
+    assert_eq!(client.pending_cancellations(), 0);
+    coord.shutdown();
+}

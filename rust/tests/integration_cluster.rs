@@ -30,7 +30,9 @@ use adip::analytical::gemm::MemoryPolicy;
 use adip::analytical::{estimate_cluster, estimate_gemm, GemmShape};
 use adip::arch::{ArchConfig, Architecture, Backend};
 use adip::cluster::{ClusterConfig, ClusterScheduler, PoolMode, ShardSplit};
-use adip::coordinator::{Coordinator, CoordinatorConfig, CoreScheduler, MatmulRequest};
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, CoreScheduler, MatmulRequest, SubmitOptions,
+};
 use adip::dataflow::Mat;
 use adip::quant::PrecisionMode;
 use adip::testutil::{check, Rng};
@@ -397,8 +399,9 @@ fn coordinator_with_pools_shuts_down_cleanly_after_load() {
         let a = Arc::new(Mat::random(&mut rng, 48, 48, 8));
         let b = Arc::new(Mat::random(&mut rng, 48, 48, 2));
         expected.push(a.matmul(&b));
-        let (_, rx) = coord
-            .try_submit(MatmulRequest {
+        let ticket = coord
+            .client()
+            .submit(SubmitOptions::new(MatmulRequest {
                 id: 0,
                 input_id: i,
                 a,
@@ -406,9 +409,9 @@ fn coordinator_with_pools_shuts_down_cleanly_after_load() {
                 weight_bits: 2,
                 act_act: false,
                 tag: String::new(),
-            })
+            }))
             .unwrap();
-        rxs.push(rx);
+        rxs.push(ticket.into_parts().1);
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         assert_eq!(rx.recv().unwrap().result.unwrap()[0], expected[i], "request {i}");
@@ -447,7 +450,8 @@ fn shared_cache_cross_worker_hits_with_identical_outputs() {
     let want = a.matmul(&b);
     let submit = |i: u64| {
         coord
-            .try_submit(MatmulRequest {
+            .client()
+            .submit(SubmitOptions::new(MatmulRequest {
                 id: 0,
                 input_id: 10_000 + i, // distinct ids: no fusion, identical operands
                 a: a.clone(),
@@ -455,8 +459,9 @@ fn shared_cache_cross_worker_hits_with_identical_outputs() {
                 weight_bits: 2,
                 act_act: false,
                 tag: String::new(),
-            })
+            }))
             .unwrap()
+            .into_parts()
             .1
     };
     // Phase 1: both workers see the request concurrently and populate the
@@ -535,8 +540,11 @@ fn weight_cache_hits_on_repeated_trace_with_identical_outputs() {
         });
         let mut outputs = Vec::new();
         let mut rxs = Vec::new();
+        let client = coord.client();
         for t in &trace {
-            rxs.push(coord.try_submit(t.request.clone()).unwrap().1);
+            rxs.push(
+                client.submit(SubmitOptions::new(t.request.clone())).unwrap().into_parts().1,
+            );
         }
         for rx in rxs {
             outputs.push(rx.recv().unwrap().result.unwrap());
@@ -613,8 +621,9 @@ fn coordinator_serves_correctly_with_sharding_enabled() {
         for _ in 0..3 {
             let b = Arc::new(Mat::random(&mut rng, 40, 40, bits));
             expected.push(a.matmul(&b));
-            let (_, rx) = coord
-                .try_submit(MatmulRequest {
+            let ticket = coord
+                .client()
+                .submit(SubmitOptions::new(MatmulRequest {
                     id: 0,
                     input_id: group,
                     a: a.clone(),
@@ -622,9 +631,9 @@ fn coordinator_serves_correctly_with_sharding_enabled() {
                     weight_bits: bits,
                     act_act: false,
                     tag: String::new(),
-                })
+                }))
                 .unwrap();
-            rxs.push(rx);
+            rxs.push(ticket.into_parts().1);
         }
     }
     // plus dynamic act-act requests (runtime interleave path, unique inputs)
@@ -632,8 +641,9 @@ fn coordinator_serves_correctly_with_sharding_enabled() {
         let a = Arc::new(Mat::random(&mut rng, 40, 40, 8));
         let b = Arc::new(Mat::random(&mut rng, 40, 40, 8));
         expected.push(a.matmul(&b));
-        let (_, rx) = coord
-            .try_submit(MatmulRequest {
+        let ticket = coord
+            .client()
+            .submit(SubmitOptions::new(MatmulRequest {
                 id: 0,
                 input_id: 1000 + i,
                 a,
@@ -641,9 +651,9 @@ fn coordinator_serves_correctly_with_sharding_enabled() {
                 weight_bits: 8,
                 act_act: true,
                 tag: String::new(),
-            })
+            }))
             .unwrap();
-        rxs.push(rx);
+        rxs.push(ticket.into_parts().1);
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let out = rx.recv().unwrap();

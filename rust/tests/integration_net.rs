@@ -1,0 +1,370 @@
+//! Integration: the TCP serving tier against the in-process client —
+//! the loopback differential gate.
+//!
+//! A deterministic request trace served over loopback TCP (with
+//! streamed chunk reassembly) must be **bit-identical** — outputs and
+//! simulated per-ticket accounting — to the same trace through
+//! `Client::submit`, on both execution backends. Determinism config:
+//! one worker, `batch_window = 1`, no coalescing — every request is its
+//! own batch in submission order, so `batch_seq` and all simulated
+//! counters are reproducible run to run.
+//!
+//! Also covered: remote cancellation of a disjoint subset (survivors
+//! bit-exact), graceful drain (nothing admitted is lost, mid-steal
+//! included), Pending polls, and protocol-level rejects.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adip::arch::{Architecture, Backend};
+use adip::balance::StealPolicy;
+use adip::coordinator::{
+    Coordinator, CoordinatorConfig, MatmulRequest, Priority, RequestError, SubmitOptions,
+};
+use adip::dataflow::Mat;
+use adip::net::{NetClient, NetServer, SubmitReply, WireAccounting};
+use adip::testutil::Rng;
+
+fn det_cfg(backend: Backend) -> CoordinatorConfig {
+    CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 1,
+        queue_capacity: 256,
+        batch_window: 1,
+        backend,
+        ..Default::default()
+    }
+}
+
+/// A mixed trace: varying precisions, a multi-weight-set request, an
+/// act-act request, and (functional only) an output tall enough to
+/// stream in more than one row-band chunk.
+fn trace(backend: Backend) -> Vec<MatmulRequest> {
+    let mut rng = Rng::seeded(81);
+    let dims: &[usize] = match backend {
+        Backend::Functional => &[48, 64, 96],
+        Backend::CycleAccurate => &[16, 24, 32],
+    };
+    let mut reqs = Vec::new();
+    for (i, &bits) in [2u32, 4, 8, 2, 8, 4].iter().enumerate() {
+        let d = dims[i % dims.len()];
+        reqs.push(MatmulRequest {
+            id: 0,
+            input_id: i as u64,
+            a: Arc::new(Mat::random(&mut rng, d, d, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, d, d, bits))],
+            weight_bits: bits,
+            act_act: false,
+            tag: format!("t{i}"),
+        });
+    }
+    // one shared-input pair (two weight sets in one request)
+    let d = dims[0];
+    reqs.push(MatmulRequest {
+        id: 0,
+        input_id: 100,
+        a: Arc::new(Mat::random(&mut rng, d, d, 8)),
+        bs: vec![
+            Arc::new(Mat::random(&mut rng, d, d, 2)),
+            Arc::new(Mat::random(&mut rng, d, d, 2)),
+        ],
+        weight_bits: 2,
+        act_act: false,
+        tag: "pair".into(),
+    });
+    // one act-act request (8b×8b pinned)
+    reqs.push(MatmulRequest {
+        id: 0,
+        input_id: 101,
+        a: Arc::new(Mat::random(&mut rng, d, d, 8)),
+        bs: vec![Arc::new(Mat::random(&mut rng, d, d, 8))],
+        weight_bits: 8,
+        act_act: true,
+        tag: "scores".into(),
+    });
+    if backend == Backend::Functional {
+        // 200×160 output: chunk_rows(160) = 102, so this streams in two
+        // row-band chunks — the reassembly path under test
+        reqs.push(MatmulRequest {
+            id: 0,
+            input_id: 102,
+            a: Arc::new(Mat::random(&mut rng, 200, 160, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, 160, 160, 4))],
+            weight_bits: 4,
+            act_act: false,
+            tag: "tall".into(),
+        });
+    }
+    reqs
+}
+
+/// Serve the trace through the in-process typed client, sequentially
+/// (submit → wait each), returning per-request outputs + accounting.
+fn run_in_process(backend: Backend, reqs: &[MatmulRequest]) -> Vec<(Vec<Mat>, WireAccounting)> {
+    let coord = Coordinator::start(det_cfg(backend));
+    let client = coord.client();
+    let outs = reqs
+        .iter()
+        .map(|r| {
+            let out = client.submit_wait(SubmitOptions::new(r.clone())).unwrap();
+            let acct = WireAccounting::from_metrics(&out.metrics);
+            (out.result.unwrap(), acct)
+        })
+        .collect();
+    coord.shutdown();
+    outs
+}
+
+#[test]
+fn loopback_differential_gate_matches_in_process_on_both_backends() {
+    for backend in Backend::ALL {
+        let reqs = trace(backend);
+        let reference = run_in_process(backend, &reqs);
+
+        let coord = Coordinator::start(det_cfg(backend));
+        let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics()).unwrap();
+        let mut net = NetClient::connect(server.local_addr()).unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            let wire_id = i as u64 + 1;
+            match net.submit(wire_id, r, Priority::Batch, None).unwrap() {
+                SubmitReply::Accepted { .. } => {}
+                other => panic!("{backend}: submit {i} refused: {other:?}"),
+            }
+            let out = net.wait(wire_id).unwrap();
+            let mats = out.result.unwrap();
+            let (want_mats, want_acct) = &reference[i];
+            assert_eq!(&mats, want_mats, "{backend}: request {i} outputs differ over loopback");
+            assert_eq!(
+                &out.accounting, want_acct,
+                "{backend}: request {i} per-ticket accounting differs over loopback"
+            );
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn loopback_cancellation_subset_leaves_survivors_bit_exact() {
+    for backend in Backend::ALL {
+        let reqs = trace(backend);
+        let reference = run_in_process(backend, &reqs);
+        let survivors = reqs.len() / 2; // cancel the back half
+
+        let coord = Coordinator::start(det_cfg(backend));
+        let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics()).unwrap();
+        let mut net = NetClient::connect(server.local_addr()).unwrap();
+        // submit everything up front so the back half is genuinely in
+        // flight (queued behind the single worker) when the cancels land
+        for (i, r) in reqs.iter().enumerate() {
+            match net.submit(i as u64 + 1, r, Priority::Batch, None).unwrap() {
+                SubmitReply::Accepted { .. } => {}
+                other => panic!("{backend}: submit {i} refused: {other:?}"),
+            }
+        }
+        for i in survivors..reqs.len() {
+            net.cancel(i as u64 + 1).unwrap();
+        }
+        for (i, _) in reqs.iter().enumerate() {
+            let out = net.wait(i as u64 + 1).unwrap();
+            let (want_mats, want_acct) = &reference[i];
+            if i < survivors {
+                // survivors were submitted (and batch-sequenced) ahead
+                // of every cancelled request, so their entire simulated
+                // accounting must match the cancel-free reference run
+                assert_eq!(
+                    &out.result.unwrap(),
+                    want_mats,
+                    "{backend}: survivor {i} not bit-exact"
+                );
+                assert_eq!(&out.accounting, want_acct, "{backend}: survivor {i} accounting");
+            } else {
+                match out.result {
+                    // the cancel may lose its race — then the result
+                    // must still be exact
+                    Ok(mats) => assert_eq!(&mats, want_mats, "{backend}: raced request {i}"),
+                    Err(RequestError::Cancelled) => {}
+                    Err(e) => panic!("{backend}: request {i}: unexpected error {e}"),
+                }
+            }
+        }
+        // the cancellation registry drained (no ticket leaks)
+        let client = coord.client();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while client.pending_cancellations() != 0 {
+            assert!(Instant::now() < deadline, "{backend}: cancellation registry leaked");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        server.shutdown();
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn poll_reports_pending_behind_a_busy_worker_then_streams() {
+    let coord = Coordinator::start(det_cfg(Backend::Functional));
+    let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics()).unwrap();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::seeded(83);
+    // the head request holds the single worker for tens of ms
+    let head = MatmulRequest {
+        id: 0,
+        input_id: 1,
+        a: Arc::new(Mat::random(&mut rng, 320, 320, 8)),
+        bs: vec![Arc::new(Mat::random(&mut rng, 320, 320, 8))],
+        weight_bits: 8,
+        act_act: false,
+        tag: "head".into(),
+    };
+    let target = MatmulRequest {
+        id: 0,
+        input_id: 2,
+        a: Arc::new(Mat::random(&mut rng, 16, 16, 8)),
+        bs: vec![Arc::new(Mat::random(&mut rng, 16, 16, 2))],
+        weight_bits: 2,
+        act_act: false,
+        tag: "target".into(),
+    };
+    let want = target.a.matmul(&target.bs[0]);
+    assert!(matches!(
+        net.submit(1, &head, Priority::Batch, None).unwrap(),
+        SubmitReply::Accepted { .. }
+    ));
+    assert!(matches!(
+        net.submit(2, &target, Priority::Batch, None).unwrap(),
+        SubmitReply::Accepted { .. }
+    ));
+    // the target is parked behind the head: the first poll is Pending
+    assert!(net.poll(2).unwrap().is_none(), "expected Pending behind the busy worker");
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let out = loop {
+        if let Some(out) = net.poll(2).unwrap() {
+            break out;
+        }
+        assert!(Instant::now() < deadline, "target never completed");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    assert_eq!(out.result.unwrap(), vec![want]);
+    assert!(net.wait(1).unwrap().result.is_ok());
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn protocol_rejects_are_typed_and_do_not_poison_the_session() {
+    let coord = Coordinator::start(det_cfg(Backend::Functional));
+    let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics()).unwrap();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::seeded(85);
+    let good = MatmulRequest {
+        id: 0,
+        input_id: 1,
+        a: Arc::new(Mat::random(&mut rng, 24, 24, 8)),
+        bs: vec![Arc::new(Mat::random(&mut rng, 24, 24, 2))],
+        weight_bits: 2,
+        act_act: false,
+        tag: String::new(),
+    };
+    // validation reject travels as a typed error
+    let mut bad = good.clone();
+    bad.bs.clear();
+    match net.submit(1, &bad, Priority::Batch, None).unwrap() {
+        SubmitReply::Rejected(RequestError::Validation(reason)) => {
+            assert!(reason.contains("no weight matrices"), "{reason}");
+        }
+        other => panic!("expected a typed validation reject, got {other:?}"),
+    }
+    // polling an unknown wire id is a typed reject, not a hang
+    match net.poll(42).unwrap() {
+        Some(out) => match out.result {
+            Err(RequestError::Validation(reason)) => {
+                assert!(reason.contains("unknown wire id"), "{reason}")
+            }
+            other => panic!("expected a typed unknown-id reject, got {other:?}"),
+        },
+        None => panic!("unknown wire id reported Pending"),
+    }
+    // cancelling an unknown wire id is an idempotent no-op
+    assert!(!net.cancel(42).unwrap());
+    // a duplicate wire id is refused while the first is in flight
+    assert!(matches!(
+        net.submit(7, &good, Priority::Batch, None).unwrap(),
+        SubmitReply::Accepted { .. }
+    ));
+    match net.submit(7, &good, Priority::Batch, None).unwrap() {
+        SubmitReply::Rejected(RequestError::Validation(reason)) => {
+            assert!(reason.contains("already in flight"), "{reason}");
+        }
+        other => panic!("expected a duplicate-id reject, got {other:?}"),
+    }
+    // ... and the session keeps serving: the original request resolves
+    let want = good.a.matmul(&good.bs[0]);
+    assert_eq!(net.wait(7).unwrap().result.unwrap(), vec![want]);
+    // the metrics path works on the same session
+    assert!(net.metrics().unwrap().contains("adip_requests_completed_total"));
+    server.shutdown();
+    coord.shutdown();
+}
+
+/// Graceful drain under aggressive stealing: once draining, new submits
+/// get a `Draining` frame while every already-admitted request — some
+/// re-homed mid-flight by steals — still completes bit-exactly. Nothing
+/// admitted is lost.
+#[test]
+fn drain_refuses_new_work_and_loses_no_in_flight_ticket() {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 4,
+        queue_capacity: 128,
+        batch_window: 1,
+        backend: Backend::Functional,
+        steal: StealPolicy::Aggressive,
+        ..Default::default()
+    });
+    let server = NetServer::bind("127.0.0.1:0", coord.client(), coord.metrics()).unwrap();
+    let mut net = NetClient::connect(server.local_addr()).unwrap();
+    let mut rng = Rng::seeded(87);
+    let total = 12usize;
+    let reqs: Vec<MatmulRequest> = (0..total as u64)
+        .map(|i| MatmulRequest {
+            id: 0,
+            input_id: i,
+            a: Arc::new(Mat::random(&mut rng, 96, 96, 8)),
+            bs: vec![Arc::new(Mat::random(&mut rng, 96, 96, 2))],
+            weight_bits: 2,
+            act_act: false,
+            tag: format!("inflight-{i}"),
+        })
+        .collect();
+    let want: Vec<Mat> = reqs.iter().map(|r| r.a.matmul(&r.bs[0])).collect();
+    for (i, r) in reqs.iter().enumerate() {
+        assert!(matches!(
+            net.submit(i as u64 + 1, r, Priority::Batch, None).unwrap(),
+            SubmitReply::Accepted { .. }
+        ));
+    }
+    // drain mid-flight: the 4 workers are still executing and stealing
+    server.drain();
+    assert!(server.is_draining());
+    assert!(matches!(
+        net.submit(1000, &reqs[0], Priority::Batch, None).unwrap(),
+        SubmitReply::Draining
+    ));
+    // non-submit frames stay serviceable while draining
+    assert!(net.metrics().unwrap().contains("adip_requests_accepted_total"));
+    assert!(!net.cancel(999).unwrap());
+    // every admitted ticket resolves bit-exactly — drain lost nothing,
+    // steals included
+    for i in 0..total {
+        let out = net.wait(i as u64 + 1).unwrap();
+        assert_eq!(
+            out.result.unwrap(),
+            vec![want[i].clone()],
+            "drained request {i} lost or corrupted"
+        );
+    }
+    server.shutdown();
+    coord.shutdown();
+}
