@@ -19,7 +19,10 @@ use adip::sim::MemorySystem;
 
 fn main() {
     println!("== ablation 1: multiplier count M (selected design point: 16) ==");
-    println!("{:<6} {:>14} {:>14} {:>14} {:>18}", "M", "lat 8b×8b", "lat 8b×4b", "lat 8b×2b", "thr/area proxy");
+    println!(
+        "{:<6} {:>14} {:>14} {:>14} {:>18}",
+        "M", "lat 8b×8b", "lat 8b×4b", "lat 8b×2b", "thr/area proxy"
+    );
     for m in [2u32, 4, 8, 16, 32] {
         let l8 = pe_latency(m, 2, 8, 8);
         let l4 = pe_latency(m, 2, 8, 4);

@@ -156,7 +156,9 @@ fn main() {
     const SKEW_REQS: usize = 48;
     const REPS: usize = 3;
 
-    println!("== balance fabric: skewed mixed-priority trace ({WORKERS} workers, heavy on worker 0) ==");
+    println!(
+        "== balance fabric: skewed mixed-priority trace ({WORKERS} workers, heavy on worker 0) =="
+    );
     let reqs = skewed_requests(SKEW_REQS);
     let run_reps = |steal: StealPolicy| -> (f64, u64, u64) {
         let _ = run_skewed(&reqs, steal); // warmup

@@ -57,7 +57,9 @@ fn main() {
     let acfg = ArchConfig::with_n(N);
     let single_est = estimate_gemm(Architecture::Adip, &acfg, shape, MODE, MemoryPolicy::default());
 
-    println!("== cluster scaling sweep (ADiP {N}x{N}, {M}x{K}x{NC} {MODE}, M-split, functional) ==");
+    println!(
+        "== cluster scaling sweep (ADiP {N}x{N}, {M}x{K}x{NC} {MODE}, M-split, functional) =="
+    );
     let mut cycles_at = std::collections::BTreeMap::new();
     let mut sweep_rows = Vec::new();
     for cores in [1usize, 2, 4, 8] {
@@ -65,8 +67,15 @@ fn main() {
         let mut mesh = ClusterScheduler::new(Architecture::Adip, N, Backend::Functional, cluster);
         let run = mesh.run_gemm(&a, &b, MODE, false).expect("cluster run");
         assert_eq!(run.result.outputs[0], want, "cores={cores}: outputs must stay bit-exact");
-        let est =
-            estimate_cluster(Architecture::Adip, &acfg, shape, 1, MODE, &cluster, MemoryPolicy::default());
+        let est = estimate_cluster(
+            Architecture::Adip,
+            &acfg,
+            shape,
+            1,
+            MODE,
+            &cluster,
+            MemoryPolicy::default(),
+        );
         assert_eq!(
             run.result.cycles, est.cycles,
             "cores={cores}: cluster cycles must equal the analytical estimate"
@@ -162,7 +171,8 @@ fn main() {
     // parity shifted every invocation — the coordinator's cross-worker
     // shape, so `shared_hits` in the JSON is a live metric, not a dead 0.
     let run_trace = |cache_entries: usize| {
-        let store = SharedWeightCache::new(CacheConfig { capacity: cache_entries, ..Default::default() });
+        let store =
+            SharedWeightCache::new(CacheConfig { capacity: cache_entries, ..Default::default() });
         let cluster = ClusterConfig::with_cores(2).with_cache(cache_entries);
         let mut workers: Vec<ClusterScheduler> = (0..2)
             .map(|_| {

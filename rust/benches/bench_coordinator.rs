@@ -210,7 +210,10 @@ fn main() {
     }
     let mi = m.mean_class_queue_seconds(Priority::Interactive).expect("interactive completed");
     let mb = m.mean_class_queue_seconds(Priority::Background).expect("background completed");
-    println!("  {total} requests | interactive/background mean wait ratio {:.3}", mi / mb.max(1e-12));
+    println!(
+        "  {total} requests | interactive/background mean wait ratio {:.3}",
+        mi / mb.max(1e-12)
+    );
     assert!(
         mi <= mb,
         "interactive mean queue wait {mi:.6}s must not exceed background {mb:.6}s under saturation"
@@ -218,7 +221,9 @@ fn main() {
     coord.shutdown();
 
     // -- pipelined vs inline prepare: the overlap gate --------------------
-    println!("\n== prepare pipeline: pipelined stage vs inline (decode-shaped stream, 1 worker) ==");
+    println!(
+        "\n== prepare pipeline: pipelined stage vs inline (decode-shaped stream, 1 worker) =="
+    );
     const PREP_REQS: usize = 160;
     // The gate uses the pure-serving duration `prepare_stream` returns
     // (submit -> last completion), NOT a wall-clock around the whole

@@ -112,13 +112,21 @@ fn main() {
     // summary counter, and the percentile readers stay available.
     for m in [Metrics::default(), Metrics::legacy()] {
         hammer(&m);
-        let completed: u64 =
-            Priority::ALL.iter().map(|c| m.class_completed[c.index()].load(Ordering::Relaxed)).sum();
-        assert_eq!(completed, (THREADS * PER_THREAD) as u64, "summary counters must not drop records");
+        let completed: u64 = Priority::ALL
+            .iter()
+            .map(|c| m.class_completed[c.index()].load(Ordering::Relaxed))
+            .sum();
+        assert_eq!(
+            completed,
+            (THREADS * PER_THREAD) as u64,
+            "summary counters must not drop records"
+        );
         assert!(m.queue_percentile(50.0).is_some(), "reservoir must have samples");
     }
 
-    println!("== metrics reservoir under max contention ({THREADS} writers x {PER_THREAD} records) ==");
+    println!(
+        "== metrics reservoir under max contention ({THREADS} writers x {PER_THREAD} records) =="
+    );
     let sharded = common::bench(5, || hammer(&Metrics::default()));
     common::report("sharded reservoir (default)", sharded, total, "rec");
     let legacy_metrics = Metrics::legacy();

@@ -15,7 +15,12 @@ use adip::testutil::Rng;
 fn main() {
     println!("== Fig. 2 (Eq. 1): PE latency in cycles ==");
     for row in fig2_series() {
-        println!("  M={:<3} {:<6} -> {} cycle(s)", row.multipliers, row.mode.to_string(), row.latency);
+        println!(
+            "  M={:<3} {:<6} -> {} cycle(s)",
+            row.multipliers,
+            row.mode.to_string(),
+            row.latency
+        );
     }
 
     println!("\n== bit-exact PE model throughput (host) ==");

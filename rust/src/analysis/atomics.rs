@@ -1,0 +1,237 @@
+//! `atomic-ordering-justified`: every `Ordering::Relaxed` in production
+//! code must carry a `relaxed-ok:` justification; `SeqCst` is banned.
+//!
+//! The repo's lock-free structures (obs span recorder, metrics
+//! reservoir shards, balance-fabric gauges, weight-cache counters) are
+//! correct *because* each Relaxed site is individually harmless — a
+//! monotonic stat counter, a gauge, or a payload word ordered by a
+//! Release/Acquire header elsewhere. That argument lives in a comment
+//! at the site:
+//!
+//! ```text
+//! counter.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+//! ```
+//!
+//! or, for a contiguous run of Relaxed lines (e.g. a metrics render
+//! table), one comment directly above the run:
+//!
+//! ```text
+//! // relaxed-ok: independent stat counters, no cross-field ordering
+//! a.fetch_add(1, Ordering::Relaxed);
+//! b.fetch_add(n, Ordering::Relaxed);
+//! ```
+//!
+//! `SeqCst` is rejected with no annotation escape hatch short of a
+//! `lint: allow` suppression: every ordering in this codebase is either
+//! genuinely relaxed or a deliberate Release/Acquire pair, and `SeqCst`
+//! almost always papers over an unstated protocol. Test code (tests/,
+//! benches/, in-file `#[cfg(test)]` modules) is exempt.
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+const MARKER: &str = "relaxed-ok";
+
+/// The justification text after `relaxed-ok:`, if present and non-empty.
+/// Doc comments are inert — they describe the convention (as the docs
+/// above do), they never annotate a site.
+fn reason(comment: &str) -> Option<&str> {
+    if super::lexer::is_doc(comment) {
+        return None;
+    }
+    let at = comment.find(MARKER)?;
+    let rest = comment[at + MARKER.len()..].trim_start();
+    let rest = rest.strip_prefix(':')?.trim();
+    (!rest.is_empty()).then_some(rest)
+}
+
+/// Run the rule over one file, appending errors to `out` and
+/// non-blocking findings (unused annotations) to `warn`.
+pub fn check(file: &SourceFile, out: &mut Vec<Violation>, warn: &mut Vec<Violation>) {
+    let n = file.lines.len();
+    let mut annotation_used = vec![false; n + 1];
+
+    for i in 1..=n {
+        if !file.is_test_line(i) && file.code(i).contains("SeqCst") {
+            out.push(Violation {
+                rule: RuleId::AtomicOrderingJustified,
+                file: file.rel_path.clone(),
+                line: i,
+                message: "Ordering::SeqCst is banned: name the actual protocol \
+                          (Relaxed with a relaxed-ok justification, or a \
+                          Release/Acquire pair)"
+                    .into(),
+            });
+        }
+    }
+
+    let relaxed = |i: usize| {
+        i >= 1 && i <= n && !file.is_test_line(i) && file.code(i).contains("Ordering::Relaxed")
+    };
+
+    let mut i = 1usize;
+    while i <= n {
+        if !relaxed(i) {
+            i += 1;
+            continue;
+        }
+        // Maximal run of consecutive Relaxed lines: one comment directly
+        // above the run justifies every line in it.
+        let start = i;
+        let mut end = i;
+        while relaxed(end + 1) {
+            end += 1;
+        }
+        let mut head_ok = false;
+        let mut j = start;
+        while j > 1 {
+            j -= 1;
+            let comment_only =
+                file.code(j).trim().is_empty() && !file.comment(j).trim().is_empty();
+            if !comment_only {
+                break;
+            }
+            if reason(file.comment(j)).is_some() {
+                head_ok = true;
+                annotation_used[j] = true;
+            }
+        }
+        for k in start..=end {
+            let own = reason(file.comment(k)).is_some();
+            if own {
+                annotation_used[k] = true;
+            }
+            if !own && !head_ok {
+                out.push(Violation {
+                    rule: RuleId::AtomicOrderingJustified,
+                    file: file.rel_path.clone(),
+                    line: k,
+                    message: "Ordering::Relaxed without a `relaxed-ok: <why>` \
+                              justification (same line, or a comment directly \
+                              above the run)"
+                        .into(),
+                });
+            }
+        }
+        i = end + 1;
+    }
+
+    // Annotation hygiene: a reason-less marker is an error; a marker that
+    // justified nothing is a warning (stale annotations must not rot).
+    for i in 1..=n {
+        if file.is_test_line(i)
+            || super::lexer::is_doc(file.comment(i))
+            || !file.comment(i).contains(MARKER)
+        {
+            continue;
+        }
+        if reason(file.comment(i)).is_none() {
+            out.push(Violation {
+                rule: RuleId::LintAnnotation,
+                file: file.rel_path.clone(),
+                line: i,
+                message: "relaxed-ok justification has no reason — say why the \
+                          relaxed ordering is sufficient"
+                    .into(),
+            });
+        } else if !annotation_used[i] {
+            warn.push(Violation {
+                rule: RuleId::LintAnnotation,
+                file: file.rel_path.clone(),
+                line: i,
+                message: "relaxed-ok annotation does not cover any \
+                          Ordering::Relaxed line"
+                    .into(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> (Vec<Violation>, Vec<Violation>) {
+        let f = SourceFile::new("src/x.rs".into(), src);
+        let (mut out, mut warn) = (Vec::new(), Vec::new());
+        check(&f, &mut out, &mut warn);
+        (out, warn)
+    }
+
+    #[test]
+    fn unjustified_relaxed_is_flagged_with_line() {
+        let (out, _) = run("fn f() {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2);
+        assert_eq!(out[0].rule, RuleId::AtomicOrderingJustified);
+    }
+
+    #[test]
+    fn same_line_justification_passes() {
+        let (out, warn) =
+            run("c.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter\n");
+        assert!(out.is_empty(), "{out:?}");
+        assert!(warn.is_empty());
+    }
+
+    #[test]
+    fn comment_above_covers_a_contiguous_run() {
+        let src = "\
+// relaxed-ok: independent stat counters
+a.fetch_add(1, Ordering::Relaxed);
+b.fetch_add(2, Ordering::Relaxed);
+other();
+c.fetch_add(3, Ordering::Relaxed);
+";
+        let (out, _) = run(src);
+        assert_eq!(out.len(), 1, "the run break at `other()` ends coverage");
+        assert_eq!(out[0].line, 5);
+    }
+
+    #[test]
+    fn seqcst_is_always_flagged() {
+        let (out, _) = run("x.store(1, Ordering::SeqCst);\n");
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("banned"));
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() \
+                   { c.load(Ordering::Relaxed); s.load(Ordering::SeqCst); }\n}\n";
+        let (out, warn) = run(src);
+        assert!(out.is_empty(), "{out:?}");
+        assert!(warn.is_empty());
+    }
+
+    #[test]
+    fn relaxed_inside_string_is_inert() {
+        let (out, _) = run("let s = \"Ordering::Relaxed\";\n");
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn empty_reason_is_an_error() {
+        let (out, _) = run("c.fetch_add(1, Ordering::Relaxed); // relaxed-ok:\n");
+        assert_eq!(out.len(), 2, "unjustified relaxed + reason-less marker: {out:?}");
+        assert!(out.iter().any(|v| v.rule == RuleId::LintAnnotation));
+    }
+
+    #[test]
+    fn marker_mentions_in_doc_comments_are_inert() {
+        let src = "\
+//! every Relaxed carries a relaxed-ok: justification\n\
+/// mentions relaxed-ok without a colon\n\
+c.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter\n";
+        let (out, warn) = run(src);
+        assert!(out.is_empty(), "{out:?}");
+        assert!(warn.is_empty(), "{warn:?}");
+    }
+
+    #[test]
+    fn stale_annotation_is_a_warning() {
+        let (out, warn) = run("// relaxed-ok: nothing below\nplain();\n");
+        assert!(out.is_empty());
+        assert_eq!(warn.len(), 1);
+        assert_eq!(warn[0].rule, RuleId::LintAnnotation);
+    }
+}

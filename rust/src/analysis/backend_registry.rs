@@ -1,0 +1,164 @@
+//! `backend-differential-registry`: every module that dispatches on
+//! `Backend` must appear in the registry below, mapped to the
+//! differential test suite that exercises it across backends.
+//!
+//! The repo's correctness story is differential: the functional
+//! reference model is the oracle, and every accelerator backend
+//! (`adip`, `dip`, `ws`, blocked array) is held bit-identical to it by
+//! suite-level comparison. That only works if each *new* point of
+//! backend dispatch is actually covered by a differential suite — a
+//! fresh `match backend { ... }` in a scheduler that no suite sweeps is
+//! silent coverage loss. The registry makes the coverage claim explicit
+//! and machine-checked:
+//!
+//! * any `src/**` file whose production code references `Backend::`
+//!   must have a registry entry;
+//! * every registry entry must point at files that still exist (no
+//!   stale paths after refactors), checked only on full-tree runs so
+//!   fixture-corpus scans do not false-positive.
+//!
+//! Adding a backend dispatch site therefore forces a conscious choice
+//! of which differential suite covers it — and the reviewer sees the
+//! registry diff.
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+/// source file → differential suites that sweep its backend dispatch.
+pub const BACKEND_REGISTRY: &[(&str, &[&str])] = &[
+    ("src/arch/mod.rs", &["tests/integration_backends.rs"]),
+    ("src/arch/array.rs", &["tests/integration_backends.rs"]),
+    ("src/arch/functional.rs", &["tests/integration_backends.rs"]),
+    ("src/arch/adip.rs", &["tests/integration_backends.rs"]),
+    ("src/arch/dip.rs", &["tests/integration_backends.rs"]),
+    ("src/arch/ws.rs", &["tests/integration_backends.rs"]),
+    (
+        "src/coordinator/scheduler.rs",
+        &["tests/integration_backends.rs", "tests/integration_pipeline.rs"],
+    ),
+    (
+        "src/coordinator/server.rs",
+        &["tests/integration_pipeline.rs", "tests/integration_balance.rs"],
+    ),
+    ("src/cluster/scheduler.rs", &["tests/integration_cluster.rs"]),
+    ("src/main.rs", &["tests/integration_backends.rs"]),
+];
+
+/// Run the rule over the whole scanned file set.
+pub fn check(files: &[SourceFile], out: &mut Vec<Violation>) {
+    // A scan containing the crate root is a real-tree run; registry
+    // staleness checks only make sense there.
+    let full_tree = files.iter().any(|f| f.rel_path == "src/lib.rs");
+
+    for f in files {
+        if !f.rel_path.starts_with("src/") {
+            continue;
+        }
+        let first_use = (1..=f.lines.len())
+            .find(|&i| !f.is_test_line(i) && f.code(i).contains("Backend::"));
+        let Some(line) = first_use else { continue };
+        if !BACKEND_REGISTRY.iter().any(|(p, _)| *p == f.rel_path) {
+            out.push(Violation {
+                rule: RuleId::BackendDifferentialRegistry,
+                file: f.rel_path.clone(),
+                line,
+                message: "module dispatches on Backend but has no entry in \
+                          BACKEND_REGISTRY (src/analysis/backend_registry.rs): \
+                          name the differential suite that covers it"
+                    .into(),
+            });
+        }
+    }
+
+    if full_tree {
+        let exists = |p: &str| files.iter().any(|f| f.rel_path == p);
+        for (src, suites) in BACKEND_REGISTRY {
+            if !exists(src) {
+                out.push(Violation {
+                    rule: RuleId::BackendDifferentialRegistry,
+                    file: "src/analysis/backend_registry.rs".into(),
+                    line: 1,
+                    message: format!("registry entry {src:?} points at a missing file"),
+                });
+            }
+            for suite in *suites {
+                if !exists(suite) {
+                    out.push(Violation {
+                        rule: RuleId::BackendDifferentialRegistry,
+                        file: "src/analysis/backend_registry.rs".into(),
+                        line: 1,
+                        message: format!(
+                            "registry entry {src:?} names missing differential suite {suite:?}"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        SourceFile::new(path.into(), src)
+    }
+
+    #[test]
+    fn unregistered_backend_dispatch_is_flagged() {
+        let files = vec![file("src/net/server.rs", "match b {\n    Backend::Adip => x(),\n}\n")];
+        let mut out = Vec::new();
+        check(&files, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RuleId::BackendDifferentialRegistry);
+        assert_eq!(out[0].line, 2);
+    }
+
+    #[test]
+    fn registered_file_passes() {
+        let files = vec![file("src/arch/adip.rs", "let b = Backend::Adip;\n")];
+        let mut out = Vec::new();
+        check(&files, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn test_only_dispatch_is_exempt() {
+        let src =
+            "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { let b = Backend::Adip; }\n}\n";
+        let files = vec![file("src/net/server.rs", src)];
+        let mut out = Vec::new();
+        check(&files, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn staleness_checked_only_on_full_tree() {
+        // Partial scan (no src/lib.rs): a registry pointing at files
+        // outside the scan set is fine.
+        let files = vec![file("src/arch/adip.rs", "let b = Backend::Adip;\n")];
+        let mut out = Vec::new();
+        check(&files, &mut out);
+        assert!(out.is_empty());
+
+        // Full-tree scan missing the suites: every entry is stale.
+        let files = vec![file("src/lib.rs", "pub mod arch;\n")];
+        let mut out = Vec::new();
+        check(&files, &mut out);
+        assert!(
+            out.iter().any(|v| v.message.contains("missing file")),
+            "{out:?}"
+        );
+        assert!(out.iter().any(|v| v.message.contains("missing differential suite")));
+    }
+
+    #[test]
+    fn registry_covers_the_known_dispatch_points() {
+        for path in ["src/arch/mod.rs", "src/coordinator/scheduler.rs", "src/main.rs"] {
+            assert!(
+                BACKEND_REGISTRY.iter().any(|(p, _)| *p == path),
+                "{path} must stay registered"
+            );
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! `no-deprecated-internal`: the `#[deprecated]` legacy submission shims
+//! (`Coordinator::try_submit` / `Coordinator::submit_wait`) must not
+//! grow internal callers.
+//!
+//! The shims exist solely for external compatibility until removal;
+//! `rust/tests/integration_pipeline.rs` pins them behavior-identical to
+//! the typed `Client::submit` path. Every *other* internal caller is
+//! drift: it bypasses `SubmitOptions` (priority class, deadline, group
+//! tag) and cancellation, and it delays the shims' removal.
+//!
+//! Any internal use of a deprecated item requires `#[allow(deprecated)]`
+//! to build under the CI `-D warnings` wall, so the attribute is the
+//! reliable marker: the rule flags `#[allow(deprecated)]` anywhere
+//! outside the defining file and the pinning test, plus direct
+//! `.try_submit(` / `::try_submit(` calls (`submit_wait` cannot be
+//! matched textually — `Client::submit_wait` is the *blessed* path — but
+//! calling the deprecated variant still trips the attribute check).
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+/// Files allowed to reference the shims: where they are defined, and the
+/// pinning test that holds them behavior-identical until removal.
+const ALLOWED: [&str; 2] = ["src/coordinator/server.rs", "tests/integration_pipeline.rs"];
+
+/// Run the rule over one file (test files included — only the pinning
+/// test is exempt).
+pub fn check(file: &SourceFile, out: &mut Vec<Violation>) {
+    if ALLOWED.iter().any(|a| file.rel_path == *a || file.rel_path.ends_with(a)) {
+        return;
+    }
+    for (idx, l) in file.lines.iter().enumerate() {
+        let line = idx + 1;
+        if l.code.contains(".try_submit(") || l.code.contains("::try_submit(") {
+            out.push(Violation {
+                rule: RuleId::NoDeprecatedInternal,
+                file: file.rel_path.clone(),
+                line,
+                message: "internal caller of the deprecated try_submit shim: \
+                          use Coordinator::client() + Client::submit(SubmitOptions::new(req))"
+                    .into(),
+            });
+        }
+        if l.code.contains("#[allow(deprecated)]") {
+            out.push(Violation {
+                rule: RuleId::NoDeprecatedInternal,
+                file: file.rel_path.clone(),
+                line,
+                message: "allow(deprecated) outside the shim definitions and their \
+                          pinning test: migrate to the typed Client API instead"
+                    .into(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Violation> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn internal_try_submit_caller_flagged() {
+        let out = run("src/net/server.rs", "let (id, rx) = coord.try_submit(req)?;\n");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].rule, RuleId::NoDeprecatedInternal);
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn allow_deprecated_attribute_flagged_even_in_tests() {
+        let out = run(
+            "tests/integration_net.rs",
+            "#[allow(deprecated)]\nlet o = coord.submit_wait(req).unwrap();\n",
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn shim_definition_and_pinning_test_are_exempt() {
+        let src = "#[allow(deprecated)]\nself.try_submit(req)\n";
+        assert!(run("src/coordinator/server.rs", src).is_empty());
+        assert!(run("tests/integration_pipeline.rs", src).is_empty());
+    }
+
+    #[test]
+    fn typed_client_submit_wait_passes() {
+        let out = run("src/main.rs", "let o = client.submit_wait(SubmitOptions::new(r))?;\n");
+        assert!(out.is_empty(), "Client::submit_wait is the blessed path");
+    }
+
+    #[test]
+    fn mention_in_comment_or_string_is_inert() {
+        let out = run(
+            "src/coordinator/mod.rs",
+            "//! the `try_submit(...)` shim is deprecated\nlet s = \".try_submit(\";\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

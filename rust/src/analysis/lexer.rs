@@ -1,0 +1,364 @@
+//! Comment/string-aware line scanner for the lint pass.
+//!
+//! `adip lint` must never mistake `"Ordering::Relaxed"` inside a string
+//! for an atomic ordering, nor a `// lint: allow(...)` inside a raw
+//! string for a real suppression. This module splits a Rust source file
+//! into per-line (code, comment) pairs:
+//!
+//! * **code** — the line with every comment removed and the *contents*
+//!   of string / raw-string / byte-string / char literals blanked to
+//!   spaces (the delimiting quotes are kept, so the code text stays
+//!   structurally aligned with the original columns).
+//! * **comment** — the concatenated text of every comment on the line
+//!   (line comments, and each line's share of a block comment).
+//!
+//! The scanner handles the full set of lexical shapes the rules need to
+//! survive: nested block comments (`/* /* */ */`), raw strings with any
+//! number of `#`s (`r##"…"##`), byte and raw-byte strings, char
+//! literals vs. lifetimes (`'a'` vs `&'a str`), and string escapes
+//! (`"\""`). It is a *line* scanner, not a full lexer: that is exactly
+//! enough for line-anchored textual rules, and keeps it auditable.
+
+/// One source line, split into sanitized code and comment text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SourceLine {
+    /// The line with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text appearing on this line (no `//`/`/*`
+    /// markers; block comments contribute their per-line share).
+    pub comment: String,
+}
+
+/// True when captured comment text came from a *doc* comment (`///`,
+/// `//!`, `/** … */`, `/*! … */`). The scanner strips the two-character
+/// opener, so doc comments are recognizable by the residual third
+/// marker character leading the text. Doc comments *document* the
+/// annotation conventions — they never carry live annotations or
+/// suppressions, so the rules treat them as inert.
+pub fn is_doc(comment: &str) -> bool {
+    matches!(comment.chars().next(), Some('/' | '!' | '*'))
+}
+
+/// Scanner state that can persist across line boundaries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    /// Inside a block comment, with nesting depth (`/*` inside `/*`).
+    Block(u32),
+    /// Inside a `"…"` (or `b"…"`) string.
+    Str,
+    /// Inside a raw string `r#…#"…"#…#` with this many `#`s.
+    RawStr(u32),
+}
+
+/// Split `src` into per-line sanitized (code, comment) pairs.
+///
+/// The output always has exactly as many entries as `src` has lines
+/// (`lines()` semantics: a trailing newline does not add an empty line).
+pub fn strip_source(src: &str) -> Vec<SourceLine> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+
+    // True when `chars[i]` could begin a raw/byte-string prefix, i.e. the
+    // previous character is not part of the same identifier (`number"` must
+    // not read its trailing `r` as a raw-string opener).
+    let prev_is_ident = |i: usize| {
+        i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+    };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // A newline ends the line in every state; multi-line
+            // constructs (strings, block comments) carry their state over.
+            out.push(SourceLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+                    // Line comment: the rest of the line is comment text.
+                    let mut j = i + 2;
+                    while j < n && chars[j] != '\n' {
+                        comment.push(chars[j]);
+                        j += 1;
+                    }
+                    i = j;
+                } else if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if c == 'b' && !prev_is_ident(i) && i + 1 < n && chars[i + 1] == '"' {
+                    code.push_str("b\"");
+                    state = State::Str;
+                    i += 2;
+                } else if c == 'b' && !prev_is_ident(i) && i + 1 < n && chars[i + 1] == '\'' {
+                    // Byte char literal b'x' — consume inline (cannot span lines).
+                    code.push_str("b'");
+                    i += 2;
+                    i = consume_char_literal(&chars, i, &mut code);
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(i) {
+                    // Possible raw (byte) string: r"…", r#"…"#, br"…", br##"…"##.
+                    let mut j = i + 1;
+                    if c == 'b' && j < n && chars[j] == 'r' {
+                        j += 1;
+                    } else if c == 'b' {
+                        code.push(c);
+                        i += 1;
+                        continue;
+                    }
+                    let mut hashes = 0u32;
+                    while j < n && chars[j] == '#' {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    if j < n && chars[j] == '"' {
+                        for k in i..=j {
+                            code.push(chars[k]);
+                        }
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Char literal or lifetime. `'\…'` and `'x'` are
+                    // literals; `'ident` (no closing quote right after one
+                    // char) is a lifetime/label and stays plain code.
+                    let is_literal = i + 1 < n
+                        && (chars[i + 1] == '\\'
+                            || (i + 2 < n && chars[i + 2] == '\'' && chars[i + 1] != '\''));
+                    code.push('\'');
+                    i += 1;
+                    if is_literal {
+                        i = consume_char_literal(&chars, i, &mut code);
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    state = State::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    state = if depth > 1 {
+                        comment.push_str("*/");
+                        State::Block(depth - 1)
+                    } else {
+                        State::Code
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' && i + 1 < n {
+                    // Escape: blank both characters (keeps `\"` inert).
+                    code.push(' ');
+                    if chars[i + 1] != '\n' {
+                        code.push(' ');
+                        i += 2;
+                    } else {
+                        i += 1; // line-continuation escape: newline handled above
+                    }
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                // Close only on `"` followed by exactly `hashes` `#`s.
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut seen = 0u32;
+                    while j < n && seen < hashes && chars[j] == '#' {
+                        seen += 1;
+                        j += 1;
+                    }
+                    if seen == hashes {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            code.push('#');
+                        }
+                        state = State::Code;
+                        i = j;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        out.push(SourceLine { code, comment });
+    }
+    out
+}
+
+/// Consume the body + closing quote of a char literal whose opening `'`
+/// (and any `b` prefix) is already emitted; blanks the contents.
+fn consume_char_literal(chars: &[char], mut i: usize, code: &mut String) -> usize {
+    let n = chars.len();
+    if i < n && chars[i] == '\\' {
+        code.push(' ');
+        i += 1;
+        if i < n {
+            code.push(' ');
+            i += 1;
+        }
+        // multi-char escapes (\x7f, \u{…}) run to the closing quote below
+    } else if i < n && chars[i] != '\'' {
+        code.push(' ');
+        i += 1;
+    }
+    while i < n && chars[i] != '\'' && chars[i] != '\n' {
+        code.push(' ');
+        i += 1;
+    }
+    if i < n && chars[i] == '\'' {
+        code.push('\'');
+        i += 1;
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(src: &str) -> Vec<String> {
+        strip_source(src).into_iter().map(|l| l.code).collect()
+    }
+
+    fn comments(src: &str) -> Vec<String> {
+        strip_source(src).into_iter().map(|l| l.comment).collect()
+    }
+
+    #[test]
+    fn line_comments_split_from_code() {
+        let lines = strip_source("let x = 1; // trailing note\n// full-line note\n");
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert_eq!(lines[0].comment, " trailing note");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[1].comment, " full-line note");
+    }
+
+    #[test]
+    fn nested_block_comments_stay_comment_until_balanced() {
+        let src = "a /* outer /* inner */ still comment */ b\nc /* open\nmid\nclose */ d\n";
+        let got = codes(src);
+        assert_eq!(got[0], "a  b");
+        assert_eq!(got[1], "c ");
+        assert_eq!(got[2], "");
+        assert_eq!(got[3], " d");
+        let cm = comments(src);
+        assert!(cm[0].contains("outer"));
+        assert!(cm[0].contains("inner"));
+        assert_eq!(cm[2], "mid");
+    }
+
+    #[test]
+    fn string_contents_blanked_including_fake_comments() {
+        let got = codes("let s = \"// not a comment /* nor this */\"; // real\n");
+        assert!(got[0].contains("let s = \""));
+        assert!(!got[0].contains("not a comment"));
+        assert!(!got[0].contains("/*"));
+        let cm = comments("let s = \"// not a comment\"; // real\n");
+        assert_eq!(cm[0], " real");
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_terminate_strings() {
+        let got = codes("let s = \"a\\\"b\"; let t = 2;\n");
+        assert!(got[0].ends_with("let t = 2;"));
+        assert!(!got[0].contains('a'));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes_span_lines_and_hide_quotes() {
+        let src = "let s = r#\"line \"quoted\" one\nOrdering::SeqCst\n\"# ; done\n";
+        let got = codes(src);
+        assert!(!got[0].contains("quoted"));
+        assert_eq!(got[1].trim(), "", "raw string interior must be blanked");
+        assert!(got[2].contains("; done"));
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings_are_literals() {
+        let got = codes("let a = b\"// x\"; let b2 = br#\"/* y */\"#; z\n");
+        assert!(!got[0].contains("// x"));
+        assert!(!got[0].contains("/* y */"));
+        assert!(got[0].ends_with("; z"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        // '"' as a char literal must not open a string.
+        let got = codes("let q = '\"'; let c = 'a'; let e = '\\n'; x\n");
+        assert!(got[0].ends_with("; x"));
+        // Lifetimes survive as code (no literal consumption).
+        let got = codes("fn f<'a>(x: &'a str) -> &'a str { x } // c\n");
+        assert!(got[0].contains("<'a>"));
+        assert!(got[0].contains("&'a str"));
+        // A labeled loop is not a char literal either.
+        let got = codes("'outer: loop { break 'outer; } // c\n");
+        assert!(got[0].contains("'outer: loop"));
+    }
+
+    #[test]
+    fn identifier_trailing_r_is_not_a_raw_string() {
+        let got = codes("let number = var + 1; let s = \"t\";\n");
+        assert!(got[0].contains("let number = var + 1;"));
+    }
+
+    #[test]
+    fn multiline_string_state_carries_over() {
+        let src = "let s = \"first\nsecond // fake\nend\"; real();\n";
+        let got = codes(src);
+        assert!(got[1].trim().is_empty());
+        assert!(got[2].ends_with("\"; real();"));
+        assert_eq!(comments(src)[1], "");
+    }
+
+    #[test]
+    fn doc_comments_are_distinguishable_from_plain_comments() {
+        let lines = strip_source("/// outer doc\n//! inner doc\n// plain note\n/** block doc */\n");
+        assert!(is_doc(&lines[0].comment), "{:?}", lines[0].comment);
+        assert!(is_doc(&lines[1].comment), "{:?}", lines[1].comment);
+        assert!(!is_doc(&lines[2].comment), "{:?}", lines[2].comment);
+        assert!(is_doc(&lines[3].comment), "{:?}", lines[3].comment);
+    }
+
+    #[test]
+    fn line_count_matches_lines() {
+        let src = "a\nb\n\nc";
+        assert_eq!(strip_source(src).len(), src.lines().count());
+    }
+}

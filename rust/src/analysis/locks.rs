@@ -1,0 +1,127 @@
+//! `lock-poison-policy`: no bare `.unwrap()` / `.expect()` on
+//! `Mutex`/`RwLock` guards outside test code.
+//!
+//! The worker-panic recovery design (cluster pool workers rebuild their
+//! core after a caught panic; the coordinator keeps serving) depends on
+//! every lock acquisition using the documented poison idiom:
+//!
+//! ```text
+//! self.state.lock().unwrap_or_else(PoisonError::into_inner)
+//! ```
+//!
+//! A bare `.unwrap()` turns one panicking thread into a cascade: every
+//! later acquirer of the poisoned lock panics too, wedging threads that
+//! were designed to survive. The rule flags `.lock()` / `.read()` /
+//! `.write()` (empty-argument forms — `Read::read(&mut buf)` and friends
+//! take arguments and do not match) immediately followed by `.unwrap()`
+//! or `.expect(`, on the same line or split across a method-chain line
+//! break. Genuinely-fine sites (e.g. a guard that provably cannot
+//! poison) use `// lint: allow(lock-poison-policy) <reason>`.
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+const ACQUIRERS: [&str; 3] = [".lock()", ".read()", ".write()"];
+
+/// Does `tail` (code following an acquirer) begin a bare guard unwrap?
+fn bare_unwrap(tail: &str) -> bool {
+    let t = tail.trim_start();
+    t.starts_with(".unwrap()") || t.starts_with(".expect(")
+}
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile, out: &mut Vec<Violation>) {
+    let n = file.lines.len();
+    for i in 1..=n {
+        if file.is_test_line(i) {
+            continue;
+        }
+        let code = file.code(i);
+        let mut hit = false;
+        for acq in ACQUIRERS {
+            let mut from = 0usize;
+            while let Some(at) = code[from..].find(acq) {
+                let end = from + at + acq.len();
+                if bare_unwrap(&code[end..]) {
+                    hit = true;
+                }
+                // Chain split across lines: `.lock()` at end of line,
+                // `.unwrap()` leading the next code line.
+                if code[end..].trim().is_empty() && bare_unwrap(file.code(i + 1)) {
+                    hit = true;
+                }
+                from = end;
+            }
+        }
+        if hit {
+            out.push(Violation {
+                rule: RuleId::LockPoisonPolicy,
+                file: file.rel_path.clone(),
+                line: i,
+                message: "bare unwrap/expect on a lock guard: use \
+                          `.unwrap_or_else(PoisonError::into_inner)` (poison \
+                          recovery is load-bearing for worker-panic survival)"
+                    .into(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Violation> {
+        let f = SourceFile::new("src/x.rs".into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn bare_lock_unwrap_and_expect_flagged() {
+        let out = run("let g = m.lock().unwrap();\nlet h = m.lock().expect(\"msg\");\n");
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].rule, RuleId::LockPoisonPolicy);
+        assert_eq!((out[0].line, out[1].line), (1, 2));
+    }
+
+    #[test]
+    fn rwlock_read_write_guards_flagged() {
+        let out = run("let r = l.read().unwrap();\nlet w = l.write().expect(\"x\");\n");
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn poison_idiom_passes() {
+        let out = run(
+            "let g = m.lock().unwrap_or_else(PoisonError::into_inner);\n\
+             let h = m.lock().unwrap_or_else(|e| e.into_inner());\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn io_read_with_arguments_is_not_a_guard() {
+        let out = run("let n = sock.read(&mut buf).unwrap();\n");
+        assert!(out.is_empty(), "Read::read takes args; not a lock");
+    }
+
+    #[test]
+    fn split_chain_is_still_caught() {
+        let out = run("let g = m\n    .lock()\n    .unwrap();\n");
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 2, "anchored at the acquirer line");
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "fn f() {}\n#[cfg(test)]\nmod tests {\n    fn t() { m.lock().unwrap(); }\n}\n";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn result_unwrap_on_non_guard_passes() {
+        let out = run("let v = compute().unwrap();\nlet w = parse().expect(\"p\");\n");
+        assert!(out.is_empty());
+    }
+}

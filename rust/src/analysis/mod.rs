@@ -1,0 +1,264 @@
+//! `adip lint` — repo-invariant static analysis over `rust/src/**`.
+//!
+//! # Why a hand-rolled linter
+//!
+//! The invariants this pass enforces are *this repo's* invariants, not
+//! general Rust style — clippy cannot know that poison recovery is
+//! load-bearing, that the wire codec has four places to keep in sync,
+//! or which differential suite covers a backend dispatch site. The
+//! linter is std-only (the repo has no proc-macro or syn dependency and
+//! gains none here): a comment/string/raw-string-aware line scanner
+//! ([`lexer`]) feeds a small rule framework ([`rules`]) so rules match
+//! against *code* text with literals blanked and comments separated —
+//! no false positives from `"Ordering::Relaxed"` inside a string or a
+//! doc comment.
+//!
+//! # Rules
+//!
+//! | rule id | invariant |
+//! |---|---|
+//! | `atomic-ordering-justified` | every `Ordering::Relaxed` carries a `relaxed-ok: <why>`; `SeqCst` is banned ([`atomics`]) |
+//! | `lock-poison-policy` | no bare `.unwrap()`/`.expect()` on lock guards outside tests ([`locks`]) |
+//! | `no-deprecated-internal` | no internal callers of the deprecated submission shims ([`deprecated`]) |
+//! | `wire-opcode-sync` | `Frame` variants ⇔ opcode table ⇔ encode/decode arms ([`wire_sync`]) |
+//! | `backend-differential-registry` | every `Backend` dispatch site is mapped to a differential suite ([`backend_registry`]) |
+//! | `lint-annotation` | meta-rule: malformed/stale annotations and suppressions |
+//!
+//! # The memory-ordering audit (why `relaxed-ok` + a SeqCst ban)
+//!
+//! Every atomic in this codebase falls into one of three shapes, and
+//! the annotation names which:
+//!
+//! 1. **Monotonic stat counters and gauges** (shed/failed/batch
+//!    counters, queue-depth gauges, steal counters, cache hit/miss):
+//!    values are reported, never used to synchronize. `Relaxed` is
+//!    sufficient because no other memory access depends on them.
+//! 2. **Unique-id allocation** (`next_id.fetch_add`): only uniqueness
+//!    is required, which the RMW guarantees at any ordering.
+//! 3. **Release/Acquire publication pairs** — the only places a
+//!    happens-before edge is required, each documented at the site:
+//!    * the obs span recorder publishes a record by `Release`-storing
+//!      the header word after `Relaxed` payload stores; readers
+//!      `Acquire`-load the header, ordering the payload reads;
+//!    * the cancel registry `Release`-stores its length mirror after
+//!      writing entries; the poll path `Acquire`-loads it;
+//!    * the latency ring and reservoir shards pack each sample into a
+//!      single atomic word, so slot stores need no cross-word ordering.
+//!
+//! `SeqCst` appears nowhere: every ordering is either genuinely relaxed
+//! or a deliberate pair, and a `SeqCst` would paper over an unstated
+//! protocol. The lint keeps it that way mechanically.
+//!
+//! # Annotation conventions
+//!
+//! * `// relaxed-ok: <why>` — same line as the `Ordering::Relaxed`, or
+//!   a comment line directly above a contiguous run of Relaxed lines
+//!   (covers the whole run).
+//! * `// lint: allow(<rule-id>) <reason>` — suppresses one violation of
+//!   `<rule-id>` on the same line or the line below. The reason is
+//!   mandatory; unused suppressions are warnings (errors under
+//!   `--deny-all`).
+//! * Doc comments (`///`, `//!`, `/** */`) are inert to both grammars:
+//!   they document the conventions (as this page does) without invoking
+//!   them. Only plain `//` comments carry live annotations.
+//!
+//! # Scope
+//!
+//! The walker scans `*.rs` under the given root, skipping `vendor/`,
+//! `target/`, hidden directories, and `lint_fixtures/` (the seeded
+//! violation corpus is linted *directly* by its integration test, never
+//! as part of a tree scan).
+
+pub mod atomics;
+pub mod backend_registry;
+pub mod deprecated;
+pub mod lexer;
+pub mod locks;
+pub mod report;
+pub mod rules;
+pub mod wire_sync;
+
+use report::{LintReport, Suppressed};
+use rules::{RuleId, SourceFile, Suppression, Violation};
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// Directory names never descended into during a tree scan.
+const SKIP_DIRS: [&str; 3] = ["vendor", "target", "lint_fixtures"];
+
+fn walk(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        if e.file_type()?.is_dir() {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            if name.starts_with('.') || SKIP_DIRS.contains(&name.as_ref()) {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative path with forward slashes (stable across platforms for
+/// reports, suppression scoping and the backend registry).
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+/// Split raw findings into (kept, suppressed, unused-suppression
+/// warnings) given each file's parsed suppressions.
+fn apply_suppressions(
+    raw: Vec<Violation>,
+    sups: &[(String, Suppression)],
+) -> (Vec<Violation>, Vec<Suppressed>, Vec<Violation>) {
+    let mut used = vec![false; sups.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = Vec::new();
+    for v in raw {
+        // The meta-rule polices the annotations themselves; letting an
+        // annotation silence it would be circular.
+        let hit = (v.rule != RuleId::LintAnnotation)
+            .then(|| {
+                sups.iter().position(|(file, s)| {
+                    *file == v.file
+                        && s.rule == v.rule
+                        && (s.line == v.line || s.line + 1 == v.line)
+                })
+            })
+            .flatten();
+        match hit {
+            Some(i) => {
+                used[i] = true;
+                suppressed.push(Suppressed {
+                    rule: v.rule,
+                    file: v.file,
+                    line: v.line,
+                    reason: sups[i].1.reason.clone(),
+                });
+            }
+            None => kept.push(v),
+        }
+    }
+    let unused = sups
+        .iter()
+        .zip(&used)
+        .filter(|(_, u)| !**u)
+        .map(|((file, s), _)| Violation {
+            rule: RuleId::LintAnnotation,
+            file: file.clone(),
+            line: s.line,
+            message: format!("unused suppression: no {} violation here to allow", s.rule),
+        })
+        .collect();
+    (kept, suppressed, unused)
+}
+
+/// Lint every `.rs` file under `root`. Strictness (`--deny-all`) is a
+/// rendering/exit concern — the report always carries both severities.
+pub fn run_lint(root: &Path) -> io::Result<LintReport> {
+    let mut paths = Vec::new();
+    walk(root, &mut paths)?;
+
+    let mut files = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let src = fs::read_to_string(p)?;
+        files.push(SourceFile::new(rel_path(root, p), &src));
+    }
+
+    let mut raw = Vec::new();
+    let mut warnings = Vec::new();
+    let mut sups: Vec<(String, Suppression)> = Vec::new();
+    for f in &files {
+        let (file_sups, bad) = rules::parse_suppressions(f);
+        raw.extend(bad);
+        sups.extend(file_sups.into_iter().map(|s| (f.rel_path.clone(), s)));
+        atomics::check(f, &mut raw, &mut warnings);
+        locks::check(f, &mut raw);
+        deprecated::check(f, &mut raw);
+        wire_sync::check(f, &mut raw);
+    }
+    backend_registry::check(&files, &mut raw);
+
+    let (violations, suppressed, unused) = apply_suppressions(raw, &sups);
+    warnings.extend(unused);
+
+    let mut report = LintReport {
+        files_scanned: files.len(),
+        violations,
+        warnings,
+        suppressed,
+    };
+    report.sort();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(rule: RuleId, file: &str, line: usize) -> Violation {
+        Violation { rule, file: file.into(), line, message: "m".into() }
+    }
+
+    fn sup(file: &str, rule: RuleId, line: usize) -> (String, Suppression) {
+        (file.into(), Suppression { rule, line, reason: "why".into() })
+    }
+
+    #[test]
+    fn suppression_covers_same_line_and_line_below() {
+        let sups = vec![sup("src/a.rs", RuleId::LockPoisonPolicy, 5)];
+        let raw = vec![
+            v(RuleId::LockPoisonPolicy, "src/a.rs", 5),
+            v(RuleId::LockPoisonPolicy, "src/a.rs", 6),
+            v(RuleId::LockPoisonPolicy, "src/a.rs", 7),
+        ];
+        let (kept, suppressed, unused) = apply_suppressions(raw, &sups);
+        assert_eq!(kept.len(), 1, "line 7 is out of the suppression's reach");
+        assert_eq!(kept[0].line, 7);
+        assert_eq!(suppressed.len(), 2);
+        assert_eq!(suppressed[0].reason, "why");
+        assert!(unused.is_empty());
+    }
+
+    #[test]
+    fn suppression_is_rule_and_file_scoped() {
+        let sups = vec![sup("src/a.rs", RuleId::LockPoisonPolicy, 5)];
+        let raw = vec![
+            v(RuleId::AtomicOrderingJustified, "src/a.rs", 5),
+            v(RuleId::LockPoisonPolicy, "src/b.rs", 5),
+        ];
+        let (kept, suppressed, unused) = apply_suppressions(raw, &sups);
+        assert_eq!(kept.len(), 2, "wrong rule / wrong file must not match");
+        assert!(suppressed.is_empty());
+        assert_eq!(unused.len(), 1, "the unmatched suppression is reported");
+        assert_eq!(unused[0].rule, RuleId::LintAnnotation);
+    }
+
+    #[test]
+    fn lint_annotation_violations_cannot_be_suppressed() {
+        let sups = vec![sup("src/a.rs", RuleId::LintAnnotation, 3)];
+        let raw = vec![v(RuleId::LintAnnotation, "src/a.rs", 3)];
+        let (kept, suppressed, _) = apply_suppressions(raw, &sups);
+        assert_eq!(kept.len(), 1, "meta-rule is not silenceable");
+        assert!(suppressed.is_empty());
+    }
+
+    #[test]
+    fn rel_path_uses_forward_slashes() {
+        let root = Path::new("/repo/rust");
+        let p = Path::new("/repo/rust/src/net/wire.rs");
+        assert_eq!(rel_path(root, p), "src/net/wire.rs");
+    }
+}

@@ -1,0 +1,241 @@
+//! Lint report assembly and rendering (human text + JSON).
+//!
+//! The JSON writer is hand-rolled (std-only repo: no serde). The schema
+//! is stable — CI uploads it as an artifact and downstream tooling may
+//! parse it:
+//!
+//! ```json
+//! {
+//!   "files_scanned": 42,
+//!   "deny_all": true,
+//!   "clean": false,
+//!   "violations": [ {"rule": "...", "file": "...", "line": 7, "message": "..."} ],
+//!   "warnings":   [ ... same shape ... ],
+//!   "suppressed": [ {"rule": "...", "file": "...", "line": 7, "reason": "..."} ]
+//! }
+//! ```
+
+use super::rules::{RuleId, Violation};
+use std::fmt::Write as _;
+
+/// One applied suppression, for the report's audit trail.
+#[derive(Debug, Clone)]
+pub struct Suppressed {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub reason: String,
+}
+
+/// Outcome of a lint run over one tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Blocking findings, sorted by (file, line, rule).
+    pub violations: Vec<Violation>,
+    /// Non-blocking findings (stale annotations / unused suppressions);
+    /// promoted to blocking under `--deny-all`.
+    pub warnings: Vec<Violation>,
+    /// Violations silenced by a `lint: allow` with the audit reason.
+    pub suppressed: Vec<Suppressed>,
+}
+
+impl LintReport {
+    /// Canonical ordering for deterministic output.
+    pub fn sort(&mut self) {
+        let key = |v: &Violation| (v.file.clone(), v.line, v.rule.as_str());
+        self.violations.sort_by_key(key);
+        self.warnings.sort_by_key(key);
+        self.suppressed.sort_by_key(|s| (s.file.clone(), s.line));
+    }
+
+    /// Whether the run passes under the given strictness.
+    pub fn is_clean(&self, deny_all: bool) -> bool {
+        self.violations.is_empty() && (!deny_all || self.warnings.is_empty())
+    }
+
+    /// Human-readable report.
+    pub fn render_human(&self, deny_all: bool) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            let _ = writeln!(s, "error: {v}");
+        }
+        for w in &self.warnings {
+            let label = if deny_all { "error(deny-all)" } else { "warning" };
+            let _ = writeln!(s, "{label}: {w}");
+        }
+        let _ = writeln!(
+            s,
+            "adip lint: {} file(s), {} violation(s), {} warning(s), {} suppressed — {}",
+            self.files_scanned,
+            self.violations.len(),
+            self.warnings.len(),
+            self.suppressed.len(),
+            if self.is_clean(deny_all) { "clean" } else { "FAILED" }
+        );
+        s
+    }
+
+    /// Stable JSON report (see module doc for the schema).
+    pub fn render_json(&self, deny_all: bool) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        let _ = writeln!(s, "  \"files_scanned\": {},", self.files_scanned);
+        let _ = writeln!(s, "  \"deny_all\": {deny_all},");
+        let _ = writeln!(s, "  \"clean\": {},", self.is_clean(deny_all));
+        render_violation_array(&mut s, "violations", &self.violations);
+        s.push_str(",\n");
+        render_violation_array(&mut s, "warnings", &self.warnings);
+        s.push_str(",\n");
+        s.push_str("  \"suppressed\": [");
+        for (i, sup) in self.suppressed.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(
+                s,
+                "\n    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"reason\": {}}}",
+                json_str(sup.rule.as_str()),
+                json_str(&sup.file),
+                sup.line,
+                json_str(&sup.reason)
+            );
+        }
+        if !self.suppressed.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+fn render_violation_array(s: &mut String, name: &str, items: &[Violation]) {
+    let _ = write!(s, "  \"{name}\": [");
+    for (i, v) in items.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "\n    {{\"rule\": {}, \"file\": {}, \"line\": {}, \"message\": {}}}",
+            json_str(v.rule.as_str()),
+            json_str(&v.file),
+            v.line,
+            json_str(&v.message)
+        );
+    }
+    if !items.is_empty() {
+        s.push_str("\n  ");
+    }
+    s.push(']');
+}
+
+/// Minimal JSON string encoder (escapes quotes, backslashes, control
+/// characters; everything else passes through as UTF-8).
+fn json_str(v: &str) -> String {
+    let mut out = String::with_capacity(v.len() + 2);
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            files_scanned: 3,
+            violations: vec![Violation {
+                rule: RuleId::LockPoisonPolicy,
+                file: "src/b.rs".into(),
+                line: 9,
+                message: "bare \"unwrap\"".into(),
+            }],
+            warnings: vec![Violation {
+                rule: RuleId::LintAnnotation,
+                file: "src/a.rs".into(),
+                line: 2,
+                message: "stale".into(),
+            }],
+            suppressed: vec![Suppressed {
+                rule: RuleId::AtomicOrderingJustified,
+                file: "src/a.rs".into(),
+                line: 5,
+                reason: "id counter".into(),
+            }],
+        }
+    }
+
+    #[test]
+    fn clean_logic_respects_deny_all() {
+        let mut r = sample();
+        r.violations.clear();
+        assert!(r.is_clean(false), "warnings alone pass by default");
+        assert!(!r.is_clean(true), "deny-all promotes warnings");
+        r.warnings.clear();
+        assert!(r.is_clean(true));
+    }
+
+    #[test]
+    fn human_render_has_spans_and_summary() {
+        let out = sample().render_human(false);
+        assert!(out.contains("error: src/b.rs:9: [lock-poison-policy]"), "{out}");
+        assert!(out.contains("warning: src/a.rs:2: [lint-annotation]"));
+        assert!(out.contains("3 file(s), 1 violation(s), 1 warning(s), 1 suppressed"));
+        assert!(out.contains("FAILED"));
+    }
+
+    #[test]
+    fn json_escapes_and_round_trips_fields() {
+        let out = sample().render_json(true);
+        assert!(out.contains("\"files_scanned\": 3"), "{out}");
+        assert!(out.contains("\"deny_all\": true"));
+        assert!(out.contains("\"clean\": false"));
+        assert!(out.contains("\"rule\": \"lock-poison-policy\""));
+        assert!(out.contains("\"message\": \"bare \\\"unwrap\\\"\""), "quote escaping: {out}");
+        assert!(out.contains("\"reason\": \"id counter\""));
+        // Balanced braces/brackets as a cheap well-formedness proxy.
+        assert_eq!(out.matches('{').count(), out.matches('}').count());
+        assert_eq!(out.matches('[').count(), out.matches(']').count());
+    }
+
+    #[test]
+    fn empty_report_is_clean_and_renders_empty_arrays() {
+        let r = LintReport::default();
+        assert!(r.is_clean(true));
+        let out = r.render_json(false);
+        assert!(out.contains("\"violations\": []"), "{out}");
+        assert!(out.contains("\"suppressed\": []"));
+        assert!(r.render_human(false).contains("clean"));
+    }
+
+    #[test]
+    fn sort_orders_by_file_then_line() {
+        let mut r = LintReport::default();
+        for (f, l) in [("src/z.rs", 1), ("src/a.rs", 9), ("src/a.rs", 2)] {
+            r.violations.push(Violation {
+                rule: RuleId::LockPoisonPolicy,
+                file: f.into(),
+                line: l,
+                message: String::new(),
+            });
+        }
+        r.sort();
+        let got: Vec<_> = r.violations.iter().map(|v| (v.file.as_str(), v.line)).collect();
+        assert_eq!(got, vec![("src/a.rs", 2), ("src/a.rs", 9), ("src/z.rs", 1)]);
+    }
+}

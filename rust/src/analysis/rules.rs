@@ -1,0 +1,306 @@
+//! Rule framework for `adip lint`: rule identities, violations,
+//! per-file context, and the inline-suppression grammar.
+//!
+//! # Suppressions
+//!
+//! A violation is suppressed by an inline comment of the form
+//!
+//! ```text
+//! // lint: allow(<rule-id>) <reason>
+//! ```
+//!
+//! placed either on the violating line itself or on the line directly
+//! above it. The reason is mandatory — a suppression without one is
+//! itself a violation (`lint-annotation`). Suppressions that match no
+//! violation are reported as warnings (promoted to errors under
+//! `--deny-all`) so stale allows cannot accumulate.
+
+use super::lexer::SourceLine;
+
+/// Identity of every lint rule. `as_str` is the stable external name
+/// used in reports, JSON and `lint: allow(...)` suppressions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuleId {
+    /// Every `Ordering::Relaxed` carries a `relaxed-ok:` justification;
+    /// `SeqCst` is banned outright.
+    AtomicOrderingJustified,
+    /// No bare `.unwrap()` / `.expect()` on `Mutex`/`RwLock` guards
+    /// outside test code (the poison-recovery idiom is mandatory).
+    LockPoisonPolicy,
+    /// No internal callers of the `#[deprecated]` submission shims
+    /// outside the shims themselves and their pinning test.
+    NoDeprecatedInternal,
+    /// `net/wire.rs` opcode variants stay in sync with their
+    /// `opcode()`/`encode()`/`decode()` match arms.
+    WireOpcodeSync,
+    /// Every module matching on `Backend` appears in the checked
+    /// registry mapping it to the differential suite covering it.
+    BackendDifferentialRegistry,
+    /// Meta-rule: malformed or unused `lint: allow` / `relaxed-ok`
+    /// annotations.
+    LintAnnotation,
+}
+
+impl RuleId {
+    /// All rules, in report order.
+    pub const ALL: [RuleId; 6] = [
+        RuleId::AtomicOrderingJustified,
+        RuleId::LockPoisonPolicy,
+        RuleId::NoDeprecatedInternal,
+        RuleId::WireOpcodeSync,
+        RuleId::BackendDifferentialRegistry,
+        RuleId::LintAnnotation,
+    ];
+
+    /// Stable external rule name.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RuleId::AtomicOrderingJustified => "atomic-ordering-justified",
+            RuleId::LockPoisonPolicy => "lock-poison-policy",
+            RuleId::NoDeprecatedInternal => "no-deprecated-internal",
+            RuleId::WireOpcodeSync => "wire-opcode-sync",
+            RuleId::BackendDifferentialRegistry => "backend-differential-registry",
+            RuleId::LintAnnotation => "lint-annotation",
+        }
+    }
+
+    /// Parse an external rule name (as written in a suppression).
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.as_str() == s)
+    }
+}
+
+impl std::fmt::Display for RuleId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One finding: rule, file, 1-based line, human message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: RuleId,
+    /// Path relative to the scan root, forward slashes.
+    pub file: String,
+    /// 1-based line number the finding anchors to.
+    pub line: usize,
+    pub message: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// One scanned file, pre-lexed, with its test-code classification.
+pub struct SourceFile {
+    /// Path relative to the scan root, forward slashes.
+    pub rel_path: String,
+    /// Sanitized (code, comment) per line — see [`super::lexer`].
+    pub lines: Vec<SourceLine>,
+    /// Per-line: is this line test code? True for every line of files
+    /// under `tests/` or `benches/`, and for lines at or after a
+    /// column-0 `#[cfg(test)]` that introduces a `mod` (the repo-wide
+    /// test-module-at-end-of-file convention).
+    pub is_test: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Classify and pre-lex one file.
+    pub fn new(rel_path: String, source: &str) -> SourceFile {
+        let lines = super::lexer::strip_source(source);
+        let file_is_test = rel_path.starts_with("tests/") || rel_path.starts_with("benches/");
+        let mut is_test = vec![file_is_test; lines.len()];
+        if !file_is_test {
+            // A column-0 `#[cfg(test)]` followed (allowing further
+            // attributes) by a `mod` marks the in-file test module; by
+            // repo convention it is the last item, so everything from
+            // the attribute on is test code. Indented `#[cfg(test)]`
+            // attributes gate single items inside production code and
+            // are deliberately NOT treated as a region start.
+            for (i, l) in lines.iter().enumerate() {
+                if l.code.starts_with("#[cfg(test)]") {
+                    let opens_mod = lines[i + 1..]
+                        .iter()
+                        .map(|n| n.code.trim_start())
+                        .find(|t| !t.is_empty() && !t.starts_with("#["))
+                        .is_some_and(|t| t.starts_with("mod ") || t.starts_with("pub mod "));
+                    if opens_mod {
+                        for t in is_test.iter_mut().skip(i) {
+                            *t = true;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+        SourceFile { rel_path, lines, is_test }
+    }
+
+    /// Sanitized code of 1-based line `n` ("" when out of range).
+    pub fn code(&self, n: usize) -> &str {
+        self.lines.get(n - 1).map_or("", |l| l.code.as_str())
+    }
+
+    /// Comment text of 1-based line `n` ("" when out of range).
+    pub fn comment(&self, n: usize) -> &str {
+        self.lines.get(n - 1).map_or("", |l| l.comment.as_str())
+    }
+
+    /// Whether 1-based line `n` is test code.
+    pub fn is_test_line(&self, n: usize) -> bool {
+        self.is_test.get(n - 1).copied().unwrap_or(false)
+    }
+}
+
+/// One parsed `lint: allow(<rule>) <reason>` suppression.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Suppression {
+    pub rule: RuleId,
+    /// 1-based line the comment sits on. It covers this line and the
+    /// next.
+    pub line: usize,
+    pub reason: String,
+}
+
+/// Extract every suppression in a file. Malformed ones (unknown rule,
+/// missing reason, unbalanced paren) are returned as `lint-annotation`
+/// violations instead. Doc comments are inert: they *describe* the
+/// grammar (as this module's own docs do), they cannot invoke it.
+pub fn parse_suppressions(file: &SourceFile) -> (Vec<Suppression>, Vec<Violation>) {
+    const MARKER: &str = "lint: allow(";
+    let mut sups = Vec::new();
+    let mut bad = Vec::new();
+    for (idx, l) in file.lines.iter().enumerate() {
+        let line = idx + 1;
+        if super::lexer::is_doc(&l.comment) {
+            continue;
+        }
+        let Some(at) = l.comment.find(MARKER) else { continue };
+        let rest = &l.comment[at + MARKER.len()..];
+        let Some(close) = rest.find(')') else {
+            bad.push(Violation {
+                rule: RuleId::LintAnnotation,
+                file: file.rel_path.clone(),
+                line,
+                message: "malformed suppression: missing ')' after rule name".into(),
+            });
+            continue;
+        };
+        let name = rest[..close].trim();
+        let reason = rest[close + 1..].trim();
+        let Some(rule) = RuleId::parse(name) else {
+            bad.push(Violation {
+                rule: RuleId::LintAnnotation,
+                file: file.rel_path.clone(),
+                line,
+                message: format!("suppression names unknown rule {name:?}"),
+            });
+            continue;
+        };
+        if reason.is_empty() {
+            bad.push(Violation {
+                rule: RuleId::LintAnnotation,
+                file: file.rel_path.clone(),
+                line,
+                message: format!("suppression for {rule} has no reason — say why"),
+            });
+            continue;
+        }
+        sups.push(Suppression { rule, line, reason: reason.to_string() });
+    }
+    (sups, bad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_names_round_trip() {
+        for r in RuleId::ALL {
+            assert_eq!(RuleId::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(RuleId::parse("no-such-rule"), None);
+    }
+
+    #[test]
+    fn test_region_starts_at_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\n";
+        let f = SourceFile::new("src/x.rs".into(), src);
+        assert!(!f.is_test_line(1));
+        assert!(f.is_test_line(2));
+        assert!(f.is_test_line(4));
+    }
+
+    #[test]
+    fn indented_cfg_test_attribute_is_not_a_region() {
+        let src = "enum W {\n    #[cfg(test)]\n    Panic,\n}\nfn hot() {}\n";
+        let f = SourceFile::new("src/x.rs".into(), src);
+        assert!(!f.is_test_line(5), "item-level cfg(test) must not swallow the file");
+    }
+
+    #[test]
+    fn cfg_test_without_mod_is_not_a_region() {
+        let src = "#[cfg(test)]\nfn helper() {}\nfn hot() {}\n";
+        let f = SourceFile::new("src/x.rs".into(), src);
+        assert!(!f.is_test_line(3));
+    }
+
+    #[test]
+    fn tests_and_benches_files_are_all_test_code() {
+        let f = SourceFile::new("tests/integration_x.rs".into(), "fn a() {}\n");
+        assert!(f.is_test_line(1));
+        let f = SourceFile::new("benches/bench_x.rs".into(), "fn a() {}\n");
+        assert!(f.is_test_line(1));
+    }
+
+    #[test]
+    fn suppression_parses_rule_and_reason() {
+        let f = SourceFile::new(
+            "src/x.rs".into(),
+            "let x = 1; // lint: allow(lock-poison-policy) guard cannot poison here\n",
+        );
+        let (sups, bad) = parse_suppressions(&f);
+        assert!(bad.is_empty());
+        assert_eq!(sups.len(), 1);
+        assert_eq!(sups[0].rule, RuleId::LockPoisonPolicy);
+        assert_eq!(sups[0].line, 1);
+        assert_eq!(sups[0].reason, "guard cannot poison here");
+    }
+
+    #[test]
+    fn suppression_requires_known_rule_and_reason() {
+        let f = SourceFile::new(
+            "src/x.rs".into(),
+            "// lint: allow(bogus-rule) text\n// lint: allow(lock-poison-policy)\n// lint: allow(lock-poison-policy\n",
+        );
+        let (sups, bad) = parse_suppressions(&f);
+        assert!(sups.is_empty());
+        assert_eq!(bad.len(), 3);
+        assert!(bad[0].message.contains("unknown rule"));
+        assert!(bad[1].message.contains("no reason"));
+        assert!(bad[2].message.contains("missing ')'"));
+    }
+
+    #[test]
+    fn suppression_examples_in_doc_comments_are_inert() {
+        let f = SourceFile::new(
+            "src/x.rs".into(),
+            "/// // lint: allow(<rule-id>) <reason>\n//! lint: allow(bogus) example\n",
+        );
+        let (sups, bad) = parse_suppressions(&f);
+        assert!(sups.is_empty() && bad.is_empty(), "{bad:?}");
+    }
+
+    #[test]
+    fn suppression_inside_string_is_inert() {
+        let f = SourceFile::new(
+            "src/x.rs".into(),
+            "let s = \"// lint: allow(lock-poison-policy) fake\";\n",
+        );
+        let (sups, bad) = parse_suppressions(&f);
+        assert!(sups.is_empty() && bad.is_empty());
+    }
+}

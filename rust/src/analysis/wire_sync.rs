@@ -1,0 +1,264 @@
+//! `wire-opcode-sync`: the wire protocol's `Frame` enum, its opcode
+//! table, and the encode/decode match arms must stay in sync.
+//!
+//! The TCP tier's codec (`net/wire.rs`) spreads one protocol over four
+//! places: the `OP_*` opcode constants, the `Frame` enum, `opcode()`,
+//! `encode()` and `decode()`. Adding a frame and forgetting one of them
+//! compiles fine (match arms on `_` or constants simply unused at one
+//! end) but desyncs the protocol — the loopback differential gate only
+//! catches frames a test happens to exercise. This rule mechanizes the
+//! invariant:
+//!
+//! * every `Frame` variant is referenced in `opcode()`, `encode()` and
+//!   `decode()`;
+//! * every `const OP_*` opcode constant is referenced at least twice
+//!   beyond its declaration (the `opcode()` table and the `decode()`
+//!   dispatch).
+//!
+//! The rule fires on any scanned file named `wire.rs` that declares
+//! `enum Frame`.
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+/// `needle` occurs in `hay` as a whole token (no identifier characters
+/// on either side).
+fn contains_token(hay: &str, needle: &str) -> bool {
+    count_token(hay, needle) > 0
+}
+
+fn count_token(hay: &str, needle: &str) -> usize {
+    let ident = |c: char| c.is_alphanumeric() || c == '_';
+    let mut count = 0usize;
+    let mut from = 0usize;
+    while let Some(at) = hay[from..].find(needle) {
+        let start = from + at;
+        let end = start + needle.len();
+        let pre_ok = start == 0 || !hay[..start].chars().next_back().is_some_and(ident);
+        let post_ok = !hay[end..].chars().next().is_some_and(ident);
+        if pre_ok && post_ok {
+            count += 1;
+        }
+        from = end;
+    }
+    count
+}
+
+/// Net brace delta of one sanitized code line.
+fn brace_delta(code: &str) -> i32 {
+    code.chars().fold(0, |d, c| match c {
+        '{' => d + 1,
+        '}' => d - 1,
+        _ => d,
+    })
+}
+
+/// Collect the concatenated code of a brace-balanced block starting at
+/// 1-based `start` (the line containing the opening `{`).
+fn block_code(file: &SourceFile, start: usize) -> String {
+    let mut body = String::new();
+    let mut depth = 0i32;
+    let mut opened = false;
+    for i in start..=file.lines.len() {
+        let code = file.code(i);
+        body.push_str(code);
+        body.push('\n');
+        depth += brace_delta(code);
+        if depth > 0 {
+            opened = true;
+        }
+        if opened && depth <= 0 {
+            break;
+        }
+    }
+    body
+}
+
+/// The `Frame` enum's variant names, with the enum's 1-based line.
+fn frame_variants(file: &SourceFile) -> Option<(usize, Vec<String>)> {
+    let n = file.lines.len();
+    let start = (1..=n).find(|&i| {
+        let c = file.code(i);
+        c.contains("enum Frame") && !c.contains("enum FrameReader")
+    })?;
+    let mut variants = Vec::new();
+    let mut depth = 0i32;
+    for i in start..=n {
+        if depth == 1 {
+            let t = file.code(i).trim_start();
+            if t.starts_with(|c: char| c.is_ascii_uppercase()) {
+                let name: String =
+                    t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                if !name.is_empty() {
+                    variants.push(name);
+                }
+            }
+        }
+        depth += brace_delta(file.code(i));
+        if i > start && depth <= 0 {
+            break;
+        }
+    }
+    Some((start, variants))
+}
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile, out: &mut Vec<Violation>) {
+    if !file.rel_path.ends_with("wire.rs") {
+        return;
+    }
+    let Some((enum_line, variants)) = frame_variants(file) else { return };
+    let n = file.lines.len();
+
+    // The three codec functions, by (name, first line, body code).
+    let funcs: Vec<(&str, usize, String)> = ["fn opcode(", "fn encode(", "fn decode("]
+        .iter()
+        .filter_map(|pat| {
+            let line = (1..=n).find(|&i| file.code(i).contains(pat))?;
+            let name = pat.trim_start_matches("fn ").trim_end_matches('(');
+            Some((name, line, block_code(file, line)))
+        })
+        .collect();
+    for pat in ["fn opcode(", "fn encode(", "fn decode("] {
+        let name = pat.trim_start_matches("fn ").trim_end_matches('(');
+        if !funcs.iter().any(|(f, _, _)| *f == name) {
+            out.push(Violation {
+                rule: RuleId::WireOpcodeSync,
+                file: file.rel_path.clone(),
+                line: enum_line,
+                message: format!("wire codec is missing `fn {name}` for enum Frame"),
+            });
+        }
+    }
+
+    for v in &variants {
+        let qualified = format!("Frame::{v}");
+        for (fname, fline, body) in &funcs {
+            if !contains_token(body, &qualified) {
+                out.push(Violation {
+                    rule: RuleId::WireOpcodeSync,
+                    file: file.rel_path.clone(),
+                    line: *fline,
+                    message: format!(
+                        "Frame::{v} has no match arm in {fname}() — wire protocol desync"
+                    ),
+                });
+            }
+        }
+    }
+
+    // Opcode constants: declaration + opcode() table + decode() dispatch.
+    let all_code: String =
+        (1..=n).map(|i| format!("{}\n", file.code(i))).collect();
+    for i in 1..=n {
+        let t = file.code(i).trim_start();
+        let t = t.strip_prefix("pub ").unwrap_or(t);
+        let Some(rest) = t.strip_prefix("const OP_") else { continue };
+        let name: String = rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+        let full = format!("OP_{}", name.trim_end_matches(':'));
+        let full = full.trim_end_matches(':').to_string();
+        if count_token(&all_code, &full) < 3 {
+            out.push(Violation {
+                rule: RuleId::WireOpcodeSync,
+                file: file.rel_path.clone(),
+                line: i,
+                message: format!(
+                    "opcode constant {full} must be referenced by both opcode() and \
+                     decode() (declaration alone is a desync)"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+const OP_PING: u8 = 0x01;
+const OP_PONG: u8 = 0x81;
+pub enum Frame {
+    Ping { id: u64 },
+    Pong(u64),
+}
+impl Frame {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Frame::Ping { .. } => OP_PING,
+            Frame::Pong(_) => OP_PONG,
+        }
+    }
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Ping { id } => enc(*id),
+            Frame::Pong(v) => enc(*v),
+        }
+    }
+    pub fn decode(op: u8, b: &[u8]) -> Frame {
+        match op {
+            OP_PING => Frame::Ping { id: 0 },
+            OP_PONG => Frame::Pong(0),
+            _ => panic!(),
+        }
+    }
+}
+";
+
+    fn run(path: &str, src: &str) -> Vec<Violation> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn synced_codec_passes() {
+        assert!(run("src/net/wire.rs", GOOD).is_empty());
+    }
+
+    #[test]
+    fn missing_decode_arm_is_flagged() {
+        let src = GOOD.replace("OP_PONG => Frame::Pong(0),", "");
+        let out = run("src/net/wire.rs", &src);
+        assert!(
+            out.iter().any(|v| v.message.contains("Pong") && v.message.contains("decode")),
+            "{out:?}"
+        );
+    }
+
+    #[test]
+    fn unused_opcode_constant_is_flagged() {
+        let src = GOOD.replace("OP_PONG => Frame::Pong(0),", "_ => Frame::Pong(0),");
+        let out = run("src/net/wire.rs", &src);
+        assert!(out.iter().any(|v| v.message.contains("OP_PONG")), "{out:?}");
+    }
+
+    #[test]
+    fn pub_const_opcodes_are_still_checked() {
+        let src = GOOD
+            .replace("const OP_PONG: u8 = 0x81;", "pub const OP_PONG: u8 = 0x81;")
+            .replace("OP_PONG => Frame::Pong(0),", "_ => Frame::Pong(0),");
+        let out = run("src/net/wire.rs", &src);
+        assert!(out.iter().any(|v| v.message.contains("OP_PONG")), "{out:?}");
+    }
+
+    #[test]
+    fn variant_prefix_collision_is_not_a_false_sync() {
+        // `Submitted` arms must not satisfy the `Submit` variant.
+        let src = GOOD
+            .replace("Ping { id: u64 },", "Submit(u64),\n    Submitted(u64),")
+            .replace("Frame::Ping { .. } => OP_PING,", "Frame::Submitted(_) => OP_PING,")
+            .replace("Frame::Ping { id } => enc(*id),", "Frame::Submitted(v) => enc(*v),")
+            .replace("OP_PING => Frame::Ping { id: 0 },", "OP_PING => Frame::Submitted(0),");
+        let out = run("src/net/wire.rs", &src);
+        assert!(
+            out.iter().any(|v| v.message.contains("Frame::Submit ")),
+            "Submit must be reported missing everywhere: {out:?}"
+        );
+    }
+
+    #[test]
+    fn non_wire_files_are_ignored() {
+        assert!(run("src/net/server.rs", "enum Frame { X }\n").is_empty());
+    }
+}

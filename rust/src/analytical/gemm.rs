@@ -249,8 +249,20 @@ mod tests {
         // GPT-2-style 8-bit workload: ADiP incurs no (meaningful) latency
         // overhead vs DiP — only the 3-stage column-unit fill per GEMM.
         let shape = GemmShape::new(1024, 1024, 1024);
-        let d = estimate_gemm(Architecture::Dip, &cfg(), shape, PrecisionMode::W8, MemoryPolicy::default());
-        let a = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W8, MemoryPolicy::default());
+        let d = estimate_gemm(
+            Architecture::Dip,
+            &cfg(),
+            shape,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
+        let a = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
         assert_eq!(a.passes, d.passes);
         let overhead = a.cycles as f64 / d.cycles as f64 - 1.0;
         assert!(overhead.abs() < 1e-4, "overhead {overhead}");
@@ -260,9 +272,27 @@ mod tests {
     #[test]
     fn adip_quantized_gains_2x_and_4x() {
         let shape = GemmShape::new(1024, 1024, 1024);
-        let d = estimate_gemm(Architecture::Dip, &cfg(), shape, PrecisionMode::W4, MemoryPolicy::default());
-        let a4 = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W4, MemoryPolicy::default());
-        let a2 = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W2, MemoryPolicy::default());
+        let d = estimate_gemm(
+            Architecture::Dip,
+            &cfg(),
+            shape,
+            PrecisionMode::W4,
+            MemoryPolicy::default(),
+        );
+        let a4 = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W4,
+            MemoryPolicy::default(),
+        );
+        let a2 = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         assert!((d.cycles as f64 / a4.cycles as f64 - 2.0).abs() < 1e-3);
         assert!((d.cycles as f64 / a2.cycles as f64 - 4.0).abs() < 1e-3);
         // memory efficiency gains match (Fig. 11: tile accesses ÷ k)
@@ -273,8 +303,20 @@ mod tests {
     #[test]
     fn ws_slower_than_dip() {
         let shape = GemmShape::new(512, 512, 512);
-        let w = estimate_gemm(Architecture::Ws, &cfg(), shape, PrecisionMode::W8, MemoryPolicy::default());
-        let d = estimate_gemm(Architecture::Dip, &cfg(), shape, PrecisionMode::W8, MemoryPolicy::default());
+        let w = estimate_gemm(
+            Architecture::Ws,
+            &cfg(),
+            shape,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
+        let d = estimate_gemm(
+            Architecture::Dip,
+            &cfg(),
+            shape,
+            PrecisionMode::W8,
+            MemoryPolicy::default(),
+        );
         let ratio = w.cycles as f64 / d.cycles as f64;
         assert!(ratio > 1.9 && ratio < 2.0, "WS/DiP = {ratio}");
         // identical memory traffic (same tile reads)
@@ -284,7 +326,13 @@ mod tests {
     #[test]
     fn ragged_shapes_round_up() {
         let shape = GemmShape::new(33, 65, 97); // none divisible by 32
-        let a = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W2, MemoryPolicy::default());
+        let a = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         // tiles: m=2, k=3, n=4 → fused groups = ceil(4/4)*3 = 3; passes = 6
         assert_eq!(a.passes, 6);
     }
@@ -292,7 +340,13 @@ mod tests {
     #[test]
     fn output_counting_policy() {
         let shape = GemmShape::new(64, 64, 64);
-        let without = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W2, MemoryPolicy::default());
+        let without = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         let with = estimate_gemm(
             Architecture::Adip,
             &cfg(),
@@ -308,17 +362,50 @@ mod tests {
         let cfg = ArchConfig::with_n(8);
         let shape = GemmShape::new(32, 32, 32); // 4×4×4 tiles at n=8
         // ADiP 8b×2b, 3 matrices: 12 slots → 3 groups × 4 k × 4 m = 48
-        let a = estimate_gemm_set(Architecture::Adip, &cfg, shape, 3, PrecisionMode::W2, MemoryPolicy::default());
+        let a = estimate_gemm_set(
+            Architecture::Adip,
+            &cfg,
+            shape,
+            3,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         assert_eq!(a.passes, 48);
         assert_eq!(a.mode, PrecisionMode::W2);
         assert_eq!(a.ops, 3 * shape.ops());
         // singleton set degenerates to the single-GEMM estimate
-        let one = estimate_gemm_set(Architecture::Adip, &cfg, shape, 1, PrecisionMode::W2, MemoryPolicy::default());
-        let single = estimate_gemm(Architecture::Adip, &cfg, shape, PrecisionMode::W2, MemoryPolicy::default());
+        let one = estimate_gemm_set(
+            Architecture::Adip,
+            &cfg,
+            shape,
+            1,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
+        let single = estimate_gemm(
+            Architecture::Adip,
+            &cfg,
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         assert_eq!(one, single);
         // DiP: three independent 8b×8b runs (fill paid per run)
-        let d = estimate_gemm_set(Architecture::Dip, &cfg, shape, 3, PrecisionMode::W2, MemoryPolicy::default());
-        let d1 = estimate_gemm(Architecture::Dip, &cfg, shape, PrecisionMode::W2, MemoryPolicy::default());
+        let d = estimate_gemm_set(
+            Architecture::Dip,
+            &cfg,
+            shape,
+            3,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
+        let d1 = estimate_gemm(
+            Architecture::Dip,
+            &cfg,
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         assert_eq!(d.passes, 3 * d1.passes);
         assert_eq!(d.cycles, 3 * d1.cycles);
         assert_eq!(d.memory_bytes, 3 * d1.memory_bytes);
@@ -341,7 +428,13 @@ mod tests {
     #[test]
     fn ops_per_cycle_sane() {
         let shape = GemmShape::new(4096, 4096, 4096);
-        let a = estimate_gemm(Architecture::Adip, &cfg(), shape, PrecisionMode::W2, MemoryPolicy::default());
+        let a = estimate_gemm(
+            Architecture::Adip,
+            &cfg(),
+            shape,
+            PrecisionMode::W2,
+            MemoryPolicy::default(),
+        );
         // close to peak 8·N² = 8192 ops/cycle for 32×32 at 8b×2b
         assert!(a.ops_per_cycle() > 8000.0, "{}", a.ops_per_cycle());
         assert!(a.ops_per_cycle() <= 8192.0);

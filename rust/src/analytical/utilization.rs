@@ -145,18 +145,21 @@ mod tests {
         let x = Mat::random(&mut rng, 16, 16, 8);
         let ws: Vec<Mat> = (0..3).map(|_| Mat::random(&mut rng, 16, d_k, 2)).collect();
         let refs: Vec<&Mat> = ws.iter().collect();
-        let mut sim = CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
+        let mut sim =
+            CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
         let fused = sim.run_gemm_set(&x, &refs, PrecisionMode::W2, false).unwrap();
         // 3 slots in 1 group × tiles_k(2) × tiles_m(2) = 4 passes
         assert_eq!(fused.passes, 4);
         let mut solo_passes = 0;
         for w in &ws {
-            let mut s = CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
+            let mut s =
+                CoSim::new(crate::arch::build_array(Architecture::Adip, ArchConfig::with_n(n)));
             solo_passes += s.run_gemm(&x, w, PrecisionMode::W2, false).unwrap().passes;
         }
         assert_eq!(solo_passes, 12);
-        let predicted = slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::MultiMatrix { set: 3 })
-            / slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::ColumnTiles);
+        let predicted =
+            slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::MultiMatrix { set: 3 })
+                / slot_utilization(PrecisionMode::W2, n, d_k, FusionPolicy::ColumnTiles);
         assert_eq!(solo_passes as f64 / fused.passes as f64, predicted);
     }
 

@@ -159,7 +159,11 @@ pub fn simulate_adip_tile(
 }
 
 /// Simulate one DiP stationary-tile pass (INT8 PEs, single psum lane).
-pub fn simulate_dip_tile(activations: &Mat, weights: &Mat, mac_stages: u64) -> Result<CycleSimResult> {
+pub fn simulate_dip_tile(
+    activations: &Mat,
+    weights: &Mat,
+    mac_stages: u64,
+) -> Result<CycleSimResult> {
     let n = activations.rows();
     ensure!(n == activations.cols(), "activation tile must be square");
     ensure!(weights.rows() == n && weights.cols() == n, "weight tile shape mismatch");
@@ -228,7 +232,11 @@ pub fn simulate_dip_tile(activations: &Mat, weights: &Mat, mac_stages: u64) -> R
 
 /// Simulate one conventional weight-stationary tile pass, including the
 /// input-skew and output-deskew behaviour the sync FIFOs provide.
-pub fn simulate_ws_tile(activations: &Mat, weights: &Mat, mac_stages: u64) -> Result<CycleSimResult> {
+pub fn simulate_ws_tile(
+    activations: &Mat,
+    weights: &Mat,
+    mac_stages: u64,
+) -> Result<CycleSimResult> {
     let n = activations.rows();
     ensure!(n == activations.cols(), "activation tile must be square");
     ensure!(weights.rows() == n && weights.cols() == n, "weight tile shape mismatch");
@@ -301,7 +309,12 @@ mod tests {
     use crate::testutil::{check, Rng};
     use crate::quant::PrecisionMode;
 
-    fn random_interleaved(rng: &mut Rng, n: usize, mode: PrecisionMode, k: usize) -> (Vec<Mat>, InterleavedTile) {
+    fn random_interleaved(
+        rng: &mut Rng,
+        n: usize,
+        mode: PrecisionMode,
+        k: usize,
+    ) -> (Vec<Mat>, InterleavedTile) {
         let tiles: Vec<Mat> = (0..k).map(|_| Mat::random(rng, n, n, mode.weight_bits())).collect();
         let refs: Vec<&Mat> = tiles.iter().collect();
         let it = interleave_tiles(&refs, mode).unwrap();

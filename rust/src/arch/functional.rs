@@ -326,7 +326,10 @@ mod tests {
             assert_eq!(f.config().backend, Backend::Functional);
             assert_eq!(f.n(), 16);
             for mode in PrecisionMode::ALL {
-                assert_eq!(f.supports(mode), arch == Architecture::Adip || mode == PrecisionMode::W8);
+                assert_eq!(
+                    f.supports(mode),
+                    arch == Architecture::Adip || mode == PrecisionMode::W8
+                );
             }
         }
         // latency formulas match the concrete models

@@ -64,7 +64,9 @@ pub mod pe;
 pub mod ws;
 
 pub use adip::AdipArray;
-pub use array::{build_array, ArchConfig, Architecture, Backend, KernelMode, SystolicArray, TilePass};
+pub use array::{
+    build_array, ArchConfig, Architecture, Backend, KernelMode, SystolicArray, TilePass,
+};
 pub use column_unit::SharedColumnUnit;
 pub use dip::DipArray;
 pub use functional::{FunctionalArray, FunctionalRun};

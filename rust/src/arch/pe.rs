@@ -308,7 +308,8 @@ mod tests {
         let pe = ReconfigurablePe::new(PeConfig::default(), PrecisionMode::W8);
         assert_eq!(pe.latency(), 1);
         assert_eq!(pe.config().multipliers, 16);
-        let slow = ReconfigurablePe::new(PeConfig { multipliers: 2, mult_width: 2 }, PrecisionMode::W8);
+        let slow =
+            ReconfigurablePe::new(PeConfig { multipliers: 2, mult_width: 2 }, PrecisionMode::W8);
         assert_eq!(slow.latency(), 8);
     }
 }

@@ -326,7 +326,7 @@ impl Fabric {
                     }
                     stolen += extra as u64;
                 }
-                self.metrics.steals.fetch_add(stolen, Ordering::Relaxed);
+                self.metrics.steals.fetch_add(stolen, Ordering::Relaxed); // relaxed-ok: stat counter
                 Some(it)
             }
             None => {
@@ -337,7 +337,7 @@ impl Fabric {
                 // lock cannot race, so this is an idleness signal, not
                 // contention.
                 if !*counted_failure && !s.closed {
-                    self.metrics.steal_failures.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.steal_failures.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                     *counted_failure = true;
                 }
                 None
@@ -396,9 +396,9 @@ impl Fabric {
     }
 
     fn refresh_gauges(&self, s: &State) {
-        self.metrics.injector_depth.store(s.injector.len() as u64, Ordering::Relaxed);
+        self.metrics.injector_depth.store(s.injector.len() as u64, Ordering::Relaxed); // relaxed-ok: depth gauge
         for (w, d) in s.deques.iter().enumerate().take(MAX_DEQUE_GAUGES) {
-            self.metrics.worker_deque_depth[w].store(d.len() as u64, Ordering::Relaxed);
+            self.metrics.worker_deque_depth[w].store(d.len() as u64, Ordering::Relaxed); // relaxed-ok: depth gauge
         }
     }
 }

@@ -243,7 +243,13 @@ fn split_ranges(len: usize, array_n: usize, cores: usize) -> Vec<Range<usize>> {
 /// `cluster.effective_cores()` shards, tile-aligned and balanced along
 /// `cluster.split`. Fewer shards are produced when the split dimension has
 /// fewer tiles than cores (a 1-tile dimension cannot shard).
-pub fn partition(m: usize, k: usize, n: usize, array_n: usize, cluster: &ClusterConfig) -> Vec<ShardPlan> {
+pub fn partition(
+    m: usize,
+    k: usize,
+    n: usize,
+    array_n: usize,
+    cluster: &ClusterConfig,
+) -> Vec<ShardPlan> {
     assert!(array_n > 0, "array size must be positive");
     let cores = cluster.effective_cores();
     let make = |core: usize, rows: Range<usize>, inner: Range<usize>, cols: Range<usize>| {
@@ -297,7 +303,8 @@ mod tests {
         assert_eq!(c.kernel, KernelMode::Naive);
         assert_eq!(c.kernel_threads, 0);
         assert_eq!(ClusterConfig::with_cores(0).effective_cores(), 1);
-        let k = ClusterConfig::with_cores(2).with_kernel(KernelMode::Blocked).with_kernel_threads(3);
+        let k =
+            ClusterConfig::with_cores(2).with_kernel(KernelMode::Blocked).with_kernel_threads(3);
         assert_eq!((k.kernel, k.kernel_threads, k.cores), (KernelMode::Blocked, 3, 2));
         assert_eq!(ClusterConfig::with_cores(4).with_cache(16).cache.capacity, 16);
         assert_eq!(ClusterConfig::default().with_pool(PoolMode::PerRun).pool, PoolMode::PerRun);

@@ -182,6 +182,7 @@ impl WorkerPool {
     fn stats(&self) -> PoolStats {
         PoolStats {
             workers: self.workers,
+            // relaxed-ok: stat reads; a point-in-time report tolerates tearing
             dispatched: self.counters.dispatched.load(Ordering::Relaxed),
             queue_wait_s: self.counters.queue_wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
             worker_panics: self.counters.panics.load(Ordering::Relaxed),
@@ -221,10 +222,10 @@ fn worker_main(
         let Ok(job) = job else {
             return; // queue closed and drained: clean shutdown
         };
-        counters.dispatched.fetch_add(1, Ordering::Relaxed);
+        counters.dispatched.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         counters
             .queue_wait_ns
-            .fetch_add(job.submitted.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            .fetch_add(job.submitted.elapsed().as_nanos() as u64, Ordering::Relaxed); // relaxed-ok: stat counter
         let outcome = catch_unwind(AssertUnwindSafe(|| match &job.work {
             ShardWork::Run { a, bs, mode, runtime_interleave } => {
                 let refs: Vec<&Mat> = bs.iter().map(|b| b.as_ref()).collect();
@@ -239,7 +240,7 @@ fn worker_main(
         };
         let _ = job.reply.send(ShardDone { seq: job.seq, result });
         if panicked {
-            counters.panics.fetch_add(1, Ordering::Relaxed);
+            counters.panics.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter; pool replacement is signalled separately
             // The interrupted core may hold torn mid-run state; rebuild it
             // so the worker keeps serving subsequent shards correctly.
             core = CoreScheduler::with_config(arch, core_cfg);
@@ -600,7 +601,13 @@ impl ClusterScheduler {
                 Probe::Miss(key) => {
                     let t0 = Instant::now();
                     let res = self.exec_whole(&mut ops, mode, runtime_interleave)?;
-                    self.trace.span_since(SpanKind::Shard, self.trace_ticket, self.trace_lane, t0, 0);
+                    self.trace.span_since(
+                        SpanKind::Shard,
+                        self.trace_ticket,
+                        self.trace_lane,
+                        t0,
+                        0,
+                    );
                     self.store(key, mode, runtime_interleave, &res);
                     res
                 }
@@ -1162,7 +1169,10 @@ mod tests {
         let mut rng = Rng::seeded(65);
         let a = Mat::random(&mut rng, 32, 16, 8);
         let b = Mat::random(&mut rng, 16, 16, 2);
-        let store = SharedWeightCache::new(crate::cluster::CacheConfig { capacity: 16, ..Default::default() });
+        let store = SharedWeightCache::new(crate::cluster::CacheConfig {
+            capacity: 16,
+            ..Default::default()
+        });
         let cfg = ClusterConfig::with_cores(1).with_cache(16);
         let mut first = ClusterScheduler::with_shared_cache(
             Architecture::Adip,

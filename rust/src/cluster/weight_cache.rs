@@ -345,7 +345,7 @@ impl SharedWeightCache {
 
     /// Allocate a unique owner id for one attaching scheduler.
     pub fn register(&self) -> u64 {
-        self.next_id.fetch_add(1, Ordering::Relaxed)
+        self.next_id.fetch_add(1, Ordering::Relaxed) // relaxed-ok: id allocation: RMW uniqueness only
     }
 
     /// Global counters across every attached scheduler, aggregated over
@@ -382,7 +382,7 @@ impl SharedWeightCache {
     /// Cumulative lock acquisitions that found a shard lock held and had
     /// to wait (the store's contention signal).
     pub fn lock_waits(&self) -> u64 {
-        self.lock_waits.load(Ordering::Relaxed)
+        self.lock_waits.load(Ordering::Relaxed) // relaxed-ok: stat read
     }
 
     /// The shard a key routes to — pure function of the key, so a hit
@@ -436,7 +436,7 @@ impl SharedWeightCache {
             Ok(g) => g,
             Err(TryLockError::WouldBlock) => {
                 // contended: count the wait, then block like before
-                self.lock_waits.fetch_add(1, Ordering::Relaxed);
+                self.lock_waits.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                 shard.lock().unwrap_or_else(PoisonError::into_inner)
             }
             // Cache operations never panic mid-mutation; recover the

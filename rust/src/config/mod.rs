@@ -45,7 +45,9 @@ impl Config {
             }
             let (k, v) = line
                 .split_once('=')
-                .ok_or_else(|| anyhow!("config line {}: expected `key = value`, got {raw:?}", lineno + 1))?;
+                .ok_or_else(|| {
+                    anyhow!("config line {}: expected `key = value`, got {raw:?}", lineno + 1)
+                })?;
             let key = if section.is_empty() {
                 k.trim().to_string()
             } else {
@@ -163,7 +165,9 @@ impl Config {
 
 /// Parse `--key=value` style CLI overrides into a [`Config`]; returns the
 /// remaining positional arguments.
-pub fn parse_cli_overrides<I: IntoIterator<Item = String>>(args: I) -> Result<(Config, Vec<String>)> {
+pub fn parse_cli_overrides<I: IntoIterator<Item = String>>(
+    args: I,
+) -> Result<(Config, Vec<String>)> {
     let mut cfg = Config::new();
     let mut positional = Vec::new();
     for arg in args {

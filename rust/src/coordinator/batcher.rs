@@ -274,7 +274,14 @@ mod tests {
         }
     }
 
-    fn mk(id: u64, input_id: u64, bits: u32, act_act: bool, n_b: usize, shape: usize) -> MatmulRequest {
+    fn mk(
+        id: u64,
+        input_id: u64,
+        bits: u32,
+        act_act: bool,
+        n_b: usize,
+        shape: usize,
+    ) -> MatmulRequest {
         // deterministic shared input per (input_id, shape): same Arc is
         // required for fusion, so tests build them from a small pool
         use std::collections::HashMap;
@@ -296,7 +303,8 @@ mod tests {
     #[test]
     fn qkv_fuses_into_one_batch() {
         // three 2-bit single-B requests off the same input → one 3-matrix pass
-        let reqs = vec![mk(1, 42, 2, false, 1, 8), mk(2, 42, 2, false, 1, 8), mk(3, 42, 2, false, 1, 8)];
+        let reqs =
+            vec![mk(1, 42, 2, false, 1, 8), mk(2, 42, 2, false, 1, 8), mk(3, 42, 2, false, 1, 8)];
         let batches = form_batches(&reqs);
         assert_eq!(batches.len(), 1);
         assert_eq!(batches[0].members, vec![0, 1, 2]);

@@ -259,10 +259,10 @@ impl Client {
             request.input_id = g;
         }
         if let Err(reason) = request.validate() {
-            self.gate.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            self.gate.metrics.failed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return Err(anyhow!("invalid request: {reason}"));
         }
-        let id = self.gate.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.gate.next_id.fetch_add(1, Ordering::Relaxed); // relaxed-ok: id allocation: RMW uniqueness is all that's needed
         request.id = id;
         let (tx, rx) = std::sync::mpsc::channel();
         let now = Instant::now();
@@ -284,11 +284,11 @@ impl Client {
         // The gauge is incremented *before* the send: once the envelope
         // is in the channel the router may drain and decrement it at any
         // moment, and add-after-send could then underflow the u64 gauge.
-        m.queue_depth.fetch_add(1, Ordering::Relaxed);
+        m.queue_depth.fetch_add(1, Ordering::Relaxed); // relaxed-ok: depth gauge; incremented before send so drains never underflow
         match ingress.try_send(env) {
             Ok(()) => {
-                m.accepted.fetch_add(1, Ordering::Relaxed);
-                m.class_accepted[priority.index()].fetch_add(1, Ordering::Relaxed);
+                m.accepted.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+                m.class_accepted[priority.index()].fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                 m.trace.event(SpanKind::Submit, id, LANE_CLIENT, priority.rank() as u64);
                 Ok(Ticket {
                     id,
@@ -301,15 +301,15 @@ impl Client {
                 })
             }
             Err(TrySendError::Full(_)) => {
-                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                m.rejected.fetch_add(1, Ordering::Relaxed);
+                m.queue_depth.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: depth gauge
+                m.rejected.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                 Err(anyhow!(
                     "queue full ({} pending)",
-                    m.queue_depth.load(Ordering::Relaxed)
+                    m.queue_depth.load(Ordering::Relaxed) // relaxed-ok: gauge read for the error detail
                 ))
             }
             Err(TrySendError::Disconnected(_)) => {
-                m.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                m.queue_depth.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: depth gauge
                 Err(anyhow!("coordinator stopped"))
             }
         }
@@ -337,7 +337,12 @@ impl Client {
     /// per-member rejection handling (retry, dedupe, partial waits)
     /// should submit members individually with
     /// [`SubmitOptions::group`] instead, as `adip serve` does.
-    pub fn submit_group<I>(&self, group: u64, priority: Priority, requests: I) -> Result<Vec<Ticket>>
+    pub fn submit_group<I>(
+        &self,
+        group: u64,
+        priority: Priority,
+        requests: I,
+    ) -> Result<Vec<Ticket>>
     where
         I: IntoIterator<Item = MatmulRequest>,
     {

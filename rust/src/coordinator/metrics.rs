@@ -51,14 +51,14 @@ struct AtomicF64(AtomicU64);
 
 impl AtomicF64 {
     fn add(&self, v: f64) {
-        let mut cur = self.0.load(Ordering::Relaxed);
+        let mut cur = self.0.load(Ordering::Relaxed); // relaxed-ok: single-word CAS loop; no other memory is guarded
         loop {
             let new = f64::from_bits(cur) + v;
             match self.0.compare_exchange_weak(
                 cur,
                 new.to_bits(),
-                Ordering::Relaxed,
-                Ordering::Relaxed,
+                Ordering::Relaxed, // relaxed-ok: CAS success ordering: the word is self-contained
+                Ordering::Relaxed, // relaxed-ok: CAS failure ordering: the retry loop re-reads
             ) {
                 Ok(_) => return,
                 Err(c) => cur = c,
@@ -67,6 +67,7 @@ impl AtomicF64 {
     }
 
     fn get(&self) -> f64 {
+        // relaxed-ok: stat read of a self-contained packed word
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
 }
@@ -138,7 +139,7 @@ impl ShardedReservoir {
         let idx = SHARD.with(|s| {
             let mut v = s.get();
             if v == usize::MAX {
-                v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARDS;
+                v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARDS; // relaxed-ok: round-robin shard pick; exactness not required
                 s.set(v);
             }
             v
@@ -155,8 +156,8 @@ impl ShardedReservoir {
         let shard = self.my_shard();
         let class = sample.2 as usize;
         let slot =
-            shard.written[class].fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARD_CAP;
-        shard.slots[class][slot].store(packed, Ordering::Relaxed);
+            shard.written[class].fetch_add(1, Ordering::Relaxed) as usize % LATENCY_SHARD_CAP; // relaxed-ok: slot claim: RMW uniqueness; samples are packed single words
+        shard.slots[class][slot].store(packed, Ordering::Relaxed); // relaxed-ok: packed single-word sample; no cross-word ordering
     }
 
     /// Copy out every occupied slot. A slot whose index was reserved but
@@ -166,10 +167,10 @@ impl ShardedReservoir {
         let mut out = Vec::new();
         for shard in &self.shards {
             for class in 0..Priority::COUNT {
-                let n = (shard.written[class].load(Ordering::Relaxed) as usize)
+                let n = (shard.written[class].load(Ordering::Relaxed) as usize) // relaxed-ok: approximate snapshot bound; torn views acceptable
                     .min(LATENCY_SHARD_CAP);
                 for slot in &shard.slots[class][..n] {
-                    let v = slot.load(Ordering::Relaxed);
+                    let v = slot.load(Ordering::Relaxed); // relaxed-ok: packed single-word sample
                     if v == EMPTY_SLOT {
                         continue;
                     }
@@ -188,7 +189,7 @@ impl ShardedReservoir {
     fn occupied(&self) -> usize {
         self.shards
             .iter()
-            .filter(|sh| sh.written.iter().any(|w| w.load(Ordering::Relaxed) > 0))
+            .filter(|sh| sh.written.iter().any(|w| w.load(Ordering::Relaxed) > 0)) // relaxed-ok: approximate emptiness check
             .count()
     }
 }
@@ -328,6 +329,7 @@ pub struct Metrics {
 impl Metrics {
     /// Record request completion accounting.
     pub fn record_completion(&self, cycles: u64, energy_j: f64, memory_bytes: u64, passes: u64) {
+        // relaxed-ok: independent stat counters; cross-field tearing is fine in reports
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.sim_cycles.fetch_add(cycles, Ordering::Relaxed);
         self.memory_bytes.fetch_add(memory_bytes, Ordering::Relaxed);
@@ -339,6 +341,7 @@ impl Metrics {
     /// cluster scheduler). `shared_hits` is the subset of `hits` served
     /// from entries a sibling worker inserted into a shared store.
     pub fn record_cache(&self, hits: u64, shared_hits: u64, misses: u64, evictions: u64) {
+        // relaxed-ok: independent stat counters; cross-field tearing is fine in reports
         self.cache_hits.fetch_add(hits, Ordering::Relaxed);
         self.cache_shared_hits.fetch_add(shared_hits, Ordering::Relaxed);
         self.cache_misses.fetch_add(misses, Ordering::Relaxed);
@@ -349,6 +352,7 @@ impl Metrics {
     /// cluster scheduler): shards dispatched, seconds those shards waited
     /// in the pool queue, and worker panics survived.
     pub fn record_pool(&self, dispatched: u64, queue_wait_s: f64, panics: u64) {
+        // relaxed-ok: independent stat counters; cross-field tearing is fine in reports
         self.pool_shards_dispatched.fetch_add(dispatched, Ordering::Relaxed);
         self.pool_worker_panics.fetch_add(panics, Ordering::Relaxed);
         self.pool_queue_seconds.add(queue_wait_s);
@@ -364,7 +368,7 @@ impl Metrics {
     /// which silently fabricated a `total/1` "mean" whenever seconds had
     /// accrued with a zero denominator.)
     pub fn mean_pool_queue_seconds(&self) -> Option<f64> {
-        match self.pool_shards_dispatched.load(Ordering::Relaxed) {
+        match self.pool_shards_dispatched.load(Ordering::Relaxed) { // relaxed-ok: stat read
             0 => None,
             n => Some(self.pool_queue_seconds.get() / n as f64),
         }
@@ -394,7 +398,7 @@ impl Metrics {
     pub fn record_latency(&self, queue_s: f64, service_s: f64, class: Priority) {
         self.queue_seconds.add(queue_s);
         self.service_seconds.add(service_s);
-        self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed);
+        self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         self.class_queue_seconds[class.index()].add(queue_s);
         let sample = (queue_s as f32, service_s as f32, class.index() as u8);
         if !self.use_legacy_reservoir {
@@ -403,8 +407,10 @@ impl Metrics {
         }
         let mut guard = self.samples.try_lock().unwrap_or_else(|_| {
             // contended: count the wait, then block like before
-            self.metrics_lock_waits.fetch_add(1, Ordering::Relaxed);
-            self.samples.lock().expect("metrics lock")
+            self.metrics_lock_waits.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+            // A worker that panicked mid-record only poisons the guard,
+            // never the sample buffer itself — keep serving metrics.
+            self.samples.lock().unwrap_or_else(|e| e.into_inner())
         });
         let (buf, cursor) = &mut *guard;
         if buf.len() < Self::MAX_SAMPLES {
@@ -422,7 +428,9 @@ impl Metrics {
     /// so the two stores are observationally identical.
     fn sample_snapshot(&self) -> Vec<(f32, f32, u8)> {
         if self.use_legacy_reservoir {
-            self.samples.lock().expect("metrics lock").0.clone()
+            // Poison recovery: a panicked recorder must not take the
+            // metrics endpoint down with it.
+            self.samples.lock().unwrap_or_else(|e| e.into_inner()).0.clone()
         } else {
             self.sharded.snapshot()
         }
@@ -430,7 +438,7 @@ impl Metrics {
 
     /// Record host seconds one batch spent in the prepare stage.
     pub fn record_prepare(&self, seconds: f64) {
-        self.prepared_batches.fetch_add(1, Ordering::Relaxed);
+        self.prepared_batches.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
         self.prepare_seconds.add(seconds);
     }
 
@@ -459,7 +467,7 @@ impl Metrics {
     /// before any request of that class completed (no fabricated
     /// `total/1` means — see [`Metrics::mean_pool_queue_seconds`]).
     pub fn mean_class_queue_seconds(&self, class: Priority) -> Option<f64> {
-        match self.class_completed[class.index()].load(Ordering::Relaxed) {
+        match self.class_completed[class.index()].load(Ordering::Relaxed) { // relaxed-ok: stat read
             0 => None,
             n => Some(self.class_queue_seconds[class.index()].get() / n as f64),
         }
@@ -499,7 +507,7 @@ impl Metrics {
     /// Mean host queue wait (s) per completed request; `None` before any
     /// request completed.
     pub fn mean_queue_seconds(&self) -> Option<f64> {
-        match self.completed.load(Ordering::Relaxed) {
+        match self.completed.load(Ordering::Relaxed) { // relaxed-ok: stat read
             0 => None,
             n => Some(self.queue_seconds.get() / n as f64),
         }
@@ -508,7 +516,7 @@ impl Metrics {
     /// Mean host service time (s) per completed request; `None` before
     /// any request completed.
     pub fn mean_service_seconds(&self) -> Option<f64> {
-        match self.completed.load(Ordering::Relaxed) {
+        match self.completed.load(Ordering::Relaxed) { // relaxed-ok: stat read
             0 => None,
             n => Some(self.service_seconds.get() / n as f64),
         }
@@ -531,8 +539,8 @@ impl Metrics {
             s.push_str(&format!(
                 "  {:<12} accepted {:>5} | completed {:>5} | queue wait mean {:.3} ms | p50 {:.3} ms | p95 {:.3} ms\n",
                 class.name(),
-                self.class_accepted[i].load(Ordering::Relaxed),
-                self.class_completed[i].load(Ordering::Relaxed),
+                self.class_accepted[i].load(Ordering::Relaxed), // relaxed-ok: stat read
+                self.class_completed[i].load(Ordering::Relaxed), // relaxed-ok: stat read
                 self.mean_class_queue_seconds(class).unwrap_or(0.0) * 1e3,
                 pct(50.0) * 1e3,
                 pct(95.0) * 1e3
@@ -556,7 +564,7 @@ impl Metrics {
         // per-worker deque gauges: the first MAX_DEQUE_GAUGES workers
         // individually, plus an explicit gauge for the untracked tail so
         // dashboards can tell when depth data is missing
-        let workers = self.balance_workers.load(Ordering::Relaxed) as usize;
+        let workers = self.balance_workers.load(Ordering::Relaxed) as usize; // relaxed-ok: gauge read
         let gauged = workers.min(MAX_DEQUE_GAUGES);
         if gauged > 0 {
             head(&mut s, "worker_deque_depth", "gauge", "Balance-fabric deque depth per worker.");
@@ -564,7 +572,7 @@ impl Metrics {
                 let _ = writeln!(
                     s,
                     "adip_worker_deque_depth{{worker=\"{w}\"}} {}",
-                    self.worker_deque_depth[w].load(Ordering::Relaxed)
+                    self.worker_deque_depth[w].load(Ordering::Relaxed) // relaxed-ok: gauge read
                 );
             }
         }
@@ -638,7 +646,10 @@ impl Metrics {
     }
 
     fn render_scalar_counters(&self, s: &mut String) {
+        // One row per scalar metric; kept tabular for reviewability.
+        #[rustfmt::skip]
         let rows: [(&str, &str, &str, u64); 23] = [
+            // relaxed-ok: render-time stat reads; fields are independent
             ("requests_accepted_total", "counter", "Requests accepted into the admission queue.", self.accepted.load(Ordering::Relaxed)),
             ("requests_rejected_total", "counter", "Requests rejected by admission backpressure.", self.rejected.load(Ordering::Relaxed)),
             ("requests_completed_total", "counter", "Requests completed successfully.", self.completed.load(Ordering::Relaxed)),
@@ -671,14 +682,14 @@ impl Metrics {
             "prepared_batches_total",
             "counter",
             "Batches that went through the prepare stage.",
-            self.prepared_batches.load(Ordering::Relaxed),
+            self.prepared_batches.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
         series_u64(
             s,
             "aging_promotions_total",
             "counter",
             "Requests promoted at least one class by the aging rule.",
-            self.aging_promotions.load(Ordering::Relaxed),
+            self.aging_promotions.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
     }
 
@@ -693,16 +704,21 @@ impl Metrics {
                 s,
                 "adip_class_requests_accepted_total{{class=\"{}\"}} {}",
                 class.name(),
-                self.class_accepted[class.index()].load(Ordering::Relaxed)
+                self.class_accepted[class.index()].load(Ordering::Relaxed) // relaxed-ok: stat read
             );
         }
-        head(s, "class_requests_completed_total", "counter", "Requests completed per service class.");
+        head(
+            s,
+            "class_requests_completed_total",
+            "counter",
+            "Requests completed per service class.",
+        );
         for class in Priority::ALL {
             let _ = writeln!(
                 s,
                 "adip_class_requests_completed_total{{class=\"{}\"}} {}",
                 class.name(),
-                self.class_completed[class.index()].load(Ordering::Relaxed)
+                self.class_completed[class.index()].load(Ordering::Relaxed) // relaxed-ok: stat read
             );
         }
         let means: Vec<(Priority, f64)> = Priority::ALL
@@ -757,21 +773,21 @@ impl Metrics {
             "pool_workers",
             "gauge",
             "Persistent cluster-pool worker threads.",
-            self.pool_workers.load(Ordering::Relaxed),
+            self.pool_workers.load(Ordering::Relaxed), // relaxed-ok: gauge read
         );
         series_u64(
             s,
             "pool_shards_dispatched_total",
             "counter",
             "Shard jobs dispatched to the cluster pool.",
-            self.pool_shards_dispatched.load(Ordering::Relaxed),
+            self.pool_shards_dispatched.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
         series_u64(
             s,
             "pool_worker_panics_total",
             "counter",
             "Cluster-pool worker threads lost to panics.",
-            self.pool_worker_panics.load(Ordering::Relaxed),
+            self.pool_worker_panics.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
         series_f64(
             s,
@@ -791,7 +807,7 @@ impl Metrics {
             "metrics_lock_waits_total",
             "counter",
             "Contended acquisitions of the legacy latency-reservoir lock.",
-            self.metrics_lock_waits.load(Ordering::Relaxed),
+            self.metrics_lock_waits.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
         let (lat_shards, lat_occupied) = if self.use_legacy_reservoir {
             (0, 0)
@@ -817,21 +833,21 @@ impl Metrics {
             "weight_cache_lock_waits_total",
             "counter",
             "Contended acquisitions of weight-cache shard locks.",
-            self.cache_lock_waits.load(Ordering::Relaxed),
+            self.cache_lock_waits.load(Ordering::Relaxed), // relaxed-ok: stat read
         );
         series_u64(
             s,
             "weight_cache_shards",
             "gauge",
             "Weight-cache shards (0 for an unsharded cache).",
-            self.cache_shards.load(Ordering::Relaxed),
+            self.cache_shards.load(Ordering::Relaxed), // relaxed-ok: gauge read
         );
         series_u64(
             s,
             "weight_cache_shards_occupied",
             "gauge",
             "Weight-cache shards holding at least one entry.",
-            self.cache_shards_occupied.load(Ordering::Relaxed),
+            self.cache_shards_occupied.load(Ordering::Relaxed), // relaxed-ok: gauge read
         );
     }
 }
@@ -1274,5 +1290,24 @@ mod tests {
         }
         assert!((m.energy_j() - 4.0).abs() < 1e-9);
         assert_eq!(m.completed.load(Ordering::Relaxed), 4000);
+    }
+    /// Regression: a thread that panics while holding the legacy sample
+    /// reservoir must not wedge every later recorder/reader (the lock is
+    /// recovered via `into_inner`, not unwrapped).
+    #[test]
+    fn poisoned_legacy_reservoir_keeps_recording() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::legacy());
+        m.record_latency(0.1, 0.2, Priority::Batch);
+        let poisoner = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.samples.lock().unwrap();
+            panic!("poison the reservoir lock");
+        })
+        .join();
+        assert!(m.samples.lock().is_err(), "precondition: lock is poisoned");
+        m.record_latency(0.3, 0.4, Priority::Batch);
+        assert_eq!(m.sample_snapshot().len(), 2, "recording survived the poison");
+        assert!(m.queue_percentile(50.0).is_some());
     }
 }

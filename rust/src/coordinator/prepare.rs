@@ -48,8 +48,8 @@ pub(crate) fn honor_cancel(
     lane: u32,
     aux: u64,
 ) {
-    metrics.cancelled.fetch_add(1, Ordering::Relaxed);
-    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    metrics.cancelled.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+    metrics.failed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
     metrics.trace.event(SpanKind::Cancel, env.req.id, lane, aux);
     let _ = env.reply.send(RequestOutcome {
         id: env.req.id,
@@ -275,7 +275,7 @@ pub(crate) fn prepare_loop(
         let prepared = prepare_batch(work, owner, cache_enabled, &metrics);
         // counted before the (possibly blocking) push: a prepared batch
         // waiting for fabric room is exactly "prepared ahead of execution"
-        metrics.prepared_depth.fetch_add(1, Ordering::Relaxed);
+        metrics.prepared_depth.fetch_add(1, Ordering::Relaxed); // relaxed-ok: depth gauge; report-only
         fabric.push(owner, WorkMsg::Prepared(prepared));
     }
 }

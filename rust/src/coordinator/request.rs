@@ -305,7 +305,11 @@ mod tests {
         // weight_bits = 1 maps to the 2-bit mode: BitNet ternary {-1,0,1}
         // must pass even though +1 does not fit a 1-bit signed field
         let mut r = req(1);
-        r.bs[0] = Arc::new(Mat::from_vec(4, 4, vec![-1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, 0]));
+        r.bs[0] = Arc::new(Mat::from_vec(
+            4,
+            4,
+            vec![-1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, -1, 0, 1, 0],
+        ));
         assert!(r.validate().is_ok());
         // ... but -3 exceeds even the 2-bit mode range
         let mut r = req(1);
@@ -332,7 +336,10 @@ mod tests {
         assert_eq!(RequestError::Execution("boom".into()).to_string(), "boom");
         assert_eq!(RequestError::Cancelled.to_string(), "cancelled");
         assert_eq!(RequestError::Shutdown.to_string(), "coordinator stopped");
-        assert_eq!(RequestError::Validation("no weight matrices".into()).to_string(), "invalid request: no weight matrices");
+        assert_eq!(
+            RequestError::Validation("no weight matrices".into()).to_string(),
+            "invalid request: no weight matrices"
+        );
     }
 
     #[test]

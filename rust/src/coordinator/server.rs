@@ -253,7 +253,7 @@ impl Coordinator {
         if cfg.cluster.pool == PoolMode::Persistent && cfg.cluster.effective_cores() > 1 {
             metrics
                 .pool_workers
-                .store((cfg.workers * cfg.cluster.effective_cores()) as u64, Ordering::Relaxed);
+                .store((cfg.workers * cfg.cluster.effective_cores()) as u64, Ordering::Relaxed); // relaxed-ok: capacity gauge, set once at startup
         }
         // One weight-cache store per coordinator (the promoted cross-worker
         // design): sibling workers reuse each other's projection tiles.
@@ -277,7 +277,7 @@ impl Coordinator {
         // individually and reports the rest via
         // `adip_worker_deque_gauges_truncated` instead of silently
         // dropping them
-        metrics.balance_workers.store(cfg.workers as u64, Ordering::Relaxed);
+        metrics.balance_workers.store(cfg.workers as u64, Ordering::Relaxed); // relaxed-ok: worker-count gauge, set once at startup
 
         let mut stage_txs = Vec::new();
         let mut preparers = Vec::new();
@@ -418,7 +418,7 @@ fn router_loop(
                 Err(_) => break,
             }
         }
-        metrics.queue_depth.fetch_sub(window.len() as u64, Ordering::Relaxed);
+        metrics.queue_depth.fetch_sub(window.len() as u64, Ordering::Relaxed); // relaxed-ok: depth gauge
 
         // Cancellation boundary: requests cancelled while waiting in the
         // ingress queue fail here, before a lane or plan is built around
@@ -500,12 +500,12 @@ fn router_loop(
                             lane.priority = Priority::Background;
                             lane.age_us = 0;
                             env.priority = Priority::Background;
-                            metrics.deadline_demotions.fetch_add(1, Ordering::Relaxed);
+                            metrics.deadline_demotions.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                             metrics.trace.event(SpanKind::Demote, env.req.id, LANE_ROUTER, 0);
                         }
                         ShedVerdict::Shed => {
-                            metrics.shed.fetch_add(1, Ordering::Relaxed);
-                            metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            metrics.shed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+                            metrics.failed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                             metrics.trace.event(SpanKind::Shed, env.req.id, LANE_ROUTER, 0);
                             let _ = env.reply.send(RequestOutcome {
                                 id: env.req.id,
@@ -538,7 +538,7 @@ fn router_loop(
         let reqs: Vec<MatmulRequest> = window.iter().map(|e| e.req.clone()).collect();
         let plan = plan_batches(&reqs, &lanes, aging_us);
         if plan.promotions > 0 {
-            metrics.aging_promotions.fetch_add(plan.promotions, Ordering::Relaxed);
+            metrics.aging_promotions.fetch_add(plan.promotions, Ordering::Relaxed); // relaxed-ok: stat counter
             for &idx in &plan.promoted {
                 metrics.trace.event(SpanKind::Promote, reqs[idx].id, LANE_ROUTER, 0);
             }
@@ -549,9 +549,9 @@ fn router_loop(
         for b in plan.batches {
             let envelopes: Vec<Envelope> =
                 b.members.iter().map(|&i| slots[i].take().expect("batch partition")).collect();
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batches.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             if envelopes.len() > 1 || envelopes[0].req.bs.len() > 1 {
-                metrics.fused_batches.fetch_add(1, Ordering::Relaxed);
+                metrics.fused_batches.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             }
             for env in &envelopes {
                 // queue span: admission → batch formation; the formation
@@ -615,7 +615,7 @@ fn worker_loop(
     core.set_trace(metrics.trace.clone(), lane_worker(w));
     let cache_enabled = cfg.cluster.cache.enabled();
     if cache_enabled {
-        metrics.cache_shards.store(cache_handle.shard_count() as u64, Ordering::Relaxed);
+        metrics.cache_shards.store(cache_handle.shard_count() as u64, Ordering::Relaxed); // relaxed-ok: shard-count gauge, set once
     }
     let mut cache_seen = core.cache_stats();
     let mut pool_seen = core.pool_stats();
@@ -625,7 +625,7 @@ fn worker_loop(
             .into_iter()
             .map(|msg| match msg {
                 WorkMsg::Prepared(p) => {
-                    metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed);
+                    metrics.prepared_depth.fetch_sub(1, Ordering::Relaxed); // relaxed-ok: depth gauge
                     p
                 }
                 // inline mode: the prepare work runs here, serialized with
@@ -674,7 +674,12 @@ fn worker_loop(
             metrics.trace.event(SpanKind::Coalesce, leader, lane_worker(w), prepared.len() as u64);
             for item in &prepared[1..] {
                 for env in &item.envelopes {
-                    metrics.trace.event(SpanKind::CoalesceMember, env.req.id, lane_worker(w), leader);
+                    metrics.trace.event(
+                        SpanKind::CoalesceMember,
+                        env.req.id,
+                        lane_worker(w),
+                        leader,
+                    );
                 }
             }
         }
@@ -709,10 +714,10 @@ fn worker_loop(
         if cache_enabled {
             metrics
                 .cache_lock_waits
-                .store(cache_handle.lock_waits(), Ordering::Relaxed);
+                .store(cache_handle.lock_waits(), Ordering::Relaxed); // relaxed-ok: stat mirror, refreshed per batch
             metrics
                 .cache_shards_occupied
-                .store(cache_handle.occupied_shards() as u64, Ordering::Relaxed);
+                .store(cache_handle.occupied_shards() as u64, Ordering::Relaxed); // relaxed-ok: stat mirror, refreshed per batch
         }
         let pool_now = core.pool_stats();
         let pd = pool_now.delta_since(&pool_seen);
@@ -785,7 +790,7 @@ fn worker_loop(
                 }
                 Err(e) => {
                     for env in &item.envelopes {
-                        metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        metrics.failed.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
                         let _ = env.reply.send(RequestOutcome {
                             id: env.req.id,
                             result: Err(e.clone()),
@@ -853,8 +858,8 @@ fn execute_coalesced(
     });
     match core.run_gemm_set_prepared(&a_cat, &bs, mode, false, fps.as_ref()) {
         Ok(run) => {
-            metrics.coalesced_passes.fetch_add(1, Ordering::Relaxed);
-            metrics.coalesced_members.fetch_add(items.len() as u64, Ordering::Relaxed);
+            metrics.coalesced_passes.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+            metrics.coalesced_members.fetch_add(items.len() as u64, Ordering::Relaxed); // relaxed-ok: stat counter
             let t_split = Instant::now();
             let parts = split_back(&run.result, &member_rows);
             metrics.trace.span_since(
@@ -894,7 +899,13 @@ mod tests {
     use crate::testutil::Rng;
 
     fn cfg() -> CoordinatorConfig {
-        CoordinatorConfig { n: 8, workers: 2, queue_capacity: 64, batch_window: 8, ..Default::default() }
+        CoordinatorConfig {
+            n: 8,
+            workers: 2,
+            queue_capacity: 64,
+            batch_window: 8,
+            ..Default::default()
+        }
     }
 
     fn request(rng: &mut Rng, input_id: u64, bits: u32) -> MatmulRequest {

@@ -132,7 +132,11 @@ impl Mat {
     /// Reference GEMM: `self (m×k) · other (k×n)` in `i32`. The correctness
     /// oracle every hardware model is tested against.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.cols, other.rows, "inner dims: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            self.cols, other.rows,
+            "inner dims: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
         let mut out = Mat::zeros(self.rows, other.cols);
         for i in 0..self.rows {
             for kk in 0..self.cols {
@@ -160,7 +164,11 @@ impl Mat {
     /// `KernelMode::Blocked` serving kernel; [`Mat::matmul`] remains the
     /// reference oracle and differential baseline.
     pub fn matmul_blocked(&self, other: &Mat, threads: usize) -> Mat {
-        assert_eq!(self.cols, other.rows, "inner dims: {}x{} · {}x{}", self.rows, self.cols, other.rows, other.cols);
+        assert_eq!(
+            self.cols, other.rows,
+            "inner dims: {}x{} · {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut data = vec![0i32; m * n];
         if m == 0 || k == 0 || n == 0 {

@@ -49,10 +49,16 @@
 //!   (`artifacts/*.hlo.txt`) from the request path.
 //! * [`report`] — regenerates every table and figure of the paper’s
 //!   evaluation as text/CSV.
+//! * [`analysis`] — the `adip lint` static analysis pass: repo-invariant
+//!   rules (atomic-ordering justification, lock-poison policy, deprecated
+//!   shim containment, wire-codec sync, backend differential registry)
+//!   over a std-only comment/string-aware scanner. CI runs it blocking
+//!   with `--deny-all=true`.
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+pub mod analysis;
 pub mod analytical;
 pub mod arch;
 pub mod balance;

@@ -10,6 +10,7 @@
 //! adip serve [--requests=64] [--workers=2] [--n=16] [--queue=256]
 //! adip net-serve [--listen=127.0.0.1:0] [--self-test=true]
 //! adip artifacts [--dir=artifacts]                     PJRT runtime self-test
+//! adip lint [--path=rust] [--deny-all=true] [--json=FILE]
 //! ```
 //!
 //! Flags are `--key=value`; `--config=FILE` layers a key=value config file
@@ -72,6 +73,7 @@ fn run() -> Result<()> {
         "net-serve" => cmd_net_serve(&cfg)?,
         "trace" => cmd_trace(&cfg)?,
         "artifacts" => cmd_artifacts(&cfg)?,
+        "lint" => cmd_lint(&cfg)?,
         "help" | "--help" | "-h" => print!("{}", HELP),
         other => bail!("unknown command {other:?}\n{HELP}"),
     }
@@ -98,6 +100,11 @@ commands:
                    rust/src/net/mod.rs for the wire protocol.
   trace            trace-driven serving (--model/--layers/--rate/--workers/--backend/--invocations)
   artifacts        PJRT runtime self-test (--dir=artifacts)
+  lint             repo-invariant static analysis over --path=DIR (default
+                   rust). --deny-all=true promotes warnings to errors (the
+                   CI gate); --json=FILE writes the machine-readable report.
+                   Exits nonzero on violations. Rules and annotation
+                   conventions: rust/src/analysis/mod.rs
   help             this text
 
 backends (--backend=functional|cycle):
@@ -365,7 +372,11 @@ fn cmd_cluster(cfg: &Config) -> Result<()> {
         "GEMM {m}x{k}x{ncols} on {arch} {n}x{n} ({mode}, {backend}) | cluster: {} cores, {}-split, cache {}, {} pool",
         cluster.effective_cores(),
         cluster.split,
-        if cluster.cache.enabled() { format!("{} entries", cluster.cache.capacity) } else { "off".into() },
+        if cluster.cache.enabled() {
+            format!("{} entries", cluster.cache.capacity)
+        } else {
+            "off".into()
+        },
         cluster.pool,
     );
     let mut first_cycles = 0u64;
@@ -705,7 +716,11 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         xs.sort_by(f64::total_cmp);
         let at = |p: f64| xs[((p / 100.0) * (xs.len() - 1) as f64).round() as usize] * 1e3;
         let mean = xs.iter().sum::<f64>() / xs.len() as f64 * 1e3;
-        println!("  {name:<8} mean {mean:>8.3} ms | p50 {:>8.3} ms | p99 {:>8.3} ms", at(50.0), at(99.0));
+        println!(
+            "  {name:<8} mean {mean:>8.3} ms | p50 {:>8.3} ms | p99 {:>8.3} ms",
+            at(50.0),
+            at(99.0)
+        );
     };
     println!("stage timings (per request):");
     stage("queue", |r| r.queue_seconds);
@@ -714,36 +729,36 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
     stage("execute", |r| r.execute_seconds);
     println!(
         "fused batches: {} / {}",
-        m.fused_batches.load(std::sync::atomic::Ordering::Relaxed),
-        m.batches.load(std::sync::atomic::Ordering::Relaxed)
+        m.fused_batches.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.batches.load(std::sync::atomic::Ordering::Relaxed) // relaxed-ok: stat read
     );
     println!(
         "weight cache:  {} hits ({} cross-worker) / {} misses / {} evictions",
-        m.cache_hits.load(std::sync::atomic::Ordering::Relaxed),
-        m.cache_shared_hits.load(std::sync::atomic::Ordering::Relaxed),
-        m.cache_misses.load(std::sync::atomic::Ordering::Relaxed),
-        m.cache_evictions.load(std::sync::atomic::Ordering::Relaxed)
+        m.cache_hits.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.cache_shared_hits.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.cache_misses.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.cache_evictions.load(std::sync::atomic::Ordering::Relaxed) // relaxed-ok: stat read
     );
     println!(
         "cluster pool:  {} workers | {} shards dispatched | queue wait mean {:.1} µs",
-        m.pool_workers.load(std::sync::atomic::Ordering::Relaxed),
-        m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed),
+        m.pool_workers.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.pool_shards_dispatched.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
         m.mean_pool_queue_seconds().unwrap_or(0.0) * 1e6
     );
     println!(
         "prepare:       {} batches prepared | {:.3} ms total | {} aging promotions",
-        m.prepared_batches.load(std::sync::atomic::Ordering::Relaxed),
+        m.prepared_batches.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
         m.prepare_seconds_total() * 1e3,
-        m.aging_promotions.load(std::sync::atomic::Ordering::Relaxed)
+        m.aging_promotions.load(std::sync::atomic::Ordering::Relaxed) // relaxed-ok: stat read
     );
     println!(
         "balance:       {} steals ({} empty idle scans) | {} coalesced passes ({} members) | {} shed | {} demoted",
-        m.steals.load(std::sync::atomic::Ordering::Relaxed),
-        m.steal_failures.load(std::sync::atomic::Ordering::Relaxed),
-        m.coalesced_passes.load(std::sync::atomic::Ordering::Relaxed),
-        m.coalesced_members.load(std::sync::atomic::Ordering::Relaxed),
-        m.shed.load(std::sync::atomic::Ordering::Relaxed),
-        m.deadline_demotions.load(std::sync::atomic::Ordering::Relaxed)
+        m.steals.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.steal_failures.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.coalesced_passes.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.coalesced_members.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.shed.load(std::sync::atomic::Ordering::Relaxed), // relaxed-ok: stat read
+        m.deadline_demotions.load(std::sync::atomic::Ordering::Relaxed) // relaxed-ok: stat read
     );
     coord.shutdown();
     if let Some(path) = cfg.get("trace-out") {
@@ -782,6 +797,24 @@ fn cmd_artifacts(cfg: &Config) -> Result<()> {
             anyhow::ensure!(got == a.matmul(b), "{name}[{s}]: PJRT output != rust reference");
         }
         println!("  {name}: OK ({k} outputs match rust reference GEMM)");
+    }
+    Ok(())
+}
+
+/// `adip lint`: run the repo-invariant static analysis pass and exit
+/// nonzero on violations (the CI gate runs this with --deny-all=true).
+fn cmd_lint(cfg: &Config) -> Result<()> {
+    let root = cfg.get("path").unwrap_or("rust");
+    let deny_all = cfg.get_bool("deny-all", false)?;
+    let report = adip::analysis::run_lint(std::path::Path::new(root))
+        .map_err(|e| anyhow!("lint scan of {root:?} failed: {e}"))?;
+    if let Some(path) = cfg.get("json") {
+        std::fs::write(path, report.render_json(deny_all))
+            .map_err(|e| anyhow!("writing {path:?}: {e}"))?;
+    }
+    print!("{}", report.render_human(deny_all));
+    if !report.is_clean(deny_all) {
+        bail!("adip lint found violations (annotation conventions: rust/src/analysis/mod.rs)");
     }
     Ok(())
 }

@@ -152,7 +152,14 @@ fn session(
         Err(_) => return,
     };
     let mut reader = FrameReader::new(reader_stream);
-    let mut s = Session { out: stream, client, metrics, stop: stop.clone(), drain, tickets: HashMap::new() };
+    let mut s = Session {
+        out: stream,
+        client,
+        metrics,
+        stop: stop.clone(),
+        drain,
+        tickets: HashMap::new(),
+    };
     loop {
         if stop.load(Ordering::Acquire) {
             return;

@@ -315,7 +315,7 @@ fn my_shard(n: usize) -> usize {
     SHARD.with(|s| {
         let mut v = s.get();
         if v == usize::MAX {
-            v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize;
+            v = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) as usize; // relaxed-ok: round-robin shard pick; exactness not required
             s.set(v);
         }
         v % n
@@ -340,20 +340,22 @@ impl Recorder {
         self.inner.epoch.get_or_init(Instant::now);
         self.inner
             .shards
-            .get_or_init(|| (0..OBS_SHARDS).map(|_| Shard::with_capacity(slots_per_shard)).collect());
+            .get_or_init(|| {
+                (0..OBS_SHARDS).map(|_| Shard::with_capacity(slots_per_shard)).collect()
+            });
         self.inner.mode.store(mode.word(), Ordering::Release);
     }
 
     /// The current mode.
     pub fn mode(&self) -> TraceMode {
-        TraceMode::from_word(self.inner.mode.load(Ordering::Relaxed))
+        TraceMode::from_word(self.inner.mode.load(Ordering::Relaxed)) // relaxed-ok: mode word is self-contained; rings were published by enable()'s Release
     }
 
     /// Whether records for `ticket` are being kept. **The** disabled
     /// fast path: one relaxed load plus a branch.
     #[inline]
     pub fn enabled_for(&self, ticket: u64) -> bool {
-        match self.inner.mode.load(Ordering::Relaxed) {
+        match self.inner.mode.load(Ordering::Relaxed) { // relaxed-ok: mode word is self-contained (the disabled fast path)
             0 => false,
             1 => true,
             n => ticket % n == 0,
@@ -405,13 +407,14 @@ impl Recorder {
     fn record(&self, kind: SpanKind, ticket: u64, lane: u32, start_ns: u64, dur_ns: u64, aux: u64) {
         let Some(shards) = self.inner.shards.get() else { return };
         let shard = &shards[my_shard(shards.len())];
-        let idx = shard.claimed.fetch_add(1, Ordering::Relaxed) as usize;
+        let idx = shard.claimed.fetch_add(1, Ordering::Relaxed) as usize; // relaxed-ok: slot claim: RMW uniqueness; publication is the header Release below
         if idx >= shard.slots.len() {
-            self.inner.dropped.fetch_add(1, Ordering::Relaxed);
+            self.inner.dropped.fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
             return;
         }
-        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed);
+        let seq = self.inner.seq.fetch_add(1, Ordering::Relaxed); // relaxed-ok: seq allocation: RMW uniqueness; ordering comes from the header publish
         let slot = &shard.slots[idx];
+        // relaxed-ok: payload words; the header Release store below publishes them
         slot.ticket.store(ticket, Ordering::Relaxed);
         slot.start_ns.store(start_ns, Ordering::Relaxed);
         slot.dur_ns.store(dur_ns, Ordering::Relaxed);
@@ -421,7 +424,7 @@ impl Recorder {
 
     /// Events lost to full rings.
     pub fn dropped(&self) -> u64 {
-        self.inner.dropped.load(Ordering::Relaxed)
+        self.inner.dropped.load(Ordering::Relaxed) // relaxed-ok: stat read
     }
 
     /// Decode every published record, sorted by `(start_ns, seq)`. Safe
@@ -432,7 +435,7 @@ impl Recorder {
         let Some(shards) = self.inner.shards.get() else { return Vec::new() };
         let mut out = Vec::new();
         for shard in shards {
-            let n = (shard.claimed.load(Ordering::Relaxed) as usize).min(shard.slots.len());
+            let n = (shard.claimed.load(Ordering::Relaxed) as usize).min(shard.slots.len()); // relaxed-ok: claimed bound; unpublished slots are filtered by the header Acquire
             for slot in &shard.slots[..n] {
                 let header = slot.header.load(Ordering::Acquire);
                 if header == 0 {
@@ -440,12 +443,12 @@ impl Recorder {
                 }
                 let Some(kind) = SpanKind::from_u8((header & 0xff) as u8) else { continue };
                 out.push(SpanRecord {
-                    ticket: slot.ticket.load(Ordering::Relaxed),
+                    ticket: slot.ticket.load(Ordering::Relaxed), // relaxed-ok: payload word; ordered by the header Acquire above
                     kind,
                     worker: ((header >> 8) & 0xffff) as u32,
-                    start_ns: slot.start_ns.load(Ordering::Relaxed),
-                    dur_ns: slot.dur_ns.load(Ordering::Relaxed),
-                    aux: slot.aux.load(Ordering::Relaxed),
+                    start_ns: slot.start_ns.load(Ordering::Relaxed), // relaxed-ok: payload word; ordered by the header Acquire above
+                    dur_ns: slot.dur_ns.load(Ordering::Relaxed), // relaxed-ok: payload word; ordered by the header Acquire above
+                    aux: slot.aux.load(Ordering::Relaxed), // relaxed-ok: payload word; ordered by the header Acquire above
                     seq: (header >> 24) - 1,
                 });
             }

@@ -36,7 +36,8 @@ pub fn fig2() -> Rendered {
 
 /// Fig. 4 — ADiP latency and throughput across array sizes.
 pub fn fig4() -> Rendered {
-    let mut t = TextTable::new(["N", "mode", "latency (cycles)", "throughput (ops/cycle)", "TOPS @ 1 GHz"]);
+    let mut t =
+        TextTable::new(["N", "mode", "latency (cycles)", "throughput (ops/cycle)", "TOPS @ 1 GHz"]);
     for r in fig4_series() {
         t.row([
             r.n.to_string(),

@@ -55,7 +55,11 @@ impl Default for TraceConfig {
 /// Generate the attention request trace of `model` under `cfg`. The
 /// weight precision follows the model (GPT-2 8-bit, BERT 4-bit, BitNet
 /// 2-bit); activation-to-activation requests are always 8-bit.
-pub fn attention_trace(model: &TransformerModel, cfg: &TraceConfig, seed: u64) -> Vec<TracedRequest> {
+pub fn attention_trace(
+    model: &TransformerModel,
+    cfg: &TraceConfig,
+    seed: u64,
+) -> Vec<TracedRequest> {
     let mut rng = Rng::seeded(seed);
     let bits = model.weight_mode.weight_bits();
     let mut out = Vec::new();
@@ -205,12 +209,12 @@ mod tests {
 
     #[test]
     fn weight_mode_follows_model() {
-        let t8 = attention_trace(&gpt2_medium(), &TraceConfig { layers: 1, ..Default::default() }, 4);
+        let t8 =
+            attention_trace(&gpt2_medium(), &TraceConfig { layers: 1, ..Default::default() }, 4);
         assert_eq!(t8[0].request.weight_bits, PrecisionMode::W8.weight_bits());
-        assert!(attention_trace(&bitnet_1_58b(), &TraceConfig { layers: 1, ..Default::default() }, 4)
-            .iter()
-            .filter(|t| !t.request.act_act)
-            .all(|t| t.request.weight_bits == 2));
+        let tern =
+            attention_trace(&bitnet_1_58b(), &TraceConfig { layers: 1, ..Default::default() }, 4);
+        assert!(tern.iter().filter(|t| !t.request.act_act).all(|t| t.request.weight_bits == 2));
     }
 
     #[test]

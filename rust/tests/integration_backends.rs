@@ -210,7 +210,8 @@ fn functional_matches_estimate_at_scale() {
     let mut rng = Rng::seeded(4007);
     let a = Mat::random(&mut rng, 192, 128, 8);
     for (mode, s) in [(PrecisionMode::W8, 1), (PrecisionMode::W4, 2), (PrecisionMode::W2, 3)] {
-        let bs: Vec<Mat> = (0..s).map(|_| Mat::random(&mut rng, 128, 160, mode.weight_bits())).collect();
+        let bs: Vec<Mat> =
+            (0..s).map(|_| Mat::random(&mut rng, 128, 160, mode.weight_bits())).collect();
         let refs: Vec<&Mat> = bs.iter().collect();
         for arch in Architecture::ALL {
             let mut sim = cosim(arch, 32, Backend::Functional);

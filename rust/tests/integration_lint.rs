@@ -1,0 +1,119 @@
+//! `adip lint` end-to-end: the seeded-violation fixture corpus fires
+//! every rule at exact (rule, file, line) coordinates, the real tree is
+//! clean under `--deny-all`, and the CLI exit codes / JSON artifact
+//! behave as CI relies on.
+
+use adip::analysis::{run_lint, rules::RuleId};
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf()
+}
+
+fn fixtures() -> PathBuf {
+    repo_root().join("rust/tests/lint_fixtures")
+}
+
+#[test]
+fn fixture_corpus_fires_every_rule_at_exact_spans() {
+    let report = run_lint(&fixtures()).expect("scan fixtures");
+    let got: Vec<(String, String, usize)> = report
+        .violations
+        .iter()
+        .map(|v| (v.rule.as_str().to_string(), v.file.clone(), v.line))
+        .collect();
+    let want = [
+        ("atomic-ordering-justified", "src/atomics_bad.rs", 5),
+        ("atomic-ordering-justified", "src/atomics_bad.rs", 6),
+        ("atomic-ordering-justified", "src/atomics_bad.rs", 7),
+        ("lint-annotation", "src/atomics_bad.rs", 7),
+        ("backend-differential-registry", "src/backend.rs", 5),
+        ("no-deprecated-internal", "src/deprecated_bad.rs", 4),
+        ("no-deprecated-internal", "src/deprecated_bad.rs", 5),
+        ("lock-poison-policy", "src/locks_bad.rs", 5),
+        ("lock-poison-policy", "src/locks_bad.rs", 6),
+        ("lock-poison-policy", "src/locks_bad.rs", 8),
+        ("lint-annotation", "src/suppressions.rs", 9),
+        ("wire-opcode-sync", "src/wire.rs", 4),
+        ("wire-opcode-sync", "src/wire.rs", 24),
+    ];
+    let want: Vec<(String, String, usize)> =
+        want.iter().map(|(r, f, l)| (r.to_string(), f.to_string(), *l)).collect();
+    assert_eq!(got, want, "full violation list mismatch:\n{:#?}", report.violations);
+
+    // The applied suppression is recorded with its audit reason…
+    assert_eq!(report.suppressed.len(), 1, "{:?}", report.suppressed);
+    let s = &report.suppressed[0];
+    let got = (s.rule, s.file.as_str(), s.line);
+    assert_eq!(got, (RuleId::LockPoisonPolicy, "src/suppressions.rs", 6));
+    assert!(s.reason.contains("provably unpoisoned"));
+
+    // …and the stale annotation + unused suppression surface as warnings.
+    let warns: Vec<(String, usize)> =
+        report.warnings.iter().map(|w| (w.file.clone(), w.line)).collect();
+    assert_eq!(
+        warns,
+        vec![("src/atomics_bad.rs".to_string(), 9), ("src/suppressions.rs".to_string(), 10)],
+        "{:#?}",
+        report.warnings
+    );
+    assert!(report.warnings.iter().all(|w| w.rule == RuleId::LintAnnotation));
+
+    assert!(!report.is_clean(false));
+}
+
+#[test]
+fn real_tree_is_clean_under_deny_all() {
+    let report = run_lint(&repo_root().join("rust")).expect("scan tree");
+    assert!(report.files_scanned > 40, "walker found only {} files", report.files_scanned);
+    assert_eq!(report.violations, vec![], "tree must lint clean");
+    assert_eq!(report.warnings, vec![], "no stale annotations/suppressions allowed");
+    assert!(report.is_clean(true));
+}
+
+#[test]
+fn fixture_dir_is_never_swept_into_a_tree_scan() {
+    let report = run_lint(&repo_root().join("rust")).expect("scan tree");
+    assert!(
+        !report.violations.iter().any(|v| v.file.contains("lint_fixtures")),
+        "lint_fixtures/ must be skipped by the walker"
+    );
+}
+
+#[test]
+fn cli_exits_nonzero_on_fixtures_and_writes_json() {
+    let json_path = std::env::temp_dir().join(format!("adip_lint_{}.json", std::process::id()));
+    let out = Command::new(env!("CARGO_BIN_EXE_adip"))
+        .arg("lint")
+        .arg(format!("--path={}", fixtures().display()))
+        .arg(format!("--json={}", json_path.display()))
+        .output()
+        .expect("run adip lint");
+    assert!(!out.status.success(), "seeded violations must fail the CLI");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[atomic-ordering-justified]"), "{stdout}");
+    assert!(stdout.contains("FAILED"), "{stdout}");
+
+    let json = std::fs::read_to_string(&json_path).expect("JSON artifact written");
+    let _ = std::fs::remove_file(&json_path);
+    assert!(json.contains("\"clean\": false"), "{json}");
+    assert!(json.contains("\"rule\": \"wire-opcode-sync\""), "{json}");
+    assert!(json.contains("\"file\": \"src/locks_bad.rs\""), "{json}");
+}
+
+#[test]
+fn cli_passes_deny_all_on_the_real_tree() {
+    let out = Command::new(env!("CARGO_BIN_EXE_adip"))
+        .arg("lint")
+        .arg(format!("--path={}", repo_root().join("rust").display()))
+        .arg("--deny-all=true")
+        .output()
+        .expect("run adip lint");
+    assert!(
+        out.status.success(),
+        "deny-all lint of the tree failed:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    assert!(String::from_utf8_lossy(&out.stdout).contains("clean"));
+}

@@ -4,7 +4,9 @@
 
 use adip::analytical::gemm::{estimate_gemm, MemoryPolicy};
 use adip::analytical::GemmShape;
-use adip::arch::{build_array, AdipArray, ArchConfig, Architecture, DipArray, SystolicArray, WsArray};
+use adip::arch::{
+    build_array, AdipArray, ArchConfig, Architecture, DipArray, SystolicArray, WsArray,
+};
 use adip::dataflow::{interleave_tiles, Mat};
 use adip::quant::PrecisionMode;
 use adip::sim::{evaluate_model, CoSim, SimConfig};

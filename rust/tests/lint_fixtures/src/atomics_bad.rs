@@ -1,0 +1,10 @@
+//! Seeded violations for `atomic-ordering-justified`.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn bad(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+    c.store(0, Ordering::SeqCst);
+    c.fetch_add(2, Ordering::Relaxed); // relaxed-ok:
+}
+// relaxed-ok: nothing below justifies anything
+pub fn tail() {}

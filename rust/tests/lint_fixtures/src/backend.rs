@@ -1,0 +1,8 @@
+//! Backend-registry fixture: a dispatch site with no registry entry.
+
+pub fn pick(b: Backend) -> u32 {
+    match b {
+        Backend::Functional => 0,
+        Backend::Cycle => 1,
+    }
+}

@@ -1,0 +1,6 @@
+//! Seeded violations for `no-deprecated-internal`.
+
+pub fn caller(coord: &Coordinator) {
+    #[allow(deprecated)]
+    let _ = coord.try_submit(make_req());
+}

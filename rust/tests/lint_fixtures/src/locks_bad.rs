@@ -1,0 +1,12 @@
+//! Seeded violations for `lock-poison-policy`.
+use std::sync::{Mutex, PoisonError, RwLock};
+
+pub fn bad(m: &Mutex<u32>, l: &RwLock<u32>) -> u32 {
+    let a = *m.lock().unwrap();
+    let b = *l.read().expect("reader");
+    let c = *m
+        .lock()
+        .unwrap();
+    let d = *m.lock().unwrap_or_else(PoisonError::into_inner);
+    a + b + c + d
+}

@@ -1,0 +1,11 @@
+//! Suppression grammar fixtures: one applied, one unknown rule, one unused.
+use std::sync::Mutex;
+
+pub fn allowed(m: &Mutex<u32>) -> u32 {
+    // lint: allow(lock-poison-policy) fixture: guard provably unpoisoned
+    *m.lock().unwrap()
+}
+
+// lint: allow(not-a-rule) bogus
+// lint: allow(wire-opcode-sync) nothing here to suppress
+pub fn tail() {}

@@ -1,0 +1,30 @@
+//! Wire-sync fixture: `Pong` has no decode arm, so the `Frame` enum,
+//! the opcode table and the decode dispatch are out of sync.
+const OP_PING: u8 = 0x01;
+const OP_PONG: u8 = 0x81;
+
+pub enum Frame {
+    Ping(u64),
+    Pong(u64),
+}
+
+impl Frame {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Frame::Ping(_) => OP_PING,
+            Frame::Pong(_) => OP_PONG,
+        }
+    }
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Frame::Ping(v) => vec![*v as u8],
+            Frame::Pong(v) => vec![*v as u8],
+        }
+    }
+    pub fn decode(op: u8, _body: &[u8]) -> Frame {
+        match op {
+            OP_PING => Frame::Ping(0),
+            _ => Frame::Ping(0),
+        }
+    }
+}
