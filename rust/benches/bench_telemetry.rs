@@ -1,0 +1,164 @@
+//! Bench: live-telemetry overhead — the telemetry tier's performance bar.
+//!
+//! Measures saturated-server throughput (the `bench_obs` Q/K/V pattern:
+//! 2 workers, rotating shared input) with telemetry off vs fully on — a
+//! 20 ms sampler plus a live scraper thread hitting `/metrics` throughout
+//! the run — plus a `sample_tick` micro-benchmark (ticks/s through the
+//! full snapshot → derive → ring-store path). Emitted as
+//! `BENCH_telemetry.json` for CI trend tracking.
+//!
+//! Gate (soft-retried to ride out scheduler noise, then hard): telemetry
+//! fully on costs ≤ 2% of saturated throughput, best-of-N compared.
+
+#[path = "common.rs"]
+mod common;
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use adip::arch::Architecture;
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest, Metrics, SubmitOptions};
+use adip::dataflow::Mat;
+use adip::telemetry::sampler::{sample_tick, PrevCounters, SampleSet};
+use adip::telemetry::TelemetryConfig;
+use adip::testutil::Rng;
+
+const REQS: usize = 96;
+const DIM: usize = 64;
+
+/// One `/metrics` scrape over a throwaway connection (the tier is
+/// one-request-per-connection); returns the body length as a liveness
+/// check.
+fn scrape(addr: SocketAddr) -> usize {
+    let mut stream = TcpStream::connect(addr).expect("connect telemetry");
+    stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n").expect("send scrape");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read scrape");
+    assert!(text.starts_with("HTTP/1.1 200"), "scrape failed: {text:.40}");
+    text.len()
+}
+
+/// One saturated serving run; with telemetry enabled a scraper thread
+/// polls `/metrics` for the whole run. Returns host seconds.
+fn saturated_serve(telemetry: TelemetryConfig) -> f64 {
+    let coord = Coordinator::start(CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 32,
+        workers: 2,
+        queue_capacity: 2 * REQS,
+        batch_window: 8,
+        telemetry,
+        ..Default::default()
+    });
+    let stop = Arc::new(AtomicBool::new(false));
+    let scraper = coord.telemetry_addr().map(|addr| {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut scrapes = 0usize;
+            while !stop.load(Ordering::Acquire) {
+                assert!(scrape(addr) > 0);
+                scrapes += 1;
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            scrapes
+        })
+    });
+    let client = coord.client();
+    let mut rng = Rng::seeded(41);
+    let t0 = std::time::Instant::now();
+    let mut shared = Arc::new(Mat::random(&mut rng, DIM, DIM, 8));
+    let tickets: Vec<_> = (0..REQS)
+        .map(|i| {
+            if i % 3 == 0 {
+                shared = Arc::new(Mat::random(&mut rng, DIM, DIM, 8));
+            }
+            let req = MatmulRequest {
+                id: 0,
+                input_id: (i / 3) as u64,
+                a: shared.clone(),
+                bs: vec![Arc::new(Mat::random(&mut rng, DIM, 32, 2))],
+                weight_bits: 2,
+                act_act: false,
+                tag: String::new(),
+            };
+            client.submit(SubmitOptions::new(req)).expect("queue sized")
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().unwrap().result.is_ok());
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Release);
+    if let Some(s) = scraper {
+        assert!(s.join().expect("scraper clean") > 0, "scraper never landed a scrape");
+    }
+    coord.shutdown();
+    dt
+}
+
+/// Best observed throughput (req/s) over `reps` runs.
+fn best_req_per_s(telemetry: TelemetryConfig, reps: usize) -> f64 {
+    let stat = common::bench(reps, || saturated_serve(telemetry));
+    REQS as f64 / stat.min_s
+}
+
+fn main() {
+    // Sampler micro-bench: full snapshot → derive → ring-store ticks.
+    // The sampler runs one of these every interval (default 250 ms), so
+    // ticks costing microseconds means its steady-state duty cycle is
+    // negligible — that, not the 2% gate, is why the tier is cheap.
+    const TICKS: usize = 20_000;
+    let metrics = Metrics::default();
+    metrics.record_completion(1024, 1e-6, 4096, 4);
+    metrics.record_cache(3, 1, 2, 1);
+    let tick = common::bench(5, || {
+        let series = SampleSet::default();
+        let mut prev = PrevCounters::new(&metrics);
+        for _ in 0..TICKS {
+            std::hint::black_box(sample_tick(&metrics, &series, &mut prev));
+        }
+        assert_eq!(series.ticks.load(Ordering::Acquire) as usize, TICKS);
+    });
+    println!("== sampler micro-bench ({TICKS} ticks/iter) ==");
+    common::report("sample_tick (snapshot+derive+store)", tick, TICKS as f64, "tick");
+
+    let on_cfg = TelemetryConfig {
+        listen: Some("127.0.0.1:0".parse().expect("addr")),
+        sample_interval: Duration::from_millis(20),
+    };
+
+    // Saturated-throughput differential: telemetry off vs on-with-live-
+    // scraper. Retried on gate failure — a saturated 2-worker serve has
+    // real scheduler noise and the 2% gate is tighter than one cold
+    // run's variance; the best observation across attempts is the honest
+    // estimate of each mode's capability.
+    println!("\n== saturated server telemetry overhead ({REQS} requests, 2 workers) ==");
+    let mut base = 0f64;
+    let mut on = 0f64;
+    let mut overhead = f64::INFINITY;
+    for attempt in 0..3 {
+        base = base.max(best_req_per_s(TelemetryConfig::default(), 5));
+        on = on.max(best_req_per_s(on_cfg, 5));
+        overhead = (base / on - 1.0).max(0.0);
+        println!(
+            "  attempt {attempt}: off {base:.1} req/s | on {on:.1} req/s ({:+.2}%)",
+            overhead * 100.0
+        );
+        if overhead <= 0.02 {
+            break;
+        }
+    }
+    assert!(overhead <= 0.02, "telemetry overhead {:.2}% exceeds the 2% gate", overhead * 100.0);
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_telemetry\",\n  \"sampler\": {{\"ticks_per_iter\": {TICKS}, \"ticks_per_s\": {:.0}}},\n  \"saturated_server\": {{\"requests\": {REQS}, \"off_req_per_s\": {base:.2}, \"on_req_per_s\": {on:.2}, \"overhead_on\": {overhead:.4}}}\n}}\n",
+        TICKS as f64 / tick.min_s
+    );
+    let path = std::env::var("BENCH_TELEMETRY_JSON")
+        .unwrap_or_else(|_| "BENCH_telemetry.json".to_string());
+    std::fs::write(&path, &json).expect("write bench json");
+    println!("\n  wrote {path}");
+}

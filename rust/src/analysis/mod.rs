@@ -22,6 +22,7 @@
 //! | `no-deprecated-internal` | no internal callers of the deprecated submission shims ([`deprecated`]) |
 //! | `wire-opcode-sync` | `Frame` variants ⇔ opcode table ⇔ encode/decode arms ([`wire_sync`]) |
 //! | `backend-differential-registry` | every `Backend` dispatch site is mapped to a differential suite ([`backend_registry`]) |
+//! | `wall-clock-containment` | `SystemTime::now` only inside `src/telemetry/`; serving paths use monotonic `Instant`s ([`wallclock`]) |
 //! | `lint-annotation` | meta-rule: malformed/stale annotations and suppressions |
 //!
 //! # The memory-ordering audit (why `relaxed-ok` + a SeqCst ban)
@@ -76,6 +77,7 @@ pub mod lexer;
 pub mod locks;
 pub mod report;
 pub mod rules;
+pub mod wallclock;
 pub mod wire_sync;
 
 use report::{LintReport, Suppressed};
@@ -187,6 +189,7 @@ pub fn run_lint(root: &Path) -> io::Result<LintReport> {
         atomics::check(f, &mut raw, &mut warnings);
         locks::check(f, &mut raw);
         deprecated::check(f, &mut raw);
+        wallclock::check(f, &mut raw);
         wire_sync::check(f, &mut raw);
     }
     backend_registry::check(&files, &mut raw);

@@ -36,6 +36,10 @@ pub enum RuleId {
     /// Every module matching on `Backend` appears in the checked
     /// registry mapping it to the differential suite covering it.
     BackendDifferentialRegistry,
+    /// `SystemTime::now` only inside `src/telemetry/` (the operator-
+    /// facing timestamp helper); everything else uses monotonic
+    /// `Instant`s.
+    WallClockContainment,
     /// Meta-rule: malformed or unused `lint: allow` / `relaxed-ok`
     /// annotations.
     LintAnnotation,
@@ -43,12 +47,13 @@ pub enum RuleId {
 
 impl RuleId {
     /// All rules, in report order.
-    pub const ALL: [RuleId; 6] = [
+    pub const ALL: [RuleId; 7] = [
         RuleId::AtomicOrderingJustified,
         RuleId::LockPoisonPolicy,
         RuleId::NoDeprecatedInternal,
         RuleId::WireOpcodeSync,
         RuleId::BackendDifferentialRegistry,
+        RuleId::WallClockContainment,
         RuleId::LintAnnotation,
     ];
 
@@ -60,6 +65,7 @@ impl RuleId {
             RuleId::NoDeprecatedInternal => "no-deprecated-internal",
             RuleId::WireOpcodeSync => "wire-opcode-sync",
             RuleId::BackendDifferentialRegistry => "backend-differential-registry",
+            RuleId::WallClockContainment => "wall-clock-containment",
             RuleId::LintAnnotation => "lint-annotation",
         }
     }

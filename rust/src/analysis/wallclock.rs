@@ -1,0 +1,102 @@
+//! `wall-clock-containment`: `std::time::SystemTime::now()` stays inside
+//! the telemetry tier's allowlisted timestamp helper.
+//!
+//! Everything on a serving path must measure time with the *monotonic*
+//! `Instant` clock: wall clocks jump (NTP slews, suspend/resume, manual
+//! changes), and a jump observed mid-measurement corrupts latency
+//! accounting, deadline arithmetic and pacing — silently, and only on
+//! the machines where it happens. The one legitimate consumer of wall
+//! time is the telemetry tier, which stamps operator-facing watchdog
+//! events with epoch milliseconds so they can be correlated with logs
+//! from other machines (`telemetry/watchdog.rs::wall_clock_unix_ms`).
+//!
+//! The rule flags any `SystemTime::now` in code outside
+//! `src/telemetry/`. Test code is *not* exempt: a test that asserts on
+//! wall time is flaky by construction, and the fix (an `Instant`, or a
+//! constant) is the same as in production code. Callers with a genuine
+//! new need for wall time route it through the telemetry helper — or
+//! carry an explicit `lint: allow(wall-clock-containment) <reason>`.
+
+use super::rules::{RuleId, SourceFile, Violation};
+
+/// The one directory allowed to read the wall clock: the telemetry tier
+/// owns epoch timestamps (watchdog events, and any future operator-facing
+/// stamp), everything else uses monotonic `Instant`s.
+const ALLOWED_PREFIX: &str = "src/telemetry/";
+
+/// Run the rule over one file.
+pub fn check(file: &SourceFile, out: &mut Vec<Violation>) {
+    if file.rel_path.starts_with(ALLOWED_PREFIX) || file.rel_path.contains("/src/telemetry/") {
+        return;
+    }
+    for (idx, l) in file.lines.iter().enumerate() {
+        if l.code.contains("SystemTime::now") {
+            out.push(Violation {
+                rule: RuleId::WallClockContainment,
+                file: file.rel_path.clone(),
+                line: idx + 1,
+                message: "wall clock read outside src/telemetry/: use a monotonic \
+                          Instant, or route operator-facing timestamps through \
+                          telemetry::watchdog::wall_clock_unix_ms"
+                    .into(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(path: &str, src: &str) -> Vec<Violation> {
+        let f = SourceFile::new(path.into(), src);
+        let mut out = Vec::new();
+        check(&f, &mut out);
+        out
+    }
+
+    #[test]
+    fn wall_clock_read_outside_telemetry_flagged() {
+        let out = run(
+            "src/coordinator/server.rs",
+            "let t = std::time::SystemTime::now();\n",
+        );
+        assert_eq!(out.len(), 1, "{out:?}");
+        assert_eq!(out[0].rule, RuleId::WallClockContainment);
+        assert_eq!(out[0].line, 1);
+    }
+
+    #[test]
+    fn unqualified_use_is_flagged_too() {
+        let out = run("src/obs/mod.rs", "let t = SystemTime::now();\n");
+        assert_eq!(out.len(), 1, "{out:?}");
+    }
+
+    #[test]
+    fn telemetry_tier_is_exempt() {
+        let src = "let ms = std::time::SystemTime::now();\n";
+        assert!(run("src/telemetry/watchdog.rs", src).is_empty());
+        assert!(run("rust/src/telemetry/http.rs", src).is_empty());
+    }
+
+    #[test]
+    fn test_code_is_not_exempt() {
+        let out = run("tests/integration_net.rs", "let t = SystemTime::now();\n");
+        assert_eq!(out.len(), 1, "wall-clock flakiness is a test bug too");
+    }
+
+    #[test]
+    fn mention_in_comment_or_string_is_inert() {
+        let out = run(
+            "src/coordinator/metrics.rs",
+            "// never SystemTime::now here\nlet s = \"SystemTime::now\";\n",
+        );
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn instant_now_passes() {
+        let out = run("src/coordinator/server.rs", "let t = std::time::Instant::now();\n");
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

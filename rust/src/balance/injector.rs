@@ -65,7 +65,7 @@ use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::Instant;
 
-use crate::coordinator::metrics::{Metrics, MAX_DEQUE_GAUGES};
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::prepare::WorkMsg;
 use crate::obs::{lane_worker, SpanKind};
 
@@ -133,6 +133,9 @@ impl Fabric {
         metrics: Arc<Metrics>,
     ) -> Arc<Fabric> {
         assert!(workers > 0 && capacity > 0);
+        // size the per-worker depth gauges up front so every worker is
+        // gauged from the first render (no 16-worker truncation cap)
+        metrics.worker_deque_depth.ensure(workers);
         Arc::new(Fabric {
             state: Mutex::new(State {
                 injector: VecDeque::new(),
@@ -397,8 +400,8 @@ impl Fabric {
 
     fn refresh_gauges(&self, s: &State) {
         self.metrics.injector_depth.store(s.injector.len() as u64, Ordering::Relaxed); // relaxed-ok: depth gauge
-        for (w, d) in s.deques.iter().enumerate().take(MAX_DEQUE_GAUGES) {
-            self.metrics.worker_deque_depth[w].store(d.len() as u64, Ordering::Relaxed); // relaxed-ok: depth gauge
+        for (w, d) in s.deques.iter().enumerate() {
+            self.metrics.worker_deque_depth.store(w, d.len() as u64);
         }
     }
 }
@@ -497,7 +500,7 @@ mod tests {
         }
         let _ = f.pop(1).unwrap(); // steals 1, re-homes 4 of the remaining 8
         assert_eq!(metrics.steals.load(Ordering::Relaxed), 5);
-        assert!(metrics.worker_deque_depth[1].load(Ordering::Relaxed) >= 4);
+        assert!(metrics.worker_deque_depth.load(1) >= 4);
     }
 
     #[test]

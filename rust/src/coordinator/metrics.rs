@@ -8,16 +8,82 @@
 
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+use std::time::Instant;
 
 use crate::obs::Recorder;
 
 use super::client::Priority;
 
-/// How many per-worker deque-depth gauges the balance fabric exports
-/// individually; workers beyond this are not gauged per-worker — the
-/// `adip_worker_deque_gauges_truncated` gauge counts the untracked tail
-/// so dashboards can tell it is missing.
-pub const MAX_DEQUE_GAUGES: usize = 16;
+/// Per-worker deque-depth gauges, grown to the actual worker count at
+/// fabric startup. This replaces the fixed 16-slot array that silently
+/// capped gauged fleets: every worker is now gauged individually, and
+/// the `adip_worker_deque_gauges_truncated` series is retained (always
+/// 0) so dashboards keyed on it keep working.
+///
+/// Writers store through a shared read lock (slots are atomics, so the
+/// write lock is only ever taken by the idempotent, startup-time
+/// [`WorkerGauges::ensure`]); a depth store for a not-yet-allocated
+/// worker index grows the slot vector first, so no update is dropped.
+#[derive(Debug, Default)]
+pub struct WorkerGauges {
+    slots: RwLock<Vec<AtomicU64>>,
+}
+
+impl WorkerGauges {
+    /// Grow to at least `n` slots (never shrinks; idempotent).
+    pub fn ensure(&self, n: usize) {
+        // Poison recovery everywhere on this lock: a panicked worker
+        // must never take the metrics endpoint down with it.
+        if self.slots.read().unwrap_or_else(|e| e.into_inner()).len() >= n {
+            return;
+        }
+        let mut slots = self.slots.write().unwrap_or_else(|e| e.into_inner());
+        while slots.len() < n {
+            slots.push(AtomicU64::new(0));
+        }
+    }
+
+    /// Store worker `w`'s depth, growing the slot vector if needed.
+    pub fn store(&self, w: usize, depth: u64) {
+        {
+            let slots = self.slots.read().unwrap_or_else(|e| e.into_inner());
+            if let Some(slot) = slots.get(w) {
+                slot.store(depth, Ordering::Relaxed); // relaxed-ok: depth gauge
+                return;
+            }
+        }
+        self.ensure(w + 1);
+        self.store(w, depth);
+    }
+
+    /// Worker `w`'s last stored depth (0 for unallocated slots).
+    pub fn load(&self, w: usize) -> u64 {
+        let slots = self.slots.read().unwrap_or_else(|e| e.into_inner());
+        slots.get(w).map_or(0, |s| s.load(Ordering::Relaxed)) // relaxed-ok: gauge read
+    }
+
+    /// One coherent copy of the first `n` gauges (missing slots read 0).
+    pub fn snapshot(&self, n: usize) -> Vec<u64> {
+        let slots = self.slots.read().unwrap_or_else(|e| e.into_inner());
+        (0..n)
+            .map(|w| slots.get(w).map_or(0, |s| s.load(Ordering::Relaxed))) // relaxed-ok: gauge read
+            .collect()
+    }
+}
+
+/// Construction stamp behind `adip_uptime_seconds`: taken exactly once,
+/// when the owning [`Metrics`] is built (`Default` runs at
+/// construction), so uptime is a property of the serving instance — not
+/// of whoever happens to render it.
+#[derive(Debug)]
+struct StartStamp(Instant);
+
+impl Default for StartStamp {
+    fn default() -> StartStamp {
+        StartStamp(Instant::now())
+    }
+}
 
 /// Nearest-rank percentile over an ascending-sorted, non-empty slice:
 /// rank `⌈p/100 · len⌉`, so the reported value is always an observed
@@ -275,10 +341,15 @@ pub struct Metrics {
     /// Member batches that executed inside a coalesced pass.
     pub coalesced_members: AtomicU64,
     /// Workers whose balance-fabric deque depth is gauged individually
-    /// (`min(workers, MAX_DEQUE_GAUGES)`; 0 when no coordinator runs).
+    /// (the full worker count; 0 when no coordinator runs).
     pub balance_workers: AtomicU64,
-    /// Per-worker deque depth gauges (indices `0..balance_workers`).
-    pub worker_deque_depth: [AtomicU64; MAX_DEQUE_GAUGES],
+    /// Per-worker deque depth gauges (indices `0..balance_workers`),
+    /// dynamically sized — no worker-count cap (see [`WorkerGauges`]).
+    pub worker_deque_depth: WorkerGauges,
+    /// Coordinator worker threads lost to panics (the balance fabric
+    /// re-homes their queued batches; service degrades but survives).
+    /// Nonzero flips the telemetry tier's `/healthz` to 503.
+    pub worker_panics: AtomicU64,
     /// Batches queued in the fabric's global injector (gauge).
     pub injector_depth: AtomicU64,
     /// Times a latency-recording thread found the legacy reservoir mutex
@@ -299,6 +370,8 @@ pub struct Metrics {
     /// per `CoordinatorConfig::trace`. Lives on the metrics handle so
     /// every pipeline stage that can count can also trace.
     pub trace: Recorder,
+    /// Construction stamp for `adip_uptime_seconds` (see [`StartStamp`]).
+    started: StartStamp,
     sim_energy_j: AtomicF64,
     queue_seconds: AtomicF64,
     service_seconds: AtomicF64,
@@ -504,6 +577,11 @@ impl Metrics {
         self.sim_energy_j.get()
     }
 
+    /// Seconds since this instance was constructed (`adip_uptime_seconds`).
+    pub fn uptime_seconds(&self) -> f64 {
+        self.started.0.elapsed().as_secs_f64()
+    }
+
     /// Mean host queue wait (s) per completed request; `None` before any
     /// request completed.
     pub fn mean_queue_seconds(&self) -> Option<f64> {
@@ -560,28 +638,32 @@ impl Metrics {
     /// for a sample.
     pub fn render(&self) -> String {
         let mut s = String::new();
+        series_f64(
+            &mut s,
+            "uptime_seconds",
+            "counter",
+            "Seconds since this serving instance's metrics were constructed.",
+            self.uptime_seconds(),
+        );
+        head(&mut s, "build_info", "gauge", "Build metadata carried as labels; value is always 1.");
+        let _ = writeln!(s, "adip_build_info{{version=\"{}\"}} 1", crate::VERSION);
         self.render_scalar_counters(&mut s);
-        // per-worker deque gauges: the first MAX_DEQUE_GAUGES workers
-        // individually, plus an explicit gauge for the untracked tail so
-        // dashboards can tell when depth data is missing
+        // per-worker deque gauges: every worker individually (the gauge
+        // storage grows with the fleet, so nothing is truncated anymore;
+        // the compatibility series below pins that fact at 0)
         let workers = self.balance_workers.load(Ordering::Relaxed) as usize; // relaxed-ok: gauge read
-        let gauged = workers.min(MAX_DEQUE_GAUGES);
-        if gauged > 0 {
+        if workers > 0 {
             head(&mut s, "worker_deque_depth", "gauge", "Balance-fabric deque depth per worker.");
-            for w in 0..gauged {
-                let _ = writeln!(
-                    s,
-                    "adip_worker_deque_depth{{worker=\"{w}\"}} {}",
-                    self.worker_deque_depth[w].load(Ordering::Relaxed) // relaxed-ok: gauge read
-                );
+            for (w, depth) in self.worker_deque_depth.snapshot(workers).into_iter().enumerate() {
+                let _ = writeln!(s, "adip_worker_deque_depth{{worker=\"{w}\"}} {depth}");
             }
         }
         series_u64(
             &mut s,
             "worker_deque_gauges_truncated",
             "gauge",
-            "Workers whose deque depth is not gauged individually (worker count beyond the gauge array).",
-            workers.saturating_sub(MAX_DEQUE_GAUGES) as u64,
+            "Workers whose deque depth is not gauged individually (always 0 since the gauge storage became dynamic; kept for dashboard compatibility).",
+            0,
         );
         series_f64(
             &mut s,
@@ -648,7 +730,7 @@ impl Metrics {
     fn render_scalar_counters(&self, s: &mut String) {
         // One row per scalar metric; kept tabular for reviewability.
         #[rustfmt::skip]
-        let rows: [(&str, &str, &str, u64); 23] = [
+        let rows: [(&str, &str, &str, u64); 24] = [
             // relaxed-ok: render-time stat reads; fields are independent
             ("requests_accepted_total", "counter", "Requests accepted into the admission queue.", self.accepted.load(Ordering::Relaxed)),
             ("requests_rejected_total", "counter", "Requests rejected by admission backpressure.", self.rejected.load(Ordering::Relaxed)),
@@ -672,6 +754,7 @@ impl Metrics {
             ("coalesced_passes_total", "counter", "Cross-request coalesced passes executed.", self.coalesced_passes.load(Ordering::Relaxed)),
             ("coalesced_members_total", "counter", "Member batches executed inside coalesced passes.", self.coalesced_members.load(Ordering::Relaxed)),
             ("injector_depth", "gauge", "Batches queued in the balance fabric global injector.", self.injector_depth.load(Ordering::Relaxed)),
+            ("worker_panics_total", "counter", "Coordinator worker threads lost to panics.", self.worker_panics.load(Ordering::Relaxed)),
             ("prepared_depth", "gauge", "Batches fully prepared but not yet picked up by a worker.", self.prepared_depth.load(Ordering::Relaxed)),
         ];
         for (name, kind, help, v) in rows {
@@ -993,6 +1076,9 @@ mod tests {
         let m = Metrics::default();
         let text = m.render();
         for key in [
+            "adip_uptime_seconds",
+            "adip_build_info{version=\"",
+            "adip_worker_panics_total",
             "adip_requests_accepted_total",
             "adip_requests_rejected_total",
             "adip_batches_fused_total",
@@ -1043,7 +1129,8 @@ mod tests {
         m.record_latency(0.2, 0.4, Priority::Interactive);
         m.record_prepare(0.1);
         m.record_pool(4, 0.25, 0);
-        m.balance_workers.store(MAX_DEQUE_GAUGES as u64 + 4, Ordering::Relaxed);
+        m.balance_workers.store(20, Ordering::Relaxed);
+        m.worker_deque_depth.ensure(20);
         let text = m.render();
         let mut typed = std::collections::HashSet::new();
         let mut samples = 0usize;
@@ -1086,22 +1173,27 @@ mod tests {
         assert!(samples > typed.len(), "labeled series should add extra samples");
     }
 
+    /// Regression for the lifted 16-worker gauge cap: every worker of an
+    /// oversized fleet is gauged individually, and the compatibility
+    /// series `adip_worker_deque_gauges_truncated` stays pinned at 0.
     #[test]
-    fn deque_gauge_truncation_is_reported() {
+    fn deque_gauges_cover_fleets_beyond_the_old_sixteen_cap() {
+        const WORKERS: usize = 25; // > the old MAX_DEQUE_GAUGES of 16
         let m = Metrics::default();
-        // worker count within the gauge array: nothing truncated
-        m.balance_workers.store(MAX_DEQUE_GAUGES as u64, Ordering::Relaxed);
+        m.balance_workers.store(WORKERS as u64, Ordering::Relaxed);
+        for w in 0..WORKERS {
+            m.worker_deque_depth.store(w, w as u64 + 100);
+        }
         let text = m.render();
-        let last = format!("adip_worker_deque_depth{{worker=\"{}\"}}", MAX_DEQUE_GAUGES - 1);
-        assert!(text.contains(&last), "{text}");
+        for w in 0..WORKERS {
+            let line = format!("adip_worker_deque_depth{{worker=\"{w}\"}} {}", w + 100);
+            assert!(text.contains(&line), "worker {w} missing:\n{text}");
+        }
         assert!(text.contains("adip_worker_deque_gauges_truncated 0"), "{text}");
-        // beyond the array: the untracked tail is counted, not silent
-        m.balance_workers.store(MAX_DEQUE_GAUGES as u64 + 9, Ordering::Relaxed);
-        let text = m.render();
-        assert!(text.contains(&last), "{text}");
-        let beyond = format!("adip_worker_deque_depth{{worker=\"{MAX_DEQUE_GAUGES}\"}}");
-        assert!(!text.contains(&beyond), "{text}");
-        assert!(text.contains("adip_worker_deque_gauges_truncated 9"), "{text}");
+        assert!(!text.contains(&format!("worker=\"{WORKERS}\"")), "{text}");
+        // gauge reads for never-stored workers are 0, not a panic
+        assert_eq!(m.worker_deque_depth.load(WORKERS + 5), 0);
+        assert_eq!(m.worker_deque_depth.snapshot(WORKERS + 2).len(), WORKERS + 2);
     }
 
     #[test]
@@ -1222,8 +1314,8 @@ mod tests {
         m.coalesced_members.fetch_add(9, Ordering::Relaxed);
         m.injector_depth.store(5, Ordering::Relaxed);
         m.balance_workers.store(2, Ordering::Relaxed);
-        m.worker_deque_depth[0].store(11, Ordering::Relaxed);
-        m.worker_deque_depth[1].store(13, Ordering::Relaxed);
+        m.worker_deque_depth.store(0, 11);
+        m.worker_deque_depth.store(1, 13);
         let text = m.render();
         assert!(text.contains("adip_shed_total 2"), "{text}");
         assert!(text.contains("adip_deadline_demotions_total 1"));

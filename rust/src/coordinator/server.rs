@@ -68,6 +68,7 @@ use crate::cluster::{
 };
 use crate::dataflow::Mat;
 use crate::obs::{lane_worker, SpanKind, TraceMode, LANE_ROUTER};
+use crate::telemetry::{TelemetryConfig, TelemetryServer};
 
 use super::batcher::{plan_batches, shed_verdict, Lane, ShedVerdict};
 use super::client::{CancelRegistry, Client, Gate, Priority, SubmitOptions, Ticket};
@@ -188,6 +189,13 @@ pub struct CoordinatorConfig {
     /// clocks and write their own rings (`integration_pipeline.rs`
     /// asserts off ≡ on ≡ sampled bit-exactly).
     pub trace: TraceMode,
+    /// Live telemetry tier (see [`crate::telemetry`]): HTTP scrape
+    /// endpoint + background sampler + watchdog. Off by default
+    /// (`listen: None` spawns nothing). Telemetry is strictly read-only
+    /// over [`Metrics`], so enabling it can never change outputs or
+    /// per-ticket accounting — `integration_telemetry.rs` asserts
+    /// off ≡ on bit-exactly across both backends.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -208,6 +216,7 @@ impl Default for CoordinatorConfig {
             coalesce: CoalesceConfig::default(),
             shed: false,
             trace: TraceMode::Off,
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -228,6 +237,7 @@ pub struct Coordinator {
     router: Option<JoinHandle<()>>,
     preparers: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    telemetry: Option<TelemetryServer>,
 }
 
 impl Coordinator {
@@ -273,10 +283,10 @@ impl Coordinator {
             cfg.coalesce,
             metrics.clone(),
         );
-        // full worker count: `render` gauges the first MAX_DEQUE_GAUGES
-        // individually and reports the rest via
-        // `adip_worker_deque_gauges_truncated` instead of silently
-        // dropping them
+        // full worker count: `render` gauges every worker individually
+        // (gauge storage is dynamically sized by `Fabric::new`;
+        // `adip_worker_deque_gauges_truncated` stays at 0 for dashboard
+        // compatibility)
         metrics.balance_workers.store(cfg.workers as u64, Ordering::Relaxed); // relaxed-ok: worker-count gauge, set once at startup
 
         let mut stage_txs = Vec::new();
@@ -328,9 +338,22 @@ impl Coordinator {
             .spawn(move || router_loop(ingress_rx, stage_txs, f, cfg, m, c))
             .expect("spawn router");
 
+        // The telemetry tier is pure observation: it shares the metrics
+        // hub and spawns its own sampler + listener threads, but no
+        // pipeline stage ever consults it — off ≡ on bit-exactly.
+        let telemetry = cfg.telemetry.listen.map(|addr| {
+            TelemetryServer::start(
+                addr,
+                cfg.telemetry.sample_interval,
+                metrics.clone(),
+                telemetry_policies(&cfg),
+            )
+            .expect("start telemetry tier")
+        });
+
         let gate = Arc::new(Gate::new(metrics, ingress_tx, cancels));
         let client = Client::new(gate.clone());
-        Coordinator { gate, client, fabric, router: Some(router), preparers, workers }
+        Coordinator { gate, client, fabric, router: Some(router), preparers, workers, telemetry }
     }
 
     /// A cheap, cloneable submission handle. Handles stay valid across
@@ -373,11 +396,35 @@ impl Coordinator {
         self.gate.metrics.clone()
     }
 
+    /// Bound telemetry scrape address, when the tier is enabled
+    /// (resolves `--telemetry=HOST:0` ephemeral binds).
+    pub fn telemetry_addr(&self) -> Option<std::net::SocketAddr> {
+        self.telemetry.as_ref().map(TelemetryServer::local_addr)
+    }
+
+    /// The running telemetry tier, when enabled (tests reach through
+    /// this for sampler/watchdog state).
+    pub fn telemetry(&self) -> Option<&TelemetryServer> {
+        self.telemetry.as_ref()
+    }
+
+    /// Mark the stack as (not) draining: `/healthz` flips to 503 so
+    /// load balancers stop routing here before the actual shutdown.
+    /// No-op with telemetry off.
+    pub fn set_draining(&self, draining: bool) {
+        if let Some(t) = &self.telemetry {
+            t.set_draining(draining);
+        }
+    }
+
     /// Stop accepting requests, drain in-flight work through all three
     /// stages (router → prepare → fabric → workers), join every thread.
     /// The fabric is closed only after every producer has been joined, so
     /// workers drain every queued batch — nothing admitted is dropped.
     pub fn shutdown(mut self) {
+        // health goes unready first, so a scraper polling through the
+        // drain sees 503 before the listener disappears
+        self.set_draining(true);
         self.gate.close();
         if let Some(r) = self.router.take() {
             let _ = r.join();
@@ -389,7 +436,34 @@ impl Coordinator {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        // telemetry goes last: the final scrape can still observe the
+        // fully drained counters
+        if let Some(mut t) = self.telemetry.take() {
+            t.shutdown();
+        }
     }
+}
+
+/// The policy table rendered in `/statusz`: every knob of the serving
+/// configuration that an operator would want to confirm from a live
+/// process, as display strings.
+fn telemetry_policies(cfg: &CoordinatorConfig) -> Vec<(String, String)> {
+    vec![
+        ("arch".into(), cfg.arch.name().into()),
+        ("array_n".into(), cfg.n.to_string()),
+        ("workers".into(), cfg.workers.to_string()),
+        ("queue_capacity".into(), cfg.queue_capacity.to_string()),
+        ("batch_window".into(), cfg.batch_window.to_string()),
+        ("backend".into(), cfg.backend.name().into()),
+        ("prepare".into(), cfg.prepare.to_string()),
+        ("prepared_capacity".into(), cfg.prepared_capacity.to_string()),
+        ("aging_ms".into(), cfg.aging.as_millis().to_string()),
+        ("steal".into(), cfg.steal.name().into()),
+        ("coalesce".into(), if cfg.coalesce.active() { "on" } else { "off" }.into()),
+        ("shed".into(), if cfg.shed { "on" } else { "off" }.into()),
+        ("shared_weight_cache".into(), if cfg.shared_weight_cache { "on" } else { "off" }.into()),
+        ("trace".into(), format!("{:?}", cfg.trace)),
+    ]
 }
 
 fn router_loop(
@@ -598,14 +672,19 @@ fn worker_loop(
     /// On any exit — normal drain or panic — report the worker down so
     /// its queued batches re-home to the injector and producers redirect
     /// there (a dead worker must degrade service, never wedge a blocked
-    /// `Fabric::push` and with it the router and shutdown).
-    struct DownGuard(Arc<Fabric>, usize);
+    /// `Fabric::push` and with it the router and shutdown). A *panicked*
+    /// exit additionally bumps `worker_panics`, which latches `/healthz`
+    /// unready — a coordinator that lost a worker is degraded for good.
+    struct DownGuard(Arc<Fabric>, usize, Arc<Metrics>);
     impl Drop for DownGuard {
         fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.2.worker_panics.fetch_add(1, Ordering::Relaxed); // relaxed-ok: monotone health counter
+            }
             self.0.worker_down(self.1);
         }
     }
-    let _down = DownGuard(fabric.clone(), w);
+    let _down = DownGuard(fabric.clone(), w, metrics.clone());
     // keep a handle to the store for the contention/occupancy gauges
     // (with private per-worker stores the gauges show the last flusher's
     // store — the shared default is the configuration they exist for)

@@ -39,6 +39,12 @@
 //!   lock-free span recorder covering the whole pipeline, exported as
 //!   Chrome/Perfetto trace-event JSON (`--trace-out`) and per ticket
 //!   via `Ticket::trace()`.
+//! * [`telemetry`] — the live telemetry tier: a background sampler
+//!   deriving windowed rates/shapes from the metrics hub into bounded
+//!   ring time-series, a watchdog rule engine (queue stall, deque skew,
+//!   cache thrash, prepare backlog, worker panic), and a hand-rolled
+//!   HTTP/1.1 scrape endpoint serving `/metrics`, `/healthz` and
+//!   `/statusz` (`--telemetry=HOST:PORT`).
 //! * [`cluster`] — multi-core execution: shards one GEMM (or shared-input
 //!   set) across a persistent pool of array-core workers (pipelined shard
 //!   ingress; legacy spawn-per-run engine kept as baseline) with a
@@ -73,6 +79,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod telemetry;
 pub mod testutil;
 pub mod workload;
 

@@ -34,6 +34,7 @@ use adip::quant::PrecisionMode;
 use adip::report;
 use adip::runtime::ArtifactRuntime;
 use adip::sim::{evaluate_model, CoSim, SimConfig};
+use adip::telemetry::TelemetryConfig;
 use adip::testutil::Rng;
 use adip::workload::TransformerModel;
 use anyhow::{anyhow, bail, Result};
@@ -171,6 +172,18 @@ observability flags (serve/trace):
   --trace-out=PATH write the whole-run Chrome/Perfetto trace-event JSON
                    to PATH (open in ui.perfetto.dev or chrome://tracing)
 
+telemetry flags (serve/net-serve/trace):
+  --telemetry=HOST:PORT
+                   start the live telemetry tier on this address (port 0
+                   binds ephemeral; the bound address is printed). Serves
+                   GET /metrics (Prometheus scrape), GET /healthz
+                   (200 ok / 503 while draining, after a worker panic or
+                   during a detected queue stall) and GET /statusz (JSON
+                   snapshot: depths, policies, sampled series tails,
+                   watchdog events). Absent = off (no sampler thread, no
+                   listener; behavior is bit-identical either way)
+  --sample-ms=T    telemetry sampler tick in ms (default 250; must be >0)
+
 serve submits a mixed-priority stream (interactive | batch | background)
 through the Client/SubmitOptions/Ticket API, with Q/K/V triplets sent as
 pre-declared fusion groups; trace submits each request under the class
@@ -249,6 +262,33 @@ fn parse_trace(cfg: &Config) -> Result<TraceMode> {
         1 => TraceMode::On,
         n => TraceMode::Sample(n as u32),
     })
+}
+
+fn parse_telemetry(cfg: &Config) -> Result<TelemetryConfig> {
+    let listen = match cfg.get("telemetry") {
+        None => None,
+        Some(raw) => {
+            use std::net::ToSocketAddrs;
+            Some(
+                raw.to_socket_addrs()
+                    .map_err(|e| anyhow!("--telemetry={raw}: {e}"))?
+                    .next()
+                    .ok_or_else(|| anyhow!("--telemetry={raw}: resolved to no address"))?,
+            )
+        }
+    };
+    let ms = cfg.get_f64("sample-ms", 250.0)?;
+    if ms <= 0.0 {
+        bail!("--sample-ms must be > 0 (got {ms})");
+    }
+    Ok(TelemetryConfig { listen, sample_interval: std::time::Duration::from_secs_f64(ms / 1e3) })
+}
+
+/// Announce the bound scrape address once at startup (resolves `:0`).
+fn print_telemetry_addr(coord: &Coordinator) {
+    if let Some(addr) = coord.telemetry_addr() {
+        println!("telemetry: http://{addr}/metrics (also /healthz, /statusz)");
+    }
 }
 
 fn parse_coalesce(cfg: &Config) -> Result<CoalesceConfig> {
@@ -453,8 +493,10 @@ fn cmd_serve(cfg: &Config) -> Result<()> {
         coalesce: parse_coalesce(cfg)?,
         shed: cfg.get_bool("shed", false)?,
         trace: parse_trace(cfg)?,
+        telemetry: parse_telemetry(cfg)?,
         ..Default::default()
     });
+    print_telemetry_addr(&coord);
     let client = coord.client();
     let mut rng = Rng::seeded(7);
     let mut tickets: Vec<Ticket> = Vec::new();
@@ -549,8 +591,10 @@ fn cmd_net_serve(cfg: &Config) -> Result<()> {
         coalesce: parse_coalesce(cfg)?,
         shed: cfg.get_bool("shed", false)?,
         trace: parse_trace(cfg)?,
+        telemetry: parse_telemetry(cfg)?,
         ..Default::default()
     });
+    print_telemetry_addr(&coord);
     let listen = cfg.get("listen").unwrap_or("127.0.0.1:0");
     let server = NetServer::bind(listen, coord.client(), coord.metrics())?;
     println!("net-serve: listening on {}", server.local_addr());
@@ -569,6 +613,9 @@ fn cmd_net_serve(cfg: &Config) -> Result<()> {
         }
     }
     println!("net-serve: draining (in-flight requests finish; new submits refused)");
+    // flip /healthz to 503 first so scrapers see unready before the
+    // TCP tier stops taking submissions
+    coord.set_draining(true);
     server.drain();
     server.shutdown();
     coord.shutdown();
@@ -666,8 +713,10 @@ fn cmd_trace(cfg: &Config) -> Result<()> {
         coalesce: parse_coalesce(cfg)?,
         shed: cfg.get_bool("shed", false)?,
         trace: parse_trace(cfg)?,
+        telemetry: parse_telemetry(cfg)?,
         ..Default::default()
     });
+    print_telemetry_addr(&coord);
     let client = coord.client();
     println!(
         "trace: {} — {} requests (projections fusable, head={}, rate≈{}/s)",

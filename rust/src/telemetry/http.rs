@@ -1,0 +1,543 @@
+//! Minimal HTTP/1.1 scrape endpoint over `std::net` (same hand-rolled
+//! listener discipline as `rust/src/net/server.rs`: non-blocking accept
+//! poll so shutdown never hangs, one session thread per connection,
+//! socket read timeouts so sessions notice the stop flag).
+//!
+//! Three routes, all `GET`:
+//!
+//! * `/metrics` — the full Prometheus text exposition: everything
+//!   `Metrics::render` emits plus the telemetry tier's own series
+//!   (watchdog fire counters, sampler tick count/interval). The extras
+//!   are appended *here*, not inside `render`, so the exposition every
+//!   other consumer sees is bit-identical with telemetry off.
+//! * `/healthz` — liveness + readiness: `200 ok` or `503` naming every
+//!   failing condition (draining, worker-panic, queue-stall).
+//! * `/statusz` — a hand-rolled JSON snapshot: depths, cache occupancy,
+//!   active policies, sampler series tails, recent watchdog events.
+//!
+//! Anything else: `400` (malformed request line), `404` (unknown path),
+//! `405 Allow: GET` (wrong method), `505` (not HTTP/1.x). One request
+//! per connection (`Connection: close`) — scrapers at 1 Hz don't need
+//! keep-alive, and one-shot sessions keep the lifecycle trivial.
+
+use std::fmt::Write as _;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::Priority;
+
+use super::watchdog::Rule;
+use super::TelemetryState;
+
+/// Accept-poll pause of the non-blocking listener thread.
+const ACCEPT_POLL: Duration = Duration::from_millis(10);
+/// Socket read timeout — the granularity at which sessions notice the
+/// stop flag.
+const READ_POLL: Duration = Duration::from_millis(25);
+/// Request-head cap; a scrape request is a few hundred bytes, anything
+/// bigger is refused.
+const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Series samples included in each `/statusz` tail.
+const STATUS_TAIL: usize = 20;
+/// Watchdog events included in `/statusz`.
+const STATUS_EVENTS: usize = 16;
+
+/// The telemetry HTTP listener.
+pub struct HttpServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    listener: Option<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl HttpServer {
+    /// Bind and serve (`:0` binds an ephemeral port).
+    pub fn bind(addr: SocketAddr, state: Arc<TelemetryState>) -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind telemetry {addr}"))?;
+        let local_addr = listener.local_addr().context("telemetry local_addr")?;
+        listener.set_nonblocking(true).context("telemetry set_nonblocking")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let handle = {
+            let (stop, sessions) = (stop.clone(), sessions.clone());
+            thread::Builder::new()
+                .name("adip-telemetry-http".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        match listener.accept() {
+                            Ok((stream, _peer)) => {
+                                let (state, stop) = (state.clone(), stop.clone());
+                                let h = thread::Builder::new()
+                                    .name("adip-telemetry-session".into())
+                                    .spawn(move || session(stream, state, stop))
+                                    .expect("spawn telemetry session");
+                                sessions.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+                            }
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                                thread::sleep(ACCEPT_POLL);
+                            }
+                            // transient accept failures must not kill the
+                            // scrape endpoint
+                            Err(_) => thread::sleep(ACCEPT_POLL),
+                        }
+                    }
+                })
+                .context("spawn telemetry listener")?
+        };
+        Ok(HttpServer { local_addr, stop, listener: Some(handle), sessions })
+    }
+
+    /// The bound address (resolves `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, wake every session, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.listener.take() {
+            let _ = h.join();
+        }
+        let handles: Vec<_> =
+            std::mem::take(&mut *self.sessions.lock().unwrap_or_else(|e| e.into_inner()));
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection: read a single request head, answer it, close.
+fn session(mut stream: TcpStream, state: Arc<TelemetryState>, stop: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_POLL)).is_err() {
+        return;
+    }
+    let head = match read_request_head(&mut stream, &stop) {
+        ReadHead::Complete(h) => h,
+        ReadHead::Oversized => {
+            respond(&mut stream, 400, "Bad Request", "text/plain", "request head too large\n");
+            return;
+        }
+        ReadHead::Closed => return,
+    };
+    let request_line = head.lines().next().unwrap_or("");
+    let (status, reason, content_type, body) = route(&state, request_line);
+    respond(&mut stream, status, reason, content_type, &body);
+}
+
+enum ReadHead {
+    Complete(String),
+    Oversized,
+    Closed,
+}
+
+/// Read until the blank line ending the request head (body, if any, is
+/// ignored — every route is a GET).
+fn read_request_head(stream: &mut TcpStream, stop: &AtomicBool) -> ReadHead {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 1024];
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return ReadHead::Closed;
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return ReadHead::Closed,
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                if head_complete(&buf) {
+                    return ReadHead::Complete(String::from_utf8_lossy(&buf).into_owned());
+                }
+                if buf.len() > MAX_HEAD_BYTES {
+                    return ReadHead::Oversized;
+                }
+            }
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut => {}
+            Err(_) => return ReadHead::Closed,
+        }
+    }
+}
+
+/// A request head ends at the first blank line (tolerates bare-`\n`
+/// clients like a hand-typed `nc` session).
+fn head_complete(buf: &[u8]) -> bool {
+    buf.windows(4).any(|w| w == b"\r\n\r\n") || buf.windows(2).any(|w| w == b"\n\n")
+}
+
+/// Dispatch one request line to its route.
+fn route(
+    state: &TelemetryState,
+    request_line: &str,
+) -> (u16, &'static str, &'static str, String) {
+    let mut parts = request_line.split_whitespace();
+    let (Some(method), Some(target), Some(version)) =
+        (parts.next(), parts.next(), parts.next())
+    else {
+        return (400, "Bad Request", "text/plain", "malformed request line\n".into());
+    };
+    if !version.starts_with("HTTP/1.") {
+        return (
+            505,
+            "HTTP Version Not Supported",
+            "text/plain",
+            "only HTTP/1.x is served here\n".into(),
+        );
+    }
+    if method != "GET" {
+        return (405, "Method Not Allowed", "text/plain", "only GET is served here\n".into());
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    match path {
+        "/metrics" => {
+            (200, "OK", "text/plain; version=0.0.4; charset=utf-8", render_metrics(state))
+        }
+        "/healthz" => {
+            let reasons = state.health();
+            if reasons.is_empty() {
+                (200, "OK", "text/plain", "ok\n".into())
+            } else {
+                let detail = format!("unhealthy: {}\n", reasons.join(", "));
+                (503, "Service Unavailable", "text/plain", detail)
+            }
+        }
+        "/statusz" => (200, "OK", "application/json", statusz_json(state)),
+        _ => (
+            404,
+            "Not Found",
+            "text/plain",
+            "not found (try /metrics, /healthz, /statusz)\n".into(),
+        ),
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, content_type: &str, body: &str) {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    if status == 405 {
+        head.push_str("Allow: GET\r\n");
+    }
+    head.push_str("\r\n");
+    // best-effort: a scraper that hung up mid-response is its problem
+    let _ = stream.write_all(head.as_bytes()).and_then(|()| stream.write_all(body.as_bytes()));
+}
+
+/// The `/metrics` body: the coordinator exposition plus the telemetry
+/// tier's own series (appended here so `Metrics::render` stays
+/// bit-identical with telemetry off).
+fn render_metrics(state: &TelemetryState) -> String {
+    let mut s = state.metrics.render();
+    state.watchdog.render_prometheus(&mut s);
+    let _ = writeln!(
+        s,
+        "# HELP adip_telemetry_samples_total Sampler ticks taken by the telemetry tier.\n\
+         # TYPE adip_telemetry_samples_total counter\n\
+         adip_telemetry_samples_total {}",
+        state.series.ticks.load(Ordering::Acquire)
+    );
+    let _ = writeln!(
+        s,
+        "# HELP adip_telemetry_sample_interval_seconds Configured sampler interval.\n\
+         # TYPE adip_telemetry_sample_interval_seconds gauge\n\
+         adip_telemetry_sample_interval_seconds {:.6e}",
+        state.sample_interval.as_secs_f64()
+    );
+    s
+}
+
+/// Escape a string for a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// A JSON-safe number (JSON has no NaN/Inf; clamp them to 0).
+fn json_num(v: f64) -> String {
+    if v.is_finite() { format!("{v:.6}") } else { "0.000000".into() }
+}
+
+fn json_num_list(vs: &[f64]) -> String {
+    let items: Vec<String> = vs.iter().map(|&v| json_num(v)).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// The `/statusz` body: one JSON object, hand-rolled on `std` like
+/// everything else in this tier.
+fn statusz_json(state: &TelemetryState) -> String {
+    let m = &state.metrics;
+    let reasons = state.health();
+    // relaxed-ok: statusz stat reads; fields are independent
+    let workers = m.balance_workers.load(Ordering::Relaxed) as usize;
+    let mut s = String::with_capacity(4096);
+    s.push_str("{\n");
+    let _ = writeln!(s, "  \"version\": \"{}\",", json_escape(crate::VERSION));
+    let _ = writeln!(s, "  \"uptime_seconds\": {},", json_num(m.uptime_seconds()));
+    let _ = writeln!(s, "  \"healthy\": {},", reasons.is_empty());
+    let unhealthy: Vec<String> =
+        reasons.iter().map(|r| format!("\"{}\"", json_escape(r))).collect();
+    let _ = writeln!(s, "  \"unhealthy_reasons\": [{}],", unhealthy.join(","));
+    let _ = writeln!(s, "  \"draining\": {},", state.draining.load(Ordering::Acquire));
+    let _ = writeln!(
+        s,
+        "  \"sample_interval_ms\": {},",
+        json_num(state.sample_interval.as_secs_f64() * 1e3)
+    );
+    let _ = writeln!(s, "  \"samples\": {},", state.series.ticks.load(Ordering::Acquire));
+    let _ = writeln!(s, "  \"workers\": {workers},");
+    // relaxed-ok: statusz stat read; monotone health counter
+    let _ = writeln!(s, "  \"worker_panics\": {},", m.worker_panics.load(Ordering::Relaxed));
+    let depths: Vec<String> =
+        m.worker_deque_depth.snapshot(workers).iter().map(u64::to_string).collect();
+    let _ = writeln!(s, "  \"worker_deque_depths\": [{}],", depths.join(","));
+    // relaxed-ok: statusz gauge/stat reads; fields are independent
+    let _ = writeln!(s, "  \"injector_depth\": {},", m.injector_depth.load(Ordering::Relaxed));
+    let _ = writeln!(s, "  \"prepared_depth\": {},", m.prepared_depth.load(Ordering::Relaxed));
+    let _ = writeln!(s, "  \"queue_depth\": {},", m.queue_depth.load(Ordering::Relaxed));
+    let _ = writeln!(
+        s,
+        "  \"cache\": {{\"shards\": {}, \"shards_occupied\": {}, \"hits\": {}, \
+         \"shared_hits\": {}, \"misses\": {}, \"evictions\": {}}},",
+        // relaxed-ok: statusz cache stat reads; fields are independent
+        m.cache_shards.load(Ordering::Relaxed),
+        m.cache_shards_occupied.load(Ordering::Relaxed),
+        m.cache_hits.load(Ordering::Relaxed),
+        m.cache_shared_hits.load(Ordering::Relaxed),
+        m.cache_misses.load(Ordering::Relaxed),
+        m.cache_evictions.load(Ordering::Relaxed)
+    );
+    let _ = writeln!(
+        s,
+        "  \"counters\": {{\"accepted\": {}, \"completed\": {}, \"rejected\": {}, \
+         \"failed\": {}, \"shed\": {}, \"cancelled\": {}, \"steals\": {}, \"batches\": {}}},",
+        // relaxed-ok: statusz counter reads; fields are independent
+        m.accepted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        m.rejected.load(Ordering::Relaxed),
+        m.failed.load(Ordering::Relaxed),
+        m.shed.load(Ordering::Relaxed),
+        m.cancelled.load(Ordering::Relaxed),
+        m.steals.load(Ordering::Relaxed),
+        m.batches.load(Ordering::Relaxed)
+    );
+    let policies: Vec<String> = state
+        .policies
+        .iter()
+        .map(|(k, v)| format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)))
+        .collect();
+    let _ = writeln!(s, "  \"policies\": {{{}}},", policies.join(", "));
+    // per-class queue-wait deltas over the last two samples (the sampler
+    // stores absolutes; the delta is the "shape" a controller wants)
+    s.push_str("  \"class_queue_deltas\": {");
+    let mut first = true;
+    for class in Priority::ALL {
+        let i = class.index();
+        let d50 = series_delta(&state.series.class_queue_p50[i]);
+        let d95 = series_delta(&state.series.class_queue_p95[i]);
+        if !first {
+            s.push_str(", ");
+        }
+        first = false;
+        let _ = write!(
+            s,
+            "\"{}\": {{\"p50_delta\": {}, \"p95_delta\": {}}}",
+            class.name(),
+            json_num(d50),
+            json_num(d95)
+        );
+    }
+    s.push_str("},\n");
+    s.push_str("  \"series\": {\n");
+    let all = state.series.all();
+    for (i, series) in all.iter().enumerate() {
+        let comma = if i + 1 == all.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "    \"{}\": {}{comma}",
+            json_escape(series.name()),
+            json_num_list(&series.tail(STATUS_TAIL))
+        );
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"watchdog\": {\n    \"fired\": {");
+    for (i, rule) in Rule::ALL.iter().enumerate() {
+        let comma = if i + 1 == Rule::ALL.len() { "" } else { ", " };
+        let _ = write!(s, "\"{}\": {}{comma}", rule.name(), state.watchdog.fired(*rule));
+    }
+    let _ = writeln!(
+        s,
+        "}},\n    \"queue_stall_active\": {},",
+        state.watchdog.stall_active()
+    );
+    s.push_str("    \"recent\": [\n");
+    let events = state.watchdog.recent_events();
+    let tail = &events[events.len().saturating_sub(STATUS_EVENTS)..];
+    for (i, ev) in tail.iter().enumerate() {
+        let comma = if i + 1 == tail.len() { "" } else { "," };
+        let _ = writeln!(
+            s,
+            "      {{\"rule\": \"{}\", \"unix_ms\": {}, \"tick\": {}, \"detail\": \"{}\"}}{comma}",
+            ev.rule.name(),
+            ev.unix_ms,
+            ev.tick,
+            json_escape(&ev.detail)
+        );
+    }
+    s.push_str("    ]\n  }\n}\n");
+    s
+}
+
+/// Change between the last two samples of a series (0 with fewer than 2).
+fn series_delta(series: &super::sampler::Series) -> f64 {
+    let t = series.tail(2);
+    match t.as_slice() {
+        [a, b] => b - a,
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+    use crate::telemetry::watchdog::Observation;
+
+    fn test_state() -> Arc<TelemetryState> {
+        Arc::new(TelemetryState::new(
+            Arc::new(Metrics::default()),
+            Duration::from_millis(50),
+            vec![("steal".into(), "Off".into())],
+        ))
+    }
+
+    #[test]
+    fn route_malformed_and_unknown() {
+        let st = test_state();
+        assert_eq!(route(&st, "GARBAGE").0, 400);
+        assert_eq!(route(&st, "").0, 400);
+        assert_eq!(route(&st, "GET /metrics").0, 400, "missing version");
+        assert_eq!(route(&st, "GET /nope HTTP/1.1").0, 404);
+        assert_eq!(route(&st, "POST /metrics HTTP/1.1").0, 405);
+        assert_eq!(route(&st, "GET /metrics HTTP/2").0, 505);
+    }
+
+    #[test]
+    fn metrics_route_appends_telemetry_series() {
+        let st = test_state();
+        let (status, _, ct, body) = route(&st, "GET /metrics HTTP/1.1");
+        assert_eq!(status, 200);
+        assert!(ct.starts_with("text/plain"));
+        assert!(body.contains("adip_requests_completed_total"), "coordinator exposition");
+        assert!(body.contains("adip_watchdog_events_total{rule=\"queue_stall\"} 0"));
+        assert!(body.contains("adip_telemetry_samples_total 0"));
+        assert!(body.contains("adip_telemetry_sample_interval_seconds"));
+        // query strings are tolerated (Prometheus can add ?timeout=..)
+        assert_eq!(route(&st, "GET /metrics?x=1 HTTP/1.0").0, 200);
+    }
+
+    #[test]
+    fn healthz_flips_on_drain_and_panic_and_stall() {
+        let st = test_state();
+        assert_eq!(route(&st, "GET /healthz HTTP/1.1").0, 200);
+        st.draining.store(true, Ordering::Release);
+        let (status, _, _, body) = route(&st, "GET /healthz HTTP/1.1");
+        assert_eq!(status, 503);
+        assert!(body.contains("draining"), "{body}");
+        st.draining.store(false, Ordering::Release);
+        st.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        let (status, _, _, body) = route(&st, "GET /healthz HTTP/1.1");
+        assert_eq!(status, 503);
+        assert!(body.contains("worker-panic"), "{body}");
+    }
+
+    #[test]
+    fn healthz_reports_active_stall() {
+        let st = test_state();
+        for _ in 0..3 {
+            st.watchdog.observe(&Observation {
+                injector_depth: 5,
+                ..Observation::default()
+            });
+        }
+        assert!(st.watchdog.stall_active());
+        let (status, _, _, body) = route(&st, "GET /healthz HTTP/1.1");
+        assert_eq!(status, 503);
+        assert!(body.contains("queue-stall"), "{body}");
+    }
+
+    #[test]
+    fn statusz_is_wellformed() {
+        let st = test_state();
+        st.metrics.record_completion(10, 0.0, 0, 1);
+        st.metrics.balance_workers.store(2, Ordering::Relaxed);
+        st.metrics.worker_deque_depth.store(0, 3);
+        st.metrics.worker_deque_depth.store(1, 1);
+        let mut prev = super::super::sampler::PrevCounters::new(&st.metrics);
+        let obs = super::super::sampler::sample_tick(&st.metrics, &st.series, &mut prev);
+        st.watchdog.observe(&obs);
+        let (status, _, ct, body) = route(&st, "GET /statusz HTTP/1.1");
+        assert_eq!(status, 200);
+        assert_eq!(ct, "application/json");
+        for key in [
+            "\"version\"",
+            "\"uptime_seconds\"",
+            "\"healthy\": true",
+            "\"worker_deque_depths\": [3,1]",
+            "\"policies\": {\"steal\": \"Off\"}",
+            "\"completions_per_s\"",
+            "\"queue_p50_interactive\"",
+            "\"class_queue_deltas\"",
+            "\"queue_stall_active\": false",
+            "\"fired\": {\"queue_stall\": 0",
+        ] {
+            assert!(body.contains(key), "{key} missing from:\n{body}");
+        }
+        // brace/bracket balance — the cheap structural sanity check; the
+        // python CI validator does the real parse
+        let balance = |open: char, close: char| {
+            body.chars().filter(|&c| c == open).count()
+                == body.chars().filter(|&c| c == close).count()
+        };
+        assert!(balance('{', '}'), "{body}");
+        assert!(balance('[', ']'), "{body}");
+        assert!(!body.contains("NaN") && !body.contains("inf"), "{body}");
+    }
+
+    #[test]
+    fn json_escaping_and_numbers() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+        assert_eq!(json_num(1.5), "1.500000");
+        assert_eq!(json_num(f64::NAN), "0.000000");
+        assert_eq!(json_num(f64::INFINITY), "0.000000");
+        assert_eq!(json_num_list(&[1.0, 2.5]), "[1.000000,2.500000]");
+    }
+
+    #[test]
+    fn head_completion_detects_both_line_endings() {
+        assert!(head_complete(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(head_complete(b"GET / HTTP/1.1\n\n"));
+        assert!(!head_complete(b"GET / HTTP/1.1\r\n"));
+    }
+}

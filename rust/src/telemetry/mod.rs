@@ -1,0 +1,264 @@
+//! Live telemetry tier: scrape endpoint, time-series sampler, watchdog.
+//!
+//! Everything here is strictly *read-only* over the serving stack: the
+//! sampler snapshots [`Metrics`](crate::coordinator::metrics::Metrics)
+//! counters, the watchdog evaluates rules over those snapshots, and the
+//! HTTP listener renders both. No pipeline code path consults telemetry
+//! state, so running with telemetry off is bit-for-bit identical to not
+//! having the tier at all — the differential tests in
+//! `tests/integration_telemetry.rs` hold the stack to that.
+//!
+//! Layout:
+//!
+//! * [`sampler`] — background thread turning monotone counters into
+//!   fixed-capacity ring time-series (rates, hit-rate windows, skew).
+//! * [`watchdog`] — rule engine over sampled observations (queue stall,
+//!   deque skew, cache thrash, prepare backlog, worker panic) with a
+//!   bounded event ring.
+//! * [`http`] — hand-rolled HTTP/1.1 listener serving `GET /metrics`
+//!   (Prometheus), `GET /healthz` (200/503), `GET /statusz` (JSON).
+//!
+//! The whole tier is opt-in: [`TelemetryConfig::listen`] defaults to
+//! `None` and the coordinator spawns nothing when it stays that way.
+
+pub mod http;
+pub mod sampler;
+pub mod watchdog;
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+
+use http::HttpServer;
+use sampler::{SampleSet, Sampler};
+use watchdog::Watchdog;
+
+/// Default sampler tick; fine-grained enough to catch sub-second stalls
+/// while keeping the sampling cost invisible next to matmul work.
+pub const DEFAULT_SAMPLE_INTERVAL: Duration = Duration::from_millis(250);
+
+/// Where (and how often) to run the telemetry tier.
+///
+/// `Copy` on purpose: it rides inside `CoordinatorConfig`, which is
+/// moved into worker closures by value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Address for the HTTP scrape listener; `None` disables the whole
+    /// tier (no sampler thread, no listener, no watchdog state).
+    pub listen: Option<SocketAddr>,
+    /// Sampler tick interval.
+    pub sample_interval: Duration,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { listen: None, sample_interval: DEFAULT_SAMPLE_INTERVAL }
+    }
+}
+
+impl TelemetryConfig {
+    /// Whether the tier should be started at all.
+    pub fn enabled(&self) -> bool {
+        self.listen.is_some()
+    }
+}
+
+/// Shared state between the sampler thread, the watchdog, and the HTTP
+/// handlers.
+#[derive(Debug)]
+pub struct TelemetryState {
+    /// The coordinator's metrics hub (read-only from this tier).
+    pub metrics: Arc<Metrics>,
+    /// Sampled time-series rings.
+    pub series: SampleSet,
+    /// Rule engine + bounded event ring.
+    pub watchdog: Watchdog,
+    /// Flipped by the coordinator when a drain begins; turns `/healthz`
+    /// into 503 so load balancers stop routing here.
+    pub draining: AtomicBool,
+    /// Configured sampler tick (rendered in `/metrics` and `/statusz`).
+    pub sample_interval: Duration,
+    /// Active serving policies (`key`, `value`) rendered in `/statusz`.
+    pub policies: Vec<(String, String)>,
+}
+
+impl TelemetryState {
+    /// Fresh state over an existing metrics hub.
+    pub fn new(
+        metrics: Arc<Metrics>,
+        sample_interval: Duration,
+        policies: Vec<(String, String)>,
+    ) -> TelemetryState {
+        TelemetryState {
+            metrics,
+            series: SampleSet::default(),
+            watchdog: Watchdog::default(),
+            draining: AtomicBool::new(false),
+            sample_interval,
+            policies,
+        }
+    }
+
+    /// Every reason the stack is not ready to take traffic (empty when
+    /// healthy). Order is stable so `/healthz` bodies are deterministic.
+    pub fn health(&self) -> Vec<&'static str> {
+        let mut reasons = Vec::new();
+        if self.draining.load(Ordering::Acquire) {
+            reasons.push("draining");
+        }
+        // relaxed-ok: health probe of a monotone counter; staleness by
+        // one increment only delays the 503 by a scrape
+        if self.metrics.worker_panics.load(Ordering::Relaxed) > 0 {
+            reasons.push("worker-panic");
+        }
+        if self.watchdog.stall_active() {
+            reasons.push("queue-stall");
+        }
+        reasons
+    }
+}
+
+/// The running tier: sampler thread + HTTP listener over shared state.
+pub struct TelemetryServer {
+    state: Arc<TelemetryState>,
+    sampler: Option<Sampler>,
+    http: Option<HttpServer>,
+    local_addr: SocketAddr,
+}
+
+impl TelemetryServer {
+    /// Bind the scrape endpoint and start sampling.
+    pub fn start(
+        addr: SocketAddr,
+        sample_interval: Duration,
+        metrics: Arc<Metrics>,
+        policies: Vec<(String, String)>,
+    ) -> Result<TelemetryServer> {
+        let state = Arc::new(TelemetryState::new(metrics, sample_interval, policies));
+        let http = HttpServer::bind(addr, state.clone())?;
+        let local_addr = http.local_addr();
+        let sampler = Sampler::spawn(state.clone(), sample_interval);
+        Ok(TelemetryServer { state, sampler: Some(sampler), http: Some(http), local_addr })
+    }
+
+    /// The bound scrape address (resolves `:0` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The shared state (for tests and the coordinator's drain hook).
+    pub fn state(&self) -> &Arc<TelemetryState> {
+        &self.state
+    }
+
+    /// Mark the stack as (not) draining; `/healthz` flips accordingly.
+    pub fn set_draining(&self, draining: bool) {
+        self.state.draining.store(draining, Ordering::Release);
+    }
+
+    /// Stop the sampler, then the listener (scrapes in flight finish).
+    pub fn shutdown(&mut self) {
+        if let Some(sampler) = self.sampler.take() {
+            sampler.shutdown();
+        }
+        if let Some(http) = self.http.take() {
+            http.shutdown();
+        }
+    }
+}
+
+impl Drop for TelemetryServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for TelemetryServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TelemetryServer").field("local_addr", &self.local_addr).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
+    use std::time::Instant;
+
+    fn get(addr: SocketAddr, target: &str) -> (u16, String) {
+        let mut stream = TcpStream::connect(addr).expect("connect telemetry");
+        write!(stream, "GET {target} HTTP/1.1\r\nHost: test\r\n\r\n").expect("send request");
+        let mut raw = String::new();
+        stream.read_to_string(&mut raw).expect("read response");
+        let status: u16 = raw
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .expect("status code");
+        let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+        (status, body)
+    }
+
+    #[test]
+    fn tier_serves_all_three_endpoints_and_shuts_down() {
+        let metrics = Arc::new(Metrics::default());
+        let mut server = TelemetryServer::start(
+            "127.0.0.1:0".parse().expect("addr"),
+            Duration::from_millis(10),
+            metrics.clone(),
+            vec![("workers".into(), "2".into())],
+        )
+        .expect("start telemetry");
+        let addr = server.local_addr();
+
+        let (status, body) = get(addr, "/metrics");
+        assert_eq!(status, 200);
+        assert!(body.contains("adip_uptime_seconds"), "{body}");
+        assert!(body.contains("adip_watchdog_events_total"), "{body}");
+
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(body, "ok\n");
+
+        let (status, body) = get(addr, "/statusz");
+        assert_eq!(status, 200);
+        assert!(body.contains("\"policies\": {\"workers\": \"2\"}"), "{body}");
+
+        let (status, _) = get(addr, "/nope");
+        assert_eq!(status, 404);
+
+        // sampler is actually ticking
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while server.state().series.ticks.load(Ordering::Acquire) == 0 {
+            assert!(Instant::now() < deadline, "sampler never ticked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        server.set_draining(true);
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 503);
+        assert!(body.contains("draining"), "{body}");
+
+        server.shutdown();
+        // idempotent (Drop will call it again)
+        server.shutdown();
+    }
+
+    #[test]
+    fn config_defaults_are_off() {
+        let cfg = TelemetryConfig::default();
+        assert!(!cfg.enabled());
+        assert_eq!(cfg.sample_interval, DEFAULT_SAMPLE_INTERVAL);
+        let on = TelemetryConfig {
+            listen: Some("127.0.0.1:9464".parse().expect("addr")),
+            ..TelemetryConfig::default()
+        };
+        assert!(on.enabled());
+    }
+}

@@ -1,0 +1,441 @@
+//! Time-series sampler: a background thread snapshotting the live
+//! [`Metrics`] at a fixed interval into bounded packed-atomic rings.
+//!
+//! Each tick derives *windowed* shapes the cumulative counters cannot
+//! express — completions/s, steals/s, shed/s, cache hit-rate over the
+//! window, eviction rate, injector-depth and prepared-backlog gauges,
+//! the per-worker deque-skew coefficient, and per-class queue-wait
+//! p50/p95 — pushes them into the [`SampleSet`] rings (read lock-free by
+//! `/statusz` sessions), and hands the window's digest to the
+//! [`Watchdog`](super::watchdog::Watchdog).
+//!
+//! The sampler only *reads* metrics: it cannot change outputs or
+//! per-ticket accounting, which is what keeps telemetry-off runs
+//! bit-identical to telemetry-on runs. Each ring slot is one f64 packed
+//! into an `AtomicU64`; the single writer publishes a slot with a
+//! `Release` store of the write counter, so readers never observe a torn
+//! sample (the same single-word discipline as the latency reservoir).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::Priority;
+
+use super::watchdog::Observation;
+
+/// Samples retained per series ring — at the default 250 ms interval,
+/// one minute of history.
+pub const SERIES_CAP: usize = 240;
+
+/// Sleep granularity of the sampler loop, so shutdown never waits a
+/// whole sample interval.
+const STOP_POLL: Duration = Duration::from_millis(10);
+
+/// One bounded time-series ring: f64 samples packed into atomic words,
+/// single writer (the sampler thread), lock-free readers.
+#[derive(Debug)]
+pub struct Series {
+    name: String,
+    slots: Vec<AtomicU64>,
+    /// Monotone write counter; `Release`-stored after the slot write so
+    /// a reader's `Acquire` load orders the slot reads behind it.
+    written: AtomicU64,
+}
+
+impl Series {
+    fn new(name: impl Into<String>) -> Series {
+        Series {
+            name: name.into(),
+            slots: (0..SERIES_CAP).map(|_| AtomicU64::new(0)).collect(),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    /// The series name as shown in `/statusz`.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Append one sample (single writer: the sampler thread).
+    pub fn push(&self, v: f64) {
+        let w = self.written.load(Ordering::Relaxed); // relaxed-ok: single-writer counter, no concurrent RMW
+        self.slots[w as usize % SERIES_CAP].store(v.to_bits(), Ordering::Relaxed); // relaxed-ok: publication ordered by the Release store below
+        self.written.store(w + 1, Ordering::Release);
+    }
+
+    /// Samples ever written (not capped by the ring).
+    pub fn len(&self) -> u64 {
+        self.written.load(Ordering::Acquire)
+    }
+
+    /// Whether nothing has been sampled yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The most recent sample, if any.
+    pub fn last(&self) -> Option<f64> {
+        self.tail(1).pop()
+    }
+
+    /// The most recent `n` samples, oldest first (fewer if the series is
+    /// younger than `n`; at most [`SERIES_CAP`]).
+    pub fn tail(&self, n: usize) -> Vec<f64> {
+        let w = self.written.load(Ordering::Acquire);
+        let have = (w.min(SERIES_CAP as u64)) as usize;
+        let take = n.min(have);
+        (0..take)
+            .map(|i| {
+                let idx = (w as usize - take + i) % SERIES_CAP;
+                // relaxed-ok: slot reads ordered by the Acquire load of `written` above
+                f64::from_bits(self.slots[idx].load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+}
+
+/// Every sampled series, plus the tick counter. Shared read-only with
+/// HTTP sessions.
+#[derive(Debug)]
+pub struct SampleSet {
+    /// Requests completed per second over the window.
+    pub completions_per_s: Series,
+    /// Batches stolen per second over the window.
+    pub steals_per_s: Series,
+    /// Requests shed per second over the window.
+    pub sheds_per_s: Series,
+    /// Weight-cache hit rate over the window's lookups (carries the
+    /// previous value through windows with no lookups).
+    pub cache_hit_rate: Series,
+    /// Weight-cache evictions per second over the window.
+    pub cache_evictions_per_s: Series,
+    /// Injector depth gauge at each tick (its trend is the queue-stall
+    /// rule's input).
+    pub injector_depth: Series,
+    /// Prepared-batch backlog gauge at each tick.
+    pub prepared_depth: Series,
+    /// Coefficient of variation (stddev/mean) of per-worker deque
+    /// depths; 0 when idle or single-worker.
+    pub deque_skew: Series,
+    /// Per-class queue-wait p50 at each tick (seconds; 0 until the class
+    /// has samples), indexed by [`Priority::index`].
+    pub class_queue_p50: Vec<Series>,
+    /// Per-class queue-wait p95 at each tick.
+    pub class_queue_p95: Vec<Series>,
+    /// Sampler ticks taken.
+    pub ticks: AtomicU64,
+}
+
+impl Default for SampleSet {
+    fn default() -> SampleSet {
+        SampleSet {
+            completions_per_s: Series::new("completions_per_s"),
+            steals_per_s: Series::new("steals_per_s"),
+            sheds_per_s: Series::new("sheds_per_s"),
+            cache_hit_rate: Series::new("cache_hit_rate"),
+            cache_evictions_per_s: Series::new("cache_evictions_per_s"),
+            injector_depth: Series::new("injector_depth"),
+            prepared_depth: Series::new("prepared_depth"),
+            deque_skew: Series::new("deque_skew"),
+            class_queue_p50: Priority::ALL
+                .iter()
+                .map(|c| Series::new(format!("queue_p50_{}", c.name())))
+                .collect(),
+            class_queue_p95: Priority::ALL
+                .iter()
+                .map(|c| Series::new(format!("queue_p95_{}", c.name())))
+                .collect(),
+            ticks: AtomicU64::new(0),
+        }
+    }
+}
+
+impl SampleSet {
+    /// Every series, in `/statusz` order.
+    pub fn all(&self) -> Vec<&Series> {
+        let mut out = vec![
+            &self.completions_per_s,
+            &self.steals_per_s,
+            &self.sheds_per_s,
+            &self.cache_hit_rate,
+            &self.cache_evictions_per_s,
+            &self.injector_depth,
+            &self.prepared_depth,
+            &self.deque_skew,
+        ];
+        out.extend(self.class_queue_p50.iter());
+        out.extend(self.class_queue_p95.iter());
+        out
+    }
+}
+
+/// Cumulative-counter snapshot carried between ticks, so each tick can
+/// derive window deltas and rates.
+#[derive(Debug)]
+pub struct PrevCounters {
+    at: Instant,
+    completed: u64,
+    steals: u64,
+    shed: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    cache_evictions: u64,
+}
+
+impl PrevCounters {
+    /// Baseline from the current counter values (the first window starts
+    /// now, not at server start — no spurious rate spike on tick 1).
+    pub fn new(metrics: &Metrics) -> PrevCounters {
+        // relaxed-ok: baseline stat reads; fields are independent
+        PrevCounters {
+            at: Instant::now(),
+            completed: metrics.completed.load(Ordering::Relaxed),
+            steals: metrics.steals.load(Ordering::Relaxed),
+            shed: metrics.shed.load(Ordering::Relaxed),
+            cache_hits: metrics.cache_hits.load(Ordering::Relaxed),
+            cache_misses: metrics.cache_misses.load(Ordering::Relaxed),
+            cache_evictions: metrics.cache_evictions.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Coefficient of variation (stddev/mean) over per-worker deque depths;
+/// 0 for empty fleets or an all-idle (zero-mean) fleet.
+fn skew_coefficient(depths: &[u64]) -> f64 {
+    if depths.is_empty() {
+        return 0.0;
+    }
+    let n = depths.len() as f64;
+    let mean = depths.iter().map(|&d| d as f64).sum::<f64>() / n;
+    if mean <= 0.0 {
+        return 0.0;
+    }
+    let var = depths.iter().map(|&d| (d as f64 - mean).powi(2)).sum::<f64>() / n;
+    var.sqrt() / mean
+}
+
+/// Take one sampler tick: snapshot the metrics, push every derived
+/// series, and return the window digest for the watchdog. Public so the
+/// tick-latency micro-bench and tests can drive ticks without a thread.
+pub fn sample_tick(metrics: &Metrics, series: &SampleSet, prev: &mut PrevCounters) -> Observation {
+    let now = Instant::now();
+    let dt = now.duration_since(prev.at).as_secs_f64().max(1e-9);
+    // relaxed-ok: sampler-tick stat reads; fields are independent
+    let completed = metrics.completed.load(Ordering::Relaxed);
+    let steals = metrics.steals.load(Ordering::Relaxed);
+    let shed = metrics.shed.load(Ordering::Relaxed);
+    let cache_hits = metrics.cache_hits.load(Ordering::Relaxed);
+    let cache_misses = metrics.cache_misses.load(Ordering::Relaxed);
+    let cache_evictions = metrics.cache_evictions.load(Ordering::Relaxed);
+    let injector = metrics.injector_depth.load(Ordering::Relaxed);
+    let prepared = metrics.prepared_depth.load(Ordering::Relaxed);
+    let panics = metrics.worker_panics.load(Ordering::Relaxed);
+    let workers = metrics.balance_workers.load(Ordering::Relaxed) as usize;
+
+    let completions_delta = completed.saturating_sub(prev.completed);
+    let hits_delta = cache_hits.saturating_sub(prev.cache_hits);
+    let misses_delta = cache_misses.saturating_sub(prev.cache_misses);
+    let evictions_delta = cache_evictions.saturating_sub(prev.cache_evictions);
+
+    series.completions_per_s.push(completions_delta as f64 / dt);
+    series.steals_per_s.push(steals.saturating_sub(prev.steals) as f64 / dt);
+    series.sheds_per_s.push(shed.saturating_sub(prev.shed) as f64 / dt);
+    let lookups = hits_delta + misses_delta;
+    let hit_rate = if lookups > 0 {
+        hits_delta as f64 / lookups as f64
+    } else {
+        // no lookups this window: carry the previous rate so the series
+        // reads as "last known", not as a phantom 0%-hit collapse
+        series.cache_hit_rate.last().unwrap_or(0.0)
+    };
+    series.cache_hit_rate.push(hit_rate);
+    series.cache_evictions_per_s.push(evictions_delta as f64 / dt);
+    series.injector_depth.push(injector as f64);
+    series.prepared_depth.push(prepared as f64);
+    let skew = skew_coefficient(&metrics.worker_deque_depth.snapshot(workers));
+    series.deque_skew.push(skew);
+    for class in Priority::ALL {
+        let i = class.index();
+        series.class_queue_p50[i]
+            .push(metrics.class_queue_percentile(class, 50.0).unwrap_or(0.0));
+        series.class_queue_p95[i]
+            .push(metrics.class_queue_percentile(class, 95.0).unwrap_or(0.0));
+    }
+    series.ticks.fetch_add(1, Ordering::Release);
+
+    prev.at = now;
+    prev.completed = completed;
+    prev.steals = steals;
+    prev.shed = shed;
+    prev.cache_hits = cache_hits;
+    prev.cache_misses = cache_misses;
+    prev.cache_evictions = cache_evictions;
+
+    Observation {
+        completions_delta,
+        injector_depth: injector,
+        deque_skew: skew,
+        cache_hits_delta: hits_delta,
+        cache_evictions_delta: evictions_delta,
+        prepared_depth: prepared,
+        worker_panics: panics,
+    }
+}
+
+/// The background sampler thread.
+#[derive(Debug)]
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Sampler {
+    /// Spawn the sampler over a shared telemetry state. Takes the first
+    /// tick after one full interval (the baseline is captured at spawn).
+    pub fn spawn(state: Arc<super::TelemetryState>, interval: Duration) -> Sampler {
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("adip-telemetry-sampler".into())
+                .spawn(move || {
+                    let mut prev = PrevCounters::new(&state.metrics);
+                    while !stop.load(Ordering::Acquire) {
+                        // stepped sleep so shutdown latency is bounded by
+                        // STOP_POLL, not the sample interval
+                        let wake = Instant::now() + interval;
+                        while Instant::now() < wake {
+                            if stop.load(Ordering::Acquire) {
+                                return;
+                            }
+                            std::thread::sleep(STOP_POLL.min(interval));
+                        }
+                        let obs = sample_tick(&state.metrics, &state.series, &mut prev);
+                        state.watchdog.observe(&obs);
+                    }
+                })
+                .expect("spawn telemetry sampler")
+        };
+        Sampler { stop, handle: Some(handle) }
+    }
+
+    /// Stop and join the sampler thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_ring_keeps_the_tail() {
+        let s = Series::new("t");
+        assert!(s.is_empty());
+        assert!(s.last().is_none());
+        for i in 0..(SERIES_CAP + 10) {
+            s.push(i as f64);
+        }
+        assert_eq!(s.len(), SERIES_CAP as u64 + 10);
+        assert_eq!(s.last(), Some((SERIES_CAP + 9) as f64));
+        let tail = s.tail(4);
+        assert_eq!(
+            tail,
+            vec![
+                (SERIES_CAP + 6) as f64,
+                (SERIES_CAP + 7) as f64,
+                (SERIES_CAP + 8) as f64,
+                (SERIES_CAP + 9) as f64
+            ]
+        );
+        // asking for more than the ring holds returns the whole ring
+        assert_eq!(s.tail(SERIES_CAP * 2).len(), SERIES_CAP);
+        assert_eq!(s.tail(SERIES_CAP * 2)[0], 10.0, "oldest retained sample");
+    }
+
+    #[test]
+    fn skew_coefficient_shapes() {
+        assert_eq!(skew_coefficient(&[]), 0.0);
+        assert_eq!(skew_coefficient(&[0, 0, 0]), 0.0, "idle fleet has no skew");
+        assert_eq!(skew_coefficient(&[5, 5, 5, 5]), 0.0, "balanced fleet has no skew");
+        // one hot worker among idle siblings: stddev/mean = sqrt(3) ≈ 1.73
+        let hot = skew_coefficient(&[8, 0, 0, 0]);
+        assert!((hot - 3.0f64.sqrt()).abs() < 1e-9, "{hot}");
+        // mild imbalance scores well below the hot-spot shape
+        assert!(skew_coefficient(&[4, 5, 6, 5]) < 0.2);
+    }
+
+    #[test]
+    fn sample_tick_derives_rates_and_gauges() {
+        let m = Metrics::default();
+        let series = SampleSet::default();
+        let mut prev = PrevCounters::new(&m);
+        // window activity: 4 completions, 2 steals, cache 3 hits / 1 miss
+        for _ in 0..4 {
+            m.record_completion(10, 0.0, 0, 1);
+        }
+        m.steals.fetch_add(2, Ordering::Relaxed);
+        m.record_cache(3, 0, 1, 0);
+        m.injector_depth.store(7, Ordering::Relaxed);
+        m.prepared_depth.store(2, Ordering::Relaxed);
+        m.balance_workers.store(2, Ordering::Relaxed);
+        m.worker_deque_depth.store(0, 6);
+        m.worker_deque_depth.store(1, 0);
+        m.record_latency(0.5, 0.1, Priority::Interactive);
+        std::thread::sleep(Duration::from_millis(5));
+        let obs = sample_tick(&m, &series, &mut prev);
+        assert_eq!(obs.completions_delta, 4);
+        assert_eq!(obs.injector_depth, 7);
+        assert_eq!(obs.cache_hits_delta, 3);
+        assert_eq!(obs.prepared_depth, 2);
+        assert_eq!(series.ticks.load(Ordering::Acquire), 1);
+        let cps = series.completions_per_s.last().unwrap();
+        assert!(cps > 0.0, "{cps}");
+        let sps = series.steals_per_s.last().unwrap();
+        assert!(sps > 0.0 && sps < cps, "{sps} vs {cps}");
+        assert_eq!(series.cache_hit_rate.last(), Some(0.75));
+        assert_eq!(series.injector_depth.last(), Some(7.0));
+        assert_eq!(series.prepared_depth.last(), Some(2.0));
+        // [6, 0]: mean 3, stddev 3 → coefficient 1
+        assert!((series.deque_skew.last().unwrap() - 1.0).abs() < 1e-9);
+        let p50 = series.class_queue_p50[Priority::Interactive.index()].last().unwrap();
+        assert!((p50 - 0.5).abs() < 1e-6, "{p50}");
+        assert_eq!(series.class_queue_p50[Priority::Batch.index()].last(), Some(0.0));
+
+        // a second, idle window: rates fall to 0, hit rate carries over
+        std::thread::sleep(Duration::from_millis(5));
+        let obs = sample_tick(&m, &series, &mut prev);
+        assert_eq!(obs.completions_delta, 0);
+        assert_eq!(series.completions_per_s.last(), Some(0.0));
+        assert_eq!(series.cache_hit_rate.last(), Some(0.75), "carried through idle window");
+        assert_eq!(series.ticks.load(Ordering::Acquire), 2);
+    }
+
+    #[test]
+    fn sample_set_lists_every_series() {
+        let s = SampleSet::default();
+        let names: Vec<&str> = s.all().iter().map(|x| x.name()).collect();
+        assert_eq!(names.len(), 8 + 2 * Priority::COUNT);
+        for want in [
+            "completions_per_s",
+            "steals_per_s",
+            "sheds_per_s",
+            "cache_hit_rate",
+            "cache_evictions_per_s",
+            "injector_depth",
+            "prepared_depth",
+            "deque_skew",
+            "queue_p50_interactive",
+            "queue_p95_background",
+        ] {
+            assert!(names.contains(&want), "{want} missing from {names:?}");
+        }
+    }
+}

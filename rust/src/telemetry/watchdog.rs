@@ -1,0 +1,482 @@
+//! Watchdog: a rule engine over the sampler's windowed observations.
+//!
+//! Every sampler tick feeds one [`Observation`] into
+//! [`Watchdog::observe`]. Each rule tracks a *sustained episode*: the
+//! breach condition must hold for [`WatchdogConfig::windows`] consecutive
+//! ticks before the rule fires, and a firing episode stays latched —
+//! silent — until the condition clears, so one sustained stall produces
+//! exactly one event (not one per tick). Fired events carry a wall-clock
+//! timestamp and a human detail string into a bounded ring surfaced by
+//! `/statusz`, and per-rule counters surfaced as
+//! `adip_watchdog_events_total{rule=...}`.
+//!
+//! The watchdog only ever *reads* metrics (via the sampler) and writes
+//! its own state, so it can never perturb pipeline behavior — the same
+//! observability contract the trace recorder keeps. These events are
+//! exactly the decision inputs ROADMAP item 3's adaptive controller will
+//! consume.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Events retained in the bounded ring (`/statusz` shows the tail; the
+/// per-rule counters never forget).
+pub const EVENT_RING_CAP: usize = 64;
+
+/// Identity of every watchdog rule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Rule {
+    /// Injector depth held or rose while completions stayed flat: the
+    /// fabric is accepting work it isn't finishing.
+    QueueStall,
+    /// Per-worker deque depths stayed badly imbalanced (coefficient of
+    /// variation above threshold): stealing is off or losing.
+    DequeSkew,
+    /// Weight-cache evictions outpaced hits: the working set no longer
+    /// fits and the cache is churning instead of serving.
+    CacheThrash,
+    /// Prepared batches piled up ahead of execution: workers are the
+    /// bottleneck, not the prepare stage.
+    PrepareBacklog,
+    /// A coordinator worker thread died to a panic (service degrades but
+    /// survives — the fabric re-homed its queue).
+    WorkerPanic,
+}
+
+impl Rule {
+    /// Number of rules (sizes the per-rule counter array).
+    pub const COUNT: usize = 5;
+
+    /// All rules, in report order.
+    pub const ALL: [Rule; Rule::COUNT] = [
+        Rule::QueueStall,
+        Rule::DequeSkew,
+        Rule::CacheThrash,
+        Rule::PrepareBacklog,
+        Rule::WorkerPanic,
+    ];
+
+    /// Stable external name (the `rule` label of
+    /// `adip_watchdog_events_total` and the `/statusz` key).
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::QueueStall => "queue_stall",
+            Rule::DequeSkew => "deque_skew",
+            Rule::CacheThrash => "cache_thrash",
+            Rule::PrepareBacklog => "prepare_backlog",
+            Rule::WorkerPanic => "worker_panic",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Rule::QueueStall => 0,
+            Rule::DequeSkew => 1,
+            Rule::CacheThrash => 2,
+            Rule::PrepareBacklog => 3,
+            Rule::WorkerPanic => 4,
+        }
+    }
+}
+
+/// Watchdog thresholds. The defaults are deliberately conservative —
+/// a rule that cries wolf is worse than no rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WatchdogConfig {
+    /// Consecutive breached sampler windows before an episode fires.
+    pub windows: u32,
+    /// Deque-skew coefficient (stddev/mean of per-worker deque depths)
+    /// at or above which a window counts as breached.
+    pub skew_threshold: f64,
+    /// Prepared-batch backlog (gauge) at or above which a window counts
+    /// as breached.
+    pub backlog_threshold: u64,
+}
+
+impl Default for WatchdogConfig {
+    fn default() -> WatchdogConfig {
+        WatchdogConfig { windows: 3, skew_threshold: 1.25, backlog_threshold: 8 }
+    }
+}
+
+/// One sampler window's digest — everything the rules look at. Produced
+/// by `sampler::sample_tick`, or built directly by tests driving
+/// synthetic episodes.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Observation {
+    /// Requests completed during this window.
+    pub completions_delta: u64,
+    /// Injector depth at the end of the window (gauge).
+    pub injector_depth: u64,
+    /// Coefficient of variation of per-worker deque depths.
+    pub deque_skew: f64,
+    /// Weight-cache hits during this window.
+    pub cache_hits_delta: u64,
+    /// Weight-cache evictions during this window.
+    pub cache_evictions_delta: u64,
+    /// Prepared-batch backlog at the end of the window (gauge).
+    pub prepared_depth: u64,
+    /// Cumulative worker-panic counter at the end of the window.
+    pub worker_panics: u64,
+}
+
+/// One fired watchdog event.
+#[derive(Debug, Clone)]
+pub struct WatchdogEvent {
+    pub rule: Rule,
+    /// Wall-clock milliseconds since the Unix epoch — watchdog events
+    /// are operator-facing and must be correlatable with logs outside
+    /// this process, so this is a deliberate (allowlisted) wall-clock
+    /// read; everything hot-path uses monotonic `Instant`s.
+    pub unix_ms: u64,
+    /// Sampler tick number the event fired on (1-based).
+    pub tick: u64,
+    /// Human-readable context captured at fire time.
+    pub detail: String,
+}
+
+/// Sustained-episode tracker: `observe` returns true exactly once per
+/// episode — on the tick the breach count first reaches the window
+/// threshold — and re-arms only after the condition fully clears.
+#[derive(Debug, Default, Clone, Copy)]
+struct Episode {
+    consecutive: u32,
+    active: bool,
+}
+
+impl Episode {
+    fn observe(&mut self, breached: bool, windows: u32) -> bool {
+        if !breached {
+            *self = Episode::default();
+            return false;
+        }
+        self.consecutive = self.consecutive.saturating_add(1);
+        if self.consecutive >= windows && !self.active {
+            self.active = true;
+            return true;
+        }
+        false
+    }
+}
+
+/// Cross-tick rule state, guarded by one mutex (only the sampler thread
+/// observes; readers touch the atomics and the event ring instead).
+#[derive(Debug, Default)]
+struct WatchState {
+    tick: u64,
+    prev_injector: u64,
+    prev_panics: u64,
+    /// Episode trackers for the windowed rules, indexed like
+    /// [`Rule::index`] (worker-panic is edge-triggered, not windowed).
+    episodes: [Episode; 4],
+}
+
+/// The rule engine. One per telemetry tier, shared between the sampler
+/// thread (writer via [`Watchdog::observe`]) and HTTP sessions (readers).
+#[derive(Debug, Default)]
+pub struct Watchdog {
+    cfg: WatchdogConfig,
+    /// Per-rule fire counters (`adip_watchdog_events_total{rule=...}`).
+    fired: [AtomicU64; Rule::COUNT],
+    /// Whether a queue-stall episode is currently active — feeds
+    /// `/healthz` readiness.
+    stall_active: AtomicBool,
+    state: Mutex<WatchState>,
+    events: Mutex<VecDeque<WatchdogEvent>>,
+}
+
+impl Watchdog {
+    /// A watchdog with explicit thresholds.
+    pub fn with_config(cfg: WatchdogConfig) -> Watchdog {
+        Watchdog { cfg, ..Watchdog::default() }
+    }
+
+    /// Feed one sampler window. Returns the rules that fired on this
+    /// tick (at most one firing per rule per episode).
+    pub fn observe(&self, obs: &Observation) -> Vec<Rule> {
+        let mut fired: Vec<(Rule, String)> = Vec::new();
+        let tick;
+        {
+            let mut st = self.state.lock().unwrap_or_else(|e| e.into_inner());
+            st.tick += 1;
+            tick = st.tick;
+            // queue stall: depth held-or-rose while nothing completed.
+            // `>= prev` (not `>`) so a full-and-wedged injector counts as
+            // stalled even when producers are backpressured flat.
+            let stall = obs.injector_depth > 0
+                && obs.injector_depth >= st.prev_injector
+                && obs.completions_delta == 0;
+            if st.episodes[Rule::QueueStall.index()].observe(stall, self.cfg.windows) {
+                fired.push((
+                    Rule::QueueStall,
+                    format!(
+                        "injector depth {} with 0 completions for {} windows",
+                        obs.injector_depth, self.cfg.windows
+                    ),
+                ));
+            }
+            self.stall_active
+                .store(st.episodes[Rule::QueueStall.index()].active, Ordering::Release);
+
+            let skew = obs.deque_skew >= self.cfg.skew_threshold;
+            if st.episodes[Rule::DequeSkew.index()].observe(skew, self.cfg.windows) {
+                fired.push((
+                    Rule::DequeSkew,
+                    format!(
+                        "deque skew coefficient {:.2} >= {:.2} for {} windows",
+                        obs.deque_skew, self.cfg.skew_threshold, self.cfg.windows
+                    ),
+                ));
+            }
+
+            let thrash = obs.cache_evictions_delta > 0
+                && obs.cache_evictions_delta > obs.cache_hits_delta;
+            if st.episodes[Rule::CacheThrash.index()].observe(thrash, self.cfg.windows) {
+                fired.push((
+                    Rule::CacheThrash,
+                    format!(
+                        "{} evictions vs {} hits per window for {} windows",
+                        obs.cache_evictions_delta, obs.cache_hits_delta, self.cfg.windows
+                    ),
+                ));
+            }
+
+            let backlog = obs.prepared_depth >= self.cfg.backlog_threshold;
+            if st.episodes[Rule::PrepareBacklog.index()].observe(backlog, self.cfg.windows) {
+                fired.push((
+                    Rule::PrepareBacklog,
+                    format!(
+                        "prepared backlog {} >= {} for {} windows",
+                        obs.prepared_depth, self.cfg.backlog_threshold, self.cfg.windows
+                    ),
+                ));
+            }
+
+            // worker panic: edge-triggered on the cumulative counter —
+            // every lost worker is its own episode, immediately.
+            if obs.worker_panics > st.prev_panics {
+                fired.push((
+                    Rule::WorkerPanic,
+                    format!(
+                        "{} new worker panic(s), {} total",
+                        obs.worker_panics - st.prev_panics,
+                        obs.worker_panics
+                    ),
+                ));
+            }
+            st.prev_injector = obs.injector_depth;
+            st.prev_panics = obs.worker_panics;
+        }
+        for (rule, detail) in &fired {
+            self.record(*rule, tick, detail.clone());
+        }
+        fired.into_iter().map(|(r, _)| r).collect()
+    }
+
+    fn record(&self, rule: Rule, tick: u64, detail: String) {
+        self.fired[rule.index()].fetch_add(1, Ordering::Relaxed); // relaxed-ok: stat counter
+        let event = WatchdogEvent { rule, unix_ms: wall_clock_unix_ms(), tick, detail };
+        let mut ring = self.events.lock().unwrap_or_else(|e| e.into_inner());
+        if ring.len() == EVENT_RING_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(event);
+    }
+
+    /// How many times `rule` has fired since start.
+    pub fn fired(&self, rule: Rule) -> u64 {
+        self.fired[rule.index()].load(Ordering::Relaxed) // relaxed-ok: stat read
+    }
+
+    /// Whether a queue-stall episode is active right now (feeds
+    /// `/healthz` readiness: a stalled server is serving scrapes but not
+    /// work).
+    pub fn stall_active(&self) -> bool {
+        self.stall_active.load(Ordering::Acquire)
+    }
+
+    /// The retained event tail, oldest first.
+    pub fn recent_events(&self) -> Vec<WatchdogEvent> {
+        self.events.lock().unwrap_or_else(|e| e.into_inner()).iter().cloned().collect()
+    }
+
+    /// Append the watchdog's Prometheus series to a `/metrics` body.
+    /// This runs in the HTTP handler, *not* in `Metrics::render`, so the
+    /// exposition the rest of the stack produces is bit-identical with
+    /// telemetry off.
+    pub fn render_prometheus(&self, s: &mut String) {
+        let _ = writeln!(
+            s,
+            "# HELP adip_watchdog_events_total Watchdog rule firings since start.\n\
+             # TYPE adip_watchdog_events_total counter"
+        );
+        for rule in Rule::ALL {
+            let _ = writeln!(
+                s,
+                "adip_watchdog_events_total{{rule=\"{}\"}} {}",
+                rule.name(),
+                self.fired(rule)
+            );
+        }
+    }
+}
+
+/// Wall-clock milliseconds since the Unix epoch, for operator-facing
+/// event timestamps only (see [`WatchdogEvent::unix_ms`]). This module
+/// is the lint allowlist for `SystemTime::now` — hot paths must use
+/// monotonic `Instant`s (`wall-clock-containment`).
+fn wall_clock_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map_or(0, |d| d.as_millis() as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stall_obs(depth: u64) -> Observation {
+        Observation { injector_depth: depth, ..Observation::default() }
+    }
+
+    #[test]
+    fn queue_stall_fires_exactly_once_per_sustained_episode() {
+        let w = Watchdog::default(); // windows = 3
+        // ramp: depth rising, completions flat — breach on every tick
+        assert!(w.observe(&stall_obs(2)).is_empty());
+        assert!(w.observe(&stall_obs(3)).is_empty());
+        assert_eq!(w.observe(&stall_obs(3)), vec![Rule::QueueStall], "third window fires");
+        assert!(w.stall_active());
+        // the episode stays latched: more stalled windows add nothing
+        for d in [4, 5, 6] {
+            assert!(w.observe(&stall_obs(d)).is_empty(), "latched episode must not re-fire");
+        }
+        assert_eq!(w.fired(Rule::QueueStall), 1);
+        // recovery: completions move — episode clears
+        let recovered =
+            Observation { completions_delta: 9, injector_depth: 1, ..Observation::default() };
+        assert!(w.observe(&recovered).is_empty());
+        assert!(!w.stall_active());
+        // a second sustained stall is a new episode: fires once more
+        assert!(w.observe(&stall_obs(5)).is_empty());
+        assert!(w.observe(&stall_obs(5)).is_empty());
+        assert_eq!(w.observe(&stall_obs(5)), vec![Rule::QueueStall]);
+        assert_eq!(w.fired(Rule::QueueStall), 2);
+    }
+
+    #[test]
+    fn dropping_injector_depth_is_not_a_stall() {
+        let w = Watchdog::default();
+        // depth falls every window (the fabric is draining, completions
+        // just aren't attributed this window): never a breach
+        for d in [9, 7, 5, 3, 2, 1] {
+            assert!(w.observe(&stall_obs(d)).is_empty());
+        }
+        assert_eq!(w.fired(Rule::QueueStall), 0);
+        assert!(!w.stall_active());
+    }
+
+    #[test]
+    fn deque_skew_needs_sustained_windows() {
+        let w = Watchdog::with_config(WatchdogConfig { windows: 2, ..WatchdogConfig::default() });
+        let skewed = Observation {
+            completions_delta: 1,
+            deque_skew: 2.0,
+            ..Observation::default()
+        };
+        let flat = Observation { completions_delta: 1, ..Observation::default() };
+        assert!(w.observe(&skewed).is_empty(), "one skewed window is noise");
+        assert!(w.observe(&flat).is_empty(), "a clear window resets the count");
+        assert!(w.observe(&skewed).is_empty());
+        assert_eq!(w.observe(&skewed), vec![Rule::DequeSkew]);
+        assert_eq!(w.fired(Rule::DequeSkew), 1);
+    }
+
+    #[test]
+    fn cache_thrash_compares_evictions_to_hits() {
+        let w = Watchdog::with_config(WatchdogConfig { windows: 1, ..WatchdogConfig::default() });
+        let healthy = Observation {
+            completions_delta: 1,
+            cache_hits_delta: 10,
+            cache_evictions_delta: 2,
+            ..Observation::default()
+        };
+        assert!(w.observe(&healthy).is_empty(), "hits outpacing evictions is healthy");
+        let thrash = Observation {
+            completions_delta: 1,
+            cache_hits_delta: 1,
+            cache_evictions_delta: 5,
+            ..Observation::default()
+        };
+        assert_eq!(w.observe(&thrash), vec![Rule::CacheThrash]);
+    }
+
+    #[test]
+    fn prepare_backlog_threshold() {
+        let w = Watchdog::with_config(WatchdogConfig {
+            windows: 1,
+            backlog_threshold: 4,
+            ..WatchdogConfig::default()
+        });
+        let light =
+            Observation { completions_delta: 1, prepared_depth: 3, ..Observation::default() };
+        assert!(w.observe(&light).is_empty());
+        let heavy =
+            Observation { completions_delta: 1, prepared_depth: 4, ..Observation::default() };
+        assert_eq!(w.observe(&heavy), vec![Rule::PrepareBacklog]);
+    }
+
+    #[test]
+    fn worker_panic_is_edge_triggered_per_panic() {
+        let w = Watchdog::default();
+        let calm = Observation { completions_delta: 1, ..Observation::default() };
+        assert!(w.observe(&calm).is_empty());
+        let one = Observation { completions_delta: 1, worker_panics: 1, ..Observation::default() };
+        assert_eq!(w.observe(&one), vec![Rule::WorkerPanic], "first panic fires immediately");
+        assert!(w.observe(&one).is_empty(), "steady count does not re-fire");
+        let two = Observation { completions_delta: 1, worker_panics: 2, ..Observation::default() };
+        assert_eq!(w.observe(&two), vec![Rule::WorkerPanic], "each new panic is an episode");
+        assert_eq!(w.fired(Rule::WorkerPanic), 2);
+        let ev = w.recent_events();
+        assert_eq!(ev.len(), 2);
+        assert!(ev[1].detail.contains("2 total"), "{:?}", ev[1].detail);
+    }
+
+    #[test]
+    fn event_ring_is_bounded() {
+        let w = Watchdog::default();
+        for i in 0..(EVENT_RING_CAP as u64 + 10) {
+            let obs = Observation {
+                completions_delta: 1,
+                worker_panics: i + 1,
+                ..Observation::default()
+            };
+            assert_eq!(w.observe(&obs).len(), 1);
+        }
+        let ev = w.recent_events();
+        assert_eq!(ev.len(), EVENT_RING_CAP, "ring keeps only the tail");
+        assert_eq!(w.fired(Rule::WorkerPanic), EVENT_RING_CAP as u64 + 10, "counters never forget");
+        // oldest events were shed; the tail is the most recent ones
+        assert!(ev[0].tick > 1);
+        assert!(ev.last().unwrap().detail.contains("total"));
+        // ticks are monotone and timestamps are sane (post-2020 wall clock)
+        assert!(ev.windows(2).all(|p| p[0].tick < p[1].tick));
+        assert!(ev.iter().all(|e| e.unix_ms > 1_577_836_800_000));
+    }
+
+    #[test]
+    fn prometheus_render_covers_every_rule() {
+        let w = Watchdog::with_config(WatchdogConfig { windows: 1, ..WatchdogConfig::default() });
+        let _ = w.observe(&stall_obs(1));
+        let mut s = String::new();
+        w.render_prometheus(&mut s);
+        assert!(s.contains("# HELP adip_watchdog_events_total"));
+        assert!(s.contains("# TYPE adip_watchdog_events_total counter"));
+        assert!(s.contains("adip_watchdog_events_total{rule=\"queue_stall\"} 1"), "{s}");
+        for rule in Rule::ALL {
+            assert!(s.contains(&format!("rule=\"{}\"", rule.name())), "{s}");
+        }
+    }
+}

@@ -35,6 +35,8 @@ fn fixture_corpus_fires_every_rule_at_exact_spans() {
         ("lock-poison-policy", "src/locks_bad.rs", 6),
         ("lock-poison-policy", "src/locks_bad.rs", 8),
         ("lint-annotation", "src/suppressions.rs", 9),
+        ("wall-clock-containment", "src/wallclock_bad.rs", 7),
+        ("wall-clock-containment", "src/wallclock_bad.rs", 8),
         ("wire-opcode-sync", "src/wire.rs", 4),
         ("wire-opcode-sync", "src/wire.rs", 24),
     ];

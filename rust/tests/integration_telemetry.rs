@@ -1,0 +1,322 @@
+//! Telemetry tier end-to-end: HTTP conformance over a live coordinator,
+//! `/metrics` scrapes that parse under saturation, `/healthz` readiness
+//! transitions, `/statusz` structure — and the tier's core contract,
+//! telemetry off ≡ on bit-exactly across both backends.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use adip::arch::{Architecture, Backend};
+use adip::coordinator::{Coordinator, CoordinatorConfig, MatmulRequest, SubmitOptions};
+use adip::dataflow::Mat;
+use adip::telemetry::TelemetryConfig;
+use adip::testutil::Rng;
+
+/// Fast-sampling telemetry on an ephemeral port.
+fn telemetry_on() -> TelemetryConfig {
+    TelemetryConfig {
+        listen: Some("127.0.0.1:0".parse().expect("addr")),
+        sample_interval: Duration::from_millis(10),
+    }
+}
+
+/// Deterministic serving config: one worker, one-request windows.
+fn det_cfg(backend: Backend, telemetry: TelemetryConfig) -> CoordinatorConfig {
+    CoordinatorConfig {
+        arch: Architecture::Adip,
+        n: 16,
+        workers: 1,
+        queue_capacity: 256,
+        batch_window: 1,
+        backend,
+        telemetry,
+        ..Default::default()
+    }
+}
+
+fn request(rng: &mut Rng, i: u64, dim: usize, bits: u32) -> MatmulRequest {
+    MatmulRequest {
+        id: 0,
+        input_id: i,
+        a: Arc::new(Mat::random(rng, dim, dim, 8)),
+        bs: vec![Arc::new(Mat::random(rng, dim, dim, bits))],
+        weight_bits: bits,
+        act_act: false,
+        tag: format!("t{i}"),
+    }
+}
+
+/// Send one raw HTTP request, return (status, whole head, body).
+fn raw_http(addr: SocketAddr, raw: &str) -> (u16, String, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect telemetry");
+    stream.write_all(raw.as_bytes()).expect("send request");
+    let mut text = String::new();
+    stream.read_to_string(&mut text).expect("read response");
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("no status line in {text:?}"));
+    let (head, body) = text.split_once("\r\n\r\n").unwrap_or((text.as_str(), ""));
+    (status, head.to_string(), body.to_string())
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    let (status, _, body) = raw_http(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"));
+    (status, body)
+}
+
+/// The PR 7 exposition validator, over a scraped `/metrics` body: every
+/// line is a HELP, a TYPE, or a sample of an already-typed series.
+fn assert_exposition_parses(text: &str) -> usize {
+    fn valid_name(n: &str) -> bool {
+        !n.is_empty()
+            && n.chars().next().unwrap().is_ascii_alphabetic()
+            && n.chars().all(|c| c.is_ascii_alphanumeric() || c == '_')
+    }
+    let mut typed = std::collections::HashSet::new();
+    let mut samples = 0usize;
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').unwrap_or_else(|| panic!("{line}"));
+            assert!(valid_name(name), "{line}");
+            assert!(!help.is_empty() && !help.contains('{'), "{line}");
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest.split_once(' ').unwrap_or_else(|| panic!("{line}"));
+            assert!(valid_name(name), "{line}");
+            assert!(kind == "counter" || kind == "gauge", "{line}");
+            assert!(typed.insert(name.to_string()), "duplicate TYPE for {name}");
+        } else {
+            assert!(!line.starts_with('#'), "unrecognized comment: {line}");
+            let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line}"));
+            assert!(value.parse::<f64>().is_ok(), "unparseable value: {line}");
+            let name = match series.split_once('{') {
+                None => series,
+                Some((name, labels)) => {
+                    let labels = labels.strip_suffix('}').unwrap_or_else(|| panic!("{line}"));
+                    for pair in labels.split(',') {
+                        let (k, v) = pair.split_once('=').unwrap_or_else(|| panic!("{line}"));
+                        assert!(valid_name(k), "{line}");
+                        assert!(v.len() >= 2 && v.starts_with('"') && v.ends_with('"'), "{line}");
+                    }
+                    name
+                }
+            };
+            assert!(valid_name(name), "{line}");
+            assert!(typed.contains(name), "sample without preceding # TYPE: {line}");
+            samples += 1;
+        }
+    }
+    samples
+}
+
+#[test]
+fn http_tier_conforms_on_errors() {
+    let coord = Coordinator::start(det_cfg(Backend::Functional, telemetry_on()));
+    let addr = coord.telemetry_addr().expect("telemetry enabled");
+
+    let (status, _) = get(addr, "/nope");
+    assert_eq!(status, 404);
+    let (status, body) = get(addr, "/metricsx");
+    assert_eq!(status, 404, "{body}");
+
+    let (status, head, _) = raw_http(addr, "POST /metrics HTTP/1.1\r\nHost: t\r\n\r\n");
+    assert_eq!(status, 405);
+    assert!(head.contains("Allow: GET"), "{head}");
+
+    let (status, _, _) = raw_http(addr, "GARBAGE\r\n\r\n");
+    assert_eq!(status, 400);
+
+    let (status, _, _) = raw_http(addr, "GET /metrics HTTP/2\r\n\r\n");
+    assert_eq!(status, 505);
+
+    // every error response still closes cleanly and the endpoint
+    // keeps serving afterwards
+    let (status, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    assert!(body.contains("adip_uptime_seconds"), "{body}");
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_scrapes_parse_under_saturation() {
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        telemetry: telemetry_on(),
+        ..det_cfg(Backend::Functional, telemetry_on())
+    };
+    let coord = Coordinator::start(cfg);
+    let addr = coord.telemetry_addr().expect("telemetry enabled");
+    let client = coord.client();
+
+    // saturate: a stream of submissions racing the scraper below
+    let mut rng = Rng::seeded(42);
+    let mut tickets = Vec::new();
+    for i in 0..24u64 {
+        let bits = [2u32, 4, 8][i as usize % 3];
+        let t = client
+            .submit(SubmitOptions::new(request(&mut rng, i, 48, bits)))
+            .expect("submit under load");
+        tickets.push(t);
+        if i % 4 == 0 {
+            let body = get(addr, "/metrics").1;
+            assert_exposition_parses(&body);
+        }
+    }
+    for t in tickets {
+        assert!(t.wait().expect("outcome").result.is_ok());
+    }
+
+    // the drained scrape carries the full exposition: coordinator
+    // series, watchdog series, sampler meta-series
+    let (status, body) = get(addr, "/metrics");
+    assert_eq!(status, 200);
+    let samples = assert_exposition_parses(&body);
+    assert!(samples > 30, "expected a full exposition, saw {samples} samples");
+    assert!(body.contains("adip_requests_completed_total 24"), "{body}");
+    for rule in ["queue_stall", "deque_skew", "cache_thrash", "prepare_backlog", "worker_panic"] {
+        assert!(
+            body.contains(&format!("adip_watchdog_events_total{{rule=\"{rule}\"}}")),
+            "{rule} missing:\n{body}"
+        );
+    }
+    assert!(body.contains("adip_telemetry_samples_total"), "{body}");
+    assert!(body.contains("adip_telemetry_sample_interval_seconds"), "{body}");
+    coord.shutdown();
+}
+
+#[test]
+fn statusz_reflects_live_serving_state() {
+    let coord = Coordinator::start(det_cfg(Backend::Functional, telemetry_on()));
+    let addr = coord.telemetry_addr().expect("telemetry enabled");
+    let client = coord.client();
+    let mut rng = Rng::seeded(7);
+    for i in 0..4u64 {
+        let o = client.submit_wait(SubmitOptions::new(request(&mut rng, i, 32, 8))).unwrap();
+        assert!(o.result.is_ok());
+    }
+    // let the sampler take at least one post-work tick
+    let state = coord.telemetry().expect("tier running").state().clone();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let before = state.series.ticks.load(Ordering::Acquire);
+    while state.series.ticks.load(Ordering::Acquire) <= before {
+        assert!(Instant::now() < deadline, "sampler stopped ticking");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let (status, body) = get(addr, "/statusz");
+    assert_eq!(status, 200);
+    for key in [
+        "\"version\"",
+        "\"uptime_seconds\"",
+        "\"healthy\": true",
+        "\"draining\": false",
+        "\"workers\": 1",
+        "\"worker_deque_depths\"",
+        "\"injector_depth\"",
+        "\"cache\"",
+        "\"counters\"",
+        "\"policies\"",
+        "\"backend\": \"functional\"",
+        "\"series\"",
+        "\"completions_per_s\"",
+        "\"queue_p95_interactive\"",
+        "\"watchdog\"",
+        "\"queue_stall_active\": false",
+    ] {
+        assert!(body.contains(key), "{key} missing from:\n{body}");
+    }
+    assert!(body.contains("\"accepted\": 4"), "{body}");
+    // structural sanity (CI's python validator does the real parse)
+    for (open, close) in [('{', '}'), ('[', ']')] {
+        assert_eq!(
+            body.chars().filter(|&c| c == open).count(),
+            body.chars().filter(|&c| c == close).count(),
+            "unbalanced {open}{close} in:\n{body}"
+        );
+    }
+    assert!(!body.contains("NaN"), "{body}");
+    coord.shutdown();
+}
+
+#[test]
+fn healthz_flips_on_drain_and_injected_panic() {
+    let coord = Coordinator::start(det_cfg(Backend::Functional, telemetry_on()));
+    let addr = coord.telemetry_addr().expect("telemetry enabled");
+
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(body, "ok\n");
+
+    coord.set_draining(true);
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 503);
+    assert!(body.contains("draining"), "{body}");
+
+    // drain rescinded (e.g. operator aborted the rollout)
+    coord.set_draining(false);
+    assert_eq!(get(addr, "/healthz").0, 200);
+
+    // a worker panic latches unreadiness even while not draining
+    coord.metrics().worker_panics.fetch_add(1, Ordering::Relaxed);
+    let (status, body) = get(addr, "/healthz");
+    assert_eq!(status, 503);
+    assert!(body.contains("worker-panic"), "{body}");
+    coord.shutdown();
+}
+
+/// The tier's core contract: enabling telemetry changes *nothing* about
+/// serving — outputs and per-ticket simulated accounting are bit-exact
+/// against a telemetry-off run, on both backends, even with a scraper
+/// hammering `/metrics` throughout.
+#[test]
+fn telemetry_off_and_on_serve_bit_identically() {
+    for backend in [Backend::Functional, Backend::CycleAccurate] {
+        let dim = if backend == Backend::Functional { 48 } else { 16 };
+        let run = |telemetry: TelemetryConfig| {
+            let coord = Coordinator::start(det_cfg(backend, telemetry));
+            // a live scraper for the telemetry-on leg (no-op when off)
+            let stop = Arc::new(AtomicBool::new(false));
+            let scraper = coord.telemetry_addr().map(|addr| {
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        let (status, _) = get(addr, "/metrics");
+                        assert_eq!(status, 200);
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                })
+            });
+            let client = coord.client();
+            let mut rng = Rng::seeded(314);
+            let mut legs = Vec::new();
+            for i in 0..8u64 {
+                let bits = [2u32, 4, 8][i as usize % 3];
+                let o = client
+                    .submit_wait(SubmitOptions::new(request(&mut rng, i, dim, bits)))
+                    .expect("submit");
+                let m = &o.metrics;
+                legs.push((
+                    o.result.clone().expect("request ok"),
+                    m.cycles,
+                    m.energy_j.to_bits(),
+                    m.passes,
+                    m.batched,
+                    m.batch_seq,
+                ));
+            }
+            stop.store(true, Ordering::Release);
+            if let Some(s) = scraper {
+                s.join().expect("scraper clean");
+            }
+            coord.shutdown();
+            legs
+        };
+        let off = run(TelemetryConfig::default());
+        let on = run(telemetry_on());
+        assert_eq!(off, on, "telemetry must be invisible to serving ({backend:?})");
+    }
+}

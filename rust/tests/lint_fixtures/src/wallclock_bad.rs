@@ -1,0 +1,10 @@
+//! Seeded `wall-clock-containment` violations: wall-clock reads outside
+//! `src/telemetry/` (serving paths must use monotonic `Instant`s).
+
+use std::time::SystemTime;
+
+pub fn stamp() -> std::time::Instant {
+    let _wall = std::time::SystemTime::now();
+    let _also = SystemTime::now();
+    std::time::Instant::now()
+}
